@@ -1,0 +1,133 @@
+//! Experiment A1 — ablation of the paper's §4.3.1 load-balancing claim.
+//!
+//! The similarity phase's work is triangular: row-index block b computes
+//! `nb - b` tiles, so naive *contiguous* chunking of indices into one task
+//! per slot gives the first task ~2× the mean work and the makespan is
+//! bounded by it. The paper pairs index i with n−i+1 so every task carries
+//! the same work. We compare three assignments at a fixed task count of one
+//! wave per slot (Hadoop's ideal):
+//!
+//!   - `paired`     — the paper's {b, nb−1−b} pairing,
+//!   - `contiguous` — equal-count contiguous index ranges (the strawman the
+//!     paper's trick fixes),
+//!   - `fine`       — one task per index (imbalanced but over-decomposed;
+//!     pull scheduling self-balances at the cost of nb dispatches).
+//!
+//! Reported: per-task work spread and virtual makespan per slave count.
+
+mod common;
+
+use psch::cluster::{schedule, NetworkModel, TaskCost};
+use psch::metrics::table::AsciiTable;
+
+const SECONDS_PER_TILE: f64 = 3.8; // calibrated phase-1 tile cost
+
+/// Work of row-block b in tiles.
+fn work(b: usize, nb: usize) -> usize {
+    nb - b
+}
+
+/// Paper pairing folded into `tasks` equal groups.
+fn paired_assignment(nb: usize, tasks: usize) -> Vec<usize> {
+    let mut buckets = vec![0usize; tasks];
+    let pairs = nb.div_ceil(2);
+    for p in 0..pairs {
+        let mut w = work(p, nb);
+        let mirror = nb - 1 - p;
+        if mirror != p {
+            w += work(mirror, nb);
+        }
+        buckets[p % tasks] += w;
+    }
+    buckets
+}
+
+/// Contiguous equal-count chunks.
+fn contiguous_assignment(nb: usize, tasks: usize) -> Vec<usize> {
+    let per = nb.div_ceil(tasks);
+    (0..tasks)
+        .map(|t| {
+            (t * per..((t + 1) * per).min(nb))
+                .map(|b| work(b, nb))
+                .sum()
+        })
+        .collect()
+}
+
+/// One task per index.
+fn fine_assignment(nb: usize) -> Vec<usize> {
+    (0..nb).map(|b| work(b, nb)).collect()
+}
+
+fn makespan(tile_counts: &[usize], m: usize, model: &NetworkModel) -> f64 {
+    let tasks: Vec<TaskCost> = tile_counts
+        .iter()
+        .filter(|&&t| t > 0)
+        .map(|&t| TaskCost {
+            compute_s: t as f64 * SECONDS_PER_TILE / model.compute_scale,
+            input_bytes: 0,
+            output_bytes: 0,
+        })
+        .collect();
+    model.job_overhead(m) + schedule(&tasks, m * 2, model, None).makespan_s
+}
+
+fn spread(tile_counts: &[usize]) -> f64 {
+    let max = *tile_counts.iter().max().unwrap() as f64;
+    let mean = tile_counts.iter().sum::<usize>() as f64
+        / tile_counts.iter().filter(|&&t| t > 0).count() as f64;
+    max / mean
+}
+
+fn main() {
+    let nb = 79; // paper scale: ceil(10029 / 128)
+    let model = common::calibrated_config(1).cluster.network;
+
+    let mut table = AsciiTable::new(&[
+        "slaves",
+        "paired (paper)",
+        "contiguous",
+        "fine-grained",
+        "paired vs contiguous",
+    ]);
+    let mut pass = true;
+    for m in [1usize, 2, 4, 6, 8, 10] {
+        let slots = m * 2;
+        let paired = paired_assignment(nb, slots);
+        let contiguous = contiguous_assignment(nb, slots);
+        let fine = fine_assignment(nb);
+        let tp = makespan(&paired, m, &model);
+        let tc = makespan(&contiguous, m, &model);
+        let tf = makespan(&fine, m, &model);
+        let gain = (tc - tp) / tc * 100.0;
+        table.row(&[
+            m.to_string(),
+            format!("{tp:.0}s"),
+            format!("{tc:.0}s"),
+            format!("{tf:.0}s"),
+            format!("{gain:+.1}%"),
+        ]);
+        if m >= 2 {
+            pass &= tp < tc; // pairing must beat the strawman when parallel
+        }
+        if m >= 4 {
+            pass &= gain > 10.0; // ...and decisively at real parallelism
+        }
+    }
+    println!("A1 load-balance ablation (nb={nb} row blocks):\n{}", table.render());
+    println!(
+        "work spread (max/mean) at 16 slots: paired {:.3}, contiguous {:.3}, fine {:.3}",
+        spread(&paired_assignment(nb, 16)),
+        spread(&contiguous_assignment(nb, 16)),
+        spread(&fine_assignment(nb)),
+    );
+    println!(
+        "dispatch overheads per wave: paired/contiguous = #slots tasks, fine = {nb} tasks"
+    );
+    if pass {
+        println!("ablation_loadbalance: PASS — the paper's pairing is justified");
+    } else {
+        println!("ablation_loadbalance: FAIL");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,63 @@
+//! Experiment F5 — regenerate the paper's **Fig. 5** trend chart: total
+//! pipeline time (and speedup/efficiency series) vs slave count.
+//!
+//! Same workload and calibration as benches/table1.rs, finer slave sweep,
+//! plotted as ASCII (the paper's chart is a line plot of Table 5-1 totals).
+
+mod common;
+
+use psch::coordinator::PipelineInput;
+use psch::data::gaussian_blobs;
+use psch::metrics::speedup::SpeedupCurve;
+use psch::util::fmt::hms;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n: usize = if quick { 2_048 } else { 10_029 };
+    let runtime = common::runtime();
+    println!("fig5: n={n}, backend {:?}", runtime.backend());
+    let dataset = gaussian_blobs(n, 4, 8, 0.4, 8.0, 42);
+    let input = PipelineInput::Points { points: dataset.points.clone() };
+
+    let sweep = [1usize, 2, 3, 4, 5, 6, 7, 8, 9, 10];
+    let mut curve = SpeedupCurve::default();
+    for &m in &sweep {
+        let driver = common::driver_for(m, &runtime);
+        let result = driver.run(&input).expect("pipeline");
+        curve.push(m, result.total_virtual_s);
+        println!(
+            "m={m:>2}: {}",
+            hms(std::time::Duration::from_secs_f64(result.total_virtual_s))
+        );
+    }
+
+    println!("\ntotal-time trend (Fig. 5):\n{}", curve.ascii_plot(60, 14));
+    println!("speedup series:");
+    for (m, s) in curve.speedups() {
+        let bar = "#".repeat((s * 8.0).round() as usize);
+        println!("  m={m:>2} {s:>5.2}x {bar}");
+    }
+    println!("\nparallel efficiency:");
+    for (m, e) in curve.efficiencies() {
+        println!("  m={m:>2} {:>5.1}%", e * 100.0);
+    }
+
+    // Fig. 5 observations: "From 1 to 2 sets ... reduce the time or so
+    // commonly"; "speedup growth began to slow"; flattening at the end.
+    let speedups = curve.speedups();
+    let s2 = speedups.iter().find(|&&(m, _)| m == 2).unwrap().1;
+    assert!(s2 > 1.25, "1->2 slaves should give a substantial cut: {s2:.2}x");
+    let eff = curve.efficiencies();
+    let e2 = eff.iter().find(|&&(m, _)| m == 2).unwrap().1;
+    let e10 = eff.iter().find(|&&(m, _)| m == 10).unwrap().1;
+    assert!(
+        e10 < e2,
+        "efficiency must decay with m: e2={e2:.2}, e10={e10:.2}"
+    );
+    // The paper's flattening claim is between 8 and 10 slaves.
+    let t8 = curve.points().iter().find(|p| p.machines == 8).unwrap().seconds;
+    let t10 = curve.points().iter().find(|p| p.machines == 10).unwrap().seconds;
+    let gain = (t8 - t10) / t8;
+    assert!(gain < 0.10, "8->10 should flatten: {:.1}%", gain * 100.0);
+    println!("\nfig5: trend shape checks PASS");
+}

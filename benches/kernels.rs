@@ -1,0 +1,94 @@
+//! Experiment K — hot-path kernel microbenchmarks: XLA AOT artifacts vs the
+//! native Rust fallback, per kernel, at the AOT tile geometry.
+//!
+//! This is the §Perf evidence that the XLA path is not a regression over
+//! native code and quantifies per-tile cost (feeding the compute_scale
+//! calibration in EXPERIMENTS.md).
+
+use std::path::Path;
+
+use psch::benchutil::bench;
+use psch::runtime::executor::{KM_K, KM_PTS, MV_BLOCK, PAD_DIM, RBF_TILE};
+use psch::runtime::KernelRuntime;
+use psch::util::Xoshiro256;
+
+fn randf(rng: &mut Xoshiro256, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+}
+
+fn main() {
+    let xla = KernelRuntime::auto(Path::new("artifacts"));
+    let native = KernelRuntime::native();
+    println!("kernels: xla backend = {:?}\n", xla.backend());
+    let mut rng = Xoshiro256::new(7);
+
+    let x = randf(&mut rng, RBF_TILE * PAD_DIM);
+    let y = randf(&mut rng, RBF_TILE * PAD_DIM);
+    let a = randf(&mut rng, MV_BLOCK * MV_BLOCK);
+    let v = randf(&mut rng, MV_BLOCK);
+    let pts = randf(&mut rng, KM_PTS * PAD_DIM);
+    let ctrs = randf(&mut rng, KM_K * PAD_DIM);
+    let z = randf(&mut rng, 128 * PAD_DIM);
+
+    let mut results = Vec::new();
+    for (name, rt) in [("xla", &xla), ("native", &native)] {
+        results.push(bench(
+            &format!("rbf_tile 128x128x16 [{name}]"),
+            3,
+            30,
+            || {
+                rt.rbf_tile(&x, &y, RBF_TILE, RBF_TILE, PAD_DIM, 0.5).unwrap();
+            },
+        ));
+        results.push(bench(
+            &format!("matvec 256x256 [{name}]"),
+            3,
+            30,
+            || {
+                rt.matvec(&a, &v, MV_BLOCK, MV_BLOCK).unwrap();
+            },
+        ));
+        results.push(bench(
+            &format!("kmeans_step 256x16x16 [{name}]"),
+            3,
+            30,
+            || {
+                rt.kmeans_step(&pts, &ctrs, KM_PTS, KM_K, PAD_DIM).unwrap();
+            },
+        ));
+        results.push(bench(
+            &format!("normalize_rows 128x16 [{name}]"),
+            3,
+            30,
+            || {
+                rt.normalize_rows(&z, 128, PAD_DIM).unwrap();
+            },
+        ));
+    }
+    println!();
+    for r in &results {
+        println!("{}", r.render());
+    }
+
+    // Throughput summary for the RBF tile (the phase-1 unit of work).
+    let rbf_xla = &results[0];
+    let pairs = (RBF_TILE * RBF_TILE) as f64;
+    println!(
+        "\nrbf tile: {:.1} M similarity-pairs/s (xla median)",
+        pairs / rbf_xla.median.as_secs_f64() / 1e6
+    );
+
+    // Parity spot check: identical outputs across backends.
+    let sx = xla.rbf_tile(&x, &y, RBF_TILE, RBF_TILE, PAD_DIM, 0.5).unwrap();
+    let sn = native
+        .rbf_tile(&x, &y, RBF_TILE, RBF_TILE, PAD_DIM, 0.5)
+        .unwrap();
+    let max_diff = sx
+        .iter()
+        .zip(&sn)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("rbf parity max |xla - native| = {max_diff:.2e}");
+    assert!(max_diff < 1e-5, "backend parity violated");
+    println!("kernels: OK");
+}

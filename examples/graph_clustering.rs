@@ -1,0 +1,94 @@
+//! End-to-end driver (DESIGN.md §6): the paper's Chapter-5 experiment.
+//!
+//! Generates the paper-scale planted graph — 10,029 vertices, 21,054 edges —
+//! writes it in the Fig. 4 topology text format, stores it in mini-HDFS,
+//! parses it back, runs the full three-phase parallel pipeline on the
+//! simulated cluster (XLA kernels on the hot path), and reports per-phase
+//! virtual time plus clustering quality against the planted truth.
+//!
+//! Results are recorded in EXPERIMENTS.md.
+
+use std::sync::Arc;
+
+use psch::config::Config;
+use psch::coordinator::{Driver, PipelineInput};
+use psch::data::{paper_scale_graph, Topology};
+use psch::eval::{ari, nmi, purity};
+use psch::runtime::KernelRuntime;
+use psch::util::fmt::hms;
+
+fn main() -> psch::Result<()> {
+    // ---- 1. Generate + round-trip the paper's dataset through Fig. 4 text.
+    let topo = paper_scale_graph(4, 1);
+    println!(
+        "dataset: {} vertices, {} edges (paper: 10029 / 21054)",
+        topo.num_vertices(),
+        topo.num_edges()
+    );
+    let text = topo.to_text();
+
+    // ---- 2. Store the file in mini-HDFS and read it back (paper §2.1).
+    let mut config = Config::default();
+    config.cluster.slaves = 8;
+    config.algo.k = 4;
+    config.algo.lanczos_steps = 60;
+    let runtime = Arc::new(KernelRuntime::auto(&psch::runtime::artifacts_dir()));
+    println!("kernel backend: {:?}", runtime.backend());
+    let driver = Driver::new(config, runtime);
+    let services = driver.services();
+    services.dfs.write_file("/input/topology.txt", text.as_bytes())?;
+    let stored = services.dfs.read_file("/input/topology.txt")?;
+    let parsed = Topology::parse(std::str::from_utf8(&stored).unwrap())?;
+    assert_eq!(parsed.num_vertices(), topo.num_vertices());
+    assert_eq!(parsed.num_edges(), topo.num_edges());
+    println!(
+        "stored {} bytes in mini-HDFS ({} replicas)",
+        stored.len(),
+        services.dfs.replication()
+    );
+
+    // ---- 3. Run the three-phase pipeline on the graph.
+    let truth = parsed.labels();
+    let t0 = std::time::Instant::now();
+    let result = driver.run_on(&services, &PipelineInput::Graph { topology: parsed })?;
+    let wall = t0.elapsed();
+
+    // ---- 4. Report (EXPERIMENTS.md records this).
+    println!("\nphase results (m=8 slaves):");
+    for phase in &result.phases {
+        println!(
+            "  {:<14} virtual {:>8}  wall {:>7.2}s  {} jobs  shuffle {}",
+            phase.name,
+            hms(std::time::Duration::from_secs_f64(phase.virtual_s)),
+            phase.wall_s,
+            phase.jobs,
+            psch::util::fmt::human_bytes(phase.shuffle_bytes),
+        );
+    }
+    println!(
+        "  {:<14} virtual {:>8}  wall {:>7.2}s",
+        "TOTAL",
+        hms(std::time::Duration::from_secs_f64(result.total_virtual_s)),
+        wall.as_secs_f64()
+    );
+    println!(
+        "\nquality vs planted communities: NMI={:.4} ARI={:.4} purity={:.4}",
+        nmi(&truth, &result.labels),
+        ari(&truth, &result.labels),
+        purity(&truth, &result.labels),
+    );
+    println!(
+        "eigenvalues (k smallest of L_sym): {:?}",
+        result
+            .eigenvalues
+            .iter()
+            .map(|v| (v * 1e4).round() / 1e4)
+            .collect::<Vec<_>>()
+    );
+    assert!(
+        nmi(&truth, &result.labels) > 0.5,
+        "community recovery too weak"
+    );
+    println!("graph_clustering OK");
+    Ok(())
+}

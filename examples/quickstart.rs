@@ -1,0 +1,51 @@
+//! Quickstart: cluster Gaussian blobs with the full parallel pipeline.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use psch::config::Config;
+use psch::coordinator::{Driver, PipelineInput};
+use psch::data::gaussian_blobs;
+use psch::eval::{ari, nmi};
+use psch::runtime::KernelRuntime;
+use psch::util::fmt::hms;
+
+fn main() -> psch::Result<()> {
+    // 1. Data: 4 Gaussian blobs in 8 dimensions.
+    let dataset = gaussian_blobs(1_000, 4, 8, 0.4, 8.0, 42);
+
+    // 2. Config: 4 slaves, defaults otherwise (see rust/src/config/).
+    let mut config = Config::default();
+    config.cluster.slaves = 4;
+    config.algo.k = 4;
+    config.algo.sigma = 1.5;
+
+    // 3. Runtime: AOT XLA artifacts when present, native fallback otherwise.
+    let runtime = Arc::new(KernelRuntime::auto(&psch::runtime::artifacts_dir()));
+    println!("kernel backend: {:?}", runtime.backend());
+
+    // 4. Run the three-phase pipeline (Alg. 4.2 / 4.3 / §4.3.3).
+    let driver = Driver::new(config, runtime);
+    let result = driver.run(&PipelineInput::Points { points: dataset.points.clone() })?;
+
+    // 5. Report.
+    for phase in &result.phases {
+        println!(
+            "  {:<14} virtual {:>8}  ({} MR jobs)",
+            phase.name,
+            hms(std::time::Duration::from_secs_f64(phase.virtual_s)),
+            phase.jobs
+        );
+    }
+    println!(
+        "labels: NMI={:.4} ARI={:.4} vs ground truth",
+        nmi(&dataset.labels, &result.labels),
+        ari(&dataset.labels, &result.labels)
+    );
+    assert!(nmi(&dataset.labels, &result.labels) > 0.9, "clustering failed");
+    println!("quickstart OK");
+    Ok(())
+}

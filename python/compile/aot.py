@@ -1,0 +1,75 @@
+"""AOT compile path: lower every Layer-2 entry point to HLO text artifacts.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the Rust side's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. Lowering goes jitted-fn -> stablehlo -> XlaComputation
+(return_tuple=True, so the Rust side always unwraps a tuple) -> as_hlo_text.
+
+Also writes ``artifacts/manifest.txt``: one line per artifact with its input
+shapes/dtypes and output arity, parsed by rust/src/runtime/artifact.rs to
+validate tile geometry at load time.
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.model import ENTRY_POINTS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_str(spec) -> str:
+    shape = "x".join(str(d) for d in spec.shape) if spec.shape else "scalar"
+    return f"{spec.dtype}[{shape}]"
+
+
+def _out_arity(fn, specs) -> int:
+    out = jax.eval_shape(fn, *specs)
+    return len(out) if isinstance(out, (tuple, list)) else 1
+
+
+def compile_all(out_dir: str, force: bool = False) -> list:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    written = []
+    for name, (fn, specs) in sorted(ENTRY_POINTS.items()):
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        ins = ";".join(_spec_str(s) for s in specs)
+        arity = _out_arity(fn, specs)
+        manifest_lines.append(f"{name}|{ins}|{arity}")
+        if os.path.exists(path) and not force:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        written.append(name)
+        print(f"  {name}: {len(text)} chars -> {path}")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true", help="rebuild even if fresh")
+    args = ap.parse_args()
+    written = compile_all(args.out_dir, force=args.force)
+    print(f"AOT: {len(written)} artifact(s) written to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Layer-1 Pallas kernel: k-means assign + partial sums (paper §4.3.3 map side).
+
+One MR map task's compute over a tile of points: the point-center distance
+matrix uses the same MXU-matmul identity as the RBF kernel
+(||p||^2 + ||c||^2 - 2 P C^T), then argmin for the assignment and a masked
+one-hot contraction for the combiner-side partial sums — exactly what the
+paper's map + combiner emit to the reducer (per-center coordinate sums and
+counts).
+
+Accumulation across point blocks uses the standard sequential-grid pattern:
+outputs are zeroed on the first grid step and accumulated on later ones.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Geometry baked into the AOT artifact.
+PTS = 256  # points per tile
+DIM = 16  # feature dim (embedding k padded up)
+K = 16  # centers (clusters padded up)
+BLK = 128  # points per grid step
+
+
+def _kmeans_kernel(p_ref, c_ref, m_ref, assign_ref, sums_ref, counts_ref):
+    i = pl.program_id(0)
+    p = p_ref[...]  # (BLK, D)
+    c = c_ref[...]  # (K, D)
+    m = m_ref[...]  # (BLK,)
+    pp = jnp.sum(p * p, axis=1, keepdims=True)  # (BLK, 1)
+    cc = jnp.sum(c * c, axis=1, keepdims=True).T  # (1, K)
+    pc = jnp.dot(p, c.T, preferred_element_type=jnp.float32)  # MXU
+    d2 = pp + cc - 2.0 * pc
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    assign_ref[...] = assign
+    onehot = (
+        assign[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, c.shape[0]), 1)
+    ).astype(jnp.float32) * m[:, None]
+
+    @pl.when(i == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    sums_ref[...] += jnp.dot(onehot.T, p, preferred_element_type=jnp.float32)
+    counts_ref[...] += jnp.sum(onehot, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("blk",))
+def kmeans_step(points, centers, mask, *, blk=BLK):
+    """Assign each point to its nearest center; masked partial sums/counts.
+
+    points (P, D), centers (K, D), mask (P,) in {0,1}.
+    Returns (assign (P,) i32, sums (K, D) f32, counts (K,) f32).
+    """
+    p, d = points.shape
+    k, _ = centers.shape
+    assert mask.shape == (p,) and p % blk == 0, (points.shape, mask.shape, blk)
+    return pl.pallas_call(
+        _kmeans_kernel,
+        grid=(p // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p,), jnp.int32),
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=True,
+    )(points, centers, mask)

@@ -1,0 +1,45 @@
+"""Layer-1 Pallas kernel: row-blocked dense mat-vec (Lanczos ``L v`` hot spot).
+
+The paper's phase 2 moves the vector v to the row-partitioned matrix in HBase
+("mobile computing"); each MR map task computes y_block = A_rows . v. This
+kernel is that per-task compute: the row block is tiled BLK rows at a time,
+each grid step contracting a (BLK, N) strip against the full resident v —
+a (BLK, N) x (N, 1) MXU contraction. VMEM per step at BLK=128, N=256:
+128*256 + 256 + 128 floats ~= 130 KiB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Geometry baked into the AOT artifact.
+N = 256  # columns per block (and v length)
+ROWS = 256  # rows per block
+BLK = 128  # rows per grid step
+
+
+def _mv_kernel(a_ref, v_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...], v_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("blk",))
+def matvec_block(a, v, *, blk=BLK):
+    """y = A v for one row block. a (R, C), v (C,); R must divide by ``blk``."""
+    r, c = a.shape
+    assert v.shape == (c,), (a.shape, v.shape)
+    assert r % blk == 0, (r, blk)
+    return pl.pallas_call(
+        _mv_kernel,
+        grid=(r // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, c), lambda i: (i, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r,), jnp.float32),
+        interpret=True,
+    )(a, v)

@@ -1,0 +1,36 @@
+"""Layer-1 Pallas kernel: row L2 normalization (paper Alg. 4.1 step 5, Z -> Y).
+
+Trivially parallel over row blocks; zero rows (padding, or isolated vertices
+whose embedding vanished) are passed through as zeros instead of NaN.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS = 128
+DIM = 16
+BLK = 64
+
+
+def _normalize_kernel(z_ref, o_ref):
+    z = z_ref[...]
+    norm = jnp.sqrt(jnp.sum(z * z, axis=1, keepdims=True))
+    o_ref[...] = z / jnp.where(norm == 0.0, 1.0, norm)
+
+
+@functools.partial(jax.jit, static_argnames=("blk",))
+def normalize_rows(z, *, blk=BLK):
+    """Y[i] = Z[i] / ||Z[i]||; zero rows stay zero. z (R, D), R % blk == 0."""
+    r, d = z.shape
+    assert r % blk == 0, (r, blk)
+    return pl.pallas_call(
+        _normalize_kernel,
+        grid=(r // blk,),
+        in_specs=[pl.BlockSpec((blk, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((blk, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), jnp.float32),
+        interpret=True,
+    )(z)

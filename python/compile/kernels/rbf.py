@@ -1,0 +1,63 @@
+"""Layer-1 Pallas kernel: tiled RBF similarity block (paper Alg. 4.2 hot spot).
+
+TPU mapping of the paper's per-pair ``computeSimilarity``: instead of a scalar
+loop over pairs, a whole (P, Q) tile of similarities is produced at once using
+the matmul identity
+
+    ||x_i - y_j||^2 = ||x_i||^2 + ||y_j||^2 - 2 x_i . y_j
+
+so the dominant term is a single (BLK, D) x (D, BLK) contraction that lands on
+the MXU systolic array. BlockSpec tiles the (P, Q) output into BLK x BLK
+pieces; each grid step streams one x row-block and one y row-block HBM->VMEM
+(BLK*D + BLK*D + BLK*BLK floats — ~80 KiB at BLK=128, D=16 — comfortably
+double-bufferable in ~16 MiB VMEM).
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic custom-calls;
+the same HLO the interpreter lowers to is what the Rust runtime executes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile geometry baked into the AOT artifact (see aot.py). The Rust
+# runtime pads inputs up to these shapes (runtime/executor.rs).
+TILE = 128
+DIM = 16
+BLK = 64  # sub-block each grid step computes
+
+
+def _rbf_kernel(x_ref, y_ref, g_ref, o_ref):
+    x = x_ref[...]  # (BLK, D)
+    y = y_ref[...]  # (BLK, D)
+    xx = jnp.sum(x * x, axis=1, keepdims=True)  # (BLK, 1)
+    yy = jnp.sum(y * y, axis=1, keepdims=True).T  # (1, BLK)
+    xy = jnp.dot(x, y.T, preferred_element_type=jnp.float32)  # MXU
+    d2 = jnp.maximum(xx + yy - 2.0 * xy, 0.0)  # clamp fp cancellation
+    o_ref[...] = jnp.exp(-g_ref[0, 0] * d2)
+
+
+@functools.partial(jax.jit, static_argnames=("blk",))
+def rbf_block(x, y, gamma, *, blk=BLK):
+    """S = exp(-gamma ||x_i - y_j||^2) for one tile pair.
+
+    x (P, D), y (Q, D), gamma scalar; P and Q must be multiples of ``blk``.
+    """
+    p, d = x.shape
+    q, _ = y.shape
+    assert p % blk == 0 and q % blk == 0, (p, q, blk)
+    g = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _rbf_kernel,
+        grid=(p // blk, q // blk),
+        in_specs=[
+            pl.BlockSpec((blk, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((blk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk, blk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((p, q), jnp.float32),
+        interpret=True,
+    )(x, y, g)

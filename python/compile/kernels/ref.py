@@ -1,0 +1,67 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness contracts: each Pallas kernel in this package must
+match its oracle to float32 tolerance for all shapes/values the test suite
+sweeps (pytest + hypothesis). The Rust native fallbacks in
+``rust/src/runtime/native.rs`` mirror the same math and are parity-tested
+against the XLA-compiled artifacts on the Rust side.
+"""
+
+import jax.numpy as jnp
+
+
+def rbf_block_ref(x, y, gamma):
+    """RBF similarity tile: S[i, j] = exp(-gamma * ||x_i - y_j||^2).
+
+    ``gamma = 1 / (2 sigma^2)`` per the paper's Eq. in §3.2.3.
+    Shapes: x (P, D), y (Q, D), gamma scalar -> (P, Q).
+    """
+    d2 = jnp.sum((x[:, None, :] - y[None, :, :]) ** 2, axis=-1)
+    return jnp.exp(-gamma * d2)
+
+
+def matvec_block_ref(a, v):
+    """Dense row-block mat-vec: y = A v. Shapes: a (R, N), v (N,) -> (R,)."""
+    return a @ v
+
+
+def kmeans_step_ref(points, centers, mask):
+    """One k-means assignment + partial-sum step.
+
+    points (P, D), centers (K, D), mask (P,) in {0, 1} marking valid
+    (non-padding) points. Returns:
+      assign (P,) int32   — nearest-center index (computed for ALL rows,
+                             padding included; callers must apply the mask),
+      sums   (K, D) f32   — per-center coordinate sums over valid points,
+      counts (K,)  f32    — per-center valid point counts.
+    """
+    d2 = jnp.sum((points[:, None, :] - centers[None, :, :]) ** 2, axis=-1)
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    onehot = (assign[:, None] == jnp.arange(centers.shape[0])[None, :]).astype(
+        jnp.float32
+    ) * mask[:, None]
+    sums = onehot.T @ points
+    counts = jnp.sum(onehot, axis=0)
+    return assign, sums, counts
+
+
+def normalize_rows_ref(z):
+    """Row-wise L2 normalization (paper's step 5, Z -> Y); zero rows stay zero."""
+    norm = jnp.sqrt(jnp.sum(z * z, axis=1, keepdims=True))
+    return z / jnp.where(norm == 0.0, 1.0, norm)
+
+
+def laplacian_block_ref(s, dinv_r, dinv_c, is_diag):
+    """Normalized-Laplacian tile: L = is_diag * I - diag(dinv_r) S diag(dinv_c).
+
+    ``dinv_*`` are the relevant slices of d^{-1/2}; ``is_diag`` is 1.0 when the
+    tile sits on the global diagonal (row range == col range), else 0.0.
+    Shapes: s (R, C), dinv_r (R,), dinv_c (C,), is_diag scalar -> (R, C).
+    """
+    eye = jnp.eye(s.shape[0], s.shape[1], dtype=s.dtype)
+    return is_diag * eye - dinv_r[:, None] * s * dinv_c[None, :]
+
+
+def degree_rowsum_ref(s):
+    """Degree of each row: d_i = sum_j S[i, j]. Shape (R, C) -> (R,)."""
+    return jnp.sum(s, axis=1)

@@ -1,0 +1,107 @@
+"""Layer-2 JAX model: the per-MR-task compute graphs of the paper's pipeline.
+
+Each entry point here is what one MapReduce task executes on its tile of data;
+the Rust coordinator (Layer 3) calls the AOT-compiled HLO of these functions
+via PJRT. They compose the Layer-1 Pallas kernels with the surrounding jnp
+glue so everything lowers into ONE fused HLO module per entry point.
+
+Build-time only: nothing in this package is imported at runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.kmeans import kmeans_step as _kmeans_kernel
+from compile.kernels.matvec import matvec_block as _matvec_kernel
+from compile.kernels.normalize import normalize_rows as _normalize_kernel
+from compile.kernels.rbf import rbf_block as _rbf_kernel
+
+
+def similarity_block(x, y, gamma):
+    """Paper Alg. 4.2 inner compute: one (P, Q) tile of S = exp(-gamma d^2)."""
+    return _rbf_kernel(x, y, gamma)
+
+
+def similarity_degree_block(x, y, gamma):
+    """Fused phase-1 tile: similarity tile AND its row-sum contribution.
+
+    The degree d_i = sum_j S_ij (Alg. 4.1 step 2) is accumulated for free
+    while the tile is resident, saving a second pass over S.
+    """
+    s = _rbf_kernel(x, y, gamma)
+    return s, jnp.sum(s, axis=1)
+
+
+def matvec_block(a, v):
+    """Paper Alg. 4.3 hot spot: y_block = L_rows . v for one row block."""
+    return _matvec_kernel(a, v)
+
+
+def laplacian_block(s, dinv_r, dinv_c, is_diag):
+    """L_sym tile from an S tile: is_diag * I - diag(dinv_r) S diag(dinv_c).
+
+    dinv_* carry d^{-1/2} slices; is_diag is 1.0 iff the tile lies on the
+    global diagonal. Pure jnp (elementwise — no kernel needed, XLA fuses it).
+    """
+    eye = jnp.eye(s.shape[0], s.shape[1], dtype=s.dtype)
+    return is_diag * eye - dinv_r[:, None] * s * dinv_c[None, :]
+
+
+def kmeans_step(points, centers, mask):
+    """Paper §4.3.3 map+combiner: (assign, per-center sums, counts)."""
+    return _kmeans_kernel(points, centers, mask)
+
+
+def normalize_rows(z):
+    """Paper Alg. 4.1 step 5: row-normalize the eigenvector matrix Z -> Y."""
+    return _normalize_kernel(z)
+
+
+def degree_rowsum(s):
+    """Degrees d_i = sum_j S_ij over one row block (Alg. 4.1 step 2)."""
+    return jnp.sum(s, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# AOT manifest: name -> (callable, example input ShapeDtypeStructs).
+# Shapes here are the fixed tile geometry the Rust runtime pads to
+# (rust/src/runtime/executor.rs must agree — see artifacts/manifest.txt).
+# ---------------------------------------------------------------------------
+
+f32 = jnp.float32
+
+
+def _s(shape, dtype=f32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+ENTRY_POINTS = {
+    "rbf_block": (
+        similarity_block,
+        (_s((128, 16)), _s((128, 16)), _s(())),
+    ),
+    "similarity_degree_block": (
+        similarity_degree_block,
+        (_s((128, 16)), _s((128, 16)), _s(())),
+    ),
+    "matvec_block": (
+        matvec_block,
+        (_s((256, 256)), _s((256,))),
+    ),
+    "laplacian_block": (
+        laplacian_block,
+        (_s((256, 256)), _s((256,)), _s((256,)), _s(())),
+    ),
+    "kmeans_step": (
+        kmeans_step,
+        (_s((256, 16)), _s((16, 16)), _s((256,))),
+    ),
+    "normalize_rows": (
+        normalize_rows,
+        (_s((128, 16)),),
+    ),
+    "degree_rowsum": (
+        degree_rowsum,
+        (_s((128, 128)),),
+    ),
+}

@@ -1,0 +1,73 @@
+"""Pallas k-means step kernel vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.kmeans import kmeans_step
+
+
+def _rand(shape, seed):
+    return np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    p_blocks=st.integers(1, 3),
+    k=st.integers(1, 16),
+    d=st.integers(1, 16),
+    mask_frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31),
+)
+def test_kmeans_matches_ref_across_shapes(p_blocks, k, d, mask_frac, seed):
+    blk = 32
+    p = p_blocks * blk
+    rng = np.random.default_rng(seed)
+    points = rng.normal(size=(p, d)).astype(np.float32)
+    centers = rng.normal(size=(k, d)).astype(np.float32) * 2
+    mask = (rng.random(p) < mask_frac).astype(np.float32)
+    got_a, got_s, got_c = kmeans_step(
+        jnp.asarray(points), jnp.asarray(centers), jnp.asarray(mask), blk=blk
+    )
+    want_a, want_s, want_c = ref.kmeans_step_ref(
+        jnp.asarray(points), jnp.asarray(centers), jnp.asarray(mask)
+    )
+    np.testing.assert_array_equal(np.asarray(got_a), np.asarray(want_a))
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got_c), np.asarray(want_c), atol=1e-6)
+
+
+def test_kmeans_aot_tile_shape():
+    points = _rand((256, 16), 0)
+    centers = _rand((16, 16), 1)
+    mask = np.ones(256, dtype=np.float32)
+    a, s, c = kmeans_step(
+        jnp.asarray(points), jnp.asarray(centers), jnp.asarray(mask)
+    )
+    ra, rs, rc = ref.kmeans_step_ref(
+        jnp.asarray(points), jnp.asarray(centers), jnp.asarray(mask)
+    )
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(ra))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(rc), atol=1e-6)
+
+
+def test_kmeans_counts_conserve_mask():
+    points = _rand((64, 4), 2)
+    centers = _rand((4, 4), 3)
+    mask = np.zeros(64, dtype=np.float32)
+    mask[:40] = 1.0
+    _, _, counts = kmeans_step(
+        jnp.asarray(points), jnp.asarray(centers), jnp.asarray(mask), blk=32
+    )
+    assert float(np.asarray(counts).sum()) == 40.0
+
+
+def test_kmeans_obvious_assignment():
+    points = jnp.asarray([[0.0, 0.0], [10.0, 10.0]] * 16, dtype=jnp.float32)
+    centers = jnp.asarray([[0.0, 0.0], [10.0, 10.0]], dtype=jnp.float32)
+    mask = jnp.ones(32)
+    a, s, c = kmeans_step(points, centers, mask, blk=32)
+    np.testing.assert_array_equal(np.asarray(a), np.tile([0, 1], 16))
+    np.testing.assert_allclose(np.asarray(c), [16.0, 16.0])

@@ -1,0 +1,52 @@
+"""Pallas mat-vec kernel vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.matvec import matvec_block
+
+
+def _rand(shape, seed, scale=1.0):
+    return (np.random.default_rng(seed).normal(size=shape) * scale).astype(
+        np.float32
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    r_blocks=st.integers(1, 4),
+    c=st.integers(1, 300),
+    seed=st.integers(0, 2**31),
+)
+def test_matvec_matches_ref_across_shapes(r_blocks, c, seed):
+    blk = 16
+    r = r_blocks * blk
+    a = _rand((r, c), seed)
+    v = _rand((c,), seed + 1)
+    got = matvec_block(jnp.asarray(a), jnp.asarray(v), blk=blk)
+    want = ref.matvec_block_ref(jnp.asarray(a), jnp.asarray(v))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=1e-4)
+
+
+def test_matvec_aot_tile_shape():
+    a = _rand((256, 256), 0)
+    v = _rand((256,), 1)
+    got = matvec_block(jnp.asarray(a), jnp.asarray(v))
+    want = a @ v
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=1e-4)
+
+
+def test_matvec_identity():
+    n = 128
+    eye = np.eye(n, dtype=np.float32)
+    v = _rand((n,), 7)
+    got = np.asarray(matvec_block(jnp.asarray(eye), jnp.asarray(v)))
+    np.testing.assert_allclose(got, v, atol=1e-6)
+
+
+def test_matvec_zero_matrix():
+    a = jnp.zeros((128, 64))
+    v = jnp.ones((64,))
+    assert np.abs(np.asarray(matvec_block(a, v))).max() == 0.0

@@ -1,0 +1,63 @@
+"""Pallas RBF kernel vs the pure-jnp oracle (hypothesis shape/value sweep)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.rbf import rbf_block
+
+
+def _rand(shape, seed):
+    return np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    p_blocks=st.integers(1, 3),
+    q_blocks=st.integers(1, 3),
+    d=st.integers(1, 16),
+    gamma=st.floats(0.01, 4.0),
+    seed=st.integers(0, 2**31),
+)
+def test_rbf_matches_ref_across_shapes(p_blocks, q_blocks, d, gamma, seed):
+    blk = 8  # small sub-block: the grid logic is what's under test
+    p, q = p_blocks * blk, q_blocks * blk
+    x = _rand((p, d), seed)
+    y = _rand((q, d), seed + 1)
+    got = rbf_block(jnp.asarray(x), jnp.asarray(y), gamma, blk=blk)
+    want = ref.rbf_block_ref(jnp.asarray(x), jnp.asarray(y), gamma)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_rbf_aot_tile_shape():
+    # The exact geometry aot.py freezes (128x16, blk 64).
+    x = _rand((128, 16), 0)
+    y = _rand((128, 16), 1)
+    got = rbf_block(jnp.asarray(x), jnp.asarray(y), 0.5)
+    want = ref.rbf_block_ref(jnp.asarray(x), jnp.asarray(y), 0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_rbf_self_similarity_is_one():
+    x = _rand((64, 8), 3)
+    s = np.asarray(rbf_block(jnp.asarray(x), jnp.asarray(x), 1.0, blk=64))
+    # atol 1e-5: the matmul identity ||x||²+||y||²−2x·y cancels to ~1e-6
+    # in f32 at distance 0 (this is why the Rust side keeps the diagonal
+    # unconditionally rather than trusting exp(-gamma*d2) == 1).
+    np.testing.assert_allclose(np.diag(s), np.ones(64), atol=1e-5)
+    # Symmetry of the self-tile.
+    np.testing.assert_allclose(s, s.T, atol=1e-6)
+
+
+def test_rbf_values_in_unit_interval():
+    x = _rand((64, 4), 5) * 10
+    s = np.asarray(rbf_block(jnp.asarray(x), jnp.asarray(x), 2.0, blk=32))
+    assert (s >= 0).all() and (s <= 1 + 1e-6).all()
+
+
+def test_rbf_rejects_unaligned_rows():
+    x = jnp.zeros((100, 4))  # 100 % 64 != 0
+    with pytest.raises(AssertionError):
+        rbf_block(x, x, 1.0)

@@ -1,0 +1,92 @@
+//! In-tree micro-benchmark harness (no criterion in the offline vendor set).
+//!
+//! [`bench`] runs warmup + timed iterations and reports min/median/mean —
+//! enough statistics for the kernel and ablation benches. Experiment-scale
+//! benches (table1, fig5) measure whole pipeline runs once per
+//! configuration; the virtual clock makes those deterministic.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    /// Benchmark label.
+    pub name: String,
+    /// Timed iterations.
+    pub iters: usize,
+    /// Fastest iteration.
+    pub min: Duration,
+    /// Median iteration.
+    pub median: Duration,
+    /// Mean iteration.
+    pub mean: Duration,
+}
+
+impl BenchStats {
+    /// One-line human-readable rendering.
+    pub fn render(&self) -> String {
+        format!(
+            "{:<40} {:>10} min {:>10} med {:>10} mean   ({} iters)",
+            self.name,
+            crate::util::fmt::human_duration(self.min),
+            crate::util::fmt::human_duration(self.median),
+            crate::util::fmt::human_duration(self.mean),
+            self.iters
+        )
+    }
+}
+
+/// Run `f` for `warmup` untimed + `iters` timed iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        min: samples[0],
+        median: samples[iters / 2],
+        mean,
+    }
+}
+
+/// Time a single invocation (for expensive whole-pipeline benches).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_ordered_stats() {
+        let mut x = 0u64;
+        let stats = bench("noop", 2, 11, || {
+            x = x.wrapping_add(1);
+        });
+        assert_eq!(stats.iters, 11);
+        assert!(stats.min <= stats.median);
+        assert!(stats.median <= stats.mean * 3);
+        assert!(x >= 13);
+        assert!(stats.render().contains("noop"));
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+}

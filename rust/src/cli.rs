@@ -1,0 +1,348 @@
+//! Command-line interface (in-tree parser — no clap in the offline set).
+//!
+//! ```text
+//! psch gen-data   --out FILE [--n N --edges E --k K --seed S]
+//! psch run        [--input FILE | --blobs N] [--config FILE] [--set k=v ...]
+//! psch baseline   [--blobs N] [--config FILE]   single-machine comparator
+//! psch scale-study [--n N] [--slaves 1,2,4,6,8,10] [--config FILE]
+//! psch inspect-artifacts [--dir DIR]
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::config::Config;
+use crate::coordinator::{Driver, PipelineInput};
+use crate::data::{gaussian_blobs, planted_graph, Topology};
+use crate::error::{Error, Result};
+use crate::eval::{ari, nmi};
+use crate::metrics::speedup::SpeedupCurve;
+use crate::metrics::table::AsciiTable;
+use crate::runtime::KernelRuntime;
+use crate::util::fmt::hms;
+
+/// Parsed flags: `--key value` pairs plus repeated `--set k=v`.
+#[derive(Debug, Default)]
+pub struct Flags {
+    values: HashMap<String, String>,
+    sets: Vec<(String, String)>,
+}
+
+impl Flags {
+    /// Parse `--key value` / `--set k=v` arguments.
+    pub fn parse(args: &[String]) -> Result<Self> {
+        let mut flags = Flags::default();
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            let Some(key) = arg.strip_prefix("--") else {
+                return Err(Error::Cli(format!("unexpected argument: {arg}")));
+            };
+            let value = args
+                .get(i + 1)
+                .ok_or_else(|| Error::Cli(format!("--{key} needs a value")))?
+                .clone();
+            if key == "set" {
+                let (k, v) = value
+                    .split_once('=')
+                    .ok_or_else(|| Error::Cli(format!("--set wants k=v, got {value}")))?;
+                flags.sets.push((k.to_string(), v.to_string()));
+            } else {
+                flags.values.insert(key.to_string(), value);
+            }
+            i += 2;
+        }
+        Ok(flags)
+    }
+
+    /// String flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// Parsed flag with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Cli(format!("bad value for --{key}: {v}"))),
+        }
+    }
+
+    /// Build the config: file, then --set overrides.
+    pub fn config(&self) -> Result<Config> {
+        let mut cfg = match self.get("config") {
+            Some(path) => Config::load(path)?,
+            None => Config::default(),
+        };
+        for (k, v) in &self.sets {
+            cfg.set(k, v)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Entry point; returns the process exit code.
+pub fn run(args: &[String]) -> Result<i32> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(2);
+    };
+    let flags = Flags::parse(&args[1..])?;
+    match cmd.as_str() {
+        "gen-data" => cmd_gen_data(&flags),
+        "run" => cmd_run(&flags),
+        "baseline" => cmd_baseline(&flags),
+        "scale-study" => cmd_scale_study(&flags),
+        "inspect-artifacts" => cmd_inspect_artifacts(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(0)
+        }
+        other => Err(Error::Cli(format!("unknown command: {other}"))),
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "psch — parallel spectral clustering on a Hadoop-like runtime\n\n\
+         commands:\n\
+         \x20 gen-data          generate a planted topology file (Fig. 4 format)\n\
+         \x20 run               run the 3-phase parallel pipeline\n\
+         \x20 baseline          single-machine spectral clustering (O(n^3) path)\n\
+         \x20 scale-study       Table 5-1: per-phase time vs slave count\n\
+         \x20 inspect-artifacts list AOT artifacts + backend status\n"
+    );
+}
+
+fn cmd_gen_data(flags: &Flags) -> Result<i32> {
+    let out = flags
+        .get("out")
+        .ok_or_else(|| Error::Cli("--out FILE required".into()))?;
+    let n = flags.get_parse("n", 10_029usize)?;
+    let edges = flags.get_parse("edges", 21_054usize)?;
+    let k = flags.get_parse("k", 4usize)?;
+    let seed = flags.get_parse("seed", 1u64)?;
+    let topo = planted_graph(n, edges, k, 0.05, seed);
+    std::fs::write(out, topo.to_text())?;
+    println!(
+        "wrote {} ({} vertices, {} edges, k={k})",
+        out,
+        topo.num_vertices(),
+        topo.num_edges()
+    );
+    Ok(0)
+}
+
+fn load_input(flags: &Flags, cfg: &Config) -> Result<(PipelineInput, Option<Vec<usize>>)> {
+    if let Some(path) = flags.get("input") {
+        let text = std::fs::read_to_string(path)?;
+        let topo = Topology::parse(&text)?;
+        let truth = topo.labels();
+        Ok((PipelineInput::Graph { topology: topo }, Some(truth)))
+    } else {
+        let n = flags.get_parse("blobs", 1024usize)?;
+        let ps = gaussian_blobs(n, cfg.algo.k, 8, 0.4, 8.0, cfg.algo.seed);
+        Ok((
+            PipelineInput::Points { points: ps.points },
+            Some(ps.labels),
+        ))
+    }
+}
+
+fn cmd_run(flags: &Flags) -> Result<i32> {
+    let cfg = flags.config()?;
+    let (input, truth) = load_input(flags, &cfg)?;
+    let runtime = Arc::new(KernelRuntime::auto(&crate::runtime::artifacts_dir()));
+    println!("backend: {:?}; slaves: {}", runtime.backend(), cfg.cluster.slaves);
+    let driver = Driver::new(cfg, runtime);
+    let result = driver.run(&input)?;
+
+    let mut table = AsciiTable::new(&["phase", "virtual", "wall_s", "jobs", "shuffle"]);
+    for p in &result.phases {
+        table.row(&[
+            p.name.clone(),
+            hms(std::time::Duration::from_secs_f64(p.virtual_s)),
+            format!("{:.2}", p.wall_s),
+            p.jobs.to_string(),
+            crate::util::fmt::human_bytes(p.shuffle_bytes),
+        ]);
+    }
+    table.row(&[
+        "TOTAL".into(),
+        hms(std::time::Duration::from_secs_f64(result.total_virtual_s)),
+        format!("{:.2}", result.total_wall_s),
+        result.phases.iter().map(|p| p.jobs).sum::<usize>().to_string(),
+        String::new(),
+    ]);
+    println!("{}", table.render());
+    if let Some(truth) = truth {
+        println!(
+            "quality: NMI={:.4} ARI={:.4} (vs planted truth)",
+            nmi(&truth, &result.labels),
+            ari(&truth, &result.labels)
+        );
+    }
+    println!("similarity nnz: {}", result.nnz);
+    Ok(0)
+}
+
+fn cmd_baseline(flags: &Flags) -> Result<i32> {
+    let cfg = flags.config()?;
+    let n = flags.get_parse("blobs", 512usize)?;
+    let ps = gaussian_blobs(n, cfg.algo.k, 8, 0.4, 8.0, cfg.algo.seed);
+    let params = crate::spectral::SpectralParams {
+        k: cfg.algo.k,
+        sigma: cfg.algo.sigma,
+        epsilon: cfg.algo.epsilon,
+        lanczos_steps: cfg.algo.lanczos_steps,
+        kmeans_iters: cfg.algo.kmeans_iters,
+        kmeans_tol: cfg.algo.kmeans_tol,
+        seed: cfg.algo.seed,
+    };
+    let t0 = std::time::Instant::now();
+    let r = crate::spectral::spectral_cluster_points(
+        &ps.points,
+        &params,
+        crate::spectral::Eigensolver::Lanczos,
+    )?;
+    println!(
+        "single-machine: n={n} wall={:.2}s NMI={:.4}",
+        t0.elapsed().as_secs_f64(),
+        nmi(&ps.labels, &r.labels)
+    );
+    Ok(0)
+}
+
+fn cmd_scale_study(flags: &Flags) -> Result<i32> {
+    let base_cfg = flags.config()?;
+    let n = flags.get_parse("n", 2048usize)?;
+    let slaves: Vec<usize> = flags
+        .get("slaves")
+        .unwrap_or("1,2,4,6,8,10")
+        .split(',')
+        .map(|s| s.trim().parse().map_err(|_| Error::Cli(format!("bad slave count {s}"))))
+        .collect::<Result<Vec<_>>>()?;
+    let runtime = Arc::new(KernelRuntime::auto(&crate::runtime::artifacts_dir()));
+    let ps = gaussian_blobs(n, base_cfg.algo.k, 8, 0.4, 8.0, base_cfg.algo.seed);
+    let input = PipelineInput::Points { points: ps.points.clone() };
+
+    let mut table = AsciiTable::new(&[
+        "Slave Number",
+        "Parallel similarity matrix",
+        "Parallel k eigenvectors",
+        "Parallel K-means",
+        "Total Time",
+    ]);
+    let mut curve = SpeedupCurve::default();
+    for &m in &slaves {
+        let mut cfg = base_cfg.clone();
+        cfg.cluster.slaves = m;
+        let driver = Driver::new(cfg, runtime.clone());
+        let r = driver.run(&input)?;
+        let d = |s: f64| hms(std::time::Duration::from_secs_f64(s));
+        table.row(&[
+            m.to_string(),
+            d(r.phases[0].virtual_s),
+            d(r.phases[1].virtual_s),
+            d(r.phases[2].virtual_s),
+            d(r.total_virtual_s),
+        ]);
+        curve.push(m, r.total_virtual_s);
+        println!("m={m}: total {} (wall {:.1}s)", d(r.total_virtual_s), r.total_wall_s);
+    }
+    println!("\nTable 5-1 reproduction (n={n}):\n{}", table.render());
+    println!("speedups: {:?}", curve.speedups());
+    println!("\nFig. 5 trend:\n{}", curve.ascii_plot(48, 12));
+    Ok(0)
+}
+
+fn cmd_inspect_artifacts(flags: &Flags) -> Result<i32> {
+    let dir = flags
+        .get("dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(crate::runtime::artifacts_dir);
+    let manifest = dir.join("manifest.txt");
+    match std::fs::read_to_string(&manifest) {
+        Ok(text) => {
+            let entries = crate::runtime::parse_manifest(&text)?;
+            println!("{} artifacts in {}:", entries.len(), dir.display());
+            for e in &entries {
+                let ins: Vec<String> = e
+                    .inputs
+                    .iter()
+                    .map(|s| format!("{}[{:?}]", s.dtype, s.dims))
+                    .collect();
+                println!("  {} ({}) -> {} output(s)", e.name, ins.join(", "), e.out_arity);
+            }
+            let rt = KernelRuntime::auto(&dir);
+            println!("backend after load: {:?}", rt.backend());
+        }
+        Err(e) => println!("no manifest at {}: {e}", manifest.display()),
+    }
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn flags_parse_pairs_and_sets() {
+        let f = Flags::parse(&s(&[
+            "--n", "100", "--set", "algo.k=5", "--set", "cluster.slaves=3",
+        ]))
+        .unwrap();
+        assert_eq!(f.get("n"), Some("100"));
+        assert_eq!(f.get_parse("n", 0usize).unwrap(), 100);
+        assert_eq!(f.get_parse("missing", 7usize).unwrap(), 7);
+        let cfg = f.config().unwrap();
+        assert_eq!(cfg.algo.k, 5);
+        assert_eq!(cfg.cluster.slaves, 3);
+    }
+
+    #[test]
+    fn flags_reject_malformed() {
+        assert!(Flags::parse(&s(&["positional"])).is_err());
+        assert!(Flags::parse(&s(&["--dangling"])).is_err());
+        assert!(Flags::parse(&s(&["--set", "noequals"])).is_err());
+        let f = Flags::parse(&s(&["--n", "banana"])).unwrap();
+        assert!(f.get_parse("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(&s(&["frobnicate"])).is_err());
+        assert_eq!(run(&[]).unwrap(), 2);
+        assert_eq!(run(&s(&["help"])).unwrap(), 0);
+    }
+
+    #[test]
+    fn gen_data_roundtrip() {
+        let dir = std::env::temp_dir().join("psch_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.txt");
+        let code = run(&s(&[
+            "gen-data",
+            "--out",
+            path.to_str().unwrap(),
+            "--n",
+            "50",
+            "--edges",
+            "100",
+            "--k",
+            "2",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        let topo = Topology::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(topo.num_vertices(), 50);
+        assert_eq!(topo.num_edges(), 100);
+    }
+}

@@ -1,0 +1,231 @@
+//! Simulated Hadoop cluster: slaves, execution slots, cost model.
+//!
+//! One [`Cluster`] = 1 virtual master + `m` virtual slaves with
+//! `slots_per_slave` map/reduce slots each (the paper's setup: "default each
+//! machine starts two Map tasks", §4.4). Task closures run on a real thread
+//! pool (correctness, concurrency bugs surface for real) while their costs
+//! feed the [`vclock`] virtual-time model (speedup numbers, hardware
+//! independent).
+
+pub mod network;
+pub mod vclock;
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+
+pub use network::NetworkModel;
+pub use vclock::{job_time, schedule, schedule_speculative, PhaseTime, TaskCost};
+
+/// One simulated slave machine.
+#[derive(Debug, Clone)]
+pub struct SlaveNode {
+    /// Slave id, 0-based.
+    pub id: usize,
+    /// Relative speed (1.0 = reference machine; <1 = straggler).
+    pub speed: f64,
+}
+
+/// The simulated cluster.
+#[derive(Clone)]
+pub struct Cluster {
+    slaves: Vec<SlaveNode>,
+    slots_per_slave: usize,
+    model: NetworkModel,
+    /// Physical worker threads used to execute tasks (bounded by host cores;
+    /// virtual time is what scales with `m`, not host parallelism).
+    threads: usize,
+}
+
+impl Cluster {
+    /// A cluster of `m` homogeneous slaves, 2 slots each (paper §4.4).
+    pub fn new(m: usize) -> Self {
+        Self::with_model(m, 2, NetworkModel::default())
+    }
+
+    /// Full control over slot count and cost model.
+    pub fn with_model(m: usize, slots_per_slave: usize, model: NetworkModel) -> Self {
+        assert!(m > 0, "need at least one slave");
+        let threads = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(m * slots_per_slave)
+            .max(1);
+        Self {
+            slaves: (0..m).map(|id| SlaveNode { id, speed: 1.0 }).collect(),
+            slots_per_slave: slots_per_slave.max(1),
+            model,
+            threads,
+        }
+    }
+
+    /// Mark one slave as a straggler with the given relative speed.
+    pub fn set_slave_speed(&mut self, slave: usize, speed: f64) {
+        assert!(speed > 0.0);
+        self.slaves[slave].speed = speed;
+    }
+
+    /// Number of slaves m.
+    pub fn num_slaves(&self) -> usize {
+        self.slaves.len()
+    }
+
+    /// Execution slots per slave.
+    pub fn slots_per_slave(&self) -> usize {
+        self.slots_per_slave
+    }
+
+    /// Total slots (m × slots_per_slave).
+    pub fn total_slots(&self) -> usize {
+        self.slaves.len() * self.slots_per_slave
+    }
+
+    /// The cost model.
+    pub fn model(&self) -> &NetworkModel {
+        &self.model
+    }
+
+    /// Per-slot speed vector for the virtual scheduler.
+    pub fn slot_speeds(&self) -> Vec<f64> {
+        let mut v = Vec::with_capacity(self.total_slots());
+        for s in &self.slaves {
+            for _ in 0..self.slots_per_slave {
+                v.push(s.speed);
+            }
+        }
+        v
+    }
+
+    /// Execute tasks on the worker pool, preserving order.
+    ///
+    /// Returns each task's output and measured CPU seconds. A task error
+    /// aborts the batch (the MR engine layers retries above this).
+    pub fn execute<T, F>(&self, tasks: Vec<F>) -> Result<Vec<(T, f64)>>
+    where
+        T: Send,
+        F: FnOnce() -> Result<T> + Send,
+    {
+        let n = tasks.len();
+        if n == 0 {
+            return Ok(vec![]);
+        }
+        let queue: Mutex<VecDeque<(usize, F)>> =
+            Mutex::new(tasks.into_iter().enumerate().collect());
+        let results: Mutex<Vec<Option<(T, f64)>>> =
+            Mutex::new((0..n).map(|_| None).collect());
+        let first_error: Mutex<Option<Error>> = Mutex::new(None);
+        let workers = self.threads.min(n);
+
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let item = queue.lock().unwrap().pop_front();
+                    let Some((idx, task)) = item else { break };
+                    if first_error.lock().unwrap().is_some() {
+                        break;
+                    }
+                    let start = Instant::now();
+                    match task() {
+                        Ok(out) => {
+                            let elapsed = start.elapsed().as_secs_f64();
+                            results.lock().unwrap()[idx] = Some((out, elapsed));
+                        }
+                        Err(e) => {
+                            let mut fe = first_error.lock().unwrap();
+                            if fe.is_none() {
+                                *fe = Some(e);
+                            }
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+
+        if let Some(e) = first_error.into_inner().unwrap() {
+            return Err(e);
+        }
+        let collected = results.into_inner().unwrap();
+        let mut out = Vec::with_capacity(n);
+        for (i, slot) in collected.into_iter().enumerate() {
+            out.push(slot.ok_or_else(|| {
+                Error::MapReduce(format!("task {i} produced no result"))
+            })?);
+        }
+        Ok(out)
+    }
+
+    /// Virtual wall-clock of a job given measured task costs (convenience
+    /// wrapper over [`vclock::job_time`] with this cluster's m/slots/model).
+    pub fn virtual_job_time(
+        &self,
+        map_tasks: &[TaskCost],
+        reduce_tasks: &[TaskCost],
+        shuffle_bytes: u64,
+    ) -> f64 {
+        vclock::job_time(
+            map_tasks,
+            reduce_tasks,
+            shuffle_bytes,
+            self.num_slaves(),
+            self.slots_per_slave,
+            &self.model,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn execute_preserves_order_and_results() {
+        let c = Cluster::new(4);
+        let tasks: Vec<_> = (0..32)
+            .map(|i| move || -> Result<usize> { Ok(i * i) })
+            .collect();
+        let results = c.execute(tasks).unwrap();
+        assert_eq!(results.len(), 32);
+        for (i, (v, secs)) in results.iter().enumerate() {
+            assert_eq!(*v, i * i);
+            assert!(*secs >= 0.0);
+        }
+    }
+
+    #[test]
+    fn execute_propagates_error() {
+        let c = Cluster::new(2);
+        let tasks: Vec<Box<dyn FnOnce() -> Result<u32> + Send>> = vec![
+            Box::new(|| Ok(1)),
+            Box::new(|| Err(Error::MapReduce("boom".into()))),
+            Box::new(|| Ok(3)),
+        ];
+        let err = c.execute(tasks).unwrap_err();
+        assert!(err.to_string().contains("boom"));
+    }
+
+    #[test]
+    fn empty_task_list() {
+        let c = Cluster::new(1);
+        let tasks: Vec<Box<dyn FnOnce() -> Result<()> + Send>> = vec![];
+        assert!(c.execute(tasks).unwrap().is_empty());
+    }
+
+    #[test]
+    fn slot_speeds_reflect_stragglers() {
+        let mut c = Cluster::with_model(3, 2, NetworkModel::default());
+        c.set_slave_speed(1, 0.5);
+        let speeds = c.slot_speeds();
+        assert_eq!(speeds, vec![1.0, 1.0, 0.5, 0.5, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn paper_defaults() {
+        let c = Cluster::new(10);
+        assert_eq!(c.num_slaves(), 10);
+        assert_eq!(c.slots_per_slave(), 2);
+        assert_eq!(c.total_slots(), 20);
+    }
+}

@@ -1,0 +1,131 @@
+//! Network/overhead cost model of the simulated Hadoop cluster.
+//!
+//! The paper's Table 5-1 shape — near-linear speedup up to ~8 slaves, then a
+//! flattening or regression at 10 — is driven by the ratio of per-task
+//! compute to fixed scheduling/communication overheads. This model charges:
+//!
+//! - `task_dispatch_s` per task (JobTracker assignment + JVM start in real
+//!   Hadoop — the dominant small-job overhead),
+//! - disk reads at `disk_bw` for task input,
+//! - shuffle: the fraction `(m-1)/m` of intermediate bytes that cross the
+//!   network (with m machines a hash partitioner keeps `1/m` local), over
+//!   per-machine bandwidth `net_bw`,
+//! - `coord_per_machine_s` per machine per job (heartbeats, barrier,
+//!   speculative-exec bookkeeping) — the term that *grows* with m and
+//!   eventually eats the speedup,
+//! - `job_setup_s` per job (submission, split computation).
+//!
+//! Defaults are calibrated in benches/table1.rs to reproduce the paper's
+//! trend on commodity-2011-hardware-like constants.
+
+/// Cost-model parameters (all times in virtual seconds, rates in bytes/s).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkModel {
+    /// Fixed per-job submission/setup cost.
+    pub job_setup_s: f64,
+    /// Per-task dispatch overhead (scheduling + task start).
+    pub task_dispatch_s: f64,
+    /// Sequential disk bandwidth for task input/output.
+    pub disk_bw: f64,
+    /// Per-machine network bandwidth for shuffle traffic.
+    pub net_bw: f64,
+    /// Per-machine, per-job coordination overhead (grows with m).
+    pub coord_per_machine_s: f64,
+    /// Per-machine all-to-all latency charged once per shuffle barrier.
+    pub shuffle_latency_s: f64,
+    /// Multiplier mapping *measured* task compute seconds (this host, native
+    /// code) to the reference cluster's virtual seconds (the paper's i5-2300
+    /// slaves running JVM MapReduce tasks). Calibrated in benches/table1.rs.
+    pub compute_scale: f64,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        Self {
+            // Hadoop-1.x-era constants: multi-second task start, ~100 MB/s
+            // disk, ~1 GbE network, noticeable per-node coordination.
+            job_setup_s: 8.0,
+            task_dispatch_s: 2.0,
+            disk_bw: 100e6,
+            net_bw: 110e6,
+            coord_per_machine_s: 4.0,
+            shuffle_latency_s: 1.5,
+            compute_scale: 1.0,
+        }
+    }
+}
+
+impl NetworkModel {
+    /// Time for one task to read `bytes` of input from local disk.
+    pub fn read_time(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.disk_bw
+    }
+
+    /// Time for one task to write `bytes` of output (replicated table/DFS
+    /// writes go over the network).
+    pub fn write_time(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.net_bw
+    }
+
+    /// Time for the shuffle of `bytes` intermediate data across `m` machines.
+    ///
+    /// `(m-1)/m` of the bytes cross the network; aggregate bandwidth scales
+    /// with m (each machine sends/receives at `net_bw`), but each extra
+    /// machine adds `shuffle_latency_s` of all-to-all connection setup.
+    pub fn shuffle_time(&self, bytes: u64, m: usize) -> f64 {
+        let m = m.max(1) as f64;
+        let cross = bytes as f64 * (m - 1.0) / m;
+        cross / (self.net_bw * m) + self.shuffle_latency_s * (m - 1.0)
+    }
+
+    /// Fixed per-job overhead on an `m`-machine cluster.
+    pub fn job_overhead(&self, m: usize) -> f64 {
+        self.job_setup_s + self.coord_per_machine_s * m as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_time_linear_in_bytes() {
+        let nm = NetworkModel::default();
+        assert!((nm.read_time(100_000_000) - 1.0).abs() < 1e-9);
+        assert_eq!(nm.read_time(0), 0.0);
+    }
+
+    #[test]
+    fn shuffle_zero_on_single_machine() {
+        let nm = NetworkModel::default();
+        assert_eq!(nm.shuffle_time(1 << 30, 1), 0.0);
+    }
+
+    #[test]
+    fn shuffle_latency_grows_with_m() {
+        let nm = NetworkModel::default();
+        // For tiny payloads the latency term dominates and grows with m.
+        let t2 = nm.shuffle_time(1024, 2);
+        let t10 = nm.shuffle_time(1024, 10);
+        assert!(t10 > t2);
+    }
+
+    #[test]
+    fn shuffle_bandwidth_term_shrinks_with_m() {
+        let nm = NetworkModel {
+            shuffle_latency_s: 0.0,
+            ..NetworkModel::default()
+        };
+        // Pure-bandwidth shuffle: more machines = more aggregate bandwidth;
+        // the per-machine transferred share shrinks.
+        let big = 100u64 << 30;
+        assert!(nm.shuffle_time(big, 10) < nm.shuffle_time(big, 2));
+    }
+
+    #[test]
+    fn job_overhead_linear_in_m() {
+        let nm = NetworkModel::default();
+        let d = nm.job_overhead(10) - nm.job_overhead(9);
+        assert!((d - nm.coord_per_machine_s).abs() < 1e-9);
+    }
+}

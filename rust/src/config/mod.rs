@@ -1,0 +1,275 @@
+//! Configuration system: cluster + algorithm settings.
+//!
+//! Config files are a TOML subset (`key = value` lines, `[section]` headers,
+//! `#` comments) parsed in-tree — the offline vendor set has no serde/toml.
+//! Every key can also be overridden from the CLI (`--set section.key=value`).
+
+
+use crate::cluster::NetworkModel;
+use crate::error::{Error, Result};
+
+/// Cluster-side settings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Number of slave machines (paper sweeps 1..10).
+    pub slaves: usize,
+    /// Map/reduce slots per slave (paper: 2).
+    pub slots_per_slave: usize,
+    /// DFS replication factor.
+    pub replication: usize,
+    /// Cost model.
+    pub network: NetworkModel,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            slaves: 4,
+            slots_per_slave: 2,
+            replication: 2,
+            network: NetworkModel::default(),
+        }
+    }
+}
+
+/// Algorithm-side settings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlgoConfig {
+    /// Number of clusters k.
+    pub k: usize,
+    /// RBF bandwidth sigma (paper §3.2.3).
+    pub sigma: f64,
+    /// Similarity sparsification threshold (entries below are dropped).
+    pub epsilon: f64,
+    /// Lanczos max steps m.
+    pub lanczos_steps: usize,
+    /// K-means max iterations.
+    pub kmeans_iters: usize,
+    /// K-means convergence tolerance on center movement.
+    pub kmeans_tol: f64,
+    /// RNG seed for init / data generation.
+    pub seed: u64,
+}
+
+impl Default for AlgoConfig {
+    fn default() -> Self {
+        Self {
+            k: 4,
+            sigma: 1.0,
+            epsilon: 1e-8,
+            lanczos_steps: 60,
+            kmeans_iters: 20,
+            kmeans_tol: 1e-6,
+            seed: 42,
+        }
+    }
+}
+
+/// Full configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    /// Cluster settings (`[cluster]` section).
+    pub cluster: ClusterConfig,
+    /// Algorithm settings (`[algo]` section).
+    pub algo: AlgoConfig,
+}
+
+impl Config {
+    /// Parse from TOML-subset text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut cfg = Config::default();
+        for (key, value) in parse_kv(text)? {
+            cfg.set(&key, &value)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    /// Apply one `section.key=value` override.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let bad_val =
+            |k: &str| Error::Config(format!("bad value for {k}: {value:?}"));
+        match key {
+            "cluster.slaves" => {
+                self.cluster.slaves = value.parse().map_err(|_| bad_val(key))?
+            }
+            "cluster.slots_per_slave" => {
+                self.cluster.slots_per_slave = value.parse().map_err(|_| bad_val(key))?
+            }
+            "cluster.replication" => {
+                self.cluster.replication = value.parse().map_err(|_| bad_val(key))?
+            }
+            "cluster.job_setup_s" => {
+                self.cluster.network.job_setup_s =
+                    value.parse().map_err(|_| bad_val(key))?
+            }
+            "cluster.task_dispatch_s" => {
+                self.cluster.network.task_dispatch_s =
+                    value.parse().map_err(|_| bad_val(key))?
+            }
+            "cluster.disk_bw" => {
+                self.cluster.network.disk_bw = value.parse().map_err(|_| bad_val(key))?
+            }
+            "cluster.net_bw" => {
+                self.cluster.network.net_bw = value.parse().map_err(|_| bad_val(key))?
+            }
+            "cluster.coord_per_machine_s" => {
+                self.cluster.network.coord_per_machine_s =
+                    value.parse().map_err(|_| bad_val(key))?
+            }
+            "cluster.shuffle_latency_s" => {
+                self.cluster.network.shuffle_latency_s =
+                    value.parse().map_err(|_| bad_val(key))?
+            }
+            "cluster.compute_scale" => {
+                self.cluster.network.compute_scale =
+                    value.parse().map_err(|_| bad_val(key))?
+            }
+            "algo.k" => self.algo.k = value.parse().map_err(|_| bad_val(key))?,
+            "algo.sigma" => self.algo.sigma = value.parse().map_err(|_| bad_val(key))?,
+            "algo.epsilon" => {
+                self.algo.epsilon = value.parse().map_err(|_| bad_val(key))?
+            }
+            "algo.lanczos_steps" => {
+                self.algo.lanczos_steps = value.parse().map_err(|_| bad_val(key))?
+            }
+            "algo.kmeans_iters" => {
+                self.algo.kmeans_iters = value.parse().map_err(|_| bad_val(key))?
+            }
+            "algo.kmeans_tol" => {
+                self.algo.kmeans_tol = value.parse().map_err(|_| bad_val(key))?
+            }
+            "algo.seed" => self.algo.seed = value.parse().map_err(|_| bad_val(key))?,
+            other => {
+                return Err(Error::Config(format!("unknown config key: {other}")))
+            }
+        }
+        Ok(())
+    }
+
+    /// Sanity-check values.
+    pub fn validate(&self) -> Result<()> {
+        let bad = |msg: String| Err(Error::Config(msg));
+        if self.cluster.slaves == 0 {
+            return bad("cluster.slaves must be >= 1".into());
+        }
+        if self.cluster.slots_per_slave == 0 {
+            return bad("cluster.slots_per_slave must be >= 1".into());
+        }
+        if self.algo.k < 2 {
+            return bad(format!("algo.k must be >= 2, got {}", self.algo.k));
+        }
+        if self.algo.sigma <= 0.0 {
+            return bad(format!("algo.sigma must be > 0, got {}", self.algo.sigma));
+        }
+        if self.algo.lanczos_steps < self.algo.k {
+            return bad(format!(
+                "algo.lanczos_steps ({}) must be >= algo.k ({})",
+                self.algo.lanczos_steps, self.algo.k
+            ));
+        }
+        if self.algo.kmeans_iters == 0 {
+            return bad("algo.kmeans_iters must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// Parse `[section]` / `key = value` / `#`-comment lines into dotted pairs.
+fn parse_kv(text: &str) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            section = name.trim().to_string();
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            return Err(Error::Config(format!(
+                "line {}: expected key = value, got {line:?}",
+                lineno + 1
+            )));
+        };
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        let value = v.trim().trim_matches('"').to_string();
+        out.push((key, value));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_full_file() {
+        let text = r#"
+# experiment config
+[cluster]
+slaves = 8
+slots_per_slave = 2
+replication = 3
+net_bw = 1.1e8
+
+[algo]
+k = 5
+sigma = 0.75
+lanczos_steps = 40
+"#;
+        let cfg = Config::parse(text).unwrap();
+        assert_eq!(cfg.cluster.slaves, 8);
+        assert_eq!(cfg.cluster.replication, 3);
+        assert!((cfg.cluster.network.net_bw - 1.1e8).abs() < 1.0);
+        assert_eq!(cfg.algo.k, 5);
+        assert!((cfg.algo.sigma - 0.75).abs() < 1e-12);
+        // Untouched keys keep defaults.
+        assert_eq!(cfg.algo.kmeans_iters, 20);
+    }
+
+    #[test]
+    fn rejects_unknown_key_and_bad_values() {
+        assert!(Config::parse("[cluster]\nbogus = 1\n").is_err());
+        assert!(Config::parse("[algo]\nk = banana\n").is_err());
+        assert!(Config::parse("[algo]\nk 5\n").is_err());
+    }
+
+    #[test]
+    fn validation_catches_inconsistency() {
+        assert!(Config::parse("[algo]\nk = 1\n").is_err(), "k < 2");
+        assert!(
+            Config::parse("[algo]\nk = 10\nlanczos_steps = 5\n").is_err(),
+            "lanczos < k"
+        );
+        assert!(Config::parse("[cluster]\nslaves = 0\n").is_err());
+        assert!(Config::parse("[algo]\nsigma = -1\n").is_err());
+    }
+
+    #[test]
+    fn cli_style_set() {
+        let mut cfg = Config::default();
+        cfg.set("cluster.slaves", "10").unwrap();
+        cfg.set("algo.seed", "7").unwrap();
+        assert_eq!(cfg.cluster.slaves, 10);
+        assert_eq!(cfg.algo.seed, 7);
+        assert!(cfg.set("nope", "1").is_err());
+    }
+}

@@ -1,0 +1,379 @@
+//! Phase 3 (paper §4.3.3): parallel K-means over the spectral embedding.
+//!
+//! The paper's loop, verbatim in structure:
+//!
+//! 1. The driver writes the initial centers to the DFS **center file**.
+//! 2. Map: read the center file, assign each point of the split to the
+//!    nearest center (the XLA `kmeans_step` kernel does a whole tile at
+//!    once) and emit per-center partial sums + counts — the kernel output
+//!    IS the combiner result, so the shuffle carries k records per task,
+//!    not n.
+//! 3. Reduce: sum partials per center, emit the new center.
+//! 4. The driver rewrites the center file; stop when centers move less than
+//!    `tol` or after `max_iters` (paper step 4).
+//!
+//! A final map-only job emits the assignment of every point.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::mapreduce::{self, FnMapper, FnReducer, JobBuilder, TaskContext};
+use crate::util::bytes::{
+    decode_f64_vec, decode_u64, encode_f64_vec, encode_u32, encode_u64,
+};
+
+use super::{PhaseStats, Services};
+
+/// Points per map split.
+pub const POINTS_PER_TASK: usize = 256;
+
+/// Output of phase 3.
+pub struct KmeansOutput {
+    /// Final cluster label per point.
+    pub labels: Vec<usize>,
+    /// Final centers (k × d).
+    pub centers: Vec<Vec<f64>>,
+    /// Iterations executed (jobs, excluding the final assignment pass).
+    pub iterations: usize,
+    /// Whether movement dropped below tol.
+    pub converged: bool,
+    /// Phase timing.
+    pub stats: PhaseStats,
+}
+
+/// Serialize centers into the DFS center file (paper's shared file).
+fn write_center_file(services: &Services, path: &str, centers: &[Vec<f64>]) -> Result<()> {
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&encode_u32(centers.len() as u32));
+    for c in centers {
+        bytes.extend_from_slice(&encode_f64_vec(c));
+    }
+    services.dfs.write_file(path, &bytes)
+}
+
+/// Read the center file back.
+pub fn read_center_file(services: &Services, path: &str) -> Result<Vec<Vec<f64>>> {
+    let bytes = services.dfs.read_file(path)?;
+    let k = crate::util::bytes::decode_u32(&bytes) as usize;
+    let mut off = 4;
+    let mut centers = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (c, used) = decode_f64_vec(&bytes[off..]);
+        centers.push(c);
+        off += used;
+    }
+    Ok(centers)
+}
+
+/// Split the n points into contiguous map splits.
+fn point_splits(n: usize) -> Vec<Vec<(Vec<u8>, Vec<u8>)>> {
+    let mut splits = Vec::new();
+    for lo in (0..n).step_by(POINTS_PER_TASK) {
+        let hi = (lo + POINTS_PER_TASK).min(n);
+        splits.push(vec![(
+            encode_u64(lo as u64).to_vec(),
+            encode_u64(hi as u64).to_vec(),
+        )]);
+    }
+    splits
+}
+
+/// Run phase 3 on the embedding (n × d row-major f32).
+#[allow(clippy::too_many_arguments)]
+pub fn run_kmeans_phase(
+    services: &Services,
+    embedding: Arc<Vec<f32>>,
+    n: usize,
+    d: usize,
+    k: usize,
+    max_iters: usize,
+    tol: f64,
+    seed: u64,
+) -> Result<KmeansOutput> {
+    if n == 0 || k == 0 || k > n {
+        return Err(Error::MapReduce(format!("kmeans: bad n={n}, k={k}")));
+    }
+    let mut stats = PhaseStats { name: "kmeans".into(), ..Default::default() };
+    let center_path = "/kmeans/centers";
+
+    // Init: k-means++ over the embedding rows (driver side).
+    let rows: Vec<Vec<f64>> = (0..n)
+        .map(|i| (0..d).map(|c| embedding[i * d + c] as f64).collect())
+        .collect();
+    let t0 = std::time::Instant::now();
+    let mut centers =
+        crate::kmeans::init_centers(&rows, k, crate::kmeans::Init::PlusPlus, seed);
+    stats.absorb_master(
+        t0.elapsed().as_secs_f64(),
+        services.cluster.model().compute_scale,
+    );
+    write_center_file(services, center_path, &centers)?;
+
+    let mut iterations = 0;
+    let mut converged = false;
+    while iterations < max_iters {
+        iterations += 1;
+        let result = run_update_job(services, &embedding, n, d, k, center_path)?;
+        stats.absorb(&result.stats);
+
+        // New centers from reducer output (key = center index).
+        let mut new_centers = centers.clone();
+        for (key, value) in result.sorted_records() {
+            let c = crate::util::bytes::decode_u32(&key) as usize;
+            let (vals, _) = decode_f64_vec(&value);
+            new_centers[c] = vals;
+        }
+        let movement = centers
+            .iter()
+            .zip(&new_centers)
+            .map(|(a, b)| crate::linalg::vector::sq_dist(a, b).sqrt())
+            .fold(0.0f64, f64::max);
+        centers = new_centers;
+        write_center_file(services, center_path, &centers)?;
+        if movement < tol {
+            converged = true;
+            break;
+        }
+    }
+
+    // Final assignment pass (map-only).
+    let labels = run_assign_job(services, &embedding, n, d, k, center_path, &mut stats)?;
+    Ok(KmeansOutput { labels, centers, iterations, converged, stats })
+}
+
+/// One assign+update iteration as an MR job.
+fn run_update_job(
+    services: &Services,
+    embedding: &Arc<Vec<f32>>,
+    n: usize,
+    d: usize,
+    k: usize,
+    center_path: &str,
+) -> Result<mapreduce::JobResult> {
+    let emb = embedding.clone();
+    let dfs = services.dfs.clone();
+    let rt = services.runtime.clone();
+    let center_path = center_path.to_string();
+    let mapper = Arc::new(FnMapper(
+        move |key: &[u8], value: &[u8], ctx: &mut TaskContext| -> Result<()> {
+            let lo = decode_u64(key) as usize;
+            let hi = decode_u64(value) as usize;
+            // Paper: "read the center file" at task start.
+            let bytes = dfs.read_file(&center_path)?;
+            let kk = crate::util::bytes::decode_u32(&bytes) as usize;
+            let mut off = 4;
+            let mut centers_flat = Vec::with_capacity(kk * d);
+            for _ in 0..kk {
+                let (c, used) = decode_f64_vec(&bytes[off..]);
+                off += used;
+                centers_flat.extend(c.into_iter().map(|x| x as f32));
+            }
+            let (_assign, sums, counts) = rt.kmeans_step(
+                &emb[lo * d..hi * d],
+                &centers_flat,
+                hi - lo,
+                kk,
+                d,
+            )?;
+            ctx.incr(
+                crate::mapreduce::names::COMPUTE_US,
+                super::costmodel::units_to_us(
+                    ((hi - lo) * kk * d) as u64,
+                    super::costmodel::KM_POINTDIM_PER_S,
+                ),
+            );
+            // Combiner output: one record per center.
+            for c in 0..kk {
+                let mut payload: Vec<f64> =
+                    (0..d).map(|t| sums[c * d + t] as f64).collect();
+                payload.push(counts[c] as f64);
+                ctx.emit(encode_u32(c as u32).to_vec(), encode_f64_vec(&payload));
+            }
+            ctx.incr("KMEANS_POINTS", (hi - lo) as u64);
+            Ok(())
+        },
+    ));
+    let reducer = Arc::new(FnReducer(
+        move |key: &[u8], values: &[Vec<u8>], ctx: &mut TaskContext| -> Result<()> {
+            let mut sums = vec![0.0f64; d];
+            let mut count = 0.0f64;
+            for v in values {
+                let (payload, _) = decode_f64_vec(v);
+                for t in 0..d {
+                    sums[t] += payload[t];
+                }
+                count += payload[d];
+            }
+            if count > 0.0 {
+                let center: Vec<f64> = sums.iter().map(|s| s / count).collect();
+                ctx.emit(key.to_vec(), encode_f64_vec(&center));
+            }
+            // Empty cluster: emit nothing; the driver keeps the old center
+            // (the paper's implicit behaviour).
+            Ok(())
+        },
+    ));
+    let job = JobBuilder::new("kmeans-update", point_splits(n), mapper)
+        .reducer(reducer, services.cluster.num_slaves().min(k))
+        .build();
+    mapreduce::run(&services.cluster, &job)
+}
+
+/// Final assignment pass.
+fn run_assign_job(
+    services: &Services,
+    embedding: &Arc<Vec<f32>>,
+    n: usize,
+    d: usize,
+    k: usize,
+    center_path: &str,
+    stats: &mut PhaseStats,
+) -> Result<Vec<usize>> {
+    let emb = embedding.clone();
+    let dfs = services.dfs.clone();
+    let rt = services.runtime.clone();
+    let center_path = center_path.to_string();
+    let mapper = Arc::new(FnMapper(
+        move |key: &[u8], value: &[u8], ctx: &mut TaskContext| -> Result<()> {
+            let lo = decode_u64(key) as usize;
+            let hi = decode_u64(value) as usize;
+            let bytes = dfs.read_file(&center_path)?;
+            let kk = crate::util::bytes::decode_u32(&bytes) as usize;
+            let mut off = 4;
+            let mut centers_flat = Vec::with_capacity(kk * d);
+            for _ in 0..kk {
+                let (c, used) = decode_f64_vec(&bytes[off..]);
+                off += used;
+                centers_flat.extend(c.into_iter().map(|x| x as f32));
+            }
+            ctx.incr(
+                crate::mapreduce::names::COMPUTE_US,
+                super::costmodel::units_to_us(
+                    ((hi - lo) * kk * d) as u64,
+                    super::costmodel::KM_POINTDIM_PER_S,
+                ),
+            );
+            let (assign, _, _) =
+                rt.kmeans_step(&emb[lo * d..hi * d], &centers_flat, hi - lo, kk, d)?;
+            for (off_i, a) in assign.into_iter().enumerate() {
+                ctx.emit(
+                    encode_u64((lo + off_i) as u64).to_vec(),
+                    encode_u32(a as u32).to_vec(),
+                );
+            }
+            Ok(())
+        },
+    ));
+    let _ = k;
+    let job = JobBuilder::new("kmeans-assign", point_splits(n), mapper).build();
+    let result = mapreduce::run(&services.cluster, &job)?;
+    stats.absorb(&result.stats);
+    let mut labels = vec![0usize; n];
+    for part in &result.output {
+        for (key, value) in part {
+            labels[decode_u64(key) as usize] =
+                crate::util::bytes::decode_u32(value) as usize;
+        }
+    }
+    Ok(labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::data::gaussian_blobs;
+    use crate::eval::nmi;
+    use crate::runtime::KernelRuntime;
+
+    fn services(m: usize) -> Services {
+        Services::new(Cluster::new(m), Arc::new(KernelRuntime::native()))
+    }
+
+    #[test]
+    fn clusters_blobs_like_lloyd() {
+        let ps = gaussian_blobs(400, 3, 4, 0.3, 12.0, 5);
+        let svc = services(3);
+        let flat: Vec<f32> = ps.points.iter().flatten().map(|&x| x as f32).collect();
+        let out = run_kmeans_phase(
+            &svc,
+            Arc::new(flat),
+            400,
+            4,
+            3,
+            30,
+            1e-6,
+            7,
+        )
+        .unwrap();
+        assert!(out.converged, "should converge on separated blobs");
+        let score = nmi(&ps.labels, &out.labels);
+        assert!(score > 0.98, "nmi={score}");
+        // Oracle comparison: Lloyd from the same seed reaches the same NMI.
+        let lr = crate::kmeans::lloyd(
+            &ps.points, 3, 30, 1e-6, crate::kmeans::Init::PlusPlus, 7,
+        );
+        let lloyd_score = nmi(&ps.labels, &lr.labels);
+        assert!((score - lloyd_score).abs() < 0.02, "{score} vs {lloyd_score}");
+    }
+
+    #[test]
+    fn center_file_roundtrip() {
+        let svc = services(2);
+        let centers = vec![vec![1.0, 2.0], vec![-3.0, 0.5]];
+        write_center_file(&svc, "/c", &centers).unwrap();
+        assert_eq!(read_center_file(&svc, "/c").unwrap(), centers);
+    }
+
+    #[test]
+    fn labels_in_range_and_every_cluster_used() {
+        let ps = gaussian_blobs(300, 4, 4, 0.3, 12.0, 9);
+        let svc = services(2);
+        let flat: Vec<f32> = ps.points.iter().flatten().map(|&x| x as f32).collect();
+        let out =
+            run_kmeans_phase(&svc, Arc::new(flat), 300, 4, 4, 30, 1e-6, 3).unwrap();
+        assert!(out.labels.iter().all(|&l| l < 4));
+        let used: std::collections::HashSet<usize> =
+            out.labels.iter().copied().collect();
+        assert_eq!(used.len(), 4, "separated blobs should use all clusters");
+    }
+
+    #[test]
+    fn iteration_cap_respected() {
+        let ps = gaussian_blobs(120, 3, 2, 1.5, 2.0, 1); // overlapping blobs
+        let svc = services(1);
+        let flat: Vec<f32> = ps.points.iter().flatten().map(|&x| x as f32).collect();
+        let out = run_kmeans_phase(
+            &svc,
+            Arc::new(flat),
+            120,
+            2,
+            3,
+            2, // cap at 2 iterations
+            1e-12,
+            1,
+        )
+        .unwrap();
+        assert!(out.iterations <= 2);
+        assert_eq!(out.stats.jobs, out.iterations + 1); // + assignment pass
+    }
+
+    #[test]
+    fn rejects_degenerate_input() {
+        let svc = services(1);
+        assert!(
+            run_kmeans_phase(&svc, Arc::new(vec![]), 0, 2, 2, 5, 1e-6, 1).is_err()
+        );
+        assert!(run_kmeans_phase(
+            &svc,
+            Arc::new(vec![0.0; 2]),
+            1,
+            2,
+            5,
+            5,
+            1e-6,
+            1
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,84 @@
+//! The paper's system contribution: the three parallel phases of spectral
+//! clustering as MapReduce jobs over the mini-Hadoop runtime (§4.3).
+//!
+//! - [`similarity_job`]: Alg. 4.2 — parallel similarity matrix with the
+//!   i/(n−i+1) load-balanced pairing, written to the table store; degrees
+//!   aggregated through the shuffle.
+//! - [`lanczos_job`]: Alg. 4.3 — Lanczos with the `L·v` hot spot as a
+//!   row-partitioned MR job per iteration ("move the vector to the data").
+//! - [`kmeans_job`]: §4.3.3 — iterated assign/update MR jobs with the DFS
+//!   "center file".
+//! - [`driver`]: runs the phases end to end and reports per-phase virtual +
+//!   wall time (the paper's Table 5-1 rows).
+
+pub mod costmodel;
+pub mod driver;
+pub mod kmeans_job;
+pub mod lanczos_job;
+pub mod similarity_job;
+
+use std::sync::Arc;
+
+use crate::cluster::Cluster;
+use crate::dfs::Dfs;
+use crate::runtime::KernelRuntime;
+use crate::table::TableService;
+
+pub use driver::{Driver, PipelineInput, PipelineResult};
+
+/// Shared service handles every phase needs.
+#[derive(Clone)]
+pub struct Services {
+    /// The simulated cluster (m slaves, slots, cost model).
+    pub cluster: Cluster,
+    /// Mini-HDFS (input files, the k-means center file).
+    pub dfs: Dfs,
+    /// Mini-HBase (similarity + Laplacian matrices).
+    pub tables: TableService,
+    /// XLA PJRT kernel runtime (or native fallback).
+    pub runtime: Arc<KernelRuntime>,
+}
+
+impl Services {
+    /// Stand up services for `m` slaves with the given runtime.
+    pub fn new(cluster: Cluster, runtime: Arc<KernelRuntime>) -> Self {
+        let m = cluster.num_slaves();
+        Self {
+            cluster,
+            dfs: Dfs::new(m, 2.min(m)),
+            tables: TableService::new(m),
+            runtime,
+        }
+    }
+}
+
+/// Timing/IO summary of one pipeline phase (one Table 5-1 cell).
+#[derive(Debug, Clone, Default)]
+pub struct PhaseStats {
+    /// Phase name.
+    pub name: String,
+    /// Virtual seconds on the simulated cluster (Table 5-1's quantity).
+    pub virtual_s: f64,
+    /// Real wall seconds of the simulation.
+    pub wall_s: f64,
+    /// MapReduce jobs launched by the phase.
+    pub jobs: usize,
+    /// Total shuffle bytes across the phase's jobs.
+    pub shuffle_bytes: u64,
+}
+
+impl PhaseStats {
+    /// Accumulate one job's stats into the phase.
+    pub fn absorb(&mut self, stats: &crate::mapreduce::JobStats) {
+        self.virtual_s += stats.virtual_time_s;
+        self.wall_s += stats.wall_time_s;
+        self.shuffle_bytes += stats.shuffle_bytes;
+        self.jobs += 1;
+    }
+
+    /// Add master-side (non-MR) compute, scaled like task compute.
+    pub fn absorb_master(&mut self, wall_s: f64, compute_scale: f64) {
+        self.virtual_s += wall_s * compute_scale;
+        self.wall_s += wall_s;
+    }
+}

@@ -1,0 +1,509 @@
+//! Phase 1 (paper Alg. 4.2): parallel similarity matrix construction.
+//!
+//! Each map task owns a *pair* of row blocks `{b, nb-1-b}` — the paper's
+//! load-balancing trick: block b computes `nb - b` tiles of the upper
+//! triangle, its mirror computes `b + 1`, so every task computes the same
+//! `nb + 1` tiles total. For each owned row block `b`, the task computes the
+//! RBF tiles `S[b, cb]` for all `cb >= b` on the XLA kernel, thresholds by
+//! `epsilon`, and writes sparse chunks to the table (both `(b, cb)` and the
+//! mirrored `(cb, b)` — the paper's "according to the symmetry ... the other
+//! half ... are obtained"). Partial row sums ride the shuffle to a reducer
+//! that assembles the degree vector (Alg. 4.1 step 2).
+//!
+//! Table layout: key = `row_be || colblock_be` (u64 each), value =
+//! `encode_sparse_row` of the (col, value) pairs of that row within the
+//! column block — disjoint keys per task, so concurrent puts never conflict.
+
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::mapreduce::{self, JobBuilder, Mapper, Reducer, TaskContext};
+use crate::runtime::KernelRuntime;
+use crate::table::Table;
+use crate::util::bytes::{decode_f64, decode_u64, encode_f64, encode_u64};
+
+use super::{PhaseStats, Services};
+
+/// Row-block edge (also the XLA RBF tile edge).
+pub const BLOCK: usize = crate::runtime::executor::RBF_TILE;
+
+/// Output of phase 1.
+pub struct SimilarityOutput {
+    /// Degree vector d_i = sum_j S_ij.
+    pub degrees: Vec<f64>,
+    /// Phase timing.
+    pub stats: PhaseStats,
+    /// Number of stored (non-dropped) similarity entries.
+    pub nnz: u64,
+}
+
+/// Compose the table key for (row, column block).
+pub fn chunk_key(row: u64, colblock: u64) -> Vec<u8> {
+    let mut k = Vec::with_capacity(16);
+    k.extend_from_slice(&encode_u64(row));
+    k.extend_from_slice(&encode_u64(colblock));
+    k
+}
+
+/// Decompose a chunk key.
+pub fn parse_chunk_key(key: &[u8]) -> (u64, u64) {
+    (decode_u64(&key[..8]), decode_u64(&key[8..16]))
+}
+
+struct SimilarityMapper {
+    points: Arc<Vec<f32>>, // n × d row-major
+    n: usize,
+    d: usize,
+    gamma: f32,
+    epsilon: f32,
+    table: Arc<Table>,
+    runtime: Arc<KernelRuntime>,
+}
+
+impl SimilarityMapper {
+    /// Number of row blocks for n points.
+    fn nblocks(n: usize) -> usize {
+        n.div_ceil(BLOCK)
+    }
+
+    fn block_range(&self, b: usize) -> (usize, usize) {
+        let lo = b * BLOCK;
+        (lo, (lo + BLOCK).min(self.n))
+    }
+}
+
+impl Mapper for SimilarityMapper {
+    fn map(&self, key: &[u8], _value: &[u8], ctx: &mut TaskContext) -> Result<()> {
+        let b = decode_u64(key) as usize;
+        let nb = Self::nblocks(self.n);
+        let (blo, bhi) = self.block_range(b);
+        let rows_b = bhi - blo;
+        let mut pairs_evaluated = 0u64;
+        // Degree partials for the rows this task touches.
+        let mut deg_b = vec![0.0f64; rows_b];
+        for cb in b..nb {
+            let (clo, chi) = self.block_range(cb);
+            let cols = chi - clo;
+            let tile = self.runtime.rbf_tile(
+                &self.points[blo * self.d..bhi * self.d],
+                &self.points[clo * self.d..chi * self.d],
+                rows_b,
+                cols,
+                self.d,
+                self.gamma,
+            )?;
+            // Threshold + emit chunks for rows of block b at column block cb.
+            // Buffers are reused across rows and puts are batched per tile
+            // (EXPERIMENTS.md §Perf: the threshold/put path dominated wall
+            // time before batching).
+            let mut kept = 0u64;
+            let mut mirror: Vec<Vec<(u32, f64)>> =
+                (0..cols).map(|_| Vec::with_capacity(rows_b)).collect();
+            let mut chunk: Vec<(u32, f64)> = Vec::with_capacity(cols);
+            let mut batch: Vec<(Vec<u8>, Vec<u8>)> = Vec::with_capacity(rows_b);
+            let mut out_bytes = 0u64;
+            for i in 0..rows_b {
+                chunk.clear();
+                for j in 0..cols {
+                    let v = tile[i * cols + j];
+                    let (gi, gj) = (blo + i, clo + j);
+                    // Keep the diagonal unconditionally; drop sub-epsilon.
+                    if (cb == b && gj == gi) || v >= self.epsilon {
+                        chunk.push((gj as u32, v as f64));
+                        deg_b[i] += v as f64;
+                        if gi != gj {
+                            mirror[j].push((gi as u32, v as f64));
+                        }
+                    }
+                }
+                if !chunk.is_empty() {
+                    kept += chunk.len() as u64;
+                    let payload = crate::util::bytes::encode_sparse_row(&chunk);
+                    out_bytes += payload.len() as u64;
+                    batch.push((chunk_key(gi_u64(blo + i), cb as u64), payload));
+                }
+            }
+            self.table.put_batch(std::mem::take(&mut batch))?;
+            // Mirrored chunks: rows of block cb at column block b.
+            if cb != b {
+                let mut deg_c = vec![0.0f64; cols];
+                let mut batch: Vec<(Vec<u8>, Vec<u8>)> = Vec::with_capacity(cols);
+                for (j, entries) in mirror.iter().enumerate() {
+                    if entries.is_empty() {
+                        continue;
+                    }
+                    for &(_, v) in entries {
+                        deg_c[j] += v;
+                    }
+                    kept += entries.len() as u64;
+                    let payload = crate::util::bytes::encode_sparse_row(entries);
+                    out_bytes += payload.len() as u64;
+                    batch.push((chunk_key(gi_u64(clo + j), b as u64), payload));
+                }
+                self.table.put_batch(batch)?;
+                for (j, dval) in deg_c.into_iter().enumerate() {
+                    if dval != 0.0 {
+                        ctx.emit(
+                            encode_u64((clo + j) as u64).to_vec(),
+                            encode_f64(dval).to_vec(),
+                        );
+                    }
+                }
+            }
+            ctx.incr(crate::mapreduce::names::EXTRA_OUTPUT_BYTES, out_bytes);
+            pairs_evaluated += (rows_b * cols) as u64;
+            ctx.incr("SIM_ENTRIES_KEPT", kept);
+            ctx.incr("SIM_TILES", 1);
+        }
+        // Deterministic virtual compute: Alg. 4.2's pair evaluations at the
+        // reference machine's calibrated rate (costmodel.rs).
+        ctx.incr(
+            crate::mapreduce::names::COMPUTE_US,
+            super::costmodel::units_to_us(
+                pairs_evaluated,
+                super::costmodel::SIM_PAIRS_PER_S,
+            ),
+        );
+        for (i, dval) in deg_b.into_iter().enumerate() {
+            ctx.emit(
+                encode_u64((blo + i) as u64).to_vec(),
+                encode_f64(dval).to_vec(),
+            );
+        }
+        Ok(())
+    }
+}
+
+fn gi_u64(i: usize) -> u64 {
+    i as u64
+}
+
+/// Degree reducer: sums the partial row sums.
+struct DegreeReducer;
+
+impl Reducer for DegreeReducer {
+    fn reduce(
+        &self,
+        key: &[u8],
+        values: &[Vec<u8>],
+        ctx: &mut TaskContext,
+    ) -> Result<()> {
+        let total: f64 = values.iter().map(|v| decode_f64(v)).sum();
+        ctx.emit(key.to_vec(), encode_f64(total).to_vec());
+        Ok(())
+    }
+}
+
+/// Run phase 1: build the S table + degree vector for a point set.
+///
+/// `points` is n×d row-major f32; similarity entries below `epsilon` are
+/// dropped (diagonal kept). Returns degrees + phase stats.
+pub fn run_similarity_phase(
+    services: &Services,
+    points: Arc<Vec<f32>>,
+    n: usize,
+    d: usize,
+    sigma: f64,
+    epsilon: f64,
+    table_name: &str,
+) -> Result<SimilarityOutput> {
+    let table = services.tables.create(table_name, services.cluster.num_slaves())?;
+    let nb = SimilarityMapper::nblocks(n);
+    let gamma = crate::spectral::gamma_of_sigma(sigma) as f32;
+
+    // Paper pairing: split {b, nb-1-b} — both blocks in one map task.
+    let mut splits = Vec::new();
+    for b in 0..nb.div_ceil(2) {
+        let mut records = vec![(encode_u64(b as u64).to_vec(), vec![])];
+        let mirror = nb - 1 - b;
+        if mirror != b {
+            records.push((encode_u64(mirror as u64).to_vec(), vec![]));
+        }
+        splits.push(records);
+    }
+
+    let mapper = Arc::new(SimilarityMapper {
+        points,
+        n,
+        d,
+        gamma,
+        epsilon: epsilon as f32,
+        table: table.clone(),
+        runtime: services.runtime.clone(),
+    });
+    let job = JobBuilder::new("similarity", splits, mapper)
+        .reducer(Arc::new(DegreeReducer), services.cluster.num_slaves())
+        .build();
+    let result = mapreduce::run(&services.cluster, &job)?;
+
+    // Assemble the degree vector from reducer output.
+    let mut degrees = vec![0.0f64; n];
+    for (k, v) in result.sorted_records() {
+        degrees[decode_u64(&k) as usize] = decode_f64(&v);
+    }
+    let mut stats = PhaseStats { name: "similarity".into(), ..Default::default() };
+    stats.absorb(&result.stats);
+    Ok(SimilarityOutput {
+        degrees,
+        stats,
+        nnz: result.counters.get("SIM_ENTRIES_KEPT"),
+    })
+}
+
+/// Graph-mode phase 1: build the S table from a topology's edges.
+///
+/// The edge list is split across map tasks; each map emits both directions
+/// of every edge (`sim(i,j) = sim(j,i)`, paper §4.3.1) plus unit diagonals
+/// from vertex records. Reducers assemble each row, write its chunks to the
+/// table and emit the degree.
+pub fn run_similarity_phase_graph(
+    services: &Services,
+    topology: &crate::data::Topology,
+    table_name: &str,
+) -> Result<SimilarityOutput> {
+    let n = topology.num_vertices();
+    let table = services.tables.create(table_name, services.cluster.num_slaves())?;
+
+    // Splits: edges chunked, then vertices chunked (for the diagonal).
+    const RECORDS_PER_SPLIT: usize = 4096;
+    let mut splits: Vec<Vec<(Vec<u8>, Vec<u8>)>> = Vec::new();
+    let mut current: Vec<(Vec<u8>, Vec<u8>)> = Vec::new();
+    for e in &topology.edges {
+        let mut v = Vec::with_capacity(24);
+        v.extend_from_slice(&encode_u64(e.src));
+        v.extend_from_slice(&encode_u64(e.dst));
+        v.extend_from_slice(&encode_f64(e.label.max(1) as f64));
+        current.push((b"e".to_vec(), v));
+        if current.len() == RECORDS_PER_SPLIT {
+            splits.push(std::mem::take(&mut current));
+        }
+    }
+    for v in &topology.vertices {
+        current.push((b"v".to_vec(), encode_u64(v.id).to_vec()));
+        if current.len() == RECORDS_PER_SPLIT {
+            splits.push(std::mem::take(&mut current));
+        }
+    }
+    if !current.is_empty() {
+        splits.push(current);
+    }
+
+    let mapper = Arc::new(crate::mapreduce::FnMapper(
+        move |key: &[u8], value: &[u8], ctx: &mut TaskContext| -> Result<()> {
+            match key {
+                b"e" => {
+                    let src = decode_u64(&value[..8]);
+                    let dst = decode_u64(&value[8..16]);
+                    let w = &value[16..24];
+                    let mut payload = Vec::with_capacity(16);
+                    payload.extend_from_slice(&encode_u64(dst));
+                    payload.extend_from_slice(w);
+                    ctx.emit(encode_u64(src).to_vec(), payload);
+                    if src != dst {
+                        let mut payload = Vec::with_capacity(16);
+                        payload.extend_from_slice(&encode_u64(src));
+                        payload.extend_from_slice(w);
+                        ctx.emit(encode_u64(dst).to_vec(), payload);
+                    }
+                }
+                b"v" => {
+                    let id = decode_u64(value);
+                    let mut payload = Vec::with_capacity(16);
+                    payload.extend_from_slice(&encode_u64(id));
+                    payload.extend_from_slice(&encode_f64(1.0));
+                    ctx.emit(encode_u64(id).to_vec(), payload);
+                }
+                other => {
+                    return Err(crate::error::Error::MapReduce(format!(
+                        "graph similarity: unknown record {other:?}"
+                    )))
+                }
+            }
+            ctx.incr(
+                crate::mapreduce::names::COMPUTE_US,
+                super::costmodel::units_to_us(1, super::costmodel::GRAPH_EDGES_PER_S),
+            );
+            Ok(())
+        },
+    ));
+
+    let table_c = table.clone();
+    let reducer = Arc::new(crate::mapreduce::FnReducer(
+        move |key: &[u8], values: &[Vec<u8>], ctx: &mut TaskContext| -> Result<()> {
+            let row = decode_u64(key);
+            let mut entries: Vec<(u32, f64)> = values
+                .iter()
+                .map(|v| (decode_u64(&v[..8]) as u32, decode_f64(&v[8..16])))
+                .collect();
+            entries.sort_unstable_by_key(|&(j, _)| j);
+            entries.dedup_by(|a, b| {
+                if a.0 == b.0 {
+                    b.1 += a.1; // parallel edges sum
+                    true
+                } else {
+                    false
+                }
+            });
+            let degree: f64 = entries.iter().map(|&(_, v)| v).sum();
+            ctx.incr("SIM_ENTRIES_KEPT", entries.len() as u64);
+            ctx.incr(
+                crate::mapreduce::names::COMPUTE_US,
+                super::costmodel::units_to_us(
+                    entries.len() as u64,
+                    super::costmodel::GRAPH_EDGES_PER_S,
+                ),
+            );
+            // Write per-column-block chunks.
+            let mut i = 0;
+            while i < entries.len() {
+                let cb = entries[i].0 as usize / BLOCK;
+                let mut j = i;
+                while j < entries.len() && entries[j].0 as usize / BLOCK == cb {
+                    j += 1;
+                }
+                table_c.put(
+                    chunk_key(row, cb as u64),
+                    crate::util::bytes::encode_sparse_row(&entries[i..j]),
+                )?;
+                i = j;
+            }
+            ctx.emit(key.to_vec(), encode_f64(degree).to_vec());
+            Ok(())
+        },
+    ));
+
+    let job = JobBuilder::new("similarity-graph", splits, mapper)
+        .reducer(reducer, services.cluster.num_slaves())
+        .build();
+    let result = mapreduce::run(&services.cluster, &job)?;
+
+    let mut degrees = vec![0.0f64; n];
+    for (k, v) in result.sorted_records() {
+        degrees[decode_u64(&k) as usize] = decode_f64(&v);
+    }
+    let mut stats = PhaseStats { name: "similarity".into(), ..Default::default() };
+    stats.absorb(&result.stats);
+    Ok(SimilarityOutput {
+        degrees,
+        stats,
+        nnz: result.counters.get("SIM_ENTRIES_KEPT"),
+    })
+}
+
+/// Read one row of S back from the table (tests + phase 2).
+pub fn read_similarity_row(table: &Table, row: u64, nblocks: usize) -> Vec<(u32, f64)> {
+    let mut out = Vec::new();
+    for cb in 0..nblocks as u64 {
+        if let Ok(Some(v)) = table.get(&chunk_key(row, cb)) {
+            out.extend(crate::util::bytes::decode_sparse_row(&v));
+        }
+    }
+    out.sort_unstable_by_key(|&(j, _)| j);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::data::gaussian_blobs;
+
+    fn services(m: usize) -> Services {
+        Services::new(Cluster::new(m), Arc::new(KernelRuntime::native()))
+    }
+
+    fn run_phase(n: usize, sigma: f64, eps: f64) -> (Services, SimilarityOutput, usize) {
+        let ps = gaussian_blobs(n, 3, 4, 0.4, 8.0, 3);
+        let svc = services(3);
+        let flat: Vec<f32> = ps.points.iter().flatten().map(|&x| x as f32).collect();
+        let out = run_similarity_phase(
+            &svc,
+            Arc::new(flat),
+            n,
+            4,
+            sigma,
+            eps,
+            "S",
+        )
+        .unwrap();
+        (svc, out, n)
+    }
+
+    #[test]
+    fn matches_single_machine_similarity() {
+        let n = 300;
+        let ps = gaussian_blobs(n, 3, 4, 0.4, 8.0, 3);
+        let svc = services(2);
+        let flat: Vec<f32> = ps.points.iter().flatten().map(|&x| x as f32).collect();
+        let out =
+            run_similarity_phase(&svc, Arc::new(flat), n, 4, 1.0, 1e-6, "S").unwrap();
+        let oracle = crate::spectral::rbf_sparse(&ps.points, 1.0, 1e-6);
+        let table = svc.tables.open("S").unwrap();
+        let nb = n.div_ceil(BLOCK);
+        for i in (0..n).step_by(37) {
+            let row = read_similarity_row(&table, i as u64, nb);
+            let oracle_row: Vec<(u32, f64)> = oracle.row(i).collect();
+            assert_eq!(row.len(), oracle_row.len(), "row {i} nnz");
+            for ((j1, v1), (j2, v2)) in row.iter().zip(&oracle_row) {
+                assert_eq!(j1, j2);
+                assert!((v1 - v2).abs() < 1e-5, "row {i} col {j1}: {v1} vs {v2}");
+            }
+        }
+        // Degrees match row sums.
+        let sums = oracle.row_sums();
+        for i in (0..n).step_by(11) {
+            assert!(
+                (out.degrees[i] - sums[i]).abs() < 1e-3,
+                "degree {i}: {} vs {}",
+                out.degrees[i],
+                sums[i]
+            );
+        }
+    }
+
+    #[test]
+    fn diagonal_always_kept() {
+        let (svc, _, n) = run_phase(150, 0.2, 0.5); // harsh epsilon
+        let table = svc.tables.open("S").unwrap();
+        let nb = n.div_ceil(BLOCK);
+        for i in (0..n).step_by(29) {
+            let row = read_similarity_row(&table, i as u64, nb);
+            assert!(
+                row.iter().any(|&(j, v)| j as usize == i && (v - 1.0).abs() < 1e-6),
+                "row {i} lost its diagonal"
+            );
+        }
+    }
+
+    #[test]
+    fn epsilon_controls_sparsity() {
+        // Intra-cluster sims sit around exp(-d2/2) ~ 0.5 for these blobs, so
+        // a 0.5 threshold cuts into them while 1e-8 keeps them all.
+        let (_, loose, _) = run_phase(200, 1.0, 1e-8);
+        let (_, tight, _) = run_phase(200, 1.0, 0.5);
+        assert!(tight.nnz < loose.nnz, "{} !< {}", tight.nnz, loose.nnz);
+    }
+
+    #[test]
+    fn stats_populated() {
+        let (_, out, _) = run_phase(130, 1.0, 1e-6);
+        assert!(out.stats.virtual_s > 0.0);
+        assert_eq!(out.stats.jobs, 1);
+        assert!(out.stats.shuffle_bytes > 0, "degrees cross the shuffle");
+    }
+
+    #[test]
+    fn pairing_splits_cover_all_blocks() {
+        // 5 blocks -> tasks {0,4},{1,3},{2}; 4 -> {0,3},{1,2}.
+        for (nb, want) in [(5usize, 3usize), (4, 2), (1, 1)] {
+            let n = nb * BLOCK;
+            let mut blocks_seen = std::collections::HashSet::new();
+            for b in 0..nb.div_ceil(2) {
+                blocks_seen.insert(b);
+                blocks_seen.insert(nb - 1 - b);
+            }
+            assert_eq!(blocks_seen.len(), nb, "n={n}");
+            assert_eq!(nb.div_ceil(2), want);
+        }
+    }
+}

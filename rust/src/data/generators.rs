@@ -1,0 +1,293 @@
+//! Synthetic data generators: planted-partition graphs (the paper-scale
+//! dataset substitute), Gaussian blobs, concentric rings and two moons.
+//!
+//! The paper's 10,029-vertex / 21,054-edge dataset is unnamed and not
+//! public; [`planted_graph`] generates a graph with the same vertex/edge
+//! counts and a planted k-way community structure, so clustering quality is
+//! measurable against ground truth (DESIGN.md §2 substitution table).
+
+use crate::util::Xoshiro256;
+
+use super::topology::{Edge, Topology, Vertex};
+
+/// A labelled point dataset.
+#[derive(Debug, Clone)]
+pub struct PointSet {
+    /// Row-major points, `n × dim`.
+    pub points: Vec<Vec<f64>>,
+    /// Ground-truth cluster per point.
+    pub labels: Vec<usize>,
+    /// Feature dimension.
+    pub dim: usize,
+}
+
+impl PointSet {
+    /// Number of points.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Is the set empty?
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+/// Isotropic Gaussian blobs: `k` clusters of ~n/k points in `dim` dims.
+///
+/// Centers sit on a scaled simplex (distance `separation` apart), points are
+/// N(center, sigma^2 I).
+pub fn gaussian_blobs(
+    n: usize,
+    k: usize,
+    dim: usize,
+    sigma: f64,
+    separation: f64,
+    seed: u64,
+) -> PointSet {
+    assert!(k >= 1 && dim >= 1 && n >= k);
+    let mut rng = Xoshiro256::new(seed);
+    // Random well-separated centers.
+    let mut centers = Vec::with_capacity(k);
+    for c in 0..k {
+        let mut center = vec![0.0; dim];
+        // Deterministic placement: axis c (mod dim) offset + jitter.
+        center[c % dim] = separation * (1.0 + (c / dim) as f64);
+        for x in center.iter_mut() {
+            *x += rng.next_gaussian() * 0.05 * separation;
+        }
+        centers.push(center);
+    }
+    let mut points = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % k;
+        let mut p = centers[c].clone();
+        for x in p.iter_mut() {
+            *x += rng.next_gaussian() * sigma;
+        }
+        points.push(p);
+        labels.push(c);
+    }
+    PointSet { points, labels, dim }
+}
+
+/// Two concentric rings in 2-D — the "arbitrary shape" case where k-means
+/// fails and spectral clustering shines (paper §3.1).
+pub fn two_rings(n: usize, r_inner: f64, r_outer: f64, noise: f64, seed: u64) -> PointSet {
+    let mut rng = Xoshiro256::new(seed);
+    let mut points = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let ring = i % 2;
+        let r = if ring == 0 { r_inner } else { r_outer };
+        let theta = rng.next_f64() * std::f64::consts::TAU;
+        points.push(vec![
+            r * theta.cos() + rng.next_gaussian() * noise,
+            r * theta.sin() + rng.next_gaussian() * noise,
+        ]);
+        labels.push(ring);
+    }
+    PointSet { points, labels, dim: 2 }
+}
+
+/// Two interleaved half-moons in 2-D.
+pub fn two_moons(n: usize, noise: f64, seed: u64) -> PointSet {
+    let mut rng = Xoshiro256::new(seed);
+    let mut points = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let moon = i % 2;
+        let t = rng.next_f64() * std::f64::consts::PI;
+        let (x, y) = if moon == 0 {
+            (t.cos(), t.sin())
+        } else {
+            (1.0 - t.cos(), 0.5 - t.sin())
+        };
+        points.push(vec![
+            x + rng.next_gaussian() * noise,
+            y + rng.next_gaussian() * noise,
+        ]);
+        labels.push(moon);
+    }
+    PointSet { points, labels, dim: 2 }
+}
+
+/// Planted-partition graph with exactly `n` vertices and (approximately,
+/// then trimmed/padded to exactly) `edges` edges over `k` communities.
+///
+/// Intra-community edges are sampled with probability proportional to
+/// `p_in`, inter-community with `p_out` (p_in >> p_out). Vertex labels carry
+/// the planted community; edge labels are 1 (the paper's Fig. 4 uses small
+/// integer labels).
+pub fn planted_graph(n: usize, edges: usize, k: usize, p_out_frac: f64, seed: u64) -> Topology {
+    assert!(k >= 1 && n >= k);
+    let mut rng = Xoshiro256::new(seed);
+    let mut topo = Topology {
+        graph_id: 0,
+        vertices: (0..n as u64)
+            .map(|id| Vertex { id, label: (id as usize % k) as i64 })
+            .collect(),
+        edges: Vec::with_capacity(edges),
+    };
+    let mut seen = std::collections::HashSet::with_capacity(edges * 2);
+    let n_inter = (edges as f64 * p_out_frac).round() as usize;
+    let n_intra = edges - n_inter;
+
+    // Intra-community edges.
+    let mut tries = 0;
+    while topo.edges.len() < n_intra && tries < edges * 50 {
+        tries += 1;
+        let c = rng.next_index(k);
+        // Two distinct members of community c (ids ≡ c mod k).
+        let size = (n - c + k - 1) / k;
+        if size < 2 {
+            continue;
+        }
+        let a = (rng.next_index(size) * k + c) as u64;
+        let b = (rng.next_index(size) * k + c) as u64;
+        if a == b {
+            continue;
+        }
+        let key = (a.min(b), a.max(b));
+        if seen.insert(key) {
+            topo.edges.push(Edge { src: key.0, dst: key.1, label: 1 });
+        }
+    }
+    // Inter-community edges.
+    tries = 0;
+    while topo.edges.len() < edges && tries < edges * 50 {
+        tries += 1;
+        let a = rng.next_index(n) as u64;
+        let b = rng.next_index(n) as u64;
+        if a == b || (a as usize % k) == (b as usize % k) {
+            continue;
+        }
+        let key = (a.min(b), a.max(b));
+        if seen.insert(key) {
+            topo.edges.push(Edge { src: key.0, dst: key.1, label: 1 });
+        }
+    }
+    topo
+}
+
+/// The paper-scale dataset: 10,029 vertices, 21,054 edges (Ch. 5.1).
+pub fn paper_scale_graph(k: usize, seed: u64) -> Topology {
+    planted_graph(10_029, 21_054, k, 0.05, seed)
+}
+
+/// Pad a point set's coordinates into fixed-width f32 rows (for the XLA
+/// kernels' fixed tile geometry). Returns (row-major data, padded dim).
+pub fn pad_points_f32(points: &[Vec<f64>], pad_dim: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(points.len() * pad_dim);
+    for p in points {
+        for j in 0..pad_dim {
+            out.push(p.get(j).copied().unwrap_or(0.0) as f32);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blobs_shape_and_determinism() {
+        let a = gaussian_blobs(100, 4, 3, 0.1, 10.0, 7);
+        assert_eq!(a.len(), 100);
+        assert_eq!(a.dim, 3);
+        assert_eq!(a.labels.iter().filter(|&&l| l == 0).count(), 25);
+        let b = gaussian_blobs(100, 4, 3, 0.1, 10.0, 7);
+        assert_eq!(a.points, b.points);
+        let c = gaussian_blobs(100, 4, 3, 0.1, 10.0, 8);
+        assert_ne!(a.points, c.points);
+    }
+
+    #[test]
+    fn blobs_are_separated() {
+        let ps = gaussian_blobs(200, 2, 2, 0.5, 20.0, 1);
+        // Mean intra-cluster distance << inter-cluster distance.
+        let c0: Vec<&Vec<f64>> = ps
+            .points
+            .iter()
+            .zip(&ps.labels)
+            .filter(|(_, &l)| l == 0)
+            .map(|(p, _)| p)
+            .collect();
+        let c1: Vec<&Vec<f64>> = ps
+            .points
+            .iter()
+            .zip(&ps.labels)
+            .filter(|(_, &l)| l == 1)
+            .map(|(p, _)| p)
+            .collect();
+        let centroid = |pts: &[&Vec<f64>]| -> Vec<f64> {
+            let mut c = vec![0.0; 2];
+            for p in pts {
+                c[0] += p[0];
+                c[1] += p[1];
+            }
+            c.iter().map(|x| x / pts.len() as f64).collect()
+        };
+        let d = crate::linalg::vector::sq_dist(&centroid(&c0), &centroid(&c1)).sqrt();
+        assert!(d > 10.0, "centroids too close: {d}");
+    }
+
+    #[test]
+    fn rings_radii() {
+        let ps = two_rings(400, 1.0, 5.0, 0.0, 3);
+        for (p, &l) in ps.points.iter().zip(&ps.labels) {
+            let r = (p[0] * p[0] + p[1] * p[1]).sqrt();
+            let expect = if l == 0 { 1.0 } else { 5.0 };
+            assert!((r - expect).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn moons_two_classes() {
+        let ps = two_moons(100, 0.05, 9);
+        assert_eq!(ps.len(), 100);
+        assert_eq!(ps.labels.iter().filter(|&&l| l == 1).count(), 50);
+    }
+
+    #[test]
+    fn planted_graph_exact_counts() {
+        let t = planted_graph(500, 1000, 4, 0.05, 11);
+        assert_eq!(t.num_vertices(), 500);
+        assert_eq!(t.num_edges(), 1000);
+        t.validate().unwrap();
+        // No duplicate undirected edges.
+        let set: std::collections::HashSet<(u64, u64)> = t
+            .edges
+            .iter()
+            .map(|e| (e.src.min(e.dst), e.src.max(e.dst)))
+            .collect();
+        assert_eq!(set.len(), 1000);
+    }
+
+    #[test]
+    fn planted_graph_mostly_intra() {
+        let t = planted_graph(500, 1000, 4, 0.05, 13);
+        let intra = t
+            .edges
+            .iter()
+            .filter(|e| e.src % 4 == e.dst % 4)
+            .count();
+        assert!(intra as f64 > 0.9 * 1000.0, "intra edges: {intra}");
+    }
+
+    #[test]
+    fn paper_scale_counts() {
+        let t = paper_scale_graph(4, 1);
+        assert_eq!(t.num_vertices(), 10_029);
+        assert_eq!(t.num_edges(), 21_054);
+    }
+
+    #[test]
+    fn pad_points_zero_fills() {
+        let pts = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        let padded = pad_points_f32(&pts, 4);
+        assert_eq!(padded, vec![1.0, 2.0, 0.0, 0.0, 3.0, 4.0, 0.0, 0.0]);
+    }
+}

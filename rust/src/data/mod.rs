@@ -1,0 +1,10 @@
+//! Datasets: the paper's Fig. 4 topology format and synthetic generators.
+
+pub mod generators;
+pub mod topology;
+
+pub use generators::{
+    gaussian_blobs, pad_points_f32, paper_scale_graph, planted_graph, two_moons,
+    two_rings, PointSet,
+};
+pub use topology::{Edge, Topology, Vertex};

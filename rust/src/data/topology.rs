@@ -1,0 +1,229 @@
+//! The paper's Fig. 4 topology text format.
+//!
+//! A graph file is lines of whitespace-separated tokens:
+//!
+//! ```text
+//! t # 0          <- graph header (id after '#')
+//! v 0 1          <- vertex: id, label
+//! v 1 1
+//! e 0 1 2        <- edge: src, dst, label/weight
+//! ```
+//!
+//! The paper's dataset: "a total of 10029 points and 21054 side" in this
+//! format. We parse and write it exactly, treating the edge label as an
+//! integer weight.
+
+use crate::error::{Error, Result};
+
+/// One vertex: id and integer label.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Vertex {
+    /// Vertex id (dense, 0-based in well-formed files).
+    pub id: u64,
+    /// Label (cluster id for planted data, arbitrary otherwise).
+    pub label: i64,
+}
+
+/// One undirected edge: endpoints and integer label (used as weight).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Edge {
+    /// Source vertex id.
+    pub src: u64,
+    /// Destination vertex id.
+    pub dst: u64,
+    /// Edge label / weight.
+    pub label: i64,
+}
+
+/// A parsed topology file.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Topology {
+    /// Graph id (the paper's `t # 0` header).
+    pub graph_id: u64,
+    /// Vertices in file order.
+    pub vertices: Vec<Vertex>,
+    /// Edges in file order.
+    pub edges: Vec<Edge>,
+}
+
+impl Topology {
+    /// Parse the Fig. 4 text format.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut topo = Topology::default();
+        let mut seen_header = false;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('%') {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            let ctx = |msg: &str| {
+                Error::Data(format!("topology line {}: {msg}: {line:?}", lineno + 1))
+            };
+            match toks[0] {
+                "t" => {
+                    // "t # <id>" (gSpan style) or "t <id>".
+                    let id_tok = if toks.len() >= 3 && toks[1] == "#" {
+                        toks[2]
+                    } else if toks.len() >= 2 {
+                        toks[1]
+                    } else {
+                        return Err(ctx("malformed graph header"));
+                    };
+                    topo.graph_id = id_tok
+                        .parse()
+                        .map_err(|_| ctx("bad graph id"))?;
+                    seen_header = true;
+                }
+                "v" => {
+                    if toks.len() < 3 {
+                        return Err(ctx("vertex needs id and label"));
+                    }
+                    topo.vertices.push(Vertex {
+                        id: toks[1].parse().map_err(|_| ctx("bad vertex id"))?,
+                        label: toks[2].parse().map_err(|_| ctx("bad vertex label"))?,
+                    });
+                }
+                "e" => {
+                    if toks.len() < 4 {
+                        return Err(ctx("edge needs src, dst and label"));
+                    }
+                    topo.edges.push(Edge {
+                        src: toks[1].parse().map_err(|_| ctx("bad edge src"))?,
+                        dst: toks[2].parse().map_err(|_| ctx("bad edge dst"))?,
+                        label: toks[3].parse().map_err(|_| ctx("bad edge label"))?,
+                    });
+                }
+                other => {
+                    return Err(ctx(&format!("unknown record type {other:?}")));
+                }
+            }
+        }
+        if !seen_header && (!topo.vertices.is_empty() || !topo.edges.is_empty()) {
+            return Err(Error::Data("topology: missing 't' header".into()));
+        }
+        topo.validate()?;
+        Ok(topo)
+    }
+
+    /// Serialize back to the Fig. 4 text format.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("t # {}\n", self.graph_id));
+        for v in &self.vertices {
+            out.push_str(&format!("v {} {}\n", v.id, v.label));
+        }
+        for e in &self.edges {
+            out.push_str(&format!("e {} {} {}\n", e.src, e.dst, e.label));
+        }
+        out
+    }
+
+    /// Check edges reference declared vertices.
+    pub fn validate(&self) -> Result<()> {
+        let ids: std::collections::HashSet<u64> =
+            self.vertices.iter().map(|v| v.id).collect();
+        if ids.len() != self.vertices.len() {
+            return Err(Error::Data("topology: duplicate vertex id".into()));
+        }
+        for e in &self.edges {
+            if !ids.contains(&e.src) || !ids.contains(&e.dst) {
+                return Err(Error::Data(format!(
+                    "topology: edge ({}, {}) references undeclared vertex",
+                    e.src, e.dst
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of vertices.
+    pub fn num_vertices(&self) -> usize {
+        self.vertices.len()
+    }
+
+    /// Number of edges.
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Ground-truth labels by dense vertex id (for planted graphs).
+    pub fn labels(&self) -> Vec<usize> {
+        let mut sorted = self.vertices.clone();
+        sorted.sort_by_key(|v| v.id);
+        sorted.iter().map(|v| v.label.max(0) as usize).collect()
+    }
+
+    /// Symmetric adjacency triplets (both directions per undirected edge).
+    pub fn adjacency_triplets(&self) -> Vec<(usize, usize, f64)> {
+        let mut t = Vec::with_capacity(self.edges.len() * 2);
+        for e in &self.edges {
+            let w = e.label.max(1) as f64;
+            t.push((e.src as usize, e.dst as usize, w));
+            if e.src != e.dst {
+                t.push((e.dst as usize, e.src as usize, w));
+            }
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "t # 0\nv 0 1\nv 1 1\nv 2 0\ne 0 1 2\ne 1 2 1\n";
+
+    #[test]
+    fn parse_fig4_sample() {
+        let t = Topology::parse(SAMPLE).unwrap();
+        assert_eq!(t.graph_id, 0);
+        assert_eq!(t.num_vertices(), 3);
+        assert_eq!(t.num_edges(), 2);
+        assert_eq!(t.vertices[0], Vertex { id: 0, label: 1 });
+        assert_eq!(t.edges[1], Edge { src: 1, dst: 2, label: 1 });
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = Topology::parse(SAMPLE).unwrap();
+        let t2 = Topology::parse(&t.to_text()).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn tolerates_blank_lines_comments_and_extra_spaces() {
+        let text = "t # 7\n\n% comment\nv  0   1\nv 1 2\ne 0  1  3\n";
+        let t = Topology::parse(text).unwrap();
+        assert_eq!(t.graph_id, 7);
+        assert_eq!(t.num_edges(), 1);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Topology::parse("v 0 1\n").is_err(), "missing header");
+        assert!(Topology::parse("t # 0\nv 0\n").is_err(), "vertex arity");
+        assert!(Topology::parse("t # 0\ne 0 1\n").is_err(), "edge arity");
+        assert!(Topology::parse("t # 0\nx 1 2 3\n").is_err(), "unknown type");
+        assert!(Topology::parse("t # 0\nv 0 1\nv 0 2\n").is_err(), "dup vertex");
+        assert!(
+            Topology::parse("t # 0\nv 0 1\ne 0 9 1\n").is_err(),
+            "dangling edge"
+        );
+    }
+
+    #[test]
+    fn adjacency_is_symmetric() {
+        let t = Topology::parse(SAMPLE).unwrap();
+        let trips = t.adjacency_triplets();
+        assert_eq!(trips.len(), 4);
+        assert!(trips.contains(&(0, 1, 2.0)));
+        assert!(trips.contains(&(1, 0, 2.0)));
+    }
+
+    #[test]
+    fn self_loop_emitted_once() {
+        let t = Topology::parse("t # 0\nv 0 1\ne 0 0 5\n").unwrap();
+        assert_eq!(t.adjacency_triplets(), vec![(0, 0, 5.0)]);
+    }
+}

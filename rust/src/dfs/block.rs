@@ -1,0 +1,35 @@
+//! Block primitives for the mini-HDFS.
+
+use std::sync::Arc;
+
+/// Globally unique block id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockId(pub u64);
+
+/// Default block size (small: workloads here are MBs, not TBs).
+pub const DEFAULT_BLOCK_SIZE: usize = 1 << 20; // 1 MiB
+
+/// Immutable block payload, shared between datanodes (replicas) without copy.
+pub type BlockData = Arc<Vec<u8>>;
+
+/// Metadata for one file: ordered blocks plus total length.
+#[derive(Debug, Clone)]
+pub struct FileMeta {
+    /// Blocks in file order.
+    pub blocks: Vec<BlockId>,
+    /// Exact byte length (last block may be partial).
+    pub len: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_id_ordering() {
+        assert!(BlockId(1) < BlockId(2));
+        let mut v = vec![BlockId(3), BlockId(1), BlockId(2)];
+        v.sort();
+        assert_eq!(v, vec![BlockId(1), BlockId(2), BlockId(3)]);
+    }
+}

@@ -1,0 +1,106 @@
+//! DataNode: block storage on one simulated slave machine.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+use super::block::{BlockData, BlockId};
+
+/// One datanode's block store.
+#[derive(Debug)]
+pub struct DataNode {
+    /// Node id (== slave id in the cluster).
+    pub id: usize,
+    blocks: HashMap<BlockId, BlockData>,
+    alive: bool,
+}
+
+impl DataNode {
+    /// New empty, alive datanode.
+    pub fn new(id: usize) -> Self {
+        Self { id, blocks: HashMap::new(), alive: true }
+    }
+
+    /// Store a replica.
+    pub fn store(&mut self, id: BlockId, data: BlockData) -> Result<()> {
+        if !self.alive {
+            return Err(Error::Dfs(format!("datanode {} is dead", self.id)));
+        }
+        self.blocks.insert(id, data);
+        Ok(())
+    }
+
+    /// Read a replica.
+    pub fn read(&self, id: BlockId) -> Result<BlockData> {
+        if !self.alive {
+            return Err(Error::Dfs(format!("datanode {} is dead", self.id)));
+        }
+        self.blocks
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| Error::Dfs(format!("datanode {}: no block {id:?}", self.id)))
+    }
+
+    /// Drop a replica (GC).
+    pub fn delete(&mut self, id: BlockId) {
+        self.blocks.remove(&id);
+    }
+
+    /// Is this node serving?
+    pub fn is_alive(&self) -> bool {
+        self.alive
+    }
+
+    /// Kill the node (fault injection). Its replicas become unreachable.
+    pub fn kill(&mut self) {
+        self.alive = false;
+        self.blocks.clear();
+    }
+
+    /// Restart the node empty.
+    pub fn restart(&mut self) {
+        self.alive = true;
+    }
+
+    /// Number of replicas held.
+    pub fn block_count(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Bytes held.
+    pub fn bytes(&self) -> usize {
+        self.blocks.values().map(|b| b.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn store_read_delete() {
+        let mut dn = DataNode::new(0);
+        let data = Arc::new(vec![1u8, 2, 3]);
+        dn.store(BlockId(1), data.clone()).unwrap();
+        assert_eq!(*dn.read(BlockId(1)).unwrap(), vec![1, 2, 3]);
+        assert_eq!(dn.block_count(), 1);
+        assert_eq!(dn.bytes(), 3);
+        dn.delete(BlockId(1));
+        assert!(dn.read(BlockId(1)).is_err());
+    }
+
+    #[test]
+    fn dead_node_rejects_io() {
+        let mut dn = DataNode::new(3);
+        dn.store(BlockId(1), Arc::new(vec![0u8; 4])).unwrap();
+        dn.kill();
+        assert!(!dn.is_alive());
+        assert!(dn.read(BlockId(1)).is_err());
+        assert!(dn.store(BlockId(2), Arc::new(vec![])).is_err());
+        dn.restart();
+        assert!(dn.is_alive());
+        // Replicas were lost on kill.
+        assert_eq!(dn.block_count(), 0);
+    }
+}

@@ -1,0 +1,339 @@
+//! Mini-HDFS: a single-master replicated block store (paper §2.1).
+//!
+//! Write-once/read-many semantics, fixed-size blocks, configurable
+//! replication, round-robin block placement, datanode fault injection and
+//! re-replication from surviving replicas — the behaviours the paper's
+//! pipeline relies on (input file storage, the k-means "center file") plus
+//! the reliability mechanism §2.1 highlights.
+
+pub mod block;
+pub mod datanode;
+pub mod namenode;
+
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+
+pub use block::{BlockId, FileMeta, DEFAULT_BLOCK_SIZE};
+use datanode::DataNode;
+use namenode::NameNode;
+
+/// The distributed file system facade. Cheap to clone (shared state).
+#[derive(Clone)]
+pub struct Dfs {
+    inner: Arc<DfsInner>,
+}
+
+struct DfsInner {
+    namenode: Mutex<NameNode>,
+    datanodes: Vec<Mutex<DataNode>>,
+    block_size: usize,
+    replication: usize,
+    next_placement: Mutex<usize>,
+}
+
+impl Dfs {
+    /// Create a DFS over `nodes` datanodes with the given replication factor
+    /// (clamped to the node count) and default block size.
+    pub fn new(nodes: usize, replication: usize) -> Self {
+        Self::with_block_size(nodes, replication, DEFAULT_BLOCK_SIZE)
+    }
+
+    /// Create with an explicit block size (tests use tiny blocks).
+    pub fn with_block_size(nodes: usize, replication: usize, block_size: usize) -> Self {
+        assert!(nodes > 0, "need at least one datanode");
+        assert!(block_size > 0, "block size must be positive");
+        Self {
+            inner: Arc::new(DfsInner {
+                namenode: Mutex::new(NameNode::default()),
+                datanodes: (0..nodes).map(|i| Mutex::new(DataNode::new(i))).collect(),
+                block_size,
+                replication: replication.max(1).min(nodes),
+                next_placement: Mutex::new(0),
+            }),
+        }
+    }
+
+    /// Number of datanodes (alive or dead).
+    pub fn node_count(&self) -> usize {
+        self.inner.datanodes.len()
+    }
+
+    /// Configured replication factor.
+    pub fn replication(&self) -> usize {
+        self.inner.replication
+    }
+
+    /// Pick `replication` distinct alive nodes, round-robin from a cursor.
+    fn place_replicas(&self) -> Result<Vec<usize>> {
+        let n = self.inner.datanodes.len();
+        let mut cursor = self.inner.next_placement.lock().unwrap();
+        let mut chosen = Vec::with_capacity(self.inner.replication);
+        for off in 0..n {
+            let cand = (*cursor + off) % n;
+            if self.inner.datanodes[cand].lock().unwrap().is_alive() {
+                chosen.push(cand);
+                if chosen.len() == self.inner.replication {
+                    break;
+                }
+            }
+        }
+        *cursor = (*cursor + 1) % n;
+        if chosen.is_empty() {
+            return Err(Error::Dfs("no alive datanodes".into()));
+        }
+        Ok(chosen)
+    }
+
+    /// Write a file (overwrites an existing path, HDFS-style delete+create).
+    pub fn write_file(&self, path: &str, data: &[u8]) -> Result<()> {
+        if self.exists(path) {
+            self.delete(path)?;
+        }
+        let mut blocks = Vec::new();
+        for chunk in data.chunks(self.inner.block_size.max(1)) {
+            let payload: block::BlockData = Arc::new(chunk.to_vec());
+            let id = self.inner.namenode.lock().unwrap().alloc_block();
+            let nodes = self.place_replicas()?;
+            for &node in &nodes {
+                self.inner.datanodes[node]
+                    .lock()
+                    .unwrap()
+                    .store(id, payload.clone())?;
+            }
+            self.inner.namenode.lock().unwrap().set_locations(id, nodes);
+            blocks.push(id);
+        }
+        // Empty file still gets metadata.
+        self.inner
+            .namenode
+            .lock()
+            .unwrap()
+            .create_file(path, FileMeta { blocks, len: data.len() })
+    }
+
+    /// Read a whole file, preferring the first alive replica of each block.
+    pub fn read_file(&self, path: &str) -> Result<Vec<u8>> {
+        let meta = self.inner.namenode.lock().unwrap().get_file(path)?.clone();
+        let mut out = Vec::with_capacity(meta.len);
+        for block in &meta.blocks {
+            out.extend_from_slice(&self.read_block(*block)?);
+        }
+        Ok(out)
+    }
+
+    /// Read one block from any alive replica.
+    pub fn read_block(&self, block: BlockId) -> Result<block::BlockData> {
+        let locations = self
+            .inner
+            .namenode
+            .lock()
+            .unwrap()
+            .locations(block)?
+            .to_vec();
+        for node in locations {
+            if let Ok(data) = self.inner.datanodes[node].lock().unwrap().read(block) {
+                return Ok(data);
+            }
+        }
+        Err(Error::Dfs(format!("all replicas of {block:?} unreachable")))
+    }
+
+    /// File length in bytes.
+    pub fn len(&self, path: &str) -> Result<usize> {
+        Ok(self.inner.namenode.lock().unwrap().get_file(path)?.len)
+    }
+
+    /// Does the path exist?
+    pub fn exists(&self, path: &str) -> bool {
+        self.inner.namenode.lock().unwrap().exists(path)
+    }
+
+    /// Delete a file and GC its replicas.
+    pub fn delete(&self, path: &str) -> Result<()> {
+        let meta = self.inner.namenode.lock().unwrap().remove_file(path)?;
+        for block in meta.blocks {
+            if let Ok(nodes) = self
+                .inner
+                .namenode
+                .lock()
+                .unwrap()
+                .locations(block)
+                .map(|s| s.to_vec())
+            {
+                for node in nodes {
+                    self.inner.datanodes[node].lock().unwrap().delete(block);
+                }
+            }
+            self.inner.namenode.lock().unwrap().forget_block(block);
+        }
+        Ok(())
+    }
+
+    /// List all paths.
+    pub fn list(&self) -> Vec<String> {
+        self.inner.namenode.lock().unwrap().list()
+    }
+
+    /// Kill a datanode (fault injection), then re-replicate under-replicated
+    /// blocks from surviving replicas onto other alive nodes.
+    pub fn kill_datanode(&self, node: usize) -> Result<usize> {
+        self.inner.datanodes[node].lock().unwrap().kill();
+        let under = self
+            .inner
+            .namenode
+            .lock()
+            .unwrap()
+            .drop_node(node, self.inner.replication);
+        let mut repaired = 0;
+        for block in under {
+            if self.re_replicate(block).is_ok() {
+                repaired += 1;
+            }
+        }
+        Ok(repaired)
+    }
+
+    /// Restore a block's replica count from a surviving copy.
+    fn re_replicate(&self, block: BlockId) -> Result<()> {
+        let data = self.read_block(block)?;
+        let current: Vec<usize> = self
+            .inner
+            .namenode
+            .lock()
+            .unwrap()
+            .locations(block)?
+            .to_vec();
+        let n = self.inner.datanodes.len();
+        let mut new_nodes = current.clone();
+        for cand in 0..n {
+            if new_nodes.len() >= self.inner.replication {
+                break;
+            }
+            if new_nodes.contains(&cand) {
+                continue;
+            }
+            let mut dn = self.inner.datanodes[cand].lock().unwrap();
+            if dn.is_alive() && dn.store(block, data.clone()).is_ok() {
+                new_nodes.push(cand);
+            }
+        }
+        if new_nodes.len() < self.inner.replication.min(self.alive_count()) {
+            return Err(Error::Dfs(format!("cannot restore replication of {block:?}")));
+        }
+        self.inner
+            .namenode
+            .lock()
+            .unwrap()
+            .set_locations(block, new_nodes);
+        Ok(())
+    }
+
+    /// Number of alive datanodes.
+    pub fn alive_count(&self) -> usize {
+        self.inner
+            .datanodes
+            .iter()
+            .filter(|d| d.lock().unwrap().is_alive())
+            .count()
+    }
+
+    /// Total bytes stored across all replicas (storage amplification view).
+    pub fn stored_bytes(&self) -> usize {
+        self.inner
+            .datanodes
+            .iter()
+            .map(|d| d.lock().unwrap().bytes())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip_multi_block() {
+        let dfs = Dfs::with_block_size(4, 2, 8);
+        let data: Vec<u8> = (0..100u8).collect();
+        dfs.write_file("/data", &data).unwrap();
+        assert_eq!(dfs.read_file("/data").unwrap(), data);
+        assert_eq!(dfs.len("/data").unwrap(), 100);
+        // 100 bytes / 8-byte blocks = 13 blocks, x2 replicas.
+        assert_eq!(dfs.stored_bytes(), 200);
+    }
+
+    #[test]
+    fn empty_file() {
+        let dfs = Dfs::new(2, 1);
+        dfs.write_file("/empty", &[]).unwrap();
+        assert_eq!(dfs.read_file("/empty").unwrap(), Vec::<u8>::new());
+        assert_eq!(dfs.len("/empty").unwrap(), 0);
+    }
+
+    #[test]
+    fn overwrite_replaces_content() {
+        let dfs = Dfs::with_block_size(3, 2, 4);
+        dfs.write_file("/f", b"hello world").unwrap();
+        dfs.write_file("/f", b"bye").unwrap();
+        assert_eq!(dfs.read_file("/f").unwrap(), b"bye");
+    }
+
+    #[test]
+    fn delete_gcs_replicas() {
+        let dfs = Dfs::with_block_size(3, 3, 4);
+        dfs.write_file("/f", b"0123456789").unwrap();
+        assert!(dfs.stored_bytes() > 0);
+        dfs.delete("/f").unwrap();
+        assert_eq!(dfs.stored_bytes(), 0);
+        assert!(!dfs.exists("/f"));
+        assert!(dfs.read_file("/f").is_err());
+    }
+
+    #[test]
+    fn survives_datanode_failure_with_replication() {
+        let dfs = Dfs::with_block_size(4, 2, 8);
+        let data: Vec<u8> = (0..64u8).collect();
+        dfs.write_file("/f", &data).unwrap();
+        // Kill nodes one at a time; with re-replication the file survives
+        // any single failure, and repeated failures too.
+        dfs.kill_datanode(0).unwrap();
+        assert_eq!(dfs.read_file("/f").unwrap(), data);
+        dfs.kill_datanode(1).unwrap();
+        assert_eq!(dfs.read_file("/f").unwrap(), data);
+        assert_eq!(dfs.alive_count(), 2);
+    }
+
+    #[test]
+    fn unreplicated_file_lost_on_failure() {
+        let dfs = Dfs::with_block_size(2, 1, 1024);
+        dfs.write_file("/f", b"data").unwrap();
+        // Find which node holds the single replica and kill it.
+        let holder = (0..2)
+            .find(|&i| {
+                dfs.inner.datanodes[i].lock().unwrap().block_count() > 0
+            })
+            .unwrap();
+        dfs.kill_datanode(holder).unwrap();
+        assert!(dfs.read_file("/f").is_err());
+    }
+
+    #[test]
+    fn list_files() {
+        let dfs = Dfs::new(1, 1);
+        dfs.write_file("/b", b"1").unwrap();
+        dfs.write_file("/a", b"2").unwrap();
+        assert_eq!(dfs.list(), vec!["/a".to_string(), "/b".to_string()]);
+    }
+
+    #[test]
+    fn placement_spreads_blocks() {
+        let dfs = Dfs::with_block_size(4, 1, 4);
+        dfs.write_file("/f", &[0u8; 64]).unwrap(); // 16 blocks
+        let counts: Vec<usize> = (0..4)
+            .map(|i| dfs.inner.datanodes[i].lock().unwrap().block_count())
+            .collect();
+        // Round-robin: every node holds exactly 4 of the 16 blocks.
+        assert_eq!(counts, vec![4, 4, 4, 4]);
+    }
+}

@@ -1,0 +1,145 @@
+//! NameNode: file → blocks and block → replica-location metadata.
+//!
+//! Mirrors HDFS's single-master design (paper §2.1: the Master "only
+//! store[s] metadata file blocks and … control[s] the distribution").
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+use super::block::{BlockId, FileMeta};
+
+/// NameNode state (wrapped in a lock by [`super::Dfs`]).
+#[derive(Debug, Default)]
+pub struct NameNode {
+    files: HashMap<String, FileMeta>,
+    locations: HashMap<BlockId, Vec<usize>>, // block -> datanode ids
+    next_block: u64,
+}
+
+impl NameNode {
+    /// Allocate a fresh block id.
+    pub fn alloc_block(&mut self) -> BlockId {
+        let id = BlockId(self.next_block);
+        self.next_block += 1;
+        id
+    }
+
+    /// Record a new file (fails if it already exists).
+    pub fn create_file(&mut self, path: &str, meta: FileMeta) -> Result<()> {
+        if self.files.contains_key(path) {
+            return Err(Error::Dfs(format!("file exists: {path}")));
+        }
+        self.files.insert(path.to_string(), meta);
+        Ok(())
+    }
+
+    /// Replace a file's metadata (for overwrite semantics).
+    pub fn put_file(&mut self, path: &str, meta: FileMeta) {
+        self.files.insert(path.to_string(), meta);
+    }
+
+    /// Look up a file.
+    pub fn get_file(&self, path: &str) -> Result<&FileMeta> {
+        self.files
+            .get(path)
+            .ok_or_else(|| Error::Dfs(format!("no such file: {path}")))
+    }
+
+    /// Remove a file, returning its blocks for garbage collection.
+    pub fn remove_file(&mut self, path: &str) -> Result<FileMeta> {
+        self.files
+            .remove(path)
+            .ok_or_else(|| Error::Dfs(format!("no such file: {path}")))
+    }
+
+    /// Does the file exist?
+    pub fn exists(&self, path: &str) -> bool {
+        self.files.contains_key(path)
+    }
+
+    /// All file paths (sorted).
+    pub fn list(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.files.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Record replica locations for a block.
+    pub fn set_locations(&mut self, block: BlockId, nodes: Vec<usize>) {
+        self.locations.insert(block, nodes);
+    }
+
+    /// Replica locations for a block.
+    pub fn locations(&self, block: BlockId) -> Result<&[usize]> {
+        self.locations
+            .get(&block)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| Error::Dfs(format!("no locations for {block:?}")))
+    }
+
+    /// Drop a datanode from every block's location list; returns the blocks
+    /// whose replica count fell below `replication` (need re-replication).
+    pub fn drop_node(&mut self, node: usize, replication: usize) -> Vec<BlockId> {
+        let mut under = Vec::new();
+        for (block, nodes) in self.locations.iter_mut() {
+            nodes.retain(|&n| n != node);
+            if nodes.len() < replication {
+                under.push(*block);
+            }
+        }
+        under
+    }
+
+    /// Forget a block entirely.
+    pub fn forget_block(&mut self, block: BlockId) {
+        self.locations.remove(&block);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn create_get_remove() {
+        let mut nn = NameNode::default();
+        let b = nn.alloc_block();
+        nn.create_file("/a", FileMeta { blocks: vec![b], len: 10 }).unwrap();
+        assert!(nn.exists("/a"));
+        assert!(nn.create_file("/a", FileMeta { blocks: vec![], len: 0 }).is_err());
+        assert_eq!(nn.get_file("/a").unwrap().len, 10);
+        nn.remove_file("/a").unwrap();
+        assert!(!nn.exists("/a"));
+        assert!(nn.get_file("/a").is_err());
+    }
+
+    #[test]
+    fn block_ids_unique() {
+        let mut nn = NameNode::default();
+        let a = nn.alloc_block();
+        let b = nn.alloc_block();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn drop_node_reports_under_replicated() {
+        let mut nn = NameNode::default();
+        let b1 = nn.alloc_block();
+        let b2 = nn.alloc_block();
+        nn.set_locations(b1, vec![0, 1]);
+        nn.set_locations(b2, vec![1, 2]);
+        let under = nn.drop_node(0, 2);
+        assert_eq!(under, vec![b1]);
+        assert_eq!(nn.locations(b1).unwrap(), &[1]);
+        assert_eq!(nn.locations(b2).unwrap(), &[1, 2]);
+    }
+
+    #[test]
+    fn list_sorted() {
+        let mut nn = NameNode::default();
+        nn.create_file("/b", FileMeta { blocks: vec![], len: 0 }).unwrap();
+        nn.create_file("/a", FileMeta { blocks: vec![], len: 0 }).unwrap();
+        assert_eq!(nn.list(), vec!["/a".to_string(), "/b".to_string()]);
+    }
+}

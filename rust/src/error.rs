@@ -1,0 +1,80 @@
+//! Crate-wide error type.
+//!
+//! Every fallible public API in the crate returns [`Result`]. The variants
+//! mirror the subsystems: DFS, table store, MapReduce engine, XLA runtime,
+//! linear algebra, data parsing and configuration.
+
+use thiserror::Error;
+
+/// Crate-wide error enum.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Mini-HDFS failures (missing file/block, replication impossible, ...).
+    #[error("dfs: {0}")]
+    Dfs(String),
+
+    /// Mini-HBase failures (missing table/row, region errors, ...).
+    #[error("table: {0}")]
+    Table(String),
+
+    /// MapReduce engine failures (task failed after retries, bad job conf).
+    #[error("mapreduce: {0}")]
+    MapReduce(String),
+
+    /// XLA/PJRT runtime failures (artifact missing, shape mismatch, ...).
+    #[error("runtime: {0}")]
+    Runtime(String),
+
+    /// Linear-algebra failures (non-convergence, dimension mismatch).
+    #[error("linalg: {0}")]
+    Linalg(String),
+
+    /// Data-format failures (topology file parse errors, ...).
+    #[error("data: {0}")]
+    Data(String),
+
+    /// Configuration errors (bad key, invalid value, validation failure).
+    #[error("config: {0}")]
+    Config(String),
+
+    /// CLI usage errors.
+    #[error("cli: {0}")]
+    Cli(String),
+
+    /// I/O errors bubbling up from std.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Errors from the `xla` crate (PJRT client / compile / execute).
+    #[error("xla: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display_includes_subsystem() {
+        let e = Error::Dfs("file not found".into());
+        assert_eq!(e.to_string(), "dfs: file not found");
+        let e = Error::MapReduce("task 3 failed".into());
+        assert!(e.to_string().starts_with("mapreduce:"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = ioe.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,168 @@
+//! Clustering quality metrics: NMI, ARI, purity.
+//!
+//! Used to validate the pipeline against planted ground truth — the paper
+//! itself reports no quality numbers, only times, so these metrics guard
+//! *our* correctness (a fast wrong clustering would be worthless).
+
+use std::collections::HashMap;
+
+/// Contingency table between two labelings.
+fn contingency(a: &[usize], b: &[usize]) -> HashMap<(usize, usize), usize> {
+    assert_eq!(a.len(), b.len(), "labelings must align");
+    let mut c = HashMap::new();
+    for (&x, &y) in a.iter().zip(b) {
+        *c.entry((x, y)).or_insert(0) += 1;
+    }
+    c
+}
+
+fn class_counts(a: &[usize]) -> HashMap<usize, usize> {
+    let mut c = HashMap::new();
+    for &x in a {
+        *c.entry(x).or_insert(0) += 1;
+    }
+    c
+}
+
+/// Normalized mutual information in [0, 1] (arithmetic-mean normalization).
+pub fn nmi(truth: &[usize], pred: &[usize]) -> f64 {
+    let n = truth.len();
+    if n == 0 {
+        return 1.0;
+    }
+    let nt = class_counts(truth);
+    let np = class_counts(pred);
+    let joint = contingency(truth, pred);
+    let nf = n as f64;
+
+    let mut mi = 0.0;
+    for (&(t, p), &c) in &joint {
+        let pxy = c as f64 / nf;
+        let px = nt[&t] as f64 / nf;
+        let py = np[&p] as f64 / nf;
+        mi += pxy * (pxy / (px * py)).ln();
+    }
+    let h = |counts: &HashMap<usize, usize>| -> f64 {
+        counts
+            .values()
+            .map(|&c| {
+                let p = c as f64 / nf;
+                -p * p.ln()
+            })
+            .sum()
+    };
+    let (ht, hp) = (h(&nt), h(&np));
+    if ht == 0.0 && hp == 0.0 {
+        return 1.0; // both single-cluster: identical partitions
+    }
+    let denom = (ht + hp) / 2.0;
+    if denom == 0.0 {
+        0.0
+    } else {
+        (mi / denom).clamp(0.0, 1.0)
+    }
+}
+
+/// Adjusted Rand index in [-1, 1] (1 = identical partitions, ~0 = random).
+pub fn ari(truth: &[usize], pred: &[usize]) -> f64 {
+    let n = truth.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let choose2 = |x: usize| -> f64 { (x * x.saturating_sub(1)) as f64 / 2.0 };
+    let joint = contingency(truth, pred);
+    let nt = class_counts(truth);
+    let np = class_counts(pred);
+    let sum_ij: f64 = joint.values().map(|&c| choose2(c)).sum();
+    let sum_a: f64 = nt.values().map(|&c| choose2(c)).sum();
+    let sum_b: f64 = np.values().map(|&c| choose2(c)).sum();
+    let total = choose2(n);
+    let expected = sum_a * sum_b / total;
+    let max_index = (sum_a + sum_b) / 2.0;
+    if (max_index - expected).abs() < 1e-15 {
+        return 1.0; // degenerate: e.g. both all-singletons or both one-cluster
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+/// Purity in (0, 1]: fraction of points in their cluster's majority class.
+pub fn purity(truth: &[usize], pred: &[usize]) -> f64 {
+    let n = truth.len();
+    if n == 0 {
+        return 1.0;
+    }
+    let joint = contingency(pred, truth); // (cluster, class) -> count
+    let mut best: HashMap<usize, usize> = HashMap::new();
+    for (&(cluster, _class), &c) in &joint {
+        let e = best.entry(cluster).or_insert(0);
+        if c > *e {
+            *e = c;
+        }
+    }
+    best.values().sum::<usize>() as f64 / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_agreement() {
+        let t = vec![0, 0, 1, 1, 2, 2];
+        assert!((nmi(&t, &t) - 1.0).abs() < 1e-12);
+        assert!((ari(&t, &t) - 1.0).abs() < 1e-12);
+        assert_eq!(purity(&t, &t), 1.0);
+    }
+
+    #[test]
+    fn label_permutation_invariant() {
+        let t = vec![0, 0, 1, 1, 2, 2];
+        let p = vec![2, 2, 0, 0, 1, 1]; // same partition, renamed
+        assert!((nmi(&t, &p) - 1.0).abs() < 1e-12);
+        assert!((ari(&t, &p) - 1.0).abs() < 1e-12);
+        assert_eq!(purity(&t, &p), 1.0);
+    }
+
+    #[test]
+    fn independent_labelings_near_zero_ari() {
+        // Pred splits orthogonally to truth.
+        let t = vec![0, 0, 0, 0, 1, 1, 1, 1];
+        let p = vec![0, 1, 0, 1, 0, 1, 0, 1];
+        assert!(ari(&t, &p).abs() < 0.2, "{}", ari(&t, &p));
+        assert!(nmi(&t, &p) < 0.2);
+    }
+
+    #[test]
+    fn partial_agreement_ordering() {
+        let t = vec![0, 0, 0, 1, 1, 1];
+        let good = vec![0, 0, 1, 1, 1, 1]; // one mistake
+        let bad = vec![0, 1, 0, 1, 0, 1]; // orthogonal
+        assert!(nmi(&t, &good) > nmi(&t, &bad));
+        assert!(ari(&t, &good) > ari(&t, &bad));
+        assert!(purity(&t, &good) > purity(&t, &bad));
+    }
+
+    #[test]
+    fn purity_overclustering_is_one() {
+        // Every point its own cluster: purity 1 (known metric quirk).
+        let t = vec![0, 0, 1, 1];
+        let p = vec![0, 1, 2, 3];
+        assert_eq!(purity(&t, &p), 1.0);
+        // ARI penalizes it (not 1; degenerate all-singleton guard aside).
+        assert!(ari(&t, &p) < 0.5);
+    }
+
+    #[test]
+    fn empty_and_trivial() {
+        assert_eq!(nmi(&[], &[]), 1.0);
+        assert_eq!(ari(&[0], &[0]), 1.0);
+        let ones = vec![0; 5];
+        assert!((nmi(&ones, &ones) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_lengths_panic() {
+        nmi(&[0, 1], &[0]);
+    }
+}

@@ -1,0 +1,225 @@
+//! K-means: Lloyd baseline + k-means++ init (paper Alg. 4.1 step 6).
+//!
+//! The single-machine implementation here is both the baseline comparator
+//! and the oracle the distributed phase-3 job (coordinator/kmeans_job.rs) is
+//! validated against.
+
+use crate::linalg::vector::sq_dist;
+use crate::util::Xoshiro256;
+
+/// Result of a k-means run.
+#[derive(Debug, Clone)]
+pub struct KmeansResult {
+    /// Cluster index per point.
+    pub labels: Vec<usize>,
+    /// Final centers, k × d.
+    pub centers: Vec<Vec<f64>>,
+    /// Iterations executed.
+    pub iterations: usize,
+    /// Sum of squared distances to assigned centers.
+    pub inertia: f64,
+    /// Whether the tolerance was hit before the iteration cap.
+    pub converged: bool,
+}
+
+/// Initialization strategies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Init {
+    /// Uniform random distinct points (the paper's implicit choice).
+    Random,
+    /// k-means++ (D² sampling) — better spread, fewer iterations.
+    PlusPlus,
+}
+
+/// Pick initial centers.
+pub fn init_centers(
+    points: &[Vec<f64>],
+    k: usize,
+    init: Init,
+    seed: u64,
+) -> Vec<Vec<f64>> {
+    assert!(k >= 1 && k <= points.len(), "k={k} vs n={}", points.len());
+    let mut rng = Xoshiro256::new(seed);
+    match init {
+        Init::Random => rng
+            .sample_indices(points.len(), k)
+            .into_iter()
+            .map(|i| points[i].clone())
+            .collect(),
+        Init::PlusPlus => {
+            let mut centers = vec![points[rng.next_index(points.len())].clone()];
+            let mut d2: Vec<f64> = points
+                .iter()
+                .map(|p| sq_dist(p, &centers[0]))
+                .collect();
+            while centers.len() < k {
+                let total: f64 = d2.iter().sum();
+                let next = if total <= 0.0 {
+                    rng.next_index(points.len())
+                } else {
+                    let mut target = rng.next_f64() * total;
+                    let mut pick = points.len() - 1;
+                    for (i, &w) in d2.iter().enumerate() {
+                        if target < w {
+                            pick = i;
+                            break;
+                        }
+                        target -= w;
+                    }
+                    pick
+                };
+                centers.push(points[next].clone());
+                for (i, p) in points.iter().enumerate() {
+                    let nd = sq_dist(p, centers.last().unwrap());
+                    if nd < d2[i] {
+                        d2[i] = nd;
+                    }
+                }
+            }
+            centers
+        }
+    }
+}
+
+/// Assign each point to its nearest center.
+pub fn assign(points: &[Vec<f64>], centers: &[Vec<f64>]) -> Vec<usize> {
+    points
+        .iter()
+        .map(|p| {
+            centers
+                .iter()
+                .enumerate()
+                .map(|(c, ctr)| (c, sq_dist(p, ctr)))
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .map(|(c, _)| c)
+                .unwrap()
+        })
+        .collect()
+}
+
+/// Lloyd's algorithm.
+pub fn lloyd(
+    points: &[Vec<f64>],
+    k: usize,
+    max_iters: usize,
+    tol: f64,
+    init: Init,
+    seed: u64,
+) -> KmeansResult {
+    let n = points.len();
+    let d = points[0].len();
+    let mut centers = init_centers(points, k, init, seed);
+    let mut labels = vec![0usize; n];
+    let mut iterations = 0;
+    let mut converged = false;
+
+    for _iter in 0..max_iters {
+        iterations += 1;
+        labels = assign(points, &centers);
+        // Update step.
+        let mut sums = vec![vec![0.0; d]; k];
+        let mut counts = vec![0usize; k];
+        for (p, &l) in points.iter().zip(&labels) {
+            counts[l] += 1;
+            for t in 0..d {
+                sums[l][t] += p[t];
+            }
+        }
+        let mut movement: f64 = 0.0;
+        for c in 0..k {
+            if counts[c] == 0 {
+                continue; // empty cluster keeps its center (paper's behaviour)
+            }
+            let new_center: Vec<f64> =
+                sums[c].iter().map(|s| s / counts[c] as f64).collect();
+            movement = movement.max(sq_dist(&new_center, &centers[c]).sqrt());
+            centers[c] = new_center;
+        }
+        if movement < tol {
+            converged = true;
+            break;
+        }
+    }
+    labels = assign(points, &centers);
+    let inertia = points
+        .iter()
+        .zip(&labels)
+        .map(|(p, &l)| sq_dist(p, &centers[l]))
+        .sum();
+    KmeansResult { labels, centers, iterations, inertia, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_blobs;
+    use crate::eval::nmi;
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let ps = gaussian_blobs(300, 3, 2, 0.3, 15.0, 5);
+        let r = lloyd(&ps.points, 3, 50, 1e-8, Init::PlusPlus, 7);
+        assert!(r.converged);
+        assert!(nmi(&ps.labels, &r.labels) > 0.98, "nmi too low");
+        assert_eq!(r.centers.len(), 3);
+    }
+
+    #[test]
+    fn inertia_decreases_with_k() {
+        let ps = gaussian_blobs(200, 4, 2, 0.5, 10.0, 2);
+        let r2 = lloyd(&ps.points, 2, 50, 1e-8, Init::PlusPlus, 3);
+        let r4 = lloyd(&ps.points, 4, 50, 1e-8, Init::PlusPlus, 3);
+        assert!(r4.inertia < r2.inertia);
+    }
+
+    #[test]
+    fn one_cluster_center_is_mean() {
+        let pts = vec![vec![0.0, 0.0], vec![2.0, 0.0], vec![1.0, 3.0]];
+        let r = lloyd(&pts, 1, 10, 1e-12, Init::Random, 1);
+        assert!((r.centers[0][0] - 1.0).abs() < 1e-9);
+        assert!((r.centers[0][1] - 1.0).abs() < 1e-9);
+        assert_eq!(r.labels, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let ps = gaussian_blobs(100, 3, 2, 0.4, 8.0, 9);
+        let a = lloyd(&ps.points, 3, 30, 1e-8, Init::PlusPlus, 11);
+        let b = lloyd(&ps.points, 3, 30, 1e-8, Init::PlusPlus, 11);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.inertia, b.inertia);
+    }
+
+    #[test]
+    fn plusplus_spreads_initial_centers() {
+        let ps = gaussian_blobs(200, 4, 2, 0.2, 20.0, 13);
+        let centers = init_centers(&ps.points, 4, Init::PlusPlus, 17);
+        // All pairwise distances should be large (one per blob, typically).
+        let mut min_d2 = f64::INFINITY;
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                min_d2 = min_d2.min(sq_dist(&centers[i], &centers[j]));
+            }
+        }
+        assert!(min_d2 > 4.0, "++ centers clumped: {min_d2}");
+    }
+
+    #[test]
+    fn kmeans_fails_on_rings_motivating_spectral() {
+        // The paper's §3.1 motivation: k-means cannot separate concentric
+        // rings; spectral clustering can (tested in spectral/).
+        let ps = crate::data::two_rings(300, 1.0, 6.0, 0.05, 3);
+        let r = lloyd(&ps.points, 2, 100, 1e-9, Init::PlusPlus, 5);
+        assert!(
+            nmi(&ps.labels, &r.labels) < 0.3,
+            "k-means should NOT solve rings: nmi={}",
+            nmi(&ps.labels, &r.labels)
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn k_larger_than_n_panics() {
+        init_centers(&[vec![0.0]], 2, Init::Random, 1);
+    }
+}

@@ -1,0 +1,38 @@
+//! # psch — Parallel Spectral Clustering on a Hadoop-like runtime
+//!
+//! A from-scratch reproduction of *"Parallel Spectral Clustering Algorithm
+//! Based on Hadoop"* (Zhao et al., 2015) as a three-layer Rust + JAX/Pallas
+//! system:
+//!
+//! - **Layer 3 (this crate)**: the coordinator — a mini-HDFS ([`dfs`]), a
+//!   mini-HBase ([`table`]), a MapReduce engine ([`mapreduce`]), a simulated
+//!   cluster with a network cost model ([`cluster`]), and the paper's three
+//!   parallel phases ([`coordinator`]).
+//! - **Layer 2**: JAX compute graphs (`python/compile/model.py`), AOT-lowered
+//!   to HLO text artifacts loaded by [`runtime`] via XLA PJRT.
+//! - **Layer 1**: Pallas kernels (`python/compile/kernels/`) for the per-task
+//!   hot spots (RBF similarity tile, mat-vec block, k-means step).
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod benchutil;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dfs;
+pub mod error;
+pub mod eval;
+pub mod kmeans;
+pub mod linalg;
+pub mod mapreduce;
+pub mod metrics;
+pub mod runtime;
+pub mod spectral;
+pub mod table;
+pub mod testutil;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,169 @@
+//! Dense symmetric eigensolver (cyclic Jacobi rotations).
+//!
+//! The O(n^3) oracle: used by the single-machine baseline (the comparator the
+//! paper speeds up) and as the ground truth the Lanczos implementation is
+//! validated against in tests. Classic cyclic-by-row Jacobi with the
+//! Rutishauser threshold strategy.
+
+use crate::error::{Error, Result};
+
+use super::dense::DenseMatrix;
+
+/// Full eigen decomposition of a symmetric matrix.
+///
+/// Returns `(eigenvalues, eigenvectors)` sorted ascending; eigenvector `k` is
+/// column `k` of the returned matrix.
+pub fn jacobi_eigen(a: &DenseMatrix) -> Result<(Vec<f64>, DenseMatrix)> {
+    let n = a.rows();
+    if a.cols() != n {
+        return Err(Error::Linalg("jacobi: matrix not square".into()));
+    }
+    if !a.is_symmetric(1e-9) {
+        return Err(Error::Linalg("jacobi: matrix not symmetric".into()));
+    }
+    let mut m = a.clone();
+    let mut v = DenseMatrix::eye(n);
+
+    let max_sweeps = 100;
+    for sweep in 0..max_sweeps {
+        // Off-diagonal Frobenius norm.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-13 * (1.0 + frobenius(&m)) {
+            break;
+        }
+        if sweep == max_sweeps - 1 {
+            return Err(Error::Linalg("jacobi: no convergence in 100 sweeps".into()));
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = {
+                    let s = if theta >= 0.0 { 1.0 } else { -1.0 };
+                    s / (theta.abs() + (theta * theta + 1.0).sqrt())
+                };
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+
+                // Apply rotation G(p,q,theta): M <- G^T M G, V <- V G.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    let mut vals: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&x, &y| vals[x].partial_cmp(&vals[y]).unwrap());
+    vals.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let mut sorted_v = DenseMatrix::zeros(n, n);
+    for (new_c, &old_c) in order.iter().enumerate() {
+        for i in 0..n {
+            sorted_v[(i, new_c)] = v[(i, old_c)];
+        }
+    }
+    Ok((vals, sorted_v))
+}
+
+fn frobenius(m: &DenseMatrix) -> f64 {
+    m.data().iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn random_symmetric(n: usize, seed: u64) -> DenseMatrix {
+        let mut rng = Xoshiro256::new(seed);
+        let mut m = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.next_f64() * 2.0 - 1.0;
+                m[(i, j)] = v;
+                m[(j, i)] = v;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn two_by_two_analytic() {
+        let a = DenseMatrix::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]).unwrap();
+        let (vals, vecs) = jacobi_eigen(&a).unwrap();
+        assert!((vals[0] - 1.0).abs() < 1e-10);
+        assert!((vals[1] - 3.0).abs() < 1e-10);
+        // Eigenvector for lambda=1 is (1,-1)/sqrt(2) up to sign.
+        let r = (vecs[(0, 0)] / vecs[(1, 0)] + 1.0).abs();
+        assert!(r < 1e-8, "vec ratio {r}");
+    }
+
+    #[test]
+    fn reconstruction_residual() {
+        for n in [3usize, 8, 20] {
+            let a = random_symmetric(n, 42 + n as u64);
+            let (vals, v) = jacobi_eigen(&a).unwrap();
+            // || A v_k - lambda_k v_k || small for all k.
+            for k in 0..n {
+                let vk: Vec<f64> = (0..n).map(|i| v[(i, k)]).collect();
+                let av = a.matvec(&vk);
+                for i in 0..n {
+                    assert!(
+                        (av[i] - vals[k] * vk[i]).abs() < 1e-8,
+                        "n={n} k={k} i={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let a = random_symmetric(12, 7);
+        let (_, v) = jacobi_eigen(&a).unwrap();
+        let vt_v = v.transpose().matmul(&v).unwrap();
+        assert!(vt_v.max_abs_diff(&DenseMatrix::eye(12)) < 1e-9);
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let a = random_symmetric(10, 99);
+        let trace: f64 = (0..10).map(|i| a[(i, i)]).sum();
+        let (vals, _) = jacobi_eigen(&a).unwrap();
+        assert!((vals.iter().sum::<f64>() - trace).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_non_symmetric_and_non_square() {
+        let mut a = DenseMatrix::eye(3);
+        a[(0, 1)] = 1.0;
+        assert!(jacobi_eigen(&a).is_err());
+        assert!(jacobi_eigen(&DenseMatrix::zeros(2, 3)).is_err());
+    }
+}

@@ -1,0 +1,313 @@
+//! Lanczos iteration for the k smallest eigenpairs (paper Alg. 4.3).
+//!
+//! The matrix is only touched through a caller-supplied `matvec` closure —
+//! exactly the abstraction the paper's phase 2 needs: in the distributed
+//! pipeline the closure launches a MapReduce job over the row-partitioned L
+//! in the table store ("move the vector to the data"), while tests plug in a
+//! local [`CsrMatrix::spmv`].
+//!
+//! We add full reorthogonalization on top of the paper's bare three-term
+//! recurrence: in floating point the bare recurrence loses orthogonality
+//! after a few tens of iterations and produces ghost eigenvalues; full
+//! reorthogonalization (modified Gram–Schmidt against all previous basis
+//! vectors, done twice) keeps the basis orthonormal to machine precision.
+//! DESIGN.md §7 records this deviation.
+
+use crate::error::{Error, Result};
+use crate::util::Xoshiro256;
+
+use super::tridiag::tridiag_eigen;
+use super::vector::{axpy, dot, normalize};
+
+/// Result of a Lanczos run.
+#[derive(Debug, Clone)]
+pub struct LanczosResult {
+    /// Ritz values (approximate eigenvalues), ascending, `k` of them.
+    pub eigenvalues: Vec<f64>,
+    /// Ritz vectors, row-major n×k: `eigenvectors[i][j]` = component i of
+    /// approximate eigenvector j.
+    pub eigenvectors: Vec<Vec<f64>>,
+    /// Lanczos steps actually performed.
+    pub steps: usize,
+}
+
+/// Options for [`lanczos_smallest`].
+#[derive(Debug, Clone)]
+pub struct LanczosOptions {
+    /// Maximum Krylov subspace dimension m (paper's iteration count).
+    pub max_steps: usize,
+    /// Convergence tolerance on the residual estimate |beta_m * u_mk|.
+    pub tol: f64,
+    /// Seed for the random start vector v1 (paper step 1).
+    pub seed: u64,
+}
+
+impl Default for LanczosOptions {
+    fn default() -> Self {
+        Self { max_steps: 80, tol: 1e-10, seed: 0x5eed }
+    }
+}
+
+/// Compute the `k` smallest eigenpairs of a symmetric n×n operator.
+///
+/// `matvec(v) -> L v` is the only access to the matrix. Returns an error if
+/// `k` exceeds what the Krylov space can resolve (k > max_steps or k > n).
+pub fn lanczos_smallest<F>(
+    n: usize,
+    k: usize,
+    opts: &LanczosOptions,
+    mut matvec: F,
+) -> Result<LanczosResult>
+where
+    F: FnMut(&[f64]) -> Vec<f64>,
+{
+    if k == 0 || n == 0 {
+        return Err(Error::Linalg(format!("lanczos: degenerate k={k}, n={n}")));
+    }
+    if k > n {
+        return Err(Error::Linalg(format!("lanczos: k={k} > n={n}")));
+    }
+    let m_max = opts.max_steps.min(n);
+    if k > m_max {
+        return Err(Error::Linalg(format!(
+            "lanczos: k={k} > max_steps={} (capped at n={n})",
+            opts.max_steps
+        )));
+    }
+
+    // Paper step 1: v1 <- random vector of norm 1.
+    let mut rng = Xoshiro256::new(opts.seed);
+    let mut v = vec![0.0; n];
+    for vi in v.iter_mut() {
+        *vi = rng.next_gaussian();
+    }
+    normalize(&mut v);
+
+    let mut basis: Vec<Vec<f64>> = Vec::with_capacity(m_max); // v_1 .. v_m
+    let mut alphas: Vec<f64> = Vec::with_capacity(m_max);
+    let mut betas: Vec<f64> = Vec::with_capacity(m_max); // beta_{j+1}
+
+    let mut steps = 0;
+    for j in 0..m_max {
+        basis.push(v.clone());
+        // Paper step 2: w_j <- L v_j  (the distributed hot spot).
+        let mut w = matvec(&v);
+        if j > 0 {
+            let beta_j = betas[j - 1];
+            axpy(-beta_j, &basis[j - 1], &mut w); // w -= beta_j v_{j-1}
+        }
+        let alpha = dot(&w, &basis[j]);
+        axpy(-alpha, &basis[j], &mut w); // w -= alpha_j v_j
+        alphas.push(alpha);
+
+        // Full reorthogonalization, twice ("twice is enough" — Parlett).
+        for _pass in 0..2 {
+            for vb in &basis {
+                let c = dot(&w, vb);
+                axpy(-c, vb, &mut w);
+            }
+        }
+
+        let mut beta = super::vector::norm(&w);
+        steps = j + 1;
+        if j + 1 == m_max {
+            betas.push(beta);
+            break;
+        }
+        if beta < opts.tol * (1.0 + alpha.abs()) {
+            // Krylov space exhausted (an invariant subspace was found — e.g.
+            // the operator has fewer distinct eigenvalues than max_steps).
+            // Deflate: restart with a fresh random direction orthogonal to
+            // the basis so further eigenpairs can be resolved. beta = 0
+            // makes T block-diagonal, which tql2 handles exactly.
+            if steps >= n {
+                betas.push(beta);
+                break;
+            }
+            let mut fresh = vec![0.0; n];
+            for x in fresh.iter_mut() {
+                *x = rng.next_gaussian();
+            }
+            for _pass in 0..2 {
+                for vb in &basis {
+                    let c = dot(&fresh, vb);
+                    axpy(-c, vb, &mut fresh);
+                }
+            }
+            if normalize(&mut fresh) < 1e-12 {
+                // Basis already spans the whole space numerically.
+                betas.push(0.0);
+                break;
+            }
+            w = fresh;
+            beta = 0.0;
+        }
+        betas.push(beta);
+        v = w;
+        if beta != 0.0 {
+            normalize(&mut v);
+        }
+    }
+
+    // Master-side: eigen decomposition of the m×m tridiagonal T.
+    let m = steps;
+    let mut off = vec![0.0; m];
+    for j in 1..m {
+        off[j] = betas[j - 1];
+    }
+    let (tvals, tvecs) = tridiag_eigen(&alphas[..m], &off)?;
+
+    if k > m {
+        return Err(Error::Linalg(format!(
+            "lanczos: Krylov space dim {m} cannot resolve k={k} pairs"
+        )));
+    }
+
+    // Ritz vectors: y_c = sum_j u[j][c] * v_j.
+    let mut eigenvectors = vec![vec![0.0; k]; n];
+    for c in 0..k {
+        for (j, vb) in basis.iter().take(m).enumerate() {
+            let coeff = tvecs[j][c];
+            for i in 0..n {
+                eigenvectors[i][c] += coeff * vb[i];
+            }
+        }
+    }
+    Ok(LanczosResult {
+        eigenvalues: tvals[..k].to_vec(),
+        eigenvectors,
+        steps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::DenseMatrix;
+    use crate::linalg::jacobi::jacobi_eigen;
+    use crate::linalg::sparse::CsrMatrix;
+
+    fn random_symmetric(n: usize, seed: u64) -> DenseMatrix {
+        let mut rng = Xoshiro256::new(seed);
+        let mut m = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.next_f64() * 2.0 - 1.0;
+                m[(i, j)] = v;
+                m[(j, i)] = v;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn matches_jacobi_on_dense_random() {
+        let n = 40;
+        let a = random_symmetric(n, 2024);
+        let (jvals, _) = jacobi_eigen(&a).unwrap();
+        let r = lanczos_smallest(
+            n,
+            5,
+            &LanczosOptions { max_steps: n, ..Default::default() },
+            |v| a.matvec(v),
+        )
+        .unwrap();
+        for i in 0..5 {
+            assert!(
+                (r.eigenvalues[i] - jvals[i]).abs() < 1e-7,
+                "eig {i}: {} vs {}",
+                r.eigenvalues[i],
+                jvals[i]
+            );
+        }
+    }
+
+    #[test]
+    fn ritz_vectors_are_eigenvectors() {
+        let n = 30;
+        let a = random_symmetric(n, 77);
+        let k = 4;
+        let r = lanczos_smallest(
+            n,
+            k,
+            &LanczosOptions { max_steps: n, ..Default::default() },
+            |v| a.matvec(v),
+        )
+        .unwrap();
+        for c in 0..k {
+            let vc: Vec<f64> = (0..n).map(|i| r.eigenvectors[i][c]).collect();
+            let av = a.matvec(&vc);
+            for i in 0..n {
+                assert!(
+                    (av[i] - r.eigenvalues[c] * vc[i]).abs() < 1e-6,
+                    "residual c={c} i={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn graph_laplacian_zero_eigenvalue_per_component() {
+        // Two disjoint triangles: Laplacian has eigenvalue 0 with multiplicity 2.
+        let mut trips = vec![];
+        for base in [0usize, 3] {
+            for a in 0..3usize {
+                for b in 0..3usize {
+                    if a != b {
+                        trips.push((base + a, base + b, -1.0));
+                    }
+                }
+                trips.push((base + a, base + a, 2.0));
+            }
+        }
+        let l = CsrMatrix::from_triplets(6, 6, &trips).unwrap();
+        let r = lanczos_smallest(
+            6,
+            3,
+            &LanczosOptions { max_steps: 6, ..Default::default() },
+            |v| l.spmv(v),
+        )
+        .unwrap();
+        assert!(r.eigenvalues[0].abs() < 1e-9, "{:?}", r.eigenvalues);
+        assert!(r.eigenvalues[1].abs() < 1e-9, "{:?}", r.eigenvalues);
+        assert!(r.eigenvalues[2] > 1.0, "{:?}", r.eigenvalues); // spectral gap
+    }
+
+    #[test]
+    fn early_termination_on_low_rank() {
+        // Rank-1 matrix: Krylov space exhausts after ~1 step from any start.
+        let n = 10;
+        let mut a = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] = 1.0; // ones matrix: eigenvalues {0 (x9), n}
+            }
+        }
+        let r = lanczos_smallest(
+            n,
+            2,
+            &LanczosOptions { max_steps: n, ..Default::default() },
+            |v| a.matvec(v),
+        )
+        .unwrap();
+        assert!(r.eigenvalues[0].abs() < 1e-8, "{:?}", r.eigenvalues);
+    }
+
+    #[test]
+    fn rejects_bad_k() {
+        assert!(lanczos_smallest(5, 0, &Default::default(), |v| v.to_vec()).is_err());
+        assert!(lanczos_smallest(5, 6, &Default::default(), |v| v.to_vec()).is_err());
+        let opts = LanczosOptions { max_steps: 3, ..Default::default() };
+        assert!(lanczos_smallest(10, 4, &opts, |v| v.to_vec()).is_err());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = random_symmetric(20, 5);
+        let opts = LanczosOptions { max_steps: 20, seed: 9, ..Default::default() };
+        let r1 = lanczos_smallest(20, 3, &opts, |v| a.matvec(v)).unwrap();
+        let r2 = lanczos_smallest(20, 3, &opts, |v| a.matvec(v)).unwrap();
+        assert_eq!(r1.eigenvalues, r2.eigenvalues);
+        assert_eq!(r1.eigenvectors, r2.eigenvectors);
+    }
+}

@@ -1,0 +1,22 @@
+//! Linear-algebra substrate: dense/sparse matrices and eigensolvers.
+//!
+//! - [`dense::DenseMatrix`] — row-major dense matrix (baseline + tests).
+//! - [`sparse::CsrMatrix`] — the row-partitioned Laplacian storage format.
+//! - [`tridiag::tridiag_eigen`] — master-side QL solve of the Lanczos T.
+//! - [`jacobi::jacobi_eigen`] — O(n^3) dense oracle (the paper's comparator).
+//! - [`lanczos::lanczos_smallest`] — paper Alg. 4.3 with reorthogonalization,
+//!   matrix accessed only through a mat-vec closure so the distributed
+//!   pipeline can plug in a MapReduce job.
+
+pub mod dense;
+pub mod jacobi;
+pub mod lanczos;
+pub mod sparse;
+pub mod tridiag;
+pub mod vector;
+
+pub use dense::DenseMatrix;
+pub use jacobi::jacobi_eigen;
+pub use lanczos::{lanczos_smallest, LanczosOptions, LanczosResult};
+pub use sparse::CsrMatrix;
+pub use tridiag::tridiag_eigen;

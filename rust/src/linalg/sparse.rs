@@ -1,0 +1,261 @@
+//! CSR sparse matrix: the row-partitioned storage format of the Laplacian.
+//!
+//! Rows of this structure are what phase 1 writes into the mini-HBase table
+//! and what phase 2's distributed mat-vec map tasks consume (paper §4.3.2:
+//! "the matrix L on the HBase stored … when the line to the segmentation
+//! store" — i.e. row-wise partitioning).
+
+use crate::error::{Error, Result};
+
+use super::dense::DenseMatrix;
+
+/// Compressed-sparse-row matrix of f64.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Build from (row, col, value) triplets; duplicate entries are summed.
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: &[(usize, usize, f64)],
+    ) -> Result<Self> {
+        for &(i, j, _) in triplets {
+            if i >= rows || j >= cols {
+                return Err(Error::Linalg(format!(
+                    "triplet ({i},{j}) out of {rows}x{cols}"
+                )));
+            }
+        }
+        let mut sorted: Vec<_> = triplets.to_vec();
+        sorted.sort_unstable_by_key(|&(i, j, _)| (i, j));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices: Vec<u32> = Vec::with_capacity(sorted.len());
+        let mut values: Vec<f64> = Vec::with_capacity(sorted.len());
+        let mut prev: Option<(usize, usize)> = None;
+        for &(i, j, v) in &sorted {
+            if prev == Some((i, j)) {
+                *values.last_mut().unwrap() += v; // duplicate: sum
+                continue;
+            }
+            prev = Some((i, j));
+            indices.push(j as u32);
+            values.push(v);
+            indptr[i + 1] += 1;
+        }
+        for i in 0..rows {
+            indptr[i + 1] += indptr[i];
+        }
+        Ok(Self { rows, cols, indptr, indices, values })
+    }
+
+    /// Build from per-row (col, value) lists (already deduplicated/sorted).
+    pub fn from_rows(cols: usize, rows: Vec<Vec<(u32, f64)>>) -> Self {
+        let nrows = rows.len();
+        let nnz: usize = rows.iter().map(|r| r.len()).sum();
+        let mut indptr = Vec::with_capacity(nrows + 1);
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        indptr.push(0);
+        for mut r in rows {
+            r.sort_unstable_by_key(|&(j, _)| j);
+            for (j, v) in r {
+                debug_assert!((j as usize) < cols);
+                indices.push(j);
+                values.push(v);
+            }
+            indptr.push(indices.len());
+        }
+        Self { rows: nrows, cols, indptr, indices, values }
+    }
+
+    /// Row count.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Number of stored entries in row `i` (O(1)).
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    /// Sparse entries of row `i` as (col, value) pairs.
+    pub fn row(&self, i: usize) -> impl Iterator<Item = (u32, f64)> + '_ {
+        let range = self.indptr[i]..self.indptr[i + 1];
+        self.indices[range.clone()]
+            .iter()
+            .copied()
+            .zip(self.values[range].iter().copied())
+    }
+
+    /// y = A x.
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "spmv dimension mismatch");
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let mut acc = 0.0;
+            for k in self.indptr[i]..self.indptr[i + 1] {
+                acc += self.values[k] * x[self.indices[k] as usize];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// spmv restricted to a row range [lo, hi) — one MR map task's work.
+    pub fn spmv_rows(&self, x: &[f64], lo: usize, hi: usize) -> Vec<f64> {
+        assert!(lo <= hi && hi <= self.rows);
+        let mut y = vec![0.0; hi - lo];
+        for i in lo..hi {
+            let mut acc = 0.0;
+            for k in self.indptr[i]..self.indptr[i + 1] {
+                acc += self.values[k] * x[self.indices[k] as usize];
+            }
+            y[i - lo] = acc;
+        }
+        y
+    }
+
+    /// Row sums (degrees when self is a similarity/adjacency matrix).
+    pub fn row_sums(&self) -> Vec<f64> {
+        (0..self.rows)
+            .map(|i| self.row(i).map(|(_, v)| v).sum())
+            .collect()
+    }
+
+    /// Densify (small matrices / tests only).
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut d = DenseMatrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for (j, v) in self.row(i) {
+                d[(i, j as usize)] = v;
+            }
+        }
+        d
+    }
+
+    /// Is the matrix symmetric to within `tol`? (O(nnz log nnz) via lookup.)
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.rows != self.cols {
+            return false;
+        }
+        for i in 0..self.rows {
+            for (j, v) in self.row(i) {
+                let vt = self.get(j as usize, i);
+                if (v - vt).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Entry lookup (binary search within the row).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let range = self.indptr[i]..self.indptr[i + 1];
+        match self.indices[range.clone()].binary_search(&(j as u32)) {
+            Ok(pos) => self.values[range.start + pos],
+            Err(_) => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMatrix {
+        // [[1, 0, 2],
+        //  [0, 3, 0],
+        //  [4, 0, 5]]
+        CsrMatrix::from_triplets(
+            3,
+            3,
+            &[(0, 0, 1.0), (0, 2, 2.0), (1, 1, 3.0), (2, 0, 4.0), (2, 2, 5.0)],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn triplets_roundtrip() {
+        let m = sample();
+        assert_eq!(m.nnz(), 5);
+        assert_eq!(m.get(0, 2), 2.0);
+        assert_eq!(m.get(0, 1), 0.0);
+        assert_eq!(m.get(2, 2), 5.0);
+    }
+
+    #[test]
+    fn duplicate_triplets_sum() {
+        let m = CsrMatrix::from_triplets(2, 2, &[(0, 0, 1.0), (0, 0, 2.5)]).unwrap();
+        assert_eq!(m.get(0, 0), 3.5);
+        assert_eq!(m.nnz(), 1);
+    }
+
+    #[test]
+    fn out_of_bounds_triplet_rejected() {
+        assert!(CsrMatrix::from_triplets(2, 2, &[(2, 0, 1.0)]).is_err());
+        assert!(CsrMatrix::from_triplets(2, 2, &[(0, 5, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let m = sample();
+        let x = vec![1.0, 2.0, 3.0];
+        assert_eq!(m.spmv(&x), m.to_dense().matvec(&x));
+        assert_eq!(m.spmv(&x), vec![7.0, 6.0, 19.0]);
+    }
+
+    #[test]
+    fn spmv_rows_partitions_agree() {
+        let m = sample();
+        let x = vec![0.5, -1.0, 2.0];
+        let full = m.spmv(&x);
+        let mut pieced = m.spmv_rows(&x, 0, 1);
+        pieced.extend(m.spmv_rows(&x, 1, 3));
+        assert_eq!(pieced, full);
+    }
+
+    #[test]
+    fn row_sums_and_symmetry() {
+        let m = sample();
+        assert_eq!(m.row_sums(), vec![3.0, 3.0, 9.0]);
+        assert!(!m.is_symmetric(1e-12)); // 2 vs 4 at (0,2)/(2,0)
+        let s = CsrMatrix::from_triplets(
+            2,
+            2,
+            &[(0, 1, 7.0), (1, 0, 7.0), (0, 0, 1.0)],
+        )
+        .unwrap();
+        assert!(s.is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn from_rows_matches_triplets() {
+        let by_rows = CsrMatrix::from_rows(
+            3,
+            vec![
+                vec![(2, 2.0), (0, 1.0)], // unsorted on purpose
+                vec![(1, 3.0)],
+                vec![(0, 4.0), (2, 5.0)],
+            ],
+        );
+        assert_eq!(by_rows, sample());
+    }
+}

@@ -1,0 +1,202 @@
+//! Symmetric tridiagonal eigensolver (implicit-shift QL, the classic `tql2`).
+//!
+//! This is the cheap master-side step of the paper's phase 2: after the
+//! distributed Lanczos iteration produces the tridiagonal `T_mm` (paper Alg.
+//! 4.3 / the matrix display after it), "it is easy to get its eigenvalues and
+//! eigenvectors by some methods (such as QR)". We port the EISPACK `tql2`
+//! routine (via the Numerical Recipes formulation), which returns ALL
+//! eigenvalues and eigenvectors of T in O(m^2)–O(m^3) for the m×m T — m is
+//! tiny (tens), so this never matters for scale.
+
+use crate::error::{Error, Result};
+
+/// Eigen decomposition of a symmetric tridiagonal matrix.
+///
+/// `diag` (length m) holds the diagonal, `off` (length m, `off[0]` unused by
+/// convention — `off[i]` couples rows i-1 and i) the sub/super diagonal.
+/// Returns `(eigenvalues, eigenvectors)` sorted ascending; eigenvector `k` is
+/// column `k` of the returned row-major m×m matrix (i.e. `vecs[i][k]`).
+pub fn tridiag_eigen(diag: &[f64], off: &[f64]) -> Result<(Vec<f64>, Vec<Vec<f64>>)> {
+    let n = diag.len();
+    if off.len() != n {
+        return Err(Error::Linalg(format!(
+            "tridiag_eigen: diag len {n}, off len {} (want equal)",
+            off.len()
+        )));
+    }
+    if n == 0 {
+        return Ok((vec![], vec![]));
+    }
+    let mut d = diag.to_vec();
+    let mut e = off.to_vec();
+    // Shift e down: e[i] couples i and i+1 internally; e[n-1] = 0.
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    // z starts as identity; accumulates rotations -> eigenvectors.
+    let mut z = vec![vec![0.0; n]; n];
+    for (i, zi) in z.iter_mut().enumerate() {
+        zi[i] = 1.0;
+    }
+
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find a small off-diagonal element to split the problem.
+            let mut m = l;
+            while m < n - 1 {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 50 {
+                return Err(Error::Linalg(
+                    "tql2: too many iterations (50)".to_string(),
+                ));
+            }
+            // Form the implicit shift.
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + if g >= 0.0 { r.abs() } else { -r.abs() });
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // Accumulate the rotation into the eigenvector matrix.
+                for zk in z.iter_mut() {
+                    f = zk[i + 1];
+                    zk[i + 1] = s * zk[i] + c * f;
+                    zk[i] = c * zk[i] - s * f;
+                }
+            }
+            if r == 0.0 && m > l + 1 {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+
+    // Sort ascending, permuting eigenvector columns along.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap());
+    let vals: Vec<f64> = order.iter().map(|&i| d[i]).collect();
+    let mut vecs = vec![vec![0.0; n]; n];
+    for (new_c, &old_c) in order.iter().enumerate() {
+        for i in 0..n {
+            vecs[i][new_c] = z[i][old_c];
+        }
+    }
+    Ok((vals, vecs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_decomposition(diag: &[f64], off: &[f64], tol: f64) {
+        let n = diag.len();
+        let (vals, vecs) = tridiag_eigen(diag, off).unwrap();
+        // T v_k = lambda_k v_k for every k.
+        for k in 0..n {
+            for i in 0..n {
+                let mut tv = diag[i] * vecs[i][k];
+                if i > 0 {
+                    tv += off[i] * vecs[i - 1][k];
+                }
+                if i + 1 < n {
+                    tv += off[i + 1] * vecs[i + 1][k];
+                }
+                assert!(
+                    (tv - vals[k] * vecs[i][k]).abs() < tol,
+                    "residual at ({i},{k}): {tv} vs {}",
+                    vals[k] * vecs[i][k]
+                );
+            }
+        }
+        // Eigenvectors orthonormal.
+        for a in 0..n {
+            for b in 0..n {
+                let d: f64 = (0..n).map(|i| vecs[i][a] * vecs[i][b]).sum();
+                let expect = if a == b { 1.0 } else { 0.0 };
+                assert!((d - expect).abs() < tol, "ortho ({a},{b}): {d}");
+            }
+        }
+        // Sorted ascending.
+        for k in 1..n {
+            assert!(vals[k] >= vals[k - 1]);
+        }
+    }
+
+    #[test]
+    fn two_by_two_analytic() {
+        // [[2, 1], [1, 2]] -> eigenvalues 1 and 3.
+        let (vals, _) = tridiag_eigen(&[2.0, 2.0], &[0.0, 1.0]).unwrap();
+        assert!((vals[0] - 1.0).abs() < 1e-12);
+        assert!((vals[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diagonal_matrix_trivial() {
+        let (vals, _) = tridiag_eigen(&[3.0, 1.0, 2.0], &[0.0, 0.0, 0.0]).unwrap();
+        assert_eq!(vals, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn laplacian_path_graph() {
+        // Path-graph Laplacian (tridiagonal): eigenvalues 2 - 2 cos(k pi / n).
+        let n = 8;
+        let diag: Vec<f64> = (0..n)
+            .map(|i| if i == 0 || i == n - 1 { 1.0 } else { 2.0 })
+            .collect();
+        let mut off = vec![-1.0; n];
+        off[0] = 0.0;
+        let (vals, _) = tridiag_eigen(&diag, &off).unwrap();
+        for (k, &v) in vals.iter().enumerate() {
+            let expect = 2.0 - 2.0 * (std::f64::consts::PI * k as f64 / n as f64).cos();
+            assert!((v - expect).abs() < 1e-10, "k={k}: {v} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn random_tridiagonals_full_checks() {
+        use crate::util::Xoshiro256;
+        let mut rng = Xoshiro256::new(123);
+        for n in [1usize, 2, 3, 5, 16, 33] {
+            let diag: Vec<f64> = (0..n).map(|_| rng.next_f64() * 4.0 - 2.0).collect();
+            let mut off: Vec<f64> =
+                (0..n).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
+            off[0] = 0.0;
+            check_decomposition(&diag, &off, 1e-8);
+        }
+    }
+
+    #[test]
+    fn empty_and_mismatched() {
+        assert!(tridiag_eigen(&[], &[]).unwrap().0.is_empty());
+        assert!(tridiag_eigen(&[1.0], &[0.0, 0.0]).is_err());
+    }
+}

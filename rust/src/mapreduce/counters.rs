@@ -1,0 +1,93 @@
+//! Job counters (Hadoop's Counters in miniature).
+
+use std::collections::BTreeMap;
+
+/// Named monotonic counters, mergeable across tasks.
+#[derive(Debug, Clone, Default)]
+pub struct Counters {
+    values: BTreeMap<String, u64>,
+}
+
+/// Well-known counter names used by the engine.
+pub mod names {
+    /// Records fed to mappers.
+    pub const MAP_INPUT_RECORDS: &str = "MAP_INPUT_RECORDS";
+    /// Records emitted by mappers.
+    pub const MAP_OUTPUT_RECORDS: &str = "MAP_OUTPUT_RECORDS";
+    /// Records after the combiner (== map output when no combiner).
+    pub const COMBINE_OUTPUT_RECORDS: &str = "COMBINE_OUTPUT_RECORDS";
+    /// Bytes crossing the shuffle.
+    pub const SHUFFLE_BYTES: &str = "SHUFFLE_BYTES";
+    /// Distinct keys seen by reducers.
+    pub const REDUCE_INPUT_GROUPS: &str = "REDUCE_INPUT_GROUPS";
+    /// Records emitted by reducers.
+    pub const REDUCE_OUTPUT_RECORDS: &str = "REDUCE_OUTPUT_RECORDS";
+    /// Map task attempts that failed (fault injection / mapper errors).
+    pub const FAILED_MAP_ATTEMPTS: &str = "FAILED_MAP_ATTEMPTS";
+    /// Extra bytes a task read outside its split (table scans, DFS side
+    /// files); charged to the task's virtual input cost by the engine.
+    pub const EXTRA_INPUT_BYTES: &str = "EXTRA_INPUT_BYTES";
+    /// Extra bytes a task wrote outside its emits (table puts, DFS writes).
+    pub const EXTRA_OUTPUT_BYTES: &str = "EXTRA_OUTPUT_BYTES";
+    /// Modeled task compute in MICROseconds on the *reference* machine
+    /// (the paper's testbed). When a task reports this, it REPLACES the
+    /// measured wall time in the virtual-clock cost — measured times on a
+    /// shared host are noisy, and noise × compute_scale would swamp the
+    /// deterministic makespan model. See coordinator::costmodel.
+    pub const COMPUTE_US: &str = "COMPUTE_US";
+    /// Reduce task attempts that failed.
+    pub const FAILED_REDUCE_ATTEMPTS: &str = "FAILED_REDUCE_ATTEMPTS";
+}
+
+impl Counters {
+    /// Add `delta` to counter `name`.
+    pub fn incr(&mut self, name: &str, delta: u64) {
+        *self.values.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Current value (0 when never incremented).
+    pub fn get(&self, name: &str) -> u64 {
+        self.values.get(name).copied().unwrap_or(0)
+    }
+
+    /// Merge another counter set into this one.
+    pub fn merge(&mut self, other: &Counters) {
+        for (k, v) in &other.values {
+            *self.values.entry(k.clone()).or_insert(0) += v;
+        }
+    }
+
+    /// Iterate (name, value) sorted by name.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.values.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn incr_get_merge() {
+        let mut a = Counters::default();
+        a.incr("x", 2);
+        a.incr("x", 3);
+        assert_eq!(a.get("x"), 5);
+        assert_eq!(a.get("missing"), 0);
+        let mut b = Counters::default();
+        b.incr("x", 1);
+        b.incr("y", 7);
+        a.merge(&b);
+        assert_eq!(a.get("x"), 6);
+        assert_eq!(a.get("y"), 7);
+    }
+
+    #[test]
+    fn iter_sorted() {
+        let mut c = Counters::default();
+        c.incr("b", 1);
+        c.incr("a", 1);
+        let names: Vec<&str> = c.iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["a", "b"]);
+    }
+}

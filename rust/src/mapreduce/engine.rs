@@ -1,0 +1,449 @@
+//! The MapReduce engine: map → (combine) → shuffle/sort → reduce.
+//!
+//! Runs map and reduce tasks on the [`Cluster`]'s worker pool with per-task
+//! retry (Hadoop's task-attempt model), a map-side combiner, a sort-merge
+//! shuffle, counters, and virtual-time accounting (every task's measured CPU
+//! time + byte counts feed [`crate::cluster::vclock`]).
+
+
+use crate::cluster::{Cluster, TaskCost};
+use crate::error::{Error, Result};
+
+use super::counters::{names, Counters};
+use super::job::{Job, Phase};
+use super::types::{Bytes, TaskContext, KV};
+
+/// Statistics of one executed job.
+#[derive(Debug, Clone, Default)]
+pub struct JobStats {
+    /// Cost profile of every map task (measured compute + bytes).
+    pub map_costs: Vec<TaskCost>,
+    /// Cost profile of every reduce task.
+    pub reduce_costs: Vec<TaskCost>,
+    /// Total intermediate bytes crossing the shuffle.
+    pub shuffle_bytes: u64,
+    /// Virtual wall-clock on the simulated cluster (seconds).
+    pub virtual_time_s: f64,
+    /// Real wall-clock of this simulation (seconds).
+    pub wall_time_s: f64,
+}
+
+/// Result of a job: per-partition sorted output, counters, stats.
+#[derive(Debug, Default)]
+pub struct JobResult {
+    /// For reduce jobs: one sorted record vector per reduce partition.
+    /// For map-only jobs: one record vector per map task.
+    pub output: Vec<Vec<KV>>,
+    /// Merged counters.
+    pub counters: Counters,
+    /// Cost/timing profile.
+    pub stats: JobStats,
+}
+
+impl JobResult {
+    /// Flatten all partitions into one globally key-sorted record list.
+    pub fn sorted_records(&self) -> Vec<KV> {
+        let mut all: Vec<KV> = self.output.iter().flatten().cloned().collect();
+        all.sort_by(|a, b| a.0.cmp(&b.0));
+        all
+    }
+}
+
+/// Run a job on the cluster.
+pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
+    let wall_start = std::time::Instant::now();
+    let mut counters = Counters::default();
+
+    // ---------------- map phase (with retry) ----------------
+    struct MapOut {
+        records: Vec<KV>,
+        counters: Counters,
+        input_bytes: u64,
+        failed_attempts: u64,
+    }
+    let map_tasks: Vec<_> = job
+        .input
+        .iter()
+        .enumerate()
+        .map(|(task_id, split)| {
+            let mapper = job.mapper.clone();
+            let combiner = job.combiner.clone();
+            let fault = job.fault.clone();
+            let max_attempts = job.max_attempts;
+            move || -> Result<MapOut> {
+                let input_bytes: u64 = split
+                    .iter()
+                    .map(|(k, v)| (k.len() + v.len()) as u64)
+                    .sum();
+                let mut failed = 0u64;
+                for attempt in 0..max_attempts {
+                    if let Some(f) = &fault {
+                        if f(Phase::Map, task_id, attempt) {
+                            failed += 1;
+                            continue;
+                        }
+                    }
+                    let mut ctx = TaskContext::default();
+                    let mut ok = true;
+                    for (k, v) in split {
+                        ctx.incr(names::MAP_INPUT_RECORDS, 1);
+                        if mapper.map(k, v, &mut ctx).is_err() {
+                            failed += 1;
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if !ok {
+                        continue;
+                    }
+                    let (mut records, mut task_counters) = ctx.into_parts();
+                    task_counters.incr(names::MAP_OUTPUT_RECORDS, records.len() as u64);
+                    // Map-side combine: sort-group-reduce within this task.
+                    if let Some(c) = &combiner {
+                        records = combine(records, c.as_ref())?;
+                        task_counters
+                            .incr(names::COMBINE_OUTPUT_RECORDS, records.len() as u64);
+                    }
+                    return Ok(MapOut {
+                        records,
+                        counters: task_counters,
+                        input_bytes,
+                        failed_attempts: failed,
+                    });
+                }
+                Err(Error::MapReduce(format!(
+                    "map task {task_id} failed after {max_attempts} attempts"
+                )))
+            }
+        })
+        .collect();
+
+    let map_results = cluster.execute(map_tasks)?;
+    let mut map_costs = Vec::with_capacity(map_results.len());
+    let mut map_outputs: Vec<Vec<KV>> = Vec::with_capacity(map_results.len());
+    for (out, secs) in map_results {
+        let out_bytes: u64 = out
+            .records
+            .iter()
+            .map(|(k, v)| (k.len() + v.len()) as u64)
+            .sum();
+        let modeled_us = out.counters.get(names::COMPUTE_US);
+        map_costs.push(TaskCost {
+            // Deterministic modeled compute wins over noisy measured time.
+            compute_s: if modeled_us > 0 { modeled_us as f64 / 1e6 } else { secs },
+            input_bytes: out.input_bytes
+                + out.counters.get(names::EXTRA_INPUT_BYTES),
+            output_bytes: out_bytes
+                + out.counters.get(names::EXTRA_OUTPUT_BYTES),
+        });
+        counters.merge(&out.counters);
+        counters.incr(names::FAILED_MAP_ATTEMPTS, out.failed_attempts);
+        map_outputs.push(out.records);
+    }
+
+    // ---------------- map-only job: done ----------------
+    let Some(reducer) = &job.reducer else {
+        let stats = JobStats {
+            shuffle_bytes: 0,
+            virtual_time_s: cluster.virtual_job_time(&map_costs, &[], 0),
+            wall_time_s: wall_start.elapsed().as_secs_f64(),
+            map_costs,
+            reduce_costs: vec![],
+        };
+        return Ok(JobResult { output: map_outputs, counters, stats });
+    };
+
+    // ---------------- shuffle: partition + sort + group ----------------
+    let nred = job.num_reducers;
+    let mut partitions: Vec<Vec<KV>> = (0..nred).map(|_| Vec::new()).collect();
+    let mut shuffle_bytes = 0u64;
+    for records in map_outputs {
+        for (k, v) in records {
+            shuffle_bytes += (k.len() + v.len()) as u64;
+            let p = job.partitioner.partition(&k, nred);
+            partitions[p].push((k, v));
+        }
+    }
+    counters.incr(names::SHUFFLE_BYTES, shuffle_bytes);
+    for p in partitions.iter_mut() {
+        p.sort_by(|a, b| a.0.cmp(&b.0));
+    }
+
+    // ---------------- reduce phase (with retry) ----------------
+    struct RedOut {
+        records: Vec<KV>,
+        counters: Counters,
+        input_bytes: u64,
+        failed_attempts: u64,
+    }
+    let reduce_tasks: Vec<_> = partitions
+        .into_iter()
+        .enumerate()
+        .map(|(task_id, part)| {
+            let reducer = reducer.clone();
+            let fault = job.fault.clone();
+            let max_attempts = job.max_attempts;
+            move || -> Result<RedOut> {
+                let input_bytes: u64 =
+                    part.iter().map(|(k, v)| (k.len() + v.len()) as u64).sum();
+                let mut failed = 0u64;
+                for attempt in 0..max_attempts {
+                    if let Some(f) = &fault {
+                        if f(Phase::Reduce, task_id, attempt) {
+                            failed += 1;
+                            continue;
+                        }
+                    }
+                    let mut ctx = TaskContext::default();
+                    let mut groups = 0u64;
+                    let mut ok = true;
+                    let mut i = 0;
+                    while i < part.len() {
+                        let key = &part[i].0;
+                        let mut j = i;
+                        while j < part.len() && &part[j].0 == key {
+                            j += 1;
+                        }
+                        let values: Vec<Bytes> =
+                            part[i..j].iter().map(|(_, v)| v.clone()).collect();
+                        groups += 1;
+                        if reducer.reduce(key, &values, &mut ctx).is_err() {
+                            failed += 1;
+                            ok = false;
+                            break;
+                        }
+                        i = j;
+                    }
+                    if !ok {
+                        continue;
+                    }
+                    let (records, mut task_counters) = ctx.into_parts();
+                    task_counters.incr(names::REDUCE_INPUT_GROUPS, groups);
+                    task_counters
+                        .incr(names::REDUCE_OUTPUT_RECORDS, records.len() as u64);
+                    return Ok(RedOut {
+                        records,
+                        counters: task_counters,
+                        input_bytes,
+                        failed_attempts: failed,
+                    });
+                }
+                Err(Error::MapReduce(format!(
+                    "job: reduce task {task_id} failed after {max_attempts} attempts"
+                )))
+            }
+        })
+        .collect();
+
+    let reduce_results = cluster.execute(reduce_tasks)?;
+    let mut reduce_costs = Vec::with_capacity(reduce_results.len());
+    let mut output = Vec::with_capacity(reduce_results.len());
+    for (out, secs) in reduce_results {
+        let out_bytes: u64 = out
+            .records
+            .iter()
+            .map(|(k, v)| (k.len() + v.len()) as u64)
+            .sum();
+        let modeled_us = out.counters.get(names::COMPUTE_US);
+        reduce_costs.push(TaskCost {
+            compute_s: if modeled_us > 0 { modeled_us as f64 / 1e6 } else { secs },
+            input_bytes: out.input_bytes,
+            output_bytes: out_bytes,
+        });
+        counters.merge(&out.counters);
+        counters.incr(names::FAILED_REDUCE_ATTEMPTS, out.failed_attempts);
+        output.push(out.records);
+    }
+
+    let stats = JobStats {
+        virtual_time_s: cluster.virtual_job_time(&map_costs, &reduce_costs, shuffle_bytes),
+        wall_time_s: wall_start.elapsed().as_secs_f64(),
+        map_costs,
+        reduce_costs,
+        shuffle_bytes,
+    };
+    Ok(JobResult { output, counters, stats })
+}
+
+/// Sort-group-apply a combiner to one map task's output.
+fn combine(mut records: Vec<KV>, combiner: &dyn super::types::Reducer) -> Result<Vec<KV>> {
+    records.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut ctx = TaskContext::default();
+    let mut i = 0;
+    while i < records.len() {
+        let key = records[i].0.clone();
+        let mut j = i;
+        while j < records.len() && records[j].0 == key {
+            j += 1;
+        }
+        let values: Vec<Bytes> = records[i..j].iter().map(|(_, v)| v.clone()).collect();
+        combiner.reduce(&key, &values, &mut ctx)?;
+        i = j;
+    }
+    let (out, _) = ctx.into_parts();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::job::JobBuilder;
+    use crate::mapreduce::types::{FnMapper, FnReducer};
+    use crate::util::bytes::{decode_u64, encode_u64};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    fn word_splits() -> Vec<Vec<KV>> {
+        // Two splits of words.
+        vec![
+            vec![
+                (vec![], b"the quick brown fox".to_vec()),
+                (vec![], b"the lazy dog".to_vec()),
+            ],
+            vec![(vec![], b"the fox jumps over the dog".to_vec())],
+        ]
+    }
+
+    fn wordcount_job(input: Vec<Vec<KV>>, with_combiner: bool) -> Job {
+        let mapper = Arc::new(FnMapper(|_k: &[u8], v: &[u8], ctx: &mut TaskContext| {
+            for w in std::str::from_utf8(v).unwrap().split_whitespace() {
+                ctx.emit(w.as_bytes().to_vec(), encode_u64(1).to_vec());
+            }
+            Ok(())
+        }));
+        let sum = Arc::new(FnReducer(
+            |k: &[u8], vs: &[Bytes], ctx: &mut TaskContext| {
+                let total: u64 = vs.iter().map(|v| decode_u64(v)).sum();
+                ctx.emit(k.to_vec(), encode_u64(total).to_vec());
+                Ok(())
+            },
+        ));
+        let mut b = JobBuilder::new("wordcount", input, mapper).reducer(sum.clone(), 3);
+        if with_combiner {
+            b = b.combiner(sum);
+        }
+        b.build()
+    }
+
+    fn counts_of(result: &JobResult) -> std::collections::HashMap<String, u64> {
+        result
+            .sorted_records()
+            .into_iter()
+            .map(|(k, v)| (String::from_utf8(k).unwrap(), decode_u64(&v)))
+            .collect()
+    }
+
+    #[test]
+    fn wordcount_end_to_end() {
+        let cluster = Cluster::new(4);
+        let job = wordcount_job(word_splits(), false);
+        let result = run(&cluster, &job).unwrap();
+        let counts = counts_of(&result);
+        assert_eq!(counts["the"], 4);
+        assert_eq!(counts["fox"], 2);
+        assert_eq!(counts["dog"], 2);
+        assert_eq!(counts["quick"], 1);
+        assert_eq!(result.counters.get(names::MAP_INPUT_RECORDS), 3);
+        assert!(result.stats.virtual_time_s > 0.0);
+    }
+
+    #[test]
+    fn combiner_reduces_shuffle_but_not_answer() {
+        let cluster = Cluster::new(2);
+        let plain = run(&cluster, &wordcount_job(word_splits(), false)).unwrap();
+        let combined = run(&cluster, &wordcount_job(word_splits(), true)).unwrap();
+        assert_eq!(counts_of(&plain), counts_of(&combined));
+        assert!(
+            combined.stats.shuffle_bytes < plain.stats.shuffle_bytes,
+            "combiner should shrink shuffle: {} vs {}",
+            combined.stats.shuffle_bytes,
+            plain.stats.shuffle_bytes
+        );
+    }
+
+    #[test]
+    fn map_only_job_returns_per_task_output() {
+        let cluster = Cluster::new(2);
+        let mapper = Arc::new(FnMapper(|k: &[u8], _v: &[u8], ctx: &mut TaskContext| {
+            ctx.emit(k.to_vec(), b"x".to_vec());
+            Ok(())
+        }));
+        let input = vec![
+            vec![(vec![1], vec![]), (vec![2], vec![])],
+            vec![(vec![3], vec![])],
+        ];
+        let job = JobBuilder::new("maponly", input, mapper).build();
+        let r = run(&cluster, &job).unwrap();
+        assert_eq!(r.output.len(), 2); // one per map task
+        assert_eq!(r.output[0].len(), 2);
+        assert_eq!(r.output[1].len(), 1);
+        assert_eq!(r.stats.shuffle_bytes, 0);
+    }
+
+    #[test]
+    fn transient_fault_retried_to_success() {
+        let cluster = Cluster::new(2);
+        let mut job = wordcount_job(word_splits(), false);
+        // Fail the first two attempts of map task 0 and the first attempt of
+        // reduce task 1; all should recover within 4 attempts.
+        job.fault = Some(Arc::new(|phase, task, attempt| match phase {
+            Phase::Map => task == 0 && attempt < 2,
+            Phase::Reduce => task == 1 && attempt < 1,
+        }));
+        let r = run(&cluster, &job).unwrap();
+        assert_eq!(counts_of(&r)["the"], 4);
+        assert_eq!(r.counters.get(names::FAILED_MAP_ATTEMPTS), 2);
+        assert_eq!(r.counters.get(names::FAILED_REDUCE_ATTEMPTS), 1);
+    }
+
+    #[test]
+    fn permanent_fault_fails_job() {
+        let cluster = Cluster::new(2);
+        let mut job = wordcount_job(word_splits(), false);
+        job.max_attempts = 3;
+        job.fault = Some(Arc::new(|phase, task, _| {
+            phase == Phase::Map && task == 1
+        }));
+        let err = run(&cluster, &job).unwrap_err();
+        assert!(err.to_string().contains("failed after 3 attempts"), "{err}");
+    }
+
+    #[test]
+    fn mapper_error_also_retried() {
+        static CALLS: AtomicUsize = AtomicUsize::new(0);
+        let cluster = Cluster::new(1);
+        let mapper = Arc::new(FnMapper(|_k: &[u8], _v: &[u8], _ctx: &mut TaskContext| {
+            // First invocation errors, later ones succeed.
+            if CALLS.fetch_add(1, Ordering::SeqCst) == 0 {
+                Err(Error::MapReduce("flaky".into()))
+            } else {
+                Ok(())
+            }
+        }));
+        let job = JobBuilder::new("flaky", vec![vec![(vec![], vec![])]], mapper).build();
+        let r = run(&cluster, &job).unwrap();
+        assert_eq!(r.counters.get(names::FAILED_MAP_ATTEMPTS), 1);
+    }
+
+    #[test]
+    fn reduce_outputs_sorted_within_partition() {
+        let cluster = Cluster::new(2);
+        let job = wordcount_job(word_splits(), false);
+        let r = run(&cluster, &job).unwrap();
+        for part in &r.output {
+            for w in part.windows(2) {
+                assert!(w[0].0 <= w[1].0, "partition not sorted");
+            }
+        }
+    }
+
+    #[test]
+    fn every_emitted_key_lands_in_exactly_one_partition() {
+        // Routing invariant: reducers together see every mapped record once.
+        let cluster = Cluster::new(3);
+        let job = wordcount_job(word_splits(), false);
+        let r = run(&cluster, &job).unwrap();
+        let total: u64 = counts_of(&r).values().sum();
+        assert_eq!(total, 13, "13 words in the corpus");
+    }
+}

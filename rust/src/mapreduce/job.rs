@@ -1,0 +1,133 @@
+//! Job configuration (Hadoop's JobConf) with a builder API.
+
+use std::sync::Arc;
+
+use super::types::{HashPartitioner, InputSplit, Mapper, Partitioner, Reducer};
+
+/// Predicate deciding whether a task attempt should be failed artificially:
+/// `(phase, task_id, attempt) -> fail?`. Used by fault-tolerance tests.
+pub type FaultInjector = Arc<dyn Fn(Phase, usize, usize) -> bool + Send + Sync>;
+
+/// Which phase a task belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Map side.
+    Map,
+    /// Reduce side.
+    Reduce,
+}
+
+/// A fully-specified MapReduce job.
+pub struct Job {
+    /// Human-readable job name (logs, metrics).
+    pub name: String,
+    /// One entry per map task.
+    pub input: Vec<InputSplit>,
+    /// The map function.
+    pub mapper: Arc<dyn Mapper>,
+    /// The reduce function; `None` = map-only job (paper Alg. 4.2 is one).
+    pub reducer: Option<Arc<dyn Reducer>>,
+    /// Optional map-side combiner (same contract as the reducer).
+    pub combiner: Option<Arc<dyn Reducer>>,
+    /// Number of reduce partitions.
+    pub num_reducers: usize,
+    /// Key router.
+    pub partitioner: Arc<dyn Partitioner>,
+    /// Attempts per task before the job fails (Hadoop default: 4).
+    pub max_attempts: usize,
+    /// Optional fault injection for tests.
+    pub fault: Option<FaultInjector>,
+}
+
+/// Builder for [`Job`].
+pub struct JobBuilder {
+    job: Job,
+}
+
+impl JobBuilder {
+    /// Start building a job with the mandatory pieces.
+    pub fn new(name: &str, input: Vec<InputSplit>, mapper: Arc<dyn Mapper>) -> Self {
+        Self {
+            job: Job {
+                name: name.to_string(),
+                input,
+                mapper,
+                reducer: None,
+                combiner: None,
+                num_reducers: 1,
+                partitioner: Arc::new(HashPartitioner),
+                max_attempts: 4,
+                fault: None,
+            },
+        }
+    }
+
+    /// Set the reducer and partition count.
+    pub fn reducer(mut self, r: Arc<dyn Reducer>, num_reducers: usize) -> Self {
+        self.job.reducer = Some(r);
+        self.job.num_reducers = num_reducers.max(1);
+        self
+    }
+
+    /// Set a map-side combiner.
+    pub fn combiner(mut self, c: Arc<dyn Reducer>) -> Self {
+        self.job.combiner = Some(c);
+        self
+    }
+
+    /// Replace the partitioner.
+    pub fn partitioner(mut self, p: Arc<dyn Partitioner>) -> Self {
+        self.job.partitioner = p;
+        self
+    }
+
+    /// Set max attempts per task.
+    pub fn max_attempts(mut self, n: usize) -> Self {
+        self.job.max_attempts = n.max(1);
+        self
+    }
+
+    /// Install a fault injector.
+    pub fn fault_injector(mut self, f: FaultInjector) -> Self {
+        self.job.fault = Some(f);
+        self
+    }
+
+    /// Finish.
+    pub fn build(self) -> Job {
+        self.job
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::types::FnMapper;
+
+    #[test]
+    fn builder_defaults() {
+        let j = JobBuilder::new(
+            "t",
+            vec![],
+            Arc::new(FnMapper(|_: &[u8], _: &[u8], _: &mut _| Ok(()))),
+        )
+        .build();
+        assert_eq!(j.name, "t");
+        assert!(j.reducer.is_none());
+        assert!(j.combiner.is_none());
+        assert_eq!(j.num_reducers, 1);
+        assert_eq!(j.max_attempts, 4);
+    }
+
+    #[test]
+    fn builder_overrides() {
+        let j = JobBuilder::new(
+            "t",
+            vec![],
+            Arc::new(FnMapper(|_: &[u8], _: &[u8], _: &mut _| Ok(()))),
+        )
+        .max_attempts(0)
+        .build();
+        assert_eq!(j.max_attempts, 1, "max_attempts clamps to >= 1");
+    }
+}

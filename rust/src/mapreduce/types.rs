@@ -1,0 +1,172 @@
+//! MapReduce core types: records, Mapper/Reducer/Partitioner traits.
+
+use crate::error::Result;
+
+use super::counters::Counters;
+
+/// Raw bytes (keys and values are untyped, codecs live in `util::bytes`).
+pub type Bytes = Vec<u8>;
+/// One record.
+pub type KV = (Bytes, Bytes);
+/// One input split: the records a single map task consumes.
+pub type InputSplit = Vec<KV>;
+
+/// Per-task context: collects emitted records and counter increments.
+#[derive(Debug, Default)]
+pub struct TaskContext {
+    emits: Vec<KV>,
+    counters: Counters,
+}
+
+impl TaskContext {
+    /// Emit an intermediate/output record.
+    pub fn emit(&mut self, key: Bytes, value: Bytes) {
+        self.emits.push((key, value));
+    }
+
+    /// Bump a user counter.
+    pub fn incr(&mut self, name: &str, delta: u64) {
+        self.counters.incr(name, delta);
+    }
+
+    /// Consume the context.
+    pub fn into_parts(self) -> (Vec<KV>, Counters) {
+        (self.emits, self.counters)
+    }
+
+    /// Emitted records so far (tests).
+    pub fn emitted(&self) -> &[KV] {
+        &self.emits
+    }
+}
+
+/// Map function (paper Fig. 1/3: the `map(<key,value>, <key',value'>)`).
+pub trait Mapper: Send + Sync {
+    /// Process one record.
+    fn map(&self, key: &[u8], value: &[u8], ctx: &mut TaskContext) -> Result<()>;
+}
+
+/// Reduce function over one key group (also used as a combiner).
+pub trait Reducer: Send + Sync {
+    /// Process one key and all its values.
+    fn reduce(&self, key: &[u8], values: &[Bytes], ctx: &mut TaskContext) -> Result<()>;
+}
+
+/// Route a key to one of `n` reduce partitions.
+pub trait Partitioner: Send + Sync {
+    /// Partition index in [0, n).
+    fn partition(&self, key: &[u8], n: usize) -> usize;
+}
+
+/// Default partitioner: FNV-1a hash of the key, mod n (Hadoop's HashPartitioner).
+#[derive(Debug, Default, Clone)]
+pub struct HashPartitioner;
+
+impl Partitioner for HashPartitioner {
+    fn partition(&self, key: &[u8], n: usize) -> usize {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &b in key {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        (h % n as u64) as usize
+    }
+}
+
+/// Range partitioner over big-endian u64 row keys: preserves global order
+/// across reducer outputs (used when reduce output is re-assembled into a
+/// row-ordered matrix).
+#[derive(Debug, Clone)]
+pub struct RangePartitioner {
+    /// Exclusive upper bound of the key space.
+    pub max_key: u64,
+}
+
+impl Partitioner for RangePartitioner {
+    fn partition(&self, key: &[u8], n: usize) -> usize {
+        let k = crate::util::bytes::decode_u64(key);
+        let bucket = (k as u128 * n as u128 / self.max_key.max(1) as u128) as usize;
+        bucket.min(n - 1)
+    }
+}
+
+/// Closure-backed mapper (ergonomics for small jobs and tests).
+pub struct FnMapper<F>(pub F);
+
+impl<F> Mapper for FnMapper<F>
+where
+    F: Fn(&[u8], &[u8], &mut TaskContext) -> Result<()> + Send + Sync,
+{
+    fn map(&self, key: &[u8], value: &[u8], ctx: &mut TaskContext) -> Result<()> {
+        (self.0)(key, value, ctx)
+    }
+}
+
+/// Closure-backed reducer.
+pub struct FnReducer<F>(pub F);
+
+impl<F> Reducer for FnReducer<F>
+where
+    F: Fn(&[u8], &[Bytes], &mut TaskContext) -> Result<()> + Send + Sync,
+{
+    fn reduce(&self, key: &[u8], values: &[Bytes], ctx: &mut TaskContext) -> Result<()> {
+        (self.0)(key, values, ctx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_partitioner_in_range_and_deterministic() {
+        let p = HashPartitioner;
+        for n in [1usize, 2, 7, 16] {
+            for key in [b"".as_slice(), b"a", b"abc", &[0u8, 1, 2, 3]] {
+                let part = p.partition(key, n);
+                assert!(part < n);
+                assert_eq!(part, p.partition(key, n));
+            }
+        }
+    }
+
+    #[test]
+    fn hash_partitioner_spreads_keys() {
+        let p = HashPartitioner;
+        let n = 8;
+        let mut counts = vec![0usize; n];
+        for i in 0..10_000u64 {
+            counts[p.partition(&i.to_be_bytes(), n)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(c > 10_000 / n / 2, "partition {i} starved: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn range_partitioner_order_preserving() {
+        let p = RangePartitioner { max_key: 1000 };
+        let n = 4;
+        let mut last = 0;
+        for k in 0..1000u64 {
+            let part = p.partition(&k.to_be_bytes(), n);
+            assert!(part >= last, "range partitioner went backwards");
+            assert!(part < n);
+            last = part;
+        }
+        // All partitions used.
+        let used: std::collections::HashSet<usize> =
+            (0..1000u64).map(|k| p.partition(&k.to_be_bytes(), n)).collect();
+        assert_eq!(used.len(), n);
+    }
+
+    #[test]
+    fn task_context_collects() {
+        let mut ctx = TaskContext::default();
+        ctx.emit(vec![1], vec![2]);
+        ctx.incr("c", 3);
+        let (emits, counters) = ctx.into_parts();
+        assert_eq!(emits, vec![(vec![1], vec![2])]);
+        assert_eq!(counters.get("c"), 3);
+    }
+}

@@ -1,0 +1,88 @@
+//! Timing, speedup and table reporting for experiments and benches.
+
+pub mod speedup;
+pub mod table;
+
+use std::time::{Duration, Instant};
+
+/// A simple named phase timer.
+#[derive(Debug)]
+pub struct PhaseTimer {
+    phases: Vec<(String, Duration)>,
+    current: Option<(String, Instant)>,
+}
+
+impl Default for PhaseTimer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PhaseTimer {
+    /// New empty timer.
+    pub fn new() -> Self {
+        Self { phases: Vec::new(), current: None }
+    }
+
+    /// Start a phase (finishes any running phase first).
+    pub fn start(&mut self, name: &str) {
+        self.finish();
+        self.current = Some((name.to_string(), Instant::now()));
+    }
+
+    /// Finish the running phase, if any.
+    pub fn finish(&mut self) {
+        if let Some((name, t0)) = self.current.take() {
+            self.phases.push((name, t0.elapsed()));
+        }
+    }
+
+    /// Record an externally-measured phase duration.
+    pub fn record(&mut self, name: &str, d: Duration) {
+        self.phases.push((name.to_string(), d));
+    }
+
+    /// All (phase, duration) pairs in order.
+    pub fn phases(&self) -> &[(String, Duration)] {
+        &self.phases
+    }
+
+    /// Total across phases.
+    pub fn total(&self) -> Duration {
+        self.phases.iter().map(|(_, d)| *d).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_total() {
+        let mut t = PhaseTimer::new();
+        t.record("a", Duration::from_secs(2));
+        t.record("b", Duration::from_secs(3));
+        assert_eq!(t.total(), Duration::from_secs(5));
+        assert_eq!(t.phases().len(), 2);
+        assert_eq!(t.phases()[0].0, "a");
+    }
+
+    #[test]
+    fn start_finish_measures_something() {
+        let mut t = PhaseTimer::new();
+        t.start("work");
+        std::thread::sleep(Duration::from_millis(5));
+        t.finish();
+        assert_eq!(t.phases().len(), 1);
+        assert!(t.phases()[0].1 >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn start_auto_finishes_previous() {
+        let mut t = PhaseTimer::new();
+        t.start("a");
+        t.start("b");
+        t.finish();
+        assert_eq!(t.phases().len(), 2);
+    }
+}

@@ -1,0 +1,154 @@
+//! Speedup-curve bookkeeping (paper Fig. 5).
+
+/// One (machines, time-seconds) measurement.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScalePoint {
+    /// Slave count m.
+    pub machines: usize,
+    /// Measured (virtual) seconds.
+    pub seconds: f64,
+}
+
+/// A speedup curve relative to the 1-machine baseline.
+#[derive(Debug, Clone, Default)]
+pub struct SpeedupCurve {
+    points: Vec<ScalePoint>,
+}
+
+impl SpeedupCurve {
+    /// Add one measurement.
+    pub fn push(&mut self, machines: usize, seconds: f64) {
+        self.points.push(ScalePoint { machines, seconds });
+        self.points.sort_by_key(|p| p.machines);
+    }
+
+    /// Raw points sorted by machine count.
+    pub fn points(&self) -> &[ScalePoint] {
+        &self.points
+    }
+
+    /// Speedup of each point vs the smallest-m point.
+    pub fn speedups(&self) -> Vec<(usize, f64)> {
+        let Some(base) = self.points.first() else { return vec![] };
+        self.points
+            .iter()
+            .map(|p| (p.machines, base.seconds / p.seconds))
+            .collect()
+    }
+
+    /// Parallel efficiency: speedup / (m / m_base).
+    pub fn efficiencies(&self) -> Vec<(usize, f64)> {
+        let Some(base) = self.points.first() else { return vec![] };
+        self.speedups()
+            .into_iter()
+            .map(|(m, s)| (m, s / (m as f64 / base.machines as f64)))
+            .collect()
+    }
+
+    /// Is the curve monotone non-increasing in time up to `up_to` machines?
+    pub fn monotone_up_to(&self, up_to: usize) -> bool {
+        let pts: Vec<&ScalePoint> =
+            self.points.iter().filter(|p| p.machines <= up_to).collect();
+        pts.windows(2).all(|w| w[1].seconds <= w[0].seconds)
+    }
+
+    /// Relative improvement between the last two points (the paper's 8→10
+    /// flattening check): `(t_prev - t_last) / t_prev`.
+    pub fn final_gain(&self) -> Option<f64> {
+        let n = self.points.len();
+        if n < 2 {
+            return None;
+        }
+        let prev = self.points[n - 2].seconds;
+        Some((prev - self.points[n - 1].seconds) / prev)
+    }
+
+    /// ASCII trend plot (machines on x, time on y), like Fig. 5.
+    pub fn ascii_plot(&self, width: usize, height: usize) -> String {
+        if self.points.is_empty() {
+            return String::new();
+        }
+        let tmax = self.points.iter().map(|p| p.seconds).fold(0.0, f64::max);
+        let mut grid = vec![vec![b' '; width]; height];
+        let n = self.points.len();
+        for (i, p) in self.points.iter().enumerate() {
+            let x = if n == 1 { 0 } else { i * (width - 1) / (n - 1) };
+            let y = if tmax == 0.0 {
+                height - 1
+            } else {
+                ((1.0 - p.seconds / tmax) * (height - 1) as f64).round() as usize
+            };
+            grid[height - 1 - y.min(height - 1)][x] = b'*';
+        }
+        let mut out = String::new();
+        for row in grid {
+            out.push_str(std::str::from_utf8(&row).unwrap());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_total_curve() -> SpeedupCurve {
+        // Paper Table 5-1 "Total Time" column, in seconds.
+        let mut c = SpeedupCurve::default();
+        for (m, t) in [
+            (1, 4.0 * 3600.0 + 24.0 * 60.0 + 45.0),
+            (2, 3.0 * 3600.0 + 11.0 * 60.0 + 8.0),
+            (4, 2.0 * 3600.0 + 28.0 * 60.0 + 15.0),
+            (6, 1.0 * 3600.0 + 47.0 * 60.0 + 53.0),
+            (8, 1.0 * 3600.0 + 34.0 * 60.0 + 33.0),
+            (10, 1.0 * 3600.0 + 35.0 * 60.0 + 53.0),
+        ] {
+            c.push(m, t);
+        }
+        c
+    }
+
+    #[test]
+    fn speedups_relative_to_base() {
+        let c = paper_total_curve();
+        let s = c.speedups();
+        assert_eq!(s[0], (1, 1.0));
+        // Paper's total speedup at 8 slaves is ~2.8x.
+        assert!((s[4].1 - 2.8).abs() < 0.05, "{:?}", s);
+    }
+
+    #[test]
+    fn paper_curve_monotone_to_8_but_not_10() {
+        let c = paper_total_curve();
+        assert!(c.monotone_up_to(8));
+        assert!(!c.monotone_up_to(10)); // 10 slaves slower than 8
+        assert!(c.final_gain().unwrap() < 0.0); // regression at 10
+    }
+
+    #[test]
+    fn efficiency_decreasing() {
+        let c = paper_total_curve();
+        let e = c.efficiencies();
+        for w in e.windows(2) {
+            assert!(w[1].1 <= w[0].1 + 1e-9, "{e:?}");
+        }
+    }
+
+    #[test]
+    fn unsorted_insert_sorts() {
+        let mut c = SpeedupCurve::default();
+        c.push(4, 10.0);
+        c.push(1, 40.0);
+        c.push(2, 20.0);
+        let ms: Vec<usize> = c.points().iter().map(|p| p.machines).collect();
+        assert_eq!(ms, vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn ascii_plot_has_marks() {
+        let c = paper_total_curve();
+        let plot = c.ascii_plot(40, 10);
+        assert_eq!(plot.matches('*').count(), 6);
+    }
+}

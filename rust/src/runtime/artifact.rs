@@ -1,0 +1,235 @@
+//! AOT artifact loading: HLO text → PJRT executable, manifest validation.
+//!
+//! `artifacts/manifest.txt` (written by `python/compile/aot.py`) pins each
+//! artifact's input shapes/dtypes and output arity; we parse it at load time
+//! so a tile-geometry mismatch between the Python and Rust sides fails fast
+//! with a clear error instead of a shape panic mid-job.
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+
+/// Parsed input spec: dtype string + dims (empty = scalar).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InputSpec {
+    /// Dtype name as emitted by jax (e.g. "float32", "int32").
+    pub dtype: String,
+    /// Dimensions; empty for scalars.
+    pub dims: Vec<usize>,
+}
+
+impl InputSpec {
+    /// Parse "float32[128x16]" / "float32[scalar]".
+    pub fn parse(s: &str) -> Result<Self> {
+        let (dtype, rest) = s
+            .split_once('[')
+            .ok_or_else(|| Error::Runtime(format!("bad input spec: {s:?}")))?;
+        let dims_str = rest
+            .strip_suffix(']')
+            .ok_or_else(|| Error::Runtime(format!("bad input spec: {s:?}")))?;
+        let dims = if dims_str == "scalar" {
+            vec![]
+        } else {
+            dims_str
+                .split('x')
+                .map(|d| {
+                    d.parse::<usize>()
+                        .map_err(|_| Error::Runtime(format!("bad dim in {s:?}")))
+                })
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(Self { dtype: dtype.to_string(), dims })
+    }
+
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+}
+
+/// One manifest entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    /// Artifact name (file stem).
+    pub name: String,
+    /// Input specs in call order.
+    pub inputs: Vec<InputSpec>,
+    /// Number of outputs in the result tuple.
+    pub out_arity: usize,
+}
+
+/// Parse `artifacts/manifest.txt` (`name|spec;spec;...|arity` lines).
+pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
+    let mut entries = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = line.split('|').collect();
+        if parts.len() != 3 {
+            return Err(Error::Runtime(format!(
+                "manifest line {}: expected name|inputs|arity",
+                lineno + 1
+            )));
+        }
+        let inputs = parts[1]
+            .split(';')
+            .filter(|s| !s.is_empty())
+            .map(InputSpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let out_arity = parts[2]
+            .parse()
+            .map_err(|_| Error::Runtime(format!("manifest line {}: bad arity", lineno + 1)))?;
+        entries.push(ManifestEntry { name: parts[0].to_string(), inputs, out_arity });
+    }
+    Ok(entries)
+}
+
+/// A loaded, compiled artifact.
+///
+/// PJRT executables are thread-safe to execute in the underlying C++ XLA
+/// runtime, but the `xla` crate's wrapper holds raw pointers and is not
+/// `Send`/`Sync`-marked; we serialize executions behind a mutex (the host
+/// here is single-core anyway — virtual time is what models parallelism).
+pub struct Artifact {
+    /// Manifest entry this artifact was validated against.
+    pub meta: ManifestEntry,
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: PJRT executables/buffers are internally thread-safe in XLA's C++
+// runtime; all mutation funnels through the mutex above. The wrapper types
+// only lack the auto-traits because they hold raw pointers.
+unsafe impl Send for Artifact {}
+unsafe impl Sync for Artifact {}
+
+impl Artifact {
+    /// Load + compile one HLO text artifact.
+    pub fn load(client: &xla::PjRtClient, dir: &Path, meta: ManifestEntry) -> Result<Self> {
+        let path = dir.join(format!("{}.hlo.txt", meta.name));
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Self { meta, exe: Mutex::new(exe) })
+    }
+
+    /// Execute with f32/i32 input buffers; returns the output tuple as raw
+    /// literals. Inputs are validated against the manifest spec.
+    pub fn execute(&self, inputs: &[InputValue]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.meta.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (v, spec) in inputs.iter().zip(&self.meta.inputs) {
+            literals.push(v.to_literal(spec, &self.meta.name)?);
+        }
+        let exe = self.exe.lock().unwrap();
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        drop(exe);
+        let outs = result.to_tuple()?;
+        if outs.len() != self.meta.out_arity {
+            return Err(Error::Runtime(format!(
+                "{}: expected {} outputs, got {}",
+                self.meta.name,
+                self.meta.out_arity,
+                outs.len()
+            )));
+        }
+        Ok(outs)
+    }
+}
+
+/// A typed input value for artifact execution.
+#[derive(Debug, Clone)]
+pub enum InputValue<'a> {
+    /// f32 buffer (scalar when the spec says scalar and len == 1).
+    F32(&'a [f32]),
+    /// i32 buffer.
+    I32(&'a [i32]),
+}
+
+impl InputValue<'_> {
+    fn to_literal(&self, spec: &InputSpec, name: &str) -> Result<xla::Literal> {
+        let mismatch = |got: usize| {
+            Error::Runtime(format!(
+                "{name}: input len {got} != spec {:?} ({} elems)",
+                spec.dims,
+                spec.elements()
+            ))
+        };
+        match self {
+            InputValue::F32(data) => {
+                if spec.dtype != "float32" {
+                    return Err(Error::Runtime(format!(
+                        "{name}: passing f32 to {} input",
+                        spec.dtype
+                    )));
+                }
+                if data.len() != spec.elements() {
+                    return Err(mismatch(data.len()));
+                }
+                if spec.dims.is_empty() {
+                    Ok(xla::Literal::from(data[0]))
+                } else {
+                    let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+                    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+                }
+            }
+            InputValue::I32(data) => {
+                if spec.dtype != "int32" {
+                    return Err(Error::Runtime(format!(
+                        "{name}: passing i32 to {} input",
+                        spec.dtype
+                    )));
+                }
+                if data.len() != spec.elements() {
+                    return Err(mismatch(data.len()));
+                }
+                if spec.dims.is_empty() {
+                    Ok(xla::Literal::from(data[0]))
+                } else {
+                    let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+                    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn input_spec_parses() {
+        let s = InputSpec::parse("float32[128x16]").unwrap();
+        assert_eq!(s.dtype, "float32");
+        assert_eq!(s.dims, vec![128, 16]);
+        assert_eq!(s.elements(), 2048);
+        let sc = InputSpec::parse("float32[scalar]").unwrap();
+        assert!(sc.dims.is_empty());
+        assert_eq!(sc.elements(), 1);
+        assert!(InputSpec::parse("float32").is_err());
+        assert!(InputSpec::parse("float32[axb]").is_err());
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let text = "rbf_block|float32[128x16];float32[128x16];float32[scalar]|1\n\
+                    kmeans_step|float32[256x16];float32[16x16];float32[256]|3\n";
+        let m = parse_manifest(text).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].name, "rbf_block");
+        assert_eq!(m[0].inputs.len(), 3);
+        assert_eq!(m[1].out_arity, 3);
+        assert!(parse_manifest("bad line\n").is_err());
+        assert!(parse_manifest("a|b|c\n").is_err());
+    }
+}

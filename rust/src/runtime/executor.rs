@@ -1,0 +1,391 @@
+//! Typed kernel entry points with tile padding: the bridge between the
+//! coordinator's arbitrary problem sizes and the artifacts' fixed AOT tile
+//! geometry (PJRT compiles one executable per static shape).
+//!
+//! Geometry must agree with `python/compile/model.py::ENTRY_POINTS`:
+//!
+//! | kernel          | tile shape                         |
+//! |-----------------|------------------------------------|
+//! | rbf_block       | x,y: 128×16, gamma scalar → 128×128 |
+//! | matvec_block    | A: 256×256, v: 256 → 256            |
+//! | laplacian_block | S: 256×256, dinv: 256, flag → 256×256 |
+//! | kmeans_step     | P: 256×16, C: 16×16, mask: 256      |
+//! | normalize_rows  | Z: 128×16 → 128×16                  |
+//! | degree_rowsum   | S: 128×128 → 128                    |
+//!
+//! Inputs larger than a tile are decomposed into tiles; smaller ones are
+//! zero-padded (sentinel-padded for k-means centers) and outputs sliced back.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+use super::artifact::{parse_manifest, Artifact, InputValue};
+use super::native;
+
+/// RBF tile rows/cols.
+pub const RBF_TILE: usize = 128;
+/// Feature dim every kernel is padded to.
+pub const PAD_DIM: usize = 16;
+/// Mat-vec / Laplacian block edge.
+pub const MV_BLOCK: usize = 256;
+/// K-means points-per-tile.
+pub const KM_PTS: usize = 256;
+/// K-means max (padded) center count.
+pub const KM_K: usize = 16;
+/// Row-normalization tile rows.
+pub const NORM_ROWS: usize = 128;
+/// Sentinel coordinate for padding k-means centers: far from all real data
+/// but small enough that squared distances stay finite in f32.
+pub const CENTER_SENTINEL: f32 = 1e9;
+
+/// Which backend executes the kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT-compiled XLA artifacts via PJRT.
+    Xla,
+    /// Native Rust fallback (same math, used for parity tests too).
+    Native,
+}
+
+struct ClientHolder(#[allow(dead_code)] xla::PjRtClient);
+// SAFETY: the PJRT CPU client is internally synchronized; the wrapper type
+// only lacks auto-traits because it holds raw pointers.
+unsafe impl Send for ClientHolder {}
+unsafe impl Sync for ClientHolder {}
+
+/// Kernel runtime: owns the PJRT client + compiled artifacts (or nothing,
+/// for the native backend). Shared across map tasks via `Arc`.
+pub struct KernelRuntime {
+    backend: Backend,
+    _client: Option<ClientHolder>,
+    artifacts: HashMap<String, Artifact>,
+}
+
+impl KernelRuntime {
+    /// Load every artifact listed in `dir/manifest.txt` and compile it on a
+    /// fresh PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Runtime(format!("cannot read {}: {e}", manifest_path.display()))
+        })?;
+        let entries = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut artifacts = HashMap::new();
+        for entry in entries {
+            let name = entry.name.clone();
+            let artifact = Artifact::load(&client, dir, entry)?;
+            artifacts.insert(name, artifact);
+        }
+        Ok(Self {
+            backend: Backend::Xla,
+            _client: Some(ClientHolder(client)),
+            artifacts,
+        })
+    }
+
+    /// Native-only runtime (no artifacts needed).
+    pub fn native() -> Self {
+        Self { backend: Backend::Native, _client: None, artifacts: HashMap::new() }
+    }
+
+    /// Try XLA, fall back to native with a log line.
+    pub fn auto(dir: &Path) -> Self {
+        match Self::load(dir) {
+            Ok(rt) => rt,
+            Err(e) => {
+                log::warn!("artifacts unavailable ({e}); using native kernels");
+                Self::native()
+            }
+        }
+    }
+
+    /// Active backend.
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    fn artifact(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("artifact {name} not loaded")))
+    }
+
+    // ------------------------------------------------------------------
+    // RBF similarity tile
+    // ------------------------------------------------------------------
+
+    /// S[i,j] = exp(-gamma ||x_i - y_j||²) for x (p,d), y (q,d) row-major.
+    /// Requires d <= PAD_DIM on the XLA backend.
+    pub fn rbf_tile(
+        &self,
+        x: &[f32],
+        y: &[f32],
+        p: usize,
+        q: usize,
+        d: usize,
+        gamma: f32,
+    ) -> Result<Vec<f32>> {
+        if self.backend == Backend::Native {
+            return Ok(native::rbf_block(x, y, p, q, d, gamma));
+        }
+        if d > PAD_DIM {
+            return Err(Error::Runtime(format!(
+                "rbf_tile: d={d} exceeds padded dim {PAD_DIM}"
+            )));
+        }
+        let artifact = self.artifact("rbf_block")?;
+        let mut out = vec![0.0f32; p * q];
+        let mut xt = vec![0.0f32; RBF_TILE * PAD_DIM];
+        let mut yt = vec![0.0f32; RBF_TILE * PAD_DIM];
+        for bi in (0..p).step_by(RBF_TILE) {
+            let pi = (p - bi).min(RBF_TILE);
+            pad_rows(&mut xt, &x[bi * d..], pi, d, PAD_DIM);
+            for bj in (0..q).step_by(RBF_TILE) {
+                let qj = (q - bj).min(RBF_TILE);
+                pad_rows(&mut yt, &y[bj * d..], qj, d, PAD_DIM);
+                let outs = artifact.execute(&[
+                    InputValue::F32(&xt),
+                    InputValue::F32(&yt),
+                    InputValue::F32(&[gamma]),
+                ])?;
+                let tile = outs[0].to_vec::<f32>()?;
+                for i in 0..pi {
+                    for j in 0..qj {
+                        out[(bi + i) * q + (bj + j)] = tile[i * RBF_TILE + j];
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // Mat-vec over a dense row block
+    // ------------------------------------------------------------------
+
+    /// y = A v for row-major A (r, c).
+    pub fn matvec(&self, a: &[f32], v: &[f32], r: usize, c: usize) -> Result<Vec<f32>> {
+        if self.backend == Backend::Native {
+            return Ok(native::matvec_block(a, v, r, c));
+        }
+        let artifact = self.artifact("matvec_block")?;
+        let mut out = vec![0.0f32; r];
+        let mut at = vec![0.0f32; MV_BLOCK * MV_BLOCK];
+        let mut vt = vec![0.0f32; MV_BLOCK];
+        for bi in (0..r).step_by(MV_BLOCK) {
+            let ri = (r - bi).min(MV_BLOCK);
+            for bj in (0..c).step_by(MV_BLOCK) {
+                let cj = (c - bj).min(MV_BLOCK);
+                // Pack the (ri, cj) sub-block of A.
+                at.fill(0.0);
+                for i in 0..ri {
+                    let src = &a[(bi + i) * c + bj..(bi + i) * c + bj + cj];
+                    at[i * MV_BLOCK..i * MV_BLOCK + cj].copy_from_slice(src);
+                }
+                vt.fill(0.0);
+                vt[..cj].copy_from_slice(&v[bj..bj + cj]);
+                let outs = artifact
+                    .execute(&[InputValue::F32(&at), InputValue::F32(&vt)])?;
+                let block = outs[0].to_vec::<f32>()?;
+                for i in 0..ri {
+                    out[bi + i] += block[i];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // Normalized-Laplacian tile
+    // ------------------------------------------------------------------
+
+    /// L tile = is_diag·I − diag(dinv_r)·S·diag(dinv_c), S is (n, n) with
+    /// n <= MV_BLOCK (one table block).
+    pub fn laplacian_tile(
+        &self,
+        s: &[f32],
+        dinv_r: &[f32],
+        dinv_c: &[f32],
+        n: usize,
+        is_diag: bool,
+    ) -> Result<Vec<f32>> {
+        let flag = if is_diag { 1.0f32 } else { 0.0 };
+        if self.backend == Backend::Native {
+            return Ok(native::laplacian_block(s, dinv_r, dinv_c, n, n, flag));
+        }
+        if n > MV_BLOCK {
+            return Err(Error::Runtime(format!(
+                "laplacian_tile: n={n} exceeds block {MV_BLOCK}"
+            )));
+        }
+        let artifact = self.artifact("laplacian_block")?;
+        let mut st = vec![0.0f32; MV_BLOCK * MV_BLOCK];
+        for i in 0..n {
+            st[i * MV_BLOCK..i * MV_BLOCK + n].copy_from_slice(&s[i * n..(i + 1) * n]);
+        }
+        let mut dr = vec![0.0f32; MV_BLOCK];
+        dr[..n].copy_from_slice(dinv_r);
+        let mut dc = vec![0.0f32; MV_BLOCK];
+        dc[..n].copy_from_slice(dinv_c);
+        let outs = artifact.execute(&[
+            InputValue::F32(&st),
+            InputValue::F32(&dr),
+            InputValue::F32(&dc),
+            InputValue::F32(&[flag]),
+        ])?;
+        let full = outs[0].to_vec::<f32>()?;
+        let mut out = vec![0.0f32; n * n];
+        for i in 0..n {
+            out[i * n..(i + 1) * n]
+                .copy_from_slice(&full[i * MV_BLOCK..i * MV_BLOCK + n]);
+        }
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // K-means assignment + partial sums
+    // ------------------------------------------------------------------
+
+    /// One k-means step over `points` (p, d) with `centers` (k, d).
+    /// Returns (assign (p,), sums (k, d), counts (k,)).
+    pub fn kmeans_step(
+        &self,
+        points: &[f32],
+        centers: &[f32],
+        p: usize,
+        k: usize,
+        d: usize,
+    ) -> Result<(Vec<i32>, Vec<f32>, Vec<f32>)> {
+        if self.backend == Backend::Native {
+            let mask = vec![1.0f32; p];
+            return Ok(native::kmeans_step(points, centers, &mask, p, k, d));
+        }
+        if d > PAD_DIM || k > KM_K {
+            return Err(Error::Runtime(format!(
+                "kmeans_step: d={d} (max {PAD_DIM}) or k={k} (max {KM_K}) too large"
+            )));
+        }
+        let artifact = self.artifact("kmeans_step")?;
+        // Pad centers: real ones zero-extended in dim, fake ones pushed to a
+        // far sentinel so no real point ever picks them.
+        let mut ct = vec![0.0f32; KM_K * PAD_DIM];
+        for ci in 0..KM_K {
+            if ci < k {
+                ct[ci * PAD_DIM..ci * PAD_DIM + d]
+                    .copy_from_slice(&centers[ci * d..(ci + 1) * d]);
+            } else {
+                ct[ci * PAD_DIM..(ci + 1) * PAD_DIM].fill(CENTER_SENTINEL);
+            }
+        }
+        let mut assign = vec![0i32; p];
+        let mut sums = vec![0.0f32; k * d];
+        let mut counts = vec![0.0f32; k];
+        let mut pt = vec![0.0f32; KM_PTS * PAD_DIM];
+        let mut mask = vec![0.0f32; KM_PTS];
+        for b in (0..p).step_by(KM_PTS) {
+            let pb = (p - b).min(KM_PTS);
+            pad_rows(&mut pt, &points[b * d..], pb, d, PAD_DIM);
+            mask.fill(0.0);
+            mask[..pb].fill(1.0);
+            let outs = artifact.execute(&[
+                InputValue::F32(&pt),
+                InputValue::F32(&ct),
+                InputValue::F32(&mask),
+            ])?;
+            let a = outs[0].to_vec::<i32>()?;
+            let s = outs[1].to_vec::<f32>()?;
+            let c = outs[2].to_vec::<f32>()?;
+            assign[b..b + pb].copy_from_slice(&a[..pb]);
+            for ci in 0..k {
+                counts[ci] += c[ci];
+                for t in 0..d {
+                    sums[ci * d + t] += s[ci * PAD_DIM + t];
+                }
+            }
+        }
+        Ok((assign, sums, counts))
+    }
+
+    // ------------------------------------------------------------------
+    // Row normalization
+    // ------------------------------------------------------------------
+
+    /// Row-wise L2 normalization of Z (r, d); zero rows stay zero.
+    pub fn normalize_rows(&self, z: &[f32], r: usize, d: usize) -> Result<Vec<f32>> {
+        if self.backend == Backend::Native {
+            return Ok(native::normalize_rows(z, r, d));
+        }
+        if d > PAD_DIM {
+            return Err(Error::Runtime(format!(
+                "normalize_rows: d={d} exceeds padded dim {PAD_DIM}"
+            )));
+        }
+        let artifact = self.artifact("normalize_rows")?;
+        let mut out = vec![0.0f32; r * d];
+        let mut zt = vec![0.0f32; NORM_ROWS * PAD_DIM];
+        for b in (0..r).step_by(NORM_ROWS) {
+            let rb = (r - b).min(NORM_ROWS);
+            pad_rows(&mut zt, &z[b * d..], rb, d, PAD_DIM);
+            let outs = artifact.execute(&[InputValue::F32(&zt)])?;
+            let tile = outs[0].to_vec::<f32>()?;
+            for i in 0..rb {
+                out[(b + i) * d..(b + i + 1) * d]
+                    .copy_from_slice(&tile[i * PAD_DIM..i * PAD_DIM + d]);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Pack `rows` rows of width `d` from `src` into `dst` (row width `pad_d`),
+/// zero-filling the remainder of `dst`.
+fn pad_rows(dst: &mut [f32], src: &[f32], rows: usize, d: usize, pad_d: usize) {
+    dst.fill(0.0);
+    for i in 0..rows {
+        dst[i * pad_d..i * pad_d + d].copy_from_slice(&src[i * d..(i + 1) * d]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_backend_runs_everything() {
+        let rt = KernelRuntime::native();
+        assert_eq!(rt.backend(), Backend::Native);
+        let x = vec![0.0, 0.0, 1.0, 0.0];
+        let s = rt.rbf_tile(&x, &x, 2, 2, 2, 1.0).unwrap();
+        assert!((s[0] - 1.0).abs() < 1e-6);
+        assert!((s[1] - (-1.0f32).exp()).abs() < 1e-6);
+
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(rt.matvec(&a, &[1.0, 1.0], 2, 2).unwrap(), vec![3.0, 7.0]);
+
+        let (assign, sums, counts) = rt
+            .kmeans_step(&[0.0, 0.0, 5.0, 5.0], &[0.0, 0.0, 5.0, 5.0], 2, 2, 2)
+            .unwrap();
+        assert_eq!(assign, vec![0, 1]);
+        assert_eq!(counts, vec![1.0, 1.0]);
+        assert_eq!(sums, vec![0.0, 0.0, 5.0, 5.0]);
+
+        let y = rt.normalize_rows(&[3.0, 4.0], 1, 2).unwrap();
+        assert!((y[0] - 0.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pad_rows_zero_fills() {
+        let mut dst = vec![9.0f32; 8];
+        pad_rows(&mut dst, &[1.0, 2.0, 3.0, 4.0], 2, 2, 4);
+        assert_eq!(dst, vec![1.0, 2.0, 0.0, 0.0, 3.0, 4.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn missing_artifact_dir_falls_back() {
+        let rt = KernelRuntime::auto(Path::new("/nonexistent/dir"));
+        assert_eq!(rt.backend(), Backend::Native);
+    }
+}

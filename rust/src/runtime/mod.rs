@@ -1,0 +1,23 @@
+//! XLA PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and exposes typed kernel entry points.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file` → compile →
+//! execute), never serialized protos — see DESIGN.md and
+//! `/opt/xla-example/README.md` for the version gotcha. Python never runs at
+//! request time: once `artifacts/` is built the Rust binary is
+//! self-contained, and if artifacts are missing the [`native`] fallback
+//! (identical math) keeps the system operational.
+
+pub mod artifact;
+pub mod executor;
+pub mod native;
+
+pub use artifact::{parse_manifest, Artifact, InputSpec, InputValue, ManifestEntry};
+pub use executor::{Backend, KernelRuntime};
+
+/// Default artifact directory, overridable via `PSCH_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("PSCH_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

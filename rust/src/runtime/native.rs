@@ -1,0 +1,189 @@
+//! Native Rust implementations of every AOT kernel (f32, same math as
+//! `python/compile/kernels/ref.py`).
+//!
+//! Two roles: (1) parity oracles — the XLA artifacts are asserted to match
+//! these bit-for-tolerance in tests; (2) fallback when `artifacts/` is
+//! missing or stale, so the coordinator always runs.
+
+/// S[i,j] = exp(-gamma * ||x_i - y_j||^2). x is (p, d), y is (q, d) row-major.
+pub fn rbf_block(x: &[f32], y: &[f32], p: usize, q: usize, d: usize, gamma: f32) -> Vec<f32> {
+    assert_eq!(x.len(), p * d);
+    assert_eq!(y.len(), q * d);
+    let mut out = vec![0.0f32; p * q];
+    for i in 0..p {
+        let xi = &x[i * d..(i + 1) * d];
+        for j in 0..q {
+            let yj = &y[j * d..(j + 1) * d];
+            let mut d2 = 0.0f32;
+            for t in 0..d {
+                let diff = xi[t] - yj[t];
+                d2 += diff * diff;
+            }
+            out[i * q + j] = (-gamma * d2).exp();
+        }
+    }
+    out
+}
+
+/// y = A v, A row-major (r, c).
+pub fn matvec_block(a: &[f32], v: &[f32], r: usize, c: usize) -> Vec<f32> {
+    assert_eq!(a.len(), r * c);
+    assert_eq!(v.len(), c);
+    let mut out = vec![0.0f32; r];
+    for i in 0..r {
+        let row = &a[i * c..(i + 1) * c];
+        let mut acc = 0.0f32;
+        for t in 0..c {
+            acc += row[t] * v[t];
+        }
+        out[i] = acc;
+    }
+    out
+}
+
+/// L tile = is_diag * I - diag(dinv_r) * S * diag(dinv_c). All (r, c) row-major.
+pub fn laplacian_block(
+    s: &[f32],
+    dinv_r: &[f32],
+    dinv_c: &[f32],
+    r: usize,
+    c: usize,
+    is_diag: f32,
+) -> Vec<f32> {
+    assert_eq!(s.len(), r * c);
+    let mut out = vec![0.0f32; r * c];
+    for i in 0..r {
+        for j in 0..c {
+            let eye = if i == j { is_diag } else { 0.0 };
+            out[i * c + j] = eye - dinv_r[i] * s[i * c + j] * dinv_c[j];
+        }
+    }
+    out
+}
+
+/// K-means step: returns (assign (p,), sums (k, d), counts (k,)).
+pub fn kmeans_step(
+    points: &[f32],
+    centers: &[f32],
+    mask: &[f32],
+    p: usize,
+    k: usize,
+    d: usize,
+) -> (Vec<i32>, Vec<f32>, Vec<f32>) {
+    assert_eq!(points.len(), p * d);
+    assert_eq!(centers.len(), k * d);
+    assert_eq!(mask.len(), p);
+    let mut assign = vec![0i32; p];
+    let mut sums = vec![0.0f32; k * d];
+    let mut counts = vec![0.0f32; k];
+    for i in 0..p {
+        let pi = &points[i * d..(i + 1) * d];
+        let mut best = 0usize;
+        let mut best_d2 = f32::INFINITY;
+        for c in 0..k {
+            let cc = &centers[c * d..(c + 1) * d];
+            let mut d2 = 0.0f32;
+            for t in 0..d {
+                let diff = pi[t] - cc[t];
+                d2 += diff * diff;
+            }
+            if d2 < best_d2 {
+                best_d2 = d2;
+                best = c;
+            }
+        }
+        assign[i] = best as i32;
+        if mask[i] != 0.0 {
+            counts[best] += mask[i];
+            for t in 0..d {
+                sums[best * d + t] += mask[i] * pi[t];
+            }
+        }
+    }
+    (assign, sums, counts)
+}
+
+/// Row-wise L2 normalization; zero rows stay zero. z is (r, d) row-major.
+pub fn normalize_rows(z: &[f32], r: usize, d: usize) -> Vec<f32> {
+    assert_eq!(z.len(), r * d);
+    let mut out = vec![0.0f32; r * d];
+    for i in 0..r {
+        let row = &z[i * d..(i + 1) * d];
+        let norm: f32 = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let inv = if norm == 0.0 { 0.0 } else { 1.0 / norm };
+        for t in 0..d {
+            out[i * d + t] = row[t] * inv;
+        }
+    }
+    out
+}
+
+/// Row sums of an (r, c) matrix.
+pub fn degree_rowsum(s: &[f32], r: usize, c: usize) -> Vec<f32> {
+    assert_eq!(s.len(), r * c);
+    (0..r)
+        .map(|i| s[i * c..(i + 1) * c].iter().sum())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rbf_identity_diag() {
+        // Distance 0 -> similarity 1 on the diagonal with x == y.
+        let x = vec![1.0, 2.0, 3.0, 4.0]; // 2 points, d=2
+        let s = rbf_block(&x, &x, 2, 2, 2, 0.5);
+        assert!((s[0] - 1.0).abs() < 1e-7);
+        assert!((s[3] - 1.0).abs() < 1e-7);
+        // Off-diagonal: d2 = 8, exp(-4).
+        assert!((s[1] - (-4.0f32).exp()).abs() < 1e-7);
+        assert_eq!(s[1], s[2]);
+    }
+
+    #[test]
+    fn matvec_small() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let v = vec![5.0, 6.0];
+        assert_eq!(matvec_block(&a, &v, 2, 2), vec![17.0, 39.0]);
+    }
+
+    #[test]
+    fn laplacian_tile_math() {
+        let s = vec![1.0, 0.5, 0.5, 1.0];
+        let dinv = vec![0.5, 0.5];
+        let l = laplacian_block(&s, &dinv, &dinv, 2, 2, 1.0);
+        assert!((l[0] - 0.75).abs() < 1e-7); // 1 - .5*1*.5
+        assert!((l[1] + 0.125).abs() < 1e-7); // -.5*.5*.5
+        let l_off = laplacian_block(&s, &dinv, &dinv, 2, 2, 0.0);
+        assert!((l_off[0] + 0.25).abs() < 1e-7); // no identity
+    }
+
+    #[test]
+    fn kmeans_assigns_nearest_and_masks() {
+        let points = vec![0.0, 0.0, 10.0, 10.0, 0.1, 0.1];
+        let centers = vec![0.0, 0.0, 10.0, 10.0];
+        let mask = vec![1.0, 1.0, 0.0]; // last point is padding
+        let (assign, sums, counts) = kmeans_step(&points, &centers, &mask, 3, 2, 2);
+        assert_eq!(assign, vec![0, 1, 0]); // assignment computed for padding too
+        assert_eq!(counts, vec![1.0, 1.0]); // ...but not counted
+        assert_eq!(&sums[..2], &[0.0, 0.0]);
+        assert_eq!(&sums[2..], &[10.0, 10.0]);
+    }
+
+    #[test]
+    fn normalize_rows_unit_norm_and_zero_row() {
+        let z = vec![3.0, 4.0, 0.0, 0.0];
+        let y = normalize_rows(&z, 2, 2);
+        assert!((y[0] - 0.6).abs() < 1e-7);
+        assert!((y[1] - 0.8).abs() < 1e-7);
+        assert_eq!(&y[2..], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn degree_rowsum_small() {
+        let s = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(degree_rowsum(&s, 2, 2), vec![3.0, 7.0]);
+    }
+}

@@ -1,0 +1,117 @@
+//! Normalized symmetric Laplacian L_sym = I − D^{-1/2} S D^{-1/2}.
+//!
+//! The paper's Alg. 4.1 step 3 writes `L = D^{-1/2} S D^{-1/2}` and then
+//! asks for the *k smallest* eigenvectors — consistent with L_sym (the k
+//! smallest of L_sym correspond to the k largest of the paper's normalized
+//! matrix; identical eigenvectors). DESIGN.md §7 records the convention.
+
+use crate::linalg::{CsrMatrix, DenseMatrix};
+
+/// d^{-1/2} per row of a similarity matrix (0 where the degree is 0).
+pub fn inv_sqrt_degrees(s: &CsrMatrix) -> Vec<f64> {
+    s.row_sums()
+        .into_iter()
+        .map(|d| if d > 0.0 { 1.0 / d.sqrt() } else { 0.0 })
+        .collect()
+}
+
+/// Sparse L_sym from a sparse similarity matrix.
+pub fn laplacian_sparse(s: &CsrMatrix) -> CsrMatrix {
+    let n = s.rows();
+    let dinv = inv_sqrt_degrees(s);
+    let mut rows: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n];
+    for i in 0..n {
+        let mut row: Vec<(u32, f64)> = Vec::new();
+        let mut has_diag = false;
+        for (j, v) in s.row(i) {
+            let ju = j as usize;
+            let mut val = -dinv[i] * v * dinv[ju];
+            if ju == i {
+                val += 1.0;
+                has_diag = true;
+            }
+            row.push((j, val));
+        }
+        if !has_diag {
+            row.push((i as u32, 1.0));
+        }
+        rows[i] = row;
+    }
+    CsrMatrix::from_rows(n, rows)
+}
+
+/// Dense L_sym (baseline path).
+pub fn laplacian_dense(s: &DenseMatrix) -> DenseMatrix {
+    let n = s.rows();
+    let degrees: Vec<f64> = (0..n).map(|i| s.row(i).iter().sum()).collect();
+    let dinv: Vec<f64> = degrees
+        .iter()
+        .map(|&d| if d > 0.0 { 1.0 / d.sqrt() } else { 0.0 })
+        .collect();
+    let mut l = DenseMatrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let eye = if i == j { 1.0 } else { 0.0 };
+            l[(i, j)] = eye - dinv[i] * s[(i, j)] * dinv[j];
+        }
+    }
+    l
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::jacobi_eigen;
+
+    fn block_similarity() -> CsrMatrix {
+        // Two disconnected cliques of 3 (unit weights + unit diagonal).
+        let mut trips = vec![];
+        for base in [0usize, 3] {
+            for a in 0..3 {
+                for b in 0..3 {
+                    trips.push((base + a, base + b, 1.0));
+                }
+            }
+        }
+        CsrMatrix::from_triplets(6, 6, &trips).unwrap()
+    }
+
+    #[test]
+    fn sparse_dense_agree() {
+        let s = block_similarity();
+        let ls = laplacian_sparse(&s);
+        let ld = laplacian_dense(&s.to_dense());
+        assert!(ls.to_dense().max_abs_diff(&ld) < 1e-12);
+    }
+
+    #[test]
+    fn laplacian_symmetric_psd() {
+        let s = block_similarity();
+        let l = laplacian_sparse(&s).to_dense();
+        assert!(l.is_symmetric(1e-12));
+        let (vals, _) = jacobi_eigen(&l).unwrap();
+        assert!(vals[0] > -1e-10, "L_sym is PSD: {vals:?}");
+        // Normalized Laplacian eigenvalues are <= 2.
+        assert!(*vals.last().unwrap() <= 2.0 + 1e-10);
+    }
+
+    #[test]
+    fn zero_eigenvalue_multiplicity_counts_components() {
+        let s = block_similarity();
+        let l = laplacian_sparse(&s).to_dense();
+        let (vals, _) = jacobi_eigen(&l).unwrap();
+        // Two connected components -> two (near-)zero eigenvalues (§3.2.2).
+        assert!(vals[0].abs() < 1e-10);
+        assert!(vals[1].abs() < 1e-10);
+        assert!(vals[2] > 0.5, "spectral gap: {vals:?}");
+    }
+
+    #[test]
+    fn isolated_vertex_handled() {
+        // Vertex 2 has no edges and no self-loop: degree 0.
+        let s = CsrMatrix::from_triplets(3, 3, &[(0, 1, 1.0), (1, 0, 1.0)]).unwrap();
+        let l = laplacian_sparse(&s);
+        assert_eq!(l.get(2, 2), 1.0, "isolated vertex gets unit diagonal");
+        assert_eq!(l.rows(), 3);
+    }
+}

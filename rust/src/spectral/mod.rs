@@ -1,0 +1,16 @@
+//! Spectral clustering: similarity, Laplacian, baseline solvers.
+//!
+//! The distributed pipeline lives in [`crate::coordinator`]; this module
+//! holds the math (shared with the MR jobs) and the single-machine baseline
+//! (the O(n³) comparator of paper §4.1).
+
+pub mod laplacian;
+pub mod similarity;
+pub mod single;
+
+pub use laplacian::{inv_sqrt_degrees, laplacian_dense, laplacian_sparse};
+pub use similarity::{adjacency_similarity, gamma_of_sigma, rbf_dense, rbf_sparse};
+pub use single::{
+    cluster_embedding, normalize_embedding, spectral_cluster_graph,
+    spectral_cluster_points, Eigensolver, SpectralParams, SpectralResult,
+};

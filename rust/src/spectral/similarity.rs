@@ -1,0 +1,105 @@
+//! Similarity matrix construction (paper §3.2.3 / Alg. 4.1 step 1).
+//!
+//! `S_ij = exp(-||x_i - x_j||² / 2σ²)`, then sparsified: entries below
+//! `epsilon` are dropped ("and then sparse it"). The single-machine versions
+//! here are the oracles the distributed phase-1 job is tested against.
+
+use crate::linalg::{CsrMatrix, DenseMatrix};
+
+/// gamma = 1 / (2 sigma²) — the exponent factor the kernels take.
+pub fn gamma_of_sigma(sigma: f64) -> f64 {
+    1.0 / (2.0 * sigma * sigma)
+}
+
+/// Dense RBF similarity matrix (O(n² d), baseline only).
+pub fn rbf_dense(points: &[Vec<f64>], sigma: f64) -> DenseMatrix {
+    let n = points.len();
+    let gamma = gamma_of_sigma(sigma);
+    let mut s = DenseMatrix::zeros(n, n);
+    for i in 0..n {
+        s[(i, i)] = 1.0;
+        for j in (i + 1)..n {
+            let d2 = crate::linalg::vector::sq_dist(&points[i], &points[j]);
+            let v = (-gamma * d2).exp();
+            s[(i, j)] = v;
+            s[(j, i)] = v;
+        }
+    }
+    s
+}
+
+/// Sparse RBF similarity: entries < `epsilon` dropped (diagonal kept).
+pub fn rbf_sparse(points: &[Vec<f64>], sigma: f64, epsilon: f64) -> CsrMatrix {
+    let n = points.len();
+    let gamma = gamma_of_sigma(sigma);
+    let mut rows: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n];
+    for i in 0..n {
+        rows[i].push((i as u32, 1.0));
+        for j in (i + 1)..n {
+            let d2 = crate::linalg::vector::sq_dist(&points[i], &points[j]);
+            let v = (-gamma * d2).exp();
+            if v >= epsilon {
+                rows[i].push((j as u32, v));
+                rows[j].push((i as u32, v));
+            }
+        }
+    }
+    CsrMatrix::from_rows(n, rows)
+}
+
+/// Similarity from a weighted graph adjacency (graph-input mode): the edge
+/// weight IS the similarity; unit diagonal added so no degree vanishes.
+pub fn adjacency_similarity(n: usize, triplets: &[(usize, usize, f64)]) -> CsrMatrix {
+    let mut all: Vec<(usize, usize, f64)> = triplets.to_vec();
+    for i in 0..n {
+        all.push((i, i, 1.0));
+    }
+    CsrMatrix::from_triplets(n, n, &all).expect("adjacency triplets in range")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts() -> Vec<Vec<f64>> {
+        vec![vec![0.0, 0.0], vec![1.0, 0.0], vec![10.0, 10.0]]
+    }
+
+    #[test]
+    fn dense_matches_formula() {
+        let s = rbf_dense(&pts(), 1.0);
+        assert_eq!(s[(0, 0)], 1.0);
+        assert!((s[(0, 1)] - (-0.5f64).exp()).abs() < 1e-12);
+        assert_eq!(s[(0, 1)], s[(1, 0)]);
+        assert!(s[(0, 2)] < 1e-40, "far points ~0 similarity");
+        assert!(s.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn sigma_controls_bandwidth() {
+        let narrow = rbf_dense(&pts(), 0.3);
+        let wide = rbf_dense(&pts(), 3.0);
+        assert!(narrow[(0, 1)] < wide[(0, 1)]);
+    }
+
+    #[test]
+    fn sparse_drops_small_entries_keeps_diag() {
+        let s = rbf_sparse(&pts(), 1.0, 1e-3);
+        assert_eq!(s.get(0, 0), 1.0);
+        assert!(s.get(0, 1) > 0.0);
+        assert_eq!(s.get(0, 2), 0.0, "tiny entry dropped");
+        assert!(s.is_symmetric(1e-15));
+        // Dense and sparse agree on surviving entries.
+        let d = rbf_dense(&pts(), 1.0);
+        assert!((s.get(0, 1) - d[(0, 1)]).abs() < 1e-15);
+    }
+
+    #[test]
+    fn adjacency_similarity_symmetric_with_diag() {
+        let s = adjacency_similarity(3, &[(0, 1, 2.0), (1, 0, 2.0)]);
+        assert_eq!(s.get(0, 1), 2.0);
+        assert_eq!(s.get(1, 0), 2.0);
+        assert_eq!(s.get(2, 2), 1.0);
+        assert!(s.is_symmetric(0.0));
+    }
+}

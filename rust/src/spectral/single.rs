@@ -1,0 +1,239 @@
+//! Single-machine spectral clustering (paper Alg. 4.1) — the O(n³)
+//! comparator the parallel pipeline is benchmarked against, and the oracle
+//! its results are validated against.
+
+use crate::error::Result;
+use crate::kmeans::{lloyd, Init};
+use crate::linalg::{jacobi_eigen, lanczos_smallest, LanczosOptions};
+
+use super::laplacian::{laplacian_dense, laplacian_sparse};
+use super::similarity::{rbf_dense, rbf_sparse};
+
+/// Which eigensolver the baseline uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Eigensolver {
+    /// Dense Jacobi — O(n³), the "traditional" cost the paper cites.
+    DenseJacobi,
+    /// Lanczos on the sparse Laplacian (single machine, no MapReduce).
+    Lanczos,
+}
+
+/// Parameters of a spectral clustering run.
+#[derive(Debug, Clone)]
+pub struct SpectralParams {
+    /// Number of clusters.
+    pub k: usize,
+    /// RBF bandwidth.
+    pub sigma: f64,
+    /// Sparsification threshold.
+    pub epsilon: f64,
+    /// Lanczos subspace cap.
+    pub lanczos_steps: usize,
+    /// K-means iteration cap.
+    pub kmeans_iters: usize,
+    /// K-means tolerance.
+    pub kmeans_tol: f64,
+    /// Seed (Lanczos start vector, k-means init).
+    pub seed: u64,
+}
+
+impl Default for SpectralParams {
+    fn default() -> Self {
+        let a = crate::config::AlgoConfig::default();
+        Self {
+            k: a.k,
+            sigma: a.sigma,
+            epsilon: a.epsilon,
+            lanczos_steps: a.lanczos_steps,
+            kmeans_iters: a.kmeans_iters,
+            kmeans_tol: a.kmeans_tol,
+            seed: a.seed,
+        }
+    }
+}
+
+/// Output of spectral clustering.
+#[derive(Debug, Clone)]
+pub struct SpectralResult {
+    /// Cluster label per point.
+    pub labels: Vec<usize>,
+    /// The k smallest Laplacian eigenvalues.
+    pub eigenvalues: Vec<f64>,
+    /// The row-normalized spectral embedding Y (n × k).
+    pub embedding: Vec<Vec<f64>>,
+}
+
+/// Row-normalize an n×k embedding (Alg. 4.1 step 5); zero rows stay zero.
+pub fn normalize_embedding(z: &mut [Vec<f64>]) {
+    for row in z.iter_mut() {
+        let norm: f64 = row.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm > 0.0 {
+            for x in row.iter_mut() {
+                *x /= norm;
+            }
+        }
+    }
+}
+
+/// Cluster the rows of an embedding with k-means (Alg. 4.1 step 6).
+pub fn cluster_embedding(
+    embedding: &[Vec<f64>],
+    k: usize,
+    iters: usize,
+    tol: f64,
+    seed: u64,
+) -> Vec<usize> {
+    lloyd(embedding, k, iters, tol, Init::PlusPlus, seed).labels
+}
+
+/// Full single-machine spectral clustering of a point set.
+pub fn spectral_cluster_points(
+    points: &[Vec<f64>],
+    params: &SpectralParams,
+    solver: Eigensolver,
+) -> Result<SpectralResult> {
+    let n = points.len();
+    let (eigenvalues, mut z) = match solver {
+        Eigensolver::DenseJacobi => {
+            let s = rbf_dense(points, params.sigma);
+            let l = laplacian_dense(&s);
+            let (vals, vecs) = jacobi_eigen(&l)?;
+            let z: Vec<Vec<f64>> = (0..n)
+                .map(|i| (0..params.k).map(|c| vecs[(i, c)]).collect())
+                .collect();
+            (vals[..params.k].to_vec(), z)
+        }
+        Eigensolver::Lanczos => {
+            let s = rbf_sparse(points, params.sigma, params.epsilon);
+            let l = laplacian_sparse(&s);
+            let opts = LanczosOptions {
+                max_steps: params.lanczos_steps.min(n),
+                seed: params.seed,
+                ..Default::default()
+            };
+            let r = lanczos_smallest(n, params.k, &opts, |v| l.spmv(v))?;
+            (r.eigenvalues, r.eigenvectors)
+        }
+    };
+    normalize_embedding(&mut z);
+    let labels = cluster_embedding(
+        &z,
+        params.k,
+        params.kmeans_iters,
+        params.kmeans_tol,
+        params.seed,
+    );
+    Ok(SpectralResult { labels, eigenvalues, embedding: z })
+}
+
+/// Spectral clustering of a weighted graph (similarity = adjacency).
+pub fn spectral_cluster_graph(
+    n: usize,
+    adjacency: &[(usize, usize, f64)],
+    params: &SpectralParams,
+) -> Result<SpectralResult> {
+    let s = super::similarity::adjacency_similarity(n, adjacency);
+    let l = laplacian_sparse(&s);
+    let opts = LanczosOptions {
+        max_steps: params.lanczos_steps.min(n),
+        seed: params.seed,
+        ..Default::default()
+    };
+    let r = lanczos_smallest(n, params.k, &opts, |v| l.spmv(v))?;
+    let mut z = r.eigenvectors;
+    normalize_embedding(&mut z);
+    let labels = cluster_embedding(
+        &z,
+        params.k,
+        params.kmeans_iters,
+        params.kmeans_tol,
+        params.seed,
+    );
+    Ok(SpectralResult { labels, eigenvalues: r.eigenvalues, embedding: z })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gaussian_blobs, planted_graph, two_rings};
+    use crate::eval::nmi;
+
+    #[test]
+    fn blobs_both_solvers_agree_with_truth() {
+        let ps = gaussian_blobs(120, 3, 2, 0.3, 12.0, 3);
+        let params = SpectralParams { k: 3, sigma: 2.0, ..Default::default() };
+        for solver in [Eigensolver::DenseJacobi, Eigensolver::Lanczos] {
+            let r = spectral_cluster_points(&ps.points, &params, solver).unwrap();
+            let score = nmi(&ps.labels, &r.labels);
+            assert!(score > 0.95, "{solver:?}: nmi={score}");
+        }
+    }
+
+    #[test]
+    fn rings_solved_by_spectral_not_kmeans() {
+        // The paper's core motivation (§3.1): arbitrary-shape clusters.
+        let ps = two_rings(240, 1.0, 6.0, 0.08, 3);
+        let params = SpectralParams {
+            k: 2,
+            sigma: 0.5,
+            lanczos_steps: 80,
+            ..Default::default()
+        };
+        let r =
+            spectral_cluster_points(&ps.points, &params, Eigensolver::Lanczos).unwrap();
+        let spectral_score = nmi(&ps.labels, &r.labels);
+        let km = crate::kmeans::lloyd(
+            &ps.points, 2, 100, 1e-9, crate::kmeans::Init::PlusPlus, 5,
+        );
+        let kmeans_score = nmi(&ps.labels, &km.labels);
+        assert!(
+            spectral_score > 0.9,
+            "spectral should solve rings: {spectral_score}"
+        );
+        assert!(
+            spectral_score > kmeans_score + 0.5,
+            "spectral {spectral_score} vs kmeans {kmeans_score}"
+        );
+    }
+
+    #[test]
+    fn planted_graph_communities_recovered() {
+        let topo = planted_graph(200, 600, 4, 0.02, 7);
+        let r = spectral_cluster_graph(
+            200,
+            &topo.adjacency_triplets(),
+            &SpectralParams { k: 4, lanczos_steps: 80, ..Default::default() },
+        )
+        .unwrap();
+        let score = nmi(&topo.labels(), &r.labels);
+        assert!(score > 0.8, "community recovery nmi={score}");
+    }
+
+    #[test]
+    fn embedding_rows_unit_norm() {
+        let ps = gaussian_blobs(60, 2, 2, 0.3, 10.0, 1);
+        let r = spectral_cluster_points(
+            &ps.points,
+            &SpectralParams { k: 2, ..Default::default() },
+            Eigensolver::Lanczos,
+        )
+        .unwrap();
+        for row in &r.embedding {
+            let n: f64 = row.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((n - 1.0).abs() < 1e-9 || n == 0.0, "row norm {n}");
+        }
+    }
+
+    #[test]
+    fn smallest_eigenvalue_near_zero() {
+        let ps = gaussian_blobs(80, 2, 2, 0.3, 10.0, 5);
+        let r = spectral_cluster_points(
+            &ps.points,
+            &SpectralParams { k: 2, ..Default::default() },
+            Eigensolver::Lanczos,
+        )
+        .unwrap();
+        // lambda_1(L_sym) = 0 always.
+        assert!(r.eigenvalues[0].abs() < 1e-8, "{:?}", r.eigenvalues);
+    }
+}

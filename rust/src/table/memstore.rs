@@ -1,0 +1,253 @@
+//! MemStore + immutable sorted runs: HBase's write path in miniature.
+//!
+//! Writes land in a sorted in-memory map (the memstore); when it exceeds the
+//! flush threshold it is frozen into an immutable sorted run (HBase's HFile).
+//! Reads consult the memstore first, then runs newest-first. A background
+//! "compaction" merges runs when too many accumulate.
+
+use std::collections::BTreeMap;
+
+/// Row key bytes (big-endian for numeric keys keeps scan order numeric).
+pub type Key = Vec<u8>;
+/// Cell value bytes.
+pub type Value = Vec<u8>;
+
+/// Immutable sorted run (flushed memstore).
+#[derive(Debug, Clone)]
+pub struct SortedRun {
+    entries: Vec<(Key, Value)>, // sorted by key, unique keys
+}
+
+impl SortedRun {
+    /// Freeze a memstore snapshot into a run.
+    pub fn from_map(map: BTreeMap<Key, Value>) -> Self {
+        Self { entries: map.into_iter().collect() }
+    }
+
+    /// Point lookup (binary search).
+    pub fn get(&self, key: &[u8]) -> Option<&Value> {
+        self.entries
+            .binary_search_by(|(k, _)| k.as_slice().cmp(key))
+            .ok()
+            .map(|i| &self.entries[i].1)
+    }
+
+    /// Entries in [start, end).
+    pub fn range(&self, start: &[u8], end: &[u8]) -> &[(Key, Value)] {
+        let lo = self.entries.partition_point(|(k, _)| k.as_slice() < start);
+        let hi = self.entries.partition_point(|(k, _)| k.as_slice() < end);
+        &self.entries[lo..hi]
+    }
+
+    /// Number of cells.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Is the run empty?
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Merge newest-wins: `self` is newer than `older`.
+    pub fn merge_over(self, older: SortedRun) -> SortedRun {
+        let mut out = Vec::with_capacity(self.entries.len() + older.entries.len());
+        let (mut i, mut j) = (0, 0);
+        while i < self.entries.len() && j < older.entries.len() {
+            match self.entries[i].0.cmp(&older.entries[j].0) {
+                std::cmp::Ordering::Less => {
+                    out.push(self.entries[i].clone());
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    out.push(older.entries[j].clone());
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    out.push(self.entries[i].clone()); // newer wins
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        out.extend_from_slice(&self.entries[i..]);
+        out.extend_from_slice(&older.entries[j..]);
+        SortedRun { entries: out }
+    }
+}
+
+/// Write buffer + runs for one store (one region's column data).
+#[derive(Debug, Default)]
+pub struct Store {
+    memstore: BTreeMap<Key, Value>,
+    memstore_bytes: usize,
+    runs: Vec<SortedRun>, // newest last
+}
+
+/// Flush memstore when it exceeds this many bytes.
+pub const FLUSH_THRESHOLD: usize = 16 << 20; // 16 MiB
+/// Compact when this many runs accumulate.
+pub const COMPACT_RUNS: usize = 4;
+
+impl Store {
+    /// Upsert a cell.
+    pub fn put(&mut self, key: Key, value: Value) {
+        self.memstore_bytes += key.len() + value.len();
+        self.memstore.insert(key, value);
+        if self.memstore_bytes >= FLUSH_THRESHOLD {
+            self.flush();
+        }
+    }
+
+    /// Point lookup: memstore, then runs newest-first.
+    pub fn get(&self, key: &[u8]) -> Option<Value> {
+        if let Some(v) = self.memstore.get(key) {
+            return Some(v.clone());
+        }
+        for run in self.runs.iter().rev() {
+            if let Some(v) = run.get(key) {
+                return Some(v.clone());
+            }
+        }
+        None
+    }
+
+    /// Freeze the memstore into a run (no-op when empty); maybe compact.
+    pub fn flush(&mut self) {
+        if self.memstore.is_empty() {
+            return;
+        }
+        let map = std::mem::take(&mut self.memstore);
+        self.memstore_bytes = 0;
+        self.runs.push(SortedRun::from_map(map));
+        if self.runs.len() >= COMPACT_RUNS {
+            self.compact();
+        }
+    }
+
+    /// Merge all runs into one (newest-wins).
+    pub fn compact(&mut self) {
+        let mut merged: Option<SortedRun> = None;
+        // Oldest first; each newer run merges over the accumulated older.
+        for run in self.runs.drain(..) {
+            merged = Some(match merged {
+                None => run,
+                Some(older) => run.merge_over(older),
+            });
+        }
+        if let Some(m) = merged {
+            self.runs.push(m);
+        }
+    }
+
+    /// Sorted scan of [start, end): memstore merged over runs, newest-wins.
+    pub fn scan(&self, start: &[u8], end: &[u8]) -> Vec<(Key, Value)> {
+        let mut out: BTreeMap<Key, Value> = BTreeMap::new();
+        for run in &self.runs {
+            // Older first; later inserts overwrite.
+            for (k, v) in run.range(start, end) {
+                out.insert(k.clone(), v.clone());
+            }
+        }
+        for (k, v) in self
+            .memstore
+            .range::<[u8], _>((
+                std::ops::Bound::Included(start),
+                std::ops::Bound::Excluded(end),
+            ))
+        {
+            out.insert(k.clone(), v.clone());
+        }
+        out.into_iter().collect()
+    }
+
+    /// Total distinct keys visible (approximate: counts post-merge scan).
+    pub fn approx_len(&self) -> usize {
+        self.memstore.len() + self.runs.iter().map(|r| r.len()).sum::<usize>()
+    }
+
+    /// Bytes buffered in the memstore (flush trigger state).
+    pub fn memstore_bytes(&self) -> usize {
+        self.memstore_bytes
+    }
+
+    /// Number of runs (compaction trigger state).
+    pub fn run_count(&self) -> usize {
+        self.runs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(s: &str) -> Key {
+        s.as_bytes().to_vec()
+    }
+
+    #[test]
+    fn put_get_overwrite() {
+        let mut s = Store::default();
+        s.put(k("a"), vec![1]);
+        s.put(k("a"), vec![2]);
+        assert_eq!(s.get(b"a"), Some(vec![2]));
+        assert_eq!(s.get(b"b"), None);
+    }
+
+    #[test]
+    fn flush_preserves_reads() {
+        let mut s = Store::default();
+        s.put(k("x"), vec![1]);
+        s.flush();
+        assert_eq!(s.run_count(), 1);
+        assert_eq!(s.get(b"x"), Some(vec![1]));
+        // Overwrite after flush: memstore wins.
+        s.put(k("x"), vec![9]);
+        assert_eq!(s.get(b"x"), Some(vec![9]));
+        s.flush();
+        assert_eq!(s.get(b"x"), Some(vec![9]));
+    }
+
+    #[test]
+    fn newest_run_wins_after_compaction() {
+        let mut s = Store::default();
+        for round in 0..COMPACT_RUNS as u8 {
+            s.put(k("key"), vec![round]);
+            s.flush();
+        }
+        // COMPACT_RUNS flushes triggered a compaction down to 1 run.
+        assert_eq!(s.run_count(), 1);
+        assert_eq!(s.get(b"key"), Some(vec![COMPACT_RUNS as u8 - 1]));
+    }
+
+    #[test]
+    fn scan_merges_and_orders() {
+        let mut s = Store::default();
+        s.put(k("b"), vec![1]);
+        s.put(k("d"), vec![2]);
+        s.flush();
+        s.put(k("a"), vec![3]);
+        s.put(k("c"), vec![4]);
+        s.put(k("b"), vec![5]); // overwrite flushed value
+        let all = s.scan(b"a", b"z");
+        let keys: Vec<&[u8]> = all.iter().map(|(k, _)| k.as_slice()).collect();
+        assert_eq!(keys, vec![b"a".as_slice(), b"b", b"c", b"d"]);
+        assert_eq!(all[1].1, vec![5]);
+        // Bounded scan.
+        let mid = s.scan(b"b", b"d");
+        assert_eq!(mid.len(), 2);
+    }
+
+    #[test]
+    fn sorted_run_range_bounds() {
+        let mut m = BTreeMap::new();
+        for i in 0..10u8 {
+            m.insert(vec![i], vec![i]);
+        }
+        let run = SortedRun::from_map(m);
+        assert_eq!(run.range(&[3], &[7]).len(), 4);
+        assert_eq!(run.range(&[0], &[0]).len(), 0);
+        assert!(run.get(&[5]).is_some());
+        assert!(run.get(&[99]).is_none());
+    }
+}

@@ -1,0 +1,325 @@
+//! Mini-HBase: a sorted, region-partitioned distributed table (paper §2.3).
+//!
+//! The paper stores the similarity matrix, the row-partitioned Laplacian and
+//! the k-means state in HBase tables keyed by row index. This module provides
+//! that: tables are split into key-range **regions** (each pinned to a slave,
+//! which is how the MapReduce jobs get locality), writes go through a
+//! memstore + sorted-run store per region, and scans merge across them.
+//! Regions split automatically when they grow past a threshold.
+
+pub mod memstore;
+pub mod region;
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::error::{Error, Result};
+
+pub use memstore::{Key, Value};
+pub use region::Region;
+
+/// A handle to the table service. Cheap to clone (shared state).
+#[derive(Clone)]
+pub struct TableService {
+    inner: Arc<TableServiceInner>,
+}
+
+struct TableServiceInner {
+    tables: RwLock<HashMap<String, Arc<Table>>>,
+    /// Number of slaves regions get assigned to (round-robin).
+    slaves: usize,
+}
+
+impl TableService {
+    /// New service over `slaves` region servers.
+    pub fn new(slaves: usize) -> Self {
+        Self {
+            inner: Arc::new(TableServiceInner {
+                tables: RwLock::new(HashMap::new()),
+                slaves: slaves.max(1),
+            }),
+        }
+    }
+
+    /// Create a table pre-split into `regions` key ranges over u64 row keys.
+    pub fn create(&self, name: &str, regions: usize) -> Result<Arc<Table>> {
+        let mut tables = self.inner.tables.write().unwrap();
+        if tables.contains_key(name) {
+            return Err(Error::Table(format!("table exists: {name}")));
+        }
+        let table = Arc::new(Table::pre_split(name, regions.max(1), self.inner.slaves));
+        tables.insert(name.to_string(), table.clone());
+        Ok(table)
+    }
+
+    /// Open an existing table.
+    pub fn open(&self, name: &str) -> Result<Arc<Table>> {
+        self.inner
+            .tables
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Error::Table(format!("no such table: {name}")))
+    }
+
+    /// Drop a table.
+    pub fn drop_table(&self, name: &str) -> Result<()> {
+        self.inner
+            .tables
+            .write()
+            .unwrap()
+            .remove(name)
+            .map(|_| ())
+            .ok_or_else(|| Error::Table(format!("no such table: {name}")))
+    }
+
+    /// List table names (sorted).
+    pub fn list(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.inner.tables.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+/// One table: ordered regions over the row-key space.
+pub struct Table {
+    /// Table name.
+    pub name: String,
+    regions: RwLock<Vec<Arc<Mutex<Region>>>>,
+    slaves: usize,
+}
+
+impl Table {
+    /// Pre-split into `n` regions uniform over the u64 big-endian key space.
+    fn pre_split(name: &str, n: usize, slaves: usize) -> Self {
+        let mut regions = Vec::with_capacity(n);
+        for r in 0..n {
+            let start = if r == 0 {
+                vec![]
+            } else {
+                split_point(r as u64, n as u64)
+            };
+            let end = if r == n - 1 {
+                vec![0xffu8; 9] // past any 8-byte key
+            } else {
+                split_point(r as u64 + 1, n as u64)
+            };
+            regions.push(Arc::new(Mutex::new(Region::new(start, end, r % slaves))));
+        }
+        Self { name: name.to_string(), regions: RwLock::new(regions), slaves }
+    }
+
+    /// Upsert one cell.
+    pub fn put(&self, key: Key, value: Value) -> Result<()> {
+        let region = self.region_for(&key)?;
+        let needs_split = {
+            let mut r = region.lock().unwrap();
+            r.put(key, value);
+            r.should_split()
+        };
+        if needs_split {
+            self.split_region(&region)?;
+        }
+        Ok(())
+    }
+
+    /// Batched upsert: amortizes the region lookup and lock over runs of
+    /// keys that land in the same region (phase-1 writes whole row chunks);
+    /// splits are checked once per run instead of per cell.
+    pub fn put_batch(&self, cells: Vec<(Key, Value)>) -> Result<()> {
+        let mut it = cells.into_iter().peekable();
+        while let Some((k, v)) = it.next() {
+            let region = self.region_for(&k)?;
+            let needs_split = {
+                let mut r = region.lock().unwrap();
+                r.put(k, v);
+                // Drain the run of subsequent keys owned by this region.
+                while let Some((nk, _)) = it.peek() {
+                    if !r.contains(nk) {
+                        break;
+                    }
+                    let (nk, nv) = it.next().unwrap();
+                    r.put(nk, nv);
+                }
+                r.should_split()
+            };
+            if needs_split {
+                self.split_region(&region)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Point lookup.
+    pub fn get(&self, key: &[u8]) -> Result<Option<Value>> {
+        let region = self.region_for(key)?;
+        let r = region.lock().unwrap();
+        Ok(r.get(key))
+    }
+
+    /// Sorted scan of [start, end) across regions.
+    pub fn scan(&self, start: &[u8], end: &[u8]) -> Vec<(Key, Value)> {
+        let regions = self.regions.read().unwrap().clone();
+        let mut out = Vec::new();
+        for region in regions {
+            let r = region.lock().unwrap();
+            if r.end_key() <= start || r.start_key() >= end {
+                continue;
+            }
+            out.extend(r.scan(start, end));
+        }
+        out
+    }
+
+    /// Scan an entire table.
+    pub fn scan_all(&self) -> Vec<(Key, Value)> {
+        self.scan(&[], &[0xffu8; 9])
+    }
+
+    /// Region count (grows via splits).
+    pub fn region_count(&self) -> usize {
+        self.regions.read().unwrap().len()
+    }
+
+    /// (start_key, slave) of every region, sorted — the locality map the
+    /// MapReduce scheduler uses to co-locate map tasks with their rows.
+    pub fn region_assignments(&self) -> Vec<(Key, usize)> {
+        self.regions
+            .read()
+            .unwrap()
+            .iter()
+            .map(|r| {
+                let g = r.lock().unwrap();
+                (g.start_key().to_vec(), g.slave())
+            })
+            .collect()
+    }
+
+    fn region_for(&self, key: &[u8]) -> Result<Arc<Mutex<Region>>> {
+        let regions = self.regions.read().unwrap();
+        for region in regions.iter() {
+            let r = region.lock().unwrap();
+            if r.contains(key) {
+                return Ok(region.clone());
+            }
+        }
+        Err(Error::Table(format!(
+            "table {}: no region for key {key:02x?}",
+            self.name
+        )))
+    }
+
+    /// Split one region at its midpoint key; the new region is assigned to
+    /// the next slave round-robin (HBase's balancer in one line).
+    fn split_region(&self, region: &Arc<Mutex<Region>>) -> Result<()> {
+        let mut regions = self.regions.write().unwrap();
+        let idx = regions
+            .iter()
+            .position(|r| Arc::ptr_eq(r, region))
+            .ok_or_else(|| Error::Table("region vanished during split".into()))?;
+        let new_region = {
+            let mut r = region.lock().unwrap();
+            let next_slave = (r.slave() + 1) % self.slaves;
+            match r.split(next_slave) {
+                Some(nr) => nr,
+                None => return Ok(()), // nothing to split
+            }
+        };
+        regions.insert(idx + 1, Arc::new(Mutex::new(new_region)));
+        Ok(())
+    }
+}
+
+/// The i-th of n uniform split points over the 8-byte big-endian key space.
+fn split_point(i: u64, n: u64) -> Vec<u8> {
+    let point = ((i as u128 * (u64::MAX as u128 + 1)) / n as u128) as u64;
+    point.to_be_bytes().to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::encode_u64;
+
+    #[test]
+    fn create_open_drop() {
+        let svc = TableService::new(4);
+        svc.create("t", 4).unwrap();
+        assert!(svc.create("t", 1).is_err());
+        assert!(svc.open("t").is_ok());
+        assert_eq!(svc.list(), vec!["t".to_string()]);
+        svc.drop_table("t").unwrap();
+        assert!(svc.open("t").is_err());
+        assert!(svc.drop_table("t").is_err());
+    }
+
+    #[test]
+    fn put_get_across_regions() {
+        let svc = TableService::new(3);
+        let t = svc.create("m", 4).unwrap();
+        for i in 0..1000u64 {
+            t.put(encode_u64(i).to_vec(), vec![(i % 256) as u8]).unwrap();
+        }
+        for i in (0..1000u64).step_by(97) {
+            assert_eq!(
+                t.get(&encode_u64(i)).unwrap(),
+                Some(vec![(i % 256) as u8]),
+                "key {i}"
+            );
+        }
+        assert_eq!(t.get(&encode_u64(5000)).unwrap(), None);
+    }
+
+    #[test]
+    fn scan_is_globally_sorted() {
+        let svc = TableService::new(2);
+        let t = svc.create("s", 4).unwrap();
+        // Insert in reverse order.
+        for i in (0..500u64).rev() {
+            t.put(encode_u64(i).to_vec(), vec![]).unwrap();
+        }
+        let all = t.scan_all();
+        assert_eq!(all.len(), 500);
+        for w in all.windows(2) {
+            assert!(w[0].0 < w[1].0, "scan out of order");
+        }
+        // Bounded scan decodes to the right half-open range.
+        let part = t.scan(&encode_u64(100), &encode_u64(200));
+        assert_eq!(part.len(), 100);
+        assert_eq!(part[0].0, encode_u64(100).to_vec());
+    }
+
+    #[test]
+    fn regions_split_under_load() {
+        let svc = TableService::new(2);
+        let t = svc.create("grow", 1).unwrap();
+        let before = t.region_count();
+        // Write enough bytes to trip the split threshold.
+        let big = vec![0u8; 1024];
+        for i in 0..(2 * region::SPLIT_THRESHOLD / 1024 + 16) as u64 {
+            t.put(encode_u64(i).to_vec(), big.clone()).unwrap();
+        }
+        assert!(t.region_count() > before, "no split happened");
+        // All data still visible post-split.
+        let n = 2 * region::SPLIT_THRESHOLD / 1024 + 16;
+        assert_eq!(t.scan_all().len(), n);
+    }
+
+    #[test]
+    fn region_assignments_cover_slaves() {
+        let svc = TableService::new(4);
+        let t = svc.create("a", 8).unwrap();
+        let slaves: std::collections::HashSet<usize> =
+            t.region_assignments().iter().map(|&(_, s)| s).collect();
+        assert_eq!(slaves.len(), 4, "regions not spread over all slaves");
+    }
+
+    #[test]
+    fn split_points_monotone() {
+        let pts: Vec<Vec<u8>> = (1..8).map(|i| split_point(i, 8)).collect();
+        for w in pts.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! A region: one contiguous key range of a table, pinned to a slave.
+
+use super::memstore::{Key, Store, Value};
+
+/// Split a region once it holds this many bytes.
+pub const SPLIT_THRESHOLD: usize = 32 << 20; // 32 MiB
+
+/// One key-range shard of a table.
+#[derive(Debug)]
+pub struct Region {
+    start: Key,
+    end: Key, // exclusive
+    store: Store,
+    bytes: usize,
+    slave: usize,
+}
+
+impl Region {
+    /// New empty region serving [start, end) on `slave`.
+    pub fn new(start: Key, end: Key, slave: usize) -> Self {
+        Self { start, end, store: Store::default(), bytes: 0, slave }
+    }
+
+    /// Inclusive start key.
+    pub fn start_key(&self) -> &[u8] {
+        &self.start
+    }
+
+    /// Exclusive end key.
+    pub fn end_key(&self) -> &[u8] {
+        &self.end
+    }
+
+    /// Hosting slave id.
+    pub fn slave(&self) -> usize {
+        self.slave
+    }
+
+    /// Does this region own `key`?
+    pub fn contains(&self, key: &[u8]) -> bool {
+        self.start.as_slice() <= key && key < self.end.as_slice()
+    }
+
+    /// Upsert.
+    pub fn put(&mut self, key: Key, value: Value) {
+        debug_assert!(self.contains(&key));
+        self.bytes += key.len() + value.len();
+        self.store.put(key, value);
+    }
+
+    /// Point lookup.
+    pub fn get(&self, key: &[u8]) -> Option<Value> {
+        self.store.get(key)
+    }
+
+    /// Sorted scan clipped to this region's range.
+    pub fn scan(&self, start: &[u8], end: &[u8]) -> Vec<(Key, Value)> {
+        let lo = if start < self.start.as_slice() { &self.start } else { start };
+        let hi = if end > self.end.as_slice() { &self.end } else { end };
+        if lo >= hi {
+            return vec![];
+        }
+        self.store.scan(lo, hi)
+    }
+
+    /// Has this region outgrown the split threshold?
+    pub fn should_split(&self) -> bool {
+        self.bytes >= SPLIT_THRESHOLD
+    }
+
+    /// Split at the median visible key; returns the new upper region (on
+    /// `new_slave`), or None when there is nothing meaningful to split.
+    pub fn split(&mut self, new_slave: usize) -> Option<Region> {
+        let all = self.store.scan(&self.start, &self.end);
+        if all.len() < 2 {
+            return None;
+        }
+        let mid_key = all[all.len() / 2].0.clone();
+        if mid_key == self.start {
+            return None;
+        }
+        let mut upper = Region::new(mid_key.clone(), std::mem::take(&mut self.end), new_slave);
+        self.end = mid_key;
+        let mut lower_store = Store::default();
+        let mut lower_bytes = 0;
+        for (k, v) in all {
+            let sz = k.len() + v.len();
+            if k < self.end {
+                lower_bytes += sz;
+                lower_store.put(k, v);
+            } else {
+                upper.bytes += sz;
+                upper.store.put(k, v);
+            }
+        }
+        self.store = lower_store;
+        self.bytes = lower_bytes;
+        Some(upper)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contains_half_open() {
+        let r = Region::new(vec![10], vec![20], 0);
+        assert!(r.contains(&[10]));
+        assert!(r.contains(&[19, 255]));
+        assert!(!r.contains(&[20]));
+        assert!(!r.contains(&[9]));
+    }
+
+    #[test]
+    fn split_partitions_data() {
+        let mut r = Region::new(vec![], vec![255], 0);
+        for i in 0..100u8 {
+            r.put(vec![i], vec![i]);
+        }
+        let upper = r.split(1).unwrap();
+        assert_eq!(upper.slave(), 1);
+        assert_eq!(r.end_key(), upper.start_key());
+        let lower_n = r.scan(&[], &[255]).len();
+        let upper_n = upper.scan(&[], &[255]).len();
+        assert_eq!(lower_n + upper_n, 100);
+        assert!(lower_n > 0 && upper_n > 0);
+        // Ownership respected.
+        assert!(r.scan(&[], &[255]).iter().all(|(k, _)| r.contains(k)));
+        assert!(upper.scan(&[], &[255]).iter().all(|(k, _)| upper.contains(k)));
+    }
+
+    #[test]
+    fn split_empty_region_is_none() {
+        let mut r = Region::new(vec![], vec![255], 0);
+        assert!(r.split(1).is_none());
+        r.put(vec![1], vec![]);
+        assert!(r.split(1).is_none()); // single key: nothing to split
+    }
+
+    #[test]
+    fn scan_clips_to_region() {
+        let mut r = Region::new(vec![50], vec![100], 0);
+        for i in 50..100u8 {
+            r.put(vec![i], vec![]);
+        }
+        // Ask for more than the region owns; get only its share.
+        assert_eq!(r.scan(&[0], &[200]).len(), 50);
+        assert_eq!(r.scan(&[60], &[70]).len(), 10);
+        assert_eq!(r.scan(&[150], &[200]).len(), 0);
+    }
+}

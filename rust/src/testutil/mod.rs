@@ -1,0 +1,152 @@
+//! In-tree property-testing harness (no proptest in the offline vendor set).
+//!
+//! [`check`] runs a property over `cases` generated inputs from a seeded
+//! [`Gen`]; on failure it reports the seed and case index so the exact
+//! failing input can be replayed deterministically. Generators for the
+//! domain's common inputs (vectors, symmetric matrices, graphs, labelings)
+//! live here too.
+
+use crate::data::{planted_graph, Topology};
+use crate::linalg::DenseMatrix;
+use crate::util::Xoshiro256;
+
+/// A seeded input generator for one property-test case.
+pub struct Gen {
+    rng: Xoshiro256,
+}
+
+impl Gen {
+    /// Generator for a given case seed.
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Xoshiro256::new(seed) }
+    }
+
+    /// Uniform usize in [lo, hi].
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.next_index(hi - lo + 1)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    /// Random bool with probability p of true.
+    pub fn bool_p(&mut self, p: f64) -> bool {
+        self.rng.next_f64() < p
+    }
+
+    /// Vector of f64 in [lo, hi).
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    /// Byte vector.
+    pub fn bytes(&mut self, len: usize) -> Vec<u8> {
+        (0..len).map(|_| (self.rng.next_u64() & 0xff) as u8).collect()
+    }
+
+    /// Random labeling of n points over k classes.
+    pub fn labeling(&mut self, n: usize, k: usize) -> Vec<usize> {
+        (0..n).map(|_| self.rng.next_index(k)).collect()
+    }
+
+    /// Random symmetric matrix with entries in [-1, 1].
+    pub fn symmetric_matrix(&mut self, n: usize) -> DenseMatrix {
+        let mut m = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = self.f64_in(-1.0, 1.0);
+                m[(i, j)] = v;
+                m[(j, i)] = v;
+            }
+        }
+        m
+    }
+
+    /// Random planted graph (n in [2k, 4k], ~2.5 edges/vertex).
+    pub fn graph(&mut self, k: usize) -> Topology {
+        let n = self.usize_in(2 * k.max(1) * 10, 4 * k.max(1) * 10);
+        let edges = (n as f64 * 2.5) as usize;
+        planted_graph(n, edges, k, 0.1, self.rng.next_u64())
+    }
+
+    /// Access the underlying RNG.
+    pub fn rng(&mut self) -> &mut Xoshiro256 {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` over `cases` generated inputs; panics with the replay seed on
+/// the first failure. `prop` returns `Err(reason)` or panics to fail.
+pub fn check<F>(name: &str, cases: usize, base_seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> std::result::Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut gen = Gen::new(seed);
+        if let Err(reason) = prop(&mut gen) {
+            panic!(
+                "property {name:?} failed at case {case}/{cases} \
+                 (replay: Gen::new({seed:#x})): {reason}"
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", 50, 1, |g| {
+            let v = g.vec_f64(10, 0.0, 1.0);
+            prop_assert!(v.iter().all(|&x| (0.0..1.0).contains(&x)), "range");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay")]
+    fn check_reports_seed_on_failure() {
+        check("fails", 10, 2, |g| {
+            let x = g.usize_in(0, 100);
+            prop_assert!(x > 1000, "x={x} is never > 1000");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generators_shapes() {
+        let mut g = Gen::new(5);
+        assert_eq!(g.vec_f64(4, 0.0, 1.0).len(), 4);
+        assert_eq!(g.bytes(8).len(), 8);
+        let m = g.symmetric_matrix(6);
+        assert!(m.is_symmetric(0.0));
+        let l = g.labeling(20, 3);
+        assert!(l.iter().all(|&x| x < 3));
+        let topo = g.graph(2);
+        topo.validate().unwrap();
+    }
+
+    #[test]
+    fn generator_deterministic_by_seed() {
+        let a = Gen::new(9).vec_f64(16, -1.0, 1.0);
+        let b = Gen::new(9).vec_f64(16, -1.0, 1.0);
+        assert_eq!(a, b);
+    }
+}

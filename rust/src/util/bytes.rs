@@ -1,0 +1,127 @@
+//! Typed key/value byte codecs for the MapReduce engine and table store.
+//!
+//! Hadoop's Writables equivalent: fixed-width big-endian encodings so that
+//! byte-lexicographic order equals numeric order for unsigned keys — the
+//! property the shuffle sort and the HBase-style row-key scans rely on.
+
+/// Encode a u64 big-endian (order-preserving for row keys).
+pub fn encode_u64(v: u64) -> [u8; 8] {
+    v.to_be_bytes()
+}
+
+/// Decode a big-endian u64.
+pub fn decode_u64(b: &[u8]) -> u64 {
+    let mut a = [0u8; 8];
+    a.copy_from_slice(&b[..8]);
+    u64::from_be_bytes(a)
+}
+
+/// Encode a u32 big-endian.
+pub fn encode_u32(v: u32) -> [u8; 4] {
+    v.to_be_bytes()
+}
+
+/// Decode a big-endian u32.
+pub fn decode_u32(b: &[u8]) -> u32 {
+    let mut a = [0u8; 4];
+    a.copy_from_slice(&b[..4]);
+    u32::from_be_bytes(a)
+}
+
+/// Encode an f64 (not order-preserving; payload only).
+pub fn encode_f64(v: f64) -> [u8; 8] {
+    v.to_be_bytes()
+}
+
+/// Decode an f64.
+pub fn decode_f64(b: &[u8]) -> f64 {
+    let mut a = [0u8; 8];
+    a.copy_from_slice(&b[..8]);
+    f64::from_be_bytes(a)
+}
+
+/// Encode a slice of f64 values (length-prefixed).
+pub fn encode_f64_vec(v: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + v.len() * 8);
+    out.extend_from_slice(&encode_u32(v.len() as u32));
+    for &x in v {
+        out.extend_from_slice(&encode_f64(x));
+    }
+    out
+}
+
+/// Decode a length-prefixed f64 vector; returns (values, bytes consumed).
+pub fn decode_f64_vec(b: &[u8]) -> (Vec<f64>, usize) {
+    let n = decode_u32(b) as usize;
+    let mut out = Vec::with_capacity(n);
+    let mut off = 4;
+    for _ in 0..n {
+        out.push(decode_f64(&b[off..]));
+        off += 8;
+    }
+    (out, off)
+}
+
+/// Encode sparse (index, value) pairs — one table row of the matrix L.
+pub fn encode_sparse_row(entries: &[(u32, f64)]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + entries.len() * 12);
+    out.extend_from_slice(&encode_u32(entries.len() as u32));
+    for &(j, v) in entries {
+        out.extend_from_slice(&encode_u32(j));
+        out.extend_from_slice(&encode_f64(v));
+    }
+    out
+}
+
+/// Decode sparse (index, value) pairs.
+pub fn decode_sparse_row(b: &[u8]) -> Vec<(u32, f64)> {
+    let n = decode_u32(b) as usize;
+    let mut out = Vec::with_capacity(n);
+    let mut off = 4;
+    for _ in 0..n {
+        let j = decode_u32(&b[off..]);
+        let v = decode_f64(&b[off + 4..]);
+        out.push((j, v));
+        off += 12;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u64_roundtrip_and_order() {
+        for v in [0u64, 1, 255, 256, u32::MAX as u64, u64::MAX] {
+            assert_eq!(decode_u64(&encode_u64(v)), v);
+        }
+        // Byte-lexicographic order == numeric order.
+        assert!(encode_u64(5).as_slice() < encode_u64(6).as_slice());
+        assert!(encode_u64(255).as_slice() < encode_u64(256).as_slice());
+        assert!(encode_u64(u32::MAX as u64).as_slice() < encode_u64(u64::MAX).as_slice());
+    }
+
+    #[test]
+    fn f64_roundtrip() {
+        for v in [0.0, -1.5, std::f64::consts::PI, f64::MIN_POSITIVE, 1e300] {
+            assert_eq!(decode_f64(&encode_f64(v)), v);
+        }
+    }
+
+    #[test]
+    fn f64_vec_roundtrip() {
+        let v = vec![1.0, -2.5, 0.0, 1e-10];
+        let enc = encode_f64_vec(&v);
+        let (dec, used) = decode_f64_vec(&enc);
+        assert_eq!(dec, v);
+        assert_eq!(used, enc.len());
+    }
+
+    #[test]
+    fn sparse_row_roundtrip() {
+        let row = vec![(0u32, 0.5), (17, -3.25), (9999, 1e-8)];
+        assert_eq!(decode_sparse_row(&encode_sparse_row(&row)), row);
+        assert_eq!(decode_sparse_row(&encode_sparse_row(&[])), vec![]);
+    }
+}

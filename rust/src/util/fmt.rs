@@ -1,0 +1,70 @@
+//! Formatting helpers: the paper's `h:mm:ss` time format and byte counts.
+
+use std::time::Duration;
+
+/// Format a duration like the paper's Table 5-1 (`1:41:46`).
+pub fn hms(d: Duration) -> String {
+    let total = d.as_secs();
+    format!("{}:{:02}:{:02}", total / 3600, (total % 3600) / 60, total % 60)
+}
+
+/// Format a duration with sub-second precision for bench output.
+pub fn human_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2}s", s)
+    } else {
+        hms(d)
+    }
+}
+
+/// Format a byte count (1024-based).
+pub fn human_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b}B")
+    } else {
+        format!("{v:.1}{}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hms_matches_paper_style() {
+        assert_eq!(hms(Duration::from_secs(1 * 3600 + 41 * 60 + 46)), "1:41:46");
+        assert_eq!(hms(Duration::from_secs(0)), "0:00:00");
+        assert_eq!(hms(Duration::from_secs(59)), "0:00:59");
+        assert_eq!(hms(Duration::from_secs(3600)), "1:00:00");
+    }
+
+    #[test]
+    fn human_duration_scales() {
+        assert!(human_duration(Duration::from_nanos(50)).ends_with("ns"));
+        assert!(human_duration(Duration::from_micros(50)).ends_with("us"));
+        assert!(human_duration(Duration::from_millis(50)).ends_with("ms"));
+        assert!(human_duration(Duration::from_secs(5)).ends_with('s'));
+        assert_eq!(human_duration(Duration::from_secs(7200)), "2:00:00");
+    }
+
+    #[test]
+    fn human_bytes_scales() {
+        assert_eq!(human_bytes(512), "512B");
+        assert_eq!(human_bytes(2048), "2.0KiB");
+        assert_eq!(human_bytes(1024 * 1024 * 3 / 2), "1.5MiB");
+    }
+}

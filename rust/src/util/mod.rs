@@ -1,0 +1,10 @@
+//! Small shared substrates: PRNG, byte codecs, formatting.
+//!
+//! These exist because the offline vendor set has no `rand`, `serde` or
+//! similar crates — see DESIGN.md §4 inventory items 13–16.
+
+pub mod bytes;
+pub mod fmt;
+pub mod rng;
+
+pub use rng::{SplitMix64, Xoshiro256};

@@ -1,0 +1,44 @@
+//! Integration: the shipped config files parse, validate and drive a run.
+
+use std::sync::Arc;
+
+use psch::config::Config;
+use psch::coordinator::{Driver, PipelineInput};
+use psch::data::gaussian_blobs;
+use psch::runtime::KernelRuntime;
+
+#[test]
+fn shipped_configs_parse_and_validate() {
+    for path in ["configs/paper.toml", "configs/quick.toml"] {
+        let cfg = Config::load(path).unwrap_or_else(|e| panic!("{path}: {e}"));
+        cfg.validate().unwrap();
+    }
+    let paper = Config::load("configs/paper.toml").unwrap();
+    assert_eq!(paper.cluster.slaves, 8);
+    assert_eq!(paper.cluster.slots_per_slave, 2);
+    assert!((paper.cluster.network.coord_per_machine_s - 3.5).abs() < 1e-12);
+    assert_eq!(paper.algo.lanczos_steps, 60);
+}
+
+#[test]
+fn quick_config_drives_a_pipeline_run() {
+    let cfg = Config::load("configs/quick.toml").unwrap();
+    let ps = gaussian_blobs(200, cfg.algo.k, 4, 0.3, 10.0, 1);
+    let driver = Driver::new(cfg, Arc::new(KernelRuntime::native()));
+    let r = driver
+        .run(&PipelineInput::Points { points: ps.points.clone() })
+        .unwrap();
+    assert!(psch::eval::nmi(&ps.labels, &r.labels) > 0.9);
+}
+
+#[test]
+fn cli_overrides_layer_on_top_of_file() {
+    let mut cfg = Config::load("configs/paper.toml").unwrap();
+    cfg.set("cluster.slaves", "10").unwrap();
+    cfg.set("algo.k", "6").unwrap();
+    cfg.validate().unwrap();
+    assert_eq!(cfg.cluster.slaves, 10);
+    assert_eq!(cfg.algo.k, 6);
+    // Untouched file values survive.
+    assert!((cfg.algo.sigma - 1.5).abs() < 1e-12);
+}

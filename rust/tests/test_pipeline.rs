@@ -1,0 +1,132 @@
+//! Integration: the full three-phase pipeline across input modes, slave
+//! counts and failure injection — the paper's system exercised end to end.
+
+use std::sync::Arc;
+
+use psch::config::Config;
+use psch::coordinator::{Driver, PipelineInput};
+use psch::data::{gaussian_blobs, planted_graph};
+use psch::eval::nmi;
+use psch::runtime::KernelRuntime;
+
+fn driver(m: usize, k: usize) -> Driver {
+    let mut cfg = Config::default();
+    cfg.cluster.slaves = m;
+    cfg.algo.k = k;
+    cfg.algo.sigma = 1.5;
+    Driver::new(cfg, Arc::new(KernelRuntime::native()))
+}
+
+#[test]
+fn pipeline_deterministic_across_runs() {
+    let ps = gaussian_blobs(250, 3, 4, 0.3, 10.0, 3);
+    let input = PipelineInput::Points { points: ps.points.clone() };
+    let a = driver(2, 3).run(&input).unwrap();
+    let b = driver(2, 3).run(&input).unwrap();
+    assert_eq!(a.labels, b.labels, "same seed must reproduce labels");
+    assert_eq!(a.eigenvalues, b.eigenvalues);
+}
+
+#[test]
+fn pipeline_labels_invariant_to_slave_count() {
+    // The partition must not depend on the cluster size — only times do.
+    let ps = gaussian_blobs(250, 3, 4, 0.3, 10.0, 5);
+    let input = PipelineInput::Points { points: ps.points.clone() };
+    let r1 = driver(1, 3).run(&input).unwrap();
+    let r5 = driver(5, 3).run(&input).unwrap();
+    let agreement = nmi(&r1.labels, &r5.labels);
+    assert!(agreement > 0.999, "m=1 vs m=5 disagree: {agreement}");
+}
+
+#[test]
+fn pipeline_graph_mode_at_moderate_scale() {
+    let topo = planted_graph(1_000, 3_000, 4, 0.03, 17);
+    let mut cfg = Config::default();
+    cfg.cluster.slaves = 4;
+    cfg.algo.k = 4;
+    cfg.algo.lanczos_steps = 80;
+    let d = Driver::new(cfg, Arc::new(KernelRuntime::native()));
+    let r = d.run(&PipelineInput::Graph { topology: topo.clone() }).unwrap();
+    let score = nmi(&topo.labels(), &r.labels);
+    assert!(score > 0.75, "n=1000 community recovery: {score}");
+    // Eigen sanity: lambda_1 = 0, and a spectral gap after k-1 small ones.
+    assert!(r.eigenvalues[0].abs() < 1e-8);
+}
+
+#[test]
+fn pipeline_survives_transient_task_failures() {
+    use psch::mapreduce::Phase;
+    let ps = gaussian_blobs(200, 3, 4, 0.3, 10.0, 9);
+    let d = driver(3, 3);
+    let services = d.services();
+    // No direct fault hook on the driver (jobs are built internally), so
+    // validate the retry machinery at the job level with the same engine.
+    let mapper = Arc::new(psch::mapreduce::FnMapper(
+        |_k: &[u8], _v: &[u8], ctx: &mut psch::mapreduce::TaskContext| {
+            ctx.emit(vec![1], vec![2]);
+            Ok(())
+        },
+    ));
+    let job = psch::mapreduce::JobBuilder::new(
+        "flaky",
+        vec![vec![(vec![0], vec![])], vec![(vec![1], vec![])]],
+        mapper,
+    )
+    .fault_injector(Arc::new(|phase, task, attempt| {
+        phase == Phase::Map && task == 0 && attempt == 0
+    }))
+    .build();
+    let result = psch::mapreduce::run(&services.cluster, &job).unwrap();
+    assert_eq!(
+        result
+            .counters
+            .get(psch::mapreduce::names::FAILED_MAP_ATTEMPTS),
+        1
+    );
+    // And the full pipeline still runs on the same services afterwards.
+    let r = d
+        .run_on(&services, &PipelineInput::Points { points: ps.points.clone() })
+        .unwrap();
+    assert!(nmi(&ps.labels, &r.labels) > 0.9);
+}
+
+#[test]
+fn phase_times_structure() {
+    let ps = gaussian_blobs(300, 3, 4, 0.3, 10.0, 1);
+    let r = driver(4, 3)
+        .run(&PipelineInput::Points { points: ps.points.clone() })
+        .unwrap();
+    assert_eq!(r.phases[0].name, "similarity");
+    assert_eq!(r.phases[1].name, "eigenvectors");
+    assert_eq!(r.phases[2].name, "kmeans");
+    assert!(r.phases.iter().all(|p| p.virtual_s > 0.0));
+    assert!(r.phases.iter().all(|p| p.jobs >= 1));
+    let sum: f64 = r.phases.iter().map(|p| p.virtual_s).sum();
+    assert!((sum - r.total_virtual_s).abs() < 1e-9);
+}
+
+#[test]
+fn xla_and_native_backends_agree_end_to_end() {
+    // Only meaningful when artifacts exist; skip silently otherwise.
+    let dir = psch::runtime::artifacts_dir();
+    let xla = KernelRuntime::auto(&dir);
+    if xla.backend() != psch::runtime::Backend::Xla {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let ps = gaussian_blobs(300, 3, 4, 0.3, 10.0, 21);
+    let input = PipelineInput::Points { points: ps.points.clone() };
+    let mut cfg = Config::default();
+    cfg.cluster.slaves = 2;
+    cfg.algo.k = 3;
+    cfg.algo.sigma = 1.5;
+    let r_xla = Driver::new(cfg.clone(), Arc::new(xla)).run(&input).unwrap();
+    let r_nat = Driver::new(cfg, Arc::new(KernelRuntime::native()))
+        .run(&input)
+        .unwrap();
+    let agreement = nmi(&r_nat.labels, &r_xla.labels);
+    assert!(agreement > 0.999, "backends disagree: {agreement}");
+    for (a, b) in r_xla.eigenvalues.iter().zip(&r_nat.eigenvalues) {
+        assert!((a - b).abs() < 1e-4, "eigenvalues differ: {a} vs {b}");
+    }
+}

@@ -1,0 +1,261 @@
+//! Property-based integration tests over the coordinator's invariants
+//! (routing, batching, state) using the in-tree harness (`psch::testutil`).
+
+use std::sync::Arc;
+
+use psch::cluster::Cluster;
+use psch::mapreduce::{
+    self, FnMapper, FnReducer, HashPartitioner, JobBuilder, Partitioner,
+    RangePartitioner, TaskContext,
+};
+use psch::testutil::{check, Gen};
+use psch::util::bytes::{decode_u64, encode_u64};
+use psch::{prop_assert, spectral};
+
+/// Routing: every emitted key lands in exactly one reduce partition, and
+/// identical keys always co-locate — for random key sets and partitioners.
+#[test]
+fn prop_partitioner_routes_each_key_once() {
+    check("partitioner-routing", 60, 0xA11, |g: &mut Gen| {
+        let n_keys = g.usize_in(1, 200);
+        let parts = g.usize_in(1, 16);
+        let keys: Vec<Vec<u8>> = (0..n_keys)
+            .map(|_| {
+                let len = g.usize_in(1, 12);
+                g.bytes(len)
+            })
+            .collect();
+        let hash = HashPartitioner;
+        for key in &keys {
+            let p = hash.partition(key, parts);
+            prop_assert!(p < parts, "partition {p} out of range {parts}");
+            prop_assert!(
+                p == hash.partition(key, parts),
+                "partitioner not deterministic"
+            );
+        }
+        // Range partitioner: monotone over u64 keys.
+        let rp = RangePartitioner { max_key: 1000 };
+        let mut last = 0;
+        for k in (0..1000u64).step_by(13) {
+            let p = rp.partition(&encode_u64(k), parts);
+            prop_assert!(p >= last && p < parts, "range partitioner order");
+            last = p;
+        }
+        Ok(())
+    });
+}
+
+/// Batching/shuffle: a sum-reduce over random records conserves the total
+/// regardless of split sizes, reducer count or combiner use.
+#[test]
+fn prop_shuffle_conserves_records() {
+    check("shuffle-conservation", 25, 0xB22, |g: &mut Gen| {
+        let n_records = g.usize_in(1, 400);
+        let n_splits = g.usize_in(1, 8);
+        let n_reducers = g.usize_in(1, 7);
+        let key_space = g.usize_in(1, 30) as u64;
+        let use_combiner = g.bool_p(0.5);
+
+        let mut splits: Vec<Vec<(Vec<u8>, Vec<u8>)>> =
+            (0..n_splits).map(|_| Vec::new()).collect();
+        let mut expected = 0u64;
+        for i in 0..n_records {
+            let key = g.usize_in(0, key_space as usize - 1) as u64;
+            let val = g.usize_in(0, 100) as u64;
+            expected += val;
+            splits[i % n_splits]
+                .push((encode_u64(key).to_vec(), encode_u64(val).to_vec()));
+        }
+        let mapper = Arc::new(FnMapper(
+            |k: &[u8], v: &[u8], ctx: &mut TaskContext| {
+                ctx.emit(k.to_vec(), v.to_vec());
+                Ok(())
+            },
+        ));
+        let sum = Arc::new(FnReducer(
+            |k: &[u8], vs: &[Vec<u8>], ctx: &mut TaskContext| {
+                let total: u64 = vs.iter().map(|v| decode_u64(v)).sum();
+                ctx.emit(k.to_vec(), encode_u64(total).to_vec());
+                Ok(())
+            },
+        ));
+        let mut builder = JobBuilder::new("sum", splits, mapper)
+            .reducer(sum.clone(), n_reducers);
+        if use_combiner {
+            builder = builder.combiner(sum);
+        }
+        let result =
+            mapreduce::run(&Cluster::new(g.usize_in(1, 4)), &builder.build()).unwrap();
+        let got: u64 = result
+            .sorted_records()
+            .iter()
+            .map(|(_, v)| decode_u64(v))
+            .sum();
+        prop_assert!(
+            got == expected,
+            "sum conservation: {got} != {expected} (combiner={use_combiner})"
+        );
+        // Each key appears exactly once in the output.
+        let keys: Vec<_> = result.sorted_records();
+        for w in keys.windows(2) {
+            prop_assert!(w[0].0 != w[1].0, "key duplicated across reducers");
+        }
+        Ok(())
+    });
+}
+
+/// State: the similarity matrix the phase-1 job builds is symmetric with a
+/// unit diagonal, and degrees equal row sums — for random point sets.
+#[test]
+fn prop_similarity_table_symmetric() {
+    check("similarity-symmetry", 8, 0xC33, |g: &mut Gen| {
+        let n = g.usize_in(20, 150);
+        let d = g.usize_in(1, 6);
+        let sigma = g.f64_in(0.5, 2.0);
+        let points: Vec<Vec<f64>> =
+            (0..n).map(|_| g.vec_f64(d, -3.0, 3.0)).collect();
+        let svc = psch::coordinator::Services::new(
+            Cluster::new(g.usize_in(1, 4)),
+            Arc::new(psch::runtime::KernelRuntime::native()),
+        );
+        let flat: Vec<f32> = points.iter().flatten().map(|&x| x as f32).collect();
+        let out = psch::coordinator::similarity_job::run_similarity_phase(
+            &svc,
+            Arc::new(flat),
+            n,
+            d,
+            sigma,
+            1e-7,
+            "S",
+        )
+        .unwrap();
+        let table = svc.tables.open("S").unwrap();
+        let nb = n.div_ceil(psch::coordinator::similarity_job::BLOCK);
+        let mut rows = Vec::new();
+        for i in 0..n {
+            rows.push(psch::coordinator::similarity_job::read_similarity_row(
+                &table, i as u64, nb,
+            ));
+        }
+        for (i, row) in rows.iter().enumerate() {
+            let mut has_diag = false;
+            let mut degree = 0.0;
+            for &(j, v) in row {
+                degree += v;
+                if j as usize == i {
+                    has_diag = true;
+                    prop_assert!((v - 1.0).abs() < 1e-5, "diag {i} = {v}");
+                }
+                // Symmetric counterpart exists and matches.
+                let vt = rows[j as usize]
+                    .iter()
+                    .find(|&&(jj, _)| jj as usize == i)
+                    .map(|&(_, v)| v);
+                prop_assert!(vt.is_some(), "missing mirror of ({i},{j})");
+                prop_assert!(
+                    (vt.unwrap() - v).abs() < 1e-6,
+                    "asymmetry at ({i},{j}): {v} vs {:?}",
+                    vt
+                );
+            }
+            prop_assert!(has_diag, "row {i} lost its diagonal");
+            prop_assert!(
+                (degree - out.degrees[i]).abs() < 1e-3,
+                "degree {i}: {degree} vs {}",
+                out.degrees[i]
+            );
+        }
+        Ok(())
+    });
+}
+
+/// State: k-means centers remain the mean of their assigned points after
+/// every distributed iteration (checked via the single-iteration job).
+#[test]
+fn prop_kmeans_centers_are_means() {
+    check("kmeans-centers", 8, 0xD44, |g: &mut Gen| {
+        let n = g.usize_in(30, 200);
+        let d = g.usize_in(1, 5);
+        let k = g.usize_in(2, 5.min(n));
+        let points: Vec<Vec<f64>> =
+            (0..n).map(|_| g.vec_f64(d, -5.0, 5.0)).collect();
+        let svc = psch::coordinator::Services::new(
+            Cluster::new(2),
+            Arc::new(psch::runtime::KernelRuntime::native()),
+        );
+        let flat: Vec<f32> = points.iter().flatten().map(|&x| x as f32).collect();
+        let out = psch::coordinator::kmeans_job::run_kmeans_phase(
+            &svc,
+            Arc::new(flat.clone()),
+            n,
+            d,
+            k,
+            10,
+            1e-9,
+            g.rng().next_u64(),
+        )
+        .unwrap();
+        // Recompute means from the final labels (f32 path, f32 tolerance).
+        for c in 0..k {
+            let members: Vec<usize> =
+                (0..n).filter(|&i| out.labels[i] == c).collect();
+            if members.is_empty() {
+                continue;
+            }
+            for t in 0..d {
+                let mean: f64 = members
+                    .iter()
+                    .map(|&i| flat[i * d + t] as f64)
+                    .sum::<f64>()
+                    / members.len() as f64;
+                // Centers were computed from the *previous* assignment; with
+                // convergence they match the final means closely.
+                if out.converged {
+                    prop_assert!(
+                        (out.centers[c][t] - mean).abs() < 1e-3,
+                        "center ({c},{t}): {} vs mean {mean}",
+                        out.centers[c][t]
+                    );
+                }
+            }
+        }
+        prop_assert!(out.labels.iter().all(|&l| l < k), "label out of range");
+        Ok(())
+    });
+}
+
+/// State: the Laplacian pipeline preserves the spectral invariants on random
+/// graphs — lambda_1 = 0 and all eigenvalues within [0, 2].
+#[test]
+fn prop_laplacian_spectrum_bounds() {
+    check("laplacian-spectrum", 10, 0xE55, |g: &mut Gen| {
+        let topo = g.graph(3);
+        let n = topo.num_vertices();
+        let s = spectral::adjacency_similarity(n, &topo.adjacency_triplets());
+        let l = spectral::laplacian_sparse(&s);
+        let r = psch::linalg::lanczos_smallest(
+            n,
+            3.min(n),
+            &psch::linalg::LanczosOptions {
+                max_steps: 40.min(n),
+                seed: g.rng().next_u64(),
+                ..Default::default()
+            },
+            |v| l.spmv(v),
+        )
+        .unwrap();
+        prop_assert!(
+            r.eigenvalues[0].abs() < 1e-7,
+            "lambda_1 = {} != 0",
+            r.eigenvalues[0]
+        );
+        for &v in &r.eigenvalues {
+            prop_assert!(
+                (-1e-9..=2.0 + 1e-9).contains(&v),
+                "eigenvalue {v} outside [0,2]"
+            );
+        }
+        Ok(())
+    });
+}

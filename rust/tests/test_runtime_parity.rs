@@ -1,0 +1,121 @@
+//! Integration: XLA artifacts vs native kernels, element-level parity on
+//! random inputs (the Rust-side counterpart of the python kernel-vs-ref
+//! tests). Skips when artifacts have not been built.
+
+use psch::runtime::executor::{KM_K, KM_PTS, MV_BLOCK, PAD_DIM, RBF_TILE};
+use psch::runtime::{Backend, KernelRuntime};
+use psch::util::Xoshiro256;
+
+fn runtimes() -> Option<(KernelRuntime, KernelRuntime)> {
+    let xla = KernelRuntime::auto(&psch::runtime::artifacts_dir());
+    if xla.backend() != Backend::Xla {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some((xla, KernelRuntime::native()))
+}
+
+fn randf(rng: &mut Xoshiro256, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| (rng.next_f32() * 2.0 - 1.0) * scale).collect()
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn rbf_parity_sweep() {
+    let Some((xla, native)) = runtimes() else { return };
+    let mut rng = Xoshiro256::new(1);
+    // Odd sizes exercise the padding logic.
+    for (p, q, d) in [(1, 1, 1), (7, 13, 3), (128, 128, 16), (200, 150, 9), (300, 64, 16)] {
+        let x = randf(&mut rng, p * d, 2.0);
+        let y = randf(&mut rng, q * d, 2.0);
+        for gamma in [0.1f32, 1.0, 3.0] {
+            let a = xla.rbf_tile(&x, &y, p, q, d, gamma).unwrap();
+            let b = native.rbf_tile(&x, &y, p, q, d, gamma).unwrap();
+            assert_close(&a, &b, 1e-5, "rbf");
+        }
+    }
+}
+
+#[test]
+fn matvec_parity_sweep() {
+    let Some((xla, native)) = runtimes() else { return };
+    let mut rng = Xoshiro256::new(2);
+    for (r, c) in [(1, 1), (5, 300), (256, 256), (700, 90), (513, 257)] {
+        let a = randf(&mut rng, r * c, 1.0);
+        let v = randf(&mut rng, c, 1.0);
+        let ya = xla.matvec(&a, &v, r, c).unwrap();
+        let yb = native.matvec(&a, &v, r, c).unwrap();
+        assert_close(&ya, &yb, 1e-4, "matvec");
+    }
+}
+
+#[test]
+fn kmeans_parity_sweep() {
+    let Some((xla, native)) = runtimes() else { return };
+    let mut rng = Xoshiro256::new(3);
+    for (p, k, d) in [(1, 1, 1), (100, 3, 2), (256, 16, 16), (999, 7, 5)] {
+        let pts = randf(&mut rng, p * d, 3.0);
+        let ctrs = randf(&mut rng, k * d, 3.0);
+        let (a1, s1, c1) = xla.kmeans_step(&pts, &ctrs, p, k, d).unwrap();
+        let (a2, s2, c2) = native.kmeans_step(&pts, &ctrs, p, k, d).unwrap();
+        assert_eq!(a1, a2, "assignments p={p} k={k} d={d}");
+        assert_close(&s1, &s2, 1e-4, "sums");
+        assert_close(&c1, &c2, 1e-6, "counts");
+    }
+}
+
+#[test]
+fn normalize_parity_sweep() {
+    let Some((xla, native)) = runtimes() else { return };
+    let mut rng = Xoshiro256::new(4);
+    for (r, d) in [(1, 1), (128, 16), (77, 5), (513, 3)] {
+        let mut z = randf(&mut rng, r * d, 1.0);
+        // Inject zero rows.
+        for i in (0..r).step_by(7) {
+            z[i * d..(i + 1) * d].fill(0.0);
+        }
+        let a = xla.normalize_rows(&z, r, d).unwrap();
+        let b = native.normalize_rows(&z, r, d).unwrap();
+        assert_close(&a, &b, 1e-5, "normalize");
+        assert!(a.iter().all(|v| v.is_finite()), "no NaN from zero rows");
+    }
+}
+
+#[test]
+fn laplacian_parity() {
+    let Some((xla, native)) = runtimes() else { return };
+    let mut rng = Xoshiro256::new(5);
+    for n in [1usize, 64, 200, 256] {
+        let s: Vec<f32> = randf(&mut rng, n * n, 1.0).iter().map(|x| x * x).collect();
+        let dr: Vec<f32> = randf(&mut rng, n, 1.0).iter().map(|x| x.abs() + 0.1).collect();
+        let dc: Vec<f32> = randf(&mut rng, n, 1.0).iter().map(|x| x.abs() + 0.1).collect();
+        for diag in [false, true] {
+            let a = xla.laplacian_tile(&s, &dr, &dc, n, diag).unwrap();
+            let b = native.laplacian_tile(&s, &dr, &dc, n, diag).unwrap();
+            assert_close(&a, &b, 1e-5, "laplacian");
+        }
+    }
+}
+
+#[test]
+fn xla_rejects_oversized_dims_cleanly() {
+    let Some((xla, _)) = runtimes() else { return };
+    let x = vec![0.0f32; 10 * (PAD_DIM + 1)];
+    assert!(xla.rbf_tile(&x, &x, 10, 10, PAD_DIM + 1, 1.0).is_err());
+    let pts = vec![0.0f32; KM_PTS * PAD_DIM];
+    let ctrs = vec![0.0f32; (KM_K + 1) * PAD_DIM];
+    assert!(xla.kmeans_step(&pts, &ctrs, KM_PTS, KM_K + 1, PAD_DIM).is_err());
+    let s = vec![0.0f32; (MV_BLOCK + 1) * (MV_BLOCK + 1)];
+    let d = vec![0.0f32; MV_BLOCK + 1];
+    assert!(xla.laplacian_tile(&s, &d, &d, MV_BLOCK + 1, true).is_err());
+    let _ = RBF_TILE;
+}
