@@ -116,7 +116,7 @@ fn run_iteration(combine: bool) -> (f64, u64, Vec<Vec<f64>>) {
     let job = JobBuilder::new("kmeans-iter", splits(), mapper)
         .reducer(reducer, K)
         .build();
-    let result = mapreduce::run(&cluster, &job).unwrap();
+    let mut result = mapreduce::run(&cluster, &job).unwrap();
     let mut new_centers = vec![vec![0.0; D]; K];
     for (k, v) in result.sorted_records() {
         new_centers[psch::util::bytes::decode_u32(&k) as usize] = decode_f64_vec(&v).0;

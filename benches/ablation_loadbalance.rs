@@ -14,11 +14,18 @@
 //!     pull scheduling self-balances at the cost of nb dispatches).
 //!
 //! Reported: per-task work spread and virtual makespan per slave count.
+//!
+//! Experiment A2 rides along: the JobTracker locality ablation — the same
+//! phase-1 similarity job on a 4-slave / 2-rack cluster under the
+//! locality-first policy vs blind FIFO, comparing the data-local map
+//! percentage and the virtual input-read time the new counters report.
 
 mod common;
 
+use psch::benchutil::locality_ablation_run;
 use psch::cluster::{schedule, NetworkModel, TaskCost};
 use psch::metrics::table::AsciiTable;
+use psch::scheduler::Policy;
 
 const SECONDS_PER_TILE: f64 = 3.8; // calibrated phase-1 tile cost
 
@@ -79,6 +86,40 @@ fn spread(tile_counts: &[usize]) -> f64 {
     max / mean
 }
 
+fn locality_ablation() -> bool {
+    let (local, vt_local) = locality_ablation_run(Policy::default());
+    let (fifo, vt_fifo) = locality_ablation_run(Policy::Fifo);
+    let mut table = AsciiTable::new(&[
+        "policy",
+        "data-local",
+        "rack-local",
+        "off-rack",
+        "virtual read",
+        "phase virtual",
+    ]);
+    for (name, s, vt) in [("locality", &local, vt_local), ("fifo", &fifo, vt_fifo)] {
+        table.row(&[
+            name.to_string(),
+            format!("{:.1}%", s.data_local_pct()),
+            format!("{:.1}%", s.rack_local_pct()),
+            format!("{:.1}%", s.off_rack_pct()),
+            format!("{:.1}ms", s.virtual_read_s * 1e3),
+            format!("{vt:.0}s"),
+        ]);
+    }
+    println!(
+        "\nA2 locality ablation (similarity job, 4 slaves / 2 racks):\n{}",
+        table.render()
+    );
+    let pass = local.data_local_pct() > fifo.data_local_pct()
+        && local.virtual_read_s < fifo.virtual_read_s;
+    println!(
+        "locality-first raises data-local % and lowers read time: {}",
+        if pass { "PASS" } else { "FAIL" }
+    );
+    pass
+}
+
 fn main() {
     let nb = 79; // paper scale: ceil(10029 / 128)
     let model = common::calibrated_config(1).cluster.network;
@@ -124,8 +165,12 @@ fn main() {
     println!(
         "dispatch overheads per wave: paired/contiguous = #slots tasks, fine = {nb} tasks"
     );
+    pass &= locality_ablation();
     if pass {
-        println!("ablation_loadbalance: PASS — the paper's pairing is justified");
+        println!(
+            "ablation_loadbalance: PASS — the paper's pairing and the \
+             locality-aware scheduler are both justified"
+        );
     } else {
         println!("ablation_loadbalance: FAIL");
         std::process::exit(1);

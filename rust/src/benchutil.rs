@@ -66,6 +66,55 @@ pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
     (out, t0.elapsed())
 }
 
+/// The A2 locality-ablation experiment, shared by
+/// `benches/ablation_loadbalance.rs` and `rust/tests/test_scheduler.rs` so
+/// the bench and the asserting test always run the identical setup: the
+/// phase-1 similarity job on a 4-slave / 2-rack cluster whose read tiers
+/// are clearly separated (disk 100 MB/s, rack 40 MB/s, cross-rack 10 MB/s)
+/// and whose DFS blocks each hold exactly one 128-row point block (d = 4,
+/// f32). Returns the locality summary and the phase's virtual seconds.
+pub fn locality_ablation_run(
+    policy: crate::scheduler::Policy,
+) -> (crate::metrics::LocalitySummary, f64) {
+    use std::sync::Arc;
+
+    let n = 13 * 128; // 13 row blocks -> 7 paired map tasks
+    let model = crate::cluster::NetworkModel {
+        disk_bw: 100e6,
+        rack_bw: 40e6,
+        cross_rack_bw: 10e6,
+        ..crate::cluster::NetworkModel::default()
+    };
+    let topo = crate::scheduler::RackTopology::uniform(4, 2);
+    let mut cluster = crate::cluster::Cluster::with_model(4, 2, model);
+    cluster.set_topology(topo.clone());
+    cluster.set_tracker_config(crate::scheduler::TrackerConfig {
+        policy,
+        ..Default::default()
+    });
+    let mut svc = crate::coordinator::Services::new(
+        cluster,
+        Arc::new(crate::runtime::KernelRuntime::native()),
+    );
+    svc.dfs = crate::dfs::Dfs::with_topology(4, 2, 128 * 4 * 4, topo);
+    let ps = crate::data::gaussian_blobs(n, 4, 4, 0.3, 10.0, 11);
+    let flat: Vec<f32> = ps.points.iter().flatten().map(|&x| x as f32).collect();
+    let out = crate::coordinator::similarity_job::run_similarity_phase(
+        &svc,
+        Arc::new(flat),
+        n,
+        4,
+        1.5,
+        1e-8,
+        "S",
+    )
+    .expect("similarity phase");
+    (
+        crate::metrics::LocalitySummary::from_counters(&out.counters),
+        out.stats.virtual_s,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -15,6 +15,7 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::error::{Error, Result};
+use crate::scheduler::{JobTracker, RackTopology, SchedulePlan, TaskSpec, TrackerConfig};
 
 pub use network::NetworkModel;
 pub use vclock::{job_time, schedule, schedule_speculative, PhaseTime, TaskCost};
@@ -34,6 +35,11 @@ pub struct Cluster {
     slaves: Vec<SlaveNode>,
     slots_per_slave: usize,
     model: NetworkModel,
+    /// Rack topology shared by the JobTracker and (via [`crate::coordinator`])
+    /// the DFS replica placement.
+    topology: RackTopology,
+    /// JobTracker knobs (heartbeat interval, policy, speculation).
+    tracker: TrackerConfig,
     /// Physical worker threads used to execute tasks (bounded by host cores;
     /// virtual time is what scales with `m`, not host parallelism).
     threads: usize,
@@ -57,6 +63,8 @@ impl Cluster {
             slaves: (0..m).map(|id| SlaveNode { id, speed: 1.0 }).collect(),
             slots_per_slave: slots_per_slave.max(1),
             model,
+            topology: RackTopology::single(m),
+            tracker: TrackerConfig::default(),
             threads,
         }
     }
@@ -65,6 +73,31 @@ impl Cluster {
     pub fn set_slave_speed(&mut self, slave: usize, speed: f64) {
         assert!(speed > 0.0);
         self.slaves[slave].speed = speed;
+    }
+
+    /// Install a rack topology (must cover exactly this cluster's slaves).
+    pub fn set_topology(&mut self, topology: RackTopology) {
+        assert_eq!(
+            topology.num_nodes(),
+            self.slaves.len(),
+            "topology must cover every slave"
+        );
+        self.topology = topology;
+    }
+
+    /// The rack topology.
+    pub fn topology(&self) -> &RackTopology {
+        &self.topology
+    }
+
+    /// Replace the JobTracker knobs (policy, heartbeat, speculation).
+    pub fn set_tracker_config(&mut self, cfg: TrackerConfig) {
+        self.tracker = cfg;
+    }
+
+    /// The JobTracker knobs.
+    pub fn tracker_config(&self) -> &TrackerConfig {
+        &self.tracker
     }
 
     /// Number of slaves m.
@@ -157,6 +190,36 @@ impl Cluster {
         Ok(out)
     }
 
+    /// Run one phase's tasks through the JobTracker (heartbeats, locality
+    /// tiers, delay scheduling, speculation) and return the virtual plan.
+    pub fn plan_phase(&self, tasks: &[TaskSpec]) -> SchedulePlan {
+        let speeds: Vec<f64> = self.slaves.iter().map(|s| s.speed).collect();
+        JobTracker::new(
+            &self.topology,
+            &speeds,
+            self.slots_per_slave,
+            &self.model,
+            &self.tracker,
+        )
+        .plan(tasks)
+    }
+
+    /// Virtual wall-clock of a job from its scheduled phase plans: job
+    /// overhead + map makespan (+ shuffle + reduce makespan).
+    pub fn planned_job_time(
+        &self,
+        map: &SchedulePlan,
+        reduce: Option<&SchedulePlan>,
+        shuffle_bytes: u64,
+    ) -> f64 {
+        let m = self.num_slaves();
+        let mut t = self.model.job_overhead(m) + map.makespan_s;
+        if let Some(r) = reduce {
+            t += self.model.shuffle_time(shuffle_bytes, m) + r.makespan_s;
+        }
+        t
+    }
+
     /// Virtual wall-clock of a job given measured task costs (convenience
     /// wrapper over [`vclock::job_time`] with this cluster's m/slots/model).
     pub fn virtual_job_time(
@@ -227,5 +290,28 @@ mod tests {
         assert_eq!(c.num_slaves(), 10);
         assert_eq!(c.slots_per_slave(), 2);
         assert_eq!(c.total_slots(), 20);
+        assert_eq!(c.topology().num_racks(), 1);
+    }
+
+    #[test]
+    fn plan_phase_routes_through_the_jobtracker() {
+        let mut c = Cluster::with_model(4, 2, NetworkModel::default());
+        c.set_topology(crate::scheduler::RackTopology::uniform(4, 2));
+        let tasks: Vec<crate::scheduler::TaskSpec> = (0..6)
+            .map(|i| crate::scheduler::TaskSpec {
+                cost: TaskCost {
+                    compute_s: 1.0,
+                    input_bytes: 1 << 20,
+                    output_bytes: 0,
+                },
+                hosts: vec![i % 4],
+            })
+            .collect();
+        let plan = c.plan_phase(&tasks);
+        assert_eq!(plan.attempts.iter().filter(|a| a.won).count(), 6);
+        assert_eq!(plan.placed(), 6);
+        assert!(plan.makespan_s > 0.0);
+        let t = c.planned_job_time(&plan, None, 0);
+        assert!(t >= plan.makespan_s);
     }
 }

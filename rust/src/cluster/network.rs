@@ -29,6 +29,12 @@ pub struct NetworkModel {
     pub disk_bw: f64,
     /// Per-machine network bandwidth for shuffle traffic.
     pub net_bw: f64,
+    /// Bandwidth of a rack-local (top-of-rack switch) read stream.
+    pub rack_bw: f64,
+    /// Bandwidth of an off-rack read stream (the oversubscribed core link —
+    /// what the scheduler charges a map task whose split lives in another
+    /// rack).
+    pub cross_rack_bw: f64,
     /// Per-machine, per-job coordination overhead (grows with m).
     pub coord_per_machine_s: f64,
     /// Per-machine all-to-all latency charged once per shuffle barrier.
@@ -48,6 +54,8 @@ impl Default for NetworkModel {
             task_dispatch_s: 2.0,
             disk_bw: 100e6,
             net_bw: 110e6,
+            rack_bw: 110e6,
+            cross_rack_bw: 30e6,
             coord_per_machine_s: 4.0,
             shuffle_latency_s: 1.5,
             compute_scale: 1.0,
@@ -59,6 +67,20 @@ impl NetworkModel {
     /// Time for one task to read `bytes` of input from local disk.
     pub fn read_time(&self, bytes: u64) -> f64 {
         bytes as f64 / self.disk_bw
+    }
+
+    /// Time to read `bytes` of task input at a locality tier: node-local
+    /// reads stream from local disk; rack-local reads are additionally
+    /// bounded by the top-of-rack switch; off-rack reads cross the
+    /// oversubscribed core (the remote disk is still in the path).
+    pub fn read_time_at(&self, bytes: u64, locality: crate::scheduler::Locality) -> f64 {
+        use crate::scheduler::Locality;
+        let rate = match locality {
+            Locality::NodeLocal => self.disk_bw,
+            Locality::RackLocal => self.disk_bw.min(self.rack_bw),
+            Locality::OffRack => self.disk_bw.min(self.cross_rack_bw),
+        };
+        bytes as f64 / rate.max(1.0)
     }
 
     /// Time for one task to write `bytes` of output (replicated table/DFS
@@ -93,6 +115,19 @@ mod tests {
         let nm = NetworkModel::default();
         assert!((nm.read_time(100_000_000) - 1.0).abs() < 1e-9);
         assert_eq!(nm.read_time(0), 0.0);
+    }
+
+    #[test]
+    fn read_time_tiers_get_slower_off_rack() {
+        use crate::scheduler::Locality;
+        let nm = NetworkModel::default();
+        let b = 300_000_000u64;
+        let local = nm.read_time_at(b, Locality::NodeLocal);
+        let rack = nm.read_time_at(b, Locality::RackLocal);
+        let remote = nm.read_time_at(b, Locality::OffRack);
+        assert!((local - nm.read_time(b)).abs() < 1e-9);
+        assert!(rack >= local);
+        assert!(remote > rack, "off-rack must pay the core link: {remote} vs {rack}");
     }
 
     #[test]

@@ -136,6 +136,7 @@ mod tests {
             coord_per_machine_s: 0.0,
             shuffle_latency_s: 0.0,
             compute_scale: 1.0,
+            ..NetworkModel::default()
         }
     }
 

@@ -7,6 +7,7 @@
 
 use crate::cluster::NetworkModel;
 use crate::error::{Error, Result};
+use crate::scheduler::{Policy, SpeculationConfig};
 
 /// Cluster-side settings.
 #[derive(Debug, Clone, PartialEq)]
@@ -17,6 +18,18 @@ pub struct ClusterConfig {
     pub slots_per_slave: usize,
     /// DFS replication factor.
     pub replication: usize,
+    /// Racks the slaves are spread over (contiguous groups; clamped to
+    /// the slave count).
+    pub racks: usize,
+    /// JobTracker slot-filling policy.
+    pub scheduler: Policy,
+    /// Delay-scheduling heartbeats, remembered independently of the active
+    /// policy so `scheduler` / `locality_delay` keys commute in any order.
+    pub locality_delay: usize,
+    /// Virtual seconds between slave heartbeats.
+    pub heartbeat_s: f64,
+    /// Speculative-execution knobs.
+    pub speculation: SpeculationConfig,
     /// Cost model.
     pub network: NetworkModel,
 }
@@ -27,6 +40,11 @@ impl Default for ClusterConfig {
             slaves: 4,
             slots_per_slave: 2,
             replication: 2,
+            racks: 1,
+            scheduler: Policy::default(),
+            locality_delay: 2,
+            heartbeat_s: 3.0,
+            speculation: SpeculationConfig::default(),
             network: NetworkModel::default(),
         }
     }
@@ -105,6 +123,48 @@ impl Config {
             "cluster.replication" => {
                 self.cluster.replication = value.parse().map_err(|_| bad_val(key))?
             }
+            "cluster.racks" => {
+                self.cluster.racks = value.parse().map_err(|_| bad_val(key))?
+            }
+            "cluster.scheduler" => {
+                // Switching to locality picks up whatever delay was set by
+                // cluster.locality_delay, whichever key came first; an
+                // explicit fifo is never silently overridden by the delay.
+                self.cluster.scheduler =
+                    match Policy::parse(value).ok_or_else(|| bad_val(key))? {
+                        Policy::Fifo => Policy::Fifo,
+                        Policy::LocalityAware { .. } => Policy::LocalityAware {
+                            locality_delay: self.cluster.locality_delay,
+                        },
+                    };
+            }
+            "cluster.locality_delay" => {
+                let delay = value.parse().map_err(|_| bad_val(key))?;
+                self.cluster.locality_delay = delay;
+                if let Policy::LocalityAware { locality_delay } =
+                    &mut self.cluster.scheduler
+                {
+                    *locality_delay = delay;
+                }
+            }
+            "cluster.heartbeat_s" => {
+                self.cluster.heartbeat_s = value.parse().map_err(|_| bad_val(key))?
+            }
+            "cluster.speculation" => {
+                self.cluster.speculation.enabled =
+                    value.parse().map_err(|_| bad_val(key))?
+            }
+            "cluster.speculative_slowdown" => {
+                self.cluster.speculation.slowdown =
+                    value.parse().map_err(|_| bad_val(key))?
+            }
+            "cluster.rack_bw" => {
+                self.cluster.network.rack_bw = value.parse().map_err(|_| bad_val(key))?
+            }
+            "cluster.cross_rack_bw" => {
+                self.cluster.network.cross_rack_bw =
+                    value.parse().map_err(|_| bad_val(key))?
+            }
             "cluster.job_setup_s" => {
                 self.cluster.network.job_setup_s =
                     value.parse().map_err(|_| bad_val(key))?
@@ -161,6 +221,21 @@ impl Config {
         }
         if self.cluster.slots_per_slave == 0 {
             return bad("cluster.slots_per_slave must be >= 1".into());
+        }
+        if self.cluster.racks == 0 {
+            return bad("cluster.racks must be >= 1".into());
+        }
+        if self.cluster.heartbeat_s <= 0.0 {
+            return bad(format!(
+                "cluster.heartbeat_s must be > 0, got {}",
+                self.cluster.heartbeat_s
+            ));
+        }
+        if self.cluster.speculation.slowdown < 1.0 {
+            return bad(format!(
+                "cluster.speculative_slowdown must be >= 1, got {}",
+                self.cluster.speculation.slowdown
+            ));
         }
         if self.algo.k < 2 {
             return bad(format!("algo.k must be >= 2, got {}", self.algo.k));
@@ -261,6 +336,46 @@ lanczos_steps = 40
         );
         assert!(Config::parse("[cluster]\nslaves = 0\n").is_err());
         assert!(Config::parse("[algo]\nsigma = -1\n").is_err());
+    }
+
+    #[test]
+    fn scheduler_keys_parse_and_validate() {
+        let text = "[cluster]\nracks = 2\nscheduler = fifo\nheartbeat_s = 1.5\nspeculation = false\n";
+        let cfg = Config::parse(text).unwrap();
+        assert_eq!(cfg.cluster.racks, 2);
+        assert_eq!(cfg.cluster.scheduler, Policy::Fifo);
+        assert!((cfg.cluster.heartbeat_s - 1.5).abs() < 1e-12);
+        assert!(!cfg.cluster.speculation.enabled);
+
+        let cfg = Config::parse("[cluster]\nlocality_delay = 5\n").unwrap();
+        assert_eq!(
+            cfg.cluster.scheduler,
+            Policy::LocalityAware { locality_delay: 5 }
+        );
+        // Key order never matters: fifo always wins over a delay knob, a
+        // delay set before `scheduler = locality` survives the switch, and
+        // a delay set while fifo is active is remembered.
+        let fifo_first = Config::parse("[cluster]\nscheduler = fifo\nlocality_delay = 5\n").unwrap();
+        assert_eq!(fifo_first.cluster.scheduler, Policy::Fifo);
+        let delay_first =
+            Config::parse("[cluster]\nlocality_delay = 5\nscheduler = locality\n").unwrap();
+        assert_eq!(
+            delay_first.cluster.scheduler,
+            Policy::LocalityAware { locality_delay: 5 }
+        );
+        let via_fifo = Config::parse(
+            "[cluster]\nscheduler = fifo\nlocality_delay = 5\nscheduler = locality\n",
+        )
+        .unwrap();
+        assert_eq!(
+            via_fifo.cluster.scheduler,
+            Policy::LocalityAware { locality_delay: 5 }
+        );
+
+        assert!(Config::parse("[cluster]\nscheduler = bogus\n").is_err());
+        assert!(Config::parse("[cluster]\nracks = 0\n").is_err());
+        assert!(Config::parse("[cluster]\nheartbeat_s = 0\n").is_err());
+        assert!(Config::parse("[cluster]\nspeculative_slowdown = 0.5\n").is_err());
     }
 
     #[test]

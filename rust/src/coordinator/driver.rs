@@ -68,13 +68,21 @@ impl Driver {
         &self.config
     }
 
-    /// Stand up fresh services (cluster, DFS, tables) for one run.
+    /// Stand up fresh services (cluster, DFS, tables) for one run, wiring
+    /// the configured rack topology and JobTracker knobs into the cluster.
     pub fn services(&self) -> Services {
         let c = &self.config.cluster;
-        Services::new(
-            Cluster::with_model(c.slaves, c.slots_per_slave, c.network.clone()),
-            self.runtime.clone(),
-        )
+        let mut cluster =
+            Cluster::with_model(c.slaves, c.slots_per_slave, c.network.clone());
+        cluster.set_topology(crate::scheduler::RackTopology::uniform(
+            c.slaves, c.racks,
+        ));
+        cluster.set_tracker_config(crate::scheduler::TrackerConfig {
+            heartbeat_s: c.heartbeat_s,
+            policy: c.scheduler,
+            speculation: c.speculation,
+        });
+        Services::new(cluster, self.runtime.clone())
     }
 
     /// Run the full three-phase pipeline.

@@ -96,6 +96,25 @@ pub fn run_kmeans_phase(
     let mut stats = PhaseStats { name: "kmeans".into(), ..Default::default() };
     let center_path = "/kmeans/centers";
 
+    // Stage the embedding in the DFS so every point split can declare the
+    // nodes holding its rows (paper §4.3.3: the samples live on HDFS).
+    let emb_path = "/kmeans/embedding";
+    let mut raw = Vec::with_capacity(embedding.len() * 4);
+    for &x in embedding.iter() {
+        raw.extend_from_slice(&x.to_le_bytes());
+    }
+    services.dfs.write_file(emb_path, &raw)?;
+    let row_bytes = d * 4;
+    let mut split_hosts: Vec<Vec<usize>> = Vec::new();
+    for lo in (0..n).step_by(POINTS_PER_TASK) {
+        let hi = (lo + POINTS_PER_TASK).min(n);
+        split_hosts.push(services.dfs.range_hosts(
+            emb_path,
+            lo * row_bytes,
+            hi * row_bytes,
+        )?);
+    }
+
     // Init: k-means++ over the embedding rows (driver side).
     let rows: Vec<Vec<f64>> = (0..n)
         .map(|i| (0..d).map(|c| embedding[i * d + c] as f64).collect())
@@ -113,7 +132,8 @@ pub fn run_kmeans_phase(
     let mut converged = false;
     while iterations < max_iters {
         iterations += 1;
-        let result = run_update_job(services, &embedding, n, d, k, center_path)?;
+        let mut result =
+            run_update_job(services, &embedding, n, d, k, center_path, &split_hosts)?;
         stats.absorb(&result.stats);
 
         // New centers from reducer output (key = center index).
@@ -137,11 +157,21 @@ pub fn run_kmeans_phase(
     }
 
     // Final assignment pass (map-only).
-    let labels = run_assign_job(services, &embedding, n, d, k, center_path, &mut stats)?;
+    let labels = run_assign_job(
+        services,
+        &embedding,
+        n,
+        d,
+        k,
+        center_path,
+        &split_hosts,
+        &mut stats,
+    )?;
     Ok(KmeansOutput { labels, centers, iterations, converged, stats })
 }
 
 /// One assign+update iteration as an MR job.
+#[allow(clippy::too_many_arguments)]
 fn run_update_job(
     services: &Services,
     embedding: &Arc<Vec<f32>>,
@@ -149,6 +179,7 @@ fn run_update_job(
     d: usize,
     k: usize,
     center_path: &str,
+    split_hosts: &[Vec<usize>],
 ) -> Result<mapreduce::JobResult> {
     let emb = embedding.clone();
     let dfs = services.dfs.clone();
@@ -160,6 +191,12 @@ fn run_update_job(
             let hi = decode_u64(value) as usize;
             // Paper: "read the center file" at task start.
             let bytes = dfs.read_file(&center_path)?;
+            // Embedding rows + center file read from the DFS; the scheduler
+            // charges the split read at the attempt's locality tier.
+            ctx.incr(
+                crate::mapreduce::names::EXTRA_INPUT_BYTES,
+                ((hi - lo) * d * 4 + bytes.len()) as u64,
+            );
             let kk = crate::util::bytes::decode_u32(&bytes) as usize;
             let mut off = 4;
             let mut centers_flat = Vec::with_capacity(kk * d);
@@ -214,12 +251,14 @@ fn run_update_job(
         },
     ));
     let job = JobBuilder::new("kmeans-update", point_splits(n), mapper)
+        .split_hosts(split_hosts.to_vec())
         .reducer(reducer, services.cluster.num_slaves().min(k))
         .build();
     mapreduce::run(&services.cluster, &job)
 }
 
 /// Final assignment pass.
+#[allow(clippy::too_many_arguments)]
 fn run_assign_job(
     services: &Services,
     embedding: &Arc<Vec<f32>>,
@@ -227,6 +266,7 @@ fn run_assign_job(
     d: usize,
     k: usize,
     center_path: &str,
+    split_hosts: &[Vec<usize>],
     stats: &mut PhaseStats,
 ) -> Result<Vec<usize>> {
     let emb = embedding.clone();
@@ -238,6 +278,10 @@ fn run_assign_job(
             let lo = decode_u64(key) as usize;
             let hi = decode_u64(value) as usize;
             let bytes = dfs.read_file(&center_path)?;
+            ctx.incr(
+                crate::mapreduce::names::EXTRA_INPUT_BYTES,
+                ((hi - lo) * d * 4 + bytes.len()) as u64,
+            );
             let kk = crate::util::bytes::decode_u32(&bytes) as usize;
             let mut off = 4;
             let mut centers_flat = Vec::with_capacity(kk * d);
@@ -265,7 +309,9 @@ fn run_assign_job(
         },
     ));
     let _ = k;
-    let job = JobBuilder::new("kmeans-assign", point_splits(n), mapper).build();
+    let job = JobBuilder::new("kmeans-assign", point_splits(n), mapper)
+        .split_hosts(split_hosts.to_vec())
+        .build();
     let result = mapreduce::run(&services.cluster, &job)?;
     stats.absorb(&result.stats);
     let mut labels = vec![0usize; n];

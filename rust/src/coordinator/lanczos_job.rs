@@ -44,8 +44,19 @@ pub struct EigenOutput {
     pub stats: PhaseStats,
 }
 
+/// Preferred host of a row-range split: the slave serving the table region
+/// that owns the range's first row (how Hadoop co-locates maps with HBase
+/// regions). Falls back to no preference if the key resolves nowhere.
+fn row_range_hosts(table: &Table, lo: usize) -> Vec<usize> {
+    match table.key_slave(&chunk_key(lo as u64, 0)) {
+        Ok(slave) => vec![slave],
+        Err(_) => Vec::new(),
+    }
+}
+
 /// Stage 1: build the L table from the S table + degrees; returns the shared
-/// CSR snapshot the mat-vec jobs read through.
+/// CSR snapshot the mat-vec jobs read through plus the L table handle (its
+/// region map seeds the iteration jobs' split locality).
 fn build_laplacian(
     services: &Services,
     s_table: &Arc<Table>,
@@ -53,7 +64,7 @@ fn build_laplacian(
     n: usize,
     l_table_name: &str,
     stats: &mut PhaseStats,
-) -> Result<Arc<CsrMatrix>> {
+) -> Result<(Arc<CsrMatrix>, Arc<Table>)> {
     let l_table = services
         .tables
         .create(l_table_name, services.cluster.num_slaves())?;
@@ -67,14 +78,17 @@ fn build_laplacian(
             .collect(),
     );
 
-    // Map-only job: one split per row range.
+    // Map-only job: one split per row range, co-located with the S-table
+    // region serving the range.
     let mut splits = Vec::new();
+    let mut hosts = Vec::new();
     for lo in (0..n).step_by(ROWS_PER_TASK) {
         let hi = (lo + ROWS_PER_TASK).min(n);
         splits.push(vec![(
             encode_u64(lo as u64).to_vec(),
             encode_u64(hi as u64).to_vec(),
         )]);
+        hosts.push(row_range_hosts(s_table, lo));
     }
     let s_table_c = s_table.clone();
     let l_table_c = l_table.clone();
@@ -122,7 +136,9 @@ fn build_laplacian(
             Ok(())
         },
     ));
-    let job = JobBuilder::new("laplacian-build", splits, mapper).build();
+    let job = JobBuilder::new("laplacian-build", splits, mapper)
+        .split_hosts(hosts)
+        .build();
     let result = mapreduce::run(&services.cluster, &job)?;
     stats.absorb(&result.stats);
 
@@ -132,7 +148,7 @@ fn build_laplacian(
         let (row, _cb) = parse_chunk_key(&k);
         rows[row as usize].extend(crate::util::bytes::decode_sparse_row(&v));
     }
-    Ok(Arc::new(CsrMatrix::from_rows(n, rows)))
+    Ok((Arc::new(CsrMatrix::from_rows(n, rows)), l_table))
 }
 
 /// Run phase 2 over the S table built by phase 1.
@@ -147,7 +163,7 @@ pub fn run_eigen_phase(
     seed: u64,
 ) -> Result<EigenOutput> {
     let mut stats = PhaseStats { name: "eigenvectors".into(), ..Default::default() };
-    let l = build_laplacian(services, s_table, &degrees, n, "L", &mut stats)?;
+    let (l, l_table) = build_laplacian(services, s_table, &degrees, n, "L", &mut stats)?;
 
     // Bytes each mat-vec task "reads" (its row range of L) for the cost model.
     let row_bytes: Vec<u64> = (0..n)
@@ -159,10 +175,12 @@ pub fn run_eigen_phase(
     {
         let cluster = services.cluster.clone();
         let l_c = l.clone();
+        let l_table_c = l_table.clone();
         let row_bytes_c = row_bytes.clone();
         let mut matvec = |v: &[f64]| -> Vec<f64> {
             let v_arc: Arc<Vec<f64>> = Arc::new(v.to_vec());
             let mut splits = Vec::new();
+            let mut hosts = Vec::new();
             for lo in (0..n).step_by(ROWS_PER_TASK) {
                 let hi = (lo + ROWS_PER_TASK).min(n);
                 // The row-range bytes this task will scan from the L table,
@@ -172,6 +190,7 @@ pub fn run_eigen_phase(
                     encode_u64(lo as u64).to_vec(),
                     encode_u64(modelled).to_vec(),
                 )]);
+                hosts.push(row_range_hosts(&l_table_c, lo));
             }
             let l_cc = l_c.clone();
             let v_cc = v_arc.clone();
@@ -203,7 +222,9 @@ pub fn run_eigen_phase(
                     Ok(())
                 },
             ));
-            let job = JobBuilder::new("lanczos-matvec", splits, mapper).build();
+            let job = JobBuilder::new("lanczos-matvec", splits, mapper)
+                .split_hosts(hosts)
+                .build();
             let result = mapreduce::run(&cluster, &job).expect("matvec job");
             let mut y = vec![0.0f64; n];
             for part in &result.output {

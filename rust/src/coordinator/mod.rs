@@ -40,12 +40,21 @@ pub struct Services {
 }
 
 impl Services {
-    /// Stand up services for `m` slaves with the given runtime.
+    /// Stand up services for `m` slaves with the given runtime. The DFS
+    /// shares the cluster's rack topology (datanodes are co-located with
+    /// slaves), so replica placement and the JobTracker agree on the
+    /// network map.
     pub fn new(cluster: Cluster, runtime: Arc<KernelRuntime>) -> Self {
         let m = cluster.num_slaves();
+        let topology = cluster.topology().clone();
         Self {
             cluster,
-            dfs: Dfs::new(m, 2.min(m)),
+            dfs: Dfs::with_topology(
+                m,
+                2.min(m),
+                crate::dfs::DEFAULT_BLOCK_SIZE,
+                topology,
+            ),
             tables: TableService::new(m),
             runtime,
         }

@@ -35,6 +35,8 @@ pub struct SimilarityOutput {
     pub stats: PhaseStats,
     /// Number of stored (non-dropped) similarity entries.
     pub nnz: u64,
+    /// Merged job counters (locality/speculation tallies included).
+    pub counters: crate::mapreduce::Counters,
 }
 
 /// Compose the table key for (row, column block).
@@ -78,6 +80,12 @@ impl Mapper for SimilarityMapper {
         let nb = Self::nblocks(self.n);
         let (blo, bhi) = self.block_range(b);
         let rows_b = bhi - blo;
+        // The task reads its owned row block from the staged DFS points
+        // file; the scheduler charges this at the attempt's locality tier.
+        ctx.incr(
+            crate::mapreduce::names::EXTRA_INPUT_BYTES,
+            (rows_b * self.d * 4) as u64,
+        );
         let mut pairs_evaluated = 0u64;
         // Degree partials for the rows this task touches.
         let mut deg_b = vec![0.0f64; rows_b];
@@ -211,15 +219,36 @@ pub fn run_similarity_phase(
     let nb = SimilarityMapper::nblocks(n);
     let gamma = crate::spectral::gamma_of_sigma(sigma) as f32;
 
+    // Stage the input points in the DFS (the paper's samples live on HDFS)
+    // so every split can declare the nodes holding its row blocks.
+    let input_path = format!("/input/{table_name}.points");
+    let mut raw = Vec::with_capacity(points.len() * 4);
+    for &x in points.iter() {
+        raw.extend_from_slice(&x.to_le_bytes());
+    }
+    services.dfs.write_file(&input_path, &raw)?;
+    let row_bytes = d * 4;
+    let byte_range = |b: usize| -> (usize, usize) {
+        (b * BLOCK * row_bytes, ((b + 1) * BLOCK).min(n) * row_bytes)
+    };
+
     // Paper pairing: split {b, nb-1-b} — both blocks in one map task.
     let mut splits = Vec::new();
+    let mut hosts = Vec::new();
     for b in 0..nb.div_ceil(2) {
         let mut records = vec![(encode_u64(b as u64).to_vec(), vec![])];
+        let (lo, hi) = byte_range(b);
+        let mut h = services.dfs.range_hosts(&input_path, lo, hi)?;
         let mirror = nb - 1 - b;
         if mirror != b {
             records.push((encode_u64(mirror as u64).to_vec(), vec![]));
+            let (mlo, mhi) = byte_range(mirror);
+            h.extend(services.dfs.range_hosts(&input_path, mlo, mhi)?);
+            h.sort_unstable();
+            h.dedup();
         }
         splits.push(records);
+        hosts.push(h);
     }
 
     let mapper = Arc::new(SimilarityMapper {
@@ -232,9 +261,10 @@ pub fn run_similarity_phase(
         runtime: services.runtime.clone(),
     });
     let job = JobBuilder::new("similarity", splits, mapper)
+        .split_hosts(hosts)
         .reducer(Arc::new(DegreeReducer), services.cluster.num_slaves())
         .build();
-    let result = mapreduce::run(&services.cluster, &job)?;
+    let mut result = mapreduce::run(&services.cluster, &job)?;
 
     // Assemble the degree vector from reducer output.
     let mut degrees = vec![0.0f64; n];
@@ -247,6 +277,7 @@ pub fn run_similarity_phase(
         degrees,
         stats,
         nnz: result.counters.get("SIM_ENTRIES_KEPT"),
+        counters: result.counters,
     })
 }
 
@@ -264,32 +295,53 @@ pub fn run_similarity_phase_graph(
     let n = topology.num_vertices();
     let table = services.tables.create(table_name, services.cluster.num_slaves())?;
 
-    // Splits: edges chunked, then vertices chunked (for the diagonal).
+    // Splits: edges chunked, then vertices chunked (for the diagonal). The
+    // records are simultaneously serialized into a staged DFS edge file so
+    // each split can declare the nodes holding its byte range.
     const RECORDS_PER_SPLIT: usize = 4096;
     let mut splits: Vec<Vec<(Vec<u8>, Vec<u8>)>> = Vec::new();
     let mut current: Vec<(Vec<u8>, Vec<u8>)> = Vec::new();
+    let mut raw: Vec<u8> = Vec::new();
+    let mut ranges: Vec<(usize, usize)> = Vec::new();
+    let mut range_start = 0usize;
     for e in &topology.edges {
         let mut v = Vec::with_capacity(24);
         v.extend_from_slice(&encode_u64(e.src));
         v.extend_from_slice(&encode_u64(e.dst));
         v.extend_from_slice(&encode_f64(e.label.max(1) as f64));
+        raw.extend_from_slice(&v);
         current.push((b"e".to_vec(), v));
         if current.len() == RECORDS_PER_SPLIT {
             splits.push(std::mem::take(&mut current));
+            ranges.push((range_start, raw.len()));
+            range_start = raw.len();
         }
     }
     for v in &topology.vertices {
+        raw.extend_from_slice(&encode_u64(v.id));
         current.push((b"v".to_vec(), encode_u64(v.id).to_vec()));
         if current.len() == RECORDS_PER_SPLIT {
             splits.push(std::mem::take(&mut current));
+            ranges.push((range_start, raw.len()));
+            range_start = raw.len();
         }
     }
     if !current.is_empty() {
         splits.push(current);
+        ranges.push((range_start, raw.len()));
     }
+    let input_path = format!("/input/{table_name}.edges");
+    services.dfs.write_file(&input_path, &raw)?;
+    let hosts = ranges
+        .iter()
+        .map(|&(lo, hi)| services.dfs.range_hosts(&input_path, lo, hi))
+        .collect::<Result<Vec<_>>>()?;
 
     let mapper = Arc::new(crate::mapreduce::FnMapper(
         move |key: &[u8], value: &[u8], ctx: &mut TaskContext| -> Result<()> {
+            // NB: unlike the points/kmeans/lanczos jobs, the real payloads
+            // ARE the split records here, so the engine already counts them
+            // into the task's input bytes — no EXTRA_INPUT_BYTES on top.
             match key {
                 b"e" => {
                     let src = decode_u64(&value[..8]);
@@ -373,9 +425,10 @@ pub fn run_similarity_phase_graph(
     ));
 
     let job = JobBuilder::new("similarity-graph", splits, mapper)
+        .split_hosts(hosts)
         .reducer(reducer, services.cluster.num_slaves())
         .build();
-    let result = mapreduce::run(&services.cluster, &job)?;
+    let mut result = mapreduce::run(&services.cluster, &job)?;
 
     let mut degrees = vec![0.0f64; n];
     for (k, v) in result.sorted_records() {
@@ -387,6 +440,7 @@ pub fn run_similarity_phase_graph(
         degrees,
         stats,
         nnz: result.counters.get("SIM_ENTRIES_KEPT"),
+        counters: result.counters,
     })
 }
 

@@ -1,10 +1,13 @@
 //! Mini-HDFS: a single-master replicated block store (paper §2.1).
 //!
 //! Write-once/read-many semantics, fixed-size blocks, configurable
-//! replication, round-robin block placement, datanode fault injection and
-//! re-replication from surviving replicas — the behaviours the paper's
-//! pipeline relies on (input file storage, the k-means "center file") plus
-//! the reliability mechanism §2.1 highlights.
+//! replication, rack-aware block placement (HDFS's policy: second replica
+//! off-rack, third in the remote rack), datanode fault injection and
+//! re-replication from surviving replicas onto surviving racks — the
+//! behaviours the paper's pipeline relies on (input file storage, the
+//! k-means "center file") plus the reliability mechanism §2.1 highlights.
+//! Block locations feed the JobTracker's locality-aware map placement via
+//! [`Dfs::range_hosts`].
 
 pub mod block;
 pub mod datanode;
@@ -13,6 +16,7 @@ pub mod namenode;
 use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
+use crate::scheduler::RackTopology;
 
 pub use block::{BlockId, FileMeta, DEFAULT_BLOCK_SIZE};
 use datanode::DataNode;
@@ -27,6 +31,7 @@ pub struct Dfs {
 struct DfsInner {
     namenode: Mutex<NameNode>,
     datanodes: Vec<Mutex<DataNode>>,
+    topology: RackTopology,
     block_size: usize,
     replication: usize,
     next_placement: Mutex<usize>,
@@ -41,17 +46,49 @@ impl Dfs {
 
     /// Create with an explicit block size (tests use tiny blocks).
     pub fn with_block_size(nodes: usize, replication: usize, block_size: usize) -> Self {
+        Self::with_topology(
+            nodes,
+            replication,
+            block_size,
+            RackTopology::single(nodes.max(1)),
+        )
+    }
+
+    /// Create with an explicit rack topology: replica placement becomes
+    /// rack-aware, and re-replication prefers restoring rack spread.
+    pub fn with_topology(
+        nodes: usize,
+        replication: usize,
+        block_size: usize,
+        topology: RackTopology,
+    ) -> Self {
         assert!(nodes > 0, "need at least one datanode");
         assert!(block_size > 0, "block size must be positive");
+        assert_eq!(
+            topology.num_nodes(),
+            nodes,
+            "topology must cover every datanode"
+        );
         Self {
             inner: Arc::new(DfsInner {
                 namenode: Mutex::new(NameNode::default()),
                 datanodes: (0..nodes).map(|i| Mutex::new(DataNode::new(i))).collect(),
+                topology,
                 block_size,
                 replication: replication.max(1).min(nodes),
                 next_placement: Mutex::new(0),
             }),
         }
+    }
+
+    /// The rack topology over the datanodes.
+    pub fn topology(&self) -> &RackTopology {
+        &self.inner.topology
+    }
+
+    /// Configured block size in bytes.
+    pub fn block_size(&self) -> usize {
+        self.inner.block_size
     }
 
     /// Number of datanodes (alive or dead).
@@ -64,20 +101,24 @@ impl Dfs {
         self.inner.replication
     }
 
-    /// Pick `replication` distinct alive nodes, round-robin from a cursor.
+    /// Pick `replication` distinct alive nodes, rack-aware, round-robin
+    /// from a cursor (the placement policy itself lives in
+    /// [`namenode::choose_replicas`]).
     fn place_replicas(&self) -> Result<Vec<usize>> {
         let n = self.inner.datanodes.len();
+        let alive: Vec<bool> = self
+            .inner
+            .datanodes
+            .iter()
+            .map(|d| d.lock().unwrap().is_alive())
+            .collect();
         let mut cursor = self.inner.next_placement.lock().unwrap();
-        let mut chosen = Vec::with_capacity(self.inner.replication);
-        for off in 0..n {
-            let cand = (*cursor + off) % n;
-            if self.inner.datanodes[cand].lock().unwrap().is_alive() {
-                chosen.push(cand);
-                if chosen.len() == self.inner.replication {
-                    break;
-                }
-            }
-        }
+        let chosen = namenode::choose_replicas(
+            &self.inner.topology,
+            &alive,
+            self.inner.replication,
+            *cursor,
+        );
         *cursor = (*cursor + 1) % n;
         if chosen.is_empty() {
             return Err(Error::Dfs("no alive datanodes".into()));
@@ -194,7 +235,9 @@ impl Dfs {
         Ok(repaired)
     }
 
-    /// Restore a block's replica count from a surviving copy.
+    /// Restore a block's replica count from a surviving copy, preferring
+    /// candidate nodes whose rack is not yet represented (so a block that
+    /// spanned two racks keeps spanning two after a failure).
     fn re_replicate(&self, block: BlockId) -> Result<()> {
         let data = self.read_block(block)?;
         let current: Vec<usize> = self
@@ -205,13 +248,17 @@ impl Dfs {
             .locations(block)?
             .to_vec();
         let n = self.inner.datanodes.len();
+        let topo = &self.inner.topology;
+        let covered: std::collections::HashSet<usize> =
+            current.iter().map(|&c| topo.rack_of(c)).collect();
+        let mut candidates: Vec<usize> =
+            (0..n).filter(|c| !current.contains(c)).collect();
+        // New racks first (false < true), node id breaks ties.
+        candidates.sort_by_key(|&c| (covered.contains(&topo.rack_of(c)), c));
         let mut new_nodes = current.clone();
-        for cand in 0..n {
+        for cand in candidates {
             if new_nodes.len() >= self.inner.replication {
                 break;
-            }
-            if new_nodes.contains(&cand) {
-                continue;
             }
             let mut dn = self.inner.datanodes[cand].lock().unwrap();
             if dn.is_alive() && dn.store(block, data.clone()).is_ok() {
@@ -227,6 +274,39 @@ impl Dfs {
             .unwrap()
             .set_locations(block, new_nodes);
         Ok(())
+    }
+
+    /// Replica locations of every block of a file, in file order.
+    pub fn block_hosts(&self, path: &str) -> Result<Vec<Vec<usize>>> {
+        let nn = self.inner.namenode.lock().unwrap();
+        let blocks = nn.get_file(path)?.blocks.clone();
+        blocks
+            .iter()
+            .map(|&b| nn.locations(b).map(|s| s.to_vec()))
+            .collect()
+    }
+
+    /// Union of replica nodes of the blocks overlapping byte range
+    /// `[lo, hi)` of a file — the preferred hosts of a map split covering
+    /// that range (sorted, deduplicated).
+    pub fn range_hosts(&self, path: &str, lo: usize, hi: usize) -> Result<Vec<usize>> {
+        let hosts = self.block_hosts(path)?;
+        let bs = self.inner.block_size;
+        if lo >= hi || hosts.is_empty() {
+            return Ok(Vec::new());
+        }
+        let first = lo / bs;
+        let last = hi.div_ceil(bs).min(hosts.len());
+        let mut out: Vec<usize> = hosts
+            .iter()
+            .take(last)
+            .skip(first)
+            .flatten()
+            .copied()
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        Ok(out)
     }
 
     /// Number of alive datanodes.
@@ -324,6 +404,63 @@ mod tests {
         dfs.write_file("/b", b"1").unwrap();
         dfs.write_file("/a", b"2").unwrap();
         assert_eq!(dfs.list(), vec!["/a".to_string(), "/b".to_string()]);
+    }
+
+    #[test]
+    fn rack_aware_placement_spans_two_racks() {
+        let topo = RackTopology::uniform(4, 2);
+        let dfs = Dfs::with_topology(4, 2, 8, topo);
+        dfs.write_file("/f", &[7u8; 64]).unwrap(); // 8 blocks x 2 replicas
+        for (i, hosts) in dfs.block_hosts("/f").unwrap().iter().enumerate() {
+            assert_eq!(hosts.len(), 2, "block {i}");
+            let racks: std::collections::HashSet<usize> =
+                hosts.iter().map(|&h| dfs.topology().rack_of(h)).collect();
+            assert_eq!(racks.len(), 2, "block {i} replicas share a rack: {hosts:?}");
+        }
+    }
+
+    #[test]
+    fn rereplication_recovers_onto_surviving_racks() {
+        // 6 nodes over 2 racks; every block starts with one replica per
+        // rack. Killing nodes must re-replicate (drop_node reports the
+        // under-replicated blocks) AND keep each block on two racks while
+        // both racks have alive nodes.
+        let topo = RackTopology::uniform(6, 2);
+        let dfs = Dfs::with_topology(6, 2, 8, topo);
+        let data: Vec<u8> = (0..96u8).collect();
+        dfs.write_file("/f", &data).unwrap();
+        for killed in [0usize, 3] {
+            let repaired = dfs.kill_datanode(killed).unwrap();
+            assert!(repaired > 0, "killing {killed} must trigger re-replication");
+            assert_eq!(dfs.read_file("/f").unwrap(), data);
+            for (i, hosts) in dfs.block_hosts("/f").unwrap().iter().enumerate() {
+                assert_eq!(hosts.len(), 2, "block {i} under-replicated");
+                assert!(!hosts.contains(&killed), "block {i} still on dead node");
+                let racks: std::collections::HashSet<usize> =
+                    hosts.iter().map(|&h| dfs.topology().rack_of(h)).collect();
+                assert_eq!(
+                    racks.len(),
+                    2,
+                    "block {i} lost rack spread after killing {killed}: {hosts:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn range_hosts_cover_the_split_blocks() {
+        let dfs = Dfs::with_block_size(4, 1, 8);
+        dfs.write_file("/f", &[0u8; 32]).unwrap(); // 4 single-replica blocks
+        let per_block = dfs.block_hosts("/f").unwrap();
+        // Range spanning blocks 1 and 2 unions exactly their holders.
+        let mut expect: Vec<usize> =
+            per_block[1].iter().chain(&per_block[2]).copied().collect();
+        expect.sort_unstable();
+        expect.dedup();
+        assert_eq!(dfs.range_hosts("/f", 8, 24).unwrap(), expect);
+        // Empty and out-of-file ranges are harmless.
+        assert!(dfs.range_hosts("/f", 5, 5).unwrap().is_empty());
+        assert!(!dfs.range_hosts("/f", 24, 1000).unwrap().is_empty());
     }
 
     #[test]

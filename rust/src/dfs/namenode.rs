@@ -6,8 +6,72 @@
 use std::collections::HashMap;
 
 use crate::error::{Error, Result};
+use crate::scheduler::RackTopology;
 
 use super::block::{BlockId, FileMeta};
+
+/// HDFS-style rack-aware replica chooser (the NameNode's placement policy):
+///
+/// 1. the first replica goes to the first alive node scanning round-robin
+///    from `cursor` (the "writer" node),
+/// 2. the second to the first alive node in a *different* rack,
+/// 3. the third to another node in the *second* replica's rack (HDFS keeps
+///    two replicas in one remote rack to cap cross-rack write traffic),
+/// 4. any further replicas fill round-robin over the remaining alive nodes.
+///
+/// With a single rack this degrades to plain round-robin — the placement
+/// the DFS used before racks existed. Returns fewer than `replication`
+/// nodes when not enough are alive, and an empty vec when none are.
+pub fn choose_replicas(
+    topology: &RackTopology,
+    alive: &[bool],
+    replication: usize,
+    cursor: usize,
+) -> Vec<usize> {
+    let n = alive.len();
+    if n == 0 || replication == 0 {
+        return Vec::new();
+    }
+    let scan: Vec<usize> = (0..n)
+        .map(|off| (cursor + off) % n)
+        .filter(|&c| alive[c])
+        .collect();
+    let Some(&first) = scan.first() else {
+        return Vec::new();
+    };
+    let mut chosen = vec![first];
+    if chosen.len() < replication {
+        // Rotate the pick WITHIN the remote racks by cursor, not just the
+        // scan start: always taking the first remote-rack node in scan
+        // order would funnel every second replica onto one node per rack.
+        let remote: Vec<usize> = scan
+            .iter()
+            .copied()
+            .filter(|&c| !chosen.contains(&c) && !topology.same_rack(c, first))
+            .collect();
+        if !remote.is_empty() {
+            chosen.push(remote[cursor % remote.len()]);
+        }
+    }
+    if chosen.len() >= 2 && chosen.len() < replication {
+        let second = chosen[1];
+        if let Some(&c) = scan
+            .iter()
+            .find(|&&c| !chosen.contains(&c) && topology.same_rack(c, second))
+        {
+            chosen.push(c);
+        }
+    }
+    for &c in &scan {
+        if chosen.len() >= replication {
+            break;
+        }
+        if !chosen.contains(&c) {
+            chosen.push(c);
+        }
+    }
+    chosen
+}
 
 /// NameNode state (wrapped in a lock by [`super::Dfs`]).
 #[derive(Debug, Default)]
@@ -133,6 +197,67 @@ mod tests {
         assert_eq!(under, vec![b1]);
         assert_eq!(nn.locations(b1).unwrap(), &[1]);
         assert_eq!(nn.locations(b2).unwrap(), &[1, 2]);
+    }
+
+    #[test]
+    fn rack_aware_chooser_spans_two_racks() {
+        let topo = RackTopology::uniform(4, 2); // racks [0,0,1,1]
+        let alive = [true; 4];
+        for cursor in 0..4 {
+            let chosen = choose_replicas(&topo, &alive, 2, cursor);
+            assert_eq!(chosen.len(), 2, "cursor {cursor}");
+            assert!(
+                !topo.same_rack(chosen[0], chosen[1]),
+                "cursor {cursor}: {chosen:?} share a rack"
+            );
+        }
+    }
+
+    #[test]
+    fn second_replicas_spread_over_the_remote_rack() {
+        // Without cursor rotation inside the remote rack, every rack-0
+        // writer would pin its second replica on one node (a hotspot).
+        let topo = RackTopology::uniform(4, 2);
+        let alive = [true; 4];
+        let seconds: std::collections::HashSet<usize> =
+            (0..8).map(|cursor| choose_replicas(&topo, &alive, 2, cursor)[1]).collect();
+        assert_eq!(
+            seconds.len(),
+            4,
+            "every node should receive second replicas: {seconds:?}"
+        );
+    }
+
+    #[test]
+    fn third_replica_joins_the_remote_rack() {
+        let topo = RackTopology::uniform(6, 2); // racks [0,0,0,1,1,1]
+        let alive = [true; 6];
+        let chosen = choose_replicas(&topo, &alive, 3, 0);
+        assert_eq!(chosen.len(), 3);
+        assert!(!topo.same_rack(chosen[0], chosen[1]));
+        assert!(
+            topo.same_rack(chosen[1], chosen[2]),
+            "HDFS keeps two replicas in the remote rack: {chosen:?}"
+        );
+    }
+
+    #[test]
+    fn single_rack_degrades_to_round_robin() {
+        let topo = RackTopology::single(4);
+        let alive = [true; 4];
+        assert_eq!(choose_replicas(&topo, &alive, 2, 1), vec![1, 2]);
+        assert_eq!(choose_replicas(&topo, &alive, 1, 3), vec![3]);
+    }
+
+    #[test]
+    fn chooser_skips_dead_nodes() {
+        let topo = RackTopology::uniform(4, 2);
+        let alive = [false, true, true, true];
+        let chosen = choose_replicas(&topo, &alive, 2, 0);
+        assert_eq!(chosen.len(), 2);
+        assert!(!chosen.contains(&0));
+        assert!(!topo.same_rack(chosen[0], chosen[1]));
+        assert!(choose_replicas(&topo, &[false; 4], 2, 0).is_empty());
     }
 
     #[test]

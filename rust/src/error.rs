@@ -2,54 +2,78 @@
 //!
 //! Every fallible public API in the crate returns [`Result`]. The variants
 //! mirror the subsystems: DFS, table store, MapReduce engine, XLA runtime,
-//! linear algebra, data parsing and configuration.
+//! linear algebra, data parsing and configuration. Display/Error are
+//! hand-implemented — the offline build has no derive-macro crates.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Crate-wide error enum.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Mini-HDFS failures (missing file/block, replication impossible, ...).
-    #[error("dfs: {0}")]
     Dfs(String),
 
     /// Mini-HBase failures (missing table/row, region errors, ...).
-    #[error("table: {0}")]
     Table(String),
 
     /// MapReduce engine failures (task failed after retries, bad job conf).
-    #[error("mapreduce: {0}")]
     MapReduce(String),
 
     /// XLA/PJRT runtime failures (artifact missing, shape mismatch, ...).
-    #[error("runtime: {0}")]
     Runtime(String),
 
     /// Linear-algebra failures (non-convergence, dimension mismatch).
-    #[error("linalg: {0}")]
     Linalg(String),
 
     /// Data-format failures (topology file parse errors, ...).
-    #[error("data: {0}")]
     Data(String),
 
     /// Configuration errors (bad key, invalid value, validation failure).
-    #[error("config: {0}")]
     Config(String),
 
     /// CLI usage errors.
-    #[error("cli: {0}")]
     Cli(String),
 
     /// I/O errors bubbling up from std.
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Errors from the `xla` crate (PJRT client / compile / execute).
-    #[error("xla: {0}")]
     Xla(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Dfs(m) => write!(f, "dfs: {m}"),
+            Error::Table(m) => write!(f, "table: {m}"),
+            Error::MapReduce(m) => write!(f, "mapreduce: {m}"),
+            Error::Runtime(m) => write!(f, "runtime: {m}"),
+            Error::Linalg(m) => write!(f, "linalg: {m}"),
+            Error::Data(m) => write!(f, "data: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Cli(m) => write!(f, "cli: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Xla(m) => write!(f, "xla: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

@@ -4,9 +4,12 @@
 //! Based on Hadoop"* (Zhao et al., 2015) as a three-layer Rust + JAX/Pallas
 //! system:
 //!
-//! - **Layer 3 (this crate)**: the coordinator — a mini-HDFS ([`dfs`]), a
-//!   mini-HBase ([`table`]), a MapReduce engine ([`mapreduce`]), a simulated
-//!   cluster with a network cost model ([`cluster`]), and the paper's three
+//! - **Layer 3 (this crate)**: the coordinator — a mini-HDFS ([`dfs`]) with
+//!   rack-aware replica placement, a mini-HBase ([`table`]), a MapReduce
+//!   engine ([`mapreduce`]), a JobTracker-style locality- and
+//!   straggler-aware task scheduler ([`scheduler`]: racks, heartbeats,
+//!   delay scheduling, live speculative execution), a simulated cluster
+//!   with a network cost model ([`cluster`]), and the paper's three
 //!   parallel phases ([`coordinator`]).
 //! - **Layer 2**: JAX compute graphs (`python/compile/model.py`), AOT-lowered
 //!   to HLO text artifacts loaded by [`runtime`] via XLA PJRT.
@@ -30,6 +33,7 @@ pub mod linalg;
 pub mod mapreduce;
 pub mod metrics;
 pub mod runtime;
+pub mod scheduler;
 pub mod spectral;
 pub mod table;
 pub mod testutil;

@@ -37,6 +37,22 @@ pub mod names {
     pub const COMPUTE_US: &str = "COMPUTE_US";
     /// Reduce task attempts that failed.
     pub const FAILED_REDUCE_ATTEMPTS: &str = "FAILED_REDUCE_ATTEMPTS";
+    /// Map tasks whose winning attempt ran on a node holding its split
+    /// (only tasks that declared split locations are counted).
+    pub const DATA_LOCAL_MAPS: &str = "DATA_LOCAL_MAPS";
+    /// Map tasks whose winning attempt ran in the split's rack.
+    pub const RACK_LOCAL_MAPS: &str = "RACK_LOCAL_MAPS";
+    /// Map tasks whose winning attempt read across racks.
+    pub const OFF_RACK_MAPS: &str = "OFF_RACK_MAPS";
+    /// Speculative duplicate attempts the JobTracker launched.
+    pub const SPECULATIVE_ATTEMPTS: &str = "SPECULATIVE_ATTEMPTS";
+    /// Speculative duplicates that beat the original attempt.
+    pub const SPECULATIVE_WINS: &str = "SPECULATIVE_WINS";
+    /// TaskTracker heartbeats processed while the job ran (virtual).
+    pub const HEARTBEATS: &str = "HEARTBEATS";
+    /// Virtual MICROseconds map tasks spent reading input at their placed
+    /// locality tier — the number the locality ablation compares.
+    pub const MAP_READ_US: &str = "MAP_READ_US";
 }
 
 impl Counters {

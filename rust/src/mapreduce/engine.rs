@@ -2,12 +2,15 @@
 //!
 //! Runs map and reduce tasks on the [`Cluster`]'s worker pool with per-task
 //! retry (Hadoop's task-attempt model), a map-side combiner, a sort-merge
-//! shuffle, counters, and virtual-time accounting (every task's measured CPU
-//! time + byte counts feed [`crate::cluster::vclock`]).
-
+//! shuffle, counters, and virtual-time accounting: every task's measured
+//! cost + its split's block locations are replayed through the cluster's
+//! JobTracker ([`crate::scheduler`]) — heartbeat-driven slot assignment,
+//! node-local/rack-local/off-rack read charging and live speculative
+//! duplicates — whose tallies land in the job counters.
 
 use crate::cluster::{Cluster, TaskCost};
 use crate::error::{Error, Result};
+use crate::scheduler::{SchedulePlan, TaskSpec};
 
 use super::counters::{names, Counters};
 use super::job::{Job, Phase};
@@ -42,10 +45,29 @@ pub struct JobResult {
 
 impl JobResult {
     /// Flatten all partitions into one globally key-sorted record list.
-    pub fn sorted_records(&self) -> Vec<KV> {
-        let mut all: Vec<KV> = self.output.iter().flatten().cloned().collect();
-        all.sort_by(|a, b| a.0.cmp(&b.0));
+    ///
+    /// Moves the records out of `output` (which is left empty) instead of
+    /// cloning every KV across all partitions; counters and stats remain.
+    pub fn sorted_records(&mut self) -> Vec<KV> {
+        let mut all: Vec<KV> = std::mem::take(&mut self.output)
+            .into_iter()
+            .flatten()
+            .collect();
+        all.sort_unstable_by(|a, b| a.0.cmp(&b.0));
         all
+    }
+}
+
+/// Fold one phase plan's locality/speculation tallies into the counters.
+fn absorb_plan(counters: &mut Counters, plan: &SchedulePlan, is_map: bool) {
+    counters.incr(names::HEARTBEATS, plan.heartbeats);
+    counters.incr(names::SPECULATIVE_ATTEMPTS, plan.speculative_attempts as u64);
+    counters.incr(names::SPECULATIVE_WINS, plan.speculative_wins as u64);
+    if is_map {
+        counters.incr(names::DATA_LOCAL_MAPS, plan.node_local as u64);
+        counters.incr(names::RACK_LOCAL_MAPS, plan.rack_local as u64);
+        counters.incr(names::OFF_RACK_MAPS, plan.off_rack as u64);
+        counters.incr(names::MAP_READ_US, (plan.input_read_s * 1e6).round() as u64);
     }
 }
 
@@ -141,11 +163,25 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
         map_outputs.push(out.records);
     }
 
+    // Route the map phase through the JobTracker: measured costs + declared
+    // split locations drive heartbeat slot assignment, locality-tiered read
+    // charging and live speculation.
+    let map_specs: Vec<TaskSpec> = map_costs
+        .iter()
+        .enumerate()
+        .map(|(i, c)| TaskSpec {
+            cost: *c,
+            hosts: job.split_hosts.get(i).cloned().unwrap_or_default(),
+        })
+        .collect();
+    let map_plan = cluster.plan_phase(&map_specs);
+    absorb_plan(&mut counters, &map_plan, true);
+
     // ---------------- map-only job: done ----------------
     let Some(reducer) = &job.reducer else {
         let stats = JobStats {
             shuffle_bytes: 0,
-            virtual_time_s: cluster.virtual_job_time(&map_costs, &[], 0),
+            virtual_time_s: cluster.planned_job_time(&map_plan, None, 0),
             wall_time_s: wall_start.elapsed().as_secs_f64(),
             map_costs,
             reduce_costs: vec![],
@@ -255,8 +291,21 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
         output.push(out.records);
     }
 
+    // Reducers pull their input through the shuffle (charged separately),
+    // so their plan carries no locality preference.
+    let reduce_specs: Vec<TaskSpec> = reduce_costs
+        .iter()
+        .map(|c| TaskSpec { cost: *c, hosts: Vec::new() })
+        .collect();
+    let reduce_plan = cluster.plan_phase(&reduce_specs);
+    absorb_plan(&mut counters, &reduce_plan, false);
+
     let stats = JobStats {
-        virtual_time_s: cluster.virtual_job_time(&map_costs, &reduce_costs, shuffle_bytes),
+        virtual_time_s: cluster.planned_job_time(
+            &map_plan,
+            Some(&reduce_plan),
+            shuffle_bytes,
+        ),
         wall_time_s: wall_start.elapsed().as_secs_f64(),
         map_costs,
         reduce_costs,
@@ -325,7 +374,7 @@ mod tests {
         b.build()
     }
 
-    fn counts_of(result: &JobResult) -> std::collections::HashMap<String, u64> {
+    fn counts_of(result: &mut JobResult) -> std::collections::HashMap<String, u64> {
         result
             .sorted_records()
             .into_iter()
@@ -337,8 +386,8 @@ mod tests {
     fn wordcount_end_to_end() {
         let cluster = Cluster::new(4);
         let job = wordcount_job(word_splits(), false);
-        let result = run(&cluster, &job).unwrap();
-        let counts = counts_of(&result);
+        let mut result = run(&cluster, &job).unwrap();
+        let counts = counts_of(&mut result);
         assert_eq!(counts["the"], 4);
         assert_eq!(counts["fox"], 2);
         assert_eq!(counts["dog"], 2);
@@ -350,9 +399,9 @@ mod tests {
     #[test]
     fn combiner_reduces_shuffle_but_not_answer() {
         let cluster = Cluster::new(2);
-        let plain = run(&cluster, &wordcount_job(word_splits(), false)).unwrap();
-        let combined = run(&cluster, &wordcount_job(word_splits(), true)).unwrap();
-        assert_eq!(counts_of(&plain), counts_of(&combined));
+        let mut plain = run(&cluster, &wordcount_job(word_splits(), false)).unwrap();
+        let mut combined = run(&cluster, &wordcount_job(word_splits(), true)).unwrap();
+        assert_eq!(counts_of(&mut plain), counts_of(&mut combined));
         assert!(
             combined.stats.shuffle_bytes < plain.stats.shuffle_bytes,
             "combiner should shrink shuffle: {} vs {}",
@@ -390,8 +439,8 @@ mod tests {
             Phase::Map => task == 0 && attempt < 2,
             Phase::Reduce => task == 1 && attempt < 1,
         }));
-        let r = run(&cluster, &job).unwrap();
-        assert_eq!(counts_of(&r)["the"], 4);
+        let mut r = run(&cluster, &job).unwrap();
+        assert_eq!(counts_of(&mut r)["the"], 4);
         assert_eq!(r.counters.get(names::FAILED_MAP_ATTEMPTS), 2);
         assert_eq!(r.counters.get(names::FAILED_REDUCE_ATTEMPTS), 1);
     }
@@ -442,8 +491,35 @@ mod tests {
         // Routing invariant: reducers together see every mapped record once.
         let cluster = Cluster::new(3);
         let job = wordcount_job(word_splits(), false);
-        let r = run(&cluster, &job).unwrap();
-        let total: u64 = counts_of(&r).values().sum();
+        let mut r = run(&cluster, &job).unwrap();
+        let total: u64 = counts_of(&mut r).values().sum();
         assert_eq!(total, 13, "13 words in the corpus");
+    }
+
+    #[test]
+    fn split_hosts_flow_into_locality_counters() {
+        let mut cluster =
+            Cluster::with_model(2, 2, crate::cluster::NetworkModel::default());
+        cluster.set_topology(crate::scheduler::RackTopology::uniform(2, 2));
+        let mut job = wordcount_job(word_splits(), false);
+        job.split_hosts = vec![vec![0], vec![1]];
+        let r = run(&cluster, &job).unwrap();
+        let placed = r.counters.get(names::DATA_LOCAL_MAPS)
+            + r.counters.get(names::RACK_LOCAL_MAPS)
+            + r.counters.get(names::OFF_RACK_MAPS);
+        assert_eq!(placed, 2, "both located splits must be tallied");
+        assert!(r.counters.get(names::HEARTBEATS) > 0);
+        // The default locality-first policy finds both node-local homes.
+        assert_eq!(r.counters.get(names::DATA_LOCAL_MAPS), 2);
+    }
+
+    #[test]
+    fn jobs_without_hosts_stay_out_of_locality_tallies() {
+        let cluster = Cluster::new(2);
+        let job = wordcount_job(word_splits(), false);
+        let r = run(&cluster, &job).unwrap();
+        assert_eq!(r.counters.get(names::DATA_LOCAL_MAPS), 0);
+        assert_eq!(r.counters.get(names::RACK_LOCAL_MAPS), 0);
+        assert_eq!(r.counters.get(names::OFF_RACK_MAPS), 0);
     }
 }

@@ -23,6 +23,10 @@ pub struct Job {
     pub name: String,
     /// One entry per map task.
     pub input: Vec<InputSplit>,
+    /// Preferred hosts per map split (nodes holding the split's DFS blocks
+    /// or table region), parallel to `input`. Empty, or shorter than
+    /// `input`, means the missing splits carry no locality preference.
+    pub split_hosts: Vec<Vec<usize>>,
     /// The map function.
     pub mapper: Arc<dyn Mapper>,
     /// The reduce function; `None` = map-only job (paper Alg. 4.2 is one).
@@ -51,6 +55,7 @@ impl JobBuilder {
             job: Job {
                 name: name.to_string(),
                 input,
+                split_hosts: Vec::new(),
                 mapper,
                 reducer: None,
                 combiner: None,
@@ -72,6 +77,13 @@ impl JobBuilder {
     /// Set a map-side combiner.
     pub fn combiner(mut self, c: Arc<dyn Reducer>) -> Self {
         self.job.combiner = Some(c);
+        self
+    }
+
+    /// Declare the preferred hosts of every map split (the scheduler's
+    /// locality input; see [`Job::split_hosts`]).
+    pub fn split_hosts(mut self, hosts: Vec<Vec<usize>>) -> Self {
+        self.job.split_hosts = hosts;
         self
     }
 
@@ -117,6 +129,19 @@ mod tests {
         assert!(j.combiner.is_none());
         assert_eq!(j.num_reducers, 1);
         assert_eq!(j.max_attempts, 4);
+        assert!(j.split_hosts.is_empty());
+    }
+
+    #[test]
+    fn builder_sets_split_hosts() {
+        let j = JobBuilder::new(
+            "t",
+            vec![vec![], vec![]],
+            Arc::new(FnMapper(|_: &[u8], _: &[u8], _: &mut _| Ok(()))),
+        )
+        .split_hosts(vec![vec![0, 2], vec![1]])
+        .build();
+        assert_eq!(j.split_hosts, vec![vec![0, 2], vec![1]]);
     }
 
     #[test]

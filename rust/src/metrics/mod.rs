@@ -1,9 +1,71 @@
-//! Timing, speedup and table reporting for experiments and benches.
+//! Timing, speedup, locality and table reporting for experiments/benches.
 
 pub mod speedup;
 pub mod table;
 
 use std::time::{Duration, Instant};
+
+use crate::mapreduce::{names, Counters};
+
+/// Data-locality and speculation summary of one job or phase, derived from
+/// the counters the JobTracker feeds through the engine.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LocalitySummary {
+    /// Map tasks that ran on a node holding their split.
+    pub data_local: u64,
+    /// Map tasks that ran in their split's rack.
+    pub rack_local: u64,
+    /// Map tasks that read across racks.
+    pub off_rack: u64,
+    /// Speculative duplicates launched / won.
+    pub speculative_attempts: u64,
+    /// Duplicates that beat the original attempt.
+    pub speculative_wins: u64,
+    /// Virtual seconds map tasks spent reading input.
+    pub virtual_read_s: f64,
+}
+
+impl LocalitySummary {
+    /// Extract the summary from merged job counters.
+    pub fn from_counters(c: &Counters) -> Self {
+        Self {
+            data_local: c.get(names::DATA_LOCAL_MAPS),
+            rack_local: c.get(names::RACK_LOCAL_MAPS),
+            off_rack: c.get(names::OFF_RACK_MAPS),
+            speculative_attempts: c.get(names::SPECULATIVE_ATTEMPTS),
+            speculative_wins: c.get(names::SPECULATIVE_WINS),
+            virtual_read_s: c.get(names::MAP_READ_US) as f64 / 1e6,
+        }
+    }
+
+    /// Map tasks that carried locality info at all.
+    pub fn placed(&self) -> u64 {
+        self.data_local + self.rack_local + self.off_rack
+    }
+
+    /// Percent of placed maps that were data-local (0 when none placed).
+    pub fn data_local_pct(&self) -> f64 {
+        self.pct(self.data_local)
+    }
+
+    /// Percent of placed maps that were rack-local.
+    pub fn rack_local_pct(&self) -> f64 {
+        self.pct(self.rack_local)
+    }
+
+    /// Percent of placed maps that read across racks.
+    pub fn off_rack_pct(&self) -> f64 {
+        self.pct(self.off_rack)
+    }
+
+    fn pct(&self, part: u64) -> f64 {
+        if self.placed() == 0 {
+            0.0
+        } else {
+            100.0 * part as f64 / self.placed() as f64
+        }
+    }
+}
 
 /// A simple named phase timer.
 #[derive(Debug)]
@@ -56,6 +118,28 @@ impl PhaseTimer {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn locality_summary_percentages() {
+        let mut c = Counters::default();
+        c.incr(names::DATA_LOCAL_MAPS, 6);
+        c.incr(names::RACK_LOCAL_MAPS, 3);
+        c.incr(names::OFF_RACK_MAPS, 1);
+        c.incr(names::MAP_READ_US, 2_500_000);
+        let s = LocalitySummary::from_counters(&c);
+        assert_eq!(s.placed(), 10);
+        assert!((s.data_local_pct() - 60.0).abs() < 1e-9);
+        assert!((s.rack_local_pct() - 30.0).abs() < 1e-9);
+        assert!((s.off_rack_pct() - 10.0).abs() < 1e-9);
+        assert!((s.virtual_read_s - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_counters_summarize_to_zero() {
+        let s = LocalitySummary::from_counters(&Counters::default());
+        assert_eq!(s.placed(), 0);
+        assert_eq!(s.data_local_pct(), 0.0);
+    }
 
     #[test]
     fn record_and_total() {

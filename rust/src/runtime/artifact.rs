@@ -5,7 +5,9 @@
 //! so a tile-geometry mismatch between the Python and Rust sides fails fast
 //! with a clear error instead of a shape panic mid-job.
 
+#[cfg(feature = "xla")]
 use std::path::Path;
+#[cfg(feature = "xla")]
 use std::sync::Mutex;
 
 use crate::error::{Error, Result};
@@ -93,6 +95,7 @@ pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
 /// runtime, but the `xla` crate's wrapper holds raw pointers and is not
 /// `Send`/`Sync`-marked; we serialize executions behind a mutex (the host
 /// here is single-core anyway — virtual time is what models parallelism).
+#[cfg(feature = "xla")]
 pub struct Artifact {
     /// Manifest entry this artifact was validated against.
     pub meta: ManifestEntry,
@@ -102,9 +105,12 @@ pub struct Artifact {
 // SAFETY: PJRT executables/buffers are internally thread-safe in XLA's C++
 // runtime; all mutation funnels through the mutex above. The wrapper types
 // only lack the auto-traits because they hold raw pointers.
+#[cfg(feature = "xla")]
 unsafe impl Send for Artifact {}
+#[cfg(feature = "xla")]
 unsafe impl Sync for Artifact {}
 
+#[cfg(feature = "xla")]
 impl Artifact {
     /// Load + compile one HLO text artifact.
     pub fn load(client: &xla::PjRtClient, dir: &Path, meta: ManifestEntry) -> Result<Self> {
@@ -155,6 +161,7 @@ pub enum InputValue<'a> {
     I32(&'a [i32]),
 }
 
+#[cfg(feature = "xla")]
 impl InputValue<'_> {
     fn to_literal(&self, spec: &InputSpec, name: &str) -> Result<xla::Literal> {
         let mismatch = |got: usize| {

@@ -15,12 +15,18 @@
 //!
 //! Inputs larger than a tile are decomposed into tiles; smaller ones are
 //! zero-padded (sentinel-padded for k-means centers) and outputs sliced back.
+//!
+//! The XLA/PJRT backend is compiled only with the `xla` cargo feature (the
+//! offline image has no `xla` crate); without it [`KernelRuntime::load`]
+//! errors and [`KernelRuntime::auto`] falls back to the native kernels.
 
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
 use std::path::Path;
 
 use crate::error::{Error, Result};
 
+#[cfg(feature = "xla")]
 use super::artifact::{parse_manifest, Artifact, InputValue};
 use super::native;
 
@@ -49,23 +55,29 @@ pub enum Backend {
     Native,
 }
 
+#[cfg(feature = "xla")]
 struct ClientHolder(#[allow(dead_code)] xla::PjRtClient);
 // SAFETY: the PJRT CPU client is internally synchronized; the wrapper type
 // only lacks auto-traits because it holds raw pointers.
+#[cfg(feature = "xla")]
 unsafe impl Send for ClientHolder {}
+#[cfg(feature = "xla")]
 unsafe impl Sync for ClientHolder {}
 
 /// Kernel runtime: owns the PJRT client + compiled artifacts (or nothing,
 /// for the native backend). Shared across map tasks via `Arc`.
 pub struct KernelRuntime {
     backend: Backend,
+    #[cfg(feature = "xla")]
     _client: Option<ClientHolder>,
+    #[cfg(feature = "xla")]
     artifacts: HashMap<String, Artifact>,
 }
 
 impl KernelRuntime {
     /// Load every artifact listed in `dir/manifest.txt` and compile it on a
     /// fresh PJRT CPU client.
+    #[cfg(feature = "xla")]
     pub fn load(dir: &Path) -> Result<Self> {
         let manifest_path = dir.join("manifest.txt");
         let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
@@ -86,9 +98,24 @@ impl KernelRuntime {
         })
     }
 
+    /// Without the `xla` feature there is nothing to load.
+    #[cfg(not(feature = "xla"))]
+    pub fn load(dir: &Path) -> Result<Self> {
+        Err(Error::Runtime(format!(
+            "{}: XLA backend not compiled in (build with --features xla)",
+            dir.display()
+        )))
+    }
+
     /// Native-only runtime (no artifacts needed).
     pub fn native() -> Self {
-        Self { backend: Backend::Native, _client: None, artifacts: HashMap::new() }
+        Self {
+            backend: Backend::Native,
+            #[cfg(feature = "xla")]
+            _client: None,
+            #[cfg(feature = "xla")]
+            artifacts: HashMap::new(),
+        }
     }
 
     /// Try XLA, fall back to native with a log line.
@@ -96,7 +123,7 @@ impl KernelRuntime {
         match Self::load(dir) {
             Ok(rt) => rt,
             Err(e) => {
-                log::warn!("artifacts unavailable ({e}); using native kernels");
+                eprintln!("psch: artifacts unavailable ({e}); using native kernels");
                 Self::native()
             }
         }
@@ -107,6 +134,7 @@ impl KernelRuntime {
         self.backend
     }
 
+    #[cfg(feature = "xla")]
     fn artifact(&self, name: &str) -> Result<&Artifact> {
         self.artifacts
             .get(name)
@@ -131,35 +159,40 @@ impl KernelRuntime {
         if self.backend == Backend::Native {
             return Ok(native::rbf_block(x, y, p, q, d, gamma));
         }
-        if d > PAD_DIM {
-            return Err(Error::Runtime(format!(
-                "rbf_tile: d={d} exceeds padded dim {PAD_DIM}"
-            )));
-        }
-        let artifact = self.artifact("rbf_block")?;
-        let mut out = vec![0.0f32; p * q];
-        let mut xt = vec![0.0f32; RBF_TILE * PAD_DIM];
-        let mut yt = vec![0.0f32; RBF_TILE * PAD_DIM];
-        for bi in (0..p).step_by(RBF_TILE) {
-            let pi = (p - bi).min(RBF_TILE);
-            pad_rows(&mut xt, &x[bi * d..], pi, d, PAD_DIM);
-            for bj in (0..q).step_by(RBF_TILE) {
-                let qj = (q - bj).min(RBF_TILE);
-                pad_rows(&mut yt, &y[bj * d..], qj, d, PAD_DIM);
-                let outs = artifact.execute(&[
-                    InputValue::F32(&xt),
-                    InputValue::F32(&yt),
-                    InputValue::F32(&[gamma]),
-                ])?;
-                let tile = outs[0].to_vec::<f32>()?;
-                for i in 0..pi {
-                    for j in 0..qj {
-                        out[(bi + i) * q + (bj + j)] = tile[i * RBF_TILE + j];
+        #[cfg(not(feature = "xla"))]
+        unreachable!("Xla backend cannot be constructed without the xla feature");
+        #[cfg(feature = "xla")]
+        {
+            if d > PAD_DIM {
+                return Err(Error::Runtime(format!(
+                    "rbf_tile: d={d} exceeds padded dim {PAD_DIM}"
+                )));
+            }
+            let artifact = self.artifact("rbf_block")?;
+            let mut out = vec![0.0f32; p * q];
+            let mut xt = vec![0.0f32; RBF_TILE * PAD_DIM];
+            let mut yt = vec![0.0f32; RBF_TILE * PAD_DIM];
+            for bi in (0..p).step_by(RBF_TILE) {
+                let pi = (p - bi).min(RBF_TILE);
+                pad_rows(&mut xt, &x[bi * d..], pi, d, PAD_DIM);
+                for bj in (0..q).step_by(RBF_TILE) {
+                    let qj = (q - bj).min(RBF_TILE);
+                    pad_rows(&mut yt, &y[bj * d..], qj, d, PAD_DIM);
+                    let outs = artifact.execute(&[
+                        InputValue::F32(&xt),
+                        InputValue::F32(&yt),
+                        InputValue::F32(&[gamma]),
+                    ])?;
+                    let tile = outs[0].to_vec::<f32>()?;
+                    for i in 0..pi {
+                        for j in 0..qj {
+                            out[(bi + i) * q + (bj + j)] = tile[i * RBF_TILE + j];
+                        }
                     }
                 }
             }
+            Ok(out)
         }
-        Ok(out)
     }
 
     // ------------------------------------------------------------------
@@ -171,31 +204,36 @@ impl KernelRuntime {
         if self.backend == Backend::Native {
             return Ok(native::matvec_block(a, v, r, c));
         }
-        let artifact = self.artifact("matvec_block")?;
-        let mut out = vec![0.0f32; r];
-        let mut at = vec![0.0f32; MV_BLOCK * MV_BLOCK];
-        let mut vt = vec![0.0f32; MV_BLOCK];
-        for bi in (0..r).step_by(MV_BLOCK) {
-            let ri = (r - bi).min(MV_BLOCK);
-            for bj in (0..c).step_by(MV_BLOCK) {
-                let cj = (c - bj).min(MV_BLOCK);
-                // Pack the (ri, cj) sub-block of A.
-                at.fill(0.0);
-                for i in 0..ri {
-                    let src = &a[(bi + i) * c + bj..(bi + i) * c + bj + cj];
-                    at[i * MV_BLOCK..i * MV_BLOCK + cj].copy_from_slice(src);
-                }
-                vt.fill(0.0);
-                vt[..cj].copy_from_slice(&v[bj..bj + cj]);
-                let outs = artifact
-                    .execute(&[InputValue::F32(&at), InputValue::F32(&vt)])?;
-                let block = outs[0].to_vec::<f32>()?;
-                for i in 0..ri {
-                    out[bi + i] += block[i];
+        #[cfg(not(feature = "xla"))]
+        unreachable!("Xla backend cannot be constructed without the xla feature");
+        #[cfg(feature = "xla")]
+        {
+            let artifact = self.artifact("matvec_block")?;
+            let mut out = vec![0.0f32; r];
+            let mut at = vec![0.0f32; MV_BLOCK * MV_BLOCK];
+            let mut vt = vec![0.0f32; MV_BLOCK];
+            for bi in (0..r).step_by(MV_BLOCK) {
+                let ri = (r - bi).min(MV_BLOCK);
+                for bj in (0..c).step_by(MV_BLOCK) {
+                    let cj = (c - bj).min(MV_BLOCK);
+                    // Pack the (ri, cj) sub-block of A.
+                    at.fill(0.0);
+                    for i in 0..ri {
+                        let src = &a[(bi + i) * c + bj..(bi + i) * c + bj + cj];
+                        at[i * MV_BLOCK..i * MV_BLOCK + cj].copy_from_slice(src);
+                    }
+                    vt.fill(0.0);
+                    vt[..cj].copy_from_slice(&v[bj..bj + cj]);
+                    let outs = artifact
+                        .execute(&[InputValue::F32(&at), InputValue::F32(&vt)])?;
+                    let block = outs[0].to_vec::<f32>()?;
+                    for i in 0..ri {
+                        out[bi + i] += block[i];
+                    }
                 }
             }
+            Ok(out)
         }
-        Ok(out)
     }
 
     // ------------------------------------------------------------------
@@ -216,33 +254,39 @@ impl KernelRuntime {
         if self.backend == Backend::Native {
             return Ok(native::laplacian_block(s, dinv_r, dinv_c, n, n, flag));
         }
-        if n > MV_BLOCK {
-            return Err(Error::Runtime(format!(
-                "laplacian_tile: n={n} exceeds block {MV_BLOCK}"
-            )));
+        #[cfg(not(feature = "xla"))]
+        unreachable!("Xla backend cannot be constructed without the xla feature");
+        #[cfg(feature = "xla")]
+        {
+            if n > MV_BLOCK {
+                return Err(Error::Runtime(format!(
+                    "laplacian_tile: n={n} exceeds block {MV_BLOCK}"
+                )));
+            }
+            let artifact = self.artifact("laplacian_block")?;
+            let mut st = vec![0.0f32; MV_BLOCK * MV_BLOCK];
+            for i in 0..n {
+                st[i * MV_BLOCK..i * MV_BLOCK + n]
+                    .copy_from_slice(&s[i * n..(i + 1) * n]);
+            }
+            let mut dr = vec![0.0f32; MV_BLOCK];
+            dr[..n].copy_from_slice(dinv_r);
+            let mut dc = vec![0.0f32; MV_BLOCK];
+            dc[..n].copy_from_slice(dinv_c);
+            let outs = artifact.execute(&[
+                InputValue::F32(&st),
+                InputValue::F32(&dr),
+                InputValue::F32(&dc),
+                InputValue::F32(&[flag]),
+            ])?;
+            let full = outs[0].to_vec::<f32>()?;
+            let mut out = vec![0.0f32; n * n];
+            for i in 0..n {
+                out[i * n..(i + 1) * n]
+                    .copy_from_slice(&full[i * MV_BLOCK..i * MV_BLOCK + n]);
+            }
+            Ok(out)
         }
-        let artifact = self.artifact("laplacian_block")?;
-        let mut st = vec![0.0f32; MV_BLOCK * MV_BLOCK];
-        for i in 0..n {
-            st[i * MV_BLOCK..i * MV_BLOCK + n].copy_from_slice(&s[i * n..(i + 1) * n]);
-        }
-        let mut dr = vec![0.0f32; MV_BLOCK];
-        dr[..n].copy_from_slice(dinv_r);
-        let mut dc = vec![0.0f32; MV_BLOCK];
-        dc[..n].copy_from_slice(dinv_c);
-        let outs = artifact.execute(&[
-            InputValue::F32(&st),
-            InputValue::F32(&dr),
-            InputValue::F32(&dc),
-            InputValue::F32(&[flag]),
-        ])?;
-        let full = outs[0].to_vec::<f32>()?;
-        let mut out = vec![0.0f32; n * n];
-        for i in 0..n {
-            out[i * n..(i + 1) * n]
-                .copy_from_slice(&full[i * MV_BLOCK..i * MV_BLOCK + n]);
-        }
-        Ok(out)
     }
 
     // ------------------------------------------------------------------
@@ -263,50 +307,55 @@ impl KernelRuntime {
             let mask = vec![1.0f32; p];
             return Ok(native::kmeans_step(points, centers, &mask, p, k, d));
         }
-        if d > PAD_DIM || k > KM_K {
-            return Err(Error::Runtime(format!(
-                "kmeans_step: d={d} (max {PAD_DIM}) or k={k} (max {KM_K}) too large"
-            )));
-        }
-        let artifact = self.artifact("kmeans_step")?;
-        // Pad centers: real ones zero-extended in dim, fake ones pushed to a
-        // far sentinel so no real point ever picks them.
-        let mut ct = vec![0.0f32; KM_K * PAD_DIM];
-        for ci in 0..KM_K {
-            if ci < k {
-                ct[ci * PAD_DIM..ci * PAD_DIM + d]
-                    .copy_from_slice(&centers[ci * d..(ci + 1) * d]);
-            } else {
-                ct[ci * PAD_DIM..(ci + 1) * PAD_DIM].fill(CENTER_SENTINEL);
+        #[cfg(not(feature = "xla"))]
+        unreachable!("Xla backend cannot be constructed without the xla feature");
+        #[cfg(feature = "xla")]
+        {
+            if d > PAD_DIM || k > KM_K {
+                return Err(Error::Runtime(format!(
+                    "kmeans_step: d={d} (max {PAD_DIM}) or k={k} (max {KM_K}) too large"
+                )));
             }
-        }
-        let mut assign = vec![0i32; p];
-        let mut sums = vec![0.0f32; k * d];
-        let mut counts = vec![0.0f32; k];
-        let mut pt = vec![0.0f32; KM_PTS * PAD_DIM];
-        let mut mask = vec![0.0f32; KM_PTS];
-        for b in (0..p).step_by(KM_PTS) {
-            let pb = (p - b).min(KM_PTS);
-            pad_rows(&mut pt, &points[b * d..], pb, d, PAD_DIM);
-            mask.fill(0.0);
-            mask[..pb].fill(1.0);
-            let outs = artifact.execute(&[
-                InputValue::F32(&pt),
-                InputValue::F32(&ct),
-                InputValue::F32(&mask),
-            ])?;
-            let a = outs[0].to_vec::<i32>()?;
-            let s = outs[1].to_vec::<f32>()?;
-            let c = outs[2].to_vec::<f32>()?;
-            assign[b..b + pb].copy_from_slice(&a[..pb]);
-            for ci in 0..k {
-                counts[ci] += c[ci];
-                for t in 0..d {
-                    sums[ci * d + t] += s[ci * PAD_DIM + t];
+            let artifact = self.artifact("kmeans_step")?;
+            // Pad centers: real ones zero-extended in dim, fake ones pushed to a
+            // far sentinel so no real point ever picks them.
+            let mut ct = vec![0.0f32; KM_K * PAD_DIM];
+            for ci in 0..KM_K {
+                if ci < k {
+                    ct[ci * PAD_DIM..ci * PAD_DIM + d]
+                        .copy_from_slice(&centers[ci * d..(ci + 1) * d]);
+                } else {
+                    ct[ci * PAD_DIM..(ci + 1) * PAD_DIM].fill(CENTER_SENTINEL);
                 }
             }
+            let mut assign = vec![0i32; p];
+            let mut sums = vec![0.0f32; k * d];
+            let mut counts = vec![0.0f32; k];
+            let mut pt = vec![0.0f32; KM_PTS * PAD_DIM];
+            let mut mask = vec![0.0f32; KM_PTS];
+            for b in (0..p).step_by(KM_PTS) {
+                let pb = (p - b).min(KM_PTS);
+                pad_rows(&mut pt, &points[b * d..], pb, d, PAD_DIM);
+                mask.fill(0.0);
+                mask[..pb].fill(1.0);
+                let outs = artifact.execute(&[
+                    InputValue::F32(&pt),
+                    InputValue::F32(&ct),
+                    InputValue::F32(&mask),
+                ])?;
+                let a = outs[0].to_vec::<i32>()?;
+                let s = outs[1].to_vec::<f32>()?;
+                let c = outs[2].to_vec::<f32>()?;
+                assign[b..b + pb].copy_from_slice(&a[..pb]);
+                for ci in 0..k {
+                    counts[ci] += c[ci];
+                    for t in 0..d {
+                        sums[ci * d + t] += s[ci * PAD_DIM + t];
+                    }
+                }
+            }
+            Ok((assign, sums, counts))
         }
-        Ok((assign, sums, counts))
     }
 
     // ------------------------------------------------------------------
@@ -318,30 +367,36 @@ impl KernelRuntime {
         if self.backend == Backend::Native {
             return Ok(native::normalize_rows(z, r, d));
         }
-        if d > PAD_DIM {
-            return Err(Error::Runtime(format!(
-                "normalize_rows: d={d} exceeds padded dim {PAD_DIM}"
-            )));
-        }
-        let artifact = self.artifact("normalize_rows")?;
-        let mut out = vec![0.0f32; r * d];
-        let mut zt = vec![0.0f32; NORM_ROWS * PAD_DIM];
-        for b in (0..r).step_by(NORM_ROWS) {
-            let rb = (r - b).min(NORM_ROWS);
-            pad_rows(&mut zt, &z[b * d..], rb, d, PAD_DIM);
-            let outs = artifact.execute(&[InputValue::F32(&zt)])?;
-            let tile = outs[0].to_vec::<f32>()?;
-            for i in 0..rb {
-                out[(b + i) * d..(b + i + 1) * d]
-                    .copy_from_slice(&tile[i * PAD_DIM..i * PAD_DIM + d]);
+        #[cfg(not(feature = "xla"))]
+        unreachable!("Xla backend cannot be constructed without the xla feature");
+        #[cfg(feature = "xla")]
+        {
+            if d > PAD_DIM {
+                return Err(Error::Runtime(format!(
+                    "normalize_rows: d={d} exceeds padded dim {PAD_DIM}"
+                )));
             }
+            let artifact = self.artifact("normalize_rows")?;
+            let mut out = vec![0.0f32; r * d];
+            let mut zt = vec![0.0f32; NORM_ROWS * PAD_DIM];
+            for b in (0..r).step_by(NORM_ROWS) {
+                let rb = (r - b).min(NORM_ROWS);
+                pad_rows(&mut zt, &z[b * d..], rb, d, PAD_DIM);
+                let outs = artifact.execute(&[InputValue::F32(&zt)])?;
+                let tile = outs[0].to_vec::<f32>()?;
+                for i in 0..rb {
+                    out[(b + i) * d..(b + i + 1) * d]
+                        .copy_from_slice(&tile[i * PAD_DIM..i * PAD_DIM + d]);
+                }
+            }
+            Ok(out)
         }
-        Ok(out)
     }
 }
 
 /// Pack `rows` rows of width `d` from `src` into `dst` (row width `pad_d`),
 /// zero-filling the remainder of `dst`.
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
 fn pad_rows(dst: &mut [f32], src: &[f32], rows: usize, d: usize, pad_d: usize) {
     dst.fill(0.0);
     for i in 0..rows {

@@ -12,7 +12,9 @@ pub mod artifact;
 pub mod executor;
 pub mod native;
 
-pub use artifact::{parse_manifest, Artifact, InputSpec, InputValue, ManifestEntry};
+#[cfg(feature = "xla")]
+pub use artifact::Artifact;
+pub use artifact::{parse_manifest, InputSpec, InputValue, ManifestEntry};
 pub use executor::{Backend, KernelRuntime};
 
 /// Default artifact directory, overridable via `PSCH_ARTIFACTS`.

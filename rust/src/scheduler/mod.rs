@@ -1,0 +1,562 @@
+//! JobTracker: the locality- and straggler-aware task scheduler (paper §2.2).
+//!
+//! Hadoop's scheduling machinery is what the source paper credits for its
+//! scaling: the JobTracker holds a rack topology over the slaves, every
+//! TaskTracker reports free map/reduce slots via periodic **heartbeats**,
+//! pending tasks carry the DFS block locations of their input split, and
+//! assignment walks the three locality tiers (node-local → rack-local →
+//! off-rack, [`placement`]) — optionally waiting a few heartbeats for local
+//! work to appear (delay scheduling, [`policy`]). Slow attempts get
+//! duplicated on idle slots and the earlier finisher wins
+//! ([`speculative`]).
+//!
+//! The tracker runs *live* inside [`crate::mapreduce::engine::run`]: each
+//! job's measured task costs + split locations are replayed through
+//! [`JobTracker::plan`], which simulates the heartbeat protocol in virtual
+//! time on the cluster's [`crate::cluster::NetworkModel`] — off-rack reads
+//! are charged the oversubscribed core bandwidth, stragglers trigger real
+//! duplicate attempts in the plan, and the resulting locality/speculation
+//! tallies surface as job counters.
+
+pub mod placement;
+pub mod policy;
+pub mod rack;
+pub mod speculative;
+
+pub use placement::{classify, Locality};
+pub use policy::Policy;
+pub use rack::RackTopology;
+pub use speculative::SpeculationConfig;
+
+use crate::cluster::{NetworkModel, TaskCost};
+
+/// Comparison slack for virtual-time arithmetic.
+const EPS: f64 = 1e-9;
+
+/// One schedulable task: its cost profile plus the nodes holding its input.
+#[derive(Debug, Clone, Default)]
+pub struct TaskSpec {
+    /// Measured/modeled task cost (compute + bytes).
+    pub cost: TaskCost,
+    /// Nodes holding a replica of the task's input split (empty = no
+    /// locality preference, e.g. synthetic splits or shuffle output).
+    pub hosts: Vec<usize>,
+}
+
+/// JobTracker knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrackerConfig {
+    /// Virtual seconds between one slave's heartbeats (Hadoop default: 3s).
+    pub heartbeat_s: f64,
+    /// Slot-filling policy.
+    pub policy: Policy,
+    /// Speculative-execution knobs.
+    pub speculation: SpeculationConfig,
+}
+
+impl Default for TrackerConfig {
+    fn default() -> Self {
+        Self {
+            heartbeat_s: 3.0,
+            policy: Policy::default(),
+            speculation: SpeculationConfig::default(),
+        }
+    }
+}
+
+/// One task attempt in the plan.
+#[derive(Debug, Clone, Copy)]
+pub struct Attempt {
+    /// Task index.
+    pub task: usize,
+    /// Slave it ran on.
+    pub slave: usize,
+    /// Global slot index (slave × slots_per_slave + local slot).
+    pub slot: usize,
+    /// Virtual start time.
+    pub start_s: f64,
+    /// Virtual end time (a killed loser ends when the winner reports).
+    pub end_s: f64,
+    /// Locality tier of the attempt.
+    pub locality: Locality,
+    /// Was this a speculative duplicate?
+    pub speculative: bool,
+    /// Did this attempt produce the task's result?
+    pub won: bool,
+}
+
+/// The virtual execution plan of one task phase.
+#[derive(Debug, Clone, Default)]
+pub struct SchedulePlan {
+    /// Virtual seconds from first heartbeat to last task completion.
+    pub makespan_s: f64,
+    /// Every attempt, in launch order.
+    pub attempts: Vec<Attempt>,
+    /// Winning attempts that were node-local (tasks with host info only).
+    pub node_local: usize,
+    /// Winning attempts that were rack-local.
+    pub rack_local: usize,
+    /// Winning attempts that read across racks.
+    pub off_rack: usize,
+    /// Speculative duplicates launched.
+    pub speculative_attempts: usize,
+    /// Duplicates that beat the original attempt.
+    pub speculative_wins: usize,
+    /// Heartbeats processed while the phase ran.
+    pub heartbeats: u64,
+    /// Total virtual seconds winning attempts spent reading input.
+    pub input_read_s: f64,
+    /// Sum of winning-attempt durations (serial work).
+    pub total_work_s: f64,
+}
+
+impl SchedulePlan {
+    /// Winning attempts that had locality information at all.
+    pub fn placed(&self) -> usize {
+        self.node_local + self.rack_local + self.off_rack
+    }
+
+    /// Percentage of placed tasks that ran node-local (0 when no task
+    /// carried host info).
+    pub fn data_local_pct(&self) -> f64 {
+        if self.placed() == 0 {
+            0.0
+        } else {
+            100.0 * self.node_local as f64 / self.placed() as f64
+        }
+    }
+}
+
+/// Bookkeeping for a task's primary running attempt.
+#[derive(Debug, Clone, Copy)]
+struct RunningAttempt {
+    start: f64,
+    end: f64,
+    slot: usize,
+    attempt_idx: usize,
+}
+
+/// The JobTracker: borrows the cluster's topology, per-slave speeds, cost
+/// model and knobs, and turns a task list into a [`SchedulePlan`].
+pub struct JobTracker<'a> {
+    topo: &'a RackTopology,
+    /// Relative speed per slave (1.0 = reference machine).
+    speeds: &'a [f64],
+    slots_per_slave: usize,
+    model: &'a NetworkModel,
+    cfg: &'a TrackerConfig,
+}
+
+impl<'a> JobTracker<'a> {
+    /// Tracker over `topo.num_nodes()` slaves with `slots_per_slave` each.
+    pub fn new(
+        topo: &'a RackTopology,
+        speeds: &'a [f64],
+        slots_per_slave: usize,
+        model: &'a NetworkModel,
+        cfg: &'a TrackerConfig,
+    ) -> Self {
+        Self { topo, speeds, slots_per_slave: slots_per_slave.max(1), model, cfg }
+    }
+
+    /// Virtual duration of one attempt of `spec` on `slave` at `locality`.
+    fn duration(&self, spec: &TaskSpec, slave: usize, locality: Locality) -> f64 {
+        let speed = self.speeds.get(slave).copied().unwrap_or(1.0).max(1e-9);
+        self.model.task_dispatch_s
+            + self.model.read_time_at(spec.cost.input_bytes, locality)
+            + self.model.write_time(spec.cost.output_bytes)
+            + spec.cost.compute_s * self.model.compute_scale / speed
+    }
+
+    /// Simulate the heartbeat protocol over `tasks` and return the plan.
+    ///
+    /// Deterministic: heartbeats are staggered by slave id, ties break on
+    /// the lower id, and attempt durations are pure functions of the cost
+    /// model — the same inputs always produce the same plan.
+    pub fn plan(&self, tasks: &[TaskSpec]) -> SchedulePlan {
+        let mut plan = SchedulePlan::default();
+        if tasks.is_empty() {
+            return plan;
+        }
+        let m = self.topo.num_nodes();
+        let hb = self.cfg.heartbeat_s.max(1e-3);
+
+        // Slot s*slots_per_slave + j is slot j of slave s.
+        let mut busy_until = vec![0.0f64; m * self.slots_per_slave];
+        // Pending queue in submission order.
+        let mut pending: Vec<usize> = (0..tasks.len()).collect();
+        // Completion time per task (INFINITY until assigned/resolved).
+        let mut done_at = vec![f64::INFINITY; tasks.len()];
+        // Final (end, duration) of the winning attempt, once known.
+        let mut finish: Vec<Option<(f64, f64)>> = vec![None; tasks.len()];
+        let mut primary: Vec<Option<RunningAttempt>> = vec![None; tasks.len()];
+        let mut speculated = vec![false; tasks.len()];
+        let mut retired = vec![false; tasks.len()];
+        let mut remaining = tasks.len();
+        // Staggered heartbeat phases so slaves don't report in lockstep.
+        let mut next_hb: Vec<f64> = (0..m).map(|s| hb * s as f64 / m as f64).collect();
+        // Delay-scheduling skip count per slave.
+        let mut skips = vec![0usize; m];
+
+        while remaining > 0 {
+            // Earliest-reporting slave; lower id wins ties.
+            let mut s = 0usize;
+            for i in 1..m {
+                if next_hb[i] < next_hb[s] - EPS {
+                    s = i;
+                }
+            }
+            let now = next_hb[s];
+            next_hb[s] += hb;
+            plan.heartbeats += 1;
+
+            // Retire tasks whose winning attempt has finished by now.
+            for task in 0..tasks.len() {
+                if !retired[task] && done_at[task] <= now + EPS {
+                    retired[task] = true;
+                    remaining -= 1;
+                }
+            }
+            if remaining == 0 {
+                break;
+            }
+
+            let mut skipped_for_locality = false;
+            let base = s * self.slots_per_slave;
+            for slot in base..base + self.slots_per_slave {
+                if busy_until[slot] > now + EPS {
+                    continue;
+                }
+                if !pending.is_empty() {
+                    // -------- normal assignment --------
+                    let choice = match self.cfg.policy {
+                        Policy::Fifo => {
+                            let loc = classify(s, &tasks[pending[0]].hosts, self.topo);
+                            Some((0, loc))
+                        }
+                        Policy::LocalityAware { locality_delay } => {
+                            match placement::pick_best(&pending, tasks, s, self.topo) {
+                                Some((pos, Locality::NodeLocal)) => {
+                                    skips[s] = 0;
+                                    Some((pos, Locality::NodeLocal))
+                                }
+                                Some((pos, loc)) => {
+                                    if skips[s] < locality_delay {
+                                        // Delay scheduling: hold the slot
+                                        // open, hoping local work frees up.
+                                        skipped_for_locality = true;
+                                        None
+                                    } else {
+                                        skips[s] = 0;
+                                        Some((pos, loc))
+                                    }
+                                }
+                                None => None,
+                            }
+                        }
+                    };
+                    let Some((pos, locality)) = choice else { continue };
+                    let task = pending.remove(pos);
+                    let dur = self.duration(&tasks[task], s, locality);
+                    let end = now + dur;
+                    busy_until[slot] = end;
+                    done_at[task] = end;
+                    finish[task] = Some((end, dur));
+                    primary[task] = Some(RunningAttempt {
+                        start: now,
+                        end,
+                        slot,
+                        attempt_idx: plan.attempts.len(),
+                    });
+                    plan.attempts.push(Attempt {
+                        task,
+                        slave: s,
+                        slot,
+                        start_s: now,
+                        end_s: end,
+                        locality,
+                        speculative: false,
+                        won: true,
+                    });
+                } else if self.cfg.speculation.enabled {
+                    // -------- speculation: duplicate a straggler --------
+                    let completed: Vec<f64> = finish
+                        .iter()
+                        .filter_map(|f| *f)
+                        .filter(|&(end, _)| end <= now + EPS)
+                        .map(|(_, dur)| dur)
+                        .collect();
+                    // Hadoop restarts a slow task "on another node": never
+                    // duplicate onto the slave already running the attempt.
+                    let running: Vec<(usize, f64)> = (0..tasks.len())
+                        .filter(|&t| {
+                            !speculated[t]
+                                && done_at[t] > now + EPS
+                                && primary[t].is_some_and(|r| {
+                                    r.slot / self.slots_per_slave != s
+                                })
+                        })
+                        .map(|t| (t, primary[t].unwrap().start))
+                        .collect();
+                    let Some(task) = speculative::pick_straggler(
+                        now,
+                        &running,
+                        &completed,
+                        &self.cfg.speculation,
+                    ) else {
+                        continue;
+                    };
+                    speculated[task] = true;
+                    let orig = primary[task].unwrap();
+                    let locality = classify(s, &tasks[task].hosts, self.topo);
+                    let dur = self.duration(&tasks[task], s, locality);
+                    let spec_end = now + dur;
+                    let win_end = orig.end.min(spec_end);
+                    // The loser is killed the moment the winner reports;
+                    // both slots free then.
+                    busy_until[orig.slot] = win_end;
+                    busy_until[slot] = win_end;
+                    done_at[task] = win_end;
+                    plan.speculative_attempts += 1;
+                    let spec_wins = spec_end < orig.end;
+                    if spec_wins {
+                        plan.speculative_wins += 1;
+                        plan.attempts[orig.attempt_idx].won = false;
+                        plan.attempts[orig.attempt_idx].end_s = win_end;
+                        finish[task] = Some((win_end, win_end - now));
+                    } else {
+                        finish[task] = Some((win_end, win_end - orig.start));
+                    }
+                    plan.attempts.push(Attempt {
+                        task,
+                        slave: s,
+                        slot,
+                        start_s: now,
+                        end_s: win_end,
+                        locality,
+                        speculative: true,
+                        won: spec_wins,
+                    });
+                }
+            }
+            if skipped_for_locality {
+                skips[s] += 1;
+            }
+        }
+
+        // Tally the winning attempts.
+        for a in &plan.attempts {
+            if !a.won {
+                continue;
+            }
+            plan.makespan_s = plan.makespan_s.max(a.end_s);
+            plan.total_work_s += a.end_s - a.start_s;
+            plan.input_read_s += self
+                .model
+                .read_time_at(tasks[a.task].cost.input_bytes, a.locality);
+            if !tasks[a.task].hosts.is_empty() {
+                match a.locality {
+                    Locality::NodeLocal => plan.node_local += 1,
+                    Locality::RackLocal => plan.rack_local += 1,
+                    Locality::OffRack => plan.off_rack += 1,
+                }
+            }
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet_model() -> NetworkModel {
+        NetworkModel {
+            job_setup_s: 0.0,
+            task_dispatch_s: 0.0,
+            disk_bw: 1e18,
+            net_bw: 1e18,
+            rack_bw: 1e18,
+            cross_rack_bw: 1e18,
+            coord_per_machine_s: 0.0,
+            shuffle_latency_s: 0.0,
+            compute_scale: 1.0,
+        }
+    }
+
+    fn compute_task(secs: f64, hosts: Vec<usize>) -> TaskSpec {
+        TaskSpec {
+            cost: TaskCost { compute_s: secs, input_bytes: 0, output_bytes: 0 },
+            hosts,
+        }
+    }
+
+    fn tracker_cfg(policy: Policy, speculation: bool) -> TrackerConfig {
+        TrackerConfig {
+            heartbeat_s: 1.0,
+            policy,
+            speculation: SpeculationConfig {
+                enabled: speculation,
+                ..Default::default()
+            },
+        }
+    }
+
+    #[test]
+    fn empty_phase_is_free() {
+        let topo = RackTopology::single(2);
+        let model = quiet_model();
+        let cfg = TrackerConfig::default();
+        let speeds = [1.0, 1.0];
+        let jt = JobTracker::new(&topo, &speeds, 2, &model, &cfg);
+        let plan = jt.plan(&[]);
+        assert_eq!(plan.makespan_s, 0.0);
+        assert_eq!(plan.heartbeats, 0);
+        assert!(plan.attempts.is_empty());
+    }
+
+    #[test]
+    fn every_task_runs_exactly_once_without_speculation() {
+        let topo = RackTopology::uniform(3, 2);
+        let model = quiet_model();
+        let cfg = tracker_cfg(Policy::Fifo, false);
+        let speeds = [1.0; 3];
+        let jt = JobTracker::new(&topo, &speeds, 2, &model, &cfg);
+        let tasks: Vec<TaskSpec> =
+            (0..10).map(|_| compute_task(2.0, vec![])).collect();
+        let plan = jt.plan(&tasks);
+        assert_eq!(plan.attempts.len(), 10);
+        let mut seen = vec![0usize; 10];
+        for a in &plan.attempts {
+            assert!(a.won);
+            seen[a.task] += 1;
+            assert!(a.end_s > a.start_s);
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+        assert!(plan.makespan_s >= 2.0);
+        assert!(plan.heartbeats > 0);
+        // No host info -> nothing counted in locality tallies.
+        assert_eq!(plan.placed(), 0);
+    }
+
+    #[test]
+    fn locality_aware_places_tasks_on_their_hosts() {
+        // Two slaves in two racks; each task's data lives on exactly one.
+        let topo = RackTopology::uniform(2, 2);
+        let model = quiet_model();
+        let cfg = tracker_cfg(Policy::default(), false);
+        let speeds = [1.0, 1.0];
+        let jt = JobTracker::new(&topo, &speeds, 1, &model, &cfg);
+        let tasks = vec![
+            compute_task(1.0, vec![1]),
+            compute_task(1.0, vec![0]),
+            compute_task(1.0, vec![1]),
+            compute_task(1.0, vec![0]),
+        ];
+        let plan = jt.plan(&tasks);
+        assert_eq!(plan.node_local, 4, "{plan:?}");
+        assert_eq!(plan.off_rack, 0);
+        assert!((plan.data_local_pct() - 100.0).abs() < 1e-9);
+        for a in &plan.attempts {
+            assert!(tasks[a.task].hosts.contains(&a.slave));
+        }
+    }
+
+    #[test]
+    fn fifo_ignores_hosts() {
+        // Same setup as above, but FIFO: slave 0 heartbeats first and takes
+        // task 0 even though its data lives on slave 1 (off-rack here).
+        let topo = RackTopology::uniform(2, 2);
+        let model = quiet_model();
+        let cfg = tracker_cfg(Policy::Fifo, false);
+        let speeds = [1.0, 1.0];
+        let jt = JobTracker::new(&topo, &speeds, 1, &model, &cfg);
+        let tasks = vec![compute_task(1.0, vec![1]), compute_task(1.0, vec![0])];
+        let plan = jt.plan(&tasks);
+        assert_eq!(plan.off_rack, 2, "{plan:?}");
+        assert_eq!(plan.node_local, 0);
+    }
+
+    #[test]
+    fn delay_scheduling_gives_up_eventually() {
+        // One slave, one rack; the task's host does not exist locally, so
+        // after `locality_delay` skipped heartbeats it runs anyway.
+        let topo = RackTopology::single(1);
+        let model = quiet_model();
+        let cfg = TrackerConfig {
+            heartbeat_s: 1.0,
+            policy: Policy::LocalityAware { locality_delay: 2 },
+            speculation: SpeculationConfig { enabled: false, ..Default::default() },
+        };
+        let speeds = [1.0];
+        let jt = JobTracker::new(&topo, &speeds, 1, &model, &cfg);
+        let tasks = vec![compute_task(1.0, vec![7])];
+        let plan = jt.plan(&tasks);
+        assert_eq!(plan.attempts.len(), 1);
+        // Skipped the heartbeats at t=0 and t=1, assigned at t=2.
+        assert!((plan.attempts[0].start_s - 2.0).abs() < 1e-9, "{plan:?}");
+        assert_eq!(plan.off_rack, 1);
+    }
+
+    #[test]
+    fn speculation_duplicates_the_straggler_and_wins() {
+        // Slave 1 is 10x slow; its task gets a duplicate on the fast slave
+        // once the pending queue drains, cutting the makespan.
+        let topo = RackTopology::single(2);
+        let model = quiet_model();
+        let speeds = [1.0, 0.1];
+        let tasks = vec![
+            compute_task(10.0, vec![]),
+            compute_task(10.0, vec![]),
+            compute_task(10.0, vec![]),
+        ];
+        let run = |spec: bool| {
+            let cfg = tracker_cfg(Policy::Fifo, spec);
+            let jt = JobTracker::new(&topo, &speeds, 1, &model, &cfg);
+            jt.plan(&tasks)
+        };
+        let without = run(false);
+        let with = run(true);
+        assert_eq!(with.speculative_attempts, 1, "{with:?}");
+        assert_eq!(with.speculative_wins, 1);
+        assert!(
+            with.makespan_s < without.makespan_s * 0.6,
+            "spec {} vs plain {}",
+            with.makespan_s,
+            without.makespan_s
+        );
+        // Exactly one winning attempt per task either way.
+        for plan in [&with, &without] {
+            let wins = plan.attempts.iter().filter(|a| a.won).count();
+            assert_eq!(wins, tasks.len());
+        }
+    }
+
+    #[test]
+    fn off_rack_reads_cost_more() {
+        // Same single task, forced node-local vs off-rack by policy: the
+        // off-rack read is charged the slower cross-rack bandwidth.
+        let topo = RackTopology::uniform(2, 2);
+        let model = NetworkModel {
+            disk_bw: 100e6,
+            cross_rack_bw: 10e6,
+            ..quiet_model()
+        };
+        let speeds = [1.0, 1.0];
+        let cfg = tracker_cfg(Policy::Fifo, false);
+        let jt = JobTracker::new(&topo, &speeds, 1, &model, &cfg);
+        let mk = |hosts: Vec<usize>| TaskSpec {
+            cost: TaskCost {
+                compute_s: 0.0,
+                input_bytes: 100_000_000,
+                output_bytes: 0,
+            },
+            hosts,
+        };
+        // FIFO sends task 0 to slave 0 (first heartbeat).
+        let local = jt.plan(&[mk(vec![0])]);
+        let remote = jt.plan(&[mk(vec![1])]);
+        assert!(remote.input_read_s > local.input_read_s * 5.0, "{remote:?}");
+        assert!(remote.makespan_s > local.makespan_s);
+    }
+}

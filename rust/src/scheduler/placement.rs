@@ -1,0 +1,148 @@
+//! Placement tiers: classify and pick tasks for a freed slot.
+//!
+//! Hadoop's JobTracker serves a TaskTracker heartbeat by scanning the
+//! pending queue for a split whose DFS replicas sit on that tracker's node
+//! (data-local), then its rack (rack-local), then anything (off-rack). This
+//! module is that scan, kept pure so both policies and the tests can drive
+//! it directly.
+
+use super::rack::RackTopology;
+use super::TaskSpec;
+
+/// Locality tier of one task attempt (Hadoop's three levels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Locality {
+    /// A replica of the task's input lives on the executing node.
+    NodeLocal,
+    /// A replica lives in the executing node's rack.
+    RackLocal,
+    /// Input must cross the core switch.
+    OffRack,
+}
+
+impl Locality {
+    /// Short human-readable label.
+    pub fn label(self) -> &'static str {
+        match self {
+            Locality::NodeLocal => "node-local",
+            Locality::RackLocal => "rack-local",
+            Locality::OffRack => "off-rack",
+        }
+    }
+}
+
+/// Classify running a task whose input replicas live on `hosts` on `slave`.
+///
+/// Tasks with no location info (synthetic splits, shuffle input) count as
+/// node-local: there is nothing remote to fetch. Host ids outside the
+/// topology are ignored.
+pub fn classify(slave: usize, hosts: &[usize], topo: &RackTopology) -> Locality {
+    if hosts.is_empty() || hosts.contains(&slave) {
+        return Locality::NodeLocal;
+    }
+    if hosts
+        .iter()
+        .any(|&h| h < topo.num_nodes() && topo.same_rack(h, slave))
+    {
+        Locality::RackLocal
+    } else {
+        Locality::OffRack
+    }
+}
+
+/// Best pending task for a slot on `slave`: the first node-local candidate,
+/// else the first rack-local, else the first pending (FIFO within a tier).
+///
+/// Returns `(position in pending, locality)`.
+pub fn pick_best(
+    pending: &[usize],
+    specs: &[TaskSpec],
+    slave: usize,
+    topo: &RackTopology,
+) -> Option<(usize, Locality)> {
+    let mut rack_local: Option<usize> = None;
+    let mut off_rack: Option<usize> = None;
+    for (pos, &task) in pending.iter().enumerate() {
+        match classify(slave, &specs[task].hosts, topo) {
+            Locality::NodeLocal => return Some((pos, Locality::NodeLocal)),
+            Locality::RackLocal => {
+                if rack_local.is_none() {
+                    rack_local = Some(pos);
+                }
+            }
+            Locality::OffRack => {
+                if off_rack.is_none() {
+                    off_rack = Some(pos);
+                }
+            }
+        }
+    }
+    if let Some(pos) = rack_local {
+        return Some((pos, Locality::RackLocal));
+    }
+    off_rack.map(|pos| (pos, Locality::OffRack))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::TaskCost;
+
+    fn spec(hosts: Vec<usize>) -> TaskSpec {
+        TaskSpec { cost: TaskCost::default(), hosts }
+    }
+
+    #[test]
+    fn classify_tiers() {
+        let topo = RackTopology::uniform(4, 2); // racks [0,0,1,1]
+        assert_eq!(classify(1, &[1, 3], &topo), Locality::NodeLocal);
+        assert_eq!(classify(0, &[1], &topo), Locality::RackLocal);
+        assert_eq!(classify(0, &[2, 3], &topo), Locality::OffRack);
+    }
+
+    #[test]
+    fn empty_or_bogus_hosts_are_harmless() {
+        let topo = RackTopology::uniform(2, 2);
+        assert_eq!(classify(0, &[], &topo), Locality::NodeLocal);
+        // Host id beyond the topology: ignored, not a panic.
+        assert_eq!(classify(0, &[99], &topo), Locality::OffRack);
+    }
+
+    #[test]
+    fn pick_prefers_node_then_rack_then_any() {
+        let topo = RackTopology::uniform(4, 2);
+        let specs = vec![
+            spec(vec![3]), // off-rack for slave 0
+            spec(vec![1]), // rack-local for slave 0
+            spec(vec![0]), // node-local for slave 0
+        ];
+        let pending = vec![0, 1, 2];
+        assert_eq!(
+            pick_best(&pending, &specs, 0, &topo),
+            Some((2, Locality::NodeLocal))
+        );
+        let pending = vec![0, 1];
+        assert_eq!(
+            pick_best(&pending, &specs, 0, &topo),
+            Some((1, Locality::RackLocal))
+        );
+        let pending = vec![0];
+        assert_eq!(
+            pick_best(&pending, &specs, 0, &topo),
+            Some((0, Locality::OffRack))
+        );
+        assert_eq!(pick_best(&[], &specs, 0, &topo), None);
+    }
+
+    #[test]
+    fn fifo_within_a_tier() {
+        let topo = RackTopology::single(2);
+        let specs = vec![spec(vec![0]), spec(vec![0])];
+        let pending = vec![0, 1];
+        // Both node-local on slave 0: the earlier task wins.
+        assert_eq!(
+            pick_best(&pending, &specs, 0, &topo),
+            Some((0, Locality::NodeLocal))
+        );
+    }
+}

@@ -1,0 +1,60 @@
+//! Pluggable task-selection policies for the JobTracker.
+
+/// How the JobTracker fills a freed slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Hadoop's naive slot filling: the next pending task goes to the next
+    /// free slot, blind to where its input lives (locality is still
+    /// *recorded*, it just never influences the choice).
+    Fifo,
+    /// Three-tier locality-first with delay scheduling: a slave with no
+    /// node-local work may decline up to `locality_delay` of its own
+    /// heartbeats, waiting for local work to appear, before settling for
+    /// rack-local or off-rack tasks.
+    LocalityAware {
+        /// Heartbeats a slave may skip before taking non-local work.
+        locality_delay: usize,
+    },
+}
+
+impl Default for Policy {
+    fn default() -> Self {
+        Policy::LocalityAware { locality_delay: 2 }
+    }
+}
+
+impl Policy {
+    /// Parse a config value (`fifo` / `locality`).
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "fifo" => Some(Policy::Fifo),
+            "locality" | "locality_first" | "locality-first" => Some(Policy::default()),
+            _ => None,
+        }
+    }
+
+    /// Stable name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Fifo => "fifo",
+            Policy::LocalityAware { .. } => "locality",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips() {
+        assert_eq!(Policy::parse("fifo"), Some(Policy::Fifo));
+        assert_eq!(
+            Policy::parse("locality"),
+            Some(Policy::LocalityAware { locality_delay: 2 })
+        );
+        assert_eq!(Policy::parse("bogus"), None);
+        assert_eq!(Policy::default().name(), "locality");
+        assert_eq!(Policy::Fifo.name(), "fifo");
+    }
+}

@@ -1,0 +1,121 @@
+//! Rack topology over the cluster's nodes.
+//!
+//! Hadoop's NameNode and JobTracker share one network map: every slave (and
+//! its co-located DataNode) lives in a rack, and the scheduler/replica
+//! placement reason in the three HDFS distance tiers — same node, same rack,
+//! off rack. Node ids here are the shared id space of
+//! [`crate::cluster::SlaveNode`], DFS datanodes and table region servers.
+
+/// Immutable node → rack map.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RackTopology {
+    rack_of: Vec<usize>,
+    racks: usize,
+}
+
+impl RackTopology {
+    /// All `nodes` in one rack (the pre-scheduler behaviour).
+    pub fn single(nodes: usize) -> Self {
+        Self::custom(vec![0; nodes.max(1)])
+    }
+
+    /// `nodes` spread over `racks` contiguous groups, e.g. 5 nodes on
+    /// 2 racks -> racks `[0, 0, 0, 1, 1]`. `racks` is clamped to `1..=nodes`.
+    pub fn uniform(nodes: usize, racks: usize) -> Self {
+        assert!(nodes > 0, "topology needs at least one node");
+        let racks = racks.clamp(1, nodes);
+        Self::custom((0..nodes).map(|i| i * racks / nodes).collect())
+    }
+
+    /// Explicit node → rack assignment. Rack ids should be dense from 0.
+    pub fn custom(rack_of: Vec<usize>) -> Self {
+        assert!(!rack_of.is_empty(), "topology needs at least one node");
+        let racks = rack_of.iter().copied().max().unwrap_or(0) + 1;
+        Self { rack_of, racks }
+    }
+
+    /// Number of nodes.
+    pub fn num_nodes(&self) -> usize {
+        self.rack_of.len()
+    }
+
+    /// Number of racks.
+    pub fn num_racks(&self) -> usize {
+        self.racks
+    }
+
+    /// Rack of one node.
+    pub fn rack_of(&self, node: usize) -> usize {
+        self.rack_of[node]
+    }
+
+    /// Do two nodes share a rack?
+    pub fn same_rack(&self, a: usize, b: usize) -> bool {
+        self.rack_of[a] == self.rack_of[b]
+    }
+
+    /// All nodes in one rack, ascending.
+    pub fn nodes_in(&self, rack: usize) -> Vec<usize> {
+        (0..self.rack_of.len())
+            .filter(|&n| self.rack_of[n] == rack)
+            .collect()
+    }
+
+    /// HDFS-style network distance: 0 same node, 2 same rack, 4 off rack.
+    pub fn distance(&self, a: usize, b: usize) -> u32 {
+        if a == b {
+            0
+        } else if self.same_rack(a, b) {
+            2
+        } else {
+            4
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_rack_puts_everyone_together() {
+        let t = RackTopology::single(4);
+        assert_eq!(t.num_nodes(), 4);
+        assert_eq!(t.num_racks(), 1);
+        assert!(t.same_rack(0, 3));
+        assert_eq!(t.nodes_in(0), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn uniform_splits_contiguously() {
+        let t = RackTopology::uniform(5, 2);
+        assert_eq!(
+            (0..5).map(|n| t.rack_of(n)).collect::<Vec<_>>(),
+            vec![0, 0, 0, 1, 1]
+        );
+        assert_eq!(t.num_racks(), 2);
+        assert!(t.same_rack(0, 2));
+        assert!(!t.same_rack(2, 3));
+    }
+
+    #[test]
+    fn uniform_clamps_rack_count() {
+        assert_eq!(RackTopology::uniform(3, 10).num_racks(), 3);
+        assert_eq!(RackTopology::uniform(3, 0).num_racks(), 1);
+    }
+
+    #[test]
+    fn distance_tiers() {
+        let t = RackTopology::uniform(4, 2);
+        assert_eq!(t.distance(1, 1), 0);
+        assert_eq!(t.distance(0, 1), 2);
+        assert_eq!(t.distance(1, 2), 4);
+    }
+
+    #[test]
+    fn custom_assignment_respected() {
+        let t = RackTopology::custom(vec![0, 1, 0, 1]);
+        assert_eq!(t.num_racks(), 2);
+        assert_eq!(t.nodes_in(1), vec![1, 3]);
+    }
+}

@@ -1,0 +1,91 @@
+//! Straggler detection for live speculative execution.
+//!
+//! When a heartbeat offers a free slot and no pending work remains, the
+//! JobTracker may launch a *duplicate attempt* of a running task that looks
+//! slow (paper §2.2: "when a task fails or goes slowly, the JobTracker
+//! restarts it on another node"). The detector here is Hadoop's rule in
+//! miniature: an attempt is a straggler once it has been running longer
+//! than `slowdown ×` the median duration of already-completed tasks.
+
+/// Speculative-execution knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpeculationConfig {
+    /// Master switch (`mapred.map.tasks.speculative.execution`).
+    pub enabled: bool,
+    /// Straggler threshold as a multiple of the median completed duration.
+    pub slowdown: f64,
+    /// Completed tasks required before duration estimates are trusted.
+    pub min_completed: usize,
+}
+
+impl Default for SpeculationConfig {
+    fn default() -> Self {
+        Self { enabled: true, slowdown: 1.5, min_completed: 1 }
+    }
+}
+
+/// Pick the running task most deserving a duplicate attempt at time `now`.
+///
+/// `running` holds `(task id, attempt start)` for tasks that are still
+/// unfinished and not yet speculated; `completed_durations` the durations
+/// of tasks that finished before `now`. Returns the longest-elapsed task
+/// over the straggler threshold, if any.
+pub fn pick_straggler(
+    now: f64,
+    running: &[(usize, f64)],
+    completed_durations: &[f64],
+    cfg: &SpeculationConfig,
+) -> Option<usize> {
+    if !cfg.enabled || completed_durations.len() < cfg.min_completed.max(1) {
+        return None;
+    }
+    let mut ds = completed_durations.to_vec();
+    ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = ds[ds.len() / 2];
+    let threshold = cfg.slowdown * median;
+    running
+        .iter()
+        .filter(|&&(_, start)| now - start > threshold)
+        .max_by(|a, b| {
+            // Longest-running first; task id breaks ties deterministically.
+            (now - a.1, std::cmp::Reverse(a.0))
+                .partial_cmp(&(now - b.1, std::cmp::Reverse(b.0)))
+                .unwrap()
+        })
+        .map(|&(task, _)| task)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_never_speculates() {
+        let cfg = SpeculationConfig { enabled: false, ..Default::default() };
+        assert_eq!(pick_straggler(100.0, &[(0, 0.0)], &[1.0], &cfg), None);
+    }
+
+    #[test]
+    fn needs_completed_history() {
+        let cfg = SpeculationConfig::default();
+        assert_eq!(pick_straggler(100.0, &[(0, 0.0)], &[], &cfg), None);
+    }
+
+    #[test]
+    fn flags_only_over_threshold() {
+        let cfg = SpeculationConfig::default(); // slowdown 1.5
+        let completed = [10.0, 10.0, 12.0]; // median 10 -> threshold 15
+        // Elapsed 14: under threshold.
+        assert_eq!(pick_straggler(20.0, &[(7, 6.0)], &completed, &cfg), None);
+        // Elapsed 16: straggler.
+        assert_eq!(pick_straggler(20.0, &[(7, 4.0)], &completed, &cfg), Some(7));
+    }
+
+    #[test]
+    fn picks_longest_running() {
+        let cfg = SpeculationConfig::default();
+        let completed = [1.0];
+        let running = [(3, 10.0), (5, 2.0), (9, 6.0)];
+        assert_eq!(pick_straggler(20.0, &running, &completed, &cfg), Some(5));
+    }
+}

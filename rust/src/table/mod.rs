@@ -196,6 +196,14 @@ impl Table {
             .collect()
     }
 
+    /// Slave hosting the region that owns `key` — the locality hint the
+    /// MapReduce scheduler uses to co-locate a map task with its rows.
+    pub fn key_slave(&self, key: &[u8]) -> Result<usize> {
+        let region = self.region_for(key)?;
+        let slave = region.lock().unwrap().slave();
+        Ok(slave)
+    }
+
     fn region_for(&self, key: &[u8]) -> Result<Arc<Mutex<Region>>> {
         let regions = self.regions.read().unwrap();
         for region in regions.iter() {
@@ -313,6 +321,25 @@ mod tests {
         let slaves: std::collections::HashSet<usize> =
             t.region_assignments().iter().map(|&(_, s)| s).collect();
         assert_eq!(slaves.len(), 4, "regions not spread over all slaves");
+    }
+
+    #[test]
+    fn key_slave_matches_region_assignment() {
+        let svc = TableService::new(3);
+        let t = svc.create("loc", 6).unwrap();
+        let assignments = t.region_assignments();
+        for probe in [0u64, 1 << 40, u64::MAX / 2, u64::MAX - 1] {
+            let key = probe.to_be_bytes().to_vec();
+            let slave = t.key_slave(&key).unwrap();
+            // The owning region is the last assignment with start <= key.
+            let expect = assignments
+                .iter()
+                .rev()
+                .find(|(start, _)| start.as_slice() <= key.as_slice())
+                .map(|&(_, s)| s)
+                .unwrap();
+            assert_eq!(slave, expect, "probe {probe}");
+        }
     }
 
     #[test]

@@ -85,20 +85,17 @@ fn prop_shuffle_conserves_records() {
         if use_combiner {
             builder = builder.combiner(sum);
         }
-        let result =
+        let mut result =
             mapreduce::run(&Cluster::new(g.usize_in(1, 4)), &builder.build()).unwrap();
-        let got: u64 = result
-            .sorted_records()
-            .iter()
-            .map(|(_, v)| decode_u64(v))
-            .sum();
+        // sorted_records drains the output, so take it once and reuse.
+        let records = result.sorted_records();
+        let got: u64 = records.iter().map(|(_, v)| decode_u64(v)).sum();
         prop_assert!(
             got == expected,
             "sum conservation: {got} != {expected} (combiner={use_combiner})"
         );
         // Each key appears exactly once in the output.
-        let keys: Vec<_> = result.sorted_records();
-        for w in keys.windows(2) {
+        for w in records.windows(2) {
             prop_assert!(w[0].0 != w[1].0, "key duplicated across reducers");
         }
         Ok(())

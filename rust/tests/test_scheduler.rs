@@ -1,0 +1,103 @@
+//! Integration: the JobTracker scheduler against the live pipeline — the
+//! locality ablation the ISSUE acceptance demands (locality-first beats
+//! FIFO on a 2-rack cluster), live speculative execution recovering a
+//! straggler inside a real MR job, and the invariant that scheduling only
+//! moves virtual time, never answers.
+
+use std::sync::Arc;
+
+use psch::benchutil::locality_ablation_run;
+use psch::cluster::{Cluster, NetworkModel};
+use psch::config::Config;
+use psch::coordinator::{Driver, PipelineInput};
+use psch::data::gaussian_blobs;
+use psch::mapreduce::{self, names, FnMapper, JobBuilder, TaskContext};
+use psch::runtime::KernelRuntime;
+use psch::scheduler::{Policy, SpeculationConfig, TrackerConfig};
+
+#[test]
+fn locality_first_beats_fifo_on_a_two_rack_cluster() {
+    // The exact experiment benches/ablation_loadbalance.rs reports (A2):
+    // the phase-1 similarity job on 4 slaves / 2 racks.
+    let (local, _) = locality_ablation_run(Policy::default());
+    let (fifo, _) = locality_ablation_run(Policy::Fifo);
+    // Every paired map split declared hosts, so every task is tallied.
+    assert_eq!(local.placed(), 7, "{local:?}");
+    assert_eq!(fifo.placed(), 7, "{fifo:?}");
+    assert!(
+        local.data_local_pct() > fifo.data_local_pct(),
+        "locality-first must raise the data-local map percentage: \
+         {:.1}% vs {:.1}%",
+        local.data_local_pct(),
+        fifo.data_local_pct()
+    );
+    assert!(
+        local.virtual_read_s < fifo.virtual_read_s,
+        "locality-first must lower the virtual read time: {:.6}s vs {:.6}s",
+        local.virtual_read_s,
+        fifo.virtual_read_s
+    );
+}
+
+#[test]
+fn speculative_execution_recovers_a_straggler_in_a_live_job() {
+    // 8 map tasks of 5 modeled seconds; slave 3 runs at 1/10 speed. With
+    // speculation the JobTracker duplicates the straggler's tasks onto the
+    // fast slaves and the job's virtual time collapses.
+    let run = |speculation: bool| {
+        let mut cluster = Cluster::with_model(4, 2, NetworkModel::default());
+        cluster.set_slave_speed(3, 0.1);
+        cluster.set_tracker_config(TrackerConfig {
+            speculation: SpeculationConfig {
+                enabled: speculation,
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let mapper = Arc::new(FnMapper(
+            |_k: &[u8], _v: &[u8], ctx: &mut TaskContext| {
+                ctx.incr(names::COMPUTE_US, 5_000_000);
+                Ok(())
+            },
+        ));
+        let splits: Vec<Vec<(Vec<u8>, Vec<u8>)>> =
+            (0..8).map(|i| vec![(vec![i as u8], vec![])]).collect();
+        let job = JobBuilder::new("straggle", splits, mapper).build();
+        mapreduce::run(&cluster, &job).unwrap()
+    };
+    let with = run(true);
+    let without = run(false);
+    assert!(with.counters.get(names::SPECULATIVE_ATTEMPTS) >= 1, "no duplicates launched");
+    assert!(with.counters.get(names::SPECULATIVE_WINS) >= 1, "no duplicate won");
+    assert_eq!(without.counters.get(names::SPECULATIVE_ATTEMPTS), 0);
+    assert!(
+        with.stats.virtual_time_s < without.stats.virtual_time_s * 0.8,
+        "speculation should cut the straggled makespan: {:.1}s vs {:.1}s",
+        with.stats.virtual_time_s,
+        without.stats.virtual_time_s
+    );
+    assert!(with.counters.get(names::HEARTBEATS) > 0);
+}
+
+#[test]
+fn scheduling_policy_never_changes_the_answer() {
+    // Racks + policy move virtual time and locality counters only; the
+    // clustering itself must be bit-identical.
+    let ps = gaussian_blobs(250, 3, 4, 0.3, 10.0, 5);
+    let input = PipelineInput::Points { points: ps.points.clone() };
+    let run = |scheduler: &str| {
+        let mut cfg = Config::default();
+        cfg.cluster.slaves = 4;
+        cfg.cluster.racks = 2;
+        cfg.set("cluster.scheduler", scheduler).unwrap();
+        cfg.algo.k = 3;
+        cfg.algo.sigma = 1.5;
+        let d = Driver::new(cfg, Arc::new(KernelRuntime::native()));
+        d.run(&input).unwrap()
+    };
+    let locality = run("locality");
+    let fifo = run("fifo");
+    assert_eq!(locality.labels, fifo.labels);
+    assert_eq!(locality.eigenvalues, fifo.eigenvalues);
+    assert!(locality.total_virtual_s > 0.0 && fifo.total_virtual_s > 0.0);
+}
