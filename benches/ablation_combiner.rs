@@ -9,7 +9,7 @@ use std::sync::Arc;
 
 use psch::cluster::Cluster;
 use psch::mapreduce::{
-    self, FnMapper, FnReducer, JobBuilder, TaskContext,
+    self, FnMapper, FnReducer, JobBuilder, TaskContext, Values,
 };
 use psch::metrics::table::AsciiTable;
 use psch::util::bytes::{decode_f64_vec, decode_u64, encode_f64_vec, encode_u32, encode_u64};
@@ -98,10 +98,10 @@ fn run_iteration(combine: bool) -> (f64, u64, Vec<Vec<f64>>) {
         },
     ));
     let reducer = Arc::new(FnReducer(
-        |key: &[u8], values: &[Vec<u8>], ctx: &mut TaskContext| {
+        |key: &[u8], values: &mut dyn Values, ctx: &mut TaskContext| {
             let mut sums = vec![0.0f64; D];
             let mut count = 0.0;
-            for v in values {
+            while let Some(v) = values.next_value() {
                 let (payload, _) = decode_f64_vec(v);
                 for t in 0..D {
                     sums[t] += payload[t];

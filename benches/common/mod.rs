@@ -57,3 +57,44 @@ pub fn runtime() -> Arc<KernelRuntime> {
 pub fn pct(ours: f64, paper: f64) -> f64 {
     (ours - paper) / paper * 100.0
 }
+
+/// One phase's timing + shuffle trajectory as a JSON object (hand-rolled —
+/// the offline vendor set has no serde).
+pub fn phase_json(p: &psch::coordinator::PhaseStats) -> String {
+    let s = p.shuffle_summary();
+    format!(
+        "{{\"name\":\"{}\",\"virtual_s\":{:.3},\"jobs\":{},\
+         \"shuffle_bytes\":{},\"spilled_records\":{},\"merge_passes\":{},\
+         \"shuffle_fetch_s\":{:.3},\"fetch_bytes_local\":{},\
+         \"fetch_bytes_rack\":{},\"fetch_bytes_remote\":{}}}",
+        p.name,
+        p.virtual_s,
+        p.jobs,
+        p.shuffle_bytes,
+        s.spilled_records,
+        s.merge_passes,
+        p.shuffle_fetch_s,
+        s.fetch_node_local,
+        s.fetch_rack_local,
+        s.fetch_off_rack,
+    )
+}
+
+/// One pipeline run (at slave count `m`) as a JSON object.
+pub fn run_json(m: usize, result: &psch::coordinator::PipelineResult) -> String {
+    let phases: Vec<String> = result.phases.iter().map(phase_json).collect();
+    format!(
+        "{{\"m\":{m},\"total_virtual_s\":{:.3},\"phases\":[{}]}}",
+        result.total_virtual_s,
+        phases.join(",")
+    )
+}
+
+/// Write a BENCH_*.json payload next to the working directory; failures
+/// only warn (benches must keep running on read-only checkouts).
+pub fn write_bench_json(path: &str, payload: &str) {
+    match std::fs::write(path, payload) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}

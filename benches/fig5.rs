@@ -21,6 +21,7 @@ fn main() {
 
     let sweep = [1usize, 2, 3, 4, 5, 6, 7, 8, 9, 10];
     let mut curve = SpeedupCurve::default();
+    let mut runs_json: Vec<String> = Vec::new();
     for &m in &sweep {
         let driver = common::driver_for(m, &runtime);
         let result = driver.run(&input).expect("pipeline");
@@ -29,7 +30,18 @@ fn main() {
             "m={m:>2}: {}",
             hms(std::time::Duration::from_secs_f64(result.total_virtual_s))
         );
+        for p in &result.phases {
+            println!("      shuffle[{}]: {}", p.name, p.shuffle_summary().render());
+        }
+        runs_json.push(common::run_json(m, &result));
     }
+    common::write_bench_json(
+        "BENCH_fig5.json",
+        &format!(
+            "{{\"bench\":\"fig5\",\"n\":{n},\"runs\":[{}]}}\n",
+            runs_json.join(",")
+        ),
+    );
 
     println!("\ntotal-time trend (Fig. 5):\n{}", curve.ascii_plot(60, 14));
     println!("speedup series:");

@@ -46,6 +46,7 @@ fn main() {
     ];
     let mut total_curve = SpeedupCurve::default();
 
+    let mut runs_json: Vec<String> = Vec::new();
     for &(m, _, _, _, paper_total) in &common::PAPER_TABLE1 {
         let driver = common::driver_for(m, &runtime);
         let (result, wall) =
@@ -70,7 +71,18 @@ fn main() {
             d(paper_total),
             wall.as_secs_f64()
         );
+        for p in &result.phases {
+            println!("      shuffle[{}]: {}", p.name, p.shuffle_summary().render());
+        }
+        runs_json.push(common::run_json(m, &result));
     }
+    common::write_bench_json(
+        "BENCH_table1.json",
+        &format!(
+            "{{\"bench\":\"table1\",\"n\":{n},\"runs\":[{}]}}\n",
+            runs_json.join(",")
+        ),
+    );
 
     println!("\nTable 5-1 reproduction:\n{}", table.render());
 

@@ -160,14 +160,19 @@ fn cmd_run(flags: &Flags) -> Result<i32> {
     let driver = Driver::new(cfg, runtime);
     let result = driver.run(&input)?;
 
-    let mut table = AsciiTable::new(&["phase", "virtual", "wall_s", "jobs", "shuffle"]);
+    let mut table = AsciiTable::new(&[
+        "phase", "virtual", "wall_s", "jobs", "shuffle", "spilled", "merges",
+    ]);
     for p in &result.phases {
+        let shuffle = p.shuffle_summary();
         table.row(&[
             p.name.clone(),
             hms(std::time::Duration::from_secs_f64(p.virtual_s)),
             format!("{:.2}", p.wall_s),
             p.jobs.to_string(),
             crate::util::fmt::human_bytes(p.shuffle_bytes),
+            shuffle.spilled_records.to_string(),
+            shuffle.merge_passes.to_string(),
         ]);
     }
     table.row(&[
@@ -176,8 +181,13 @@ fn cmd_run(flags: &Flags) -> Result<i32> {
         format!("{:.2}", result.total_wall_s),
         result.phases.iter().map(|p| p.jobs).sum::<usize>().to_string(),
         String::new(),
+        String::new(),
+        String::new(),
     ]);
     println!("{}", table.render());
+    for p in &result.phases {
+        println!("shuffle[{}]: {}", p.name, p.shuffle_summary().render());
+    }
     if let Some(truth) = truth {
         println!(
             "quality: NMI={:.4} ARI={:.4} (vs planted truth)",

@@ -15,6 +15,7 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::error::{Error, Result};
+use crate::mapreduce::ShuffleConfig;
 use crate::scheduler::{JobTracker, RackTopology, SchedulePlan, TaskSpec, TrackerConfig};
 
 pub use network::NetworkModel;
@@ -40,6 +41,9 @@ pub struct Cluster {
     topology: RackTopology,
     /// JobTracker knobs (heartbeat interval, policy, speculation).
     tracker: TrackerConfig,
+    /// Cluster-wide shuffle knobs (sort buffer, merge factor, fetch
+    /// parallelism); jobs may override per-job.
+    shuffle: ShuffleConfig,
     /// Physical worker threads used to execute tasks (bounded by host cores;
     /// virtual time is what scales with `m`, not host parallelism).
     threads: usize,
@@ -65,6 +69,7 @@ impl Cluster {
             model,
             topology: RackTopology::single(m),
             tracker: TrackerConfig::default(),
+            shuffle: ShuffleConfig::default(),
             threads,
         }
     }
@@ -98,6 +103,16 @@ impl Cluster {
     /// The JobTracker knobs.
     pub fn tracker_config(&self) -> &TrackerConfig {
         &self.tracker
+    }
+
+    /// Replace the cluster-wide shuffle knobs.
+    pub fn set_shuffle_config(&mut self, cfg: ShuffleConfig) {
+        self.shuffle = cfg;
+    }
+
+    /// The cluster-wide shuffle knobs.
+    pub fn shuffle_config(&self) -> &ShuffleConfig {
+        &self.shuffle
     }
 
     /// Number of slaves m.
@@ -205,7 +220,9 @@ impl Cluster {
     }
 
     /// Virtual wall-clock of a job from its scheduled phase plans: job
-    /// overhead + map makespan (+ shuffle + reduce makespan).
+    /// overhead + map makespan (+ aggregate-modelled shuffle + reduce
+    /// makespan). Reduce jobs whose fetches were planned per segment use
+    /// [`Self::planned_job_time_with_fetch`] instead.
     pub fn planned_job_time(
         &self,
         map: &SchedulePlan,
@@ -218,6 +235,21 @@ impl Cluster {
             t += self.model.shuffle_time(shuffle_bytes, m) + r.makespan_s;
         }
         t
+    }
+
+    /// Virtual wall-clock of a reduce job whose shuffle was charged per
+    /// fetched segment at locality tiers: job overhead + map makespan +
+    /// the slowest reducer's fetch phase + reduce makespan.
+    pub fn planned_job_time_with_fetch(
+        &self,
+        map: &SchedulePlan,
+        reduce: &SchedulePlan,
+        fetch_s: f64,
+    ) -> f64 {
+        self.model.job_overhead(self.num_slaves())
+            + map.makespan_s
+            + fetch_s
+            + reduce.makespan_s
     }
 
     /// Virtual wall-clock of a job given measured task costs (convenience
@@ -291,6 +323,36 @@ mod tests {
         assert_eq!(c.slots_per_slave(), 2);
         assert_eq!(c.total_slots(), 20);
         assert_eq!(c.topology().num_racks(), 1);
+    }
+
+    #[test]
+    fn shuffle_config_settable_and_readable() {
+        let mut c = Cluster::new(2);
+        assert_eq!(*c.shuffle_config(), ShuffleConfig::default());
+        let cfg = ShuffleConfig {
+            sort_buffer_kb: 64,
+            merge_factor: 4,
+            fetch_parallelism: 2,
+        };
+        c.set_shuffle_config(cfg);
+        assert_eq!(*c.shuffle_config(), cfg);
+    }
+
+    #[test]
+    fn fetch_charged_job_time_includes_all_terms() {
+        let c = Cluster::new(3);
+        let tasks: Vec<crate::scheduler::TaskSpec> = (0..4)
+            .map(|_| crate::scheduler::TaskSpec {
+                cost: TaskCost { compute_s: 1.0, input_bytes: 0, output_bytes: 0 },
+                hosts: vec![],
+            })
+            .collect();
+        let map = c.plan_phase(&tasks);
+        let reduce = c.plan_phase(&tasks[..2]);
+        let t = c.planned_job_time_with_fetch(&map, &reduce, 7.0);
+        let floor = c.model().job_overhead(3) + map.makespan_s + 7.0;
+        assert!(t >= floor - 1e-9, "{t} < {floor}");
+        assert!(t >= c.planned_job_time(&map, None, 0), "fetch time adds on");
     }
 
     #[test]

@@ -7,6 +7,7 @@
 
 use crate::cluster::NetworkModel;
 use crate::error::{Error, Result};
+use crate::mapreduce::ShuffleConfig;
 use crate::scheduler::{Policy, SpeculationConfig};
 
 /// Cluster-side settings.
@@ -88,6 +89,9 @@ impl Default for AlgoConfig {
 pub struct Config {
     /// Cluster settings (`[cluster]` section).
     pub cluster: ClusterConfig,
+    /// Shuffle settings (`[shuffle]` section): sort buffer, merge factor,
+    /// fetch parallelism (Hadoop's `io.sort.*` family).
+    pub shuffle: ShuffleConfig,
     /// Algorithm settings (`[algo]` section).
     pub algo: AlgoConfig,
 }
@@ -191,6 +195,16 @@ impl Config {
                 self.cluster.network.compute_scale =
                     value.parse().map_err(|_| bad_val(key))?
             }
+            "shuffle.sort_buffer_kb" => {
+                self.shuffle.sort_buffer_kb = value.parse().map_err(|_| bad_val(key))?
+            }
+            "shuffle.merge_factor" => {
+                self.shuffle.merge_factor = value.parse().map_err(|_| bad_val(key))?
+            }
+            "shuffle.fetch_parallelism" => {
+                self.shuffle.fetch_parallelism =
+                    value.parse().map_err(|_| bad_val(key))?
+            }
             "algo.k" => self.algo.k = value.parse().map_err(|_| bad_val(key))?,
             "algo.sigma" => self.algo.sigma = value.parse().map_err(|_| bad_val(key))?,
             "algo.epsilon" => {
@@ -236,6 +250,18 @@ impl Config {
                 "cluster.speculative_slowdown must be >= 1, got {}",
                 self.cluster.speculation.slowdown
             ));
+        }
+        if self.shuffle.sort_buffer_kb == 0 {
+            return bad("shuffle.sort_buffer_kb must be >= 1".into());
+        }
+        if self.shuffle.merge_factor < 2 {
+            return bad(format!(
+                "shuffle.merge_factor must be >= 2, got {}",
+                self.shuffle.merge_factor
+            ));
+        }
+        if self.shuffle.fetch_parallelism == 0 {
+            return bad("shuffle.fetch_parallelism must be >= 1".into());
         }
         if self.algo.k < 2 {
             return bad(format!("algo.k must be >= 2, got {}", self.algo.k));
@@ -376,6 +402,25 @@ lanczos_steps = 40
         assert!(Config::parse("[cluster]\nracks = 0\n").is_err());
         assert!(Config::parse("[cluster]\nheartbeat_s = 0\n").is_err());
         assert!(Config::parse("[cluster]\nspeculative_slowdown = 0.5\n").is_err());
+    }
+
+    #[test]
+    fn shuffle_keys_parse_and_validate() {
+        let text =
+            "[shuffle]\nsort_buffer_kb = 256\nmerge_factor = 4\nfetch_parallelism = 8\n";
+        let cfg = Config::parse(text).unwrap();
+        assert_eq!(cfg.shuffle.sort_buffer_kb, 256);
+        assert_eq!(cfg.shuffle.merge_factor, 4);
+        assert_eq!(cfg.shuffle.fetch_parallelism, 8);
+        // Untouched shuffle keys keep Hadoop-flavoured defaults.
+        let plain = Config::default();
+        assert_eq!(plain.shuffle.merge_factor, 10);
+        assert_eq!(plain.shuffle.fetch_parallelism, 5);
+
+        assert!(Config::parse("[shuffle]\nsort_buffer_kb = 0\n").is_err());
+        assert!(Config::parse("[shuffle]\nmerge_factor = 1\n").is_err());
+        assert!(Config::parse("[shuffle]\nfetch_parallelism = 0\n").is_err());
+        assert!(Config::parse("[shuffle]\nbogus = 1\n").is_err());
     }
 
     #[test]

@@ -82,6 +82,7 @@ impl Driver {
             policy: c.scheduler,
             speculation: c.speculation,
         });
+        cluster.set_shuffle_config(self.config.shuffle);
         Services::new(cluster, self.runtime.clone())
     }
 

@@ -17,7 +17,7 @@
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
-use crate::mapreduce::{self, FnMapper, FnReducer, JobBuilder, TaskContext};
+use crate::mapreduce::{self, FnMapper, FnReducer, JobBuilder, TaskContext, Values};
 use crate::util::bytes::{
     decode_f64_vec, decode_u64, encode_f64_vec, encode_u32, encode_u64,
 };
@@ -134,7 +134,7 @@ pub fn run_kmeans_phase(
         iterations += 1;
         let mut result =
             run_update_job(services, &embedding, n, d, k, center_path, &split_hosts)?;
-        stats.absorb(&result.stats);
+        stats.absorb_job(&result);
 
         // New centers from reducer output (key = center index).
         let mut new_centers = centers.clone();
@@ -231,10 +231,10 @@ fn run_update_job(
         },
     ));
     let reducer = Arc::new(FnReducer(
-        move |key: &[u8], values: &[Vec<u8>], ctx: &mut TaskContext| -> Result<()> {
+        move |key: &[u8], values: &mut dyn Values, ctx: &mut TaskContext| -> Result<()> {
             let mut sums = vec![0.0f64; d];
             let mut count = 0.0f64;
-            for v in values {
+            while let Some(v) = values.next_value() {
                 let (payload, _) = decode_f64_vec(v);
                 for t in 0..d {
                     sums[t] += payload[t];
@@ -313,7 +313,7 @@ fn run_assign_job(
         .split_hosts(split_hosts.to_vec())
         .build();
     let result = mapreduce::run(&services.cluster, &job)?;
-    stats.absorb(&result.stats);
+    stats.absorb_job(&result);
     let mut labels = vec![0usize; n];
     for part in &result.output {
         for (key, value) in part {

@@ -140,7 +140,7 @@ fn build_laplacian(
         .split_hosts(hosts)
         .build();
     let result = mapreduce::run(&services.cluster, &job)?;
-    stats.absorb(&result.stats);
+    stats.absorb_job(&result);
 
     // Snapshot L into a CSR for the iteration jobs (HBase block cache role).
     let mut rows: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n];
@@ -172,6 +172,7 @@ pub fn run_eigen_phase(
 
     // Lanczos driver: each matvec is one MR job.
     let mut matvec_stats: Vec<crate::mapreduce::JobStats> = Vec::new();
+    let mut matvec_counters = crate::mapreduce::Counters::default();
     {
         let cluster = services.cluster.clone();
         let l_c = l.clone();
@@ -232,6 +233,7 @@ pub fn run_eigen_phase(
                     y[decode_u64(kk) as usize] = decode_f64(vv);
                 }
             }
+            matvec_counters.merge(&result.counters);
             matvec_stats.push(result.stats);
             y
         };
@@ -250,6 +252,7 @@ pub fn run_eigen_phase(
         for js in &matvec_stats {
             stats.absorb(js);
         }
+        stats.absorb_counters(&matvec_counters);
         stats.absorb_master(
             (master_wall - jobs_wall).max(0.0),
             services.cluster.model().compute_scale,

@@ -74,20 +74,47 @@ pub struct PhaseStats {
     pub jobs: usize,
     /// Total shuffle bytes across the phase's jobs.
     pub shuffle_bytes: u64,
+    /// Virtual seconds of the phase's shuffle-fetch barriers (sum of each
+    /// job's slowest-reducer fetch time — NOT the serial per-reducer sum
+    /// the `SHUFFLE_FETCH_US` counter tracks).
+    pub shuffle_fetch_s: f64,
+    /// Counters merged across the phase's jobs — the single source for
+    /// spill/merge/fetch-tier tallies (see [`Self::shuffle_summary`]) and
+    /// the locality/speculation family.
+    pub counters: crate::mapreduce::Counters,
 }
 
 impl PhaseStats {
-    /// Accumulate one job's stats into the phase.
+    /// Accumulate one whole job — timing stats AND counters — into the
+    /// phase. Prefer this over the split [`Self::absorb`] +
+    /// [`Self::absorb_counters`] calls whenever the `JobResult` is at hand.
+    pub fn absorb_job(&mut self, result: &crate::mapreduce::JobResult) {
+        self.absorb(&result.stats);
+        self.absorb_counters(&result.counters);
+    }
+
+    /// Accumulate one job's timing stats into the phase.
     pub fn absorb(&mut self, stats: &crate::mapreduce::JobStats) {
         self.virtual_s += stats.virtual_time_s;
         self.wall_s += stats.wall_time_s;
         self.shuffle_bytes += stats.shuffle_bytes;
+        self.shuffle_fetch_s += stats.shuffle_fetch_s;
         self.jobs += 1;
+    }
+
+    /// Merge one job's counters into the phase counters.
+    pub fn absorb_counters(&mut self, counters: &crate::mapreduce::Counters) {
+        self.counters.merge(counters);
     }
 
     /// Add master-side (non-MR) compute, scaled like task compute.
     pub fn absorb_master(&mut self, wall_s: f64, compute_scale: f64) {
         self.virtual_s += wall_s * compute_scale;
         self.wall_s += wall_s;
+    }
+
+    /// Shuffle lifecycle summary of the phase.
+    pub fn shuffle_summary(&self) -> crate::metrics::ShuffleSummary {
+        crate::metrics::ShuffleSummary::from_counters(&self.counters)
     }
 }

@@ -17,7 +17,7 @@
 use std::sync::Arc;
 
 use crate::error::Result;
-use crate::mapreduce::{self, JobBuilder, Mapper, Reducer, TaskContext};
+use crate::mapreduce::{self, JobBuilder, Mapper, Reducer, TaskContext, Values};
 use crate::runtime::KernelRuntime;
 use crate::table::Table;
 use crate::util::bytes::{decode_f64, decode_u64, encode_f64, encode_u64};
@@ -186,17 +186,20 @@ fn gi_u64(i: usize) -> u64 {
     i as u64
 }
 
-/// Degree reducer: sums the partial row sums.
+/// Degree reducer: sums the partial row sums as they stream off the merge.
 struct DegreeReducer;
 
 impl Reducer for DegreeReducer {
     fn reduce(
         &self,
         key: &[u8],
-        values: &[Vec<u8>],
+        values: &mut dyn Values,
         ctx: &mut TaskContext,
     ) -> Result<()> {
-        let total: f64 = values.iter().map(|v| decode_f64(v)).sum();
+        let mut total = 0.0f64;
+        while let Some(v) = values.next_value() {
+            total += decode_f64(v);
+        }
         ctx.emit(key.to_vec(), encode_f64(total).to_vec());
         Ok(())
     }
@@ -272,7 +275,7 @@ pub fn run_similarity_phase(
         degrees[decode_u64(&k) as usize] = decode_f64(&v);
     }
     let mut stats = PhaseStats { name: "similarity".into(), ..Default::default() };
-    stats.absorb(&result.stats);
+    stats.absorb_job(&result);
     Ok(SimilarityOutput {
         degrees,
         stats,
@@ -381,12 +384,14 @@ pub fn run_similarity_phase_graph(
 
     let table_c = table.clone();
     let reducer = Arc::new(crate::mapreduce::FnReducer(
-        move |key: &[u8], values: &[Vec<u8>], ctx: &mut TaskContext| -> Result<()> {
+        move |key: &[u8], values: &mut dyn Values, ctx: &mut TaskContext| -> Result<()> {
             let row = decode_u64(key);
-            let mut entries: Vec<(u32, f64)> = values
-                .iter()
-                .map(|v| (decode_u64(&v[..8]) as u32, decode_f64(&v[8..16])))
-                .collect();
+            // One row's adjacency — bounded by the vertex degree, not the
+            // partition (the merge streams the group's values).
+            let mut entries: Vec<(u32, f64)> = Vec::new();
+            while let Some(v) = values.next_value() {
+                entries.push((decode_u64(&v[..8]) as u32, decode_f64(&v[8..16])));
+            }
             entries.sort_unstable_by_key(|&(j, _)| j);
             entries.dedup_by(|a, b| {
                 if a.0 == b.0 {
@@ -435,7 +440,7 @@ pub fn run_similarity_phase_graph(
         degrees[decode_u64(&k) as usize] = decode_f64(&v);
     }
     let mut stats = PhaseStats { name: "similarity".into(), ..Default::default() };
-    stats.absorb(&result.stats);
+    stats.absorb_job(&result);
     Ok(SimilarityOutput {
         degrees,
         stats,

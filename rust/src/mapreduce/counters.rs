@@ -53,6 +53,24 @@ pub mod names {
     /// Virtual MICROseconds map tasks spent reading input at their placed
     /// locality tier — the number the locality ablation compares.
     pub const MAP_READ_US: &str = "MAP_READ_US";
+    /// Map-side sort-buffer spills (>= 1 per map task that emitted).
+    pub const SPILLS: &str = "SPILLS";
+    /// Records written to spill runs plus records rewritten by
+    /// intermediate merge passes (Hadoop's SPILLED_RECORDS, map and
+    /// reduce side combined).
+    pub const SPILLED_RECORDS: &str = "SPILLED_RECORDS";
+    /// Merge passes that combined multiple sorted runs (map-side spill
+    /// merges + reduce-side fetch merges).
+    pub const MERGE_PASSES: &str = "MERGE_PASSES";
+    /// Shuffle bytes fetched from the reducer's own node.
+    pub const SHUFFLE_FETCH_BYTES_LOCAL: &str = "SHUFFLE_FETCH_BYTES_LOCAL";
+    /// Shuffle bytes fetched from another node in the reducer's rack.
+    pub const SHUFFLE_FETCH_BYTES_RACK: &str = "SHUFFLE_FETCH_BYTES_RACK";
+    /// Shuffle bytes fetched across racks (the oversubscribed core link).
+    pub const SHUFFLE_FETCH_BYTES_REMOTE: &str = "SHUFFLE_FETCH_BYTES_REMOTE";
+    /// Virtual MICROseconds reducers spent fetching segments (serial sum
+    /// across reducers).
+    pub const SHUFFLE_FETCH_US: &str = "SHUFFLE_FETCH_US";
 }
 
 impl Counters {

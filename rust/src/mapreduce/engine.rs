@@ -1,10 +1,12 @@
-//! The MapReduce engine: map → (combine) → shuffle/sort → reduce.
+//! The MapReduce engine: map → spill/merge → fetch → merge → reduce.
 //!
 //! Runs map and reduce tasks on the [`Cluster`]'s worker pool with per-task
-//! retry (Hadoop's task-attempt model), a map-side combiner, a sort-merge
-//! shuffle, counters, and virtual-time accounting: every task's measured
-//! cost + its split's block locations are replayed through the cluster's
-//! JobTracker ([`crate::scheduler`]) — heartbeat-driven slot assignment,
+//! retry (Hadoop's task-attempt model), the [`super::shuffle`] subsystem
+//! (map-side sort/spill/merge with a per-spill combiner, reduce-side
+//! locality-charged fetches and a streaming grouped merge), counters, and
+//! virtual-time accounting: every task's measured cost + its split's block
+//! locations are replayed through the cluster's JobTracker
+//! ([`crate::scheduler`]) — heartbeat-driven slot assignment,
 //! node-local/rack-local/off-rack read charging and live speculative
 //! duplicates — whose tallies land in the job counters.
 
@@ -14,7 +16,8 @@ use crate::scheduler::{SchedulePlan, TaskSpec};
 
 use super::counters::{names, Counters};
 use super::job::{Job, Phase};
-use super::types::{Bytes, TaskContext, KV};
+use super::shuffle::{self, GroupedMerge, MapShuffleOutput, Segment, SpillCollector};
+use super::types::{TaskContext, KV};
 
 /// Statistics of one executed job.
 #[derive(Debug, Clone, Default)]
@@ -23,8 +26,14 @@ pub struct JobStats {
     pub map_costs: Vec<TaskCost>,
     /// Cost profile of every reduce task.
     pub reduce_costs: Vec<TaskCost>,
-    /// Total intermediate bytes crossing the shuffle.
+    /// Total intermediate bytes crossing the shuffle (post-combine).
     pub shuffle_bytes: u64,
+    /// Records written in map spills and re-written in merge passes.
+    pub spilled_records: u64,
+    /// Merge passes across map and reduce sides.
+    pub merge_passes: u64,
+    /// Virtual seconds of the slowest reducer's fetch phase.
+    pub shuffle_fetch_s: f64,
     /// Virtual wall-clock on the simulated cluster (seconds).
     pub virtual_time_s: f64,
     /// Real wall-clock of this simulation (seconds).
@@ -75,9 +84,17 @@ fn absorb_plan(counters: &mut Counters, plan: &SchedulePlan, is_map: bool) {
 pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
     let wall_start = std::time::Instant::now();
     let mut counters = Counters::default();
+    let shuffle_cfg = job.shuffle.unwrap_or(*cluster.shuffle_config());
+    let has_reducer = job.reducer.is_some();
+    // Clamp once here so a hand-built Job (bypassing JobBuilder's clamp)
+    // agrees with SpillCollector's own floor of one partition.
+    let nred = job.num_reducers.max(1);
 
     // ---------------- map phase (with retry) ----------------
     struct MapOut {
+        /// Spilled/merged per-partition segments (reduce jobs).
+        shuffle: Option<MapShuffleOutput>,
+        /// Raw emitted records (map-only jobs).
         records: Vec<KV>,
         counters: Counters,
         input_bytes: u64,
@@ -90,6 +107,7 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
         .map(|(task_id, split)| {
             let mapper = job.mapper.clone();
             let combiner = job.combiner.clone();
+            let partitioner = job.partitioner.clone();
             let fault = job.fault.clone();
             let max_attempts = job.max_attempts;
             move || -> Result<MapOut> {
@@ -106,6 +124,16 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
                         }
                     }
                     let mut ctx = TaskContext::default();
+                    // Reduce jobs route emits through the spill buffer; a
+                    // map-only job's emits ARE its output and stay put.
+                    let mut collector = has_reducer.then(|| {
+                        SpillCollector::new(
+                            nred,
+                            partitioner.clone(),
+                            combiner.clone(),
+                            shuffle_cfg,
+                        )
+                    });
                     let mut ok = true;
                     for (k, v) in split {
                         ctx.incr(names::MAP_INPUT_RECORDS, 1);
@@ -114,19 +142,59 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
                             ok = false;
                             break;
                         }
+                        if let Some(col) = collector.as_mut() {
+                            for (kk, vv) in ctx.take_emits() {
+                                col.collect(kk, vv)?;
+                            }
+                        }
                     }
                     if !ok {
                         continue;
                     }
-                    let (mut records, mut task_counters) = ctx.into_parts();
-                    task_counters.incr(names::MAP_OUTPUT_RECORDS, records.len() as u64);
-                    // Map-side combine: sort-group-reduce within this task.
-                    if let Some(c) = &combiner {
-                        records = combine(records, c.as_ref())?;
-                        task_counters
-                            .incr(names::COMBINE_OUTPUT_RECORDS, records.len() as u64);
-                    }
+                    let (records, mut task_counters) = ctx.into_parts();
+                    let (records, shuffle_out) = match collector {
+                        Some(col) => {
+                            let out = col.finish()?;
+                            task_counters
+                                .incr(names::MAP_OUTPUT_RECORDS, out.input_records);
+                            if combiner.is_some() {
+                                task_counters.incr(
+                                    names::COMBINE_OUTPUT_RECORDS,
+                                    out.combine_output_records,
+                                );
+                            }
+                            task_counters.incr(names::SPILLS, out.spills);
+                            task_counters
+                                .incr(names::SPILLED_RECORDS, out.spilled_records);
+                            task_counters.incr(names::MERGE_PASSES, out.merge_passes);
+                            (Vec::new(), Some(out))
+                        }
+                        None => {
+                            task_counters
+                                .incr(names::MAP_OUTPUT_RECORDS, records.len() as u64);
+                            // A map-only job's combiner still runs over the
+                            // task output (sort-group-combine, as the
+                            // pre-shuffle engine did).
+                            let records = match &combiner {
+                                Some(c) => {
+                                    let combined = shuffle::buffer::combine_segment(
+                                        Segment::from_unsorted(records),
+                                        c.as_ref(),
+                                    )?
+                                    .into_records();
+                                    task_counters.incr(
+                                        names::COMBINE_OUTPUT_RECORDS,
+                                        combined.len() as u64,
+                                    );
+                                    combined
+                                }
+                                None => records,
+                            };
+                            (records, None)
+                        }
+                    };
                     return Ok(MapOut {
+                        shuffle: shuffle_out,
                         records,
                         counters: task_counters,
                         input_bytes,
@@ -141,14 +209,20 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
         .collect();
 
     let map_results = cluster.execute(map_tasks)?;
-    let mut map_costs = Vec::with_capacity(map_results.len());
-    let mut map_outputs: Vec<Vec<KV>> = Vec::with_capacity(map_results.len());
+    let nmaps = map_results.len();
+    let mut map_costs = Vec::with_capacity(nmaps);
+    let mut map_records: Vec<Vec<KV>> = Vec::new();
+    // map_segments[m][p] = map m's sorted output segment for partition p.
+    let mut map_segments: Vec<Vec<Segment>> = Vec::new();
     for (out, secs) in map_results {
-        let out_bytes: u64 = out
-            .records
-            .iter()
-            .map(|(k, v)| (k.len() + v.len()) as u64)
-            .sum();
+        let out_bytes: u64 = match &out.shuffle {
+            Some(s) => s.bytes(),
+            None => out
+                .records
+                .iter()
+                .map(|(k, v)| (k.len() + v.len()) as u64)
+                .sum(),
+        };
         let modeled_us = out.counters.get(names::COMPUTE_US);
         map_costs.push(TaskCost {
             // Deterministic modeled compute wins over noisy measured time.
@@ -160,7 +234,10 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
         });
         counters.merge(&out.counters);
         counters.incr(names::FAILED_MAP_ATTEMPTS, out.failed_attempts);
-        map_outputs.push(out.records);
+        match out.shuffle {
+            Some(s) => map_segments.push(s.segments),
+            None => map_records.push(out.records),
+        }
     }
 
     // Route the map phase through the JobTracker: measured costs + declared
@@ -180,29 +257,33 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
     // ---------------- map-only job: done ----------------
     let Some(reducer) = &job.reducer else {
         let stats = JobStats {
-            shuffle_bytes: 0,
             virtual_time_s: cluster.planned_job_time(&map_plan, None, 0),
             wall_time_s: wall_start.elapsed().as_secs_f64(),
             map_costs,
-            reduce_costs: vec![],
+            ..JobStats::default()
         };
-        return Ok(JobResult { output: map_outputs, counters, stats });
+        return Ok(JobResult { output: map_records, counters, stats });
     };
 
-    // ---------------- shuffle: partition + sort + group ----------------
-    let nred = job.num_reducers;
-    let mut partitions: Vec<Vec<KV>> = (0..nred).map(|_| Vec::new()).collect();
-    let mut shuffle_bytes = 0u64;
-    for records in map_outputs {
-        for (k, v) in records {
-            shuffle_bytes += (k.len() + v.len()) as u64;
-            let p = job.partitioner.partition(&k, nred);
-            partitions[p].push((k, v));
-        }
-    }
+    // ---------------- shuffle: per-partition fetch lists ----------------
+    // Segment sizes per (map, partition), recorded before the segments move
+    // into the reduce tasks — the fetch plan charges these per tier.
+    let seg_bytes: Vec<Vec<u64>> = map_segments
+        .iter()
+        .map(|segs| segs.iter().map(|s| s.bytes()).collect())
+        .collect();
+    let shuffle_bytes: u64 =
+        seg_bytes.iter().map(|row| row.iter().sum::<u64>()).sum();
     counters.incr(names::SHUFFLE_BYTES, shuffle_bytes);
-    for p in partitions.iter_mut() {
-        p.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut partitions: Vec<Vec<Segment>> = (0..nred)
+        .map(|_| Vec::with_capacity(map_segments.len()))
+        .collect();
+    for segs in map_segments {
+        for (p, seg) in segs.into_iter().enumerate() {
+            if !seg.is_empty() {
+                partitions[p].push(seg);
+            }
+        }
     }
 
     // ---------------- reduce phase (with retry) ----------------
@@ -215,13 +296,17 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
     let reduce_tasks: Vec<_> = partitions
         .into_iter()
         .enumerate()
-        .map(|(task_id, part)| {
+        .map(|(task_id, segments)| {
             let reducer = reducer.clone();
             let fault = job.fault.clone();
             let max_attempts = job.max_attempts;
             move || -> Result<RedOut> {
-                let input_bytes: u64 =
-                    part.iter().map(|(k, v)| (k.len() + v.len()) as u64).sum();
+                let input_bytes: u64 = segments.iter().map(|s| s.bytes()).sum();
+                // Fetch merge: bring the runs under the factor bound once
+                // (Hadoop's on-disk merges); the streamed final merge is
+                // rebuilt per attempt.
+                let (merged, merge_passes, respilled) =
+                    shuffle::merge_to_factor(segments, shuffle_cfg.factor());
                 let mut failed = 0u64;
                 for attempt in 0..max_attempts {
                     if let Some(f) = &fault {
@@ -233,22 +318,15 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
                     let mut ctx = TaskContext::default();
                     let mut groups = 0u64;
                     let mut ok = true;
-                    let mut i = 0;
-                    while i < part.len() {
-                        let key = &part[i].0;
-                        let mut j = i;
-                        while j < part.len() && &part[j].0 == key {
-                            j += 1;
-                        }
-                        let values: Vec<Bytes> =
-                            part[i..j].iter().map(|(_, v)| v.clone()).collect();
+                    let mut gm = GroupedMerge::new(&merged);
+                    while let Some(key) = gm.next_key() {
                         groups += 1;
-                        if reducer.reduce(key, &values, &mut ctx).is_err() {
+                        let mut vs = gm.values();
+                        if reducer.reduce(&key, &mut vs, &mut ctx).is_err() {
                             failed += 1;
                             ok = false;
                             break;
                         }
-                        i = j;
                     }
                     if !ok {
                         continue;
@@ -257,6 +335,8 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
                     task_counters.incr(names::REDUCE_INPUT_GROUPS, groups);
                     task_counters
                         .incr(names::REDUCE_OUTPUT_RECORDS, records.len() as u64);
+                    task_counters.incr(names::MERGE_PASSES, merge_passes);
+                    task_counters.incr(names::SPILLED_RECORDS, respilled);
                     return Ok(RedOut {
                         records,
                         counters: task_counters,
@@ -291,53 +371,62 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
         output.push(out.records);
     }
 
-    // Reducers pull their input through the shuffle (charged separately),
-    // so their plan carries no locality preference.
+    // Reducers pull their input through the shuffle — charged below at the
+    // fetch tiers — so their plan carries no input bytes and no locality
+    // preference.
     let reduce_specs: Vec<TaskSpec> = reduce_costs
         .iter()
-        .map(|c| TaskSpec { cost: *c, hosts: Vec::new() })
+        .map(|c| TaskSpec {
+            cost: TaskCost { input_bytes: 0, ..*c },
+            hosts: Vec::new(),
+        })
         .collect();
     let reduce_plan = cluster.plan_phase(&reduce_specs);
     absorb_plan(&mut counters, &reduce_plan, false);
 
+    // Charge every segment fetch at the locality tier between the map
+    // attempt that produced it and the reduce attempt that consumes it.
+    let map_slaves = map_plan.winning_slaves(nmaps);
+    let reduce_slaves = reduce_plan.winning_slaves(reduce_costs.len());
+    let fetch = shuffle::plan_fetches(
+        cluster.topology(),
+        cluster.model(),
+        &map_slaves,
+        &reduce_slaves,
+        &seg_bytes,
+        shuffle_cfg.parallelism(),
+    );
+    counters.incr(names::SHUFFLE_FETCH_BYTES_LOCAL, fetch.bytes_node_local);
+    counters.incr(names::SHUFFLE_FETCH_BYTES_RACK, fetch.bytes_rack_local);
+    counters.incr(names::SHUFFLE_FETCH_BYTES_REMOTE, fetch.bytes_off_rack);
+    counters.incr(
+        names::SHUFFLE_FETCH_US,
+        (fetch.total_fetch_s * 1e6).round() as u64,
+    );
+
     let stats = JobStats {
-        virtual_time_s: cluster.planned_job_time(
+        virtual_time_s: cluster.planned_job_time_with_fetch(
             &map_plan,
-            Some(&reduce_plan),
-            shuffle_bytes,
+            &reduce_plan,
+            fetch.fetch_s,
         ),
         wall_time_s: wall_start.elapsed().as_secs_f64(),
         map_costs,
         reduce_costs,
         shuffle_bytes,
+        spilled_records: counters.get(names::SPILLED_RECORDS),
+        merge_passes: counters.get(names::MERGE_PASSES),
+        shuffle_fetch_s: fetch.fetch_s,
     };
     Ok(JobResult { output, counters, stats })
-}
-
-/// Sort-group-apply a combiner to one map task's output.
-fn combine(mut records: Vec<KV>, combiner: &dyn super::types::Reducer) -> Result<Vec<KV>> {
-    records.sort_by(|a, b| a.0.cmp(&b.0));
-    let mut ctx = TaskContext::default();
-    let mut i = 0;
-    while i < records.len() {
-        let key = records[i].0.clone();
-        let mut j = i;
-        while j < records.len() && records[j].0 == key {
-            j += 1;
-        }
-        let values: Vec<Bytes> = records[i..j].iter().map(|(_, v)| v.clone()).collect();
-        combiner.reduce(&key, &values, &mut ctx)?;
-        i = j;
-    }
-    let (out, _) = ctx.into_parts();
-    Ok(out)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::mapreduce::job::JobBuilder;
-    use crate::mapreduce::types::{FnMapper, FnReducer};
+    use crate::mapreduce::shuffle::ShuffleConfig;
+    use crate::mapreduce::types::{FnMapper, FnReducer, Values};
     use crate::util::bytes::{decode_u64, encode_u64};
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Arc;
@@ -361,8 +450,11 @@ mod tests {
             Ok(())
         }));
         let sum = Arc::new(FnReducer(
-            |k: &[u8], vs: &[Bytes], ctx: &mut TaskContext| {
-                let total: u64 = vs.iter().map(|v| decode_u64(v)).sum();
+            |k: &[u8], vs: &mut dyn Values, ctx: &mut TaskContext| {
+                let mut total = 0u64;
+                while let Some(v) = vs.next_value() {
+                    total += decode_u64(v);
+                }
                 ctx.emit(k.to_vec(), encode_u64(total).to_vec());
                 Ok(())
             },
@@ -427,6 +519,43 @@ mod tests {
         assert_eq!(r.output[0].len(), 2);
         assert_eq!(r.output[1].len(), 1);
         assert_eq!(r.stats.shuffle_bytes, 0);
+        assert_eq!(r.counters.get(names::SPILLED_RECORDS), 0);
+    }
+
+    #[test]
+    fn map_only_job_still_runs_its_combiner() {
+        let cluster = Cluster::new(2);
+        let mapper = Arc::new(FnMapper(|_k: &[u8], v: &[u8], ctx: &mut TaskContext| {
+            for w in std::str::from_utf8(v).unwrap().split_whitespace() {
+                ctx.emit(w.as_bytes().to_vec(), encode_u64(1).to_vec());
+            }
+            Ok(())
+        }));
+        let sum = Arc::new(FnReducer(
+            |k: &[u8], vs: &mut dyn Values, ctx: &mut TaskContext| {
+                let mut total = 0u64;
+                while let Some(v) = vs.next_value() {
+                    total += decode_u64(v);
+                }
+                ctx.emit(k.to_vec(), encode_u64(total).to_vec());
+                Ok(())
+            },
+        ));
+        let input = vec![vec![(vec![], b"a b a a b".to_vec())]];
+        let job = JobBuilder::new("maponly-combine", input, mapper)
+            .combiner(sum)
+            .build();
+        let r = run(&cluster, &job).unwrap();
+        assert_eq!(r.counters.get(names::MAP_OUTPUT_RECORDS), 5);
+        assert_eq!(r.counters.get(names::COMBINE_OUTPUT_RECORDS), 2);
+        // Output is the combined, key-sorted task output.
+        assert_eq!(r.output.len(), 1);
+        let recs = &r.output[0];
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].0, b"a".to_vec());
+        assert_eq!(decode_u64(&recs[0].1), 3);
+        assert_eq!(recs[1].0, b"b".to_vec());
+        assert_eq!(decode_u64(&recs[1].1), 2);
     }
 
     #[test]
@@ -521,5 +650,147 @@ mod tests {
         assert_eq!(r.counters.get(names::DATA_LOCAL_MAPS), 0);
         assert_eq!(r.counters.get(names::RACK_LOCAL_MAPS), 0);
         assert_eq!(r.counters.get(names::OFF_RACK_MAPS), 0);
+    }
+
+    #[test]
+    fn spill_counters_cover_every_record_with_tiny_buffer() {
+        let cluster = Cluster::new(2);
+        let mut job = wordcount_job(word_splits(), false);
+        job.shuffle = Some(ShuffleConfig {
+            sort_buffer_kb: 0, // floor: spill on every record
+            merge_factor: 2,
+            fetch_parallelism: 1,
+        });
+        let mut r = run(&cluster, &job).unwrap();
+        let map_out = r.counters.get(names::MAP_OUTPUT_RECORDS);
+        let spilled = r.counters.get(names::SPILLED_RECORDS);
+        assert_eq!(map_out, 13);
+        assert!(
+            spilled >= map_out,
+            "tiny buffer must spill every record: {spilled} < {map_out}"
+        );
+        assert!(r.counters.get(names::SPILLS) >= 13);
+        assert!(r.counters.get(names::MERGE_PASSES) > 0);
+        assert_eq!(counts_of(&mut r)["the"], 4, "spilling must not change results");
+    }
+
+    #[test]
+    fn one_spill_when_buffer_is_large() {
+        let cluster = Cluster::new(2);
+        let job = wordcount_job(word_splits(), false); // default 512 KiB buffer
+        let r = run(&cluster, &job).unwrap();
+        assert_eq!(
+            r.counters.get(names::SPILLS),
+            2,
+            "one spill per map task with a roomy buffer"
+        );
+        assert_eq!(
+            r.counters.get(names::SPILLED_RECORDS),
+            r.counters.get(names::MAP_OUTPUT_RECORDS)
+        );
+    }
+
+    #[test]
+    fn fetch_counters_account_every_shuffled_byte() {
+        let mut cluster =
+            Cluster::with_model(4, 2, crate::cluster::NetworkModel::default());
+        cluster.set_topology(crate::scheduler::RackTopology::uniform(4, 2));
+        let job = wordcount_job(word_splits(), false);
+        let r = run(&cluster, &job).unwrap();
+        let fetched = r.counters.get(names::SHUFFLE_FETCH_BYTES_LOCAL)
+            + r.counters.get(names::SHUFFLE_FETCH_BYTES_RACK)
+            + r.counters.get(names::SHUFFLE_FETCH_BYTES_REMOTE);
+        assert_eq!(
+            fetched,
+            r.stats.shuffle_bytes,
+            "every shuffled byte must be charged at some tier"
+        );
+        assert!(r.stats.shuffle_fetch_s > 0.0);
+        assert!(r.counters.get(names::SHUFFLE_FETCH_US) > 0);
+    }
+
+    #[test]
+    fn shuffle_knobs_do_not_change_the_answer() {
+        let cluster = Cluster::new(3);
+        let mut base = run(&cluster, &wordcount_job(word_splits(), false)).unwrap();
+        let expected = counts_of(&mut base);
+        for (kb, factor) in [(0usize, 2usize), (0, 16), (1 << 14, 2), (1 << 14, 16)] {
+            for with_combiner in [false, true] {
+                let mut job = wordcount_job(word_splits(), with_combiner);
+                job.shuffle = Some(ShuffleConfig {
+                    sort_buffer_kb: kb,
+                    merge_factor: factor,
+                    fetch_parallelism: 3,
+                });
+                let mut r = run(&cluster, &job).unwrap();
+                assert_eq!(
+                    counts_of(&mut r),
+                    expected,
+                    "kb={kb} factor={factor} combiner={with_combiner}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reducer_sees_values_as_a_stream_not_a_vec() {
+        // A reducer that counts how many values it can pull lazily; with 3
+        // splits each emitting the same key, all values arrive in one group.
+        let cluster = Cluster::new(2);
+        let mapper = Arc::new(FnMapper(|_k: &[u8], v: &[u8], ctx: &mut TaskContext| {
+            ctx.emit(b"key".to_vec(), v.to_vec());
+            Ok(())
+        }));
+        let reducer = Arc::new(FnReducer(
+            |k: &[u8], vs: &mut dyn Values, ctx: &mut TaskContext| {
+                let mut n: u64 = 0;
+                let mut bytes: u64 = 0;
+                while let Some(v) = vs.next_value() {
+                    n += 1;
+                    bytes += v.len() as u64;
+                }
+                ctx.emit(k.to_vec(), encode_u64(n * 1000 + bytes).to_vec());
+                Ok(())
+            },
+        ));
+        let input: Vec<Vec<KV>> = (0..3)
+            .map(|i| vec![(vec![], vec![i as u8; (i + 1) as usize])])
+            .collect();
+        let job = JobBuilder::new("stream", input, mapper)
+            .reducer(reducer, 2)
+            .build();
+        let mut r = run(&cluster, &job).unwrap();
+        let recs = r.sorted_records();
+        assert_eq!(recs.len(), 1);
+        // 3 values totalling 1+2+3 = 6 bytes.
+        assert_eq!(decode_u64(&recs[0].1), 3 * 1000 + 6);
+        assert_eq!(r.counters.get(names::REDUCE_INPUT_GROUPS), 1);
+    }
+
+    #[test]
+    fn values_never_pulled_still_advances_groups() {
+        // A reducer that ignores its values entirely: every group must
+        // still be visited exactly once.
+        let cluster = Cluster::new(2);
+        let job_input = word_splits();
+        let mapper = Arc::new(FnMapper(|_k: &[u8], v: &[u8], ctx: &mut TaskContext| {
+            for w in std::str::from_utf8(v).unwrap().split_whitespace() {
+                ctx.emit(w.as_bytes().to_vec(), vec![1]);
+            }
+            Ok(())
+        }));
+        let reducer = Arc::new(FnReducer(
+            |k: &[u8], _vs: &mut dyn Values, ctx: &mut TaskContext| {
+                ctx.emit(k.to_vec(), vec![]);
+                Ok(())
+            },
+        ));
+        let job = JobBuilder::new("lazy", job_input, mapper)
+            .reducer(reducer, 2)
+            .build();
+        let mut r = run(&cluster, &job).unwrap();
+        // 8 distinct words in the corpus.
+        assert_eq!(r.sorted_records().len(), 8);
+        assert_eq!(r.counters.get(names::REDUCE_INPUT_GROUPS), 8);
     }
 }

@@ -2,6 +2,7 @@
 
 use std::sync::Arc;
 
+use super::shuffle::ShuffleConfig;
 use super::types::{HashPartitioner, InputSplit, Mapper, Partitioner, Reducer};
 
 /// Predicate deciding whether a task attempt should be failed artificially:
@@ -41,6 +42,9 @@ pub struct Job {
     pub max_attempts: usize,
     /// Optional fault injection for tests.
     pub fault: Option<FaultInjector>,
+    /// Per-job shuffle knobs (`None` = the cluster's configuration), like
+    /// Hadoop's per-job `io.sort.*` overrides in the JobConf.
+    pub shuffle: Option<ShuffleConfig>,
 }
 
 /// Builder for [`Job`].
@@ -63,6 +67,7 @@ impl JobBuilder {
                 partitioner: Arc::new(HashPartitioner),
                 max_attempts: 4,
                 fault: None,
+                shuffle: None,
             },
         }
     }
@@ -105,6 +110,12 @@ impl JobBuilder {
         self
     }
 
+    /// Override the cluster's shuffle knobs for this job.
+    pub fn shuffle_config(mut self, cfg: ShuffleConfig) -> Self {
+        self.job.shuffle = Some(cfg);
+        self
+    }
+
     /// Finish.
     pub fn build(self) -> Job {
         self.job
@@ -130,6 +141,23 @@ mod tests {
         assert_eq!(j.num_reducers, 1);
         assert_eq!(j.max_attempts, 4);
         assert!(j.split_hosts.is_empty());
+        assert!(j.shuffle.is_none(), "cluster shuffle config by default");
+    }
+
+    #[test]
+    fn builder_sets_shuffle_override() {
+        let j = JobBuilder::new(
+            "t",
+            vec![],
+            Arc::new(FnMapper(|_: &[u8], _: &[u8], _: &mut _| Ok(()))),
+        )
+        .shuffle_config(ShuffleConfig {
+            sort_buffer_kb: 4,
+            merge_factor: 3,
+            fetch_parallelism: 2,
+        })
+        .build();
+        assert_eq!(j.shuffle.unwrap().merge_factor, 3);
     }
 
     #[test]

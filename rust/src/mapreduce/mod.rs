@@ -2,20 +2,25 @@
 //!
 //! The programming model is Hadoop's: a [`Mapper`] over input splits, an
 //! optional map-side combiner, a [`Partitioner`] routing keys to reduce
-//! partitions, a sort-merge shuffle, and a [`Reducer`] per partition. Tasks
-//! execute on the simulated [`crate::cluster::Cluster`] with per-task retry
-//! and fault injection; every task's measured cost feeds the virtual-time
-//! model that reproduces the paper's scaling numbers.
+//! partitions, the [`shuffle`] subsystem (sort/spill/merge on the map
+//! side, locality-charged fetches and a streaming grouped merge on the
+//! reduce side), and a [`Reducer`] per partition consuming each key
+//! group's values as a stream. Tasks execute on the simulated
+//! [`crate::cluster::Cluster`] with per-task retry and fault injection;
+//! every task's measured cost feeds the virtual-time model that
+//! reproduces the paper's scaling numbers.
 
 pub mod counters;
 pub mod engine;
 pub mod job;
+pub mod shuffle;
 pub mod types;
 
 pub use counters::{names, Counters};
 pub use engine::{run, JobResult, JobStats};
 pub use job::{FaultInjector, Job, JobBuilder, Phase};
+pub use shuffle::ShuffleConfig;
 pub use types::{
     Bytes, FnMapper, FnReducer, HashPartitioner, InputSplit, Mapper, Partitioner,
-    RangePartitioner, Reducer, TaskContext, KV,
+    RangePartitioner, Reducer, SliceValues, TaskContext, Values, KV,
 };

@@ -1,0 +1,315 @@
+//! Map-side sort/spill buffer (Hadoop's MapOutputBuffer in miniature).
+//!
+//! Emitted records accumulate in a bounded buffer; when the buffered bytes
+//! reach `sort_buffer_kb`, the run is sorted by (partition, key), the
+//! combiner runs once per key group, and one sorted [`Segment`] per
+//! partition is spilled. At task end the spills are merged down to one
+//! segment per partition under the `merge_factor` bound.
+
+use std::sync::Arc;
+
+use crate::error::Result;
+
+use super::super::types::{Bytes, Partitioner, Reducer, TaskContext, KV};
+use super::merge::{merge_records, merge_to_factor, GroupedMerge, Segment};
+use super::ShuffleConfig;
+
+/// The finished map output: one sorted segment per reduce partition plus
+/// the spill/merge tallies that feed the job counters.
+#[derive(Debug, Default)]
+pub struct MapShuffleOutput {
+    /// One sorted segment per reduce partition (empty segments included,
+    /// so `segments[p]` is always this map's output for partition `p`).
+    pub segments: Vec<Segment>,
+    /// Records collected from the mapper (pre-combine) — the task's
+    /// map-output record count.
+    pub input_records: u64,
+    /// Spills performed (>= 1 whenever the task emitted anything).
+    pub spills: u64,
+    /// Records written across all spills and intermediate merge passes.
+    pub spilled_records: u64,
+    /// Intermediate + final merge passes that combined multiple runs.
+    pub merge_passes: u64,
+    /// Records surviving the combiner (0 when no combiner installed).
+    pub combine_output_records: u64,
+}
+
+impl MapShuffleOutput {
+    /// Total intermediate bytes this map contributes to the shuffle.
+    pub fn bytes(&self) -> u64 {
+        self.segments.iter().map(|s| s.bytes()).sum()
+    }
+}
+
+/// The spill collector: owns the sort buffer and the spilled runs of one
+/// map task attempt.
+pub struct SpillCollector {
+    nparts: usize,
+    partitioner: Arc<dyn Partitioner>,
+    combiner: Option<Arc<dyn Reducer>>,
+    cfg: ShuffleConfig,
+    /// (partition, record) pairs awaiting the next spill.
+    buffer: Vec<(usize, KV)>,
+    buffered_bytes: usize,
+    /// spills[i][p] = partition p's sorted run from spill i.
+    spills: Vec<Vec<Segment>>,
+    /// Records collected (pre-combine) — the map-output record count.
+    pub input_records: u64,
+    spilled_records: u64,
+    combine_output_records: u64,
+}
+
+impl SpillCollector {
+    /// Collector for `nparts` reduce partitions.
+    pub fn new(
+        nparts: usize,
+        partitioner: Arc<dyn Partitioner>,
+        combiner: Option<Arc<dyn Reducer>>,
+        cfg: ShuffleConfig,
+    ) -> Self {
+        Self {
+            nparts: nparts.max(1),
+            partitioner,
+            combiner,
+            cfg,
+            buffer: Vec::new(),
+            buffered_bytes: 0,
+            spills: Vec::new(),
+            input_records: 0,
+            spilled_records: 0,
+            combine_output_records: 0,
+        }
+    }
+
+    /// Add one emitted record; spills when the buffer bound is reached.
+    pub fn collect(&mut self, key: Bytes, value: Bytes) -> Result<()> {
+        let p = self.partitioner.partition(&key, self.nparts);
+        self.buffered_bytes += key.len() + value.len();
+        self.buffer.push((p, (key, value)));
+        self.input_records += 1;
+        if self.buffered_bytes >= self.cfg.sort_buffer_bytes() {
+            self.spill()?;
+        }
+        Ok(())
+    }
+
+    /// Sort the buffered run by (partition, key) and write one segment per
+    /// partition, running the combiner per key group.
+    fn spill(&mut self) -> Result<()> {
+        if self.buffer.is_empty() {
+            return Ok(());
+        }
+        let mut buf = std::mem::take(&mut self.buffer);
+        self.buffered_bytes = 0;
+        buf.sort_unstable_by(|a, b| a.0.cmp(&b.0).then_with(|| (a.1).0.cmp(&(b.1).0)));
+        // Pre-size each partition's run from its record count instead of
+        // growing from empty.
+        let mut counts = vec![0usize; self.nparts];
+        for (p, _) in &buf {
+            counts[*p] += 1;
+        }
+        let mut runs: Vec<Vec<KV>> =
+            counts.iter().map(|&c| Vec::with_capacity(c)).collect();
+        for (p, kv) in buf {
+            runs[p].push(kv);
+        }
+        let mut segs = Vec::with_capacity(self.nparts);
+        for run in runs {
+            let mut seg = Segment::from_sorted(run);
+            match &self.combiner {
+                Some(c) if !seg.is_empty() => {
+                    seg = combine_segment(seg, c.as_ref())?;
+                    self.combine_output_records += seg.len() as u64;
+                }
+                _ => {}
+            }
+            self.spilled_records += seg.len() as u64;
+            segs.push(seg);
+        }
+        self.spills.push(segs);
+        Ok(())
+    }
+
+    /// Final spill + per-partition merge down to one segment each.
+    pub fn finish(mut self) -> Result<MapShuffleOutput> {
+        self.spill()?;
+        let mut out = MapShuffleOutput {
+            segments: Vec::with_capacity(self.nparts),
+            input_records: self.input_records,
+            spills: self.spills.len() as u64,
+            spilled_records: self.spilled_records,
+            merge_passes: 0,
+            combine_output_records: self.combine_output_records,
+        };
+        let mut spills = self.spills;
+        for p in 0..self.nparts {
+            let runs: Vec<Segment> = spills
+                .iter_mut()
+                .map(|segs| std::mem::take(&mut segs[p]))
+                .filter(|s| !s.is_empty())
+                .collect();
+            let (mut remaining, passes, rewritten) =
+                merge_to_factor(runs, self.cfg.factor());
+            out.merge_passes += passes;
+            out.spilled_records += rewritten;
+            let seg = match remaining.len() {
+                0 => Segment::default(),
+                1 => remaining.pop().unwrap(),
+                // Final merge streams to the map output file — a pass, but
+                // not a re-spill.
+                _ => {
+                    out.merge_passes += 1;
+                    merge_records(remaining)
+                }
+            };
+            out.segments.push(seg);
+        }
+        Ok(out)
+    }
+}
+
+/// Run the combiner over one sorted run, yielding the combined (sorted)
+/// run. Group values stream from the segment; combiner counters are
+/// dropped (matching Hadoop, which folds them into the task's own).
+pub fn combine_segment(seg: Segment, combiner: &dyn Reducer) -> Result<Segment> {
+    let segs = [seg];
+    let mut gm = GroupedMerge::new(&segs);
+    let mut ctx = TaskContext::default();
+    while let Some(key) = gm.next_key() {
+        let mut vs = gm.values();
+        combiner.reduce(&key, &mut vs, &mut ctx)?;
+    }
+    let (out, _counters) = ctx.into_parts();
+    // Combiners emit per group in key order, but nothing forces the keys
+    // they emit to match the group key — re-sort to keep the invariant.
+    Ok(Segment::from_unsorted(out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::types::{FnReducer, HashPartitioner, Values};
+    use crate::util::bytes::{decode_u64, encode_u64};
+
+    fn sum_combiner() -> Arc<dyn Reducer> {
+        Arc::new(FnReducer(
+            |k: &[u8], vs: &mut dyn Values, ctx: &mut TaskContext| {
+                let mut total = 0u64;
+                while let Some(v) = vs.next_value() {
+                    total += decode_u64(v);
+                }
+                ctx.emit(k.to_vec(), encode_u64(total).to_vec());
+                Ok(())
+            },
+        ))
+    }
+
+    fn collector(
+        nparts: usize,
+        buffer_kb: usize,
+        combiner: Option<Arc<dyn Reducer>>,
+    ) -> SpillCollector {
+        SpillCollector::new(
+            nparts,
+            Arc::new(HashPartitioner),
+            combiner,
+            ShuffleConfig {
+                sort_buffer_kb: buffer_kb,
+                ..ShuffleConfig::default()
+            },
+        )
+    }
+
+    fn feed(c: &mut SpillCollector, n: u64) {
+        for i in 0..n {
+            c.collect(encode_u64(i % 16).to_vec(), encode_u64(1).to_vec())
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn tiny_buffer_spills_every_record() {
+        let mut c = collector(3, 0, None); // floor: 1-byte threshold
+        feed(&mut c, 100);
+        let out = c.finish().unwrap();
+        assert_eq!(out.segments.len(), 3);
+        assert!(out.spills >= 99, "every record should trigger a spill");
+        assert!(
+            out.spilled_records >= 100,
+            "spilled {} < emitted 100",
+            out.spilled_records
+        );
+        let total: usize = out.segments.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 100, "no records lost");
+    }
+
+    #[test]
+    fn huge_buffer_spills_once() {
+        let mut c = collector(3, 1 << 20, None);
+        feed(&mut c, 100);
+        let out = c.finish().unwrap();
+        assert_eq!(out.spills, 1);
+        assert_eq!(out.spilled_records, 100);
+        assert_eq!(out.merge_passes, 0, "single spill needs no merge");
+    }
+
+    #[test]
+    fn segments_are_sorted_and_partitioned() {
+        let mut c = collector(4, 0, None);
+        feed(&mut c, 200);
+        let out = c.finish().unwrap();
+        let p = HashPartitioner;
+        for (part, seg) in out.segments.iter().enumerate() {
+            for i in 0..seg.len() {
+                assert_eq!(p.partition(seg.key(i), 4), part, "record misrouted");
+                if i > 0 {
+                    assert!(seg.key(i - 1) <= seg.key(i), "segment unsorted");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn combiner_shrinks_spills_but_conserves_sums() {
+        let mut plain = collector(2, 1 << 20, None);
+        feed(&mut plain, 160);
+        let plain_out = plain.finish().unwrap();
+
+        let mut combined = collector(2, 1 << 20, Some(sum_combiner()));
+        feed(&mut combined, 160);
+        let out = combined.finish().unwrap();
+        assert!(out.bytes() < plain_out.bytes(), "combiner should shrink output");
+        assert_eq!(out.combine_output_records, 16, "one record per key");
+        let total: u64 = out
+            .segments
+            .iter()
+            .flat_map(|s| (0..s.len()).map(|i| decode_u64(s.value(i))))
+            .sum();
+        assert_eq!(total, 160, "combined sums must conserve the total");
+    }
+
+    #[test]
+    fn empty_task_produces_empty_segments() {
+        let c = collector(2, 64, None);
+        let out = c.finish().unwrap();
+        assert_eq!(out.segments.len(), 2);
+        assert!(out.segments.iter().all(|s| s.is_empty()));
+        assert_eq!(out.spills, 0);
+        assert_eq!(out.spilled_records, 0);
+    }
+
+    #[test]
+    fn many_tiny_spills_merge_down_with_passes() {
+        let mut c = collector(1, 0, None);
+        feed(&mut c, 64);
+        let out = c.finish().unwrap();
+        assert_eq!(out.segments.len(), 1);
+        assert_eq!(out.segments[0].len(), 64);
+        assert!(out.merge_passes >= 1, "64 spills must merge in passes");
+        assert!(
+            out.spilled_records > 64,
+            "intermediate passes rewrite records: {}",
+            out.spilled_records
+        );
+    }
+}

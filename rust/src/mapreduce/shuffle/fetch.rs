@@ -1,0 +1,189 @@
+//! Reduce-side fetch planning: charge every segment copy at the locality
+//! tier between the map attempt that produced it and the reduce attempt
+//! that consumes it.
+//!
+//! Hadoop reducers pull map outputs over HTTP with a bounded number of
+//! parallel copier threads. Here the JobTracker's winning attempts pin
+//! each map output and each reduce task to a slave; a fetch between them
+//! is node-local (same slave: local disk), rack-local (same rack: bounded
+//! by the top-of-rack switch) or off-rack (the oversubscribed core link),
+//! priced through [`NetworkModel::read_time_at`] — the same tiers map
+//! input reads pay.
+
+use crate::cluster::NetworkModel;
+use crate::scheduler::{classify, Locality, RackTopology};
+
+/// The virtual cost and locality mix of one job's shuffle fetches.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FetchPlan {
+    /// Bytes fetched from the reducer's own node.
+    pub bytes_node_local: u64,
+    /// Bytes fetched from another node in the reducer's rack.
+    pub bytes_rack_local: u64,
+    /// Bytes fetched across racks.
+    pub bytes_off_rack: u64,
+    /// Segment fetches performed (non-empty segments only).
+    pub fetches: u64,
+    /// Virtual seconds of the slowest reducer's fetch phase — the shuffle
+    /// barrier the job's makespan pays.
+    pub fetch_s: f64,
+    /// Sum of every reducer's fetch seconds (serial work, for reporting).
+    pub total_fetch_s: f64,
+}
+
+impl FetchPlan {
+    /// All bytes crossing the shuffle, every tier.
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_node_local + self.bytes_rack_local + self.bytes_off_rack
+    }
+}
+
+/// Plan the fetch phase of one job.
+///
+/// `map_slaves[m]` / `reduce_slaves[r]` are the winning-attempt slaves
+/// from the phase plans (`None` falls back to node-local — nothing to
+/// charge without a placement). `seg_bytes[m][r]` is the size of map
+/// `m`'s segment for partition `r`; zero-byte segments are skipped (an
+/// empty map output is never copied). `parallelism` bounds the concurrent
+/// copy streams per reducer; each wave of copies pays one
+/// `shuffle_latency_s` of connection setup.
+pub fn plan_fetches(
+    topo: &RackTopology,
+    model: &NetworkModel,
+    map_slaves: &[Option<usize>],
+    reduce_slaves: &[Option<usize>],
+    seg_bytes: &[Vec<u64>],
+    parallelism: usize,
+) -> FetchPlan {
+    let p = parallelism.max(1);
+    let mut plan = FetchPlan::default();
+    for (r, &red_slave) in reduce_slaves.iter().enumerate() {
+        let mut serial_s = 0.0f64;
+        let mut fetches = 0u64;
+        for (m, &map_slave) in map_slaves.iter().enumerate() {
+            let bytes = seg_bytes.get(m).and_then(|row| row.get(r)).copied().unwrap_or(0);
+            if bytes == 0 {
+                continue;
+            }
+            let tier = match (map_slave, red_slave) {
+                (Some(src), Some(dst)) => classify(dst, &[src], topo),
+                _ => Locality::NodeLocal,
+            };
+            match tier {
+                Locality::NodeLocal => plan.bytes_node_local += bytes,
+                Locality::RackLocal => plan.bytes_rack_local += bytes,
+                Locality::OffRack => plan.bytes_off_rack += bytes,
+            }
+            serial_s += model.read_time_at(bytes, tier);
+            fetches += 1;
+        }
+        if fetches == 0 {
+            continue;
+        }
+        plan.fetches += fetches;
+        let streams = p.min(fetches as usize).max(1);
+        let waves = fetches.div_ceil(streams as u64);
+        let reducer_s =
+            serial_s / streams as f64 + model.shuffle_latency_s * waves as f64;
+        plan.total_fetch_s += reducer_s;
+        plan.fetch_s = plan.fetch_s.max(reducer_s);
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> NetworkModel {
+        NetworkModel {
+            disk_bw: 100e6,
+            rack_bw: 50e6,
+            cross_rack_bw: 10e6,
+            shuffle_latency_s: 0.0,
+            ..NetworkModel::default()
+        }
+    }
+
+    #[test]
+    fn tiers_follow_the_topology() {
+        // 4 slaves in 2 racks: [0,1 | 2,3].
+        let topo = RackTopology::uniform(4, 2);
+        let m = model();
+        // One map on each of slaves 0, 1, 2; reducer on slave 0.
+        let map_slaves = [Some(0), Some(1), Some(2)];
+        let reduce_slaves = [Some(0)];
+        let seg = vec![vec![1000u64], vec![1000], vec![1000]];
+        let plan = plan_fetches(&topo, &m, &map_slaves, &reduce_slaves, &seg, 4);
+        assert_eq!(plan.bytes_node_local, 1000);
+        assert_eq!(plan.bytes_rack_local, 1000);
+        assert_eq!(plan.bytes_off_rack, 1000);
+        assert_eq!(plan.fetches, 3);
+        assert_eq!(plan.total_bytes(), 3000);
+        assert!(plan.fetch_s > 0.0);
+    }
+
+    #[test]
+    fn off_rack_fetches_cost_more() {
+        let topo = RackTopology::uniform(2, 2); // one slave per rack
+        let m = model();
+        let bytes = vec![vec![100_000_000u64]];
+        let local =
+            plan_fetches(&topo, &m, &[Some(0)], &[Some(0)], &bytes, 1);
+        let remote =
+            plan_fetches(&topo, &m, &[Some(1)], &[Some(0)], &bytes, 1);
+        assert!(
+            remote.fetch_s > local.fetch_s * 5.0,
+            "cross-rack fetch must pay the core link: {} vs {}",
+            remote.fetch_s,
+            local.fetch_s
+        );
+        assert_eq!(remote.bytes_off_rack, 100_000_000);
+        assert_eq!(local.bytes_node_local, 100_000_000);
+    }
+
+    #[test]
+    fn parallelism_shrinks_the_fetch_wall() {
+        let topo = RackTopology::single(2);
+        let m = model();
+        let seg: Vec<Vec<u64>> = (0..8).map(|_| vec![10_000_000u64]).collect();
+        let maps: Vec<Option<usize>> = (0..8).map(|_| Some(1)).collect();
+        let serial = plan_fetches(&topo, &m, &maps, &[Some(0)], &seg, 1);
+        let wide = plan_fetches(&topo, &m, &maps, &[Some(0)], &seg, 8);
+        assert!(wide.fetch_s < serial.fetch_s / 4.0);
+        // Total bytes identical either way.
+        assert_eq!(wide.total_bytes(), serial.total_bytes());
+    }
+
+    #[test]
+    fn empty_segments_are_not_fetched() {
+        let topo = RackTopology::single(2);
+        let m = model();
+        let seg = vec![vec![0u64, 500], vec![0, 0]];
+        let plan = plan_fetches(
+            &topo,
+            &m,
+            &[Some(0), Some(1)],
+            &[Some(0), Some(1)],
+            &seg,
+            4,
+        );
+        assert_eq!(plan.fetches, 1);
+        assert_eq!(plan.total_bytes(), 500);
+    }
+
+    #[test]
+    fn latency_charged_per_wave() {
+        let topo = RackTopology::single(1);
+        let m = NetworkModel {
+            shuffle_latency_s: 1.0,
+            disk_bw: 1e18,
+            ..NetworkModel::default()
+        };
+        let seg: Vec<Vec<u64>> = (0..10).map(|_| vec![1u64]).collect();
+        let maps: Vec<Option<usize>> = (0..10).map(|_| Some(0)).collect();
+        // 10 fetches, 4 streams -> 3 waves.
+        let plan = plan_fetches(&topo, &m, &maps, &[Some(0)], &seg, 4);
+        assert!((plan.fetch_s - 3.0).abs() < 1e-9, "{}", plan.fetch_s);
+    }
+}

@@ -1,0 +1,327 @@
+//! Sorted segments, k-way merging and the streaming group iterator.
+//!
+//! A [`Segment`] is one sorted run of intermediate records — the unit the
+//! map side spills and the reduce side fetches. [`merge_records`] k-way
+//! merges runs into one; [`merge_to_factor`] applies the `io.sort.factor`
+//! discipline (merge in passes until at most `factor` runs remain);
+//! [`GroupedMerge`] streams the final merge one key group at a time into
+//! the reducer without ever materializing a partition.
+
+use super::super::types::{Bytes, Values, KV};
+
+/// One sorted run of intermediate records for a single reduce partition.
+#[derive(Debug, Clone, Default)]
+pub struct Segment {
+    records: Vec<KV>,
+}
+
+impl Segment {
+    /// Wrap records already sorted by key (debug-asserted).
+    pub fn from_sorted(records: Vec<KV>) -> Self {
+        debug_assert!(
+            records.windows(2).all(|w| w[0].0 <= w[1].0),
+            "segment records must be key-sorted"
+        );
+        Self { records }
+    }
+
+    /// Sort records by key (unstable — ties keep arbitrary value order)
+    /// and wrap them.
+    pub fn from_unsorted(mut records: Vec<KV>) -> Self {
+        records.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+        Self { records }
+    }
+
+    /// Number of records.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True when the segment holds no records.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Key of record `i`.
+    pub fn key(&self, i: usize) -> &[u8] {
+        &self.records[i].0
+    }
+
+    /// Value of record `i`.
+    pub fn value(&self, i: usize) -> &[u8] {
+        &self.records[i].1
+    }
+
+    /// Total key+value bytes (what a fetch of this segment moves).
+    pub fn bytes(&self) -> u64 {
+        self.records
+            .iter()
+            .map(|(k, v)| (k.len() + v.len()) as u64)
+            .sum()
+    }
+
+    /// Consume into the raw record vector.
+    pub fn into_records(self) -> Vec<KV> {
+        self.records
+    }
+}
+
+/// K-way merge sorted runs into one sorted run.
+///
+/// Ties break on the lower segment index, so the output is deterministic
+/// in the segments' submission order (map-task order on the reduce side).
+pub fn merge_records(segs: Vec<Segment>) -> Segment {
+    let total: usize = segs.iter().map(|s| s.len()).sum();
+    // Reversed stacks: `last()` peeks the smallest remaining record and
+    // `pop()` moves it out without cloning.
+    let mut stacks: Vec<Vec<KV>> = segs
+        .into_iter()
+        .map(|s| {
+            let mut r = s.into_records();
+            r.reverse();
+            r
+        })
+        .collect();
+    let mut out: Vec<KV> = Vec::with_capacity(total);
+    loop {
+        let mut best: Option<usize> = None;
+        for (i, stack) in stacks.iter().enumerate() {
+            if let Some((key, _)) = stack.last() {
+                best = match best {
+                    Some(b) if stacks[b].last().unwrap().0 <= *key => Some(b),
+                    _ => Some(i),
+                };
+            }
+        }
+        match best {
+            Some(i) => out.push(stacks[i].pop().unwrap()),
+            None => break,
+        }
+    }
+    Segment::from_sorted(out)
+}
+
+/// Merge runs in passes of at most `factor` until no more than `factor`
+/// remain (Hadoop's intermediate on-disk merges). Empty runs are dropped.
+///
+/// Returns `(remaining runs, merge passes, records rewritten)` — rewritten
+/// records are re-spills and count into `SPILLED_RECORDS`.
+pub fn merge_to_factor(
+    mut segs: Vec<Segment>,
+    factor: usize,
+) -> (Vec<Segment>, u64, u64) {
+    let factor = factor.max(2);
+    segs.retain(|s| !s.is_empty());
+    let mut passes = 0u64;
+    let mut rewritten = 0u64;
+    while segs.len() > factor {
+        // Hadoop's Merger discipline: a minimal first pass brings the run
+        // count to ≡ 1 (mod factor−1), so every later pass merges exactly
+        // `factor` runs and rewrites as little data as possible.
+        let first = (segs.len() - 1) % (factor - 1) + 1;
+        let take = if first > 1 { first } else { factor };
+        let group: Vec<Segment> = segs.drain(..take).collect();
+        let merged = merge_records(group);
+        passes += 1;
+        rewritten += merged.len() as u64;
+        segs.push(merged);
+    }
+    (segs, passes, rewritten)
+}
+
+/// Streaming grouped merge over at most `merge_factor` sorted runs: yields
+/// one key group at a time; the group's values are pulled lazily through
+/// [`ValueStream`], so no partition (or group) is ever materialized.
+pub struct GroupedMerge<'s> {
+    segments: &'s [Segment],
+    cursors: Vec<usize>,
+    current: Option<Bytes>,
+}
+
+impl<'s> GroupedMerge<'s> {
+    /// Stream over the given sorted runs.
+    pub fn new(segments: &'s [Segment]) -> Self {
+        Self {
+            cursors: vec![0; segments.len()],
+            segments,
+            current: None,
+        }
+    }
+
+    /// Advance past the previous group (whether or not the reducer drained
+    /// it) and return the next smallest key, or `None` when exhausted.
+    pub fn next_key(&mut self) -> Option<Bytes> {
+        if let Some(prev) = self.current.take() {
+            for (s, seg) in self.segments.iter().enumerate() {
+                let mut c = self.cursors[s];
+                while c < seg.len() && seg.key(c) == prev.as_slice() {
+                    c += 1;
+                }
+                self.cursors[s] = c;
+            }
+        }
+        let mut min: Option<&[u8]> = None;
+        for (s, seg) in self.segments.iter().enumerate() {
+            let c = self.cursors[s];
+            if c < seg.len() {
+                let k = seg.key(c);
+                min = match min {
+                    Some(m) if m <= k => Some(m),
+                    _ => Some(k),
+                };
+            }
+        }
+        let key = min.map(|k| k.to_vec());
+        self.current = key.clone();
+        key
+    }
+
+    /// The value stream of the current group (call after [`Self::next_key`]
+    /// returned `Some`).
+    pub fn values(&mut self) -> ValueStream<'_> {
+        ValueStream {
+            segments: self.segments,
+            cursors: &mut self.cursors,
+            key: self.current.as_deref().expect("values() before next_key()"),
+        }
+    }
+}
+
+/// Lazy per-group value stream: pulls the current key's values segment by
+/// segment, advancing the merge cursors as it goes.
+pub struct ValueStream<'a> {
+    segments: &'a [Segment],
+    cursors: &'a mut Vec<usize>,
+    key: &'a [u8],
+}
+
+impl Values for ValueStream<'_> {
+    fn next_value(&mut self) -> Option<&[u8]> {
+        for (s, seg) in self.segments.iter().enumerate() {
+            let c = self.cursors[s];
+            if c < seg.len() && seg.key(c) == self.key {
+                self.cursors[s] = c + 1;
+                return Some(seg.value(c));
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kv(k: u8, v: u8) -> KV {
+        (vec![k], vec![v])
+    }
+
+    fn seg(pairs: &[(u8, u8)]) -> Segment {
+        Segment::from_sorted(pairs.iter().map(|&(k, v)| kv(k, v)).collect())
+    }
+
+    #[test]
+    fn merge_interleaves_and_breaks_ties_by_segment_order() {
+        let a = seg(&[(1, 10), (3, 30), (5, 50)]);
+        let b = seg(&[(1, 11), (2, 20), (5, 51)]);
+        let m = merge_records(vec![a, b]);
+        let keys: Vec<u8> = (0..m.len()).map(|i| m.key(i)[0]).collect();
+        assert_eq!(keys, vec![1, 1, 2, 3, 5, 5]);
+        // Tie on key 1: segment 0's record first.
+        assert_eq!(m.value(0), &[10]);
+        assert_eq!(m.value(1), &[11]);
+    }
+
+    #[test]
+    fn merge_to_factor_respects_factor_and_counts_passes() {
+        let runs: Vec<Segment> =
+            (0..7).map(|i| seg(&[(i as u8, i as u8)])).collect();
+        let (out, passes, rewritten) = merge_to_factor(runs, 3);
+        assert!(out.len() <= 3, "got {} runs", out.len());
+        assert!(passes >= 1);
+        assert!(rewritten >= 3);
+        let total: usize = out.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 7, "no records lost");
+    }
+
+    #[test]
+    fn merge_to_factor_first_pass_is_minimal() {
+        // Hadoop's io.sort.factor discipline: 11 runs at factor 10 merge
+        // just 2 runs (not 10) — one small pass reaches the bound.
+        let runs: Vec<Segment> =
+            (0..11).map(|i| seg(&[(i as u8, 0)])).collect();
+        let (out, passes, rewritten) = merge_to_factor(runs, 10);
+        assert_eq!(out.len(), 10);
+        assert_eq!(passes, 1);
+        assert_eq!(rewritten, 2, "minimal first pass rewrites 2 records");
+    }
+
+    #[test]
+    fn merge_to_factor_noop_when_few_runs() {
+        let runs = vec![seg(&[(1, 1)]), seg(&[(2, 2)])];
+        let (out, passes, rewritten) = merge_to_factor(runs, 10);
+        assert_eq!(out.len(), 2);
+        assert_eq!(passes, 0);
+        assert_eq!(rewritten, 0);
+    }
+
+    #[test]
+    fn grouped_merge_streams_groups_in_key_order() {
+        let a = seg(&[(1, 10), (2, 20), (2, 21)]);
+        let b = seg(&[(2, 22), (3, 30)]);
+        let segs = vec![a, b];
+        let mut gm = GroupedMerge::new(&segs);
+        let mut seen: Vec<(u8, Vec<u8>)> = Vec::new();
+        while let Some(key) = gm.next_key() {
+            let mut vals = Vec::new();
+            let mut vs = gm.values();
+            while let Some(v) = vs.next_value() {
+                vals.push(v[0]);
+            }
+            seen.push((key[0], vals));
+        }
+        assert_eq!(
+            seen,
+            vec![
+                (1, vec![10]),
+                (2, vec![20, 21, 22]),
+                (3, vec![30]),
+            ]
+        );
+    }
+
+    #[test]
+    fn undrained_group_is_skipped() {
+        let segs = vec![seg(&[(1, 10), (1, 11), (2, 20)])];
+        let mut gm = GroupedMerge::new(&segs);
+        let k1 = gm.next_key().unwrap();
+        assert_eq!(k1, vec![1]);
+        // Reducer never pulls the values; the merge must still advance.
+        let k2 = gm.next_key().unwrap();
+        assert_eq!(k2, vec![2]);
+        assert!(gm.next_key().is_none());
+    }
+
+    #[test]
+    fn empty_input_yields_nothing() {
+        let segs: Vec<Segment> = Vec::new();
+        let mut gm = GroupedMerge::new(&segs);
+        assert!(gm.next_key().is_none());
+        let m = merge_records(Vec::new());
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn segment_bytes_counts_keys_and_values() {
+        let s = seg(&[(1, 1), (2, 2)]);
+        assert_eq!(s.bytes(), 4);
+        assert_eq!(Segment::default().bytes(), 0);
+    }
+
+    #[test]
+    fn from_unsorted_sorts_by_key() {
+        let s = Segment::from_unsorted(vec![kv(3, 0), kv(1, 0), kv(2, 0)]);
+        let keys: Vec<u8> = (0..s.len()).map(|i| s.key(i)[0]).collect();
+        assert_eq!(keys, vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,104 @@
+//! The shuffle subsystem: Hadoop's sort/spill/merge pipeline in miniature.
+//!
+//! Map side ([`buffer`]): every emitted record lands in a bounded sort
+//! buffer (`io.sort.mb` analog). When the buffer fills, it is sorted by
+//! (partition, key) with an unstable sort, the combiner runs once per key
+//! group, and the run is written out as one **spill** — a sorted
+//! [`Segment`] per reduce partition. At task end the spills are k-way
+//! merged (`io.sort.factor` analog) into exactly one segment per
+//! partition: the task's map output file.
+//!
+//! Reduce side ([`merge`], [`fetch`]): each reduce task *fetches* its
+//! partition's segment from every map output. Fetches are charged through
+//! the scheduler's locality tiers — a segment on the reducer's own node
+//! streams from local disk, one in the rack pays the top-of-rack switch,
+//! and a cross-rack fetch pays the oversubscribed core link
+//! ([`fetch::plan_fetches`]). The fetched segments are merged down to at
+//! most `merge_factor` runs (extra runs cost a merge pass and re-spill,
+//! like Hadoop's on-disk merges) and then streamed — never materialized —
+//! through [`merge::GroupedMerge`] into [`Reducer::reduce`] one key group
+//! at a time.
+//!
+//! Counters: `SPILLS`, `SPILLED_RECORDS`, `MERGE_PASSES` and the
+//! per-tier `SHUFFLE_FETCH_BYTES_*` family surface the whole lifecycle
+//! (see `mapreduce::counters::names` and `metrics::report`).
+//!
+//! [`Reducer::reduce`]: crate::mapreduce::Reducer::reduce
+
+pub mod buffer;
+pub mod fetch;
+pub mod merge;
+
+pub use buffer::{MapShuffleOutput, SpillCollector};
+pub use fetch::{plan_fetches, FetchPlan};
+pub use merge::{merge_records, merge_to_factor, GroupedMerge, Segment, ValueStream};
+
+/// Shuffle tuning knobs (Hadoop's `io.sort.*` / `mapred.reduce.parallel.copies`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShuffleConfig {
+    /// Map-side sort buffer size in KiB (`io.sort.mb` analog): the buffer
+    /// spills to a sorted segment run whenever the buffered key+value
+    /// bytes reach this bound.
+    pub sort_buffer_kb: usize,
+    /// Maximum segments merged in one pass (`io.sort.factor` analog), on
+    /// both the map side (spill merge) and the reduce side (fetch merge).
+    pub merge_factor: usize,
+    /// Concurrent fetch streams per reduce task
+    /// (`mapred.reduce.parallel.copies` analog).
+    pub fetch_parallelism: usize,
+}
+
+impl Default for ShuffleConfig {
+    fn default() -> Self {
+        Self {
+            // Scaled-down io.sort.mb=100MB for our miniature jobs.
+            sort_buffer_kb: 512,
+            // Hadoop's io.sort.factor default.
+            merge_factor: 10,
+            // Hadoop's parallel-copies default.
+            fetch_parallelism: 5,
+        }
+    }
+}
+
+impl ShuffleConfig {
+    /// Spill threshold in bytes.
+    pub fn sort_buffer_bytes(&self) -> usize {
+        self.sort_buffer_kb.saturating_mul(1024).max(1)
+    }
+
+    /// Merge factor clamped to a sane floor.
+    pub fn factor(&self) -> usize {
+        self.merge_factor.max(2)
+    }
+
+    /// Fetch parallelism clamped to a sane floor.
+    pub fn parallelism(&self) -> usize {
+        self.fetch_parallelism.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = ShuffleConfig::default();
+        assert_eq!(c.sort_buffer_bytes(), 512 * 1024);
+        assert_eq!(c.factor(), 10);
+        assert_eq!(c.parallelism(), 5);
+    }
+
+    #[test]
+    fn floors_clamp_degenerate_knobs() {
+        let c = ShuffleConfig {
+            sort_buffer_kb: 0,
+            merge_factor: 0,
+            fetch_parallelism: 0,
+        };
+        assert_eq!(c.sort_buffer_bytes(), 1);
+        assert_eq!(c.factor(), 2);
+        assert_eq!(c.parallelism(), 1);
+    }
+}

@@ -29,6 +29,12 @@ impl TaskContext {
         self.counters.incr(name, delta);
     }
 
+    /// Drain the records emitted since the last drain (the engine feeds
+    /// these into the spill buffer between map calls).
+    pub fn take_emits(&mut self) -> Vec<KV> {
+        std::mem::take(&mut self.emits)
+    }
+
     /// Consume the context.
     pub fn into_parts(self) -> (Vec<KV>, Counters) {
         (self.emits, self.counters)
@@ -46,10 +52,51 @@ pub trait Mapper: Send + Sync {
     fn map(&self, key: &[u8], value: &[u8], ctx: &mut TaskContext) -> Result<()>;
 }
 
+/// Streaming view of one key group's values.
+///
+/// The reduce-side merge ([`crate::mapreduce::shuffle::GroupedMerge`])
+/// feeds this lazily from the fetched segments: values are pulled one at
+/// a time and a reduce partition is never materialized. Each returned
+/// slice is borrowed until the next pull — decode or copy what you keep.
+pub trait Values {
+    /// The next value of the group, or `None` when the group is done.
+    fn next_value(&mut self) -> Option<&[u8]>;
+}
+
+/// [`Values`] over a value slice (tests and adapters).
+pub struct SliceValues<'a> {
+    values: &'a [Bytes],
+    next: usize,
+}
+
+impl<'a> SliceValues<'a> {
+    /// Stream the given values in order.
+    pub fn new(values: &'a [Bytes]) -> Self {
+        Self { values, next: 0 }
+    }
+}
+
+impl Values for SliceValues<'_> {
+    fn next_value(&mut self) -> Option<&[u8]> {
+        let v = self.values.get(self.next)?;
+        self.next += 1;
+        Some(v)
+    }
+}
+
 /// Reduce function over one key group (also used as a combiner).
+///
+/// Values arrive as a stream, not a materialized vector: Hadoop's
+/// `reduce(key, Iterator<values>)` contract, which is what lets a reducer
+/// process a group far larger than memory.
 pub trait Reducer: Send + Sync {
-    /// Process one key and all its values.
-    fn reduce(&self, key: &[u8], values: &[Bytes], ctx: &mut TaskContext) -> Result<()>;
+    /// Process one key and the stream of its values.
+    fn reduce(
+        &self,
+        key: &[u8],
+        values: &mut dyn Values,
+        ctx: &mut TaskContext,
+    ) -> Result<()>;
 }
 
 /// Route a key to one of `n` reduce partitions.
@@ -107,9 +154,14 @@ pub struct FnReducer<F>(pub F);
 
 impl<F> Reducer for FnReducer<F>
 where
-    F: Fn(&[u8], &[Bytes], &mut TaskContext) -> Result<()> + Send + Sync,
+    F: Fn(&[u8], &mut dyn Values, &mut TaskContext) -> Result<()> + Send + Sync,
 {
-    fn reduce(&self, key: &[u8], values: &[Bytes], ctx: &mut TaskContext) -> Result<()> {
+    fn reduce(
+        &self,
+        key: &[u8],
+        values: &mut dyn Values,
+        ctx: &mut TaskContext,
+    ) -> Result<()> {
         (self.0)(key, values, ctx)
     }
 }
@@ -168,5 +220,46 @@ mod tests {
         let (emits, counters) = ctx.into_parts();
         assert_eq!(emits, vec![(vec![1], vec![2])]);
         assert_eq!(counters.get("c"), 3);
+    }
+
+    #[test]
+    fn task_context_take_emits_drains() {
+        let mut ctx = TaskContext::default();
+        ctx.emit(vec![1], vec![2]);
+        assert_eq!(ctx.take_emits(), vec![(vec![1], vec![2])]);
+        assert!(ctx.take_emits().is_empty());
+        ctx.emit(vec![3], vec![4]);
+        assert_eq!(ctx.take_emits().len(), 1);
+    }
+
+    #[test]
+    fn slice_values_streams_in_order() {
+        let vals: Vec<Bytes> = vec![vec![1], vec![2], vec![3]];
+        let mut vs = SliceValues::new(&vals);
+        let mut seen = Vec::new();
+        while let Some(v) = vs.next_value() {
+            seen.push(v[0]);
+        }
+        assert_eq!(seen, vec![1, 2, 3]);
+        assert!(vs.next_value().is_none());
+    }
+
+    #[test]
+    fn fn_reducer_streams_values() {
+        let r = FnReducer(
+            |k: &[u8], vs: &mut dyn Values, ctx: &mut TaskContext| {
+                let mut n = 0u64;
+                while let Some(_v) = vs.next_value() {
+                    n += 1;
+                }
+                ctx.emit(k.to_vec(), vec![n as u8]);
+                Ok(())
+            },
+        );
+        let vals: Vec<Bytes> = vec![vec![0]; 5];
+        let mut vs = SliceValues::new(&vals);
+        let mut ctx = TaskContext::default();
+        r.reduce(b"k", &mut vs, &mut ctx).unwrap();
+        assert_eq!(ctx.emitted(), &[(b"k".to_vec(), vec![5])]);
     }
 }

@@ -1,11 +1,15 @@
-//! Timing, speedup, locality and table reporting for experiments/benches.
+//! Timing, speedup, locality, shuffle and table reporting for
+//! experiments/benches.
 
+pub mod report;
 pub mod speedup;
 pub mod table;
 
 use std::time::{Duration, Instant};
 
 use crate::mapreduce::{names, Counters};
+
+pub use report::ShuffleSummary;
 
 /// Data-locality and speculation summary of one job or phase, derived from
 /// the counters the JobTracker feeds through the engine.

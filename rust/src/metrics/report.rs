@@ -1,0 +1,106 @@
+//! Shuffle reporting: turn the engine's spill/merge/fetch counters into a
+//! compact summary for the CLI, benches and experiment JSON.
+
+use crate::mapreduce::{names, Counters};
+use crate::util::fmt::human_bytes;
+
+/// Spill/merge/fetch summary of one job or phase, derived from the
+/// counters the shuffle subsystem feeds through the engine.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ShuffleSummary {
+    /// Map-side sort-buffer spills.
+    pub spills: u64,
+    /// Records written in spills + rewritten by merge passes.
+    pub spilled_records: u64,
+    /// Merge passes, map and reduce side.
+    pub merge_passes: u64,
+    /// Shuffle bytes fetched from the reducer's own node.
+    pub fetch_node_local: u64,
+    /// Shuffle bytes fetched within the reducer's rack.
+    pub fetch_rack_local: u64,
+    /// Shuffle bytes fetched across racks.
+    pub fetch_off_rack: u64,
+    /// Virtual seconds reducers spent fetching (serial sum).
+    pub fetch_s: f64,
+}
+
+impl ShuffleSummary {
+    /// Extract the summary from merged job counters.
+    pub fn from_counters(c: &Counters) -> Self {
+        Self {
+            spills: c.get(names::SPILLS),
+            spilled_records: c.get(names::SPILLED_RECORDS),
+            merge_passes: c.get(names::MERGE_PASSES),
+            fetch_node_local: c.get(names::SHUFFLE_FETCH_BYTES_LOCAL),
+            fetch_rack_local: c.get(names::SHUFFLE_FETCH_BYTES_RACK),
+            fetch_off_rack: c.get(names::SHUFFLE_FETCH_BYTES_REMOTE),
+            fetch_s: c.get(names::SHUFFLE_FETCH_US) as f64 / 1e6,
+        }
+    }
+
+    /// All fetched bytes, every tier.
+    pub fn total_fetch_bytes(&self) -> u64 {
+        self.fetch_node_local + self.fetch_rack_local + self.fetch_off_rack
+    }
+
+    /// Percent of fetched bytes that stayed on the reducer's node
+    /// (0 when nothing was fetched).
+    pub fn node_local_pct(&self) -> f64 {
+        let total = self.total_fetch_bytes();
+        if total == 0 {
+            0.0
+        } else {
+            100.0 * self.fetch_node_local as f64 / total as f64
+        }
+    }
+
+    /// One-line human-readable rendering.
+    pub fn render(&self) -> String {
+        format!(
+            "spills={} spilled_records={} merge_passes={} fetched={} \
+             (local {}, rack {}, remote {}) fetch={:.2}s",
+            self.spills,
+            self.spilled_records,
+            self.merge_passes,
+            human_bytes(self.total_fetch_bytes()),
+            human_bytes(self.fetch_node_local),
+            human_bytes(self.fetch_rack_local),
+            human_bytes(self.fetch_off_rack),
+            self.fetch_s,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_reads_all_counters() {
+        let mut c = Counters::default();
+        c.incr(names::SPILLS, 3);
+        c.incr(names::SPILLED_RECORDS, 120);
+        c.incr(names::MERGE_PASSES, 2);
+        c.incr(names::SHUFFLE_FETCH_BYTES_LOCAL, 600);
+        c.incr(names::SHUFFLE_FETCH_BYTES_RACK, 300);
+        c.incr(names::SHUFFLE_FETCH_BYTES_REMOTE, 100);
+        c.incr(names::SHUFFLE_FETCH_US, 2_500_000);
+        let s = ShuffleSummary::from_counters(&c);
+        assert_eq!(s.spills, 3);
+        assert_eq!(s.spilled_records, 120);
+        assert_eq!(s.merge_passes, 2);
+        assert_eq!(s.total_fetch_bytes(), 1000);
+        assert!((s.node_local_pct() - 60.0).abs() < 1e-9);
+        assert!((s.fetch_s - 2.5).abs() < 1e-9);
+        let line = s.render();
+        assert!(line.contains("spills=3"), "{line}");
+        assert!(line.contains("merge_passes=2"), "{line}");
+    }
+
+    #[test]
+    fn empty_counters_are_all_zero() {
+        let s = ShuffleSummary::from_counters(&Counters::default());
+        assert_eq!(s, ShuffleSummary::default());
+        assert_eq!(s.node_local_pct(), 0.0);
+    }
+}

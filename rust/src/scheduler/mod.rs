@@ -125,6 +125,19 @@ impl SchedulePlan {
             100.0 * self.node_local as f64 / self.placed() as f64
         }
     }
+
+    /// The slave each task's winning attempt ran on, indexed by task id —
+    /// where a map task's output file lives, and which node a reduce task
+    /// fetches from (the shuffle's locality input).
+    pub fn winning_slaves(&self, num_tasks: usize) -> Vec<Option<usize>> {
+        let mut slaves = vec![None; num_tasks];
+        for a in &self.attempts {
+            if a.won && a.task < num_tasks {
+                slaves[a.task] = Some(a.slave);
+            }
+        }
+        slaves
+    }
 }
 
 /// Bookkeeping for a task's primary running attempt.
@@ -530,6 +543,25 @@ mod tests {
             let wins = plan.attempts.iter().filter(|a| a.won).count();
             assert_eq!(wins, tasks.len());
         }
+    }
+
+    #[test]
+    fn winning_slaves_cover_every_task() {
+        let topo = RackTopology::uniform(3, 1);
+        let model = quiet_model();
+        let cfg = tracker_cfg(Policy::Fifo, false);
+        let speeds = [1.0; 3];
+        let jt = JobTracker::new(&topo, &speeds, 2, &model, &cfg);
+        let tasks: Vec<TaskSpec> =
+            (0..7).map(|_| compute_task(1.0, vec![])).collect();
+        let plan = jt.plan(&tasks);
+        let slaves = plan.winning_slaves(7);
+        assert!(slaves.iter().all(|s| s.is_some()), "{slaves:?}");
+        for a in plan.attempts.iter().filter(|a| a.won) {
+            assert_eq!(slaves[a.task], Some(a.slave));
+        }
+        // Short vectors are tolerated (tasks beyond the bound dropped).
+        assert_eq!(plan.winning_slaves(2).len(), 2);
     }
 
     #[test]

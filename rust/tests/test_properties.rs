@@ -6,7 +6,7 @@ use std::sync::Arc;
 use psch::cluster::Cluster;
 use psch::mapreduce::{
     self, FnMapper, FnReducer, HashPartitioner, JobBuilder, Partitioner,
-    RangePartitioner, TaskContext,
+    RangePartitioner, TaskContext, Values,
 };
 use psch::testutil::{check, Gen};
 use psch::util::bytes::{decode_u64, encode_u64};
@@ -74,8 +74,11 @@ fn prop_shuffle_conserves_records() {
             },
         ));
         let sum = Arc::new(FnReducer(
-            |k: &[u8], vs: &[Vec<u8>], ctx: &mut TaskContext| {
-                let total: u64 = vs.iter().map(|v| decode_u64(v)).sum();
+            |k: &[u8], vs: &mut dyn Values, ctx: &mut TaskContext| {
+                let mut total = 0u64;
+                while let Some(v) = vs.next_value() {
+                    total += decode_u64(v);
+                }
                 ctx.emit(k.to_vec(), encode_u64(total).to_vec());
                 Ok(())
             },

@@ -1,0 +1,163 @@
+//! Integration: shuffle determinism and accounting invariants.
+//!
+//! The sort/spill/merge pipeline must be a pure optimization: combiner
+//! on/off × spill threshold {tiny, huge} × merge factor {2, 16} all have
+//! to produce byte-identical reduce output, and the spill counters must
+//! cover every record when the buffer is tiny.
+
+use std::sync::Arc;
+
+use psch::cluster::Cluster;
+use psch::mapreduce::{
+    self, names, FnMapper, FnReducer, Job, JobBuilder, ShuffleConfig,
+    TaskContext, Values, KV,
+};
+use psch::testutil::{check, Gen};
+use psch::util::bytes::{decode_u64, encode_u64};
+use psch::{prop_assert, scheduler};
+
+/// A sum job over the given splits (u64 values — exactly associative, so
+/// any spill/merge/combine grouping must reproduce identical bytes).
+fn sum_job(
+    splits: Vec<Vec<KV>>,
+    n_reducers: usize,
+    with_combiner: bool,
+    shuffle: ShuffleConfig,
+) -> Job {
+    let mapper = Arc::new(FnMapper(
+        |k: &[u8], v: &[u8], ctx: &mut TaskContext| {
+            ctx.emit(k.to_vec(), v.to_vec());
+            Ok(())
+        },
+    ));
+    let sum = Arc::new(FnReducer(
+        |k: &[u8], vs: &mut dyn Values, ctx: &mut TaskContext| {
+            let mut total = 0u64;
+            while let Some(v) = vs.next_value() {
+                total += decode_u64(v);
+            }
+            ctx.emit(k.to_vec(), encode_u64(total).to_vec());
+            Ok(())
+        },
+    ));
+    let mut b = JobBuilder::new("shuffle-sum", splits, mapper)
+        .reducer(sum.clone(), n_reducers)
+        .shuffle_config(shuffle);
+    if with_combiner {
+        b = b.combiner(sum);
+    }
+    b.build()
+}
+
+fn random_splits(g: &mut Gen) -> Vec<Vec<KV>> {
+    let n_records = g.usize_in(1, 300);
+    let n_splits = g.usize_in(1, 6);
+    let key_space = g.usize_in(1, 40);
+    let mut splits: Vec<Vec<KV>> = (0..n_splits).map(|_| Vec::new()).collect();
+    for i in 0..n_records {
+        let key = g.usize_in(0, key_space - 1) as u64;
+        let val = g.usize_in(0, 1000) as u64;
+        splits[i % n_splits]
+            .push((encode_u64(key).to_vec(), encode_u64(val).to_vec()));
+    }
+    splits
+}
+
+#[test]
+fn prop_shuffle_knobs_never_change_reduce_output() {
+    check("shuffle-determinism", 12, 0xD44, |g: &mut Gen| {
+        let splits = random_splits(g);
+        let n_reducers = g.usize_in(1, 5);
+        let cluster = Cluster::new(g.usize_in(1, 4));
+
+        // Reference: default shuffle configuration, no combiner.
+        let reference = mapreduce::run(
+            &cluster,
+            &sum_job(splits.clone(), n_reducers, false, ShuffleConfig::default()),
+        )
+        .unwrap()
+        .output;
+
+        for with_combiner in [false, true] {
+            for sort_buffer_kb in [1usize, 1 << 14] {
+                for merge_factor in [2usize, 16] {
+                    let cfg = ShuffleConfig {
+                        sort_buffer_kb,
+                        merge_factor,
+                        fetch_parallelism: 3,
+                    };
+                    let r = mapreduce::run(
+                        &cluster,
+                        &sum_job(splits.clone(), n_reducers, with_combiner, cfg),
+                    )
+                    .unwrap();
+                    prop_assert!(
+                        r.output == reference,
+                        "output diverged: combiner={with_combiner} \
+                         buffer={sort_buffer_kb}kb factor={merge_factor}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tiny_threshold_spills_at_least_every_map_output_record() {
+    check("shuffle-spill-floor", 12, 0xE55, |g: &mut Gen| {
+        let splits = random_splits(g);
+        let cluster = Cluster::new(g.usize_in(1, 4));
+        let tiny = ShuffleConfig {
+            sort_buffer_kb: 1,
+            merge_factor: g.usize_in(2, 16),
+            fetch_parallelism: 2,
+        };
+        let r = mapreduce::run(&cluster, &sum_job(splits, 3, false, tiny)).unwrap();
+        let map_out = r.counters.get(names::MAP_OUTPUT_RECORDS);
+        let spilled = r.counters.get(names::SPILLED_RECORDS);
+        prop_assert!(map_out > 0, "workload always emits");
+        prop_assert!(
+            spilled >= map_out,
+            "tiny threshold must spill every record: {spilled} < {map_out}"
+        );
+        prop_assert!(
+            r.counters.get(names::SPILLS) > 0,
+            "no spills recorded"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn fetch_tier_bytes_always_sum_to_shuffle_bytes() {
+    // On a racked cluster every shuffled byte lands in exactly one of the
+    // three fetch tiers, and the totals agree with the engine's stat.
+    let mut cluster =
+        Cluster::with_model(4, 2, psch::cluster::NetworkModel::default());
+    cluster.set_topology(scheduler::RackTopology::uniform(4, 2));
+    let splits: Vec<Vec<KV>> = (0..6)
+        .map(|s| {
+            (0..50)
+                .map(|i| {
+                    (
+                        encode_u64((s * 50 + i) as u64 % 17).to_vec(),
+                        encode_u64(i as u64).to_vec(),
+                    )
+                })
+                .collect()
+        })
+        .collect();
+    let r = mapreduce::run(
+        &cluster,
+        &sum_job(splits, 4, false, ShuffleConfig::default()),
+    )
+    .unwrap();
+    let tiers = r.counters.get(names::SHUFFLE_FETCH_BYTES_LOCAL)
+        + r.counters.get(names::SHUFFLE_FETCH_BYTES_RACK)
+        + r.counters.get(names::SHUFFLE_FETCH_BYTES_REMOTE);
+    assert!(r.stats.shuffle_bytes > 0);
+    assert_eq!(tiers, r.stats.shuffle_bytes);
+    assert!(r.stats.shuffle_fetch_s > 0.0);
+    assert!(r.stats.virtual_time_s > r.stats.shuffle_fetch_s);
+}
