@@ -7,7 +7,6 @@ mod common;
 
 use std::sync::Arc;
 
-use psch::cluster::Cluster;
 use psch::mapreduce::{
     self, FnMapper, FnReducer, JobBuilder, TaskContext, Values,
 };
@@ -52,14 +51,14 @@ fn nearest(p: &[f64], centers: &[Vec<f64>]) -> usize {
 }
 
 /// One k-means iteration; `combine` selects the paper's combiner layout.
-fn run_iteration(combine: bool) -> (f64, u64, Vec<Vec<f64>>) {
+fn run_iteration(
+    combine: bool,
+    runtime: &Arc<psch::runtime::KernelRuntime>,
+) -> (f64, u64, Vec<Vec<f64>>) {
     let (points, centers) = data();
     let centers_arc = Arc::new(centers);
-    let cluster = Cluster::with_model(
-        8,
-        2,
-        common::calibrated_config(8).cluster.network,
-    );
+    // Shared constructor: same cluster wiring as the driver/benches.
+    let cluster = common::services_for(8, runtime).cluster;
 
     let pts = points.clone();
     let ctrs = centers_arc.clone();
@@ -126,8 +125,9 @@ fn run_iteration(combine: bool) -> (f64, u64, Vec<Vec<f64>>) {
 
 fn main() {
     println!("A3 combiner ablation: n={N}, d={D}, k={K}, m=8 slaves");
-    let (t_comb, b_comb, c_comb) = run_iteration(true);
-    let (t_naive, b_naive, c_naive) = run_iteration(false);
+    let runtime = common::runtime(); // load once per bench process
+    let (t_comb, b_comb, c_comb) = run_iteration(true, &runtime);
+    let (t_naive, b_naive, c_naive) = run_iteration(false, &runtime);
 
     let mut table =
         AsciiTable::new(&["variant", "shuffle bytes", "virtual time (s)"]);

@@ -5,7 +5,7 @@
 use std::sync::Arc;
 
 use psch::config::Config;
-use psch::coordinator::Driver;
+use psch::coordinator::{Driver, Services};
 use psch::runtime::KernelRuntime;
 
 /// Paper Table 5-1, in seconds: (slaves, similarity, eigen, kmeans, total).
@@ -46,6 +46,13 @@ pub fn calibrated_config(m: usize) -> Config {
 /// Driver with the shared runtime (XLA if artifacts exist).
 pub fn driver_for(m: usize, runtime: &Arc<KernelRuntime>) -> Driver {
     Driver::new(calibrated_config(m), runtime.clone())
+}
+
+/// Calibrated services for ad-hoc jobs at slave count `m` — the same
+/// [`Services::from_config`] constructor the driver uses, so benches never
+/// hand-roll cluster/topology/tracker wiring again.
+pub fn services_for(m: usize, runtime: &Arc<KernelRuntime>) -> Services {
+    Services::from_config(&calibrated_config(m), runtime.clone())
 }
 
 /// Load the kernel runtime once per bench process.

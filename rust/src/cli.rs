@@ -3,6 +3,7 @@
 //! ```text
 //! psch gen-data   --out FILE [--n N --edges E --k K --seed S]
 //! psch run        [--input FILE | --blobs N] [--config FILE] [--set k=v ...]
+//!                 [--explain-plan]   print the planned dataflow DAGs and exit
 //! psch baseline   [--blobs N] [--config FILE]   single-machine comparator
 //! psch scale-study [--n N] [--slaves 1,2,4,6,8,10] [--config FILE]
 //! psch inspect-artifacts [--dir DIR]
@@ -29,7 +30,13 @@ pub struct Flags {
 }
 
 impl Flags {
-    /// Parse `--key value` / `--set k=v` arguments.
+    /// Flags that are boolean switches: bare `--flag` parses as `"true"`.
+    /// Every other flag still requires a value (a forgotten value stays a
+    /// hard error instead of silently becoming the string `"true"`).
+    const BOOL_FLAGS: &'static [&'static str] = &["explain-plan"];
+
+    /// Parse `--key value` / `--set k=v` arguments; switches listed in
+    /// [`Self::BOOL_FLAGS`] may appear bare (e.g. `--explain-plan`).
     pub fn parse(args: &[String]) -> Result<Self> {
         let mut flags = Flags::default();
         let mut i = 0;
@@ -38,10 +45,18 @@ impl Flags {
             let Some(key) = arg.strip_prefix("--") else {
                 return Err(Error::Cli(format!("unexpected argument: {arg}")));
             };
-            let value = args
-                .get(i + 1)
-                .ok_or_else(|| Error::Cli(format!("--{key} needs a value")))?
-                .clone();
+            let is_bool = Self::BOOL_FLAGS.contains(&key);
+            let value = match args.get(i + 1) {
+                Some(v) if !(is_bool && v.starts_with("--")) => {
+                    i += 2;
+                    v.clone()
+                }
+                _ if is_bool => {
+                    i += 1;
+                    "true".to_string()
+                }
+                _ => return Err(Error::Cli(format!("--{key} needs a value"))),
+            };
             if key == "set" {
                 let (k, v) = value
                     .split_once('=')
@@ -50,7 +65,6 @@ impl Flags {
             } else {
                 flags.values.insert(key.to_string(), value);
             }
-            i += 2;
         }
         Ok(flags)
     }
@@ -58,6 +72,11 @@ impl Flags {
     /// String flag.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// Boolean switch: present with no value (or `true`/`1`/`yes`).
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
     /// Parsed flag with default.
@@ -158,6 +177,12 @@ fn cmd_run(flags: &Flags) -> Result<i32> {
     let runtime = Arc::new(KernelRuntime::auto(&crate::runtime::artifacts_dir()));
     println!("backend: {:?}; slaves: {}", runtime.backend(), cfg.cluster.slaves);
     let driver = Driver::new(cfg, runtime);
+    if flags.get_bool("explain-plan") {
+        // Print the planned DAGs (stages, fusion, estimated shuffle) and
+        // exit without launching a single job.
+        print!("{}", driver.explain_plan(&input)?);
+        return Ok(0);
+    }
     let result = driver.run(&input)?;
 
     let mut table = AsciiTable::new(&[
@@ -320,10 +345,28 @@ mod tests {
     #[test]
     fn flags_reject_malformed() {
         assert!(Flags::parse(&s(&["positional"])).is_err());
-        assert!(Flags::parse(&s(&["--dangling"])).is_err());
+        assert!(Flags::parse(&s(&["--dangling"])).is_err(), "value required");
+        assert!(Flags::parse(&s(&["--out"])).is_err(), "value required");
         assert!(Flags::parse(&s(&["--set", "noequals"])).is_err());
+        assert!(Flags::parse(&s(&["--set"])).is_err(), "--set needs k=v");
         let f = Flags::parse(&s(&["--n", "banana"])).unwrap();
         assert!(f.get_parse("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn bare_flags_parse_as_boolean_switches() {
+        // Trailing switch.
+        let f = Flags::parse(&s(&["--blobs", "100", "--explain-plan"])).unwrap();
+        assert_eq!(f.get("blobs"), Some("100"));
+        assert!(f.get_bool("explain-plan"));
+        assert!(!f.get_bool("absent"));
+        // Switch followed by another flag.
+        let f = Flags::parse(&s(&["--explain-plan", "--blobs", "50"])).unwrap();
+        assert!(f.get_bool("explain-plan"));
+        assert_eq!(f.get_parse("blobs", 0usize).unwrap(), 50);
+        // Explicit value still works.
+        let f = Flags::parse(&s(&["--explain-plan", "yes"])).unwrap();
+        assert!(f.get_bool("explain-plan"));
     }
 
     #[test]

@@ -2,7 +2,6 @@
 
 use std::sync::Arc;
 
-use crate::cluster::Cluster;
 use crate::config::Config;
 use crate::data::Topology;
 use crate::error::Result;
@@ -69,21 +68,113 @@ impl Driver {
     }
 
     /// Stand up fresh services (cluster, DFS, tables) for one run, wiring
-    /// the configured rack topology and JobTracker knobs into the cluster.
+    /// the configured rack topology and JobTracker knobs into the cluster
+    /// (delegates to the shared [`Services::from_config`] constructor).
     pub fn services(&self) -> Services {
-        let c = &self.config.cluster;
-        let mut cluster =
-            Cluster::with_model(c.slaves, c.slots_per_slave, c.network.clone());
-        cluster.set_topology(crate::scheduler::RackTopology::uniform(
-            c.slaves, c.racks,
+        Services::from_config(&self.config, self.runtime.clone())
+    }
+
+    /// Render the planned dataflow DAG of every phase — stages, fusion
+    /// decisions, estimated shuffle bytes — **without running any job**
+    /// (the `psch run --explain-plan` output).
+    ///
+    /// Phase 1's plan is exact for the given input. Phases 2 and 3 depend
+    /// on phase 1's output, so their plans are built against surrogate
+    /// operands of the right shape (empty S/L tables, unit degrees, zero
+    /// embedding): the stage structure, fusion and split counts are what
+    /// the real run launches, repeated once per Lanczos step / k-means
+    /// iteration.
+    pub fn explain_plan(&self, input: &PipelineInput) -> Result<String> {
+        let a = &self.config.algo;
+        let mut out = String::new();
+
+        // ---- Phase 1: exact plan ----
+        out.push_str("== phase 1: similarity ==\n");
+        let svc1 = self.services();
+        let n = match input {
+            PipelineInput::Points { points } => {
+                if points.is_empty() {
+                    return Err(crate::error::Error::Cli(
+                        "explain-plan: empty point set — nothing to plan".into(),
+                    ));
+                }
+                let n = points.len();
+                let d = points[0].len();
+                let flat: Vec<f32> =
+                    points.iter().flatten().map(|&x| x as f32).collect();
+                let (pipeline, _degrees) = similarity_job::points_pipeline(
+                    &svc1,
+                    Arc::new(flat),
+                    n,
+                    d,
+                    a.sigma,
+                    a.epsilon,
+                    "S",
+                )?;
+                out.push_str(&pipeline.plan()?.explain());
+                n
+            }
+            PipelineInput::Graph { topology } => {
+                let (pipeline, _degrees) =
+                    similarity_job::graph_pipeline(&svc1, topology, "S")?;
+                out.push_str(&pipeline.plan()?.explain());
+                topology.num_vertices()
+            }
+        };
+
+        // ---- Phase 2: representative plans ----
+        out.push_str("== phase 2: eigenvectors ==\n");
+        let svc2 = self.services();
+        let m = svc2.cluster.num_slaves();
+        let s_table = svc2.tables.create("S", m)?;
+        let l_table = svc2.tables.create("L", m)?;
+        let dinv: Arc<Vec<f64>> = Arc::new(vec![1.0; n]);
+        let pipeline = lanczos_job::laplacian_pipeline(&s_table, &l_table, &dinv, n);
+        out.push_str(&pipeline.plan()?.explain());
+        // Surrogate L: identity structure (12 bytes/entry + 16 per row).
+        let l = Arc::new(crate::linalg::CsrMatrix::from_rows(
+            n,
+            (0..n).map(|i| vec![(i as u32, 1.0f64)]).collect(),
         ));
-        cluster.set_tracker_config(crate::scheduler::TrackerConfig {
-            heartbeat_s: c.heartbeat_s,
-            policy: c.scheduler,
-            speculation: c.speculation,
-        });
-        cluster.set_shuffle_config(self.config.shuffle);
-        Services::new(cluster, self.runtime.clone())
+        let row_bytes: Vec<u64> = vec![28; n];
+        let v: Arc<Vec<f64>> = Arc::new(vec![0.0; n]);
+        let (pipeline, _y) =
+            lanczos_job::matvec_pipeline(&l, &l_table, &v, &row_bytes, n);
+        out.push_str(&pipeline.plan()?.explain());
+        out.push_str(&format!(
+            "  (matvec launched once per Lanczos step, ≤{} times)\n",
+            a.lanczos_steps.min(n)
+        ));
+
+        // ---- Phase 3: representative plans ----
+        out.push_str("== phase 3: kmeans ==\n");
+        let svc3 = self.services();
+        let emb: Arc<Vec<f32>> = Arc::new(vec![0.0; n * a.k]);
+        let ranges = kmeans_job::stage_embedding(&svc3, &emb, n, a.k)?;
+        let (pipeline, _centers) = kmeans_job::update_pipeline(
+            &svc3,
+            &emb,
+            n,
+            a.k,
+            a.k,
+            "/kmeans/centers",
+            &ranges,
+        );
+        out.push_str(&pipeline.plan()?.explain());
+        out.push_str(&format!(
+            "  (update launched once per k-means iteration, ≤{} times)\n",
+            a.kmeans_iters
+        ));
+        let (pipeline, _labels) = kmeans_job::assign_pipeline(
+            &svc3,
+            &emb,
+            n,
+            a.k,
+            "/kmeans/centers",
+            &ranges,
+        );
+        out.push_str(&pipeline.plan()?.explain());
+        Ok(out)
     }
 
     /// Run the full three-phase pipeline.
@@ -226,6 +317,23 @@ mod tests {
         // Same partition up to label names.
         let agreement = nmi(&baseline.labels, &parallel.labels);
         assert!(agreement > 0.95, "parallel vs baseline nmi={agreement}");
+    }
+
+    #[test]
+    fn explain_plan_renders_every_phase_without_running() {
+        let ps = gaussian_blobs(200, 3, 4, 0.3, 10.0, 3);
+        let mut d = driver(2);
+        d.config.algo.k = 3;
+        let text = d
+            .explain_plan(&PipelineInput::Points { points: ps.points.clone() })
+            .unwrap();
+        assert!(text.contains("phase 1: similarity"), "{text}");
+        assert!(text.contains("plan similarity: 1 job"), "{text}");
+        assert!(text.contains("plan laplacian"), "{text}");
+        assert!(text.contains("2 ops fused"), "laplacian fusion: {text}");
+        assert!(text.contains("lanczos-matvec"), "{text}");
+        assert!(text.contains("kmeans-update"), "{text}");
+        assert!(text.contains("kmeans-assign"), "{text}");
     }
 
     #[test]

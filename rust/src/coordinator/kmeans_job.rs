@@ -12,20 +12,24 @@
 //! 4. The driver rewrites the center file; stop when centers move less than
 //!    `tol` or after `max_iters` (paper step 4).
 //!
-//! A final map-only job emits the assignment of every point.
+//! Each iteration is one `read_dfs(embedding) → map_kv(kmeans-update) →
+//! group_reduce(center-avg) → collect` pipeline; the final assignment pass
+//! is a map-only `read_dfs → map_kv(kmeans-assign) → collect` pipeline.
+//! Split locality (the embedding rows' DFS byte ranges) rides the source.
 
 use std::sync::Arc;
 
+use crate::dataflow::{Collected, Group, Pipeline};
 use crate::error::{Error, Result};
-use crate::mapreduce::{self, FnMapper, FnReducer, JobBuilder, TaskContext, Values};
-use crate::util::bytes::{
-    decode_f64_vec, decode_u64, encode_f64_vec, encode_u32, encode_u64,
-};
+use crate::util::bytes::{decode_f64_vec, encode_f64_vec, encode_u32};
 
 use super::{PhaseStats, Services};
 
 /// Points per map split.
 pub const POINTS_PER_TASK: usize = 256;
+
+/// DFS path of the staged embedding (paper §4.3.3: samples live on HDFS).
+pub(crate) const EMB_PATH: &str = "/kmeans/embedding";
 
 /// Output of phase 3.
 pub struct KmeansOutput {
@@ -65,17 +69,176 @@ pub fn read_center_file(services: &Services, path: &str) -> Result<Vec<Vec<f64>>
     Ok(centers)
 }
 
-/// Split the n points into contiguous map splits.
-fn point_splits(n: usize) -> Vec<Vec<(Vec<u8>, Vec<u8>)>> {
+/// Split the n points into contiguous typed map splits `(lo, hi)`.
+fn point_splits(n: usize) -> Vec<Vec<(u64, u64)>> {
     let mut splits = Vec::new();
     for lo in (0..n).step_by(POINTS_PER_TASK) {
         let hi = (lo + POINTS_PER_TASK).min(n);
-        splits.push(vec![(
-            encode_u64(lo as u64).to_vec(),
-            encode_u64(hi as u64).to_vec(),
-        )]);
+        splits.push(vec![(lo as u64, hi as u64)]);
     }
     splits
+}
+
+/// Stage the embedding in the DFS; returns the per-split byte ranges that
+/// give every point split its preferred hosts.
+pub(crate) fn stage_embedding(
+    services: &Services,
+    embedding: &Arc<Vec<f32>>,
+    n: usize,
+    d: usize,
+) -> Result<Vec<Vec<(usize, usize)>>> {
+    let mut raw = Vec::with_capacity(embedding.len() * 4);
+    for &x in embedding.iter() {
+        raw.extend_from_slice(&x.to_le_bytes());
+    }
+    services.dfs.write_file(EMB_PATH, &raw)?;
+    let row_bytes = d * 4;
+    Ok((0..n)
+        .step_by(POINTS_PER_TASK)
+        .map(|lo| {
+            let hi = (lo + POINTS_PER_TASK).min(n);
+            vec![(lo * row_bytes, hi * row_bytes)]
+        })
+        .collect())
+}
+
+/// Decode the center file payload into a flat f32 center matrix.
+fn centers_from_bytes(bytes: &[u8], d: usize) -> (usize, Vec<f32>) {
+    let kk = crate::util::bytes::decode_u32(bytes) as usize;
+    let mut off = 4;
+    let mut centers_flat = Vec::with_capacity(kk * d);
+    for _ in 0..kk {
+        let (c, used) = decode_f64_vec(&bytes[off..]);
+        off += used;
+        centers_flat.extend(c.into_iter().map(|x| x as f32));
+    }
+    (kk, centers_flat)
+}
+
+/// Build one assign+update iteration pipeline.
+pub(crate) fn update_pipeline(
+    services: &Services,
+    embedding: &Arc<Vec<f32>>,
+    n: usize,
+    d: usize,
+    k: usize,
+    center_path: &str,
+    ranges: &[Vec<(usize, usize)>],
+) -> (Pipeline, Collected<u32, Vec<f64>>) {
+    let emb = embedding.clone();
+    let dfs = services.dfs.clone();
+    let rt = services.runtime.clone();
+    let center_path = center_path.to_string();
+    let pipeline = Pipeline::new("kmeans");
+    let centers = pipeline
+        .read_dfs(EMB_PATH, point_splits(n), ranges.to_vec())
+        .map_kv(
+            "kmeans-update",
+            move |lo: u64, hi: u64, out| -> Result<()> {
+                let (lo, hi) = (lo as usize, hi as usize);
+                // Paper: "read the center file" at task start.
+                let bytes = dfs.read_file(&center_path)?;
+                // Embedding rows + center file read from the DFS; the
+                // scheduler charges the split read at the attempt's
+                // locality tier.
+                out.incr(
+                    crate::mapreduce::names::EXTRA_INPUT_BYTES,
+                    ((hi - lo) * d * 4 + bytes.len()) as u64,
+                );
+                let (kk, centers_flat) = centers_from_bytes(&bytes, d);
+                let (_assign, sums, counts) = rt.kmeans_step(
+                    &emb[lo * d..hi * d],
+                    &centers_flat,
+                    hi - lo,
+                    kk,
+                    d,
+                )?;
+                out.incr(
+                    crate::mapreduce::names::COMPUTE_US,
+                    super::costmodel::units_to_us(
+                        ((hi - lo) * kk * d) as u64,
+                        super::costmodel::KM_POINTDIM_PER_S,
+                    ),
+                );
+                // Combiner output: one record per center.
+                for c in 0..kk {
+                    let mut payload: Vec<f64> =
+                        (0..d).map(|t| sums[c * d + t] as f64).collect();
+                    payload.push(counts[c] as f64);
+                    out.emit(c as u32, payload);
+                }
+                out.incr("KMEANS_POINTS", (hi - lo) as u64);
+                Ok(())
+            },
+        )
+        .group_reduce("center-avg")
+        .reducers(services.cluster.num_slaves().min(k))
+        .reduce(
+            move |key: u32, values: &mut Group<'_, Vec<f64>>, out| -> Result<()> {
+                let mut sums = vec![0.0f64; d];
+                let mut count = 0.0f64;
+                while let Some(payload) = values.next_value() {
+                    for t in 0..d {
+                        sums[t] += payload[t];
+                    }
+                    count += payload[d];
+                }
+                if count > 0.0 {
+                    let center: Vec<f64> = sums.iter().map(|s| s / count).collect();
+                    out.emit(key, center);
+                }
+                // Empty cluster: emit nothing; the driver keeps the old
+                // center (the paper's implicit behaviour).
+                Ok(())
+            },
+        )
+        .collect();
+    (pipeline, centers)
+}
+
+/// Build the final assignment pipeline (map-only).
+pub(crate) fn assign_pipeline(
+    services: &Services,
+    embedding: &Arc<Vec<f32>>,
+    n: usize,
+    d: usize,
+    center_path: &str,
+    ranges: &[Vec<(usize, usize)>],
+) -> (Pipeline, Collected<u64, u32>) {
+    let emb = embedding.clone();
+    let dfs = services.dfs.clone();
+    let rt = services.runtime.clone();
+    let center_path = center_path.to_string();
+    let pipeline = Pipeline::new("kmeans-assign");
+    let labels = pipeline
+        .read_dfs(EMB_PATH, point_splits(n), ranges.to_vec())
+        .map_kv(
+            "kmeans-assign",
+            move |lo: u64, hi: u64, out| -> Result<()> {
+                let (lo, hi) = (lo as usize, hi as usize);
+                let bytes = dfs.read_file(&center_path)?;
+                out.incr(
+                    crate::mapreduce::names::EXTRA_INPUT_BYTES,
+                    ((hi - lo) * d * 4 + bytes.len()) as u64,
+                );
+                let (kk, centers_flat) = centers_from_bytes(&bytes, d);
+                out.incr(
+                    crate::mapreduce::names::COMPUTE_US,
+                    super::costmodel::units_to_us(
+                        ((hi - lo) * kk * d) as u64,
+                        super::costmodel::KM_POINTDIM_PER_S,
+                    ),
+                );
+                let (assign, _, _) =
+                    rt.kmeans_step(&emb[lo * d..hi * d], &centers_flat, hi - lo, kk, d)?;
+                for (off_i, a) in assign.into_iter().enumerate() {
+                    out.emit((lo + off_i) as u64, a as u32);
+                }
+                Ok(())
+            },
+        )
+        .collect();
+    (pipeline, labels)
 }
 
 /// Run phase 3 on the embedding (n × d row-major f32).
@@ -96,24 +259,8 @@ pub fn run_kmeans_phase(
     let mut stats = PhaseStats { name: "kmeans".into(), ..Default::default() };
     let center_path = "/kmeans/centers";
 
-    // Stage the embedding in the DFS so every point split can declare the
-    // nodes holding its rows (paper §4.3.3: the samples live on HDFS).
-    let emb_path = "/kmeans/embedding";
-    let mut raw = Vec::with_capacity(embedding.len() * 4);
-    for &x in embedding.iter() {
-        raw.extend_from_slice(&x.to_le_bytes());
-    }
-    services.dfs.write_file(emb_path, &raw)?;
-    let row_bytes = d * 4;
-    let mut split_hosts: Vec<Vec<usize>> = Vec::new();
-    for lo in (0..n).step_by(POINTS_PER_TASK) {
-        let hi = (lo + POINTS_PER_TASK).min(n);
-        split_hosts.push(services.dfs.range_hosts(
-            emb_path,
-            lo * row_bytes,
-            hi * row_bytes,
-        )?);
-    }
+    // Stage the embedding so every point split can declare its hosts.
+    let ranges = stage_embedding(services, &embedding, n, d)?;
 
     // Init: k-means++ over the embedding rows (driver side).
     let rows: Vec<Vec<f64>> = (0..n)
@@ -132,16 +279,15 @@ pub fn run_kmeans_phase(
     let mut converged = false;
     while iterations < max_iters {
         iterations += 1;
-        let mut result =
-            run_update_job(services, &embedding, n, d, k, center_path, &split_hosts)?;
-        stats.absorb_job(&result);
+        let (pipeline, centers_handle) =
+            update_pipeline(services, &embedding, n, d, k, center_path, &ranges);
+        let mut run = pipeline.run(services)?;
+        stats.absorb_run(&run.stats);
 
-        // New centers from reducer output (key = center index).
+        // New centers from the collected reducer output (key = center idx).
         let mut new_centers = centers.clone();
-        for (key, value) in result.sorted_records() {
-            let c = crate::util::bytes::decode_u32(&key) as usize;
-            let (vals, _) = decode_f64_vec(&value);
-            new_centers[c] = vals;
+        for (c, vals) in centers_handle.take(&mut run) {
+            new_centers[c as usize] = vals;
         }
         let movement = centers
             .iter()
@@ -157,171 +303,15 @@ pub fn run_kmeans_phase(
     }
 
     // Final assignment pass (map-only).
-    let labels = run_assign_job(
-        services,
-        &embedding,
-        n,
-        d,
-        k,
-        center_path,
-        &split_hosts,
-        &mut stats,
-    )?;
-    Ok(KmeansOutput { labels, centers, iterations, converged, stats })
-}
-
-/// One assign+update iteration as an MR job.
-#[allow(clippy::too_many_arguments)]
-fn run_update_job(
-    services: &Services,
-    embedding: &Arc<Vec<f32>>,
-    n: usize,
-    d: usize,
-    k: usize,
-    center_path: &str,
-    split_hosts: &[Vec<usize>],
-) -> Result<mapreduce::JobResult> {
-    let emb = embedding.clone();
-    let dfs = services.dfs.clone();
-    let rt = services.runtime.clone();
-    let center_path = center_path.to_string();
-    let mapper = Arc::new(FnMapper(
-        move |key: &[u8], value: &[u8], ctx: &mut TaskContext| -> Result<()> {
-            let lo = decode_u64(key) as usize;
-            let hi = decode_u64(value) as usize;
-            // Paper: "read the center file" at task start.
-            let bytes = dfs.read_file(&center_path)?;
-            // Embedding rows + center file read from the DFS; the scheduler
-            // charges the split read at the attempt's locality tier.
-            ctx.incr(
-                crate::mapreduce::names::EXTRA_INPUT_BYTES,
-                ((hi - lo) * d * 4 + bytes.len()) as u64,
-            );
-            let kk = crate::util::bytes::decode_u32(&bytes) as usize;
-            let mut off = 4;
-            let mut centers_flat = Vec::with_capacity(kk * d);
-            for _ in 0..kk {
-                let (c, used) = decode_f64_vec(&bytes[off..]);
-                off += used;
-                centers_flat.extend(c.into_iter().map(|x| x as f32));
-            }
-            let (_assign, sums, counts) = rt.kmeans_step(
-                &emb[lo * d..hi * d],
-                &centers_flat,
-                hi - lo,
-                kk,
-                d,
-            )?;
-            ctx.incr(
-                crate::mapreduce::names::COMPUTE_US,
-                super::costmodel::units_to_us(
-                    ((hi - lo) * kk * d) as u64,
-                    super::costmodel::KM_POINTDIM_PER_S,
-                ),
-            );
-            // Combiner output: one record per center.
-            for c in 0..kk {
-                let mut payload: Vec<f64> =
-                    (0..d).map(|t| sums[c * d + t] as f64).collect();
-                payload.push(counts[c] as f64);
-                ctx.emit(encode_u32(c as u32).to_vec(), encode_f64_vec(&payload));
-            }
-            ctx.incr("KMEANS_POINTS", (hi - lo) as u64);
-            Ok(())
-        },
-    ));
-    let reducer = Arc::new(FnReducer(
-        move |key: &[u8], values: &mut dyn Values, ctx: &mut TaskContext| -> Result<()> {
-            let mut sums = vec![0.0f64; d];
-            let mut count = 0.0f64;
-            while let Some(v) = values.next_value() {
-                let (payload, _) = decode_f64_vec(v);
-                for t in 0..d {
-                    sums[t] += payload[t];
-                }
-                count += payload[d];
-            }
-            if count > 0.0 {
-                let center: Vec<f64> = sums.iter().map(|s| s / count).collect();
-                ctx.emit(key.to_vec(), encode_f64_vec(&center));
-            }
-            // Empty cluster: emit nothing; the driver keeps the old center
-            // (the paper's implicit behaviour).
-            Ok(())
-        },
-    ));
-    let job = JobBuilder::new("kmeans-update", point_splits(n), mapper)
-        .split_hosts(split_hosts.to_vec())
-        .reducer(reducer, services.cluster.num_slaves().min(k))
-        .build();
-    mapreduce::run(&services.cluster, &job)
-}
-
-/// Final assignment pass.
-#[allow(clippy::too_many_arguments)]
-fn run_assign_job(
-    services: &Services,
-    embedding: &Arc<Vec<f32>>,
-    n: usize,
-    d: usize,
-    k: usize,
-    center_path: &str,
-    split_hosts: &[Vec<usize>],
-    stats: &mut PhaseStats,
-) -> Result<Vec<usize>> {
-    let emb = embedding.clone();
-    let dfs = services.dfs.clone();
-    let rt = services.runtime.clone();
-    let center_path = center_path.to_string();
-    let mapper = Arc::new(FnMapper(
-        move |key: &[u8], value: &[u8], ctx: &mut TaskContext| -> Result<()> {
-            let lo = decode_u64(key) as usize;
-            let hi = decode_u64(value) as usize;
-            let bytes = dfs.read_file(&center_path)?;
-            ctx.incr(
-                crate::mapreduce::names::EXTRA_INPUT_BYTES,
-                ((hi - lo) * d * 4 + bytes.len()) as u64,
-            );
-            let kk = crate::util::bytes::decode_u32(&bytes) as usize;
-            let mut off = 4;
-            let mut centers_flat = Vec::with_capacity(kk * d);
-            for _ in 0..kk {
-                let (c, used) = decode_f64_vec(&bytes[off..]);
-                off += used;
-                centers_flat.extend(c.into_iter().map(|x| x as f32));
-            }
-            ctx.incr(
-                crate::mapreduce::names::COMPUTE_US,
-                super::costmodel::units_to_us(
-                    ((hi - lo) * kk * d) as u64,
-                    super::costmodel::KM_POINTDIM_PER_S,
-                ),
-            );
-            let (assign, _, _) =
-                rt.kmeans_step(&emb[lo * d..hi * d], &centers_flat, hi - lo, kk, d)?;
-            for (off_i, a) in assign.into_iter().enumerate() {
-                ctx.emit(
-                    encode_u64((lo + off_i) as u64).to_vec(),
-                    encode_u32(a as u32).to_vec(),
-                );
-            }
-            Ok(())
-        },
-    ));
-    let _ = k;
-    let job = JobBuilder::new("kmeans-assign", point_splits(n), mapper)
-        .split_hosts(split_hosts.to_vec())
-        .build();
-    let result = mapreduce::run(&services.cluster, &job)?;
-    stats.absorb_job(&result);
+    let (pipeline, labels_handle) =
+        assign_pipeline(services, &embedding, n, d, center_path, &ranges);
+    let mut run = pipeline.run(services)?;
+    stats.absorb_run(&run.stats);
     let mut labels = vec![0usize; n];
-    for part in &result.output {
-        for (key, value) in part {
-            labels[decode_u64(key) as usize] =
-                crate::util::bytes::decode_u32(value) as usize;
-        }
+    for (point, label) in labels_handle.take(&mut run) {
+        labels[point as usize] = label as usize;
     }
-    Ok(labels)
+    Ok(KmeansOutput { labels, centers, iterations, converged, stats })
 }
 
 #[cfg(test)]
@@ -402,6 +392,20 @@ mod tests {
         .unwrap();
         assert!(out.iterations <= 2);
         assert_eq!(out.stats.jobs, out.iterations + 1); // + assignment pass
+    }
+
+    #[test]
+    fn update_pipeline_is_one_fused_job() {
+        let svc = services(2);
+        let emb = Arc::new(vec![0.5f32; 300 * 2]);
+        let ranges = stage_embedding(&svc, &emb, 300, 2).unwrap();
+        write_center_file(&svc, "/kmeans/centers", &[vec![0.0, 0.0], vec![1.0, 1.0]])
+            .unwrap();
+        let (pipeline, _centers) =
+            update_pipeline(&svc, &emb, 300, 2, 2, "/kmeans/centers", &ranges);
+        let plan = pipeline.plan().unwrap();
+        assert_eq!(plan.job_count(), 1);
+        assert!(plan.stage_summaries()[0].has_reduce);
     }
 
     #[test]

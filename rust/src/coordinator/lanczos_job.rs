@@ -1,18 +1,21 @@
 //! Phase 2 (paper Alg. 4.3 / §4.3.2): parallel k smallest eigenvectors.
 //!
-//! Two stages:
+//! Two stages, both expressed as [`crate::dataflow::Pipeline`]s:
 //!
-//! 1. **Laplacian build** — a map-only job over row ranges: each task reads
-//!    its rows of S from the table plus the broadcast degree vector, forms
-//!    the L_sym entries `δ_ij − d_i^{-1/2} S_ij d_j^{-1/2}`, and writes them
-//!    back to the `L` table (row-partitioned, the paper's "matrix L cut into
-//!    lines stored in the HBase").
-//! 2. **Lanczos iteration** — the master runs the three-term recurrence; the
-//!    `L·v` hot spot is one MR map-only job per iteration: the vector v is
-//!    *moved to the data* (captured by the map closure), each task computes
-//!    its row range's partial products, and the master reassembles y. The
-//!    tridiagonal T is solved on the master (tql2) and Ritz vectors are
-//!    recovered against the stored basis.
+//! 1. **Laplacian build** — `read_table(S) → map_kv(normalize) →
+//!    write_table(L)`: each task reads its rows of S from the table plus
+//!    the broadcast degree vector, forms the L_sym entries
+//!    `δ_ij − d_i^{-1/2} S_ij d_j^{-1/2}`, and the fused table-put stage
+//!    writes them back to the `L` table (row-partitioned, the paper's
+//!    "matrix L cut into lines stored in the HBase"). The two logical map
+//!    ops fuse into ONE map-only job — the planner's map fusion at work.
+//! 2. **Lanczos iteration** — the master runs the three-term recurrence;
+//!    the `L·v` hot spot is one `read_table(L) → map_kv(spmv) → collect`
+//!    pipeline per iteration: the vector v is *moved to the data*
+//!    (captured by the map closure), each task computes its row range's
+//!    partial products, and the master reassembles y. The tridiagonal T is
+//!    solved on the master (tql2) and Ritz vectors are recovered against
+//!    the stored basis.
 //!
 //! Like Hadoop's region cache, tasks read L through a shared in-memory CSR
 //! snapshot built by stage 1 (the virtual-time model still charges each
@@ -20,11 +23,10 @@
 
 use std::sync::Arc;
 
+use crate::dataflow::{Collected, Pipeline};
 use crate::error::{Error, Result};
 use crate::linalg::{lanczos_smallest, CsrMatrix, LanczosOptions};
-use crate::mapreduce::{self, FnMapper, JobBuilder, TaskContext};
 use crate::table::Table;
-use crate::util::bytes::{decode_f64, decode_u64, encode_f64, encode_u64};
 
 use super::similarity_job::{chunk_key, parse_chunk_key};
 use super::{PhaseStats, Services};
@@ -44,14 +46,79 @@ pub struct EigenOutput {
     pub stats: PhaseStats,
 }
 
-/// Preferred host of a row-range split: the slave serving the table region
-/// that owns the range's first row (how Hadoop co-locates maps with HBase
-/// regions). Falls back to no preference if the key resolves nowhere.
-fn row_range_hosts(table: &Table, lo: usize) -> Vec<usize> {
-    match table.key_slave(&chunk_key(lo as u64, 0)) {
-        Ok(slave) => vec![slave],
-        Err(_) => Vec::new(),
+/// Row-range splits `[(lo, hi))` with their table anchor keys — the
+/// `read_table` source input shared by both pipelines (anchors resolve to
+/// the slave serving the region that owns the range's first row, how
+/// Hadoop co-locates maps with HBase regions).
+fn row_range_splits(n: usize) -> (Vec<Vec<(u64, u64)>>, Vec<Vec<u8>>) {
+    let mut splits = Vec::new();
+    let mut anchors = Vec::new();
+    for lo in (0..n).step_by(ROWS_PER_TASK) {
+        let hi = (lo + ROWS_PER_TASK).min(n);
+        splits.push(vec![(lo as u64, hi as u64)]);
+        anchors.push(chunk_key(lo as u64, 0));
     }
+    (splits, anchors)
+}
+
+/// Build the Laplacian pipeline: `read_table(S) → map_kv(laplacian-build)
+/// → write_table(L)` — two fusable map ops, one planned job.
+pub(crate) fn laplacian_pipeline(
+    s_table: &Arc<Table>,
+    l_table: &Arc<Table>,
+    dinv: &Arc<Vec<f64>>,
+    n: usize,
+) -> Pipeline {
+    let (splits, anchors) = row_range_splits(n);
+    let s_table_c = s_table.clone();
+    let dinv_c = dinv.clone();
+    let pipeline = Pipeline::new("laplacian");
+    pipeline
+        .read_table(s_table, splits, anchors)
+        .map_kv(
+            "laplacian-build",
+            move |lo: u64, hi: u64, out| -> Result<()> {
+                // Scan this row range of S: keys [lo||0, hi||0).
+                let scan = s_table_c.scan(&chunk_key(lo, 0), &chunk_key(hi, 0));
+                let mut bytes_read = 0u64;
+                for (k, v) in scan {
+                    let (row, cb) = parse_chunk_key(&k);
+                    bytes_read += (k.len() + v.len()) as u64;
+                    let entries = crate::util::bytes::decode_sparse_row(&v);
+                    let i = row as usize;
+                    let l_entries: Vec<(u32, f64)> = entries
+                        .iter()
+                        .map(|&(j, s)| {
+                            let ju = j as usize;
+                            let mut val = -dinv_c[i] * s * dinv_c[ju];
+                            if ju == i {
+                                val += 1.0;
+                            }
+                            (j, val)
+                        })
+                        .collect();
+                    // The fused write_table stage puts this chunk and
+                    // charges the write (EXTRA_OUTPUT_BYTES).
+                    out.emit(
+                        (row, cb),
+                        crate::util::bytes::encode_sparse_row(&l_entries),
+                    );
+                }
+                out.incr(crate::mapreduce::names::EXTRA_INPUT_BYTES, bytes_read);
+                // ~12 bytes per stored entry: transform work at the
+                // HBase-bound reference rate.
+                out.incr(
+                    crate::mapreduce::names::COMPUTE_US,
+                    super::costmodel::units_to_us(
+                        bytes_read / 12,
+                        super::costmodel::LBUILD_NNZ_PER_S,
+                    ),
+                );
+                Ok(())
+            },
+        )
+        .write_table(l_table);
+    pipeline
 }
 
 /// Stage 1: build the L table from the S table + degrees; returns the shared
@@ -68,7 +135,6 @@ fn build_laplacian(
     let l_table = services
         .tables
         .create(l_table_name, services.cluster.num_slaves())?;
-    let _nb = n.div_ceil(super::similarity_job::BLOCK);
 
     // d^{-1/2}, broadcast to every task.
     let dinv: Arc<Vec<f64>> = Arc::new(
@@ -78,69 +144,9 @@ fn build_laplacian(
             .collect(),
     );
 
-    // Map-only job: one split per row range, co-located with the S-table
-    // region serving the range.
-    let mut splits = Vec::new();
-    let mut hosts = Vec::new();
-    for lo in (0..n).step_by(ROWS_PER_TASK) {
-        let hi = (lo + ROWS_PER_TASK).min(n);
-        splits.push(vec![(
-            encode_u64(lo as u64).to_vec(),
-            encode_u64(hi as u64).to_vec(),
-        )]);
-        hosts.push(row_range_hosts(s_table, lo));
-    }
-    let s_table_c = s_table.clone();
-    let l_table_c = l_table.clone();
-    let dinv_c = dinv.clone();
-    let mapper = Arc::new(FnMapper(
-        move |key: &[u8], value: &[u8], ctx: &mut TaskContext| -> Result<()> {
-            let lo = decode_u64(key) as usize;
-            let hi = decode_u64(value) as usize;
-            // Scan this row range of S: keys [lo||0, hi||0).
-            let scan = s_table_c.scan(&chunk_key(lo as u64, 0), &chunk_key(hi as u64, 0));
-            let mut bytes_read = 0u64;
-            for (k, v) in scan {
-                let (row, cb) = parse_chunk_key(&k);
-                bytes_read += (k.len() + v.len()) as u64;
-                let entries = crate::util::bytes::decode_sparse_row(&v);
-                let i = row as usize;
-                let l_entries: Vec<(u32, f64)> = entries
-                    .iter()
-                    .map(|&(j, s)| {
-                        let ju = j as usize;
-                        let mut val = -dinv_c[i] * s * dinv_c[ju];
-                        if ju == i {
-                            val += 1.0;
-                        }
-                        (j, val)
-                    })
-                    .collect();
-                let payload = crate::util::bytes::encode_sparse_row(&l_entries);
-                ctx.incr(
-                    crate::mapreduce::names::EXTRA_OUTPUT_BYTES,
-                    payload.len() as u64,
-                );
-                l_table_c.put(chunk_key(row, cb), payload)?;
-            }
-            ctx.incr(crate::mapreduce::names::EXTRA_INPUT_BYTES, bytes_read);
-            // ~12 bytes per stored entry: transform work at the HBase-bound
-            // reference rate.
-            ctx.incr(
-                crate::mapreduce::names::COMPUTE_US,
-                super::costmodel::units_to_us(
-                    bytes_read / 12,
-                    super::costmodel::LBUILD_NNZ_PER_S,
-                ),
-            );
-            Ok(())
-        },
-    ));
-    let job = JobBuilder::new("laplacian-build", splits, mapper)
-        .split_hosts(hosts)
-        .build();
-    let result = mapreduce::run(&services.cluster, &job)?;
-    stats.absorb_job(&result);
+    let run = laplacian_pipeline(s_table, &l_table, &dinv, n)
+        .run(services)?;
+    stats.absorb_run(&run.stats);
 
     // Snapshot L into a CSR for the iteration jobs (HBase block cache role).
     let mut rows: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n];
@@ -149,6 +155,60 @@ fn build_laplacian(
         rows[row as usize].extend(crate::util::bytes::decode_sparse_row(&v));
     }
     Ok((Arc::new(CsrMatrix::from_rows(n, rows)), l_table))
+}
+
+/// Build one mat-vec pipeline: `read_table(L) → map_kv(spmv) → collect`.
+/// The split value carries the modelled L-row-range bytes the task will
+/// "read" (EXTRA_INPUT_BYTES), exactly as the hand-wired job did.
+pub(crate) fn matvec_pipeline(
+    l: &Arc<CsrMatrix>,
+    l_table: &Arc<Table>,
+    v: &Arc<Vec<f64>>,
+    row_bytes: &[u64],
+    n: usize,
+) -> (Pipeline, Collected<u64, f64>) {
+    let mut splits: Vec<Vec<(u64, u64)>> = Vec::new();
+    let mut anchors: Vec<Vec<u8>> = Vec::new();
+    for lo in (0..n).step_by(ROWS_PER_TASK) {
+        let hi = (lo + ROWS_PER_TASK).min(n);
+        // The row-range bytes this task will scan from the L table.
+        let modelled: u64 = row_bytes[lo..hi].iter().sum::<u64>().max(1);
+        splits.push(vec![(lo as u64, modelled)]);
+        anchors.push(chunk_key(lo as u64, 0));
+    }
+    let l_cc = l.clone();
+    let v_cc = v.clone();
+    let pipeline = Pipeline::new("lanczos");
+    let y = pipeline
+        .read_table(l_table, splits, anchors)
+        .map_kv(
+            "lanczos-matvec",
+            move |lo: u64, modelled: u64, out| -> Result<()> {
+                let lo = lo as usize;
+                let hi = (lo + ROWS_PER_TASK).min(v_cc.len());
+                // Charge the modelled L-row scan (HBase read) plus the
+                // broadcast vector ("moving the vector to the data").
+                out.incr(
+                    crate::mapreduce::names::EXTRA_INPUT_BYTES,
+                    modelled + 8 * v_cc.len() as u64,
+                );
+                let nnz: usize = (lo..hi).map(|i| l_cc.row_nnz(i)).sum();
+                out.incr(
+                    crate::mapreduce::names::COMPUTE_US,
+                    super::costmodel::units_to_us(
+                        nnz as u64,
+                        super::costmodel::MATVEC_NNZ_PER_S,
+                    ),
+                );
+                let y = l_cc.spmv_rows(&v_cc, lo, hi);
+                for (off, yi) in y.into_iter().enumerate() {
+                    out.emit((lo + off) as u64, yi);
+                }
+                Ok(())
+            },
+        )
+        .collect();
+    (pipeline, y)
 }
 
 /// Run phase 2 over the S table built by phase 1.
@@ -170,71 +230,23 @@ pub fn run_eigen_phase(
         .map(|i| 12 * l.row(i).count() as u64 + 16)
         .collect();
 
-    // Lanczos driver: each matvec is one MR job.
-    let mut matvec_stats: Vec<crate::mapreduce::JobStats> = Vec::new();
-    let mut matvec_counters = crate::mapreduce::Counters::default();
+    // Lanczos driver: each matvec is one MR job (one pipeline run).
+    let mut matvec_runs: Vec<crate::dataflow::PlanStats> = Vec::new();
     {
-        let cluster = services.cluster.clone();
+        let services_c = services.clone();
         let l_c = l.clone();
         let l_table_c = l_table.clone();
         let row_bytes_c = row_bytes.clone();
         let mut matvec = |v: &[f64]| -> Vec<f64> {
             let v_arc: Arc<Vec<f64>> = Arc::new(v.to_vec());
-            let mut splits = Vec::new();
-            let mut hosts = Vec::new();
-            for lo in (0..n).step_by(ROWS_PER_TASK) {
-                let hi = (lo + ROWS_PER_TASK).min(n);
-                // The row-range bytes this task will scan from the L table,
-                // charged via EXTRA_INPUT_BYTES in the mapper.
-                let modelled: u64 = row_bytes_c[lo..hi].iter().sum::<u64>().max(1);
-                splits.push(vec![(
-                    encode_u64(lo as u64).to_vec(),
-                    encode_u64(modelled).to_vec(),
-                )]);
-                hosts.push(row_range_hosts(&l_table_c, lo));
-            }
-            let l_cc = l_c.clone();
-            let v_cc = v_arc.clone();
-            let mapper = Arc::new(FnMapper(
-                move |key: &[u8], value: &[u8], ctx: &mut TaskContext| -> Result<()> {
-                    let lo = decode_u64(key) as usize;
-                    let hi = (lo + ROWS_PER_TASK).min(v_cc.len());
-                    // Charge the modelled L-row scan (HBase read) plus the
-                    // broadcast vector ("moving the vector to the data").
-                    ctx.incr(
-                        crate::mapreduce::names::EXTRA_INPUT_BYTES,
-                        decode_u64(value) + 8 * v_cc.len() as u64,
-                    );
-                    let nnz: usize = (lo..hi).map(|i| l_cc.row_nnz(i)).sum();
-                    ctx.incr(
-                        crate::mapreduce::names::COMPUTE_US,
-                        super::costmodel::units_to_us(
-                            nnz as u64,
-                            super::costmodel::MATVEC_NNZ_PER_S,
-                        ),
-                    );
-                    let y = l_cc.spmv_rows(&v_cc, lo, hi);
-                    for (off, yi) in y.into_iter().enumerate() {
-                        ctx.emit(
-                            encode_u64((lo + off) as u64).to_vec(),
-                            encode_f64(yi).to_vec(),
-                        );
-                    }
-                    Ok(())
-                },
-            ));
-            let job = JobBuilder::new("lanczos-matvec", splits, mapper)
-                .split_hosts(hosts)
-                .build();
-            let result = mapreduce::run(&cluster, &job).expect("matvec job");
+            let (pipeline, y_handle) =
+                matvec_pipeline(&l_c, &l_table_c, &v_arc, &row_bytes_c, n);
+            let mut run = pipeline.run(&services_c).expect("matvec job");
             let mut y = vec![0.0f64; n];
-            for part in &result.output {
-                for (kk, vv) in part {
-                    y[decode_u64(kk) as usize] = decode_f64(vv);
-                }
+            for (row, yi) in y_handle.take(&mut run) {
+                y[row as usize] = yi;
             }
-            matvec_counters.merge(&result.counters);
-            matvec_stats.push(result.stats);
+            matvec_runs.push(run.stats);
             y
         };
 
@@ -248,11 +260,10 @@ pub fn run_eigen_phase(
         let master_wall = master_start.elapsed().as_secs_f64();
 
         // Separate master-side compute from the MR jobs it launched.
-        let jobs_wall: f64 = matvec_stats.iter().map(|s| s.wall_time_s).sum();
-        for js in &matvec_stats {
-            stats.absorb(js);
+        let jobs_wall: f64 = matvec_runs.iter().map(|r| r.total_wall_s()).sum();
+        for run_stats in &matvec_runs {
+            stats.absorb_run(run_stats);
         }
-        stats.absorb_counters(&matvec_counters);
         stats.absorb_master(
             (master_wall - jobs_wall).max(0.0),
             services.cluster.model().compute_scale,
@@ -368,6 +379,29 @@ mod tests {
         // 1 laplacian-build + one matvec job per Lanczos step.
         assert_eq!(out.stats.jobs, 1 + out.steps);
         assert!(out.stats.virtual_s > 0.0);
+    }
+
+    #[test]
+    fn laplacian_pipeline_fuses_build_and_table_put_into_one_job() {
+        // The fusion proof on the Lanczos phase: two logical map ops
+        // (normalize + table put), ONE planned job.
+        let n = 140;
+        let (svc, s_table, degrees, _) = setup(n, 2);
+        let l_table = svc.tables.create("Lfuse", 2).unwrap();
+        let dinv: Arc<Vec<f64>> =
+            Arc::new(degrees.iter().map(|&d| 1.0 / d.sqrt()).collect());
+        let pipeline = laplacian_pipeline(&s_table, &l_table, &dinv, n);
+        let plan = pipeline.plan().unwrap();
+        assert_eq!(plan.job_count(), 1, "fusion must collapse the map chain");
+        let summaries = plan.stage_summaries();
+        assert_eq!(summaries[0].fused_maps, 2, "normalize + table-put");
+        assert!(!summaries[0].has_reduce, "map-only job");
+        let run = plan.run(&svc).unwrap();
+        assert_eq!(run.stats.jobs(), 1);
+        assert!(
+            !l_table.scan_all().is_empty(),
+            "fused table-put stage must write L"
+        );
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! The paper's system contribution: the three parallel phases of spectral
-//! clustering as MapReduce jobs over the mini-Hadoop runtime (§4.3).
+//! clustering as [`crate::dataflow`] pipelines over the mini-Hadoop
+//! runtime (§4.3) — each phase is a typed `Pipeline` expression whose
+//! planned stages run on the MapReduce engine.
 //!
 //! - [`similarity_job`]: Alg. 4.2 — parallel similarity matrix with the
 //!   i/(n−i+1) load-balanced pairing, written to the table store; degrees
@@ -20,6 +22,7 @@ pub mod similarity_job;
 use std::sync::Arc;
 
 use crate::cluster::Cluster;
+use crate::config::Config;
 use crate::dfs::Dfs;
 use crate::runtime::KernelRuntime;
 use crate::table::TableService;
@@ -46,18 +49,49 @@ impl Services {
     /// network map.
     pub fn new(cluster: Cluster, runtime: Arc<KernelRuntime>) -> Self {
         let m = cluster.num_slaves();
+        Self::with_replication(cluster, runtime, 2.min(m))
+    }
+
+    /// As [`Self::new`] with an explicit DFS replication factor (clamped
+    /// to the slave count).
+    pub fn with_replication(
+        cluster: Cluster,
+        runtime: Arc<KernelRuntime>,
+        replication: usize,
+    ) -> Self {
+        let m = cluster.num_slaves();
         let topology = cluster.topology().clone();
         Self {
             cluster,
             dfs: Dfs::with_topology(
                 m,
-                2.min(m),
+                replication.clamp(1, m),
                 crate::dfs::DEFAULT_BLOCK_SIZE,
                 topology,
             ),
             tables: TableService::new(m),
             runtime,
         }
+    }
+
+    /// Stand up services from a [`Config`]: cluster with the configured
+    /// rack topology, JobTracker and shuffle knobs, plus a DFS with the
+    /// configured replication. The single constructor the driver, benches
+    /// and tests share (it used to be copy-pasted per caller).
+    pub fn from_config(config: &Config, runtime: Arc<KernelRuntime>) -> Self {
+        let c = &config.cluster;
+        let mut cluster =
+            Cluster::with_model(c.slaves, c.slots_per_slave, c.network.clone());
+        cluster.set_topology(crate::scheduler::RackTopology::uniform(
+            c.slaves, c.racks,
+        ));
+        cluster.set_tracker_config(crate::scheduler::TrackerConfig {
+            heartbeat_s: c.heartbeat_s,
+            policy: c.scheduler,
+            speculation: c.speculation,
+        });
+        cluster.set_shuffle_config(config.shuffle);
+        Self::with_replication(cluster, runtime, c.replication)
     }
 }
 
@@ -91,6 +125,16 @@ impl PhaseStats {
     pub fn absorb_job(&mut self, result: &crate::mapreduce::JobResult) {
         self.absorb(&result.stats);
         self.absorb_counters(&result.counters);
+    }
+
+    /// Accumulate a whole dataflow pipeline run: every planned stage's job
+    /// stats and counters land in the phase (per-stage
+    /// [`crate::dataflow::PlanStats`] absorbed into the phase totals).
+    pub fn absorb_run(&mut self, run: &crate::dataflow::PlanStats) {
+        for stage in &run.stages {
+            self.absorb(&stage.stats);
+            self.absorb_counters(&stage.counters);
+        }
     }
 
     /// Accumulate one job's timing stats into the phase.

@@ -10,17 +10,22 @@
 //! half ... are obtained"). Partial row sums ride the shuffle to a reducer
 //! that assembles the degree vector (Alg. 4.1 step 2).
 //!
+//! The phase is expressed as a [`crate::dataflow::Pipeline`]:
+//! `read_dfs(points) → map_kv(similarity) → group_reduce(degree-sum) →
+//! collect` — split locality (the paired blocks' DFS byte ranges) rides the
+//! source and is resolved by the planner at run time.
+//!
 //! Table layout: key = `row_be || colblock_be` (u64 each), value =
 //! `encode_sparse_row` of the (col, value) pairs of that row within the
 //! column block — disjoint keys per task, so concurrent puts never conflict.
 
 use std::sync::Arc;
 
+use crate::dataflow::{Collected, Emit, Group, Pipeline};
 use crate::error::Result;
-use crate::mapreduce::{self, JobBuilder, Mapper, Reducer, TaskContext, Values};
 use crate::runtime::KernelRuntime;
 use crate::table::Table;
-use crate::util::bytes::{decode_f64, decode_u64, encode_f64, encode_u64};
+use crate::util::bytes::{decode_u64, encode_u64};
 
 use super::{PhaseStats, Services};
 
@@ -72,17 +77,17 @@ impl SimilarityMapper {
         let lo = b * BLOCK;
         (lo, (lo + BLOCK).min(self.n))
     }
-}
 
-impl Mapper for SimilarityMapper {
-    fn map(&self, key: &[u8], _value: &[u8], ctx: &mut TaskContext) -> Result<()> {
-        let b = decode_u64(key) as usize;
+    /// Map one owned row block: RBF tiles, threshold, table chunks, degree
+    /// partials to the shuffle.
+    fn map_block(&self, b: u64, out: &mut Emit<'_, u64, f64>) -> Result<()> {
+        let b = b as usize;
         let nb = Self::nblocks(self.n);
         let (blo, bhi) = self.block_range(b);
         let rows_b = bhi - blo;
         // The task reads its owned row block from the staged DFS points
         // file; the scheduler charges this at the attempt's locality tier.
-        ctx.incr(
+        out.incr(
             crate::mapreduce::names::EXTRA_INPUT_BYTES,
             (rows_b * self.d * 4) as u64,
         );
@@ -128,7 +133,7 @@ impl Mapper for SimilarityMapper {
                     kept += chunk.len() as u64;
                     let payload = crate::util::bytes::encode_sparse_row(&chunk);
                     out_bytes += payload.len() as u64;
-                    batch.push((chunk_key(gi_u64(blo + i), cb as u64), payload));
+                    batch.push((chunk_key((blo + i) as u64, cb as u64), payload));
                 }
             }
             self.table.put_batch(std::mem::take(&mut batch))?;
@@ -146,26 +151,23 @@ impl Mapper for SimilarityMapper {
                     kept += entries.len() as u64;
                     let payload = crate::util::bytes::encode_sparse_row(entries);
                     out_bytes += payload.len() as u64;
-                    batch.push((chunk_key(gi_u64(clo + j), b as u64), payload));
+                    batch.push((chunk_key((clo + j) as u64, b as u64), payload));
                 }
                 self.table.put_batch(batch)?;
                 for (j, dval) in deg_c.into_iter().enumerate() {
                     if dval != 0.0 {
-                        ctx.emit(
-                            encode_u64((clo + j) as u64).to_vec(),
-                            encode_f64(dval).to_vec(),
-                        );
+                        out.emit((clo + j) as u64, dval);
                     }
                 }
             }
-            ctx.incr(crate::mapreduce::names::EXTRA_OUTPUT_BYTES, out_bytes);
+            out.incr(crate::mapreduce::names::EXTRA_OUTPUT_BYTES, out_bytes);
             pairs_evaluated += (rows_b * cols) as u64;
-            ctx.incr("SIM_ENTRIES_KEPT", kept);
-            ctx.incr("SIM_TILES", 1);
+            out.incr("SIM_ENTRIES_KEPT", kept);
+            out.incr("SIM_TILES", 1);
         }
         // Deterministic virtual compute: Alg. 4.2's pair evaluations at the
         // reference machine's calibrated rate (costmodel.rs).
-        ctx.incr(
+        out.incr(
             crate::mapreduce::names::COMPUTE_US,
             super::costmodel::units_to_us(
                 pairs_evaluated,
@@ -173,43 +175,17 @@ impl Mapper for SimilarityMapper {
             ),
         );
         for (i, dval) in deg_b.into_iter().enumerate() {
-            ctx.emit(
-                encode_u64((blo + i) as u64).to_vec(),
-                encode_f64(dval).to_vec(),
-            );
+            out.emit((blo + i) as u64, dval);
         }
         Ok(())
     }
 }
 
-fn gi_u64(i: usize) -> u64 {
-    i as u64
-}
-
-/// Degree reducer: sums the partial row sums as they stream off the merge.
-struct DegreeReducer;
-
-impl Reducer for DegreeReducer {
-    fn reduce(
-        &self,
-        key: &[u8],
-        values: &mut dyn Values,
-        ctx: &mut TaskContext,
-    ) -> Result<()> {
-        let mut total = 0.0f64;
-        while let Some(v) = values.next_value() {
-            total += decode_f64(v);
-        }
-        ctx.emit(key.to_vec(), encode_f64(total).to_vec());
-        Ok(())
-    }
-}
-
-/// Run phase 1: build the S table + degree vector for a point set.
-///
-/// `points` is n×d row-major f32; similarity entries below `epsilon` are
-/// dropped (diagonal kept). Returns degrees + phase stats.
-pub fn run_similarity_phase(
+/// Build the points-mode phase-1 pipeline: stage the points in the DFS,
+/// pair the row blocks paper-style, and wire `read_dfs → map_kv →
+/// group_reduce → collect`. Returns the pipeline and the handle to the
+/// collected degree records.
+pub(crate) fn points_pipeline(
     services: &Services,
     points: Arc<Vec<f32>>,
     n: usize,
@@ -217,7 +193,7 @@ pub fn run_similarity_phase(
     sigma: f64,
     epsilon: f64,
     table_name: &str,
-) -> Result<SimilarityOutput> {
+) -> Result<(Pipeline, Collected<u64, f64>)> {
     let table = services.tables.create(table_name, services.cluster.num_slaves())?;
     let nb = SimilarityMapper::nblocks(n);
     let gamma = crate::spectral::gamma_of_sigma(sigma) as f32;
@@ -235,53 +211,221 @@ pub fn run_similarity_phase(
         (b * BLOCK * row_bytes, ((b + 1) * BLOCK).min(n) * row_bytes)
     };
 
-    // Paper pairing: split {b, nb-1-b} — both blocks in one map task.
-    let mut splits = Vec::new();
-    let mut hosts = Vec::new();
+    // Paper pairing: split {b, nb-1-b} — both blocks in one map task; the
+    // split's locality is the union of both blocks' byte ranges.
+    let mut splits: Vec<Vec<(u64, ())>> = Vec::new();
+    let mut ranges: Vec<Vec<(usize, usize)>> = Vec::new();
     for b in 0..nb.div_ceil(2) {
-        let mut records = vec![(encode_u64(b as u64).to_vec(), vec![])];
-        let (lo, hi) = byte_range(b);
-        let mut h = services.dfs.range_hosts(&input_path, lo, hi)?;
+        let mut records = vec![(b as u64, ())];
+        let mut r = vec![byte_range(b)];
         let mirror = nb - 1 - b;
         if mirror != b {
-            records.push((encode_u64(mirror as u64).to_vec(), vec![]));
-            let (mlo, mhi) = byte_range(mirror);
-            h.extend(services.dfs.range_hosts(&input_path, mlo, mhi)?);
-            h.sort_unstable();
-            h.dedup();
+            records.push((mirror as u64, ()));
+            r.push(byte_range(mirror));
         }
         splits.push(records);
-        hosts.push(h);
+        ranges.push(r);
     }
 
-    let mapper = Arc::new(SimilarityMapper {
+    let mapper = SimilarityMapper {
         points,
         n,
         d,
         gamma,
         epsilon: epsilon as f32,
-        table: table.clone(),
+        table,
         runtime: services.runtime.clone(),
-    });
-    let job = JobBuilder::new("similarity", splits, mapper)
-        .split_hosts(hosts)
-        .reducer(Arc::new(DegreeReducer), services.cluster.num_slaves())
-        .build();
-    let mut result = mapreduce::run(&services.cluster, &job)?;
+    };
+    let pipeline = Pipeline::new("similarity");
+    let degrees = pipeline
+        .read_dfs(&input_path, splits, ranges)
+        .map_kv("similarity", move |b: u64, _: (), out| mapper.map_block(b, out))
+        .group_reduce("degree-sum")
+        .reducers(services.cluster.num_slaves())
+        .reduce(|key: u64, values: &mut Group<'_, f64>, out| {
+            // Degree reducer: sum the partial row sums as they stream off
+            // the merge.
+            let mut total = 0.0f64;
+            while let Some(v) = values.next_value() {
+                total += v;
+            }
+            out.emit(key, total);
+            Ok(())
+        })
+        .collect();
+    Ok((pipeline, degrees))
+}
 
-    // Assemble the degree vector from reducer output.
+/// Run phase 1: build the S table + degree vector for a point set.
+///
+/// `points` is n×d row-major f32; similarity entries below `epsilon` are
+/// dropped (diagonal kept). Returns degrees + phase stats.
+pub fn run_similarity_phase(
+    services: &Services,
+    points: Arc<Vec<f32>>,
+    n: usize,
+    d: usize,
+    sigma: f64,
+    epsilon: f64,
+    table_name: &str,
+) -> Result<SimilarityOutput> {
+    let (pipeline, degree_handle) =
+        points_pipeline(services, points, n, d, sigma, epsilon, table_name)?;
+    let mut run = pipeline.run(services)?;
+
+    // Assemble the degree vector from the collected reducer output.
     let mut degrees = vec![0.0f64; n];
-    for (k, v) in result.sorted_records() {
-        degrees[decode_u64(&k) as usize] = decode_f64(&v);
+    for (row, degree) in degree_handle.take(&mut run) {
+        degrees[row as usize] = degree;
     }
     let mut stats = PhaseStats { name: "similarity".into(), ..Default::default() };
-    stats.absorb_job(&result);
+    stats.absorb_run(&run.stats);
+    let counters = run.stats.merged_counters();
     Ok(SimilarityOutput {
         degrees,
         stats,
-        nnz: result.counters.get("SIM_ENTRIES_KEPT"),
-        counters: result.counters,
+        nnz: counters.get("SIM_ENTRIES_KEPT"),
+        counters,
     })
+}
+
+/// Build the graph-mode phase-1 pipeline: edge/vertex records staged in
+/// the DFS, `read_dfs → map_kv(expand edges) → group_reduce(assemble rows)
+/// → collect(degrees)`.
+pub(crate) fn graph_pipeline(
+    services: &Services,
+    topology: &crate::data::Topology,
+    table_name: &str,
+) -> Result<(Pipeline, Collected<u64, f64>)> {
+    let table = services.tables.create(table_name, services.cluster.num_slaves())?;
+
+    // Splits: edges chunked, then vertices chunked (for the diagonal). The
+    // records are simultaneously serialized into a staged DFS edge file so
+    // each split can declare the nodes holding its byte range.
+    const RECORDS_PER_SPLIT: usize = 4096;
+    let mut splits: Vec<Vec<(Vec<u8>, Vec<u8>)>> = Vec::new();
+    let mut current: Vec<(Vec<u8>, Vec<u8>)> = Vec::new();
+    let mut raw: Vec<u8> = Vec::new();
+    let mut ranges: Vec<Vec<(usize, usize)>> = Vec::new();
+    let mut range_start = 0usize;
+    for e in &topology.edges {
+        let mut v = Vec::with_capacity(24);
+        v.extend_from_slice(&encode_u64(e.src));
+        v.extend_from_slice(&encode_u64(e.dst));
+        v.extend_from_slice(&crate::util::bytes::encode_f64(e.label.max(1) as f64));
+        raw.extend_from_slice(&v);
+        current.push((b"e".to_vec(), v));
+        if current.len() == RECORDS_PER_SPLIT {
+            splits.push(std::mem::take(&mut current));
+            ranges.push(vec![(range_start, raw.len())]);
+            range_start = raw.len();
+        }
+    }
+    for v in &topology.vertices {
+        raw.extend_from_slice(&encode_u64(v.id));
+        current.push((b"v".to_vec(), encode_u64(v.id).to_vec()));
+        if current.len() == RECORDS_PER_SPLIT {
+            splits.push(std::mem::take(&mut current));
+            ranges.push(vec![(range_start, raw.len())]);
+            range_start = raw.len();
+        }
+    }
+    if !current.is_empty() {
+        splits.push(current);
+        ranges.push(vec![(range_start, raw.len())]);
+    }
+    let input_path = format!("/input/{table_name}.edges");
+    services.dfs.write_file(&input_path, &raw)?;
+
+    let pipeline = Pipeline::new("similarity-graph");
+    let table_c = table.clone();
+    let degrees = pipeline
+        .read_dfs(&input_path, splits, ranges)
+        .map_kv(
+            "similarity-graph",
+            |tag: Vec<u8>, value: Vec<u8>, out| -> Result<()> {
+                // NB: unlike the points/kmeans/lanczos jobs, the real
+                // payloads ARE the split records here, so the engine already
+                // counts them into the task's input bytes — no
+                // EXTRA_INPUT_BYTES on top.
+                match tag.as_slice() {
+                    b"e" => {
+                        let src = decode_u64(&value[..8]);
+                        let dst = decode_u64(&value[8..16]);
+                        let w = crate::util::bytes::decode_f64(&value[16..24]);
+                        out.emit(src, (dst, w));
+                        if src != dst {
+                            out.emit(dst, (src, w));
+                        }
+                    }
+                    b"v" => {
+                        let id = decode_u64(&value);
+                        out.emit(id, (id, 1.0));
+                    }
+                    other => {
+                        return Err(crate::error::Error::MapReduce(format!(
+                            "graph similarity: unknown record {other:?}"
+                        )))
+                    }
+                }
+                out.incr(
+                    crate::mapreduce::names::COMPUTE_US,
+                    super::costmodel::units_to_us(
+                        1,
+                        super::costmodel::GRAPH_EDGES_PER_S,
+                    ),
+                );
+                Ok(())
+            },
+        )
+        .group_reduce("graph-row")
+        .reducers(services.cluster.num_slaves())
+        .reduce(
+            move |row: u64, values: &mut Group<'_, (u64, f64)>, out| -> Result<()> {
+                // One row's adjacency — bounded by the vertex degree, not
+                // the partition (the merge streams the group's values).
+                let mut entries: Vec<(u32, f64)> = Vec::new();
+                while let Some((j, w)) = values.next_value() {
+                    entries.push((j as u32, w));
+                }
+                entries.sort_unstable_by_key(|&(j, _)| j);
+                entries.dedup_by(|a, b| {
+                    if a.0 == b.0 {
+                        b.1 += a.1; // parallel edges sum
+                        true
+                    } else {
+                        false
+                    }
+                });
+                let degree: f64 = entries.iter().map(|&(_, v)| v).sum();
+                out.incr("SIM_ENTRIES_KEPT", entries.len() as u64);
+                out.incr(
+                    crate::mapreduce::names::COMPUTE_US,
+                    super::costmodel::units_to_us(
+                        entries.len() as u64,
+                        super::costmodel::GRAPH_EDGES_PER_S,
+                    ),
+                );
+                // Write per-column-block chunks.
+                let mut i = 0;
+                while i < entries.len() {
+                    let cb = entries[i].0 as usize / BLOCK;
+                    let mut j = i;
+                    while j < entries.len() && entries[j].0 as usize / BLOCK == cb {
+                        j += 1;
+                    }
+                    table_c.put(
+                        chunk_key(row, cb as u64),
+                        crate::util::bytes::encode_sparse_row(&entries[i..j]),
+                    )?;
+                    i = j;
+                }
+                out.emit(row, degree);
+                Ok(())
+            },
+        )
+        .collect();
+    Ok((pipeline, degrees))
 }
 
 /// Graph-mode phase 1: build the S table from a topology's edges.
@@ -295,157 +439,22 @@ pub fn run_similarity_phase_graph(
     topology: &crate::data::Topology,
     table_name: &str,
 ) -> Result<SimilarityOutput> {
+    let (pipeline, degree_handle) = graph_pipeline(services, topology, table_name)?;
+    let mut run = pipeline.run(services)?;
+
     let n = topology.num_vertices();
-    let table = services.tables.create(table_name, services.cluster.num_slaves())?;
-
-    // Splits: edges chunked, then vertices chunked (for the diagonal). The
-    // records are simultaneously serialized into a staged DFS edge file so
-    // each split can declare the nodes holding its byte range.
-    const RECORDS_PER_SPLIT: usize = 4096;
-    let mut splits: Vec<Vec<(Vec<u8>, Vec<u8>)>> = Vec::new();
-    let mut current: Vec<(Vec<u8>, Vec<u8>)> = Vec::new();
-    let mut raw: Vec<u8> = Vec::new();
-    let mut ranges: Vec<(usize, usize)> = Vec::new();
-    let mut range_start = 0usize;
-    for e in &topology.edges {
-        let mut v = Vec::with_capacity(24);
-        v.extend_from_slice(&encode_u64(e.src));
-        v.extend_from_slice(&encode_u64(e.dst));
-        v.extend_from_slice(&encode_f64(e.label.max(1) as f64));
-        raw.extend_from_slice(&v);
-        current.push((b"e".to_vec(), v));
-        if current.len() == RECORDS_PER_SPLIT {
-            splits.push(std::mem::take(&mut current));
-            ranges.push((range_start, raw.len()));
-            range_start = raw.len();
-        }
-    }
-    for v in &topology.vertices {
-        raw.extend_from_slice(&encode_u64(v.id));
-        current.push((b"v".to_vec(), encode_u64(v.id).to_vec()));
-        if current.len() == RECORDS_PER_SPLIT {
-            splits.push(std::mem::take(&mut current));
-            ranges.push((range_start, raw.len()));
-            range_start = raw.len();
-        }
-    }
-    if !current.is_empty() {
-        splits.push(current);
-        ranges.push((range_start, raw.len()));
-    }
-    let input_path = format!("/input/{table_name}.edges");
-    services.dfs.write_file(&input_path, &raw)?;
-    let hosts = ranges
-        .iter()
-        .map(|&(lo, hi)| services.dfs.range_hosts(&input_path, lo, hi))
-        .collect::<Result<Vec<_>>>()?;
-
-    let mapper = Arc::new(crate::mapreduce::FnMapper(
-        move |key: &[u8], value: &[u8], ctx: &mut TaskContext| -> Result<()> {
-            // NB: unlike the points/kmeans/lanczos jobs, the real payloads
-            // ARE the split records here, so the engine already counts them
-            // into the task's input bytes — no EXTRA_INPUT_BYTES on top.
-            match key {
-                b"e" => {
-                    let src = decode_u64(&value[..8]);
-                    let dst = decode_u64(&value[8..16]);
-                    let w = &value[16..24];
-                    let mut payload = Vec::with_capacity(16);
-                    payload.extend_from_slice(&encode_u64(dst));
-                    payload.extend_from_slice(w);
-                    ctx.emit(encode_u64(src).to_vec(), payload);
-                    if src != dst {
-                        let mut payload = Vec::with_capacity(16);
-                        payload.extend_from_slice(&encode_u64(src));
-                        payload.extend_from_slice(w);
-                        ctx.emit(encode_u64(dst).to_vec(), payload);
-                    }
-                }
-                b"v" => {
-                    let id = decode_u64(value);
-                    let mut payload = Vec::with_capacity(16);
-                    payload.extend_from_slice(&encode_u64(id));
-                    payload.extend_from_slice(&encode_f64(1.0));
-                    ctx.emit(encode_u64(id).to_vec(), payload);
-                }
-                other => {
-                    return Err(crate::error::Error::MapReduce(format!(
-                        "graph similarity: unknown record {other:?}"
-                    )))
-                }
-            }
-            ctx.incr(
-                crate::mapreduce::names::COMPUTE_US,
-                super::costmodel::units_to_us(1, super::costmodel::GRAPH_EDGES_PER_S),
-            );
-            Ok(())
-        },
-    ));
-
-    let table_c = table.clone();
-    let reducer = Arc::new(crate::mapreduce::FnReducer(
-        move |key: &[u8], values: &mut dyn Values, ctx: &mut TaskContext| -> Result<()> {
-            let row = decode_u64(key);
-            // One row's adjacency — bounded by the vertex degree, not the
-            // partition (the merge streams the group's values).
-            let mut entries: Vec<(u32, f64)> = Vec::new();
-            while let Some(v) = values.next_value() {
-                entries.push((decode_u64(&v[..8]) as u32, decode_f64(&v[8..16])));
-            }
-            entries.sort_unstable_by_key(|&(j, _)| j);
-            entries.dedup_by(|a, b| {
-                if a.0 == b.0 {
-                    b.1 += a.1; // parallel edges sum
-                    true
-                } else {
-                    false
-                }
-            });
-            let degree: f64 = entries.iter().map(|&(_, v)| v).sum();
-            ctx.incr("SIM_ENTRIES_KEPT", entries.len() as u64);
-            ctx.incr(
-                crate::mapreduce::names::COMPUTE_US,
-                super::costmodel::units_to_us(
-                    entries.len() as u64,
-                    super::costmodel::GRAPH_EDGES_PER_S,
-                ),
-            );
-            // Write per-column-block chunks.
-            let mut i = 0;
-            while i < entries.len() {
-                let cb = entries[i].0 as usize / BLOCK;
-                let mut j = i;
-                while j < entries.len() && entries[j].0 as usize / BLOCK == cb {
-                    j += 1;
-                }
-                table_c.put(
-                    chunk_key(row, cb as u64),
-                    crate::util::bytes::encode_sparse_row(&entries[i..j]),
-                )?;
-                i = j;
-            }
-            ctx.emit(key.to_vec(), encode_f64(degree).to_vec());
-            Ok(())
-        },
-    ));
-
-    let job = JobBuilder::new("similarity-graph", splits, mapper)
-        .split_hosts(hosts)
-        .reducer(reducer, services.cluster.num_slaves())
-        .build();
-    let mut result = mapreduce::run(&services.cluster, &job)?;
-
     let mut degrees = vec![0.0f64; n];
-    for (k, v) in result.sorted_records() {
-        degrees[decode_u64(&k) as usize] = decode_f64(&v);
+    for (row, degree) in degree_handle.take(&mut run) {
+        degrees[row as usize] = degree;
     }
     let mut stats = PhaseStats { name: "similarity".into(), ..Default::default() };
-    stats.absorb_job(&result);
+    stats.absorb_run(&run.stats);
+    let counters = run.stats.merged_counters();
     Ok(SimilarityOutput {
         degrees,
         stats,
-        nnz: result.counters.get("SIM_ENTRIES_KEPT"),
-        counters: result.counters,
+        nnz: counters.get("SIM_ENTRIES_KEPT"),
+        counters,
     })
 }
 
@@ -547,8 +556,23 @@ mod tests {
     fn stats_populated() {
         let (_, out, _) = run_phase(130, 1.0, 1e-6);
         assert!(out.stats.virtual_s > 0.0);
-        assert_eq!(out.stats.jobs, 1);
+        assert_eq!(out.stats.jobs, 1, "map + reduce fuse into one job");
         assert!(out.stats.shuffle_bytes > 0, "degrees cross the shuffle");
+    }
+
+    #[test]
+    fn pipeline_plan_is_one_fused_job() {
+        let ps = gaussian_blobs(150, 3, 4, 0.4, 8.0, 3);
+        let svc = services(2);
+        let flat: Vec<f32> = ps.points.iter().flatten().map(|&x| x as f32).collect();
+        let (pipeline, _degrees) =
+            points_pipeline(&svc, Arc::new(flat), 150, 4, 1.0, 1e-6, "S").unwrap();
+        let plan = pipeline.plan().unwrap();
+        assert_eq!(plan.job_count(), 1);
+        let summaries = plan.stage_summaries();
+        assert_eq!(summaries[0].name, "similarity");
+        assert!(summaries[0].has_reduce);
+        assert!(summaries[0].source_splits > 0);
     }
 
     #[test]

@@ -1,0 +1,231 @@
+//! Typed key/value codecs for the dataflow layer.
+//!
+//! [`KvCodec`] is the contract between the typed [`super::Dataset`] API and
+//! the byte-oriented MapReduce engine: every key/value type a pipeline
+//! carries knows how to encode itself into the `Vec<u8>` records the
+//! shuffle sorts and how to decode itself back. Encodings are chosen to be
+//! **bit-identical to the hand-packed buffers the coordinator jobs used
+//! before the dataflow port** (big-endian fixed-width numerics from
+//! [`crate::util::bytes`], length-prefixed f64 vectors), so porting a job
+//! onto the typed API cannot change its outputs, shuffle bytes or spill
+//! counters. A LEB128 varint codec is provided for compact record framing
+//! (the planner uses it for DFS-staged intermediates).
+
+use crate::util::bytes;
+
+/// A type that can cross the shuffle as a key or value.
+///
+/// Keys additionally rely on the property that byte-lexicographic order of
+/// the encoding equals the natural order of the type (true for the
+/// big-endian unsigned codecs here — Hadoop's Writable convention).
+pub trait KvCodec: Sized + Send + Sync + 'static {
+    /// Append the encoding of `self` to `out`.
+    fn encode_into(&self, out: &mut Vec<u8>);
+
+    /// Decode a value from its full encoding.
+    fn decode(bytes: &[u8]) -> Self;
+
+    /// Encode into a fresh buffer.
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+}
+
+/// Unit: the empty encoding (splits whose records carry no payload).
+impl KvCodec for () {
+    fn encode_into(&self, _out: &mut Vec<u8>) {}
+
+    fn decode(_bytes: &[u8]) -> Self {}
+}
+
+/// Big-endian fixed-width u64 (order-preserving row keys).
+impl KvCodec for u64 {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&bytes::encode_u64(*self));
+    }
+
+    fn decode(b: &[u8]) -> Self {
+        bytes::decode_u64(b)
+    }
+}
+
+/// Big-endian fixed-width u32 (center indices, column ids).
+impl KvCodec for u32 {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&bytes::encode_u32(*self));
+    }
+
+    fn decode(b: &[u8]) -> Self {
+        bytes::decode_u32(b)
+    }
+}
+
+/// f64 payload (not order-preserving; values only).
+impl KvCodec for f64 {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&bytes::encode_f64(*self));
+    }
+
+    fn decode(b: &[u8]) -> Self {
+        bytes::decode_f64(b)
+    }
+}
+
+/// Raw bytes: the escape hatch for pre-encoded payloads (sparse-row chunks,
+/// tagged graph records).
+impl KvCodec for Vec<u8> {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(self);
+    }
+
+    fn decode(b: &[u8]) -> Self {
+        b.to_vec()
+    }
+}
+
+/// Length-prefixed f64 vector (k-means partial sums).
+impl KvCodec for Vec<f64> {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&bytes::encode_f64_vec(self));
+    }
+
+    fn decode(b: &[u8]) -> Self {
+        bytes::decode_f64_vec(b).0
+    }
+}
+
+/// Composite row key `(row, column-block)` — 16 bytes, both halves
+/// order-preserving (the table chunk keys of phases 1–2).
+impl KvCodec for (u64, u64) {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&bytes::encode_u64(self.0));
+        out.extend_from_slice(&bytes::encode_u64(self.1));
+    }
+
+    fn decode(b: &[u8]) -> Self {
+        (bytes::decode_u64(&b[..8]), bytes::decode_u64(&b[8..16]))
+    }
+}
+
+/// `(index, weight)` payload — 16 bytes (graph-mode adjacency records).
+impl KvCodec for (u64, f64) {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&bytes::encode_u64(self.0));
+        out.extend_from_slice(&bytes::encode_f64(self.1));
+    }
+
+    fn decode(b: &[u8]) -> Self {
+        (bytes::decode_u64(&b[..8]), bytes::decode_f64(&b[8..16]))
+    }
+}
+
+/// LEB128 varint u64: compact framing for staged intermediates.
+///
+/// NOT order-preserving — use it for values and framing lengths, never for
+/// shuffle keys.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VarU64(pub u64);
+
+impl KvCodec for VarU64 {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        write_varint(self.0, out);
+    }
+
+    fn decode(b: &[u8]) -> Self {
+        VarU64(read_varint(b).0)
+    }
+}
+
+/// Append the LEB128 encoding of `v`.
+pub fn write_varint(mut v: u64, out: &mut Vec<u8>) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Read a LEB128 varint; returns `(value, bytes consumed)`.
+pub fn read_varint(b: &[u8]) -> (u64, usize) {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    for (i, &byte) in b.iter().enumerate() {
+        v |= ((byte & 0x7f) as u64) << shift;
+        if byte & 0x80 == 0 {
+            return (v, i + 1);
+        }
+        shift += 7;
+    }
+    (v, b.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: KvCodec + PartialEq + std::fmt::Debug>(v: T) {
+        let enc = v.to_bytes();
+        assert_eq!(T::decode(&enc), v);
+    }
+
+    #[test]
+    fn fixed_width_roundtrips() {
+        roundtrip(0u64);
+        roundtrip(u64::MAX);
+        roundtrip(42u32);
+        roundtrip(-1.5f64);
+        roundtrip(());
+        roundtrip((7u64, 9u64));
+        roundtrip((3u64, 0.25f64));
+        roundtrip(vec![1u8, 2, 3]);
+        roundtrip(vec![1.0f64, -2.5, 0.0]);
+    }
+
+    #[test]
+    fn encodings_match_hand_packed_buffers() {
+        // The port contract: typed encodings are byte-identical to what the
+        // coordinator jobs emitted before the dataflow layer existed.
+        assert_eq!(7u64.to_bytes(), bytes::encode_u64(7).to_vec());
+        assert_eq!(5u32.to_bytes(), bytes::encode_u32(5).to_vec());
+        assert_eq!(1.5f64.to_bytes(), bytes::encode_f64(1.5).to_vec());
+        assert_eq!(
+            vec![1.0f64, 2.0].to_bytes(),
+            bytes::encode_f64_vec(&[1.0, 2.0])
+        );
+        let mut key = Vec::new();
+        key.extend_from_slice(&bytes::encode_u64(3));
+        key.extend_from_slice(&bytes::encode_u64(4));
+        assert_eq!((3u64, 4u64).to_bytes(), key);
+    }
+
+    #[test]
+    fn key_order_preserved() {
+        assert!(5u64.to_bytes() < 6u64.to_bytes());
+        assert!(255u64.to_bytes() < 256u64.to_bytes());
+        assert!((1u64, 9u64).to_bytes() < (2u64, 0u64).to_bytes());
+    }
+
+    #[test]
+    fn varint_roundtrip_and_sizes() {
+        for v in [0u64, 1, 127, 128, 300, 1 << 20, u64::MAX] {
+            let mut out = Vec::new();
+            write_varint(v, &mut out);
+            let (back, used) = read_varint(&out);
+            assert_eq!(back, v);
+            assert_eq!(used, out.len());
+        }
+        let mut one = Vec::new();
+        write_varint(127, &mut one);
+        assert_eq!(one.len(), 1);
+        let mut two = Vec::new();
+        write_varint(128, &mut two);
+        assert_eq!(two.len(), 2);
+        roundtrip(VarU64(987654321));
+    }
+}

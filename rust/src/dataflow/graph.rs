@@ -1,0 +1,240 @@
+//! The logical dataflow graph the typed API builds and the planner consumes.
+//!
+//! Nodes are append-only and each node's input has a smaller id than the
+//! node itself, so node-id order IS a topological order — the planner
+//! walks it directly. Because [`super::Dataset`] handles are consumed by
+//! value, every node has at most one downstream consumer and the graph is
+//! a forest of chains (multiple independent source→sink chains may coexist
+//! in one pipeline).
+
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::mapreduce::names;
+use crate::mapreduce::{
+    FaultInjector, InputSplit, Mapper, Partitioner, Reducer, ShuffleConfig, TaskContext,
+};
+use crate::table::Table;
+
+/// Logical node id (index into [`Graph::nodes`]).
+pub type NodeId = usize;
+
+/// Where a source's map splits physically live — resolved to preferred
+/// hosts ([`crate::mapreduce::Job::split_hosts`]) at `run(&Services)` time,
+/// so pipelines can be constructed and explained without touching services.
+pub enum Locality {
+    /// No placement preference.
+    None,
+    /// Each split covers the given byte ranges of a DFS file; its hosts are
+    /// the union of the replica nodes of the overlapping blocks.
+    DfsRanges {
+        /// DFS path of the staged input file.
+        path: String,
+        /// Per-split byte ranges (a split may cover several disjoint
+        /// ranges, e.g. the paper's paired row blocks).
+        ranges: Vec<Vec<(usize, usize)>>,
+    },
+    /// Each split is anchored at a table row key; its host is the slave
+    /// serving the region that owns the key (HBase co-location).
+    TableKeys {
+        /// The table whose regions provide locality.
+        table: Arc<Table>,
+        /// One anchor key per split.
+        keys: Vec<Vec<u8>>,
+    },
+}
+
+/// One logical operator.
+pub(crate) enum LogicalOp {
+    /// Input splits + their locality.
+    Source {
+        splits: Vec<InputSplit>,
+        locality: Locality,
+    },
+    /// A record-at-a-time transform (fusable).
+    Map {
+        name: String,
+        mapper: Arc<dyn Mapper>,
+    },
+    /// Shuffle boundary: group by key and reduce each group.
+    GroupReduce {
+        name: String,
+        reducer: Arc<dyn Reducer>,
+        combiner: Option<Arc<dyn Reducer>>,
+        partitioner: Option<Arc<dyn Partitioner>>,
+        num_reducers: usize,
+    },
+}
+
+/// One logical node: an operator plus its (single) upstream input.
+pub(crate) struct LogicalNode {
+    pub input: Option<NodeId>,
+    pub op: LogicalOp,
+}
+
+/// What happens to a materialized node output.
+pub(crate) enum SinkKind {
+    /// Keep the records for [`super::PipelineRun`] retrieval.
+    Collect,
+    /// Write the records to a DFS file (varint-framed, see
+    /// [`super::planner::encode_staged`]).
+    WriteDfs { path: String },
+}
+
+/// A sink attached to a node's output.
+pub(crate) struct Sink {
+    pub node: NodeId,
+    pub kind: SinkKind,
+}
+
+/// The whole logical pipeline.
+pub(crate) struct Graph {
+    pub name: String,
+    pub nodes: Vec<LogicalNode>,
+    pub sinks: Vec<Sink>,
+    /// Per-pipeline engine knobs (apply to every planned job).
+    pub max_attempts: Option<usize>,
+    pub shuffle: Option<ShuffleConfig>,
+    pub fault: Option<FaultInjector>,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            nodes: Vec::new(),
+            sinks: Vec::new(),
+            max_attempts: None,
+            shuffle: None,
+            fault: None,
+        }
+    }
+
+    /// Append a node; returns its id.
+    pub fn add(&mut self, input: Option<NodeId>, op: LogicalOp) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(LogicalNode { input, op });
+        id
+    }
+}
+
+/// Pass-through mapper for stages that begin at a shuffle boundary with no
+/// map work of their own (a `group_reduce` directly after another one).
+pub(crate) struct IdentityMapper;
+
+impl Mapper for IdentityMapper {
+    fn map(&self, key: &[u8], value: &[u8], ctx: &mut TaskContext) -> Result<()> {
+        ctx.emit(key.to_vec(), value.to_vec());
+        Ok(())
+    }
+}
+
+/// The `write_table` sink as a fusable map stage: puts every record into
+/// the table, charges the write like the hand-wired jobs did
+/// (`EXTRA_OUTPUT_BYTES` = payload bytes), and emits nothing — a terminal
+/// map-only stage produces an empty job output, exactly like the old
+/// table-writing mappers.
+pub(crate) struct TablePutMapper {
+    pub table: Arc<Table>,
+}
+
+impl Mapper for TablePutMapper {
+    fn map(&self, key: &[u8], value: &[u8], ctx: &mut TaskContext) -> Result<()> {
+        ctx.incr(names::EXTRA_OUTPUT_BYTES, value.len() as u64);
+        self.table.put(key.to_vec(), value.to_vec())
+    }
+}
+
+/// Runs a fused chain of map operators as one engine mapper: records
+/// emitted by operator `i` are fed to operator `i + 1`; the final
+/// operator's emits (and every operator's counters) land in the real task
+/// context. This is what lets a `map → map → group` pipeline run as ONE
+/// MapReduce job.
+pub(crate) struct FusedMapper {
+    pub mappers: Vec<Arc<dyn Mapper>>,
+}
+
+impl Mapper for FusedMapper {
+    fn map(&self, key: &[u8], value: &[u8], ctx: &mut TaskContext) -> Result<()> {
+        // The planner only builds a FusedMapper for chains of >= 2 maps
+        // (0 maps → IdentityMapper, 1 → the mapper itself).
+        debug_assert!(self.mappers.len() >= 2, "FusedMapper wants a fused chain");
+        let n = self.mappers.len();
+        let mut current: Vec<(Vec<u8>, Vec<u8>)> = vec![(key.to_vec(), value.to_vec())];
+        for (i, m) in self.mappers.iter().enumerate() {
+            if i + 1 == n {
+                for (k, v) in &current {
+                    m.map(k, v, ctx)?;
+                }
+            } else {
+                let mut sub = TaskContext::default();
+                for (k, v) in &current {
+                    m.map(k, v, &mut sub)?;
+                }
+                let (emits, counters) = sub.into_parts();
+                ctx.merge_counters(&counters);
+                current = emits;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::FnMapper;
+
+    #[test]
+    fn graph_ids_are_topological() {
+        let mut g = Graph::new("t");
+        let s = g.add(
+            None,
+            LogicalOp::Source { splits: vec![], locality: Locality::None },
+        );
+        let m = g.add(
+            Some(s),
+            LogicalOp::Map {
+                name: "m".into(),
+                mapper: Arc::new(IdentityMapper),
+            },
+        );
+        assert_eq!(s, 0);
+        assert_eq!(m, 1);
+        assert_eq!(g.nodes[m].input, Some(s));
+    }
+
+    #[test]
+    fn fused_mapper_cascades_records_and_counters() {
+        // map1: word -> (word, 1) per char; map2: uppercase keys.
+        let m1 = Arc::new(FnMapper(|_k: &[u8], v: &[u8], ctx: &mut TaskContext| {
+            for &b in v {
+                ctx.emit(vec![b], vec![1]);
+                ctx.incr("M1", 1);
+            }
+            Ok(())
+        }));
+        let m2 = Arc::new(FnMapper(|k: &[u8], v: &[u8], ctx: &mut TaskContext| {
+            ctx.emit(k.to_ascii_uppercase(), v.to_vec());
+            ctx.incr("M2", 1);
+            Ok(())
+        }));
+        let fused = FusedMapper { mappers: vec![m1, m2] };
+        let mut ctx = TaskContext::default();
+        fused.map(&[], b"ab", &mut ctx).unwrap();
+        let (emits, counters) = ctx.into_parts();
+        assert_eq!(
+            emits,
+            vec![(b"A".to_vec(), vec![1]), (b"B".to_vec(), vec![1])]
+        );
+        assert_eq!(counters.get("M1"), 2);
+        assert_eq!(counters.get("M2"), 2);
+    }
+
+    #[test]
+    fn identity_mapper_passes_through() {
+        let mut ctx = TaskContext::default();
+        IdentityMapper.map(&[1], &[2], &mut ctx).unwrap();
+        assert_eq!(ctx.emitted(), &[(vec![1], vec![2])]);
+    }
+}

@@ -1,0 +1,609 @@
+//! Typed dataflow layer: `Pipeline` / `Dataset<K, V>` over the MapReduce
+//! engine (FlumeJava / Spark-RDD style).
+//!
+//! The coordinator phases used to hand-wire every job: build splits, pack
+//! `&[u8]` buffers, call `mapreduce::run`, stage intermediates in the DFS
+//! by hand. This module replaces that surface with a small composable API:
+//!
+//! ```ignore
+//! let p = Pipeline::new("wordcount");
+//! let counts = p
+//!     .read_dfs::<u64, Vec<u8>>("/input/lines", splits, ranges) // locality for free
+//!     .map_kv("tokenize", |_, line, out| { ...; out.emit(word, 1.0); Ok(()) })
+//!     .group_reduce("count")
+//!     .reducers(4)
+//!     .reduce(|word, values, out| { ...; Ok(()) })
+//!     .collect();
+//! let mut run = p.run(&services)?;        // plan → fuse → execute
+//! let records = counts.take(&mut run);    // typed records back
+//! ```
+//!
+//! `run(&Services)` hands the logical DAG to the [`Planner`], which fuses
+//! chains of map-only stages into single jobs, stages intermediates
+//! between jobs in the DFS (rack-aware placement ⇒ downstream
+//! `split_hosts` for free) and feeds each materialized job through the
+//! unchanged [`crate::mapreduce::JobBuilder`] / scheduler / shuffle
+//! machinery. Keys and values are typed via [`KvCodec`]; the encodings are
+//! bit-identical to the hand-packed buffers the phases used before, so the
+//! port is output- and cost-model-neutral.
+//!
+//! The old `JobBuilder` path remains public — tests and ad-hoc jobs still
+//! use it directly (see DESIGN.md §"Dataflow layer" for the migration
+//! note).
+
+pub mod codec;
+mod graph;
+mod planner;
+
+use std::cell::RefCell;
+use std::marker::PhantomData;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use crate::coordinator::Services;
+use crate::error::{Error, Result};
+use crate::mapreduce::{
+    FaultInjector, InputSplit, Mapper, Partitioner, Reducer, ShuffleConfig, TaskContext,
+    Values, KV,
+};
+use crate::table::Table;
+
+use graph::{Graph, LogicalOp, Sink, SinkKind, TablePutMapper};
+
+pub use codec::{read_varint, write_varint, KvCodec, VarU64};
+pub use graph::{Locality, NodeId};
+pub use planner::{
+    decode_staged, Plan, PipelineRun, PlanStats, Planner, StageStats, StageSummary,
+    STAGED_RECORDS_PER_SPLIT,
+};
+
+/// A dataflow pipeline under construction: a shared logical graph that
+/// [`Dataset`] handles append operators to.
+pub struct Pipeline {
+    graph: Rc<RefCell<Graph>>,
+}
+
+impl Pipeline {
+    /// New empty pipeline. The name prefixes job names and the DFS staging
+    /// directory (`/dataflow/<name>/…`).
+    pub fn new(name: &str) -> Self {
+        Self { graph: Rc::new(RefCell::new(Graph::new(name))) }
+    }
+
+    fn add_source<K: KvCodec, V: KvCodec>(
+        &self,
+        splits: Vec<Vec<(K, V)>>,
+        locality: Locality,
+    ) -> Dataset<K, V> {
+        let raw: Vec<InputSplit> = splits
+            .into_iter()
+            .map(|split| {
+                split
+                    .into_iter()
+                    .map(|(k, v)| (k.to_bytes(), v.to_bytes()))
+                    .collect()
+            })
+            .collect();
+        let node = self
+            .graph
+            .borrow_mut()
+            .add(None, LogicalOp::Source { splits: raw, locality });
+        Dataset { graph: self.graph.clone(), node, _t: PhantomData }
+    }
+
+    /// In-memory source with no placement preference.
+    pub fn from_records<K: KvCodec, V: KvCodec>(
+        &self,
+        splits: Vec<Vec<(K, V)>>,
+    ) -> Dataset<K, V> {
+        self.add_source(splits, Locality::None)
+    }
+
+    /// Source whose splits cover byte ranges of a DFS file: each split's
+    /// preferred hosts are the replica nodes of its ranges' blocks
+    /// (resolved at run time). `ranges[i]` lists the (possibly several)
+    /// byte ranges split `i` covers.
+    pub fn read_dfs<K: KvCodec, V: KvCodec>(
+        &self,
+        path: &str,
+        splits: Vec<Vec<(K, V)>>,
+        ranges: Vec<Vec<(usize, usize)>>,
+    ) -> Dataset<K, V> {
+        self.add_source(
+            splits,
+            Locality::DfsRanges { path: path.to_string(), ranges },
+        )
+    }
+
+    /// Source whose splits are anchored at table row keys: each split's
+    /// preferred host is the slave serving the region that owns
+    /// `anchor_keys[i]` (HBase-style co-location, resolved at run time).
+    pub fn read_table<K: KvCodec, V: KvCodec>(
+        &self,
+        table: &Arc<Table>,
+        splits: Vec<Vec<(K, V)>>,
+        anchor_keys: Vec<Vec<u8>>,
+    ) -> Dataset<K, V> {
+        self.add_source(
+            splits,
+            Locality::TableKeys { table: table.clone(), keys: anchor_keys },
+        )
+    }
+
+    /// Override the shuffle knobs for every job this pipeline launches.
+    pub fn shuffle_config(&self, cfg: ShuffleConfig) {
+        self.graph.borrow_mut().shuffle = Some(cfg);
+    }
+
+    /// Max task attempts for every job this pipeline launches.
+    pub fn max_attempts(&self, n: usize) {
+        self.graph.borrow_mut().max_attempts = Some(n);
+    }
+
+    /// Install a fault injector on every job this pipeline launches.
+    pub fn fault_injector(&self, f: FaultInjector) {
+        self.graph.borrow_mut().fault = Some(f);
+    }
+
+    /// Hand the logical DAG to the [`Planner`]: topological order + map
+    /// fusion. The plan can be inspected ([`Plan::explain`],
+    /// [`Plan::stage_summaries`]) before running.
+    pub fn plan(self) -> Result<Plan> {
+        let graph = Rc::try_unwrap(self.graph)
+            .map_err(|_| {
+                Error::MapReduce(
+                    "dataflow: pipeline still has live datasets — finish every \
+                     chain with a sink before planning"
+                        .into(),
+                )
+            })?
+            .into_inner();
+        Planner::plan(graph)
+    }
+
+    /// Plan and execute on the services.
+    pub fn run(self, services: &Services) -> Result<PipelineRun> {
+        self.plan()?.run(services)
+    }
+}
+
+/// Typed emitter handed to map and reduce functions. Wraps the engine's
+/// [`TaskContext`]: emitted records are encoded via [`KvCodec`], counters
+/// pass straight through (cost-model hooks like `COMPUTE_US` and
+/// `EXTRA_INPUT_BYTES` keep working).
+pub struct Emit<'a, K: KvCodec, V: KvCodec> {
+    ctx: &'a mut TaskContext,
+    _t: PhantomData<fn(K, V)>,
+}
+
+impl<K: KvCodec, V: KvCodec> Emit<'_, K, V> {
+    /// Emit one typed record.
+    pub fn emit(&mut self, key: K, value: V) {
+        self.ctx.emit(key.to_bytes(), value.to_bytes());
+    }
+
+    /// Bump a job counter (user counters and engine cost hooks alike).
+    pub fn incr(&mut self, name: &str, delta: u64) {
+        self.ctx.incr(name, delta);
+    }
+}
+
+/// Typed streaming view of one key group's values (wraps the engine's
+/// [`Values`] stream — a group is never materialized).
+pub struct Group<'a, V: KvCodec> {
+    values: &'a mut dyn Values,
+    _t: PhantomData<fn() -> V>,
+}
+
+impl<V: KvCodec> Group<'_, V> {
+    /// The next value of the group, or `None` when the group is done.
+    pub fn next_value(&mut self) -> Option<V> {
+        self.values.next_value().map(V::decode)
+    }
+}
+
+/// Adapts a typed map closure to the engine's byte-level [`Mapper`].
+struct TypedMapper<K, V, K2, V2, F> {
+    f: F,
+    _t: PhantomData<fn(K, V) -> (K2, V2)>,
+}
+
+impl<K, V, K2, V2, F> Mapper for TypedMapper<K, V, K2, V2, F>
+where
+    K: KvCodec,
+    V: KvCodec,
+    K2: KvCodec,
+    V2: KvCodec,
+    F: Fn(K, V, &mut Emit<'_, K2, V2>) -> Result<()> + Send + Sync,
+{
+    fn map(&self, key: &[u8], value: &[u8], ctx: &mut TaskContext) -> Result<()> {
+        let mut out = Emit { ctx, _t: PhantomData };
+        (self.f)(K::decode(key), V::decode(value), &mut out)
+    }
+}
+
+/// Adapts a typed reduce closure to the engine's byte-level [`Reducer`].
+struct TypedReducer<K, V, K2, V2, F> {
+    f: F,
+    _t: PhantomData<fn(K, V) -> (K2, V2)>,
+}
+
+impl<K, V, K2, V2, F> Reducer for TypedReducer<K, V, K2, V2, F>
+where
+    K: KvCodec,
+    V: KvCodec,
+    K2: KvCodec,
+    V2: KvCodec,
+    F: Fn(K, &mut Group<'_, V>, &mut Emit<'_, K2, V2>) -> Result<()> + Send + Sync,
+{
+    fn reduce(
+        &self,
+        key: &[u8],
+        values: &mut dyn Values,
+        ctx: &mut TaskContext,
+    ) -> Result<()> {
+        let mut group = Group { values, _t: PhantomData };
+        let mut out = Emit { ctx, _t: PhantomData };
+        (self.f)(K::decode(key), &mut group, &mut out)
+    }
+}
+
+/// A typed handle to one logical dataset. Handles are consumed by value,
+/// so every dataset has exactly one consumer and the logical graph stays a
+/// chain forest the planner can fuse aggressively.
+pub struct Dataset<K: KvCodec, V: KvCodec> {
+    graph: Rc<RefCell<Graph>>,
+    node: NodeId,
+    _t: PhantomData<fn(K, V)>,
+}
+
+impl<K: KvCodec, V: KvCodec> Dataset<K, V> {
+    /// Record-at-a-time transform; fusable with adjacent map stages.
+    pub fn map_kv<K2, V2, F>(self, name: &str, f: F) -> Dataset<K2, V2>
+    where
+        K2: KvCodec,
+        V2: KvCodec,
+        F: Fn(K, V, &mut Emit<'_, K2, V2>) -> Result<()> + Send + Sync + 'static,
+    {
+        let mapper: Arc<dyn Mapper> =
+            Arc::new(TypedMapper::<K, V, K2, V2, F> { f, _t: PhantomData });
+        let node = self
+            .graph
+            .borrow_mut()
+            .add(Some(self.node), LogicalOp::Map { name: name.to_string(), mapper });
+        Dataset { graph: self.graph, node, _t: PhantomData }
+    }
+
+    /// Start a shuffle boundary: group records by key, then reduce each
+    /// group. Configure with [`GroupReduceBuilder::reducers`],
+    /// [`GroupReduceBuilder::combine`] and
+    /// [`GroupReduceBuilder::partitioner`]; finish with
+    /// [`GroupReduceBuilder::reduce`].
+    pub fn group_reduce(self, name: &str) -> GroupReduceBuilder<K, V> {
+        GroupReduceBuilder {
+            graph: self.graph,
+            input: self.node,
+            name: name.to_string(),
+            num_reducers: 1,
+            combiner: None,
+            partitioner: None,
+            _t: PhantomData,
+        }
+    }
+
+    /// Sink: put every record into the table. Runs as a fusable map stage
+    /// (like the hand-wired table-writing mappers did), charging
+    /// `EXTRA_OUTPUT_BYTES` per put and emitting nothing.
+    pub fn write_table(self, table: &Arc<Table>) {
+        let mapper: Arc<dyn Mapper> = Arc::new(TablePutMapper { table: table.clone() });
+        self.graph.borrow_mut().add(
+            Some(self.node),
+            LogicalOp::Map { name: format!("table:{}", table.name), mapper },
+        );
+    }
+
+    /// Sink: write the materialized records to a DFS file (varint framing;
+    /// read back with [`decode_staged`]).
+    pub fn write_dfs(self, path: &str) {
+        self.graph.borrow_mut().sinks.push(Sink {
+            node: self.node,
+            kind: SinkKind::WriteDfs { path: path.to_string() },
+        });
+    }
+
+    /// Sink: keep the materialized records; retrieve them typed from the
+    /// [`PipelineRun`] after `run`.
+    pub fn collect(self) -> Collected<K, V> {
+        self.graph
+            .borrow_mut()
+            .sinks
+            .push(Sink { node: self.node, kind: SinkKind::Collect });
+        Collected { node: self.node, _t: PhantomData }
+    }
+}
+
+/// Builder for a `group_reduce` shuffle boundary.
+pub struct GroupReduceBuilder<K: KvCodec, V: KvCodec> {
+    graph: Rc<RefCell<Graph>>,
+    input: NodeId,
+    name: String,
+    num_reducers: usize,
+    combiner: Option<Arc<dyn Reducer>>,
+    partitioner: Option<Arc<dyn Partitioner>>,
+    _t: PhantomData<fn(K, V)>,
+}
+
+impl<K: KvCodec, V: KvCodec> GroupReduceBuilder<K, V> {
+    /// Number of reduce partitions (default 1).
+    pub fn reducers(mut self, n: usize) -> Self {
+        self.num_reducers = n.max(1);
+        self
+    }
+
+    /// Replace the default hash partitioner.
+    pub fn partitioner(mut self, p: Arc<dyn Partitioner>) -> Self {
+        self.partitioner = Some(p);
+        self
+    }
+
+    /// Typed map-side combiner (same key/value types in and out).
+    pub fn combine<F>(mut self, f: F) -> Self
+    where
+        F: Fn(K, &mut Group<'_, V>, &mut Emit<'_, K, V>) -> Result<()>
+            + Send
+            + Sync
+            + 'static,
+    {
+        self.combiner =
+            Some(Arc::new(TypedReducer::<K, V, K, V, F> { f, _t: PhantomData }));
+        self
+    }
+
+    /// Finish the boundary with the reduce function.
+    pub fn reduce<K2, V2, F>(self, f: F) -> Dataset<K2, V2>
+    where
+        K2: KvCodec,
+        V2: KvCodec,
+        F: Fn(K, &mut Group<'_, V>, &mut Emit<'_, K2, V2>) -> Result<()>
+            + Send
+            + Sync
+            + 'static,
+    {
+        let GroupReduceBuilder {
+            graph,
+            input,
+            name,
+            num_reducers,
+            combiner,
+            partitioner,
+            _t,
+        } = self;
+        let reducer: Arc<dyn Reducer> =
+            Arc::new(TypedReducer::<K, V, K2, V2, F> { f, _t: PhantomData });
+        let node = graph.borrow_mut().add(
+            Some(input),
+            LogicalOp::GroupReduce { name, reducer, combiner, partitioner, num_reducers },
+        );
+        Dataset { graph, node, _t: PhantomData }
+    }
+}
+
+/// Handle to a collected dataset: redeem it against the [`PipelineRun`]
+/// returned by `run` to get the typed, globally key-sorted records.
+pub struct Collected<K: KvCodec, V: KvCodec> {
+    node: NodeId,
+    _t: PhantomData<fn() -> (K, V)>,
+}
+
+impl<K: KvCodec, V: KvCodec> Collected<K, V> {
+    /// Decode and return the collected records, key-sorted.
+    pub fn take(&self, run: &mut PipelineRun) -> Vec<(K, V)> {
+        run.take_sorted(self.node)
+            .into_iter()
+            .map(|(k, v)| (K::decode(&k), V::decode(&v)))
+            .collect()
+    }
+
+    /// The raw byte records, key-sorted (byte-identity tests).
+    pub fn take_raw(&self, run: &mut PipelineRun) -> Vec<KV> {
+        run.take_sorted(self.node)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::runtime::KernelRuntime;
+
+    fn services(m: usize) -> Services {
+        Services::new(Cluster::new(m), Arc::new(KernelRuntime::native()))
+    }
+
+    fn word_splits() -> Vec<Vec<(u64, Vec<u8>)>> {
+        vec![
+            vec![
+                (0u64, b"the quick brown fox".to_vec()),
+                (1u64, b"the lazy dog".to_vec()),
+            ],
+            vec![(2u64, b"the fox jumps over the dog".to_vec())],
+        ]
+    }
+
+    #[test]
+    fn typed_wordcount_end_to_end() {
+        let svc = services(3);
+        let p = Pipeline::new("wordcount");
+        let counts = p
+            .from_records(word_splits())
+            .map_kv("tokenize", |_line: u64, text: Vec<u8>, out| {
+                for w in std::str::from_utf8(&text).unwrap().split_whitespace() {
+                    out.emit(w.as_bytes().to_vec(), 1.0f64);
+                }
+                Ok(())
+            })
+            .group_reduce("count")
+            .reducers(3)
+            .reduce(|word: Vec<u8>, values: &mut Group<'_, f64>, out| {
+                let mut total = 0.0;
+                while let Some(v) = values.next_value() {
+                    total += v;
+                }
+                out.emit(word, total);
+                Ok(())
+            })
+            .collect();
+        let mut run = p.run(&svc).unwrap();
+        assert_eq!(run.stats.jobs(), 1, "map + reduce fuse into one job");
+        let result: std::collections::HashMap<String, f64> = counts
+            .take(&mut run)
+            .into_iter()
+            .map(|(k, v)| (String::from_utf8(k).unwrap(), v))
+            .collect();
+        assert_eq!(result["the"], 4.0);
+        assert_eq!(result["fox"], 2.0);
+        assert_eq!(result["dog"], 2.0);
+    }
+
+    #[test]
+    fn combiner_shrinks_shuffle_without_changing_answer() {
+        let svc = services(2);
+        let run_it = |with_combiner: bool| {
+            let p = Pipeline::new("wc");
+            let mut g = p
+                .from_records(word_splits())
+                .map_kv("tokenize", |_k: u64, text: Vec<u8>, out| {
+                    for w in std::str::from_utf8(&text).unwrap().split_whitespace() {
+                        out.emit(w.as_bytes().to_vec(), 1.0f64);
+                    }
+                    Ok(())
+                })
+                .group_reduce("count")
+                .reducers(2);
+            if with_combiner {
+                g = g.combine(|w: Vec<u8>, vs: &mut Group<'_, f64>, out| {
+                    let mut t = 0.0;
+                    while let Some(v) = vs.next_value() {
+                        t += v;
+                    }
+                    out.emit(w, t);
+                    Ok(())
+                });
+            }
+            let counts = g.reduce(|w: Vec<u8>, vs: &mut Group<'_, f64>, out| {
+                let mut t = 0.0;
+                while let Some(v) = vs.next_value() {
+                    t += v;
+                }
+                out.emit(w, t);
+                Ok(())
+            });
+            let handle = counts.collect();
+            let mut run = p.run(&svc).unwrap();
+            let shuffle: u64 =
+                run.stats.stages.iter().map(|s| s.stats.shuffle_bytes).sum();
+            (handle.take_raw(&mut run), shuffle)
+        };
+        let (plain, plain_shuffle) = run_it(false);
+        let (combined, combined_shuffle) = run_it(true);
+        assert_eq!(plain, combined, "combiner must not change the answer");
+        assert!(
+            combined_shuffle < plain_shuffle,
+            "combiner should shrink shuffle: {combined_shuffle} vs {plain_shuffle}"
+        );
+    }
+
+    #[test]
+    fn map_only_chain_with_write_dfs_sink() {
+        let svc = services(2);
+        let p = Pipeline::new("sink");
+        p.from_records(vec![vec![(1u64, 10u64), (2u64, 20u64)]])
+            .map_kv("double", |k: u64, v: u64, out| {
+                out.emit(k, v * 2);
+                Ok(())
+            })
+            .write_dfs("/out/doubled");
+        let run = p.run(&svc).unwrap();
+        assert_eq!(run.stats.jobs(), 1);
+        let raw = svc.dfs.read_file("/out/doubled").unwrap();
+        let records = decode_staged(&raw).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(u64::decode(&records[0].1), 20);
+    }
+
+    #[test]
+    fn write_table_fuses_and_lands_rows() {
+        let svc = services(2);
+        let table = svc.tables.create("T", 2).unwrap();
+        let p = Pipeline::new("tput");
+        p.from_records(vec![vec![(3u64, ()), (4u64, ())]])
+            .map_kv("emit-rows", |k: u64, _: (), out| {
+                out.emit(k, vec![k as u8]);
+                Ok(())
+            })
+            .write_table(&table);
+        let plan = p.plan().unwrap();
+        assert_eq!(plan.job_count(), 1, "map + table-put fuse into one job");
+        assert_eq!(plan.stage_summaries()[0].fused_maps, 2);
+        let run = plan.run(&svc).unwrap();
+        assert_eq!(run.stats.stages[0].fused_maps, 2);
+        assert_eq!(
+            table.get(&3u64.to_bytes()).unwrap(),
+            Some(vec![3u8]),
+            "row must land in the table"
+        );
+        assert!(
+            run.stats.counter(crate::mapreduce::names::EXTRA_OUTPUT_BYTES) > 0,
+            "table writes must be charged"
+        );
+    }
+
+    #[test]
+    fn unfinished_dataset_fails_plan() {
+        let p = Pipeline::new("dangling");
+        let ds = p.from_records(vec![vec![(1u64, ())]]);
+        let err = p.plan().unwrap_err();
+        assert!(err.to_string().contains("live datasets"), "{err}");
+        drop(ds);
+    }
+
+    #[test]
+    fn multi_job_chain_stages_intermediates_in_dfs() {
+        let svc = services(2);
+        let p = Pipeline::new("chain");
+        let sums = p
+            .from_records(vec![vec![(1u64, 1.0f64), (2u64, 2.0), (3u64, 3.0)]])
+            .group_reduce("first")
+            .reducers(2)
+            .reduce(|k: u64, vs: &mut Group<'_, f64>, out| {
+                let mut t = 0.0;
+                while let Some(v) = vs.next_value() {
+                    t += v;
+                }
+                out.emit(k % 2, t);
+                Ok(())
+            })
+            .group_reduce("second")
+            .reducers(2)
+            .reduce(|k: u64, vs: &mut Group<'_, f64>, out| {
+                let mut t = 0.0;
+                while let Some(v) = vs.next_value() {
+                    t += v;
+                }
+                out.emit(k, t);
+                Ok(())
+            })
+            .collect();
+        let mut run = p.run(&svc).unwrap();
+        assert_eq!(run.stats.jobs(), 2);
+        assert!(run.stats.staged_bytes > 0, "intermediate must be staged");
+        assert!(
+            svc.dfs.exists("/dataflow/chain/stage-0"),
+            "staged file in DFS: {:?}",
+            svc.dfs.list()
+        );
+        let result = sums.take(&mut run);
+        // keys 1,3 -> bucket 1 (sum 4), key 2 -> bucket 0 (sum 2).
+        assert_eq!(result, vec![(0, 2.0), (1, 4.0)]);
+    }
+}

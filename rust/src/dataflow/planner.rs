@@ -1,0 +1,765 @@
+//! The DAG planner: logical graph → fused MapReduce jobs.
+//!
+//! [`Planner::plan`] walks the logical nodes in topological order (node-id
+//! order, by construction) and groups them into **stages**, each of which
+//! becomes exactly one job on the existing engine:
+//!
+//! - a `Source` opens a new stage;
+//! - a `Map` whose upstream is the open tail of a stage **fuses** into it
+//!   (so `map → map → group` launches one job, not three);
+//! - a `GroupReduce` closes the stage it fuses into (the shuffle is a
+//!   stage boundary); operators arriving after a closed stage start a new
+//!   one, fed by the previous stage's **staged intermediate**.
+//!
+//! Between jobs, [`Plan::run`] materializes the upstream stage's output
+//! into the DFS (varint-framed records) and re-splits it; because DFS
+//! block placement is rack-aware, the downstream job's `split_hosts` come
+//! for free from [`crate::dfs::Dfs::range_hosts`]. Source locality
+//! ([`Locality`]) is resolved the same way at run time, so plans can be
+//! built and explained without services.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::coordinator::Services;
+use crate::error::{Error, Result};
+use crate::mapreduce::{
+    self, Counters, FaultInjector, InputSplit, JobBuilder, JobStats, Mapper, Reducer,
+    ShuffleConfig, KV,
+};
+use crate::util::fmt::human_bytes;
+
+use super::codec::{read_varint, write_varint};
+use super::graph::{
+    FusedMapper, Graph, IdentityMapper, Locality, LogicalOp, NodeId, Sink, SinkKind,
+};
+
+/// Records per split when a staged intermediate is re-split for the next
+/// job (the dataflow analogue of an input-format split size).
+pub const STAGED_RECORDS_PER_SPLIT: usize = 1024;
+
+/// Where a planned stage reads its input from.
+enum StageInput {
+    /// The stage's own source splits.
+    Source,
+    /// The materialized output of an earlier stage (by stage index).
+    Staged(usize),
+}
+
+/// The reduce side of a stage (when it ends at a shuffle boundary).
+struct ReduceSpec {
+    name: String,
+    reducer: Arc<dyn Reducer>,
+    combiner: Option<Arc<dyn Reducer>>,
+    partitioner: Option<Arc<dyn mapreduce::Partitioner>>,
+    num_reducers: usize,
+}
+
+/// One planned stage == one MapReduce job.
+struct PlannedStage {
+    name: String,
+    input: StageInput,
+    splits: Vec<InputSplit>,
+    locality: Locality,
+    maps: Vec<(String, Arc<dyn Mapper>)>,
+    reduce: Option<ReduceSpec>,
+}
+
+/// Compact public view of one planned stage (tests, tooling).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageSummary {
+    /// Stage (and job) name.
+    pub name: String,
+    /// Number of logical map operators fused into the stage.
+    pub fused_maps: usize,
+    /// Whether the stage ends in a shuffle + reduce.
+    pub has_reduce: bool,
+    /// Source splits (0 when the stage reads a staged intermediate).
+    pub source_splits: usize,
+}
+
+/// Statistics of one executed stage.
+#[derive(Debug, Clone, Default)]
+pub struct StageStats {
+    /// Stage name.
+    pub name: String,
+    /// Logical map operators fused into the stage's single job.
+    pub fused_maps: usize,
+    /// The underlying job's cost/timing profile.
+    pub stats: JobStats,
+    /// The underlying job's merged counters.
+    pub counters: Counters,
+}
+
+/// Per-run statistics of a planned pipeline: one entry per launched job
+/// plus the bytes staged between jobs. Absorbed into
+/// [`crate::coordinator::PhaseStats`] via `absorb_run`.
+#[derive(Debug, Clone, Default)]
+pub struct PlanStats {
+    /// Pipeline name.
+    pub pipeline: String,
+    /// Per-stage stats, in launch order.
+    pub stages: Vec<StageStats>,
+    /// Intermediate bytes written to the DFS between jobs.
+    pub staged_bytes: u64,
+}
+
+impl PlanStats {
+    /// Jobs the plan launched.
+    pub fn jobs(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// One counter summed across all stages.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.stages.iter().map(|s| s.counters.get(name)).sum()
+    }
+
+    /// All stage counters merged (the phase-level counter set).
+    pub fn merged_counters(&self) -> Counters {
+        let mut c = Counters::default();
+        for s in &self.stages {
+            c.merge(&s.counters);
+        }
+        c
+    }
+
+    /// Sum of per-job virtual times.
+    pub fn total_virtual_s(&self) -> f64 {
+        self.stages.iter().map(|s| s.stats.virtual_time_s).sum()
+    }
+
+    /// Sum of per-job wall times.
+    pub fn total_wall_s(&self) -> f64 {
+        self.stages.iter().map(|s| s.stats.wall_time_s).sum()
+    }
+
+    /// Shuffle lifecycle summary across the whole run (same shape the
+    /// phases report).
+    pub fn shuffle_summary(&self) -> crate::metrics::ShuffleSummary {
+        crate::metrics::ShuffleSummary::from_counters(&self.merged_counters())
+    }
+}
+
+/// Result of running a plan: stats plus the collected sink outputs.
+#[derive(Default)]
+pub struct PipelineRun {
+    /// Per-stage stats of the run.
+    pub stats: PlanStats,
+    collected: HashMap<NodeId, Vec<Vec<KV>>>,
+}
+
+impl PipelineRun {
+    /// Remove and return a collected node's records, flattened across
+    /// partitions and globally key-sorted (the dataflow equivalent of
+    /// [`crate::mapreduce::JobResult::sorted_records`]).
+    pub fn take_sorted(&mut self, node: NodeId) -> Vec<KV> {
+        let mut all: Vec<KV> = self
+            .collected
+            .remove(&node)
+            .unwrap_or_default()
+            .into_iter()
+            .flatten()
+            .collect();
+        all.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+        all
+    }
+}
+
+/// The planner: turns a logical [`Graph`] into an executable [`Plan`].
+pub struct Planner;
+
+impl Planner {
+    /// Topologically order the logical nodes and fuse map chains into
+    /// stages (see module docs for the rules).
+    pub(crate) fn plan(graph: Graph) -> Result<Plan> {
+        let node_count = graph.nodes.len();
+        let mut stages: Vec<PlannedStage> = Vec::new();
+        // Stage producing each node's output, and whether it can still
+        // absorb operators (no reduce yet) — `tail[s]` guards against an
+        // op attaching to the middle of a fused chain.
+        let mut stage_of: Vec<usize> = vec![usize::MAX; node_count];
+        let mut open: Vec<bool> = Vec::new();
+        let mut tail: Vec<NodeId> = Vec::new();
+
+        for (id, node) in graph.nodes.into_iter().enumerate() {
+            match node.op {
+                LogicalOp::Source { splits, locality } => {
+                    stages.push(PlannedStage {
+                        name: String::from("source"),
+                        input: StageInput::Source,
+                        splits,
+                        locality,
+                        maps: Vec::new(),
+                        reduce: None,
+                    });
+                    open.push(true);
+                    tail.push(id);
+                    stage_of[id] = stages.len() - 1;
+                }
+                LogicalOp::Map { name, mapper } => {
+                    let p = node
+                        .input
+                        .ok_or_else(|| Error::MapReduce("dataflow: map without input".into()))?;
+                    let s = stage_of[p];
+                    if open[s] && tail[s] == p {
+                        stages[s].maps.push((name, mapper));
+                        tail[s] = id;
+                        stage_of[id] = s;
+                    } else {
+                        stages.push(PlannedStage {
+                            name: String::new(),
+                            input: StageInput::Staged(s),
+                            splits: Vec::new(),
+                            locality: Locality::None,
+                            maps: vec![(name, mapper)],
+                            reduce: None,
+                        });
+                        open.push(true);
+                        tail.push(id);
+                        stage_of[id] = stages.len() - 1;
+                    }
+                }
+                LogicalOp::GroupReduce {
+                    name,
+                    reducer,
+                    combiner,
+                    partitioner,
+                    num_reducers,
+                } => {
+                    let p = node.input.ok_or_else(|| {
+                        Error::MapReduce("dataflow: group_reduce without input".into())
+                    })?;
+                    let spec = ReduceSpec { name, reducer, combiner, partitioner, num_reducers };
+                    let s = stage_of[p];
+                    if open[s] && tail[s] == p {
+                        stages[s].reduce = Some(spec);
+                        open[s] = false;
+                        tail[s] = id;
+                        stage_of[id] = s;
+                    } else {
+                        stages.push(PlannedStage {
+                            name: String::new(),
+                            input: StageInput::Staged(s),
+                            splits: Vec::new(),
+                            locality: Locality::None,
+                            maps: Vec::new(),
+                            reduce: Some(spec),
+                        });
+                        open.push(false);
+                        tail.push(id);
+                        stage_of[id] = stages.len() - 1;
+                    }
+                }
+            }
+        }
+
+        // Stage/job names: first fused map, else the reducer, else "source".
+        for stage in &mut stages {
+            stage.name = stage
+                .maps
+                .first()
+                .map(|(n, _)| n.clone())
+                .or_else(|| stage.reduce.as_ref().map(|r| r.name.clone()))
+                .unwrap_or_else(|| "source".to_string());
+        }
+
+        let sinks = graph
+            .sinks
+            .into_iter()
+            .map(|sink| (stage_of[sink.node], sink))
+            .collect();
+        Ok(Plan {
+            name: graph.name,
+            stages,
+            sinks,
+            max_attempts: graph.max_attempts,
+            shuffle: graph.shuffle,
+            fault: graph.fault,
+        })
+    }
+}
+
+/// An executable plan: the fused stages in launch order.
+pub struct Plan {
+    name: String,
+    stages: Vec<PlannedStage>,
+    sinks: Vec<(usize, Sink)>,
+    max_attempts: Option<usize>,
+    shuffle: Option<ShuffleConfig>,
+    fault: Option<FaultInjector>,
+}
+
+impl Plan {
+    /// Number of jobs this plan will launch.
+    pub fn job_count(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Compact per-stage view (fusion decisions, split counts).
+    pub fn stage_summaries(&self) -> Vec<StageSummary> {
+        self.stages
+            .iter()
+            .map(|s| StageSummary {
+                name: s.name.clone(),
+                fused_maps: s.maps.len(),
+                has_reduce: s.reduce.is_some(),
+                source_splits: s.splits.len(),
+            })
+            .collect()
+    }
+
+    /// Human-readable rendering of the planned DAG: stages, fusion
+    /// decisions and estimated shuffle bytes — what `psch run
+    /// --explain-plan` prints. Estimates assume map output ≈ map input
+    /// (intermediate sizes are unknowable before running).
+    pub fn explain(&self) -> String {
+        let mut out = format!(
+            "plan {}: {} job{}\n",
+            self.name,
+            self.stages.len(),
+            if self.stages.len() == 1 { "" } else { "s" }
+        );
+        // Estimated input bytes per stage, propagated stage to stage.
+        let mut est: Vec<u64> = Vec::new();
+        for (i, stage) in self.stages.iter().enumerate() {
+            let (input_desc, input_bytes) = match stage.input {
+                StageInput::Source => {
+                    let bytes: u64 = stage
+                        .splits
+                        .iter()
+                        .flatten()
+                        .map(|(k, v)| (k.len() + v.len()) as u64)
+                        .sum();
+                    let place = match &stage.locality {
+                        Locality::None => "memory".to_string(),
+                        Locality::DfsRanges { path, .. } => format!("dfs:{path}"),
+                        Locality::TableKeys { table, .. } => format!("table:{}", table.name),
+                    };
+                    (format!("{} splits from {place}", stage.splits.len()), bytes)
+                }
+                StageInput::Staged(s) => {
+                    (format!("staged output of stage {s} (re-split via DFS)"), est[s])
+                }
+            };
+            est.push(input_bytes);
+            out.push_str(&format!("  [{i}] {} — {input_desc}\n", stage.name));
+            if !stage.maps.is_empty() {
+                let chain: Vec<&str> =
+                    stage.maps.iter().map(|(n, _)| n.as_str()).collect();
+                let fused = if stage.maps.len() > 1 {
+                    format!(" ({} ops fused into one job)", stage.maps.len())
+                } else {
+                    String::new()
+                };
+                out.push_str(&format!(
+                    "      map chain: {}{fused}\n",
+                    chain.join(" → ")
+                ));
+            }
+            match &stage.reduce {
+                Some(r) => out.push_str(&format!(
+                    "      reduce: {} ×{}{}; est. shuffle ≤ {}\n",
+                    r.name,
+                    r.num_reducers,
+                    if r.combiner.is_some() { " (combiner)" } else { "" },
+                    human_bytes(input_bytes)
+                )),
+                None => out.push_str("      map-only (no shuffle)\n"),
+            }
+            let sink_names: Vec<&str> = self
+                .sinks
+                .iter()
+                .filter(|(s, _)| *s == i)
+                .map(|(_, sink)| match &sink.kind {
+                    SinkKind::Collect => "collect",
+                    SinkKind::WriteDfs { path } => path.as_str(),
+                })
+                .collect();
+            if !sink_names.is_empty() {
+                out.push_str(&format!("      sinks: {}\n", sink_names.join(", ")));
+            }
+        }
+        out
+    }
+
+    /// Execute the plan on the services: run each stage as one job, stage
+    /// intermediates between jobs in the DFS, feed sinks.
+    // Index-based loop: the body needs disjoint borrows of `self.stages[i]`
+    // (splits are taken out) alongside the graph-level knobs.
+    #[allow(clippy::needless_range_loop)]
+    pub fn run(mut self, services: &Services) -> Result<PipelineRun> {
+        let mut outputs: Vec<Option<Vec<Vec<KV>>>> = Vec::with_capacity(self.stages.len());
+        let mut stats = PlanStats {
+            pipeline: self.name.clone(),
+            ..PlanStats::default()
+        };
+        let nstages = self.stages.len();
+        for i in 0..nstages {
+            let (splits, hosts) = match self.stages[i].input {
+                StageInput::Source => {
+                    let splits = std::mem::take(&mut self.stages[i].splits);
+                    let hosts =
+                        resolve_hosts(&self.stages[i].locality, services, splits.len())?;
+                    (splits, hosts)
+                }
+                StageInput::Staged(s) => {
+                    let parts = outputs[s].as_ref().ok_or_else(|| {
+                        Error::MapReduce(format!(
+                            "dataflow: stage {i} input (stage {s}) was not materialized"
+                        ))
+                    })?;
+                    let (raw, framed) = encode_staged(parts);
+                    let path = format!("/dataflow/{}/stage-{s}", self.name);
+                    services.dfs.write_file(&path, &raw)?;
+                    stats.staged_bytes += raw.len() as u64;
+                    let mut splits = Vec::with_capacity(framed.len());
+                    let mut hosts = Vec::with_capacity(framed.len());
+                    for (split, (lo, hi)) in framed {
+                        hosts.push(services.dfs.range_hosts(&path, lo, hi)?);
+                        splits.push(split);
+                    }
+                    (splits, hosts)
+                }
+            };
+
+            let stage = &self.stages[i];
+            let mapper: Arc<dyn Mapper> = match stage.maps.len() {
+                0 => Arc::new(IdentityMapper),
+                1 => stage.maps[0].1.clone(),
+                _ => Arc::new(FusedMapper {
+                    mappers: stage.maps.iter().map(|(_, m)| m.clone()).collect(),
+                }),
+            };
+            let job_name = format!("{}:{}", self.name, stage.name);
+            let mut builder =
+                JobBuilder::new(&job_name, splits, mapper).split_hosts(hosts);
+            if let Some(r) = &stage.reduce {
+                builder = builder.reducer(r.reducer.clone(), r.num_reducers);
+                if let Some(c) = &r.combiner {
+                    builder = builder.combiner(c.clone());
+                }
+                if let Some(p) = &r.partitioner {
+                    builder = builder.partitioner(p.clone());
+                }
+            }
+            if let Some(n) = self.max_attempts {
+                builder = builder.max_attempts(n);
+            }
+            if let Some(cfg) = self.shuffle {
+                builder = builder.shuffle_config(cfg);
+            }
+            if let Some(f) = &self.fault {
+                builder = builder.fault_injector(f.clone());
+            }
+
+            let result = mapreduce::run(&services.cluster, &builder.build())?;
+            stats.stages.push(StageStats {
+                name: stage.name.clone(),
+                fused_maps: stage.maps.len(),
+                stats: result.stats,
+                counters: result.counters,
+            });
+            outputs.push(Some(result.output));
+        }
+
+        let mut collected = HashMap::new();
+        for (stage_idx, sink) in &self.sinks {
+            match &sink.kind {
+                SinkKind::Collect => {
+                    if let Some(out) = outputs[*stage_idx].take() {
+                        collected.insert(sink.node, out);
+                    }
+                }
+                SinkKind::WriteDfs { path } => {
+                    if let Some(parts) = outputs[*stage_idx].as_ref() {
+                        let raw = encode_staged_raw(parts);
+                        services.dfs.write_file(path, &raw)?;
+                    }
+                }
+            }
+        }
+        Ok(PipelineRun { stats, collected })
+    }
+}
+
+/// Resolve a source's locality spec into per-split preferred hosts.
+fn resolve_hosts(
+    locality: &Locality,
+    services: &Services,
+    nsplits: usize,
+) -> Result<Vec<Vec<usize>>> {
+    match locality {
+        Locality::None => Ok(Vec::new()),
+        Locality::DfsRanges { path, ranges } => {
+            if ranges.len() != nsplits {
+                return Err(Error::MapReduce(format!(
+                    "dataflow: {} locality ranges for {nsplits} splits",
+                    ranges.len()
+                )));
+            }
+            let mut hosts = Vec::with_capacity(ranges.len());
+            for split_ranges in ranges {
+                let mut h = Vec::new();
+                for &(lo, hi) in split_ranges {
+                    h.extend(services.dfs.range_hosts(path, lo, hi)?);
+                }
+                h.sort_unstable();
+                h.dedup();
+                hosts.push(h);
+            }
+            Ok(hosts)
+        }
+        Locality::TableKeys { table, keys } => {
+            if keys.len() != nsplits {
+                return Err(Error::MapReduce(format!(
+                    "dataflow: {} locality keys for {nsplits} splits",
+                    keys.len()
+                )));
+            }
+            Ok(keys
+                .iter()
+                .map(|k| match table.key_slave(k) {
+                    Ok(slave) => vec![slave],
+                    Err(_) => Vec::new(),
+                })
+                .collect())
+        }
+    }
+}
+
+/// Append one varint-framed record.
+fn write_frame(raw: &mut Vec<u8>, k: &[u8], v: &[u8]) {
+    write_varint(k.len() as u64, raw);
+    raw.extend_from_slice(k);
+    write_varint(v.len() as u64, raw);
+    raw.extend_from_slice(v);
+}
+
+/// Serialize records into the staged/`write_dfs` encoding without the
+/// split chunking (sinks only need the bytes — no record clones).
+pub(crate) fn encode_staged_raw(parts: &[Vec<KV>]) -> Vec<u8> {
+    let mut raw = Vec::new();
+    for (k, v) in parts.iter().flatten() {
+        write_frame(&mut raw, k, v);
+    }
+    raw
+}
+
+/// Frame records into the staged-intermediate encoding (varint-length
+/// key/value pairs) and chunk them into splits of
+/// [`STAGED_RECORDS_PER_SPLIT`], tracking each split's byte range for
+/// locality resolution.
+pub(crate) fn encode_staged(
+    parts: &[Vec<KV>],
+) -> (Vec<u8>, Vec<(InputSplit, (usize, usize))>) {
+    let mut raw = Vec::new();
+    let mut framed = Vec::new();
+    let mut current: InputSplit = Vec::new();
+    let mut start = 0usize;
+    for (k, v) in parts.iter().flatten() {
+        write_frame(&mut raw, k, v);
+        current.push((k.clone(), v.clone()));
+        if current.len() == STAGED_RECORDS_PER_SPLIT {
+            framed.push((std::mem::take(&mut current), (start, raw.len())));
+            start = raw.len();
+        }
+    }
+    if !current.is_empty() {
+        framed.push((current, (start, raw.len())));
+    }
+    (raw, framed)
+}
+
+/// Read one varint, rejecting a buffer that ends mid-varint.
+fn read_varint_checked(b: &[u8]) -> Result<(u64, usize)> {
+    let (value, used) = read_varint(b);
+    if used == 0 || b[used - 1] & 0x80 != 0 {
+        return Err(Error::MapReduce("staged records: truncated varint".into()));
+    }
+    Ok((value, used))
+}
+
+/// Decode a staged-intermediate file (also the `write_dfs` sink format)
+/// back into records. Rejects truncated or non-staged input instead of
+/// panicking.
+pub fn decode_staged(bytes: &[u8]) -> Result<Vec<KV>> {
+    let mut b = bytes;
+    let mut out = Vec::new();
+    while !b.is_empty() {
+        let (klen, used) = read_varint_checked(b)?;
+        b = &b[used..];
+        let klen = klen as usize;
+        if klen > b.len() {
+            return Err(Error::MapReduce("staged records: truncated key".into()));
+        }
+        let k = b[..klen].to_vec();
+        b = &b[klen..];
+        let (vlen, used) = read_varint_checked(b)?;
+        b = &b[used..];
+        let vlen = vlen as usize;
+        if vlen > b.len() {
+            return Err(Error::MapReduce("staged records: truncated value".into()));
+        }
+        let v = b[..vlen].to_vec();
+        b = &b[vlen..];
+        out.push((k, v));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::FnMapper;
+    use crate::mapreduce::TaskContext;
+
+    fn noop_map() -> Arc<dyn Mapper> {
+        Arc::new(FnMapper(|_: &[u8], _: &[u8], _: &mut TaskContext| Ok(())))
+    }
+
+    fn noop_reduce() -> Arc<dyn Reducer> {
+        Arc::new(crate::mapreduce::FnReducer(
+            |_: &[u8], _: &mut dyn mapreduce::Values, _: &mut TaskContext| Ok(()),
+        ))
+    }
+
+    fn source(g: &mut Graph) -> NodeId {
+        g.add(
+            None,
+            LogicalOp::Source {
+                splits: vec![vec![(vec![1], vec![2])]],
+                locality: Locality::None,
+            },
+        )
+    }
+
+    fn map(g: &mut Graph, input: NodeId, name: &str) -> NodeId {
+        g.add(
+            Some(input),
+            LogicalOp::Map { name: name.into(), mapper: noop_map() },
+        )
+    }
+
+    fn group(g: &mut Graph, input: NodeId, name: &str) -> NodeId {
+        g.add(
+            Some(input),
+            LogicalOp::GroupReduce {
+                name: name.into(),
+                reducer: noop_reduce(),
+                combiner: None,
+                partitioner: None,
+                num_reducers: 2,
+            },
+        )
+    }
+
+    #[test]
+    fn map_chains_fuse_into_one_stage() {
+        let mut g = Graph::new("t");
+        let s = source(&mut g);
+        let m1 = map(&mut g, s, "a");
+        let m2 = map(&mut g, m1, "b");
+        let r = group(&mut g, m2, "c");
+        let _ = r;
+        let plan = Planner::plan(g).unwrap();
+        assert_eq!(plan.job_count(), 1, "map→map→group is one job");
+        let summaries = plan.stage_summaries();
+        assert_eq!(summaries[0].fused_maps, 2);
+        assert!(summaries[0].has_reduce);
+        assert_eq!(summaries[0].name, "a");
+    }
+
+    #[test]
+    fn shuffle_is_a_stage_boundary() {
+        let mut g = Graph::new("t");
+        let s = source(&mut g);
+        let m1 = map(&mut g, s, "a");
+        let r1 = group(&mut g, m1, "c1");
+        let m2 = map(&mut g, r1, "d");
+        let r2 = group(&mut g, m2, "c2");
+        let _ = r2;
+        let plan = Planner::plan(g).unwrap();
+        assert_eq!(plan.job_count(), 2, "two shuffles = two jobs");
+        let summaries = plan.stage_summaries();
+        assert_eq!(summaries[0].fused_maps, 1);
+        assert!(summaries[0].has_reduce);
+        assert_eq!(summaries[1].fused_maps, 1);
+        assert!(summaries[1].has_reduce);
+        assert_eq!(summaries[1].source_splits, 0, "reads staged intermediate");
+    }
+
+    #[test]
+    fn back_to_back_reduces_get_identity_map_stage() {
+        let mut g = Graph::new("t");
+        let s = source(&mut g);
+        let r1 = group(&mut g, s, "c1");
+        let r2 = group(&mut g, r1, "c2");
+        let _ = r2;
+        let plan = Planner::plan(g).unwrap();
+        assert_eq!(plan.job_count(), 2);
+        assert_eq!(plan.stage_summaries()[1].fused_maps, 0, "identity map side");
+    }
+
+    #[test]
+    fn explain_names_stages_and_fusion() {
+        let mut g = Graph::new("demo");
+        let s = source(&mut g);
+        let m1 = map(&mut g, s, "tokenize");
+        let m2 = map(&mut g, m1, "normalize");
+        let r = group(&mut g, m2, "count");
+        g.sinks.push(Sink { node: r, kind: SinkKind::Collect });
+        let plan = Planner::plan(g).unwrap();
+        let text = plan.explain();
+        assert!(text.contains("plan demo: 1 job"), "{text}");
+        assert!(text.contains("tokenize → normalize"), "{text}");
+        assert!(text.contains("2 ops fused"), "{text}");
+        assert!(text.contains("reduce: count ×2"), "{text}");
+        assert!(text.contains("collect"), "{text}");
+    }
+
+    #[test]
+    fn staged_encoding_roundtrips_and_chunks() {
+        let records: Vec<KV> = (0..2500u64)
+            .map(|i| (i.to_be_bytes().to_vec(), vec![(i % 251) as u8]))
+            .collect();
+        let parts = vec![records.clone()];
+        let (raw, framed) = encode_staged(&parts);
+        assert_eq!(decode_staged(&raw).unwrap(), records);
+        assert_eq!(encode_staged_raw(&parts), raw, "sink encoding matches");
+        assert_eq!(framed.len(), 3, "2500 records at 1024/split");
+        let total: usize = framed.iter().map(|(s, _)| s.len()).sum();
+        assert_eq!(total, 2500);
+        // Byte ranges tile the file exactly.
+        let mut cursor = 0usize;
+        for (_, (lo, hi)) in &framed {
+            assert_eq!(*lo, cursor);
+            assert!(hi > lo);
+            cursor = *hi;
+        }
+        assert_eq!(cursor, raw.len());
+    }
+
+    #[test]
+    fn empty_staged_output_is_empty() {
+        let (raw, framed) = encode_staged(&[]);
+        assert!(raw.is_empty());
+        assert!(framed.is_empty());
+        assert!(decode_staged(&raw).unwrap().is_empty());
+    }
+
+    #[test]
+    fn decode_staged_rejects_malformed_input() {
+        // Length prefix pointing past the buffer.
+        assert!(decode_staged(&[5, 1, 2]).is_err(), "truncated key");
+        // Buffer ending mid-varint (continuation bit set on last byte).
+        assert!(decode_staged(&[0x80]).is_err(), "truncated varint");
+        // Key fine, value length truncated.
+        let mut bad = Vec::new();
+        write_varint(1, &mut bad);
+        bad.push(7);
+        write_varint(9, &mut bad);
+        bad.push(1);
+        assert!(decode_staged(&bad).is_err(), "truncated value");
+    }
+}

@@ -9,8 +9,10 @@
 //!   engine ([`mapreduce`]), a JobTracker-style locality- and
 //!   straggler-aware task scheduler ([`scheduler`]: racks, heartbeats,
 //!   delay scheduling, live speculative execution), a simulated cluster
-//!   with a network cost model ([`cluster`]), and the paper's three
-//!   parallel phases ([`coordinator`]).
+//!   with a network cost model ([`cluster`]), a typed dataflow layer with
+//!   a map-fusing DAG planner over the engine ([`dataflow`]:
+//!   `Pipeline`/`Dataset<K, V>`), and the paper's three parallel phases
+//!   ([`coordinator`]) expressed as pipelines.
 //! - **Layer 2**: JAX compute graphs (`python/compile/model.py`), AOT-lowered
 //!   to HLO text artifacts loaded by [`runtime`] via XLA PJRT.
 //! - **Layer 1**: Pallas kernels (`python/compile/kernels/`) for the per-task
@@ -25,6 +27,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dataflow;
 pub mod dfs;
 pub mod error;
 pub mod eval;

@@ -40,6 +40,13 @@ impl TaskContext {
         (self.emits, self.counters)
     }
 
+    /// Merge an already-aggregated counter set into this context (the
+    /// dataflow layer's fused mappers run inner stages against scratch
+    /// contexts and fold their counters back here).
+    pub fn merge_counters(&mut self, other: &Counters) {
+        self.counters.merge(other);
+    }
+
     /// Emitted records so far (tests).
     pub fn emitted(&self) -> &[KV] {
         &self.emits
