@@ -1,0 +1,129 @@
+//! Experiment A3 — the paper-style fault-tolerance curve.
+//!
+//! The paper's case for Hadoop is that the framework "guarantee[s] the
+//! convergence to the optimal solution" on commodity clusters *because* it
+//! survives task and node failures. This bench measures what that
+//! survival costs: the full three-phase pipeline on a 6-slave cluster
+//! with 0, 1, 2 and 3 scheduled node deaths (staggered on the cluster
+//! heartbeat clock), reporting virtual job time, the recovery counters
+//! (MAP_RERUNS / FETCH_FAILURES / NODE_DEATHS) and the invariant that the
+//! clustering itself never changes — only virtual time does.
+//!
+//! Emits `BENCH_faults.json`: one point per injected-death count.
+
+mod common;
+
+use psch::cluster::NodeDeath;
+use psch::coordinator::PipelineInput;
+use psch::data::gaussian_blobs;
+use psch::mapreduce::names;
+use psch::metrics::table::AsciiTable;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n = if quick { 400 } else { 1200 };
+    let m = 6;
+    let runtime = common::runtime();
+
+    let mut cfg = common::calibrated_config(m);
+    cfg.algo.k = 3;
+    cfg.algo.lanczos_steps = if quick { 30 } else { 50 };
+    cfg.algo.kmeans_iters = 10;
+    cfg.cluster.racks = 2;
+    cfg.cluster.replication = 2;
+
+    let ps = gaussian_blobs(n, cfg.algo.k, 8, 0.4, 8.0, cfg.algo.seed);
+    let input = PipelineInput::Points { points: ps.points.clone() };
+
+    let mut table = AsciiTable::new(&[
+        "deaths",
+        "virtual total",
+        "slowdown",
+        "MAP_RERUNS",
+        "FETCH_FAILURES",
+        "failed attempts",
+    ]);
+    let mut points = Vec::new();
+    let mut baseline_labels: Option<Vec<usize>> = None;
+    let mut baseline_s = 0.0f64;
+    let mut pass = true;
+
+    for deaths in 0..=3usize {
+        // Stagger the kills so re-replication and re-planning settle
+        // between blows (slave 0 stays alive throughout).
+        let driver =
+            psch::coordinator::Driver::new(cfg_with_deaths(&cfg, deaths), runtime.clone());
+        let r = driver.run(&input).expect("pipeline must survive the deaths");
+
+        let counter = |name: &str| -> u64 {
+            r.phases.iter().map(|p| p.counters.get(name)).sum()
+        };
+        if let Some(labels) = &baseline_labels {
+            if labels != &r.labels {
+                println!("FAIL: {deaths} deaths changed the clustering");
+                pass = false;
+            }
+        } else {
+            baseline_labels = Some(r.labels.clone());
+            baseline_s = r.total_virtual_s;
+        }
+        let fired = counter(names::NODE_DEATHS);
+        if fired != deaths as u64 {
+            println!("FAIL: scheduled {deaths} deaths, observed {fired}");
+            pass = false;
+        }
+        let slowdown = r.total_virtual_s / baseline_s;
+        let failed = counter(names::FAILED_MAP_ATTEMPTS)
+            + counter(names::FAILED_REDUCE_ATTEMPTS);
+        table.row(&[
+            deaths.to_string(),
+            format!("{:.0}s", r.total_virtual_s),
+            format!("{slowdown:.3}x"),
+            counter(names::MAP_RERUNS).to_string(),
+            counter(names::FETCH_FAILURES).to_string(),
+            failed.to_string(),
+        ]);
+        points.push(format!(
+            "{{\"deaths\":{deaths},\"total_virtual_s\":{:.3},\"slowdown\":{slowdown:.4},\
+             \"map_reruns\":{},\"fetch_failures\":{},\"node_deaths\":{},\
+             \"failed_attempts\":{failed},\"labels_identical\":{}}}",
+            r.total_virtual_s,
+            counter(names::MAP_RERUNS),
+            counter(names::FETCH_FAILURES),
+            fired,
+            baseline_labels.as_ref() == Some(&r.labels),
+        ));
+    }
+
+    println!(
+        "A3 fault-tolerance curve (n={n}, m={m}, staggered node deaths):\n{}",
+        table.render()
+    );
+    common::write_bench_json(
+        "BENCH_faults.json",
+        &format!(
+            "{{\"experiment\":\"fault_tolerance\",\"n\":{n},\"m\":{m},\
+             \"curve\":[{}]}}",
+            points.join(",")
+        ),
+    );
+    if pass {
+        println!(
+            "ablation_faulttolerance: PASS — node deaths cost virtual time, \
+             never correctness"
+        );
+    } else {
+        println!("ablation_faulttolerance: FAIL");
+        std::process::exit(1);
+    }
+}
+
+/// The base config with `deaths` staggered node kills scheduled.
+fn cfg_with_deaths(base: &psch::config::Config, deaths: usize) -> psch::config::Config {
+    let mut c = base.clone();
+    c.faults.node_deaths = (0..deaths)
+        .map(|i| NodeDeath { slave: i + 1, at_heartbeat: 20 + 60 * i as u64 })
+        .collect();
+    c.validate().expect("bench config");
+    c
+}

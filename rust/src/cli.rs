@@ -4,6 +4,8 @@
 //! psch gen-data   --out FILE [--n N --edges E --k K --seed S]
 //! psch run        [--input FILE | --blobs N] [--config FILE] [--set k=v ...]
 //!                 [--explain-plan]   print the planned dataflow DAGs and exit
+//!                 [--fail-node S@H]  kill slave S at cumulative heartbeat H
+//!                 [--task-fail-prob P]  seeded per-attempt failure probability
 //! psch baseline   [--blobs N] [--config FILE]   single-machine comparator
 //! psch scale-study [--n N] [--slaves 1,2,4,6,8,10] [--config FILE]
 //! psch inspect-artifacts [--dir DIR]
@@ -171,8 +173,21 @@ fn load_input(flags: &Flags, cfg: &Config) -> Result<(PipelineInput, Option<Vec<
     }
 }
 
+/// Apply the chaos switches (`--task-fail-prob P`, `--fail-node S@H`) —
+/// sugar over the `[faults]` config section — and re-validate.
+fn apply_chaos_flags(flags: &Flags, cfg: &mut Config) -> Result<()> {
+    if let Some(p) = flags.get("task-fail-prob") {
+        cfg.set("faults.task_fail_prob", p)?;
+    }
+    if let Some(deaths) = flags.get("fail-node") {
+        cfg.set("faults.fail_node", deaths)?;
+    }
+    cfg.validate()
+}
+
 fn cmd_run(flags: &Flags) -> Result<i32> {
-    let cfg = flags.config()?;
+    let mut cfg = flags.config()?;
+    apply_chaos_flags(flags, &mut cfg)?;
     let (input, truth) = load_input(flags, &cfg)?;
     let runtime = Arc::new(KernelRuntime::auto(&crate::runtime::artifacts_dir()));
     println!("backend: {:?}; slaves: {}", runtime.backend(), cfg.cluster.slaves);
@@ -187,9 +202,11 @@ fn cmd_run(flags: &Flags) -> Result<i32> {
 
     let mut table = AsciiTable::new(&[
         "phase", "virtual", "wall_s", "jobs", "shuffle", "spilled", "merges",
+        "reruns", "ffail",
     ]);
     for p in &result.phases {
         let shuffle = p.shuffle_summary();
+        let faults = p.fault_summary();
         table.row(&[
             p.name.clone(),
             hms(std::time::Duration::from_secs_f64(p.virtual_s)),
@@ -198,6 +215,8 @@ fn cmd_run(flags: &Flags) -> Result<i32> {
             crate::util::fmt::human_bytes(p.shuffle_bytes),
             shuffle.spilled_records.to_string(),
             shuffle.merge_passes.to_string(),
+            faults.map_reruns.to_string(),
+            faults.fetch_failures.to_string(),
         ]);
     }
     table.row(&[
@@ -208,10 +227,19 @@ fn cmd_run(flags: &Flags) -> Result<i32> {
         String::new(),
         String::new(),
         String::new(),
+        String::new(),
+        String::new(),
     ]);
     println!("{}", table.render());
     for p in &result.phases {
         println!("shuffle[{}]: {}", p.name, p.shuffle_summary().render());
+    }
+    // Per-phase fault report: only phases that saw the failure domain act.
+    for p in &result.phases {
+        let f = p.fault_summary();
+        if f.any() {
+            println!("faults[{}]: {}", p.name, f.render());
+        }
     }
     if let Some(truth) = truth {
         println!(
@@ -367,6 +395,27 @@ mod tests {
         // Explicit value still works.
         let f = Flags::parse(&s(&["--explain-plan", "yes"])).unwrap();
         assert!(f.get_bool("explain-plan"));
+    }
+
+    #[test]
+    fn chaos_flags_map_into_the_faults_config() {
+        // Exercises the same helper cmd_run uses, so the mapping cannot
+        // silently drift from what `psch run` applies.
+        let f = Flags::parse(&s(&[
+            "--task-fail-prob", "0.1", "--fail-node", "1@40",
+        ]))
+        .unwrap();
+        let mut cfg = f.config().unwrap();
+        apply_chaos_flags(&f, &mut cfg).unwrap();
+        assert!((cfg.faults.task_fail_prob - 0.1).abs() < 1e-12);
+        assert_eq!(cfg.faults.node_deaths.len(), 1);
+        assert_eq!(cfg.faults.node_deaths[0].slave, 1);
+        assert_eq!(cfg.faults.node_deaths[0].at_heartbeat, 40);
+
+        // An out-of-range death is rejected by the shared validation.
+        let bad = Flags::parse(&s(&["--fail-node", "9@5"])).unwrap();
+        let mut cfg = bad.config().unwrap();
+        assert!(apply_chaos_flags(&bad, &mut cfg).is_err());
     }
 
     #[test]

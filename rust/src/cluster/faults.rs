@@ -1,0 +1,418 @@
+//! The cluster-wide failure domain: slave lifecycle, seeded fault
+//! injection, blacklisting, and death notification.
+//!
+//! Hadoop's fault tolerance is a *cluster* property, not a per-job one: the
+//! JobTracker observes TaskTracker failures through missed/failed
+//! heartbeats, re-plans failed attempts on other nodes, blacklists
+//! trackers that keep failing, and the NameNode re-replicates the blocks a
+//! dead DataNode held. One [`FaultDomain`] models all of that state,
+//! shared (via `Arc`) by every clone of a [`super::Cluster`]:
+//!
+//! - every slave has a [`NodeState`] lifecycle `Alive → Blacklisted` (too
+//!   many failed attempts) or `Alive → Dead` (scheduled node death);
+//! - attempt failures are sampled from a **seeded** generator
+//!   ([`FaultConfig::task_fail_prob`]), so chaos runs are reproducible
+//!   bit-for-bit from the config;
+//! - scheduled deaths fire on the cluster-wide heartbeat clock
+//!   ([`FaultConfig::node_deaths`], counted cumulatively across every job
+//!   the cluster runs), and registered listeners — the DFS wires
+//!   `kill_datanode` here — are notified so replicas re-replicate the
+//!   moment the scheduler sees the node disappear.
+//!
+//! The domain only *decides* faults; the [`crate::scheduler::JobTracker`]
+//! acts on them (re-planning, blacklist enforcement) and the
+//! [`crate::mapreduce::engine`] recovers lost map outputs. Nothing here
+//! touches task *results*: real task execution is deterministic, which is
+//! exactly why a faulty run must produce byte-identical output to a clean
+//! one.
+
+use std::sync::{Arc, Mutex};
+
+use crate::util::rng::SplitMix64;
+
+/// A scheduled node death: `slave` drops dead when the cluster processes
+/// its `at_heartbeat`-th heartbeat (cumulative across jobs, 1-based).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeDeath {
+    /// Slave (and co-located datanode) id to kill.
+    pub slave: usize,
+    /// Cumulative heartbeat count at which the death fires.
+    pub at_heartbeat: u64,
+}
+
+impl NodeDeath {
+    /// Parse the CLI/config form `<slave>@<heartbeat>`, e.g. `"1@40"`.
+    pub fn parse(text: &str) -> Option<Self> {
+        let (s, h) = text.trim().split_once('@')?;
+        Some(Self {
+            slave: s.trim().parse().ok()?,
+            at_heartbeat: h.trim().parse().ok()?,
+        })
+    }
+}
+
+/// The `[faults]` config section: every knob of the failure domain.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Seed of the attempt-failure generator (chaos runs are reproducible).
+    pub seed: u64,
+    /// Probability that any single task attempt fails partway through.
+    pub task_fail_prob: f64,
+    /// Failed attempts per task before the job fails (Hadoop's
+    /// `mapred.map.max.attempts`, default 4).
+    pub max_attempts: usize,
+    /// Failed attempts on one slave before it is blacklisted (Hadoop's
+    /// `mapred.max.tracker.failures` in miniature).
+    pub blacklist_after: usize,
+    /// Scheduled node deaths on the cumulative heartbeat clock.
+    pub node_deaths: Vec<NodeDeath>,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            seed: 1,
+            task_fail_prob: 0.0,
+            max_attempts: 4,
+            blacklist_after: 3,
+            node_deaths: Vec::new(),
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Does this config inject any fault at all?
+    pub fn is_active(&self) -> bool {
+        self.task_fail_prob > 0.0 || !self.node_deaths.is_empty()
+    }
+}
+
+/// Slave lifecycle state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    /// Heartbeating and schedulable.
+    Alive,
+    /// Dead: no heartbeats, no tasks, its map outputs and DFS replicas are
+    /// gone.
+    Dead,
+    /// Still heartbeating, but the JobTracker assigns it no further tasks.
+    Blacklisted,
+}
+
+/// Mutable failure-domain state (lock-protected inside [`FaultDomain`]).
+#[derive(Debug)]
+struct FaultState {
+    states: Vec<NodeState>,
+    /// Failed attempts per slave (feeds blacklisting).
+    failures: Vec<usize>,
+    /// Cumulative heartbeats processed across every job on this cluster.
+    heartbeats: u64,
+    /// Attempt-failure samples drawn so far (the RNG stream position).
+    samples: u64,
+}
+
+/// Death listener: called with the dead slave's id. `Arc`, so listeners
+/// can be shared onto a replacement domain without starving the old one.
+type DeathListener = Arc<dyn Fn(usize) + Send + Sync>;
+
+/// The shared failure domain of one cluster (see module docs).
+pub struct FaultDomain {
+    cfg: FaultConfig,
+    state: Mutex<FaultState>,
+    listeners: Mutex<Vec<DeathListener>>,
+}
+
+impl std::fmt::Debug for FaultDomain {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultDomain")
+            .field("cfg", &self.cfg)
+            .field("state", &self.state)
+            .finish()
+    }
+}
+
+impl FaultDomain {
+    /// Fresh domain over `num_slaves` alive slaves.
+    pub fn new(num_slaves: usize, cfg: FaultConfig) -> Self {
+        Self {
+            cfg,
+            state: Mutex::new(FaultState {
+                states: vec![NodeState::Alive; num_slaves],
+                failures: vec![0; num_slaves],
+                heartbeats: 0,
+                samples: 0,
+            }),
+            listeners: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The active fault configuration.
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// Register a death listener (the DFS registers `kill_datanode`).
+    pub fn on_death(&self, f: impl Fn(usize) + Send + Sync + 'static) {
+        self.listeners.lock().unwrap().push(Arc::new(f));
+    }
+
+    /// Copy every listener registered on `other` onto this domain. Used by
+    /// [`crate::cluster::Cluster::set_fault_config`] so the DFS death
+    /// wiring survives a fault-configuration swap — the old domain keeps
+    /// its listeners too, so earlier cluster clones stay fully wired.
+    pub fn adopt_listeners_from(&self, other: &FaultDomain) {
+        let mut mine = self.listeners.lock().unwrap();
+        mine.extend(other.listeners.lock().unwrap().iter().cloned());
+    }
+
+    /// Advance the cluster-wide heartbeat clock by one processed heartbeat
+    /// and fire any scheduled deaths that are now due. Returns the newly
+    /// dead slaves (listeners have already been notified).
+    pub fn tick_heartbeat(&self) -> Vec<usize> {
+        let newly_dead = {
+            let mut st = self.state.lock().unwrap();
+            st.heartbeats += 1;
+            let hb = st.heartbeats;
+            let mut dead = Vec::new();
+            for d in &self.cfg.node_deaths {
+                if d.at_heartbeat <= hb
+                    && d.slave < st.states.len()
+                    && st.states[d.slave] != NodeState::Dead
+                {
+                    st.states[d.slave] = NodeState::Dead;
+                    dead.push(d.slave);
+                }
+            }
+            dead
+        };
+        // Listeners run outside the state lock: they reach into the DFS.
+        if !newly_dead.is_empty() {
+            let listeners = self.listeners.lock().unwrap();
+            for &slave in &newly_dead {
+                for l in listeners.iter() {
+                    l.as_ref()(slave);
+                }
+            }
+        }
+        newly_dead
+    }
+
+    /// Kill a slave immediately (tests, ad-hoc chaos), notifying listeners.
+    pub fn kill(&self, slave: usize) {
+        {
+            let mut st = self.state.lock().unwrap();
+            if st.states[slave] == NodeState::Dead {
+                return;
+            }
+            st.states[slave] = NodeState::Dead;
+        }
+        for l in self.listeners.lock().unwrap().iter() {
+            l.as_ref()(slave);
+        }
+    }
+
+    /// Current lifecycle state of a slave.
+    pub fn node_state(&self, slave: usize) -> NodeState {
+        self.state.lock().unwrap().states[slave]
+    }
+
+    /// May the JobTracker assign new attempts to this slave?
+    pub fn assignable(&self, slave: usize) -> bool {
+        self.node_state(slave) == NodeState::Alive
+    }
+
+    /// Is any slave still assignable?
+    pub fn any_assignable(&self) -> bool {
+        self.state
+            .lock()
+            .unwrap()
+            .states
+            .iter()
+            .any(|&s| s == NodeState::Alive)
+    }
+
+    /// Per-slave "is dead" view (the engine's lost-map-output check).
+    pub fn dead(&self) -> Vec<bool> {
+        self.state
+            .lock()
+            .unwrap()
+            .states
+            .iter()
+            .map(|&s| s == NodeState::Dead)
+            .collect()
+    }
+
+    /// Cumulative heartbeats processed so far.
+    pub fn heartbeats(&self) -> u64 {
+        self.state.lock().unwrap().heartbeats
+    }
+
+    /// Reset the per-slave failure tallies (Hadoop's fault counts are
+    /// per-job; ours reset at every phase plan). Dead and blacklisted
+    /// lifecycles persist — once a slave is blacklisted, no later phase
+    /// assigns it work.
+    pub fn begin_phase(&self) {
+        let mut st = self.state.lock().unwrap();
+        for f in st.failures.iter_mut() {
+            *f = 0;
+        }
+    }
+
+    /// Sample whether the next task attempt fails. `Some(frac)` means the
+    /// attempt dies after `frac` of its duration (frac in `[0.05, 0.95]`).
+    ///
+    /// The stream is a pure function of the seed and the number of samples
+    /// drawn so far, and the scheduler draws in a deterministic order — so
+    /// the whole chaos schedule replays identically run to run.
+    pub fn sample_attempt_failure(&self) -> Option<f64> {
+        if self.cfg.task_fail_prob <= 0.0 {
+            return None;
+        }
+        let mut st = self.state.lock().unwrap();
+        st.samples += 1;
+        let mut rng =
+            SplitMix64::new(self.cfg.seed ^ st.samples.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let roll = (rng.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        if roll >= self.cfg.task_fail_prob {
+            return None;
+        }
+        let frac = (rng.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        Some(0.05 + 0.9 * frac)
+    }
+
+    /// Record one failed attempt on `slave`; returns `true` when this
+    /// failure just tipped the slave into the blacklist
+    /// ([`FaultConfig::blacklist_after`] failures within one phase — see
+    /// [`Self::begin_phase`]).
+    pub fn record_failure(&self, slave: usize) -> bool {
+        let mut st = self.state.lock().unwrap();
+        st.failures[slave] += 1;
+        if st.states[slave] == NodeState::Alive && st.failures[slave] >= self.cfg.blacklist_after
+        {
+            st.states[slave] = NodeState::Blacklisted;
+            return true;
+        }
+        false
+    }
+
+    /// Failed attempts recorded against a slave this phase.
+    pub fn failure_count(&self, slave: usize) -> usize {
+        self.state.lock().unwrap().failures[slave]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_node_death() {
+        assert_eq!(
+            NodeDeath::parse("1@40"),
+            Some(NodeDeath { slave: 1, at_heartbeat: 40 })
+        );
+        assert_eq!(
+            NodeDeath::parse(" 3 @ 7 "),
+            Some(NodeDeath { slave: 3, at_heartbeat: 7 })
+        );
+        assert!(NodeDeath::parse("3").is_none());
+        assert!(NodeDeath::parse("a@b").is_none());
+    }
+
+    #[test]
+    fn default_config_is_inert() {
+        let cfg = FaultConfig::default();
+        assert!(!cfg.is_active());
+        let d = FaultDomain::new(3, cfg);
+        assert!(d.sample_attempt_failure().is_none());
+        assert!(d.tick_heartbeat().is_empty());
+        assert!((0..3).all(|s| d.assignable(s)));
+    }
+
+    #[test]
+    fn scheduled_death_fires_once_on_the_cumulative_clock() {
+        let cfg = FaultConfig {
+            node_deaths: vec![NodeDeath { slave: 1, at_heartbeat: 3 }],
+            ..FaultConfig::default()
+        };
+        let d = FaultDomain::new(2, cfg);
+        assert!(d.tick_heartbeat().is_empty());
+        assert!(d.tick_heartbeat().is_empty());
+        assert_eq!(d.tick_heartbeat(), vec![1]);
+        assert_eq!(d.node_state(1), NodeState::Dead);
+        assert!(d.tick_heartbeat().is_empty(), "a node dies only once");
+        assert_eq!(d.heartbeats(), 4);
+        assert_eq!(d.dead(), vec![false, true]);
+    }
+
+    #[test]
+    fn death_listeners_are_notified() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let cfg = FaultConfig {
+            node_deaths: vec![NodeDeath { slave: 0, at_heartbeat: 1 }],
+            ..FaultConfig::default()
+        };
+        let d = FaultDomain::new(2, cfg);
+        let hits = Arc::new(AtomicUsize::new(usize::MAX));
+        let h = hits.clone();
+        d.on_death(move |slave| h.store(slave, Ordering::SeqCst));
+        d.tick_heartbeat();
+        assert_eq!(hits.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn failure_sampling_is_deterministic_and_roughly_calibrated() {
+        let cfg = FaultConfig {
+            task_fail_prob: 0.25,
+            seed: 7,
+            ..FaultConfig::default()
+        };
+        let a = FaultDomain::new(2, cfg.clone());
+        let b = FaultDomain::new(2, cfg);
+        let sa: Vec<Option<u64>> = (0..2000)
+            .map(|_| a.sample_attempt_failure().map(|f| (f * 1e9) as u64))
+            .collect();
+        let sb: Vec<Option<u64>> = (0..2000)
+            .map(|_| b.sample_attempt_failure().map(|f| (f * 1e9) as u64))
+            .collect();
+        assert_eq!(sa, sb, "same seed, same chaos schedule");
+        let fails = sa.iter().filter(|s| s.is_some()).count();
+        assert!((300..700).contains(&fails), "~25% of 2000: {fails}");
+        for f in sa.into_iter().flatten() {
+            let frac = f as f64 / 1e9;
+            assert!((0.05..=0.95).contains(&frac), "{frac}");
+        }
+    }
+
+    #[test]
+    fn blacklist_after_enough_failures() {
+        let cfg = FaultConfig { blacklist_after: 2, ..FaultConfig::default() };
+        let d = FaultDomain::new(2, cfg);
+        assert!(!d.record_failure(0));
+        assert!(d.assignable(0));
+        assert!(d.record_failure(0), "second failure blacklists");
+        assert_eq!(d.node_state(0), NodeState::Blacklisted);
+        assert!(!d.assignable(0));
+        assert!(!d.record_failure(0), "already blacklisted");
+        assert!(d.any_assignable());
+        assert_eq!(d.failure_count(0), 3);
+    }
+
+    #[test]
+    fn phase_boundaries_reset_counts_but_not_the_blacklist() {
+        let cfg = FaultConfig { blacklist_after: 2, ..FaultConfig::default() };
+        let d = FaultDomain::new(2, cfg);
+        assert!(!d.record_failure(1));
+        d.begin_phase();
+        assert_eq!(d.failure_count(1), 0, "per-phase counts reset");
+        assert!(!d.record_failure(1), "one failure this phase: still fine");
+        assert!(d.record_failure(1));
+        d.begin_phase();
+        assert_eq!(
+            d.node_state(1),
+            NodeState::Blacklisted,
+            "lifecycle persists across phases"
+        );
+    }
+}

@@ -7,17 +7,19 @@
 //! feed the [`vclock`] virtual-time model (speedup numbers, hardware
 //! independent).
 
+pub mod faults;
 pub mod network;
 pub mod vclock;
 
 use std::collections::VecDeque;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::error::{Error, Result};
 use crate::mapreduce::ShuffleConfig;
 use crate::scheduler::{JobTracker, RackTopology, SchedulePlan, TaskSpec, TrackerConfig};
 
+pub use faults::{FaultConfig, FaultDomain, NodeDeath, NodeState};
 pub use network::NetworkModel;
 pub use vclock::{job_time, schedule, schedule_speculative, PhaseTime, TaskCost};
 
@@ -28,6 +30,34 @@ pub struct SlaveNode {
     pub id: usize,
     /// Relative speed (1.0 = reference machine; <1 = straggler).
     pub speed: f64,
+}
+
+/// Outcome of one [`Cluster::execute`] batch: per-task results (order
+/// preserved, `None` where the task failed) plus the failures themselves.
+#[derive(Debug)]
+pub struct BatchOutcome<T> {
+    /// `results[i]` is task `i`'s `(output, measured seconds)` — `None`
+    /// exactly when `failures` holds an entry for `i`.
+    pub results: Vec<Option<(T, f64)>>,
+    /// `(task index, error)` of every failed task, ascending by index.
+    pub failures: Vec<(usize, Error)>,
+}
+
+impl<T> BatchOutcome<T> {
+    /// All-or-nothing view: the full result vector, or the first failure.
+    /// Callers that can re-plan should consume the fields directly instead.
+    pub fn into_result(self) -> Result<Vec<(T, f64)>> {
+        if let Some((idx, e)) = self.failures.into_iter().next() {
+            return Err(Error::MapReduce(format!("task {idx} failed: {e}")));
+        }
+        let mut out = Vec::with_capacity(self.results.len());
+        for (i, slot) in self.results.into_iter().enumerate() {
+            out.push(slot.ok_or_else(|| {
+                Error::MapReduce(format!("task {i} produced no result"))
+            })?);
+        }
+        Ok(out)
+    }
 }
 
 /// The simulated cluster.
@@ -44,6 +74,10 @@ pub struct Cluster {
     /// Cluster-wide shuffle knobs (sort buffer, merge factor, fetch
     /// parallelism); jobs may override per-job.
     shuffle: ShuffleConfig,
+    /// The shared failure domain: slave lifecycle, seeded fault injection,
+    /// blacklist counts, death listeners. `Arc`, so every clone of the
+    /// cluster (driver, planner, benches) observes the same failures.
+    faults: Arc<FaultDomain>,
     /// Physical worker threads used to execute tasks (bounded by host cores;
     /// virtual time is what scales with `m`, not host parallelism).
     threads: usize,
@@ -70,8 +104,25 @@ impl Cluster {
             topology: RackTopology::single(m),
             tracker: TrackerConfig::default(),
             shuffle: ShuffleConfig::default(),
+            faults: Arc::new(FaultDomain::new(m, FaultConfig::default())),
             threads,
         }
+    }
+
+    /// Install the failure-domain configuration, resetting all fault state
+    /// (lifecycles, blacklist counts, the heartbeat clock). Death
+    /// listeners registered on the previous domain (the DFS re-replication
+    /// wiring) carry over. Call before the cluster is cloned/shared —
+    /// clones made *earlier* keep observing the old domain.
+    pub fn set_fault_config(&mut self, cfg: FaultConfig) {
+        let fresh = FaultDomain::new(self.slaves.len(), cfg);
+        fresh.adopt_listeners_from(&self.faults);
+        self.faults = Arc::new(fresh);
+    }
+
+    /// The shared failure domain.
+    pub fn faults(&self) -> &Arc<FaultDomain> {
+        &self.faults
     }
 
     /// Mark one slave as a straggler with the given relative speed.
@@ -148,22 +199,25 @@ impl Cluster {
 
     /// Execute tasks on the worker pool, preserving order.
     ///
-    /// Returns each task's output and measured CPU seconds. A task error
-    /// aborts the batch (the MR engine layers retries above this).
-    pub fn execute<T, F>(&self, tasks: Vec<F>) -> Result<Vec<(T, f64)>>
+    /// Every task runs to completion even when siblings fail: the outcome
+    /// carries each finished task's output and measured CPU seconds
+    /// alongside the failures, so the engine can re-plan just the failed
+    /// tasks while reusing the completed results (Hadoop never throws away
+    /// a finished attempt because another task errored).
+    pub fn execute<T, F>(&self, tasks: Vec<F>) -> BatchOutcome<T>
     where
         T: Send,
         F: FnOnce() -> Result<T> + Send,
     {
         let n = tasks.len();
         if n == 0 {
-            return Ok(vec![]);
+            return BatchOutcome { results: Vec::new(), failures: Vec::new() };
         }
         let queue: Mutex<VecDeque<(usize, F)>> =
             Mutex::new(tasks.into_iter().enumerate().collect());
         let results: Mutex<Vec<Option<(T, f64)>>> =
             Mutex::new((0..n).map(|_| None).collect());
-        let first_error: Mutex<Option<Error>> = Mutex::new(None);
+        let failures: Mutex<Vec<(usize, Error)>> = Mutex::new(Vec::new());
         let workers = self.threads.min(n);
 
         std::thread::scope(|scope| {
@@ -171,42 +225,26 @@ impl Cluster {
                 scope.spawn(|| loop {
                     let item = queue.lock().unwrap().pop_front();
                     let Some((idx, task)) = item else { break };
-                    if first_error.lock().unwrap().is_some() {
-                        break;
-                    }
                     let start = Instant::now();
                     match task() {
                         Ok(out) => {
                             let elapsed = start.elapsed().as_secs_f64();
                             results.lock().unwrap()[idx] = Some((out, elapsed));
                         }
-                        Err(e) => {
-                            let mut fe = first_error.lock().unwrap();
-                            if fe.is_none() {
-                                *fe = Some(e);
-                            }
-                            break;
-                        }
+                        Err(e) => failures.lock().unwrap().push((idx, e)),
                     }
                 });
             }
         });
 
-        if let Some(e) = first_error.into_inner().unwrap() {
-            return Err(e);
-        }
-        let collected = results.into_inner().unwrap();
-        let mut out = Vec::with_capacity(n);
-        for (i, slot) in collected.into_iter().enumerate() {
-            out.push(slot.ok_or_else(|| {
-                Error::MapReduce(format!("task {i} produced no result"))
-            })?);
-        }
-        Ok(out)
+        let mut failures = failures.into_inner().unwrap();
+        failures.sort_by_key(|(idx, _)| *idx);
+        BatchOutcome { results: results.into_inner().unwrap(), failures }
     }
 
     /// Run one phase's tasks through the JobTracker (heartbeats, locality
-    /// tiers, delay scheduling, speculation) and return the virtual plan.
+    /// tiers, delay scheduling, speculation, the failure domain) and return
+    /// the virtual plan.
     pub fn plan_phase(&self, tasks: &[TaskSpec]) -> SchedulePlan {
         let speeds: Vec<f64> = self.slaves.iter().map(|s| s.speed).collect();
         JobTracker::new(
@@ -216,6 +254,7 @@ impl Cluster {
             &self.model,
             &self.tracker,
         )
+        .with_faults(&self.faults)
         .plan(tasks)
     }
 
@@ -281,7 +320,7 @@ mod tests {
         let tasks: Vec<_> = (0..32)
             .map(|i| move || -> Result<usize> { Ok(i * i) })
             .collect();
-        let results = c.execute(tasks).unwrap();
+        let results = c.execute(tasks).into_result().unwrap();
         assert_eq!(results.len(), 32);
         for (i, (v, secs)) in results.iter().enumerate() {
             assert_eq!(*v, i * i);
@@ -290,22 +329,51 @@ mod tests {
     }
 
     #[test]
-    fn execute_propagates_error() {
+    fn execute_keeps_completed_results_alongside_the_error() {
+        // The re-planning fix: one task failing must not discard its
+        // siblings' finished outputs.
         let c = Cluster::new(2);
         let tasks: Vec<Box<dyn FnOnce() -> Result<u32> + Send>> = vec![
             Box::new(|| Ok(1)),
             Box::new(|| Err(Error::MapReduce("boom".into()))),
             Box::new(|| Ok(3)),
         ];
-        let err = c.execute(tasks).unwrap_err();
-        assert!(err.to_string().contains("boom"));
+        let outcome = c.execute(tasks);
+        assert_eq!(outcome.failures.len(), 1);
+        assert_eq!(outcome.failures[0].0, 1);
+        assert!(outcome.failures[0].1.to_string().contains("boom"));
+        assert_eq!(outcome.results[0].as_ref().map(|(v, _)| *v), Some(1));
+        assert!(outcome.results[1].is_none());
+        assert_eq!(outcome.results[2].as_ref().map(|(v, _)| *v), Some(3));
+        // And the all-or-nothing view still surfaces the error.
+        let tasks: Vec<Box<dyn FnOnce() -> Result<u32> + Send>> =
+            vec![Box::new(|| Err(Error::MapReduce("boom".into())))];
+        assert!(c.execute(tasks).into_result().is_err());
     }
 
     #[test]
     fn empty_task_list() {
         let c = Cluster::new(1);
         let tasks: Vec<Box<dyn FnOnce() -> Result<()> + Send>> = vec![];
-        assert!(c.execute(tasks).unwrap().is_empty());
+        assert!(c.execute(tasks).into_result().unwrap().is_empty());
+    }
+
+    #[test]
+    fn set_fault_config_preserves_death_listeners() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let mut c = Cluster::new(2);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        c.faults().on_death(move |_| {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        // Swapping in a new fault config must keep the wiring alive.
+        c.set_fault_config(FaultConfig {
+            node_deaths: vec![NodeDeath { slave: 1, at_heartbeat: 1 }],
+            ..FaultConfig::default()
+        });
+        c.faults().tick_heartbeat();
+        assert_eq!(hits.load(Ordering::SeqCst), 1, "listener survived the swap");
     }
 
     #[test]

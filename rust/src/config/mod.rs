@@ -5,7 +5,7 @@
 //! Every key can also be overridden from the CLI (`--set section.key=value`).
 
 
-use crate::cluster::NetworkModel;
+use crate::cluster::{FaultConfig, NetworkModel, NodeDeath};
 use crate::error::{Error, Result};
 use crate::mapreduce::ShuffleConfig;
 use crate::scheduler::{Policy, SpeculationConfig};
@@ -92,6 +92,10 @@ pub struct Config {
     /// Shuffle settings (`[shuffle]` section): sort buffer, merge factor,
     /// fetch parallelism (Hadoop's `io.sort.*` family).
     pub shuffle: ShuffleConfig,
+    /// Failure-domain settings (`[faults]` section): seeded per-attempt
+    /// failure probability, scheduled node deaths, blacklisting and the
+    /// per-task attempt budget. See `configs/chaos.toml`.
+    pub faults: FaultConfig,
     /// Algorithm settings (`[algo]` section).
     pub algo: AlgoConfig,
 }
@@ -205,6 +209,31 @@ impl Config {
                 self.shuffle.fetch_parallelism =
                     value.parse().map_err(|_| bad_val(key))?
             }
+            "faults.seed" => {
+                self.faults.seed = value.parse().map_err(|_| bad_val(key))?
+            }
+            "faults.task_fail_prob" => {
+                self.faults.task_fail_prob = value.parse().map_err(|_| bad_val(key))?
+            }
+            "faults.max_attempts" => {
+                self.faults.max_attempts = value.parse().map_err(|_| bad_val(key))?
+            }
+            "faults.blacklist_after" => {
+                self.faults.blacklist_after = value.parse().map_err(|_| bad_val(key))?
+            }
+            "faults.fail_node" => {
+                // Comma-separated `<slave>@<heartbeat>` deaths; an empty
+                // value clears the schedule.
+                let mut deaths = Vec::new();
+                for part in value.split(',').filter(|p| !p.trim().is_empty()) {
+                    deaths.push(NodeDeath::parse(part).ok_or_else(|| {
+                        Error::Config(format!(
+                            "faults.fail_node wants <slave>@<heartbeat>, got {part:?}"
+                        ))
+                    })?);
+                }
+                self.faults.node_deaths = deaths;
+            }
             "algo.k" => self.algo.k = value.parse().map_err(|_| bad_val(key))?,
             "algo.sigma" => self.algo.sigma = value.parse().map_err(|_| bad_val(key))?,
             "algo.epsilon" => {
@@ -262,6 +291,29 @@ impl Config {
         }
         if self.shuffle.fetch_parallelism == 0 {
             return bad("shuffle.fetch_parallelism must be >= 1".into());
+        }
+        if !(0.0..1.0).contains(&self.faults.task_fail_prob) {
+            return bad(format!(
+                "faults.task_fail_prob must be in [0, 1), got {}",
+                self.faults.task_fail_prob
+            ));
+        }
+        if self.faults.max_attempts == 0 {
+            return bad("faults.max_attempts must be >= 1".into());
+        }
+        if self.faults.blacklist_after == 0 {
+            return bad("faults.blacklist_after must be >= 1".into());
+        }
+        for d in &self.faults.node_deaths {
+            if d.slave >= self.cluster.slaves {
+                return bad(format!(
+                    "faults.fail_node: slave {} out of range (cluster.slaves = {})",
+                    d.slave, self.cluster.slaves
+                ));
+            }
+            if d.at_heartbeat == 0 {
+                return bad("faults.fail_node: heartbeat must be >= 1".into());
+            }
         }
         if self.algo.k < 2 {
             return bad(format!("algo.k must be >= 2, got {}", self.algo.k));
@@ -421,6 +473,42 @@ lanczos_steps = 40
         assert!(Config::parse("[shuffle]\nmerge_factor = 1\n").is_err());
         assert!(Config::parse("[shuffle]\nfetch_parallelism = 0\n").is_err());
         assert!(Config::parse("[shuffle]\nbogus = 1\n").is_err());
+    }
+
+    #[test]
+    fn fault_keys_parse_and_validate() {
+        let text = "[cluster]\nslaves = 4\n\n[faults]\nseed = 9\ntask_fail_prob = 0.05\n\
+                    max_attempts = 6\nblacklist_after = 2\nfail_node = \"1@40, 3@90\"\n";
+        let cfg = Config::parse(text).unwrap();
+        assert_eq!(cfg.faults.seed, 9);
+        assert!((cfg.faults.task_fail_prob - 0.05).abs() < 1e-12);
+        assert_eq!(cfg.faults.max_attempts, 6);
+        assert_eq!(cfg.faults.blacklist_after, 2);
+        assert_eq!(
+            cfg.faults.node_deaths,
+            vec![
+                NodeDeath { slave: 1, at_heartbeat: 40 },
+                NodeDeath { slave: 3, at_heartbeat: 90 }
+            ]
+        );
+        // Defaults are inert.
+        let plain = Config::default();
+        assert!(!plain.faults.is_active());
+        assert_eq!(plain.faults.max_attempts, 4);
+        // An empty fail_node clears the schedule.
+        let mut cleared = cfg.clone();
+        cleared.set("faults.fail_node", "").unwrap();
+        assert!(cleared.faults.node_deaths.is_empty());
+
+        assert!(Config::parse("[faults]\ntask_fail_prob = 1.5\n").is_err());
+        assert!(Config::parse("[faults]\nmax_attempts = 0\n").is_err());
+        assert!(Config::parse("[faults]\nblacklist_after = 0\n").is_err());
+        assert!(Config::parse("[faults]\nfail_node = banana\n").is_err());
+        assert!(
+            Config::parse("[cluster]\nslaves = 2\n[faults]\nfail_node = 5@3\n").is_err(),
+            "death of a slave the cluster does not have"
+        );
+        assert!(Config::parse("[faults]\nfail_node = 0@0\n").is_err());
     }
 
     #[test]

@@ -54,6 +54,13 @@ impl Services {
 
     /// As [`Self::new`] with an explicit DFS replication factor (clamped
     /// to the slave count).
+    ///
+    /// The DFS joins the cluster's failure domain here: when a slave dies
+    /// (scheduled `[faults]` death observed at a heartbeat), its
+    /// co-located datanode is killed and under-replicated blocks are
+    /// re-replicated from surviving copies — staged dataflow intermediates
+    /// survive, so downstream stages recover without recomputing upstream
+    /// phases.
     pub fn with_replication(
         cluster: Cluster,
         runtime: Arc<KernelRuntime>,
@@ -61,7 +68,7 @@ impl Services {
     ) -> Self {
         let m = cluster.num_slaves();
         let topology = cluster.topology().clone();
-        Self {
+        let svc = Self {
             cluster,
             dfs: Dfs::with_topology(
                 m,
@@ -71,13 +78,21 @@ impl Services {
             ),
             tables: TableService::new(m),
             runtime,
-        }
+        };
+        let dfs = svc.dfs.clone();
+        svc.cluster.faults().on_death(move |node| {
+            // Best-effort: with too few survivors full replication may be
+            // unrestorable; surviving replicas still serve reads.
+            let _ = dfs.kill_datanode(node);
+        });
+        svc
     }
 
     /// Stand up services from a [`Config`]: cluster with the configured
-    /// rack topology, JobTracker and shuffle knobs, plus a DFS with the
-    /// configured replication. The single constructor the driver, benches
-    /// and tests share (it used to be copy-pasted per caller).
+    /// rack topology, JobTracker, shuffle and failure-domain knobs, plus a
+    /// DFS with the configured replication. The single constructor the
+    /// driver, benches and tests share (it used to be copy-pasted per
+    /// caller).
     pub fn from_config(config: &Config, runtime: Arc<KernelRuntime>) -> Self {
         let c = &config.cluster;
         let mut cluster =
@@ -91,6 +106,7 @@ impl Services {
             speculation: c.speculation,
         });
         cluster.set_shuffle_config(config.shuffle);
+        cluster.set_fault_config(config.faults.clone());
         Self::with_replication(cluster, runtime, c.replication)
     }
 }
@@ -160,5 +176,12 @@ impl PhaseStats {
     /// Shuffle lifecycle summary of the phase.
     pub fn shuffle_summary(&self) -> crate::metrics::ShuffleSummary {
         crate::metrics::ShuffleSummary::from_counters(&self.counters)
+    }
+
+    /// Failure-domain summary of the phase: failed attempts, map reruns,
+    /// fetch failures, blacklisted slaves, node deaths (the per-phase
+    /// fault report the driver/CLI surface).
+    pub fn fault_summary(&self) -> crate::metrics::FaultSummary {
+        crate::metrics::FaultSummary::from_counters(&self.counters)
     }
 }

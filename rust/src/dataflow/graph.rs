@@ -12,7 +12,7 @@ use std::sync::Arc;
 use crate::error::Result;
 use crate::mapreduce::names;
 use crate::mapreduce::{
-    FaultInjector, InputSplit, Mapper, Partitioner, Reducer, ShuffleConfig, TaskContext,
+    InputSplit, Mapper, Partitioner, Reducer, ShuffleConfig, TaskContext,
 };
 use crate::table::Table;
 
@@ -92,10 +92,10 @@ pub(crate) struct Graph {
     pub name: String,
     pub nodes: Vec<LogicalNode>,
     pub sinks: Vec<Sink>,
-    /// Per-pipeline engine knobs (apply to every planned job).
-    pub max_attempts: Option<usize>,
+    /// Per-pipeline shuffle override (applies to every planned job).
+    /// Failure handling is cluster-wide ([`crate::cluster::faults`]), so
+    /// pipelines carry no fault knobs.
     pub shuffle: Option<ShuffleConfig>,
-    pub fault: Option<FaultInjector>,
 }
 
 impl Graph {
@@ -104,9 +104,7 @@ impl Graph {
             name: name.to_string(),
             nodes: Vec::new(),
             sinks: Vec::new(),
-            max_attempts: None,
             shuffle: None,
-            fault: None,
         }
     }
 

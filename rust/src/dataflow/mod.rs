@@ -43,8 +43,7 @@ use std::sync::Arc;
 use crate::coordinator::Services;
 use crate::error::{Error, Result};
 use crate::mapreduce::{
-    FaultInjector, InputSplit, Mapper, Partitioner, Reducer, ShuffleConfig, TaskContext,
-    Values, KV,
+    InputSplit, Mapper, Partitioner, Reducer, ShuffleConfig, TaskContext, Values, KV,
 };
 use crate::table::Table;
 
@@ -131,18 +130,11 @@ impl Pipeline {
     }
 
     /// Override the shuffle knobs for every job this pipeline launches.
+    /// (Failure handling needs no per-pipeline hook: the cluster's
+    /// `[faults]` domain — [`crate::cluster::FaultConfig`] — governs every
+    /// job alike.)
     pub fn shuffle_config(&self, cfg: ShuffleConfig) {
         self.graph.borrow_mut().shuffle = Some(cfg);
-    }
-
-    /// Max task attempts for every job this pipeline launches.
-    pub fn max_attempts(&self, n: usize) {
-        self.graph.borrow_mut().max_attempts = Some(n);
-    }
-
-    /// Install a fault injector on every job this pipeline launches.
-    pub fn fault_injector(&self, f: FaultInjector) {
-        self.graph.borrow_mut().fault = Some(f);
     }
 
     /// Hand the logical DAG to the [`Planner`]: topological order + map

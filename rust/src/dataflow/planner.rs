@@ -24,8 +24,8 @@ use std::sync::Arc;
 use crate::coordinator::Services;
 use crate::error::{Error, Result};
 use crate::mapreduce::{
-    self, Counters, FaultInjector, InputSplit, JobBuilder, JobStats, Mapper, Reducer,
-    ShuffleConfig, KV,
+    self, Counters, InputSplit, JobBuilder, JobStats, Mapper, Reducer, ShuffleConfig,
+    KV,
 };
 use crate::util::fmt::human_bytes;
 
@@ -273,9 +273,7 @@ impl Planner {
             name: graph.name,
             stages,
             sinks,
-            max_attempts: graph.max_attempts,
             shuffle: graph.shuffle,
-            fault: graph.fault,
         })
     }
 }
@@ -285,9 +283,7 @@ pub struct Plan {
     name: String,
     stages: Vec<PlannedStage>,
     sinks: Vec<(usize, Sink)>,
-    max_attempts: Option<usize>,
     shuffle: Option<ShuffleConfig>,
-    fault: Option<FaultInjector>,
 }
 
 impl Plan {
@@ -443,14 +439,8 @@ impl Plan {
                     builder = builder.partitioner(p.clone());
                 }
             }
-            if let Some(n) = self.max_attempts {
-                builder = builder.max_attempts(n);
-            }
             if let Some(cfg) = self.shuffle {
                 builder = builder.shuffle_config(cfg);
-            }
-            if let Some(f) = &self.fault {
-                builder = builder.fault_injector(f.clone());
             }
 
             let result = mapreduce::run(&services.cluster, &builder.build())?;

@@ -71,6 +71,17 @@ pub mod names {
     /// Virtual MICROseconds reducers spent fetching segments (serial sum
     /// across reducers).
     pub const SHUFFLE_FETCH_US: &str = "SHUFFLE_FETCH_US";
+    /// Completed map tasks re-executed on a live node because the slave
+    /// holding their output died (Hadoop's signature lost-output case).
+    pub const MAP_RERUNS: &str = "MAP_RERUNS";
+    /// Reduce-side segment fetches that targeted a dead slave's map
+    /// output — each one triggers the map's re-execution.
+    pub const FETCH_FAILURES: &str = "FETCH_FAILURES";
+    /// Slaves blacklisted during the job (too many failed attempts; no
+    /// further attempts are assigned to them).
+    pub const BLACKLISTED_SLAVES: &str = "BLACKLISTED_SLAVES";
+    /// Scheduled node deaths that fired while the job's phases ran.
+    pub const NODE_DEATHS: &str = "NODE_DEATHS";
 }
 
 impl Counters {

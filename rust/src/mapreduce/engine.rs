@@ -1,21 +1,29 @@
 //! The MapReduce engine: map → spill/merge → fetch → merge → reduce.
 //!
-//! Runs map and reduce tasks on the [`Cluster`]'s worker pool with per-task
-//! retry (Hadoop's task-attempt model), the [`super::shuffle`] subsystem
-//! (map-side sort/spill/merge with a per-spill combiner, reduce-side
-//! locality-charged fetches and a streaming grouped merge), counters, and
-//! virtual-time accounting: every task's measured cost + its split's block
-//! locations are replayed through the cluster's JobTracker
-//! ([`crate::scheduler`]) — heartbeat-driven slot assignment,
-//! node-local/rack-local/off-rack read charging and live speculative
-//! duplicates — whose tallies land in the job counters.
+//! Runs map and reduce tasks on the [`Cluster`]'s worker pool, the
+//! [`super::shuffle`] subsystem (map-side sort/spill/merge with a
+//! per-spill combiner, reduce-side locality-charged fetches and a
+//! streaming grouped merge), counters, and virtual-time accounting: every
+//! task's measured cost + its split's block locations are replayed through
+//! the cluster's JobTracker ([`crate::scheduler`]) — heartbeat-driven slot
+//! assignment, node-local/rack-local/off-rack read charging and live
+//! speculative duplicates — whose tallies land in the job counters.
+//!
+//! Failure handling is cluster-wide (DESIGN.md §2.9), not a per-job retry
+//! loop: real task errors surface to the engine, which re-executes only
+//! the failed tasks on fresh rounds (completed siblings' results are
+//! reused, never recomputed); the failure domain
+//! ([`crate::cluster::faults`]) injects virtual attempt failures and node
+//! deaths into the JobTracker plans; and a reduce fetch that targets a
+//! dead slave's map output triggers re-execution of that completed map on
+//! a live node (`MAP_RERUNS` / `FETCH_FAILURES`).
 
 use crate::cluster::{Cluster, TaskCost};
 use crate::error::{Error, Result};
 use crate::scheduler::{SchedulePlan, TaskSpec};
 
 use super::counters::{names, Counters};
-use super::job::{Job, Phase};
+use super::job::Job;
 use super::shuffle::{self, GroupedMerge, MapShuffleOutput, Segment, SpillCollector};
 use super::types::{TaskContext, KV};
 
@@ -67,17 +75,87 @@ impl JobResult {
     }
 }
 
-/// Fold one phase plan's locality/speculation tallies into the counters.
+/// Fold one phase plan's locality/speculation/fault tallies into the
+/// counters.
 fn absorb_plan(counters: &mut Counters, plan: &SchedulePlan, is_map: bool) {
     counters.incr(names::HEARTBEATS, plan.heartbeats);
     counters.incr(names::SPECULATIVE_ATTEMPTS, plan.speculative_attempts as u64);
     counters.incr(names::SPECULATIVE_WINS, plan.speculative_wins as u64);
+    counters.incr(names::NODE_DEATHS, plan.deaths);
+    counters.incr(names::BLACKLISTED_SLAVES, plan.blacklisted.len() as u64);
+    counters.incr(
+        if is_map {
+            names::FAILED_MAP_ATTEMPTS
+        } else {
+            names::FAILED_REDUCE_ATTEMPTS
+        },
+        plan.failed_attempts,
+    );
     if is_map {
         counters.incr(names::DATA_LOCAL_MAPS, plan.node_local as u64);
         counters.incr(names::RACK_LOCAL_MAPS, plan.rack_local as u64);
         counters.incr(names::OFF_RACK_MAPS, plan.off_rack as u64);
         counters.incr(names::MAP_READ_US, (plan.input_read_s * 1e6).round() as u64);
     }
+}
+
+/// Turn a phase plan with unrecoverable tasks into the job error.
+fn check_plan(plan: &SchedulePlan, phase: &str, job: &str) -> Result<()> {
+    if let Some(&task) = plan.failed_tasks.first() {
+        return Err(Error::MapReduce(format!(
+            "job {job}: {phase} task {task} could not complete \
+             ({} task(s) exhausted their attempts or lost every slave)",
+            plan.failed_tasks.len()
+        )));
+    }
+    Ok(())
+}
+
+/// Re-execute `tasks` (engine-level re-planning) until every slot holds a
+/// result or a task has failed `max_rounds` real attempts. Completed
+/// results from earlier rounds are always reused. Returns the results (in
+/// task order) and the number of real failed attempts observed.
+fn execute_with_retry<T, F>(
+    cluster: &Cluster,
+    n: usize,
+    make_task: impl Fn(usize) -> F,
+    what: &str,
+    job: &str,
+) -> Result<(Vec<(T, f64)>, u64)>
+where
+    T: Send,
+    F: FnOnce() -> Result<T> + Send,
+{
+    let max_rounds = cluster.faults().config().max_attempts.max(1);
+    let mut slots: Vec<Option<(T, f64)>> = (0..n).map(|_| None).collect();
+    let mut failed_attempts = 0u64;
+    for round in 0..max_rounds {
+        let todo: Vec<usize> = (0..n).filter(|&i| slots[i].is_none()).collect();
+        if todo.is_empty() {
+            break;
+        }
+        let tasks: Vec<F> = todo.iter().map(|&i| make_task(i)).collect();
+        let mut outcome = cluster.execute(tasks);
+        for (j, slot) in outcome.results.drain(..).enumerate() {
+            if let Some(r) = slot {
+                slots[todo[j]] = Some(r);
+            }
+        }
+        failed_attempts += outcome.failures.len() as u64;
+        if let Some((j, e)) = outcome.failures.into_iter().next() {
+            if round + 1 == max_rounds {
+                return Err(Error::MapReduce(format!(
+                    "job {job}: {what} task {} failed after {max_rounds} attempts: {e}",
+                    todo[j]
+                )));
+            }
+        }
+    }
+    let results = slots
+        .into_iter()
+        .map(|s| s.expect("every slot filled or an error returned"))
+        .collect();
+    Ok((results, failed_attempts))
 }
 
 /// Run a job on the cluster.
@@ -90,7 +168,7 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
     // agrees with SpillCollector's own floor of one partition.
     let nred = job.num_reducers.max(1);
 
-    // ---------------- map phase (with retry) ----------------
+    // ---------------- map phase ----------------
     struct MapOut {
         /// Spilled/merged per-partition segments (reduce jobs).
         shuffle: Option<MapShuffleOutput>,
@@ -98,118 +176,87 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
         records: Vec<KV>,
         counters: Counters,
         input_bytes: u64,
-        failed_attempts: u64,
     }
-    let map_tasks: Vec<_> = job
-        .input
-        .iter()
-        .enumerate()
-        .map(|(task_id, split)| {
-            let mapper = job.mapper.clone();
-            let combiner = job.combiner.clone();
-            let partitioner = job.partitioner.clone();
-            let fault = job.fault.clone();
-            let max_attempts = job.max_attempts;
-            move || -> Result<MapOut> {
-                let input_bytes: u64 = split
-                    .iter()
-                    .map(|(k, v)| (k.len() + v.len()) as u64)
-                    .sum();
-                let mut failed = 0u64;
-                for attempt in 0..max_attempts {
-                    if let Some(f) = &fault {
-                        if f(Phase::Map, task_id, attempt) {
-                            failed += 1;
-                            continue;
-                        }
+    // One single-attempt task per split; a real error surfaces to
+    // `execute_with_retry`, which re-runs only the failed tasks.
+    let make_map_task = |task_id: usize| {
+        let split = &job.input[task_id];
+        let mapper = job.mapper.clone();
+        let combiner = job.combiner.clone();
+        let partitioner = job.partitioner.clone();
+        move || -> Result<MapOut> {
+            let input_bytes: u64 = split
+                .iter()
+                .map(|(k, v)| (k.len() + v.len()) as u64)
+                .sum();
+            let mut ctx = TaskContext::default();
+            // Reduce jobs route emits through the spill buffer; a
+            // map-only job's emits ARE its output and stay put.
+            let mut collector = has_reducer.then(|| {
+                SpillCollector::new(nred, partitioner, combiner.clone(), shuffle_cfg)
+            });
+            for (k, v) in split {
+                ctx.incr(names::MAP_INPUT_RECORDS, 1);
+                mapper.map(k, v, &mut ctx)?;
+                if let Some(col) = collector.as_mut() {
+                    for (kk, vv) in ctx.take_emits() {
+                        col.collect(kk, vv)?;
                     }
-                    let mut ctx = TaskContext::default();
-                    // Reduce jobs route emits through the spill buffer; a
-                    // map-only job's emits ARE its output and stay put.
-                    let mut collector = has_reducer.then(|| {
-                        SpillCollector::new(
-                            nred,
-                            partitioner.clone(),
-                            combiner.clone(),
-                            shuffle_cfg,
-                        )
-                    });
-                    let mut ok = true;
-                    for (k, v) in split {
-                        ctx.incr(names::MAP_INPUT_RECORDS, 1);
-                        if mapper.map(k, v, &mut ctx).is_err() {
-                            failed += 1;
-                            ok = false;
-                            break;
-                        }
-                        if let Some(col) = collector.as_mut() {
-                            for (kk, vv) in ctx.take_emits() {
-                                col.collect(kk, vv)?;
-                            }
-                        }
-                    }
-                    if !ok {
-                        continue;
-                    }
-                    let (records, mut task_counters) = ctx.into_parts();
-                    let (records, shuffle_out) = match collector {
-                        Some(col) => {
-                            let out = col.finish()?;
-                            task_counters
-                                .incr(names::MAP_OUTPUT_RECORDS, out.input_records);
-                            if combiner.is_some() {
-                                task_counters.incr(
-                                    names::COMBINE_OUTPUT_RECORDS,
-                                    out.combine_output_records,
-                                );
-                            }
-                            task_counters.incr(names::SPILLS, out.spills);
-                            task_counters
-                                .incr(names::SPILLED_RECORDS, out.spilled_records);
-                            task_counters.incr(names::MERGE_PASSES, out.merge_passes);
-                            (Vec::new(), Some(out))
-                        }
-                        None => {
-                            task_counters
-                                .incr(names::MAP_OUTPUT_RECORDS, records.len() as u64);
-                            // A map-only job's combiner still runs over the
-                            // task output (sort-group-combine, as the
-                            // pre-shuffle engine did).
-                            let records = match &combiner {
-                                Some(c) => {
-                                    let combined = shuffle::buffer::combine_segment(
-                                        Segment::from_unsorted(records),
-                                        c.as_ref(),
-                                    )?
-                                    .into_records();
-                                    task_counters.incr(
-                                        names::COMBINE_OUTPUT_RECORDS,
-                                        combined.len() as u64,
-                                    );
-                                    combined
-                                }
-                                None => records,
-                            };
-                            (records, None)
-                        }
-                    };
-                    return Ok(MapOut {
-                        shuffle: shuffle_out,
-                        records,
-                        counters: task_counters,
-                        input_bytes,
-                        failed_attempts: failed,
-                    });
                 }
-                Err(Error::MapReduce(format!(
-                    "map task {task_id} failed after {max_attempts} attempts"
-                )))
             }
-        })
-        .collect();
+            let (records, mut task_counters) = ctx.into_parts();
+            let (records, shuffle_out) = match collector {
+                Some(col) => {
+                    let out = col.finish()?;
+                    task_counters.incr(names::MAP_OUTPUT_RECORDS, out.input_records);
+                    if combiner.is_some() {
+                        task_counters.incr(
+                            names::COMBINE_OUTPUT_RECORDS,
+                            out.combine_output_records,
+                        );
+                    }
+                    task_counters.incr(names::SPILLS, out.spills);
+                    task_counters.incr(names::SPILLED_RECORDS, out.spilled_records);
+                    task_counters.incr(names::MERGE_PASSES, out.merge_passes);
+                    (Vec::new(), Some(out))
+                }
+                None => {
+                    task_counters
+                        .incr(names::MAP_OUTPUT_RECORDS, records.len() as u64);
+                    // A map-only job's combiner still runs over the
+                    // task output (sort-group-combine, as the
+                    // pre-shuffle engine did).
+                    let records = match &combiner {
+                        Some(c) => {
+                            let combined = shuffle::buffer::combine_segment(
+                                Segment::from_unsorted(records),
+                                c.as_ref(),
+                            )?
+                            .into_records();
+                            task_counters.incr(
+                                names::COMBINE_OUTPUT_RECORDS,
+                                combined.len() as u64,
+                            );
+                            combined
+                        }
+                        None => records,
+                    };
+                    (records, None)
+                }
+            };
+            Ok(MapOut {
+                shuffle: shuffle_out,
+                records,
+                counters: task_counters,
+                input_bytes,
+            })
+        }
+    };
 
-    let map_results = cluster.execute(map_tasks)?;
-    let nmaps = map_results.len();
+    let nmaps = job.input.len();
+    let (map_results, real_map_failures) =
+        execute_with_retry(cluster, nmaps, make_map_task, "map", &job.name)?;
+    counters.incr(names::FAILED_MAP_ATTEMPTS, real_map_failures);
     let mut map_costs = Vec::with_capacity(nmaps);
     let mut map_records: Vec<Vec<KV>> = Vec::new();
     // map_segments[m][p] = map m's sorted output segment for partition p.
@@ -233,7 +280,6 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
                 + out.counters.get(names::EXTRA_OUTPUT_BYTES),
         });
         counters.merge(&out.counters);
-        counters.incr(names::FAILED_MAP_ATTEMPTS, out.failed_attempts);
         match out.shuffle {
             Some(s) => map_segments.push(s.segments),
             None => map_records.push(out.records),
@@ -242,7 +288,8 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
 
     // Route the map phase through the JobTracker: measured costs + declared
     // split locations drive heartbeat slot assignment, locality-tiered read
-    // charging and live speculation.
+    // charging, live speculation and the failure domain (injected attempt
+    // failures re-plan with fresh locality; node deaths fire here).
     let map_specs: Vec<TaskSpec> = map_costs
         .iter()
         .enumerate()
@@ -252,6 +299,7 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
         })
         .collect();
     let map_plan = cluster.plan_phase(&map_specs);
+    check_plan(&map_plan, "map", &job.name)?;
     absorb_plan(&mut counters, &map_plan, true);
 
     // ---------------- map-only job: done ----------------
@@ -286,88 +334,74 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
         }
     }
 
-    // ---------------- reduce phase (with retry) ----------------
+    // ---------------- reduce phase ----------------
     struct RedOut {
         records: Vec<KV>,
         counters: Counters,
         input_bytes: u64,
-        failed_attempts: u64,
     }
-    let reduce_tasks: Vec<_> = partitions
+    // Fetch merge: bring each partition's runs under the factor bound once
+    // (Hadoop's on-disk merges), on the worker pool so the per-partition
+    // merges run concurrently and their measured seconds stay part of the
+    // reduce task cost. The streamed final merge is rebuilt per attempt,
+    // so re-executed reduce tasks reuse the merged runs.
+    let merge_tasks: Vec<_> = partitions
         .into_iter()
-        .enumerate()
-        .map(|(task_id, segments)| {
-            let reducer = reducer.clone();
-            let fault = job.fault.clone();
-            let max_attempts = job.max_attempts;
-            move || -> Result<RedOut> {
+        .map(|segments| {
+            let factor = shuffle_cfg.factor();
+            move || -> Result<(Vec<Segment>, u64, u64, u64)> {
                 let input_bytes: u64 = segments.iter().map(|s| s.bytes()).sum();
-                // Fetch merge: bring the runs under the factor bound once
-                // (Hadoop's on-disk merges); the streamed final merge is
-                // rebuilt per attempt.
                 let (merged, merge_passes, respilled) =
-                    shuffle::merge_to_factor(segments, shuffle_cfg.factor());
-                let mut failed = 0u64;
-                for attempt in 0..max_attempts {
-                    if let Some(f) = &fault {
-                        if f(Phase::Reduce, task_id, attempt) {
-                            failed += 1;
-                            continue;
-                        }
-                    }
-                    let mut ctx = TaskContext::default();
-                    let mut groups = 0u64;
-                    let mut ok = true;
-                    let mut gm = GroupedMerge::new(&merged);
-                    while let Some(key) = gm.next_key() {
-                        groups += 1;
-                        let mut vs = gm.values();
-                        if reducer.reduce(&key, &mut vs, &mut ctx).is_err() {
-                            failed += 1;
-                            ok = false;
-                            break;
-                        }
-                    }
-                    if !ok {
-                        continue;
-                    }
-                    let (records, mut task_counters) = ctx.into_parts();
-                    task_counters.incr(names::REDUCE_INPUT_GROUPS, groups);
-                    task_counters
-                        .incr(names::REDUCE_OUTPUT_RECORDS, records.len() as u64);
-                    task_counters.incr(names::MERGE_PASSES, merge_passes);
-                    task_counters.incr(names::SPILLED_RECORDS, respilled);
-                    return Ok(RedOut {
-                        records,
-                        counters: task_counters,
-                        input_bytes,
-                        failed_attempts: failed,
-                    });
-                }
-                Err(Error::MapReduce(format!(
-                    "job: reduce task {task_id} failed after {max_attempts} attempts"
-                )))
+                    shuffle::merge_to_factor(segments, factor);
+                Ok((merged, merge_passes, respilled, input_bytes))
             }
         })
         .collect();
+    // (Merge tasks are infallible; into_result never errors here.)
+    let prepared: Vec<((Vec<Segment>, u64, u64, u64), f64)> =
+        cluster.execute(merge_tasks).into_result()?;
+    let make_reduce_task = |task_id: usize| {
+        let reducer = reducer.clone();
+        let ((merged, merge_passes, respilled, input_bytes), _) = &prepared[task_id];
+        move || -> Result<RedOut> {
+            let mut ctx = TaskContext::default();
+            let mut groups = 0u64;
+            let mut gm = GroupedMerge::new(merged);
+            while let Some(key) = gm.next_key() {
+                groups += 1;
+                let mut vs = gm.values();
+                reducer.reduce(&key, &mut vs, &mut ctx)?;
+            }
+            let (records, mut task_counters) = ctx.into_parts();
+            task_counters.incr(names::REDUCE_INPUT_GROUPS, groups);
+            task_counters.incr(names::REDUCE_OUTPUT_RECORDS, records.len() as u64);
+            task_counters.incr(names::MERGE_PASSES, *merge_passes);
+            task_counters.incr(names::SPILLED_RECORDS, *respilled);
+            Ok(RedOut { records, counters: task_counters, input_bytes: *input_bytes })
+        }
+    };
 
-    let reduce_results = cluster.execute(reduce_tasks)?;
+    let (reduce_results, real_reduce_failures) =
+        execute_with_retry(cluster, prepared.len(), make_reduce_task, "reduce", &job.name)?;
+    counters.incr(names::FAILED_REDUCE_ATTEMPTS, real_reduce_failures);
     let mut reduce_costs = Vec::with_capacity(reduce_results.len());
     let mut output = Vec::with_capacity(reduce_results.len());
-    for (out, secs) in reduce_results {
+    for (ti, (out, secs)) in reduce_results.into_iter().enumerate() {
         let out_bytes: u64 = out
             .records
             .iter()
             .map(|(k, v)| (k.len() + v.len()) as u64)
             .sum();
         let modeled_us = out.counters.get(names::COMPUTE_US);
+        // The fetch-merge pre-pass is part of the reduce task's work:
+        // charge its measured seconds alongside the reduce attempt's.
+        let measured = secs + prepared[ti].1;
         reduce_costs.push(TaskCost {
-            compute_s: if modeled_us > 0 { modeled_us as f64 / 1e6 } else { secs },
+            compute_s: if modeled_us > 0 { modeled_us as f64 / 1e6 } else { measured },
             input_bytes: out.input_bytes,
             output_bytes: out_bytes,
         });
         counters.merge(&out.counters);
-        counters.incr(names::FAILED_REDUCE_ATTEMPTS, out.failed_attempts);
         output.push(out.records);
     }
 
@@ -382,11 +416,50 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
         })
         .collect();
     let reduce_plan = cluster.plan_phase(&reduce_specs);
+    check_plan(&reduce_plan, "reduce", &job.name)?;
     absorb_plan(&mut counters, &reduce_plan, false);
 
+    // The signature Hadoop failure case: a reduce fetch that targets a map
+    // output on a slave that has since died fails (`FETCH_FAILURES`), and
+    // the completed map is re-executed on a live node (`MAP_RERUNS`) so
+    // the fetch can be re-planned against its new home. Repeat until every
+    // fetch source is alive (deaths during a rerun can strike again).
+    let mut map_slaves = map_plan.winning_slaves(nmaps);
+    let mut rerun_makespan_s = 0.0f64;
+    loop {
+        let dead = cluster.faults().dead();
+        let lost: Vec<usize> = (0..nmaps)
+            .filter(|&mi| {
+                map_slaves[mi].is_some_and(|s| dead.get(s).copied().unwrap_or(false))
+                    && seg_bytes[mi].iter().any(|&b| b > 0)
+            })
+            .collect();
+        if lost.is_empty() {
+            break;
+        }
+        for &mi in &lost {
+            let failed_fetches =
+                seg_bytes[mi].iter().filter(|&&b| b > 0).count() as u64;
+            counters.incr(names::FETCH_FAILURES, failed_fetches);
+            // The lost output's home no longer counts as a fetch source.
+            map_slaves[mi] = None;
+        }
+        counters.incr(names::MAP_RERUNS, lost.len() as u64);
+        let rerun_specs: Vec<TaskSpec> =
+            lost.iter().map(|&mi| map_specs[mi].clone()).collect();
+        let rerun_plan = cluster.plan_phase(&rerun_specs);
+        check_plan(&rerun_plan, "map re-execution", &job.name)?;
+        absorb_plan(&mut counters, &rerun_plan, true);
+        let rerun_slaves = rerun_plan.winning_slaves(lost.len());
+        for (i, &mi) in lost.iter().enumerate() {
+            map_slaves[mi] = rerun_slaves[i];
+        }
+        rerun_makespan_s += rerun_plan.makespan_s;
+    }
+
     // Charge every segment fetch at the locality tier between the map
-    // attempt that produced it and the reduce attempt that consumes it.
-    let map_slaves = map_plan.winning_slaves(nmaps);
+    // attempt that produced it (or its re-execution) and the reduce
+    // attempt that consumes it.
     let reduce_slaves = reduce_plan.winning_slaves(reduce_costs.len());
     let fetch = shuffle::plan_fetches(
         cluster.topology(),
@@ -405,11 +478,13 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
     );
 
     let stats = JobStats {
+        // Lost-output re-executions extend the job's critical path: the
+        // affected reducers wait for the reruns before their final fetch.
         virtual_time_s: cluster.planned_job_time_with_fetch(
             &map_plan,
             &reduce_plan,
             fetch.fetch_s,
-        ),
+        ) + rerun_makespan_s,
         wall_time_s: wall_start.elapsed().as_secs_f64(),
         map_costs,
         reduce_costs,
@@ -559,35 +634,60 @@ mod tests {
     }
 
     #[test]
-    fn transient_fault_retried_to_success() {
-        let cluster = Cluster::new(2);
-        let mut job = wordcount_job(word_splits(), false);
-        // Fail the first two attempts of map task 0 and the first attempt of
-        // reduce task 1; all should recover within 4 attempts.
-        job.fault = Some(Arc::new(|phase, task, attempt| match phase {
-            Phase::Map => task == 0 && attempt < 2,
-            Phase::Reduce => task == 1 && attempt < 1,
-        }));
-        let mut r = run(&cluster, &job).unwrap();
-        assert_eq!(counts_of(&mut r)["the"], 4);
-        assert_eq!(r.counters.get(names::FAILED_MAP_ATTEMPTS), 2);
-        assert_eq!(r.counters.get(names::FAILED_REDUCE_ATTEMPTS), 1);
+    fn injected_attempt_failures_replan_without_changing_the_answer() {
+        // Virtual attempt failures (the cluster failure domain) re-plan
+        // tasks on fresh heartbeats; job output must be byte-identical to
+        // the fault-free run for EVERY chaos seed, and across the seed
+        // sweep some attempts must actually have failed.
+        let mut clean = run(&Cluster::new(3), &wordcount_job(word_splits(), false)).unwrap();
+        let clean_counts = counts_of(&mut clean);
+        let mut total_failed = 0u64;
+        for seed in 1..=8u64 {
+            let mut cluster = Cluster::new(3);
+            cluster.set_fault_config(crate::cluster::FaultConfig {
+                task_fail_prob: 0.4,
+                seed,
+                max_attempts: 20,
+                blacklist_after: 1000,
+                ..crate::cluster::FaultConfig::default()
+            });
+            let mut faulty = run(&cluster, &wordcount_job(word_splits(), false)).unwrap();
+            assert_eq!(clean_counts, counts_of(&mut faulty), "seed {seed}");
+            let failed = faulty.counters.get(names::FAILED_MAP_ATTEMPTS)
+                + faulty.counters.get(names::FAILED_REDUCE_ATTEMPTS);
+            if failed > 0 {
+                assert!(
+                    faulty.stats.virtual_time_s > clean.stats.virtual_time_s,
+                    "seed {seed}: re-planned attempts must cost virtual time"
+                );
+            }
+            total_failed += failed;
+        }
+        assert!(total_failed > 0, "p=0.4 over 8 seeds must fail some attempts");
     }
 
     #[test]
-    fn permanent_fault_fails_job() {
-        let cluster = Cluster::new(2);
-        let mut job = wordcount_job(word_splits(), false);
-        job.max_attempts = 3;
-        job.fault = Some(Arc::new(|phase, task, _| {
-            phase == Phase::Map && task == 1
+    fn permanently_failing_task_fails_the_job_after_max_attempts() {
+        let cluster = Cluster::new(2); // default faults: max_attempts = 4
+        let mapper = Arc::new(FnMapper(|k: &[u8], _v: &[u8], _ctx: &mut TaskContext| {
+            if k == [1] {
+                Err(Error::MapReduce("poisoned split".into()))
+            } else {
+                Ok(())
+            }
         }));
+        let job = JobBuilder::new(
+            "doomed",
+            vec![vec![(vec![0], vec![])], vec![(vec![1], vec![])]],
+            mapper,
+        )
+        .build();
         let err = run(&cluster, &job).unwrap_err();
-        assert!(err.to_string().contains("failed after 3 attempts"), "{err}");
+        assert!(err.to_string().contains("failed after 4 attempts"), "{err}");
     }
 
     #[test]
-    fn mapper_error_also_retried() {
+    fn real_task_error_reexecuted_on_a_fresh_round() {
         static CALLS: AtomicUsize = AtomicUsize::new(0);
         let cluster = Cluster::new(1);
         let mapper = Arc::new(FnMapper(|_k: &[u8], _v: &[u8], _ctx: &mut TaskContext| {
@@ -601,6 +701,65 @@ mod tests {
         let job = JobBuilder::new("flaky", vec![vec![(vec![], vec![])]], mapper).build();
         let r = run(&cluster, &job).unwrap();
         assert_eq!(r.counters.get(names::FAILED_MAP_ATTEMPTS), 1);
+    }
+
+    #[test]
+    fn failed_task_does_not_discard_completed_siblings() {
+        // The partial-results fix: split 0's mapper fails once, split 1's
+        // succeeds on round one and must be computed exactly once.
+        static SPLIT0_CALLS: AtomicUsize = AtomicUsize::new(0);
+        static SPLIT1_CALLS: AtomicUsize = AtomicUsize::new(0);
+        let cluster = Cluster::new(2);
+        let mapper = Arc::new(FnMapper(|k: &[u8], _v: &[u8], ctx: &mut TaskContext| {
+            if k == [0] {
+                if SPLIT0_CALLS.fetch_add(1, Ordering::SeqCst) == 0 {
+                    return Err(Error::MapReduce("flaky".into()));
+                }
+            } else {
+                SPLIT1_CALLS.fetch_add(1, Ordering::SeqCst);
+            }
+            ctx.emit(k.to_vec(), vec![]);
+            Ok(())
+        }));
+        let job = JobBuilder::new(
+            "partial",
+            vec![vec![(vec![0], vec![])], vec![(vec![1], vec![])]],
+            mapper,
+        )
+        .build();
+        let r = run(&cluster, &job).unwrap();
+        assert_eq!(r.output.len(), 2);
+        assert_eq!(SPLIT1_CALLS.load(Ordering::SeqCst), 1, "sibling reused, not rerun");
+        assert_eq!(SPLIT0_CALLS.load(Ordering::SeqCst), 2, "failed task re-executed");
+    }
+
+    #[test]
+    fn node_death_triggers_map_rerun_and_fetch_failures() {
+        // 2 slaves; slave 1 dies during the reduce phase: the map outputs
+        // it held must be re-executed on slave 0 and every fetch that
+        // targeted them charged as failed.
+        let mut cluster = Cluster::new(2);
+        cluster.set_fault_config(crate::cluster::FaultConfig {
+            node_deaths: vec![crate::cluster::NodeDeath { slave: 1, at_heartbeat: 7 }],
+            ..crate::cluster::FaultConfig::default()
+        });
+        // 6 splits spread over both slaves' 4 slots.
+        let splits: Vec<Vec<KV>> = (0..6)
+            .map(|i| vec![(vec![], format!("word{} word{} shared", i, i).into_bytes())])
+            .collect();
+        let clean = run(&Cluster::new(2), &wordcount_job(splits.clone(), false)).unwrap();
+        let mut r = run(&cluster, &wordcount_job(splits, false)).unwrap();
+        assert_eq!(r.counters.get(names::NODE_DEATHS), 1);
+        assert!(
+            r.counters.get(names::MAP_RERUNS) > 0,
+            "lost map outputs must re-execute: {:?}",
+            r.counters
+        );
+        assert!(r.counters.get(names::FETCH_FAILURES) > 0);
+        // Output identical to the fault-free run.
+        let mut clean = clean;
+        assert_eq!(counts_of(&mut clean), counts_of(&mut r));
+        assert!(r.stats.virtual_time_s > clean.stats.virtual_time_s);
     }
 
     #[test]

@@ -1,22 +1,15 @@
 //! Job configuration (Hadoop's JobConf) with a builder API.
+//!
+//! Failure handling is no longer a per-job concern: the legacy
+//! `Job::fault` injector and `Job::max_attempts` knob were replaced by the
+//! cluster-wide failure domain (`[faults]` config →
+//! [`crate::cluster::FaultConfig`]), where attempt failures, node deaths
+//! and blacklisting are decided for every job alike. See DESIGN.md §2.9.
 
 use std::sync::Arc;
 
 use super::shuffle::ShuffleConfig;
 use super::types::{HashPartitioner, InputSplit, Mapper, Partitioner, Reducer};
-
-/// Predicate deciding whether a task attempt should be failed artificially:
-/// `(phase, task_id, attempt) -> fail?`. Used by fault-tolerance tests.
-pub type FaultInjector = Arc<dyn Fn(Phase, usize, usize) -> bool + Send + Sync>;
-
-/// Which phase a task belongs to.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Phase {
-    /// Map side.
-    Map,
-    /// Reduce side.
-    Reduce,
-}
 
 /// A fully-specified MapReduce job.
 pub struct Job {
@@ -38,10 +31,6 @@ pub struct Job {
     pub num_reducers: usize,
     /// Key router.
     pub partitioner: Arc<dyn Partitioner>,
-    /// Attempts per task before the job fails (Hadoop default: 4).
-    pub max_attempts: usize,
-    /// Optional fault injection for tests.
-    pub fault: Option<FaultInjector>,
     /// Per-job shuffle knobs (`None` = the cluster's configuration), like
     /// Hadoop's per-job `io.sort.*` overrides in the JobConf.
     pub shuffle: Option<ShuffleConfig>,
@@ -65,8 +54,6 @@ impl JobBuilder {
                 combiner: None,
                 num_reducers: 1,
                 partitioner: Arc::new(HashPartitioner),
-                max_attempts: 4,
-                fault: None,
                 shuffle: None,
             },
         }
@@ -95,18 +82,6 @@ impl JobBuilder {
     /// Replace the partitioner.
     pub fn partitioner(mut self, p: Arc<dyn Partitioner>) -> Self {
         self.job.partitioner = p;
-        self
-    }
-
-    /// Set max attempts per task.
-    pub fn max_attempts(mut self, n: usize) -> Self {
-        self.job.max_attempts = n.max(1);
-        self
-    }
-
-    /// Install a fault injector.
-    pub fn fault_injector(mut self, f: FaultInjector) -> Self {
-        self.job.fault = Some(f);
         self
     }
 
@@ -139,7 +114,6 @@ mod tests {
         assert!(j.reducer.is_none());
         assert!(j.combiner.is_none());
         assert_eq!(j.num_reducers, 1);
-        assert_eq!(j.max_attempts, 4);
         assert!(j.split_hosts.is_empty());
         assert!(j.shuffle.is_none(), "cluster shuffle config by default");
     }
@@ -173,14 +147,19 @@ mod tests {
     }
 
     #[test]
-    fn builder_overrides() {
+    fn builder_clamps_reducers() {
         let j = JobBuilder::new(
             "t",
             vec![],
             Arc::new(FnMapper(|_: &[u8], _: &[u8], _: &mut _| Ok(()))),
         )
-        .max_attempts(0)
+        .reducer(
+            Arc::new(crate::mapreduce::types::FnReducer(
+                |_: &[u8], _: &mut dyn crate::mapreduce::types::Values, _: &mut _| Ok(()),
+            )),
+            0,
+        )
         .build();
-        assert_eq!(j.max_attempts, 1, "max_attempts clamps to >= 1");
+        assert_eq!(j.num_reducers, 1, "num_reducers clamps to >= 1");
     }
 }

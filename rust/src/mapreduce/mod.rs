@@ -6,9 +6,10 @@
 //! side, locality-charged fetches and a streaming grouped merge on the
 //! reduce side), and a [`Reducer`] per partition consuming each key
 //! group's values as a stream. Tasks execute on the simulated
-//! [`crate::cluster::Cluster`] with per-task retry and fault injection;
-//! every task's measured cost feeds the virtual-time model that
-//! reproduces the paper's scaling numbers.
+//! [`crate::cluster::Cluster`]; failed tasks are re-executed on fresh
+//! rounds and the cluster's failure domain ([`crate::cluster::faults`])
+//! injects attempt failures, node deaths and blacklisting into the
+//! virtual-time model that reproduces the paper's scaling numbers.
 
 pub mod counters;
 pub mod engine;
@@ -18,7 +19,7 @@ pub mod types;
 
 pub use counters::{names, Counters};
 pub use engine::{run, JobResult, JobStats};
-pub use job::{FaultInjector, Job, JobBuilder, Phase};
+pub use job::{Job, JobBuilder};
 pub use shuffle::ShuffleConfig;
 pub use types::{
     Bytes, FnMapper, FnReducer, HashPartitioner, InputSplit, Mapper, Partitioner,

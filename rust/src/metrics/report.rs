@@ -1,5 +1,6 @@
-//! Shuffle reporting: turn the engine's spill/merge/fetch counters into a
-//! compact summary for the CLI, benches and experiment JSON.
+//! Shuffle and fault reporting: turn the engine's spill/merge/fetch and
+//! failure-domain counters into compact summaries for the CLI, benches
+//! and experiment JSON.
 
 use crate::mapreduce::{names, Counters};
 use crate::util::fmt::human_bytes;
@@ -71,9 +72,82 @@ impl ShuffleSummary {
     }
 }
 
+/// Failure-domain summary of one job or phase: what the `[faults]`
+/// machinery did while it ran (counter glossary in DESIGN.md §2.9).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultSummary {
+    /// Failed map attempts (real task errors + injected virtual failures).
+    pub failed_map_attempts: u64,
+    /// Failed reduce attempts.
+    pub failed_reduce_attempts: u64,
+    /// Completed maps re-executed because the slave holding their output
+    /// died.
+    pub map_reruns: u64,
+    /// Reduce-side segment fetches that targeted a dead slave's output.
+    pub fetch_failures: u64,
+    /// Slaves blacklisted (no further attempts assigned to them).
+    pub blacklisted_slaves: u64,
+    /// Scheduled node deaths that fired.
+    pub node_deaths: u64,
+}
+
+impl FaultSummary {
+    /// Extract the summary from merged job counters.
+    pub fn from_counters(c: &Counters) -> Self {
+        Self {
+            failed_map_attempts: c.get(names::FAILED_MAP_ATTEMPTS),
+            failed_reduce_attempts: c.get(names::FAILED_REDUCE_ATTEMPTS),
+            map_reruns: c.get(names::MAP_RERUNS),
+            fetch_failures: c.get(names::FETCH_FAILURES),
+            blacklisted_slaves: c.get(names::BLACKLISTED_SLAVES),
+            node_deaths: c.get(names::NODE_DEATHS),
+        }
+    }
+
+    /// Did anything fail at all?
+    pub fn any(&self) -> bool {
+        *self != Self::default()
+    }
+
+    /// One-line human-readable rendering (counter names kept verbatim so
+    /// chaos runs are grep-able).
+    pub fn render(&self) -> String {
+        format!(
+            "MAP_RERUNS={} FETCH_FAILURES={} FAILED_MAP_ATTEMPTS={} \
+             FAILED_REDUCE_ATTEMPTS={} BLACKLISTED_SLAVES={} NODE_DEATHS={}",
+            self.map_reruns,
+            self.fetch_failures,
+            self.failed_map_attempts,
+            self.failed_reduce_attempts,
+            self.blacklisted_slaves,
+            self.node_deaths,
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fault_summary_reads_all_counters() {
+        let mut c = Counters::default();
+        c.incr(names::FAILED_MAP_ATTEMPTS, 3);
+        c.incr(names::FAILED_REDUCE_ATTEMPTS, 1);
+        c.incr(names::MAP_RERUNS, 2);
+        c.incr(names::FETCH_FAILURES, 5);
+        c.incr(names::BLACKLISTED_SLAVES, 1);
+        c.incr(names::NODE_DEATHS, 1);
+        let s = FaultSummary::from_counters(&c);
+        assert_eq!(s.failed_map_attempts, 3);
+        assert_eq!(s.map_reruns, 2);
+        assert_eq!(s.fetch_failures, 5);
+        assert!(s.any());
+        let line = s.render();
+        assert!(line.contains("MAP_RERUNS=2"), "{line}");
+        assert!(line.contains("NODE_DEATHS=1"), "{line}");
+        assert!(!FaultSummary::default().any());
+    }
 
     #[test]
     fn summary_reads_all_counters() {

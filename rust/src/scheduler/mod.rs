@@ -28,6 +28,7 @@ pub use policy::Policy;
 pub use rack::RackTopology;
 pub use speculative::SpeculationConfig;
 
+use crate::cluster::faults::{FaultDomain, NodeState};
 use crate::cluster::{NetworkModel, TaskCost};
 
 /// Comparison slack for virtual-time arithmetic.
@@ -108,6 +109,16 @@ pub struct SchedulePlan {
     pub input_read_s: f64,
     /// Sum of winning-attempt durations (serial work).
     pub total_work_s: f64,
+    /// Attempts that failed (fault-injected) and were re-planned.
+    pub failed_attempts: u64,
+    /// Scheduled node deaths that fired during this phase.
+    pub deaths: u64,
+    /// Slaves blacklisted during this phase, with the virtual time the
+    /// blacklist took effect — no attempt may start on them afterwards.
+    pub blacklisted: Vec<(usize, f64)>,
+    /// Tasks that exhausted their attempts (or had no live slave left).
+    /// Non-empty means the phase — and therefore the job — failed.
+    pub failed_tasks: Vec<usize>,
 }
 
 impl SchedulePlan {
@@ -158,6 +169,9 @@ pub struct JobTracker<'a> {
     slots_per_slave: usize,
     model: &'a NetworkModel,
     cfg: &'a TrackerConfig,
+    /// The cluster's failure domain: node lifecycles, seeded attempt
+    /// failures, blacklist counts. `None` = nothing ever fails.
+    faults: Option<&'a FaultDomain>,
 }
 
 impl<'a> JobTracker<'a> {
@@ -169,7 +183,23 @@ impl<'a> JobTracker<'a> {
         model: &'a NetworkModel,
         cfg: &'a TrackerConfig,
     ) -> Self {
-        Self { topo, speeds, slots_per_slave: slots_per_slave.max(1), model, cfg }
+        Self {
+            topo,
+            speeds,
+            slots_per_slave: slots_per_slave.max(1),
+            model,
+            cfg,
+            faults: None,
+        }
+    }
+
+    /// Attach the cluster's failure domain: heartbeats drive scheduled
+    /// node deaths, attempts may fail and re-plan, failing slaves get
+    /// blacklisted. [`crate::cluster::Cluster::plan_phase`] always attaches
+    /// it; a tracker without one behaves exactly as before faults existed.
+    pub fn with_faults(mut self, faults: &'a FaultDomain) -> Self {
+        self.faults = Some(faults);
+        self
     }
 
     /// Virtual duration of one attempt of `spec` on `slave` at `locality`.
@@ -184,44 +214,195 @@ impl<'a> JobTracker<'a> {
     /// Simulate the heartbeat protocol over `tasks` and return the plan.
     ///
     /// Deterministic: heartbeats are staggered by slave id, ties break on
-    /// the lower id, and attempt durations are pure functions of the cost
-    /// model — the same inputs always produce the same plan.
+    /// the lower id, attempt durations are pure functions of the cost
+    /// model, and fault injection is a seeded stream — the same inputs
+    /// always produce the same plan.
+    ///
+    /// With a failure domain attached, each processed heartbeat advances
+    /// the cluster-wide clock: scheduled deaths fire (running attempts on
+    /// the dead slave are *re-planned* on live nodes with fresh locality,
+    /// never retried in place), sampled attempt failures are reported at
+    /// the virtual time they occur, repeated failures blacklist the slave
+    /// (it keeps heartbeating but receives no further attempts), and a
+    /// task that exhausts [`crate::cluster::FaultConfig::max_attempts`]
+    /// lands in [`SchedulePlan::failed_tasks`].
     pub fn plan(&self, tasks: &[TaskSpec]) -> SchedulePlan {
         let mut plan = SchedulePlan::default();
         if tasks.is_empty() {
             return plan;
         }
+        if let Some(f) = self.faults {
+            // Hadoop fault counts are per-job: a fresh phase starts clean
+            // (dead/blacklisted lifecycles persist regardless).
+            f.begin_phase();
+        }
         let m = self.topo.num_nodes();
         let hb = self.cfg.heartbeat_s.max(1e-3);
+        let max_attempts = self
+            .faults
+            .map_or(4, |f| f.config().max_attempts)
+            .max(1);
 
         // Slot s*slots_per_slave + j is slot j of slave s.
         let mut busy_until = vec![0.0f64; m * self.slots_per_slave];
-        // Pending queue in submission order.
+        // Pending queue in submission order; re-planned tasks jump the queue.
         let mut pending: Vec<usize> = (0..tasks.len()).collect();
         // Completion time per task (INFINITY until assigned/resolved).
         let mut done_at = vec![f64::INFINITY; tasks.len()];
         // Final (end, duration) of the winning attempt, once known.
         let mut finish: Vec<Option<(f64, f64)>> = vec![None; tasks.len()];
         let mut primary: Vec<Option<RunningAttempt>> = vec![None; tasks.len()];
+        // Index into plan.attempts of the task's current winning attempt.
+        let mut winner_idx: Vec<Option<usize>> = vec![None; tasks.len()];
         let mut speculated = vec![false; tasks.len()];
+        // The losing side of a resolved speculation race, kept as a live
+        // backup until the race's win time: (attempt idx, slave, slot,
+        // natural end). If the winner's slave dies first, the backup
+        // inherits the task instead of a from-scratch re-execution.
+        let mut backup: Vec<Option<(usize, usize, usize, f64)>> =
+            vec![None; tasks.len()];
         let mut retired = vec![false; tasks.len()];
+        // Fault-injected failures per task (max_attempts enforcement).
+        let mut failures_of = vec![0usize; tasks.len()];
         let mut remaining = tasks.len();
         // Staggered heartbeat phases so slaves don't report in lockstep.
+        // Slaves already dead (an earlier job's death) never heartbeat.
         let mut next_hb: Vec<f64> = (0..m).map(|s| hb * s as f64 / m as f64).collect();
+        if let Some(f) = self.faults {
+            for (s, t) in next_hb.iter_mut().enumerate() {
+                if f.node_state(s) == NodeState::Dead {
+                    *t = f64::INFINITY;
+                }
+            }
+        }
         // Delay-scheduling skip count per slave.
         let mut skips = vec![0usize; m];
+        // In-flight failure reports: (virtual time, task, slave, was the
+        // attempt a speculative duplicate). A failing attempt is only
+        // acted on when its failure *reaches* the tracker; a failed
+        // duplicate never re-plans its task (the primary is still running).
+        let mut failure_reports: Vec<(f64, usize, usize, bool)> = Vec::new();
 
         while remaining > 0 {
-            // Earliest-reporting slave; lower id wins ties.
-            let mut s = 0usize;
-            for i in 1..m {
-                if next_hb[i] < next_hb[s] - EPS {
+            // Earliest-reporting live slave; lower id wins ties.
+            let mut s = usize::MAX;
+            for i in 0..m {
+                if next_hb[i].is_finite()
+                    && (s == usize::MAX || next_hb[i] < next_hb[s] - EPS)
+                {
                     s = i;
                 }
+            }
+            if s == usize::MAX {
+                // Every slave is dead: whatever has not finished is lost.
+                for (t, &r) in retired.iter().enumerate() {
+                    if !r {
+                        plan.failed_tasks.push(t);
+                    }
+                }
+                break;
             }
             let now = next_hb[s];
             next_hb[s] += hb;
             plan.heartbeats += 1;
+
+            // Scheduled node deaths fire on the cluster-wide heartbeat
+            // clock. A running attempt on the dead slave is lost; if its
+            // task still has a live speculative duplicate in flight, the
+            // duplicate inherits the task (that is what the backup is
+            // *for*), otherwise the task goes back to the head of the
+            // queue for a fresh placement.
+            if let Some(f) = self.faults {
+                for d in f.tick_heartbeat() {
+                    plan.deaths += 1;
+                    next_hb[d] = f64::INFINITY;
+                    for t in 0..tasks.len() {
+                        if retired[t] || done_at[t] <= now + EPS {
+                            continue;
+                        }
+                        let Some(w) = winner_idx[t] else { continue };
+                        if plan.attempts[w].slave != d {
+                            continue;
+                        }
+                        plan.attempts[w].won = false;
+                        plan.attempts[w].end_s = now;
+                        if plan.attempts[w].speculative {
+                            // The duplicate had pre-claimed the race; the
+                            // death undoes its win.
+                            plan.speculative_wins =
+                                plan.speculative_wins.saturating_sub(1);
+                        }
+                        if let Some((bi, bslave, bslot, bend)) = backup[t].take() {
+                            if f.node_state(bslave) != NodeState::Dead {
+                                // Promote the surviving duplicate: it was
+                                // never killed (the winner never reported)
+                                // and runs to its natural end.
+                                plan.attempts[bi].won = true;
+                                plan.attempts[bi].end_s = bend;
+                                busy_until[bslot] = bend;
+                                winner_idx[t] = Some(bi);
+                                done_at[t] = bend;
+                                finish[t] =
+                                    Some((bend, bend - plan.attempts[bi].start_s));
+                                if plan.attempts[bi].speculative {
+                                    plan.speculative_wins += 1;
+                                }
+                                continue;
+                            }
+                        }
+                        winner_idx[t] = None;
+                        primary[t] = None;
+                        finish[t] = None;
+                        done_at[t] = f64::INFINITY;
+                        speculated[t] = false;
+                        pending.insert(0, t);
+                    }
+                }
+            }
+
+            // Failure reports that have reached the tracker by now: count
+            // the attempt, maybe blacklist the slave, and re-plan the task
+            // unless it just exhausted its attempts.
+            if !failure_reports.is_empty() {
+                let mut due: Vec<(f64, usize, usize, bool)> = Vec::new();
+                failure_reports.retain(|&(t, task, slave, spec)| {
+                    if t <= now + EPS {
+                        due.push((t, task, slave, spec));
+                        false
+                    } else {
+                        true
+                    }
+                });
+                due.sort_by(|a, b| {
+                    a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+                });
+                for (_, task, slave, was_speculative) in due {
+                    plan.failed_attempts += 1;
+                    if let Some(f) = self.faults {
+                        if f.record_failure(slave) {
+                            plan.blacklisted.push((slave, now));
+                        }
+                    }
+                    if was_speculative {
+                        // The primary attempt is still running: the failed
+                        // duplicate costs a slot and a tracker fault, not
+                        // a re-plan, and it never counts against the
+                        // task's attempt budget (Hadoop kills duplicates
+                        // without charging the task).
+                        continue;
+                    }
+                    failures_of[task] += 1;
+                    if failures_of[task] >= max_attempts {
+                        if !retired[task] {
+                            retired[task] = true;
+                            remaining -= 1;
+                            plan.failed_tasks.push(task);
+                        }
+                    } else {
+                        pending.insert(0, task);
+                    }
+                }
+            }
 
             // Retire tasks whose winning attempt has finished by now.
             for task in 0..tasks.len() {
@@ -232,6 +413,31 @@ impl<'a> JobTracker<'a> {
             }
             if remaining == 0 {
                 break;
+            }
+
+            // Livelock guard: work is queued but every slave is dead or
+            // blacklisted — nothing can ever take it.
+            if !pending.is_empty()
+                && self.faults.is_some_and(|f| !f.any_assignable())
+            {
+                for &t in &pending {
+                    if !retired[t] {
+                        retired[t] = true;
+                        remaining -= 1;
+                        plan.failed_tasks.push(t);
+                    }
+                }
+                pending.clear();
+                if remaining == 0 {
+                    break;
+                }
+                continue;
+            }
+
+            // A blacklisted slave still heartbeats (its running attempts
+            // finish) but is assigned no further work.
+            if self.faults.is_some_and(|f| !f.assignable(s)) {
+                continue;
             }
 
             let mut skipped_for_locality = false;
@@ -271,6 +477,26 @@ impl<'a> JobTracker<'a> {
                     let Some((pos, locality)) = choice else { continue };
                     let task = pending.remove(pos);
                     let dur = self.duration(&tasks[task], s, locality);
+                    // Seeded fault injection: a doomed attempt occupies its
+                    // slot until it dies partway through, then reports.
+                    if let Some(frac) =
+                        self.faults.and_then(|f| f.sample_attempt_failure())
+                    {
+                        let fail_at = now + dur * frac;
+                        busy_until[slot] = fail_at;
+                        failure_reports.push((fail_at, task, s, false));
+                        plan.attempts.push(Attempt {
+                            task,
+                            slave: s,
+                            slot,
+                            start_s: now,
+                            end_s: fail_at,
+                            locality,
+                            speculative: false,
+                            won: false,
+                        });
+                        continue;
+                    }
                     let end = now + dur;
                     busy_until[slot] = end;
                     done_at[task] = end;
@@ -281,6 +507,7 @@ impl<'a> JobTracker<'a> {
                         slot,
                         attempt_idx: plan.attempts.len(),
                     });
+                    winner_idx[task] = Some(plan.attempts.len());
                     plan.attempts.push(Attempt {
                         task,
                         slave: s,
@@ -323,6 +550,29 @@ impl<'a> JobTracker<'a> {
                     let orig = primary[task].unwrap();
                     let locality = classify(s, &tasks[task].hosts, self.topo);
                     let dur = self.duration(&tasks[task], s, locality);
+                    // Duplicates draw from the same seeded failure stream
+                    // as primaries: a doomed duplicate dies partway, the
+                    // primary keeps running, and the race never resolves
+                    // in the duplicate's favor.
+                    if let Some(frac) =
+                        self.faults.and_then(|f| f.sample_attempt_failure())
+                    {
+                        let fail_at = now + dur * frac;
+                        busy_until[slot] = fail_at;
+                        failure_reports.push((fail_at, task, s, true));
+                        plan.speculative_attempts += 1;
+                        plan.attempts.push(Attempt {
+                            task,
+                            slave: s,
+                            slot,
+                            start_s: now,
+                            end_s: fail_at,
+                            locality,
+                            speculative: true,
+                            won: false,
+                        });
+                        continue;
+                    }
                     let spec_end = now + dur;
                     let win_end = orig.end.min(spec_end);
                     // The loser is killed the moment the winner reports;
@@ -336,9 +586,20 @@ impl<'a> JobTracker<'a> {
                         plan.speculative_wins += 1;
                         plan.attempts[orig.attempt_idx].won = false;
                         plan.attempts[orig.attempt_idx].end_s = win_end;
+                        winner_idx[task] = Some(plan.attempts.len());
                         finish[task] = Some((win_end, win_end - now));
+                        // The original keeps running until the winner
+                        // reports — it survives the winner's node death.
+                        backup[task] = Some((
+                            orig.attempt_idx,
+                            plan.attempts[orig.attempt_idx].slave,
+                            orig.slot,
+                            orig.end,
+                        ));
                     } else {
                         finish[task] = Some((win_end, win_end - orig.start));
+                        backup[task] =
+                            Some((plan.attempts.len(), s, slot, spec_end));
                     }
                     plan.attempts.push(Attempt {
                         task,
@@ -562,6 +823,214 @@ mod tests {
         }
         // Short vectors are tolerated (tasks beyond the bound dropped).
         assert_eq!(plan.winning_slaves(2).len(), 2);
+    }
+
+    #[test]
+    fn scheduled_death_replans_running_attempts_on_live_nodes() {
+        use crate::cluster::{FaultConfig, FaultDomain, NodeDeath};
+        let topo = RackTopology::single(2);
+        let model = quiet_model();
+        let cfg = tracker_cfg(Policy::Fifo, false);
+        let speeds = [1.0, 1.0];
+        let faults = FaultDomain::new(
+            2,
+            FaultConfig {
+                node_deaths: vec![NodeDeath { slave: 1, at_heartbeat: 4 }],
+                ..FaultConfig::default()
+            },
+        );
+        let jt = JobTracker::new(&topo, &speeds, 1, &model, &cfg).with_faults(&faults);
+        let tasks = vec![compute_task(10.0, vec![]), compute_task(10.0, vec![])];
+        let plan = jt.plan(&tasks);
+        assert_eq!(plan.deaths, 1, "{plan:?}");
+        assert!(plan.failed_tasks.is_empty(), "both tasks must finish: {plan:?}");
+        // Every winning attempt ran on the surviving slave.
+        let winners: Vec<&Attempt> = plan.attempts.iter().filter(|a| a.won).collect();
+        assert_eq!(winners.len(), 2);
+        assert!(winners.iter().all(|a| a.slave == 0), "{plan:?}");
+        // The attempt lost to the death was truncated at the death time and
+        // no attempt ever starts on the dead slave afterwards.
+        let lost: Vec<&Attempt> =
+            plan.attempts.iter().filter(|a| a.slave == 1).collect();
+        assert_eq!(lost.len(), 1);
+        assert!(!lost[0].won);
+        assert!((lost[0].end_s - 1.5).abs() < 1e-9, "{plan:?}");
+        // Re-execution serializes on the lone survivor: makespan ~ 20s.
+        assert!(plan.makespan_s > 19.0, "{plan:?}");
+    }
+
+    #[test]
+    fn surviving_speculative_duplicate_inherits_task_when_winner_dies() {
+        // t1's primary runs on slave 1; a speculative duplicate launches
+        // on slave 0 and loses the pre-resolved race. Slave 1 then dies
+        // BEFORE the race's win time: the live duplicate must inherit the
+        // task (no from-scratch third attempt).
+        use crate::cluster::{FaultConfig, FaultDomain, NodeDeath};
+        let topo = RackTopology::single(2);
+        let model = quiet_model();
+        let cfg = tracker_cfg(Policy::Fifo, true); // speculation ON
+        let speeds = [1.0, 1.0];
+        let faults = FaultDomain::new(
+            2,
+            FaultConfig {
+                // Tick 8 = slave 1's heartbeat at t=3.5, after the
+                // duplicate launches at t=3.0 and before the 8.5s win.
+                node_deaths: vec![NodeDeath { slave: 1, at_heartbeat: 8 }],
+                ..FaultConfig::default()
+            },
+        );
+        let jt = JobTracker::new(&topo, &speeds, 1, &model, &cfg).with_faults(&faults);
+        let tasks = vec![compute_task(1.0, vec![]), compute_task(8.0, vec![])];
+        let plan = jt.plan(&tasks);
+        assert_eq!(plan.deaths, 1, "{plan:?}");
+        assert!(plan.failed_tasks.is_empty(), "{plan:?}");
+        assert_eq!(
+            plan.attempts.len(),
+            3,
+            "t0 + t1 primary + t1 duplicate — no third t1 attempt: {plan:?}"
+        );
+        let winner = plan
+            .attempts
+            .iter()
+            .find(|a| a.task == 1 && a.won)
+            .expect("t1 must finish");
+        assert!(winner.speculative, "the duplicate inherits the task: {plan:?}");
+        assert_eq!(winner.slave, 0);
+        // The duplicate runs to its natural end: launched at t=3.0 with an
+        // 8s task -> finishes at 11.0, which is also the makespan.
+        assert!((winner.end_s - 11.0).abs() < 1e-9, "{plan:?}");
+        assert!((plan.makespan_s - 11.0).abs() < 1e-9, "{plan:?}");
+        assert!(plan.speculative_wins >= 1, "promotion counts as a win");
+    }
+
+    #[test]
+    fn injected_attempt_failures_replan_and_are_deterministic() {
+        use crate::cluster::{FaultConfig, FaultDomain};
+        let topo = RackTopology::single(4);
+        let model = quiet_model();
+        let cfg = tracker_cfg(Policy::Fifo, false);
+        let speeds = [1.0; 4];
+        let tasks: Vec<TaskSpec> =
+            (0..20).map(|_| compute_task(1.0, vec![])).collect();
+        let run = || {
+            let faults = FaultDomain::new(
+                4,
+                FaultConfig {
+                    task_fail_prob: 0.5,
+                    seed: 11,
+                    max_attempts: 1000,
+                    blacklist_after: 1000,
+                    ..FaultConfig::default()
+                },
+            );
+            JobTracker::new(&topo, &speeds, 1, &model, &cfg)
+                .with_faults(&faults)
+                .plan(&tasks)
+        };
+        let plan = run();
+        assert!(plan.failed_attempts > 0, "p=0.5 must fail attempts: {plan:?}");
+        assert!(plan.failed_tasks.is_empty());
+        let wins = plan.attempts.iter().filter(|a| a.won).count();
+        assert_eq!(wins, 20, "every task still completes exactly once");
+        // Failed attempts occupy their slot until they die, then the task
+        // re-plans: total attempts = wins + failures.
+        assert_eq!(
+            plan.attempts.len() as u64,
+            20 + plan.failed_attempts,
+            "{plan:?}"
+        );
+        // Seeded chaos is reproducible bit for bit.
+        let again = run();
+        assert_eq!(again.failed_attempts, plan.failed_attempts);
+        assert!((again.makespan_s - plan.makespan_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn blacklisted_slave_receives_zero_attempts() {
+        use crate::cluster::{FaultConfig, FaultDomain};
+        let topo = RackTopology::single(3);
+        let model = quiet_model();
+        let cfg = tracker_cfg(Policy::Fifo, false);
+        let speeds = [1.0; 3];
+        let faults = FaultDomain::new(
+            3,
+            FaultConfig { blacklist_after: 1, ..FaultConfig::default() },
+        );
+        assert!(faults.record_failure(1), "one failure blacklists at threshold 1");
+        let tasks: Vec<TaskSpec> =
+            (0..9).map(|_| compute_task(1.0, vec![])).collect();
+        let jt = JobTracker::new(&topo, &speeds, 1, &model, &cfg).with_faults(&faults);
+        let plan = jt.plan(&tasks);
+        assert!(plan.failed_tasks.is_empty());
+        assert!(
+            plan.attempts.iter().all(|a| a.slave != 1),
+            "blacklisted slave must receive zero attempts: {plan:?}"
+        );
+        assert_eq!(plan.attempts.iter().filter(|a| a.won).count(), 9);
+    }
+
+    #[test]
+    fn in_plan_blacklisting_stops_further_attempts_immediately() {
+        use crate::cluster::{FaultConfig, FaultDomain};
+        let topo = RackTopology::single(4);
+        let model = quiet_model();
+        let cfg = tracker_cfg(Policy::Fifo, false);
+        let speeds = [1.0; 4];
+        let faults = FaultDomain::new(
+            4,
+            FaultConfig {
+                task_fail_prob: 0.5,
+                seed: 3,
+                max_attempts: 1000,
+                blacklist_after: 2,
+                ..FaultConfig::default()
+            },
+        );
+        let tasks: Vec<TaskSpec> =
+            (0..40).map(|_| compute_task(1.0, vec![])).collect();
+        let jt = JobTracker::new(&topo, &speeds, 1, &model, &cfg).with_faults(&faults);
+        let plan = jt.plan(&tasks);
+        assert!(
+            !plan.blacklisted.is_empty(),
+            "p=0.5 with threshold 2 must blacklist someone: {plan:?}"
+        );
+        for &(slave, when) in &plan.blacklisted {
+            assert!(
+                plan.attempts
+                    .iter()
+                    .all(|a| a.slave != slave || a.start_s <= when + EPS),
+                "slave {slave} got an attempt after its blacklist at {when}: {plan:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn all_slaves_dead_fails_the_remaining_tasks() {
+        use crate::cluster::{FaultConfig, FaultDomain, NodeDeath};
+        let topo = RackTopology::single(2);
+        let model = quiet_model();
+        let cfg = tracker_cfg(Policy::Fifo, false);
+        let speeds = [1.0, 1.0];
+        let faults = FaultDomain::new(
+            2,
+            FaultConfig {
+                node_deaths: vec![
+                    NodeDeath { slave: 0, at_heartbeat: 3 },
+                    NodeDeath { slave: 1, at_heartbeat: 3 },
+                ],
+                ..FaultConfig::default()
+            },
+        );
+        let tasks: Vec<TaskSpec> =
+            (0..6).map(|_| compute_task(50.0, vec![])).collect();
+        let jt = JobTracker::new(&topo, &speeds, 1, &model, &cfg).with_faults(&faults);
+        let plan = jt.plan(&tasks);
+        assert_eq!(plan.deaths, 2);
+        assert!(
+            !plan.failed_tasks.is_empty(),
+            "with every slave dead the phase must report failure: {plan:?}"
+        );
+        assert!(plan.attempts.iter().all(|a| !a.won));
     }
 
     #[test]

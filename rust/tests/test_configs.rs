@@ -9,7 +9,7 @@ use psch::runtime::KernelRuntime;
 
 #[test]
 fn shipped_configs_parse_and_validate() {
-    for path in ["configs/paper.toml", "configs/quick.toml"] {
+    for path in ["configs/paper.toml", "configs/quick.toml", "configs/chaos.toml"] {
         let cfg = Config::load(path).unwrap_or_else(|e| panic!("{path}: {e}"));
         cfg.validate().unwrap();
     }
@@ -18,6 +18,14 @@ fn shipped_configs_parse_and_validate() {
     assert_eq!(paper.cluster.slots_per_slave, 2);
     assert!((paper.cluster.network.coord_per_machine_s - 3.5).abs() < 1e-12);
     assert_eq!(paper.algo.lanczos_steps, 60);
+    // The chaos example actually schedules faults.
+    let chaos = Config::load("configs/chaos.toml").unwrap();
+    assert!(chaos.faults.is_active());
+    assert!(chaos.faults.task_fail_prob > 0.0);
+    assert_eq!(chaos.faults.node_deaths.len(), 1);
+    assert!(chaos.faults.node_deaths[0].slave < chaos.cluster.slaves);
+    // And the fault-free configs stay inert.
+    assert!(!Config::load("configs/quick.toml").unwrap().faults.is_active());
 }
 
 #[test]

@@ -1,0 +1,232 @@
+//! Integration: the unified failure domain across scheduler, engine,
+//! shuffle and DFS — the chaos story the paper credits Hadoop for.
+//!
+//! Determinism is the headline invariant: the failure domain only decides
+//! *where and when* work re-executes, never *what* it computes, so a run
+//! with seeded faults on must produce byte-identical output to a run with
+//! faults off.
+
+use std::sync::Arc;
+
+use psch::cluster::{NodeDeath, TaskCost};
+use psch::config::Config;
+use psch::coordinator::{Driver, PipelineInput, Services};
+use psch::data::gaussian_blobs;
+use psch::mapreduce::names;
+use psch::runtime::KernelRuntime;
+use psch::scheduler::TaskSpec;
+
+fn native() -> Arc<KernelRuntime> {
+    Arc::new(KernelRuntime::native())
+}
+
+fn phase_counter(r: &psch::coordinator::PipelineResult, name: &str) -> u64 {
+    r.phases.iter().map(|p| p.counters.get(name)).sum()
+}
+
+/// Every DFS file the two runs share must hold identical bytes.
+fn assert_dfs_identical(a: &Services, b: &Services) {
+    let paths = a.dfs.list();
+    assert_eq!(paths, b.dfs.list(), "runs left different DFS file sets");
+    for path in paths {
+        assert_eq!(
+            a.dfs.read_file(&path).unwrap(),
+            b.dfs.read_file(&path).unwrap(),
+            "{path} differs between the runs"
+        );
+    }
+}
+
+#[test]
+fn seeded_faults_on_vs_off_produce_byte_identical_outputs() {
+    // The chaos determinism satellite: all three phases on the quick
+    // config, faults off vs seeded attempt failures on.
+    let base = Config::load("configs/quick.toml").unwrap();
+    let ps = gaussian_blobs(400, base.algo.k, 4, 0.3, 10.0, 3);
+    let input = PipelineInput::Points { points: ps.points.clone() };
+
+    let clean_driver = Driver::new(base.clone(), native());
+    let clean_svc = clean_driver.services();
+    let clean = clean_driver.run_on(&clean_svc, &input).unwrap();
+
+    let mut chaos_cfg = base;
+    chaos_cfg.faults.task_fail_prob = 0.04;
+    chaos_cfg.faults.seed = 9;
+    let chaos_driver = Driver::new(chaos_cfg, native());
+    let chaos_svc = chaos_driver.services();
+    let chaos = chaos_driver.run_on(&chaos_svc, &input).unwrap();
+
+    // Byte-identical outputs: labels, eigenvalues, every DFS artifact.
+    assert_eq!(clean.labels, chaos.labels);
+    assert_eq!(clean.eigenvalues, chaos.eigenvalues);
+    assert_eq!(clean.nnz, chaos.nnz);
+    assert_dfs_identical(&clean_svc, &chaos_svc);
+
+    // ... while the failure domain demonstrably acted.
+    let failed = phase_counter(&chaos, names::FAILED_MAP_ATTEMPTS)
+        + phase_counter(&chaos, names::FAILED_REDUCE_ATTEMPTS);
+    assert!(failed > 0, "4% attempt-failure rate must fail something");
+    assert_eq!(phase_counter(&clean, names::MAP_RERUNS), 0);
+    assert!(
+        chaos.total_virtual_s > clean.total_virtual_s,
+        "re-planned attempts must cost virtual time: {} vs {}",
+        chaos.total_virtual_s,
+        clean.total_virtual_s
+    );
+}
+
+#[test]
+fn node_death_mid_similarity_recovers_lost_maps_and_rereplicates() {
+    // The acceptance scenario: quick config, one slave killed
+    // mid-similarity-phase. The run must complete with byte-identical
+    // output, re-execute the lost map outputs on live nodes (MAP_RERUNS,
+    // FETCH_FAILURES) and re-replicate the dead slave's DFS blocks.
+    //
+    // n = 600 gives the similarity job 3 paired map tasks on the 2-slave
+    // quick cluster, so slave 1 always owns at least one map output.
+    let base = Config::load("configs/quick.toml").unwrap();
+    let n = 600;
+    let ps = gaussian_blobs(n, base.algo.k, 4, 0.3, 10.0, 3);
+    let input = PipelineInput::Points { points: ps.points.clone() };
+
+    let clean_driver = Driver::new(base.clone(), native());
+    let clean = clean_driver.run(&input).unwrap();
+
+    // Locate the similarity phase on the cluster-wide heartbeat clock by
+    // dry-running phase 1 alone on identical services: it consumes ticks
+    // [1, h]. A death one tick before h lands inside the phase's reduce
+    // plan, after every map completed — the exact lost-output window. The
+    // dry run's reduce timing is measured (slightly noisy), so probe a
+    // small neighbourhood; every probe must keep the output byte-identical
+    // and at least one must exercise the recovery path.
+    let probe_svc = Driver::new(base.clone(), native()).services();
+    let flat: Vec<f32> = ps.points.iter().flatten().map(|&x| x as f32).collect();
+    psch::coordinator::similarity_job::run_similarity_phase(
+        &probe_svc,
+        Arc::new(flat),
+        n,
+        4,
+        base.algo.sigma,
+        base.algo.epsilon,
+        "S",
+    )
+    .unwrap();
+    let h = probe_svc.cluster.faults().heartbeats();
+    assert!(h > 4, "similarity phase must span several heartbeats: {h}");
+
+    let mut probes: Vec<u64> = vec![
+        h.saturating_sub(1).max(1),
+        h.saturating_sub(2).max(1),
+        h,
+        h.saturating_sub(4).max(1),
+        h + 2,
+    ];
+    probes.dedup();
+    let mut recovered_at = None;
+    for hb in probes {
+        let mut cfg = base.clone();
+        cfg.faults.node_deaths = vec![NodeDeath { slave: 1, at_heartbeat: hb }];
+        let driver = Driver::new(cfg, native());
+        let svc = driver.services();
+        let r = driver.run_on(&svc, &input).unwrap();
+        assert_eq!(r.labels, clean.labels, "death at hb {hb} changed the labels");
+        assert_eq!(r.eigenvalues, clean.eigenvalues, "death at hb {hb}");
+        assert_eq!(phase_counter(&r, names::NODE_DEATHS), 1, "death must fire");
+
+        // DFS side: the datanode died with its slave; no block location
+        // references it and every file still reads.
+        assert_eq!(svc.dfs.alive_count(), svc.cluster.num_slaves() - 1);
+        for path in svc.dfs.list() {
+            for hosts in svc.dfs.block_hosts(&path).unwrap() {
+                assert!(
+                    !hosts.contains(&1),
+                    "{path} still lists the dead datanode: {hosts:?}"
+                );
+            }
+            assert!(svc.dfs.read_file(&path).is_ok(), "{path} unreadable");
+        }
+        if phase_counter(&r, names::MAP_RERUNS) > 0
+            && phase_counter(&r, names::FETCH_FAILURES) > 0
+        {
+            recovered_at = Some(hb);
+            break;
+        }
+    }
+    assert!(
+        recovered_at.is_some(),
+        "no probed death time exercised lost-map re-execution"
+    );
+}
+
+#[test]
+fn scheduled_death_rereplicates_dfs_blocks_onto_survivors() {
+    // 3 datanodes, replication 2: after slave 1 dies, every block must be
+    // back at 2 replicas, all on survivors.
+    let mut cfg = Config::default();
+    cfg.cluster.slaves = 3;
+    cfg.cluster.replication = 2;
+    cfg.faults.node_deaths = vec![NodeDeath { slave: 1, at_heartbeat: 2 }];
+    cfg.validate().unwrap();
+    let svc = Services::from_config(&cfg, native());
+
+    let files: Vec<(String, Vec<u8>)> = (0..3u8)
+        .map(|i| {
+            (
+                format!("/chaos/file-{i}"),
+                (0..200u8).map(|b| b.wrapping_mul(i + 1)).collect(),
+            )
+        })
+        .collect();
+    for (path, data) in &files {
+        svc.dfs.write_file(path, data).unwrap();
+    }
+    // With round-robin placement the dead node holds some replicas.
+    let held_before: usize = files
+        .iter()
+        .flat_map(|(p, _)| svc.dfs.block_hosts(p).unwrap())
+        .filter(|hosts| hosts.contains(&1))
+        .count();
+    assert!(held_before > 0, "test premise: node 1 must hold replicas");
+
+    // Drive the cluster-wide heartbeat clock past the scheduled death.
+    let tasks: Vec<TaskSpec> = (0..4)
+        .map(|_| TaskSpec {
+            cost: TaskCost { compute_s: 1.0, input_bytes: 0, output_bytes: 0 },
+            hosts: vec![],
+        })
+        .collect();
+    let plan = svc.cluster.plan_phase(&tasks);
+    assert_eq!(plan.deaths, 1, "the scheduled death fires during the plan");
+
+    assert_eq!(svc.dfs.alive_count(), 2);
+    for (path, data) in &files {
+        for hosts in svc.dfs.block_hosts(path).unwrap() {
+            assert_eq!(hosts.len(), 2, "{path}: replication not restored");
+            assert!(!hosts.contains(&1), "{path}: dead node still listed");
+        }
+        assert_eq!(&svc.dfs.read_file(path).unwrap(), data);
+    }
+}
+
+#[test]
+fn chaos_config_drives_a_full_run() {
+    // The shipped chaos example completes and reports its faults.
+    let cfg = Config::load("configs/chaos.toml").unwrap();
+    let ps = gaussian_blobs(300, cfg.algo.k, 4, 0.3, 10.0, 1);
+    let clean = {
+        let mut quiet = cfg.clone();
+        quiet.faults = Default::default();
+        Driver::new(quiet, native())
+            .run(&PipelineInput::Points { points: ps.points.clone() })
+            .unwrap()
+    };
+    let r = Driver::new(cfg, native())
+        .run(&PipelineInput::Points { points: ps.points.clone() })
+        .unwrap();
+    assert_eq!(clean.labels, r.labels, "chaos must not change the clustering");
+    let summaries: Vec<_> = r.phases.iter().map(|p| p.fault_summary()).collect();
+    assert!(
+        summaries.iter().any(|s| s.any()),
+        "chaos.toml schedules faults; some phase must report them"
+    );
+}
