@@ -1,0 +1,132 @@
+//! Experiment A4 — phase-1 graph-construction ablation: epsilon vs t-NN.
+//!
+//! The paper's phase 1 prices every pair and only then sparsifies by
+//! `epsilon`; the knn subsystem builds the graph sparse, pruning candidate
+//! pairs before their distance is fully evaluated. This bench runs both
+//! modes at several n and reports stored entries (nnz), fully-priced
+//! candidate pairs, the pruned-pair ratio and virtual phase-1 time — the
+//! phase-1 perf trajectory the ROADMAP was missing.
+//!
+//! Emits `BENCH_similarity.json`: one point per n with both modes.
+//! PASS requires the t-NN path to price strictly fewer candidate pairs
+//! than the epsilon path at every n.
+
+mod common;
+
+use std::sync::Arc;
+
+use psch::coordinator::similarity_job::run_similarity_phase;
+use psch::coordinator::Services;
+use psch::data::gaussian_blobs;
+use psch::knn::run_tnn_phase;
+use psch::mapreduce::names;
+use psch::metrics::table::AsciiTable;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let ns: Vec<usize> = if quick { vec![240, 480] } else { vec![400, 800, 1600] };
+    let m = 4;
+    let d = 4;
+    let sigma = 1.5;
+    let epsilon = 1e-8;
+    let t = 10;
+    let runtime = common::runtime();
+
+    let mut table = AsciiTable::new(&[
+        "n", "mode", "virtual", "nnz", "pairs priced", "pruned", "pruned%",
+    ]);
+    let mut points = Vec::new();
+    let mut pass = true;
+
+    for &n in &ns {
+        let ps = gaussian_blobs(n, 3, d, 0.4, 8.0, 11);
+
+        // Epsilon mode: all pairs priced, sub-epsilon entries dropped.
+        let mut cfg = common::calibrated_config(m);
+        cfg.algo.k = 3;
+        let svc = Services::from_config(&cfg, runtime.clone());
+        let flat32: Vec<f32> = ps.points.iter().flatten().map(|&x| x as f32).collect();
+        let eps_out =
+            run_similarity_phase(&svc, Arc::new(flat32), n, d, sigma, epsilon, "S")
+                .expect("epsilon phase");
+        let eps_pairs = eps_out.counters.get(names::SIM_PAIRS_EVALUATED);
+        table.row(&[
+            n.to_string(),
+            "epsilon".into(),
+            format!("{:.0}s", eps_out.stats.virtual_s),
+            eps_out.nnz.to_string(),
+            eps_pairs.to_string(),
+            "0".into(),
+            "0.0".into(),
+        ]);
+
+        // t-NN mode: the kd-tree prunes candidates before pricing them.
+        let mut cfg = common::calibrated_config(m);
+        cfg.algo.k = 3;
+        cfg.set("algo.graph", "tnn").expect("graph key");
+        cfg.set("knn.t", &t.to_string()).expect("knn.t key");
+        let svc = Services::from_config(&cfg, runtime.clone());
+        let flat64: Vec<f64> = ps.points.iter().flatten().copied().collect();
+        let tnn_out = run_tnn_phase(&svc, Arc::new(flat64), n, d, sigma, "S")
+            .expect("tnn phase");
+        let knn = tnn_out.stats.knn_summary();
+        table.row(&[
+            n.to_string(),
+            "tnn".into(),
+            format!("{:.0}s", tnn_out.stats.virtual_s),
+            tnn_out.nnz.to_string(),
+            knn.pairs_evaluated.to_string(),
+            knn.pruned_pairs.to_string(),
+            format!("{:.1}", 100.0 * knn.pruned_ratio()),
+        ]);
+
+        if knn.pairs_evaluated >= eps_pairs {
+            println!(
+                "FAIL: n={n}: tnn priced {} pairs, epsilon {}",
+                knn.pairs_evaluated, eps_pairs
+            );
+            pass = false;
+        }
+        if tnn_out.nnz == 0 || eps_out.nnz == 0 {
+            println!("FAIL: n={n}: empty graph (tnn={}, eps={})", tnn_out.nnz, eps_out.nnz);
+            pass = false;
+        }
+        points.push(format!(
+            "{{\"n\":{n},\
+             \"epsilon\":{{\"virtual_s\":{:.3},\"nnz\":{},\"pairs_evaluated\":{}}},\
+             \"tnn\":{{\"virtual_s\":{:.3},\"nnz\":{},\"pairs_evaluated\":{},\
+             \"pruned_pairs\":{},\"pruned_ratio\":{:.4},\"heap_evictions\":{}}}}}",
+            eps_out.stats.virtual_s,
+            eps_out.nnz,
+            eps_pairs,
+            tnn_out.stats.virtual_s,
+            tnn_out.nnz,
+            knn.pairs_evaluated,
+            knn.pruned_pairs,
+            knn.pruned_ratio(),
+            knn.heap_evictions,
+        ));
+    }
+
+    println!(
+        "A4 graph-construction ablation (m={m}, d={d}, t={t}, epsilon={epsilon}):\n{}",
+        table.render()
+    );
+    common::write_bench_json(
+        "BENCH_similarity.json",
+        &format!(
+            "{{\"experiment\":\"similarity_graph_mode\",\"m\":{m},\"d\":{d},\
+             \"t\":{t},\"epsilon\":{epsilon},\"curve\":[{}]}}",
+            points.join(",")
+        ),
+    );
+    if pass {
+        println!(
+            "ablation_similarity: PASS — the t-NN path prices strictly fewer \
+             candidate pairs than the all-pairs epsilon path"
+        );
+    } else {
+        println!("ablation_similarity: FAIL");
+        std::process::exit(1);
+    }
+}

@@ -4,6 +4,8 @@
 //! psch gen-data   --out FILE [--n N --edges E --k K --seed S]
 //! psch run        [--input FILE | --blobs N] [--config FILE] [--set k=v ...]
 //!                 [--explain-plan]   print the planned dataflow DAGs and exit
+//!                 [--graph epsilon|tnn]  similarity-graph construction mode
+//!                 [--knn-t T]        neighbors per row in tnn mode
 //!                 [--fail-node S@H]  kill slave S at cumulative heartbeat H
 //!                 [--task-fail-prob P]  seeded per-attempt failure probability
 //! psch baseline   [--blobs N] [--config FILE]   single-machine comparator
@@ -185,9 +187,22 @@ fn apply_chaos_flags(flags: &Flags, cfg: &mut Config) -> Result<()> {
     cfg.validate()
 }
 
+/// Apply the graph-mode switches (`--graph epsilon|tnn`, `--knn-t T`) —
+/// sugar over `algo.graph` / the `[knn]` section — and re-validate.
+fn apply_graph_flags(flags: &Flags, cfg: &mut Config) -> Result<()> {
+    if let Some(mode) = flags.get("graph") {
+        cfg.set("algo.graph", mode)?;
+    }
+    if let Some(t) = flags.get("knn-t") {
+        cfg.set("knn.t", t)?;
+    }
+    cfg.validate()
+}
+
 fn cmd_run(flags: &Flags) -> Result<i32> {
     let mut cfg = flags.config()?;
     apply_chaos_flags(flags, &mut cfg)?;
+    apply_graph_flags(flags, &mut cfg)?;
     let (input, truth) = load_input(flags, &cfg)?;
     let runtime = Arc::new(KernelRuntime::auto(&crate::runtime::artifacts_dir()));
     println!("backend: {:?}; slaves: {}", runtime.backend(), cfg.cluster.slaves);
@@ -234,6 +249,13 @@ fn cmd_run(flags: &Flags) -> Result<i32> {
     for p in &result.phases {
         println!("shuffle[{}]: {}", p.name, p.shuffle_summary().render());
     }
+    // t-NN pruning report: only phases that ran the spatial index.
+    for p in &result.phases {
+        let k = p.knn_summary();
+        if k.any() {
+            println!("knn[{}]: {}", p.name, k.render());
+        }
+    }
     // Per-phase fault report: only phases that saw the failure domain act.
     for p in &result.phases {
         let f = p.fault_summary();
@@ -253,13 +275,16 @@ fn cmd_run(flags: &Flags) -> Result<i32> {
 }
 
 fn cmd_baseline(flags: &Flags) -> Result<i32> {
-    let cfg = flags.config()?;
+    let mut cfg = flags.config()?;
+    apply_graph_flags(flags, &mut cfg)?;
     let n = flags.get_parse("blobs", 512usize)?;
     let ps = gaussian_blobs(n, cfg.algo.k, 8, 0.4, 8.0, cfg.algo.seed);
     let params = crate::spectral::SpectralParams {
         k: cfg.algo.k,
         sigma: cfg.algo.sigma,
         epsilon: cfg.algo.epsilon,
+        graph: cfg.algo.graph,
+        knn: cfg.knn,
         lanczos_steps: cfg.algo.lanczos_steps,
         kmeans_iters: cfg.algo.kmeans_iters,
         kmeans_tol: cfg.algo.kmeans_tol,
@@ -416,6 +441,23 @@ mod tests {
         let bad = Flags::parse(&s(&["--fail-node", "9@5"])).unwrap();
         let mut cfg = bad.config().unwrap();
         assert!(apply_chaos_flags(&bad, &mut cfg).is_err());
+    }
+
+    #[test]
+    fn graph_flags_map_into_the_config() {
+        let f = Flags::parse(&s(&["--graph", "tnn", "--knn-t", "5"])).unwrap();
+        let mut cfg = f.config().unwrap();
+        apply_graph_flags(&f, &mut cfg).unwrap();
+        assert_eq!(cfg.algo.graph, crate::knn::GraphMode::Tnn);
+        assert_eq!(cfg.knn.t, 5);
+
+        // Bad values are rejected by the shared config parser.
+        let bad = Flags::parse(&s(&["--graph", "banana"])).unwrap();
+        let mut cfg = bad.config().unwrap();
+        assert!(apply_graph_flags(&bad, &mut cfg).is_err());
+        let bad = Flags::parse(&s(&["--knn-t", "0"])).unwrap();
+        let mut cfg = bad.config().unwrap();
+        assert!(apply_graph_flags(&bad, &mut cfg).is_err());
     }
 
     #[test]

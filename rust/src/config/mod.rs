@@ -7,6 +7,7 @@
 
 use crate::cluster::{FaultConfig, NetworkModel, NodeDeath};
 use crate::error::{Error, Result};
+use crate::knn::{GraphMode, IndexKind, KnnConfig};
 use crate::mapreduce::ShuffleConfig;
 use crate::scheduler::{Policy, SpeculationConfig};
 
@@ -60,6 +61,9 @@ pub struct AlgoConfig {
     pub sigma: f64,
     /// Similarity sparsification threshold (entries below are dropped).
     pub epsilon: f64,
+    /// How phase 1 sparsifies: epsilon post-filter or t-NN construction
+    /// (`[knn]` section holds the t-NN knobs).
+    pub graph: GraphMode,
     /// Lanczos max steps m.
     pub lanczos_steps: usize,
     /// K-means max iterations.
@@ -76,6 +80,7 @@ impl Default for AlgoConfig {
             k: 4,
             sigma: 1.0,
             epsilon: 1e-8,
+            graph: GraphMode::Epsilon,
             lanczos_steps: 60,
             kmeans_iters: 20,
             kmeans_tol: 1e-6,
@@ -96,6 +101,9 @@ pub struct Config {
     /// failure probability, scheduled node deaths, blacklisting and the
     /// per-task attempt budget. See `configs/chaos.toml`.
     pub faults: FaultConfig,
+    /// t-NN similarity-graph settings (`[knn]` section), active when
+    /// `algo.graph = "tnn"`.
+    pub knn: KnnConfig,
     /// Algorithm settings (`[algo]` section).
     pub algo: AlgoConfig,
 }
@@ -234,7 +242,17 @@ impl Config {
                 }
                 self.faults.node_deaths = deaths;
             }
+            "knn.t" => self.knn.t = value.parse().map_err(|_| bad_val(key))?,
+            "knn.leaf_size" => {
+                self.knn.leaf_size = value.parse().map_err(|_| bad_val(key))?
+            }
+            "knn.index" => {
+                self.knn.index = IndexKind::parse(value).ok_or_else(|| bad_val(key))?
+            }
             "algo.k" => self.algo.k = value.parse().map_err(|_| bad_val(key))?,
+            "algo.graph" => {
+                self.algo.graph = GraphMode::parse(value).ok_or_else(|| bad_val(key))?
+            }
             "algo.sigma" => self.algo.sigma = value.parse().map_err(|_| bad_val(key))?,
             "algo.epsilon" => {
                 self.algo.epsilon = value.parse().map_err(|_| bad_val(key))?
@@ -314,6 +332,12 @@ impl Config {
             if d.at_heartbeat == 0 {
                 return bad("faults.fail_node: heartbeat must be >= 1".into());
             }
+        }
+        if self.knn.t == 0 {
+            return bad("knn.t must be >= 1".into());
+        }
+        if self.knn.leaf_size == 0 {
+            return bad("knn.leaf_size must be >= 1".into());
         }
         if self.algo.k < 2 {
             return bad(format!("algo.k must be >= 2, got {}", self.algo.k));
@@ -509,6 +533,28 @@ lanczos_steps = 40
             "death of a slave the cluster does not have"
         );
         assert!(Config::parse("[faults]\nfail_node = 0@0\n").is_err());
+    }
+
+    #[test]
+    fn knn_keys_parse_and_validate() {
+        let text = "[algo]\ngraph = tnn\n\n[knn]\nt = 7\nleaf_size = 4\nindex = brute\n";
+        let cfg = Config::parse(text).unwrap();
+        assert_eq!(cfg.algo.graph, GraphMode::Tnn);
+        assert_eq!(cfg.knn.t, 7);
+        assert_eq!(cfg.knn.leaf_size, 4);
+        assert_eq!(cfg.knn.index, IndexKind::Brute);
+        // Untouched keys keep the defaults, and the defaults stay epsilon.
+        let plain = Config::default();
+        assert_eq!(plain.algo.graph, GraphMode::Epsilon);
+        assert_eq!(plain.knn, KnnConfig::default());
+        assert_eq!(plain.knn.t, 10);
+        assert_eq!(plain.knn.index, IndexKind::KdTree);
+
+        assert!(Config::parse("[algo]\ngraph = banana\n").is_err());
+        assert!(Config::parse("[knn]\nindex = banana\n").is_err());
+        assert!(Config::parse("[knn]\nt = 0\n").is_err());
+        assert!(Config::parse("[knn]\nleaf_size = 0\n").is_err());
+        assert!(Config::parse("[knn]\nbogus = 1\n").is_err());
     }
 
     #[test]

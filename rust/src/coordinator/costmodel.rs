@@ -31,6 +31,17 @@ pub const KM_POINTDIM_PER_S: f64 = 104.0;
 /// Graph-mode similarity: edges ingested per slot-second.
 pub const GRAPH_EDGES_PER_S: f64 = 20_000.0;
 
+/// t-NN index full distance evaluations per slot-second. Slower than
+/// [`SIM_PAIRS_PER_S`]: kd-tree leaf scans are pointer-chasing per-record
+/// work in the paper's JVM/HBase regime, without the tiled RBF kernel's
+/// locality.
+pub const KNN_PAIRS_PER_S: f64 = 2_600.0;
+
+/// Candidate pairs dismissed per slot-second by a bounding-box subtree
+/// test or a partial-distance early exit — roughly an order cheaper than
+/// pricing the pair in full.
+pub const KNN_PRUNED_PAIRS_PER_S: f64 = 26_000.0;
+
 /// Convert work units at a rate into modeled microseconds (>= 1 so the
 /// engine can distinguish "modeled" from "not reported", and so per-record
 /// charging in graph mode never rounds to zero).

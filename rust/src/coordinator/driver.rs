@@ -50,6 +50,20 @@ impl PipelineResult {
     }
 }
 
+/// Graph-topology input carries its similarities on the edges — there are
+/// no point coordinates for a spatial index to prune, so a `tnn` request
+/// is a configuration error, not something to silently ignore.
+fn reject_tnn_for_graph_input(mode: crate::knn::GraphMode) -> Result<()> {
+    if mode == crate::knn::GraphMode::Tnn {
+        return Err(crate::error::Error::Config(
+            "algo.graph = \"tnn\" needs point input: a graph topology's edge \
+             weights ARE the similarities (drop --graph tnn or use --blobs)"
+                .into(),
+        ));
+    }
+    Ok(())
+}
+
 /// The pipeline driver (the paper's "leader" / job-submitting client).
 pub struct Driver {
     config: Config,
@@ -89,7 +103,10 @@ impl Driver {
         let mut out = String::new();
 
         // ---- Phase 1: exact plan ----
-        out.push_str("== phase 1: similarity ==\n");
+        out.push_str(&format!(
+            "== phase 1: similarity (graph mode: {}) ==\n",
+            a.graph.as_str()
+        ));
         let svc1 = self.services();
         let n = match input {
             PipelineInput::Points { points } => {
@@ -100,21 +117,39 @@ impl Driver {
                 }
                 let n = points.len();
                 let d = points[0].len();
-                let flat: Vec<f32> =
-                    points.iter().flatten().map(|&x| x as f32).collect();
-                let (pipeline, _degrees) = similarity_job::points_pipeline(
-                    &svc1,
-                    Arc::new(flat),
-                    n,
-                    d,
-                    a.sigma,
-                    a.epsilon,
-                    "S",
-                )?;
+                let pipeline = match a.graph {
+                    crate::knn::GraphMode::Epsilon => {
+                        let flat: Vec<f32> =
+                            points.iter().flatten().map(|&x| x as f32).collect();
+                        similarity_job::points_pipeline(
+                            &svc1,
+                            Arc::new(flat),
+                            n,
+                            d,
+                            a.sigma,
+                            a.epsilon,
+                            "S",
+                        )?
+                        .0
+                    }
+                    crate::knn::GraphMode::Tnn => {
+                        let flat: Vec<f64> = points.iter().flatten().copied().collect();
+                        crate::knn::job::tnn_pipeline(
+                            &svc1,
+                            Arc::new(flat),
+                            n,
+                            d,
+                            a.sigma,
+                            "S",
+                        )?
+                        .0
+                    }
+                };
                 out.push_str(&pipeline.plan()?.explain());
                 n
             }
             PipelineInput::Graph { topology } => {
+                reject_tnn_for_graph_input(self.config.algo.graph)?;
                 let (pipeline, _degrees) =
                     similarity_job::graph_pipeline(&svc1, topology, "S")?;
                 out.push_str(&pipeline.plan()?.explain());
@@ -194,27 +229,51 @@ impl Driver {
         // ---- Phase 1: similarity matrix + degrees ----
         let (sim, n) = match input {
             PipelineInput::Points { points } => {
+                if points.is_empty() {
+                    return Err(crate::error::Error::Cli(
+                        "run: empty point set — nothing to cluster".into(),
+                    ));
+                }
                 let n = points.len();
                 let d = points[0].len();
-                let flat: Vec<f32> =
-                    points.iter().flatten().map(|&x| x as f32).collect();
+                let sim = match self.config.algo.graph {
+                    crate::knn::GraphMode::Epsilon => {
+                        let flat: Vec<f32> =
+                            points.iter().flatten().map(|&x| x as f32).collect();
+                        similarity_job::run_similarity_phase(
+                            services,
+                            Arc::new(flat),
+                            n,
+                            d,
+                            a.sigma,
+                            a.epsilon,
+                            "S",
+                        )?
+                    }
+                    // t-NN mode: the graph is born sparse — the spatial
+                    // index prunes pairs instead of epsilon post-filtering.
+                    crate::knn::GraphMode::Tnn => {
+                        let flat: Vec<f64> =
+                            points.iter().flatten().copied().collect();
+                        crate::knn::run_tnn_phase(
+                            services,
+                            Arc::new(flat),
+                            n,
+                            d,
+                            a.sigma,
+                            "S",
+                        )?
+                    }
+                };
+                (sim, n)
+            }
+            PipelineInput::Graph { topology } => {
+                reject_tnn_for_graph_input(self.config.algo.graph)?;
                 (
-                    similarity_job::run_similarity_phase(
-                        services,
-                        Arc::new(flat),
-                        n,
-                        d,
-                        a.sigma,
-                        a.epsilon,
-                        "S",
-                    )?,
-                    n,
+                    similarity_job::run_similarity_phase_graph(services, topology, "S")?,
+                    topology.num_vertices(),
                 )
             }
-            PipelineInput::Graph { topology } => (
-                similarity_job::run_similarity_phase_graph(services, topology, "S")?,
-                topology.num_vertices(),
-            ),
         };
 
         // ---- Phase 2: k smallest eigenvectors ----
@@ -334,6 +393,49 @@ mod tests {
         assert!(text.contains("lanczos-matvec"), "{text}");
         assert!(text.contains("kmeans-update"), "{text}");
         assert!(text.contains("kmeans-assign"), "{text}");
+    }
+
+    #[test]
+    fn tnn_graph_mode_runs_end_to_end_and_plans() {
+        let ps = gaussian_blobs(240, 3, 4, 0.3, 10.0, 3);
+        let mut d = driver(3);
+        d.config.algo.k = 3;
+        d.config.algo.sigma = 1.5;
+        d.config.algo.graph = crate::knn::GraphMode::Tnn;
+        d.config.knn.t = 12;
+        // The t-NN graph of well-separated blobs is exactly disconnected
+        // (0 eigenvalue of multiplicity k); a full-dimension Krylov space
+        // resolves the multiplicity deterministically.
+        d.config.algo.lanczos_steps = 240;
+        let input = PipelineInput::Points { points: ps.points.clone() };
+        let text = d.explain_plan(&input).unwrap();
+        assert!(text.contains("graph mode: tnn"), "{text}");
+        assert!(text.contains("plan similarity-tnn"), "{text}");
+        let r = d.run(&input).unwrap();
+        let score = nmi(&ps.labels, &r.labels);
+        assert!(score > 0.9, "tnn-mode nmi={score}");
+        assert!(r.nnz > 0);
+        assert!(r.phases[0].knn_summary().any(), "knn counters must flow");
+        assert_eq!(
+            r.phases[0].counters.get(crate::mapreduce::names::SIM_PAIRS_EVALUATED),
+            0,
+            "tnn mode must not price all pairs"
+        );
+    }
+
+    #[test]
+    fn tnn_mode_rejects_graph_topology_input() {
+        let topo = planted_graph(60, 180, 3, 0.02, 5);
+        let mut d = driver(2);
+        d.config.algo.graph = crate::knn::GraphMode::Tnn;
+        let input = PipelineInput::Graph { topology: topo };
+        let err = match d.run(&input) {
+            Err(e) => e,
+            Ok(_) => panic!("tnn + graph input must error"),
+        };
+        assert!(err.to_string().contains("tnn"), "{err}");
+        let err = d.explain_plan(&input).unwrap_err();
+        assert!(err.to_string().contains("point input"), "{err}");
     }
 
     #[test]

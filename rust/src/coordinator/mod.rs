@@ -40,6 +40,9 @@ pub struct Services {
     pub tables: TableService,
     /// XLA PJRT kernel runtime (or native fallback).
     pub runtime: Arc<KernelRuntime>,
+    /// t-NN graph construction knobs (`[knn]` config section) — the
+    /// similarity phase reads these when `algo.graph = "tnn"`.
+    pub knn: crate::knn::KnnConfig,
 }
 
 impl Services {
@@ -78,6 +81,7 @@ impl Services {
             ),
             tables: TableService::new(m),
             runtime,
+            knn: crate::knn::KnnConfig::default(),
         };
         let dfs = svc.dfs.clone();
         svc.cluster.faults().on_death(move |node| {
@@ -107,7 +111,9 @@ impl Services {
         });
         cluster.set_shuffle_config(config.shuffle);
         cluster.set_fault_config(config.faults.clone());
-        Self::with_replication(cluster, runtime, c.replication)
+        let mut svc = Self::with_replication(cluster, runtime, c.replication);
+        svc.knn = config.knn;
+        svc
     }
 }
 
@@ -183,5 +189,11 @@ impl PhaseStats {
     /// fault report the driver/CLI surface).
     pub fn fault_summary(&self) -> crate::metrics::FaultSummary {
         crate::metrics::FaultSummary::from_counters(&self.counters)
+    }
+
+    /// t-NN graph-construction summary of the phase: pairs priced vs
+    /// pruned and heap churn (all-zero for epsilon-mode phases).
+    pub fn knn_summary(&self) -> crate::metrics::KnnSummary {
+        crate::metrics::KnnSummary::from_counters(&self.counters)
     }
 }

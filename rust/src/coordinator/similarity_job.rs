@@ -165,6 +165,9 @@ impl SimilarityMapper {
             out.incr("SIM_ENTRIES_KEPT", kept);
             out.incr("SIM_TILES", 1);
         }
+        // Every tile cell is a fully-priced candidate pair — the all-pairs
+        // baseline the t-NN ablation compares against.
+        out.incr(crate::mapreduce::names::SIM_PAIRS_EVALUATED, pairs_evaluated);
         // Deterministic virtual compute: Alg. 4.2's pair evaluations at the
         // reference machine's calibrated rate (costmodel.rs).
         out.incr(

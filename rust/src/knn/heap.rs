@@ -1,0 +1,217 @@
+//! Bounded top-t neighbor heaps — the per-row state of every t-NN query.
+//!
+//! A [`TopTHeap`] keeps the `t` nearest candidates seen so far as a binary
+//! max-heap ordered by `(d2, idx)`. That key is a *total* order (indices
+//! are distinct), so the surviving set is exactly the `t` smallest keys of
+//! the candidate stream **regardless of arrival order** — a kd-tree
+//! traversal and a brute-force scan that feed the same candidates produce
+//! byte-identical neighbor lists. The heap's current worst distance is the
+//! pruning bound the spatial indexes test subtrees and partial distances
+//! against.
+
+use std::cmp::Ordering;
+
+/// One candidate neighbor: squared distance to the query plus point index.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Neighbor {
+    /// Squared Euclidean distance to the query point.
+    pub d2: f64,
+    /// Index of the candidate point.
+    pub idx: u32,
+}
+
+/// Total order: nearest first, ties broken by the lower index. Distances
+/// are finite by construction, so `total_cmp` equals the numeric order.
+fn cmp(a: &Neighbor, b: &Neighbor) -> Ordering {
+    a.d2.total_cmp(&b.d2).then(a.idx.cmp(&b.idx))
+}
+
+/// Bounded max-heap of the `t` nearest candidates.
+#[derive(Debug, Clone)]
+pub struct TopTHeap {
+    cap: usize,
+    /// Max-heap by [`cmp`]: `items[0]` is the worst kept neighbor.
+    items: Vec<Neighbor>,
+    evictions: u64,
+}
+
+impl TopTHeap {
+    /// Empty heap keeping at most `cap` neighbors.
+    pub fn new(cap: usize) -> Self {
+        Self { cap, items: Vec::with_capacity(cap), evictions: 0 }
+    }
+
+    /// Number of kept neighbors.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// True when nothing has been kept.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Candidates a full heap displaced (the `KNN_HEAP_EVICTIONS` feed).
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// The pruning bound: the worst kept squared distance once the heap is
+    /// full, `+inf` before. A candidate whose (partial) squared distance
+    /// exceeds this **strictly** can never enter the heap — equality must
+    /// not prune, because the index tie-break may still admit it.
+    pub fn bound(&self) -> f64 {
+        if self.items.len() < self.cap {
+            f64::INFINITY
+        } else {
+            // cap 0: nothing is ever wanted, every candidate is prunable.
+            self.items.first().map_or(f64::NEG_INFINITY, |n| n.d2)
+        }
+    }
+
+    /// Offer a candidate; returns whether it was kept.
+    pub fn push(&mut self, n: Neighbor) -> bool {
+        if self.cap == 0 {
+            return false;
+        }
+        if self.items.len() < self.cap {
+            self.items.push(n);
+            self.sift_up(self.items.len() - 1);
+            true
+        } else if cmp(&n, &self.items[0]) == Ordering::Less {
+            self.items[0] = n;
+            self.sift_down(0);
+            self.evictions += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Merge another heap's survivors into this one (bounded heap union).
+    /// Backs the ROADMAP's distributed-index follow-up, where per-block
+    /// subtree queries merge at query time; the current shuffle combiner
+    /// instead merges *weight-encoded rows* via `knn::merge_max`, since
+    /// RBF weights are not invertible back to distances losslessly.
+    pub fn merge(&mut self, other: TopTHeap) {
+        for n in other.items {
+            self.push(n);
+        }
+    }
+
+    /// Drain into a list sorted nearest-first by `(d2, idx)`.
+    pub fn into_sorted(self) -> Vec<Neighbor> {
+        let mut v = self.items;
+        v.sort_unstable_by(cmp);
+        v
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if cmp(&self.items[i], &self.items[parent]) == Ordering::Greater {
+                self.items.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let len = self.items.len();
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut largest = i;
+            if l < len && cmp(&self.items[l], &self.items[largest]) == Ordering::Greater {
+                largest = l;
+            }
+            if r < len && cmp(&self.items[r], &self.items[largest]) == Ordering::Greater {
+                largest = r;
+            }
+            if largest == i {
+                return;
+            }
+            self.items.swap(i, largest);
+            i = largest;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nb(d2: f64, idx: u32) -> Neighbor {
+        Neighbor { d2, idx }
+    }
+
+    #[test]
+    fn keeps_the_t_smallest_keys() {
+        let mut h = TopTHeap::new(3);
+        for (d2, idx) in [(5.0, 0), (1.0, 1), (4.0, 2), (2.0, 3), (3.0, 4)] {
+            h.push(nb(d2, idx));
+        }
+        let got: Vec<u32> = h.into_sorted().iter().map(|n| n.idx).collect();
+        assert_eq!(got, vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn insertion_order_never_changes_the_survivors() {
+        let cands = [(2.5, 7u32), (0.5, 3), (2.5, 1), (9.0, 0), (0.1, 9), (2.5, 2)];
+        let mut fwd = TopTHeap::new(4);
+        let mut rev = TopTHeap::new(4);
+        for &(d2, idx) in &cands {
+            fwd.push(nb(d2, idx));
+        }
+        for &(d2, idx) in cands.iter().rev() {
+            rev.push(nb(d2, idx));
+        }
+        assert_eq!(fwd.into_sorted(), rev.into_sorted());
+    }
+
+    #[test]
+    fn equal_distances_tie_break_by_index() {
+        let mut h = TopTHeap::new(2);
+        h.push(nb(1.0, 8));
+        h.push(nb(1.0, 5));
+        h.push(nb(1.0, 2)); // evicts idx 8
+        assert_eq!(h.evictions(), 1);
+        let got: Vec<u32> = h.into_sorted().iter().map(|n| n.idx).collect();
+        assert_eq!(got, vec![2, 5]);
+    }
+
+    #[test]
+    fn bound_and_evictions_track_fullness() {
+        let mut h = TopTHeap::new(2);
+        assert_eq!(h.bound(), f64::INFINITY);
+        h.push(nb(3.0, 0));
+        h.push(nb(1.0, 1));
+        assert_eq!(h.bound(), 3.0);
+        assert!(!h.push(nb(4.0, 2)), "worse than the bound");
+        assert!(h.push(nb(2.0, 3)), "better than the bound");
+        assert_eq!(h.bound(), 2.0);
+        assert_eq!(h.evictions(), 1);
+        assert_eq!(h.len(), 2);
+    }
+
+    #[test]
+    fn merge_is_a_bounded_union() {
+        let mut a = TopTHeap::new(3);
+        a.push(nb(1.0, 0));
+        a.push(nb(9.0, 1));
+        let mut b = TopTHeap::new(3);
+        b.push(nb(2.0, 2));
+        b.push(nb(3.0, 3));
+        a.merge(b);
+        let got: Vec<u32> = a.into_sorted().iter().map(|n| n.idx).collect();
+        assert_eq!(got, vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn zero_capacity_keeps_nothing() {
+        let mut h = TopTHeap::new(0);
+        assert!(!h.push(nb(1.0, 0)));
+        assert!(h.is_empty());
+    }
+}

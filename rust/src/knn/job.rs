@@ -1,0 +1,309 @@
+//! Distributed t-NN similarity phase (graph mode `tnn`).
+//!
+//! The phase-1 alternative to [`crate::coordinator::similarity_job`]'s
+//! all-pairs job: instead of pricing every tile and post-filtering by
+//! `epsilon`, each map task owns a block of rows and asks the shared
+//! spatial index for each row's `t` nearest neighbors — pairs the index
+//! prunes are never priced at all. As a `dataflow::Pipeline`:
+//!
+//! ```text
+//! read_dfs(points) → map tnn-query        per-row bounded top-t heaps;
+//!                                         emits the row's heap + one
+//!                                         mirror record per neighbor
+//!                  → combine (merge_max)  mirrors collapse map-side
+//!                  → reduce tnn-symmetrize S = max(S, Sᵀ) + unit diagonal,
+//!                                         writes graph-row table chunks,
+//!                                         emits the degree
+//! ```
+//!
+//! The index is shared by every map task and built lazily by whichever
+//! task runs first (`OnceLock`) — planning a pipeline for `--explain-plan`
+//! never pays the build. Its deterministic virtual cost is charged to the
+//! block-0 task so the makespan model stays independent of thread timing.
+//! The reduce writes the exact `chunk_key(row, colblock) →
+//! encode_sparse_row` format phase 2 already consumes, so the eigen phase
+//! runs unchanged on either graph mode. Output is byte-identical to the
+//! [`super::tnn_sparse`] oracle.
+
+use std::sync::{Arc, OnceLock};
+
+use crate::coordinator::similarity_job::{chunk_key, SimilarityOutput, BLOCK};
+use crate::coordinator::{costmodel, PhaseStats, Services};
+use crate::dataflow::{Collected, Emit, Group, Pipeline};
+use crate::error::{Error, Result};
+use crate::mapreduce::names;
+use crate::util::bytes::{decode_sparse_row, encode_sparse_row};
+
+use super::{merge_max, IndexKind, KnnConfig, KnnIndex, QueryStats};
+
+struct TnnMapper {
+    points: Arc<Vec<f64>>,
+    knn: KnnConfig,
+    /// Built on first use (once per job), shared across map tasks.
+    index: OnceLock<KnnIndex>,
+    gamma: f64,
+    /// Effective neighbor count (already clamped to n−1).
+    t: usize,
+    n: usize,
+    d: usize,
+}
+
+impl TnnMapper {
+    /// Query the index for every owned row; emit the row's heap plus one
+    /// mirror record per neighbor (the symmetrization half).
+    fn map_block(&self, b: u64, out: &mut Emit<'_, u64, Vec<u8>>) -> Result<()> {
+        let index = self.index.get_or_init(|| {
+            KnnIndex::build(self.points.clone(), self.n, self.d, &self.knn)
+        });
+        let b = b as usize;
+        let lo = b * BLOCK;
+        let hi = ((b + 1) * BLOCK).min(self.n);
+        // The owned rows come off the staged DFS points file; the scheduler
+        // charges the read at the attempt's locality tier.
+        out.incr(names::EXTRA_INPUT_BYTES, ((hi - lo) * self.d * 8) as u64);
+        if b == 0 && self.knn.index == IndexKind::KdTree {
+            // kd-tree build: ~n·log₂(n) comparisons, charged to the block-0
+            // task regardless of which thread happened to build — the
+            // virtual makespan must not depend on wall-clock racing. (The
+            // brute index has no build to charge.)
+            let build_units =
+                self.n as u64 * self.n.next_power_of_two().trailing_zeros().max(1) as u64;
+            out.incr(
+                names::COMPUTE_US,
+                costmodel::units_to_us(build_units, costmodel::KNN_PRUNED_PAIRS_PER_S),
+            );
+        }
+        let mut stats = QueryStats::default();
+        let mut evictions = 0u64;
+        for i in lo..hi {
+            let heap = index.query(index.row(i), self.t, Some(i as u32), &mut stats);
+            evictions += heap.evictions();
+            let own: Vec<(u32, f64)> = heap
+                .into_sorted()
+                .into_iter()
+                .map(|nb| (nb.idx, (-self.gamma * nb.d2).exp()))
+                .collect();
+            for &(j, w) in &own {
+                out.emit(j as u64, encode_sparse_row(&[(i as u32, w)]));
+            }
+            out.emit(i as u64, encode_sparse_row(&own));
+        }
+        out.incr(names::KNN_PAIRS_EVALUATED, stats.pairs_evaluated);
+        out.incr(names::KNN_PRUNED_PAIRS, stats.pruned_pairs);
+        out.incr(names::KNN_HEAP_EVICTIONS, evictions);
+        // Deterministic virtual compute: priced pairs at the reference
+        // machine's per-pair rate, dismissed candidates an order cheaper.
+        out.incr(
+            names::COMPUTE_US,
+            costmodel::units_to_us(stats.pairs_evaluated, costmodel::KNN_PAIRS_PER_S)
+                + costmodel::units_to_us(
+                    stats.pruned_pairs,
+                    costmodel::KNN_PRUNED_PAIRS_PER_S,
+                ),
+        );
+        Ok(())
+    }
+}
+
+/// Build the tnn-mode phase-1 pipeline: stage the points in the DFS, one
+/// split per row block, and wire `read_dfs → map_kv(tnn-query) →
+/// group_reduce(combine + tnn-symmetrize) → collect(degrees)`.
+pub(crate) fn tnn_pipeline(
+    services: &Services,
+    points: Arc<Vec<f64>>,
+    n: usize,
+    d: usize,
+    sigma: f64,
+    table_name: &str,
+) -> Result<(Pipeline, Collected<u64, f64>)> {
+    if n == 0 || points.len() < n * d {
+        return Err(Error::MapReduce(format!(
+            "tnn similarity: need n×d points, got n={n} d={d} len={}",
+            points.len()
+        )));
+    }
+    let knn = services.knn;
+    let t = knn.t.min(n - 1);
+    let table = services.tables.create(table_name, services.cluster.num_slaves())?;
+    let gamma = crate::spectral::gamma_of_sigma(sigma);
+
+    // Stage the input points in the DFS so every split can declare the
+    // nodes holding its row block.
+    let input_path = format!("/input/{table_name}.points");
+    let mut raw = Vec::with_capacity(points.len() * 8);
+    for &x in points.iter() {
+        raw.extend_from_slice(&x.to_le_bytes());
+    }
+    services.dfs.write_file(&input_path, &raw)?;
+    let row_bytes = d * 8;
+    let nb = n.div_ceil(BLOCK);
+    let mut splits: Vec<Vec<(u64, ())>> = Vec::with_capacity(nb);
+    let mut ranges: Vec<Vec<(usize, usize)>> = Vec::with_capacity(nb);
+    for b in 0..nb {
+        splits.push(vec![(b as u64, ())]);
+        ranges.push(vec![(b * BLOCK * row_bytes, ((b + 1) * BLOCK).min(n) * row_bytes)]);
+    }
+
+    // The shared spatial index is built lazily by the first map task to
+    // run — a pipeline constructed only for `--explain-plan` never pays it.
+    let mapper =
+        TnnMapper { points, knn, index: OnceLock::new(), gamma, t, n, d };
+
+    let pipeline = Pipeline::new("similarity-tnn");
+    let table_c = table.clone();
+    let degrees = pipeline
+        .read_dfs(&input_path, splits, ranges)
+        .map_kv("tnn-query", move |b: u64, _: (), out| mapper.map_block(b, out))
+        .group_reduce("tnn-symmetrize")
+        .reducers(services.cluster.num_slaves())
+        .combine(|row: u64, values: &mut Group<'_, Vec<u8>>, out| {
+            // Map-side row merge: a row's own heap and the mirrors landing
+            // on it collapse to one record before crossing the shuffle.
+            let mut entries: Vec<(u32, f64)> = Vec::new();
+            while let Some(chunk) = values.next_value() {
+                entries.extend(decode_sparse_row(&chunk));
+            }
+            merge_max(&mut entries);
+            out.emit(row, encode_sparse_row(&entries));
+            Ok(())
+        })
+        .reduce(move |row: u64, values: &mut Group<'_, Vec<u8>>, out| {
+            // Max-symmetrization: the union of the row's heap and every
+            // mirror, duplicates collapsed to the max weight, unit diagonal.
+            let mut entries: Vec<(u32, f64)> = Vec::new();
+            while let Some(chunk) = values.next_value() {
+                entries.extend(decode_sparse_row(&chunk));
+            }
+            entries.push((row as u32, 1.0));
+            merge_max(&mut entries);
+            let degree: f64 = entries.iter().map(|&(_, v)| v).sum();
+            out.incr("SIM_ENTRIES_KEPT", entries.len() as u64);
+            out.incr(
+                names::COMPUTE_US,
+                costmodel::units_to_us(
+                    entries.len() as u64,
+                    costmodel::GRAPH_EDGES_PER_S,
+                ),
+            );
+            // Write per-column-block chunks — the same table layout the
+            // epsilon path produces and the eigen phase consumes.
+            let mut i = 0;
+            let mut out_bytes = 0u64;
+            while i < entries.len() {
+                let cb = entries[i].0 as usize / BLOCK;
+                let mut j = i;
+                while j < entries.len() && entries[j].0 as usize / BLOCK == cb {
+                    j += 1;
+                }
+                let payload = encode_sparse_row(&entries[i..j]);
+                out_bytes += payload.len() as u64;
+                table_c.put(chunk_key(row, cb as u64), payload)?;
+                i = j;
+            }
+            out.incr(names::EXTRA_OUTPUT_BYTES, out_bytes);
+            out.emit(row, degree);
+            Ok(())
+        })
+        .collect();
+    Ok((pipeline, degrees))
+}
+
+/// Run the tnn-mode phase 1: build the sparse t-NN similarity table plus
+/// the degree vector. `points` is n×d row-major f64; neighbor count and
+/// index kind come from [`Services::knn`]. Returns the same
+/// [`SimilarityOutput`] shape as the epsilon path, so the driver's phase
+/// accounting is mode-agnostic.
+pub fn run_tnn_phase(
+    services: &Services,
+    points: Arc<Vec<f64>>,
+    n: usize,
+    d: usize,
+    sigma: f64,
+    table_name: &str,
+) -> Result<SimilarityOutput> {
+    let mut stats = PhaseStats { name: "similarity".into(), ..Default::default() };
+    let (pipeline, degree_handle) =
+        tnn_pipeline(services, points, n, d, sigma, table_name)?;
+    let mut run = pipeline.run(services)?;
+
+    let mut degrees = vec![0.0f64; n];
+    for (row, degree) in degree_handle.take(&mut run) {
+        degrees[row as usize] = degree;
+    }
+    stats.absorb_run(&run.stats);
+    let counters = run.stats.merged_counters();
+    Ok(SimilarityOutput {
+        degrees,
+        stats,
+        nnz: counters.get("SIM_ENTRIES_KEPT"),
+        counters,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::coordinator::similarity_job::read_similarity_row;
+    use crate::data::gaussian_blobs;
+    use crate::knn::KnnConfig;
+    use crate::runtime::KernelRuntime;
+
+    fn services(m: usize, knn: KnnConfig) -> Services {
+        let mut svc = Services::new(Cluster::new(m), Arc::new(KernelRuntime::native()));
+        svc.knn = knn;
+        svc
+    }
+
+    fn flat(points: &[Vec<f64>]) -> Arc<Vec<f64>> {
+        Arc::new(points.iter().flatten().copied().collect())
+    }
+
+    #[test]
+    fn distributed_rows_match_oracle_bitwise() {
+        let (n, d) = (180, 4);
+        let ps = gaussian_blobs(n, 3, d, 0.4, 8.0, 5);
+        let cfg = KnnConfig { t: 6, ..Default::default() };
+        let svc = services(2, cfg);
+        let out = run_tnn_phase(&svc, flat(&ps.points), n, d, 1.2, "S").unwrap();
+        let oracle = crate::knn::tnn_sparse(&ps.points, 1.2, &cfg);
+        let table = svc.tables.open("S").unwrap();
+        let nb = n.div_ceil(BLOCK);
+        for i in 0..n {
+            let row = read_similarity_row(&table, i as u64, nb);
+            let want: Vec<(u32, f64)> = oracle.row(i).collect();
+            assert_eq!(row.len(), want.len(), "row {i} nnz");
+            for ((j1, v1), (j2, v2)) in row.iter().zip(&want) {
+                assert_eq!(j1, j2, "row {i}");
+                assert_eq!(v1.to_bits(), v2.to_bits(), "row {i} col {j1}");
+            }
+        }
+        assert_eq!(out.nnz, oracle.nnz() as u64);
+    }
+
+    #[test]
+    fn counters_and_stats_populated() {
+        let (n, d) = (150, 3);
+        let ps = gaussian_blobs(n, 3, d, 0.4, 8.0, 7);
+        let svc = services(3, KnnConfig::default());
+        let out = run_tnn_phase(&svc, flat(&ps.points), n, d, 1.0, "S").unwrap();
+        assert!(out.counters.get(names::KNN_PAIRS_EVALUATED) > 0);
+        assert!(
+            out.counters.get(names::KNN_PRUNED_PAIRS) > 0,
+            "kd-tree should prune on blob data"
+        );
+        assert!(out.stats.virtual_s > 0.0);
+        assert_eq!(out.stats.jobs, 1, "query map + symmetrize reduce fuse");
+        assert!(out.stats.shuffle_bytes > 0, "heaps cross the shuffle");
+        // Degrees: unit diagonal plus at least t positive weights.
+        for &deg in &out.degrees {
+            assert!(deg > 1.0, "degree {deg} missing neighbors");
+        }
+    }
+
+    #[test]
+    fn rejects_empty_input() {
+        let svc = services(2, KnnConfig::default());
+        assert!(run_tnn_phase(&svc, Arc::new(Vec::new()), 0, 3, 1.0, "S").is_err());
+    }
+}

@@ -1,0 +1,287 @@
+//! Bounding-box kd-tree: the exact t-NN spatial index.
+//!
+//! Built once over the flat `n × d` point set (median split on the widest
+//! dimension, `leaf_size` bucket leaves), then queried per row. A query
+//! descends nearer-child-first and prunes whole subtrees whose bounding box
+//! cannot beat the heap's current worst distance; leaf scans abort
+//! individual pairs early via [`sq_dist_bounded`] once the running sum
+//! passes the same bound. Both tests are conservative in floating point
+//! (the computed box distance never exceeds the computed point distance,
+//! and equality never prunes), so the result is **bit-identical to a
+//! brute-force scan** — the property the oracle-equivalence tests pin.
+
+use std::sync::Arc;
+
+use crate::linalg::vector::sq_dist_bounded;
+
+use super::heap::{Neighbor, TopTHeap};
+use super::QueryStats;
+
+/// One tree node; `start..end` is its contiguous slice of [`KdTree::order`].
+struct Node {
+    start: usize,
+    end: usize,
+    /// Per-dimension bounding box of the subtree's points.
+    lo: Vec<f64>,
+    hi: Vec<f64>,
+    /// Child node ids, `None` for leaves.
+    children: Option<(usize, usize)>,
+}
+
+/// Exact t-NN kd-tree over a flat row-major point set.
+pub struct KdTree {
+    points: Arc<Vec<f64>>,
+    n: usize,
+    d: usize,
+    /// Point ids, partitioned so every node's points are contiguous.
+    order: Vec<u32>,
+    nodes: Vec<Node>,
+    root: Option<usize>,
+}
+
+impl KdTree {
+    /// Build over `n` points of dimension `d` (row-major in `points`).
+    pub fn build(points: Arc<Vec<f64>>, n: usize, d: usize, leaf_size: usize) -> Self {
+        assert!(points.len() >= n * d, "kdtree: {n}x{d} points short");
+        let leaf_size = leaf_size.max(1);
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        let mut nodes = Vec::new();
+        let root = if n == 0 {
+            None
+        } else {
+            Some(build_node(&points, d, leaf_size, &mut order, 0, n, &mut nodes))
+        };
+        Self { points, n, d, order, nodes, root }
+    }
+
+    /// Number of indexed points.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True when no points are indexed.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Point `i` as a coordinate slice.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.points[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Exact `t` nearest neighbors of `q` (optionally excluding one id).
+    pub fn query(
+        &self,
+        q: &[f64],
+        t: usize,
+        exclude: Option<u32>,
+        stats: &mut QueryStats,
+    ) -> TopTHeap {
+        let mut heap = TopTHeap::new(t);
+        if t > 0 {
+            if let Some(root) = self.root {
+                self.visit(root, self.min_sq_dist(root, q), q, exclude, &mut heap, stats);
+            }
+        }
+        heap
+    }
+
+    /// Descend into `node` unless its box distance proves it sterile.
+    fn visit(
+        &self,
+        node: usize,
+        min_d2: f64,
+        q: &[f64],
+        exclude: Option<u32>,
+        heap: &mut TopTHeap,
+        stats: &mut QueryStats,
+    ) {
+        let nd = &self.nodes[node];
+        if min_d2 > heap.bound() {
+            stats.pruned_pairs += (nd.end - nd.start) as u64;
+            return;
+        }
+        match nd.children {
+            None => {
+                for &id in &self.order[nd.start..nd.end] {
+                    if exclude == Some(id) {
+                        continue;
+                    }
+                    let p = self.row(id as usize);
+                    match sq_dist_bounded(q, p, heap.bound()) {
+                        Some(d2) => {
+                            stats.pairs_evaluated += 1;
+                            heap.push(Neighbor { d2, idx: id });
+                        }
+                        None => stats.pruned_pairs += 1,
+                    }
+                }
+            }
+            Some((l, r)) => {
+                let dl = self.min_sq_dist(l, q);
+                let dr = self.min_sq_dist(r, q);
+                // Nearer child first: its hits shrink the bound before the
+                // farther sibling is tested against it.
+                if dl <= dr {
+                    self.visit(l, dl, q, exclude, heap, stats);
+                    self.visit(r, dr, q, exclude, heap, stats);
+                } else {
+                    self.visit(r, dr, q, exclude, heap, stats);
+                    self.visit(l, dl, q, exclude, heap, stats);
+                }
+            }
+        }
+    }
+
+    /// Squared distance from `q` to the node's bounding box (0 inside).
+    fn min_sq_dist(&self, node: usize, q: &[f64]) -> f64 {
+        let nd = &self.nodes[node];
+        let mut acc = 0.0f64;
+        for (c, &v) in q.iter().enumerate() {
+            let excess = if v < nd.lo[c] {
+                nd.lo[c] - v
+            } else if v > nd.hi[c] {
+                v - nd.hi[c]
+            } else {
+                0.0
+            };
+            acc += excess * excess;
+        }
+        acc
+    }
+}
+
+/// Recursively build the subtree over `order[start..end]`; returns its id.
+fn build_node(
+    points: &[f64],
+    d: usize,
+    leaf_size: usize,
+    order: &mut [u32],
+    start: usize,
+    end: usize,
+    nodes: &mut Vec<Node>,
+) -> usize {
+    let mut lo = vec![f64::INFINITY; d];
+    let mut hi = vec![f64::NEG_INFINITY; d];
+    for &id in &order[start..end] {
+        let p = &points[id as usize * d..(id as usize + 1) * d];
+        for c in 0..d {
+            lo[c] = lo[c].min(p[c]);
+            hi[c] = hi[c].max(p[c]);
+        }
+    }
+    let len = end - start;
+    // Widest dimension; ties resolve to the lowest dimension index so the
+    // tree shape is a pure function of the point set.
+    let mut dim = 0;
+    let mut width = hi[0] - lo[0];
+    for c in 1..d {
+        let w = hi[c] - lo[c];
+        if w > width {
+            width = w;
+            dim = c;
+        }
+    }
+    if len <= leaf_size || width <= 0.0 {
+        // Small bucket — or every point identical, which no split separates.
+        nodes.push(Node { start, end, lo, hi, children: None });
+        return nodes.len() - 1;
+    }
+    let mid = len / 2;
+    order[start..end].select_nth_unstable_by(mid, |&a, &b| {
+        points[a as usize * d + dim]
+            .total_cmp(&points[b as usize * d + dim])
+            .then(a.cmp(&b))
+    });
+    let left = build_node(points, d, leaf_size, order, start, start + mid, nodes);
+    let right = build_node(points, d, leaf_size, order, start + mid, end, nodes);
+    nodes.push(Node { start, end, lo, hi, children: Some((left, right)) });
+    nodes.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn random_points(n: usize, d: usize, seed: u64) -> Arc<Vec<f64>> {
+        let mut rng = Xoshiro256::new(seed);
+        Arc::new(
+            (0..n * d)
+                .map(|_| (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64 * 10.0)
+                .collect(),
+        )
+    }
+
+    /// Brute-force reference with the same tie semantics.
+    fn brute(points: &[f64], n: usize, d: usize, q: &[f64], t: usize, skip: u32) -> Vec<Neighbor> {
+        let mut heap = TopTHeap::new(t);
+        for j in 0..n {
+            if j as u32 == skip {
+                continue;
+            }
+            let p = &points[j * d..(j + 1) * d];
+            if let Some(d2) = sq_dist_bounded(q, p, f64::INFINITY) {
+                heap.push(Neighbor { d2, idx: j as u32 });
+            }
+        }
+        heap.into_sorted()
+    }
+
+    #[test]
+    fn matches_brute_force_bitwise() {
+        let (n, d) = (200, 3);
+        let pts = random_points(n, d, 42);
+        for leaf in [1usize, 4, 16] {
+            let tree = KdTree::build(pts.clone(), n, d, leaf);
+            let mut stats = QueryStats::default();
+            for i in (0..n).step_by(13) {
+                let got = tree
+                    .query(tree.row(i), 7, Some(i as u32), &mut stats)
+                    .into_sorted();
+                let want = brute(&pts, n, d, tree.row(i), 7, i as u32);
+                assert_eq!(got.len(), want.len(), "i={i} leaf={leaf}");
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.idx, w.idx, "i={i} leaf={leaf}");
+                    assert_eq!(g.d2.to_bits(), w.d2.to_bits(), "i={i} leaf={leaf}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pruning_actually_skips_work() {
+        let (n, d) = (400, 2);
+        let pts = random_points(n, d, 7);
+        let tree = KdTree::build(pts.clone(), n, d, 8);
+        let mut stats = QueryStats::default();
+        for i in 0..n {
+            tree.query(tree.row(i), 5, Some(i as u32), &mut stats);
+        }
+        assert!(stats.pruned_pairs > 0, "no pruning on 400 planar points");
+        let seen = stats.pairs_evaluated + stats.pruned_pairs;
+        assert_eq!(seen, (n * (n - 1)) as u64, "every candidate accounted for");
+        assert!(
+            stats.pairs_evaluated < seen / 2,
+            "index should dodge most full distances: {stats:?}"
+        );
+    }
+
+    #[test]
+    fn duplicate_points_and_tiny_sets() {
+        // All-identical points: unsplittable, still answers exactly.
+        let pts: Arc<Vec<f64>> = Arc::new(vec![1.0; 10 * 2]);
+        let tree = KdTree::build(pts, 10, 2, 4);
+        let mut stats = QueryStats::default();
+        let got = tree.query(tree.row(0), 3, Some(0), &mut stats).into_sorted();
+        let ids: Vec<u32> = got.iter().map(|nb| nb.idx).collect();
+        assert_eq!(ids, vec![1, 2, 3], "zero distances tie-break by index");
+        // Empty and single-point sets.
+        let empty = KdTree::build(Arc::new(Vec::new()), 0, 2, 4);
+        assert!(empty.is_empty());
+        assert!(empty.query(&[0.0, 0.0], 3, None, &mut stats).is_empty());
+        let one = KdTree::build(Arc::new(vec![5.0, 5.0]), 1, 2, 4);
+        assert_eq!(one.len(), 1);
+        assert!(one.query(one.row(0), 3, Some(0), &mut stats).is_empty());
+    }
+}

@@ -1,0 +1,312 @@
+//! t-nearest-neighbor similarity subsystem (DESIGN.md §2.10).
+//!
+//! The paper's phase 1 "calculate the similarity matrix … and then sparse
+//! it" is O(n²) when sparsification is a post-filter: every pair is priced
+//! before `epsilon` drops it. This subsystem makes sparsification
+//! *constructive* instead — the graph is born sparse as a t-nearest-neighbor
+//! similarity matrix (the formulation of 1802.04450 and 2212.04443), and
+//! candidate pairs are pruned **before** their distance is fully evaluated:
+//!
+//! - [`heap`]: bounded top-t neighbor heaps with a total `(d2, idx)` order,
+//!   so survivors are independent of candidate arrival order;
+//! - [`kdtree`]: a bounding-box kd-tree whose subtree and partial-distance
+//!   tests are conservative in floating point — query results are
+//!   bit-identical to a brute-force scan;
+//! - [`job`]: the distributed pipeline (`read_dfs → tnn-query map →
+//!   row-merging combiner → max-symmetrization reduce`) writing the same
+//!   graph-row table format phase 2 already consumes;
+//! - [`tnn_sparse`]: the exact single-machine oracle the distributed path
+//!   is byte-identical to.
+//!
+//! Weights follow the paper: `S_ij = exp(-‖x_i − x_j‖² / 2σ²)` for kept
+//! pairs, unit diagonal, symmetrized as `S = max(S, Sᵀ)` — an edge survives
+//! when *either* endpoint ranks the other among its `t` nearest.
+
+pub mod heap;
+pub mod job;
+pub mod kdtree;
+
+use std::sync::Arc;
+
+use crate::linalg::vector::sq_dist_bounded;
+use crate::linalg::CsrMatrix;
+
+pub use heap::{Neighbor, TopTHeap};
+pub use job::run_tnn_phase;
+pub use kdtree::KdTree;
+
+/// How phase 1 builds the sparse similarity graph (`algo.graph`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum GraphMode {
+    /// All-pairs RBF, entries below `algo.epsilon` dropped (paper Alg. 4.2).
+    #[default]
+    Epsilon,
+    /// t-nearest-neighbor graph via the spatial index (this subsystem).
+    Tnn,
+}
+
+impl GraphMode {
+    /// Parse a config/CLI value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "epsilon" => Some(Self::Epsilon),
+            "tnn" => Some(Self::Tnn),
+            _ => None,
+        }
+    }
+
+    /// The config spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Epsilon => "epsilon",
+            Self::Tnn => "tnn",
+        }
+    }
+}
+
+/// Which spatial index answers t-NN queries (`knn.index`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum IndexKind {
+    /// Bounding-box kd-tree (subtree + partial-distance pruning).
+    #[default]
+    KdTree,
+    /// Linear scan with partial-distance pruning only (reference/debug).
+    Brute,
+}
+
+impl IndexKind {
+    /// Parse a config/CLI value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "kdtree" => Some(Self::KdTree),
+            "brute" => Some(Self::Brute),
+            _ => None,
+        }
+    }
+
+    /// The config spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::KdTree => "kdtree",
+            Self::Brute => "brute",
+        }
+    }
+}
+
+/// `[knn]` config section: t-NN graph construction knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KnnConfig {
+    /// Neighbors kept per row before symmetrization (clamped to n−1).
+    pub t: usize,
+    /// kd-tree leaf bucket size.
+    pub leaf_size: usize,
+    /// Spatial index answering the queries.
+    pub index: IndexKind,
+}
+
+impl Default for KnnConfig {
+    fn default() -> Self {
+        Self { t: 10, leaf_size: 16, index: IndexKind::KdTree }
+    }
+}
+
+/// Per-query/per-task pruning tallies (the `KNN_*` counter feeds).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueryStats {
+    /// Candidate pairs whose distance was evaluated to completion.
+    pub pairs_evaluated: u64,
+    /// Candidate pairs dismissed by a bounding-box subtree test or a
+    /// partial-distance early exit — never fully priced.
+    pub pruned_pairs: u64,
+}
+
+/// The exact t-NN oracle: either index answers the same queries, the
+/// kd-tree just prices fewer pairs.
+pub enum KnnIndex {
+    /// Bounding-box kd-tree.
+    KdTree(KdTree),
+    /// Flat scan (partial-distance pruning only).
+    Brute {
+        /// Row-major n × d coordinates.
+        points: Arc<Vec<f64>>,
+        /// Point count.
+        n: usize,
+        /// Dimensionality.
+        d: usize,
+    },
+}
+
+impl KnnIndex {
+    /// Build the configured index over a flat row-major point set.
+    pub fn build(points: Arc<Vec<f64>>, n: usize, d: usize, cfg: &KnnConfig) -> Self {
+        match cfg.index {
+            IndexKind::KdTree => Self::KdTree(KdTree::build(points, n, d, cfg.leaf_size)),
+            IndexKind::Brute => Self::Brute { points, n, d },
+        }
+    }
+
+    /// Number of indexed points.
+    pub fn len(&self) -> usize {
+        match self {
+            Self::KdTree(tree) => tree.len(),
+            Self::Brute { n, .. } => *n,
+        }
+    }
+
+    /// True when no points are indexed.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Point `i` as a coordinate slice.
+    pub fn row(&self, i: usize) -> &[f64] {
+        match self {
+            Self::KdTree(tree) => tree.row(i),
+            Self::Brute { points, d, .. } => &points[i * d..(i + 1) * d],
+        }
+    }
+
+    /// Exact `t` nearest neighbors of `q` (optionally excluding one id).
+    pub fn query(
+        &self,
+        q: &[f64],
+        t: usize,
+        exclude: Option<u32>,
+        stats: &mut QueryStats,
+    ) -> TopTHeap {
+        match self {
+            Self::KdTree(tree) => tree.query(q, t, exclude, stats),
+            Self::Brute { points, n, d } => {
+                let mut heap = TopTHeap::new(t);
+                if t == 0 {
+                    return heap;
+                }
+                for j in 0..*n {
+                    if exclude == Some(j as u32) {
+                        continue;
+                    }
+                    let p = &points[j * d..(j + 1) * d];
+                    match sq_dist_bounded(q, p, heap.bound()) {
+                        Some(d2) => {
+                            stats.pairs_evaluated += 1;
+                            heap.push(Neighbor { d2, idx: j as u32 });
+                        }
+                        None => stats.pruned_pairs += 1,
+                    }
+                }
+                heap
+            }
+        }
+    }
+}
+
+/// Collapse duplicate columns keeping the max weight — the
+/// max-symmetrization merge (`S = max(S, Sᵀ)`) the combiner, the reducer
+/// and the oracle all share. Leaves `entries` sorted by column.
+pub(crate) fn merge_max(entries: &mut Vec<(u32, f64)>) {
+    entries.sort_unstable_by(|a, b| a.0.cmp(&b.0).then(b.1.total_cmp(&a.1)));
+    entries.dedup_by_key(|e| e.0);
+}
+
+/// Exact single-machine t-NN similarity oracle: RBF weights on each row's
+/// `min(t, n−1)` nearest neighbors, unit diagonal, `S = max(S, Sᵀ)`
+/// symmetrization. The distributed [`job`] pipeline is byte-identical to
+/// this function.
+pub fn tnn_sparse(points: &[Vec<f64>], sigma: f64, cfg: &KnnConfig) -> CsrMatrix {
+    let n = points.len();
+    if n == 0 {
+        return CsrMatrix::from_rows(0, Vec::new());
+    }
+    let d = points[0].len();
+    let flat: Arc<Vec<f64>> = Arc::new(points.iter().flatten().copied().collect());
+    let index = KnnIndex::build(flat.clone(), n, d, cfg);
+    let gamma = crate::spectral::gamma_of_sigma(sigma);
+    let mut stats = QueryStats::default();
+    let mut rows: Vec<Vec<(u32, f64)>> = (0..n)
+        .map(|i| {
+            let mut r = Vec::with_capacity(cfg.t + 2);
+            r.push((i as u32, 1.0));
+            r
+        })
+        .collect();
+    for i in 0..n {
+        let heap = index.query(index.row(i), cfg.t, Some(i as u32), &mut stats);
+        for nb in heap.into_sorted() {
+            let w = (-gamma * nb.d2).exp();
+            rows[i].push((nb.idx, w));
+            rows[nb.idx as usize].push((i as u32, w));
+        }
+    }
+    for r in rows.iter_mut() {
+        merge_max(r);
+    }
+    CsrMatrix::from_rows(n, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts() -> Vec<Vec<f64>> {
+        vec![
+            vec![0.0, 0.0],
+            vec![1.0, 0.0],
+            vec![0.0, 1.2],
+            vec![10.0, 10.0],
+            vec![10.5, 10.0],
+        ]
+    }
+
+    #[test]
+    fn oracle_weights_match_the_rbf_formula() {
+        let s = tnn_sparse(&pts(), 1.0, &KnnConfig { t: 1, ..Default::default() });
+        // Point 0's nearest is 1 at d2 = 1.
+        assert!((s.get(0, 1) - (-0.5f64).exp()).abs() < 1e-15);
+        assert_eq!(s.get(0, 0), 1.0, "unit diagonal");
+        assert_eq!(s.get(0, 3), 0.0, "far pair never materialized");
+    }
+
+    #[test]
+    fn max_symmetrization_keeps_one_sided_edges() {
+        // With t = 1: 2's nearest is 0, but 0's nearest is 1. The (2, 0)
+        // edge must survive in BOTH rows via S = max(S, Sᵀ).
+        let s = tnn_sparse(&pts(), 1.0, &KnnConfig { t: 1, ..Default::default() });
+        assert!(s.get(2, 0) > 0.0);
+        assert_eq!(s.get(2, 0), s.get(0, 2));
+        assert!(s.is_symmetric(0.0), "exactly symmetric");
+    }
+
+    #[test]
+    fn t_clamps_to_n_minus_one() {
+        let s = tnn_sparse(&pts(), 1.0, &KnnConfig { t: 100, ..Default::default() });
+        for i in 0..5 {
+            assert_eq!(s.row_nnz(i), 5, "t >= n-1 degenerates to dense");
+        }
+    }
+
+    #[test]
+    fn mode_and_index_parse_roundtrip() {
+        for m in [GraphMode::Epsilon, GraphMode::Tnn] {
+            assert_eq!(GraphMode::parse(m.as_str()), Some(m));
+        }
+        for k in [IndexKind::KdTree, IndexKind::Brute] {
+            assert_eq!(IndexKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(GraphMode::parse("banana"), None);
+        assert_eq!(IndexKind::parse(""), None);
+    }
+
+    #[test]
+    fn merge_max_dedups_keeping_the_heavier_entry() {
+        let mut e = vec![(3u32, 0.5), (1, 0.9), (3, 0.7), (2, 0.1)];
+        merge_max(&mut e);
+        assert_eq!(e, vec![(1, 0.9), (2, 0.1), (3, 0.7)]);
+    }
+
+    #[test]
+    fn empty_input_yields_empty_matrix() {
+        let s = tnn_sparse(&[], 1.0, &KnnConfig::default());
+        assert_eq!(s.rows(), 0);
+        assert_eq!(s.nnz(), 0);
+    }
+}

@@ -11,7 +11,9 @@
 //!   delay scheduling, live speculative execution), a simulated cluster
 //!   with a network cost model ([`cluster`]), a typed dataflow layer with
 //!   a map-fusing DAG planner over the engine ([`dataflow`]:
-//!   `Pipeline`/`Dataset<K, V>`), and the paper's three parallel phases
+//!   `Pipeline`/`Dataset<K, V>`), a t-NN sparse-similarity subsystem
+//!   ([`knn`]: kd-tree index, bounded neighbor heaps, distributed
+//!   max-symmetrization), and the paper's three parallel phases
 //!   ([`coordinator`]) expressed as pipelines.
 //! - **Layer 2**: JAX compute graphs (`python/compile/model.py`), AOT-lowered
 //!   to HLO text artifacts loaded by [`runtime`] via XLA PJRT.
@@ -32,6 +34,7 @@ pub mod dfs;
 pub mod error;
 pub mod eval;
 pub mod kmeans;
+pub mod knn;
 pub mod linalg;
 pub mod mapreduce;
 pub mod metrics;

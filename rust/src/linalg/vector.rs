@@ -41,6 +41,25 @@ pub fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
 }
 
+/// Squared Euclidean distance with an abort bound: `None` as soon as the
+/// running sum **strictly** exceeds `bound` (the pair cannot matter),
+/// `Some(d2)` otherwise. The accumulation order matches [`sq_dist`], so a
+/// completed result is bit-identical to the unbounded kernel — the
+/// property the t-NN index-equivalence tests rely on. Equality with the
+/// bound never aborts, because a tie may still be admitted downstream.
+pub fn sq_dist_bounded(a: &[f64], b: &[f64], bound: f64) -> Option<f64> {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        acc += d * d;
+        if acc > bound {
+            return None;
+        }
+    }
+    Some(acc)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -78,5 +97,24 @@ mod tests {
         assert_eq!(sq_dist(&a, &b), 25.0);
         assert_eq!(sq_dist(&a, &b), sq_dist(&b, &a));
         assert_eq!(sq_dist(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn sq_dist_bounded_aborts_late_and_matches_bitwise() {
+        let a = [1.0, 2.0, 3.5];
+        let b = [4.0, 6.0, -0.25];
+        // Generous bound: completed result is bit-identical to sq_dist.
+        let full = sq_dist(&a, &b);
+        assert_eq!(sq_dist_bounded(&a, &b, f64::INFINITY), Some(full));
+        assert_eq!(
+            sq_dist_bounded(&a, &b, full).map(f64::to_bits),
+            Some(full.to_bits()),
+            "equality with the bound must not abort"
+        );
+        // Tight bound: aborts (first dim already contributes 9).
+        assert_eq!(sq_dist_bounded(&a, &b, 5.0), None);
+        // Boundary: the running sum equals the bound mid-way — no abort.
+        assert_eq!(sq_dist_bounded(&a, &b, 25.0), None, "third dim exceeds");
+        assert_eq!(sq_dist_bounded(&a[..2], &b[..2], 25.0), Some(25.0));
     }
 }

@@ -82,6 +82,17 @@ pub mod names {
     pub const BLACKLISTED_SLAVES: &str = "BLACKLISTED_SLAVES";
     /// Scheduled node deaths that fired while the job's phases ran.
     pub const NODE_DEATHS: &str = "NODE_DEATHS";
+    /// Candidate pairs the epsilon-mode similarity mappers priced in full
+    /// (every tile cell — the all-pairs baseline the t-NN path undercuts).
+    pub const SIM_PAIRS_EVALUATED: &str = "SIM_PAIRS_EVALUATED";
+    /// Candidate pairs the t-NN spatial index priced in full (completed
+    /// distance evaluations).
+    pub const KNN_PAIRS_EVALUATED: &str = "KNN_PAIRS_EVALUATED";
+    /// Candidate pairs the t-NN index dismissed without a full distance —
+    /// bounding-box subtree pruning plus partial-distance early exits.
+    pub const KNN_PRUNED_PAIRS: &str = "KNN_PRUNED_PAIRS";
+    /// Neighbors displaced from full top-t heaps during t-NN queries.
+    pub const KNN_HEAP_EVICTIONS: &str = "KNN_HEAP_EVICTIONS";
 }
 
 impl Counters {

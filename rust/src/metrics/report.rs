@@ -125,9 +125,81 @@ impl FaultSummary {
     }
 }
 
+/// t-NN graph-construction summary of one job or phase: how much of the
+/// candidate-pair space the spatial index dismissed before pricing it
+/// (counter glossary in DESIGN.md §2.10). All-zero for epsilon-mode runs.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KnnSummary {
+    /// Candidate pairs priced in full by the index.
+    pub pairs_evaluated: u64,
+    /// Candidate pairs dismissed by bounding-box or partial-distance tests.
+    pub pruned_pairs: u64,
+    /// Neighbors displaced from full top-t heaps.
+    pub heap_evictions: u64,
+}
+
+impl KnnSummary {
+    /// Extract the summary from merged job counters.
+    pub fn from_counters(c: &Counters) -> Self {
+        Self {
+            pairs_evaluated: c.get(names::KNN_PAIRS_EVALUATED),
+            pruned_pairs: c.get(names::KNN_PRUNED_PAIRS),
+            heap_evictions: c.get(names::KNN_HEAP_EVICTIONS),
+        }
+    }
+
+    /// Did the t-NN path run at all?
+    pub fn any(&self) -> bool {
+        *self != Self::default()
+    }
+
+    /// Fraction of seen candidate pairs that were pruned (0 when none).
+    pub fn pruned_ratio(&self) -> f64 {
+        let total = self.pairs_evaluated + self.pruned_pairs;
+        if total == 0 {
+            0.0
+        } else {
+            self.pruned_pairs as f64 / total as f64
+        }
+    }
+
+    /// One-line human-readable rendering (counter names kept verbatim so
+    /// smoke runs are grep-able).
+    pub fn render(&self) -> String {
+        format!(
+            "KNN_PAIRS_EVALUATED={} KNN_PRUNED_PAIRS={} KNN_HEAP_EVICTIONS={} \
+             pruned={:.1}%",
+            self.pairs_evaluated,
+            self.pruned_pairs,
+            self.heap_evictions,
+            100.0 * self.pruned_ratio(),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn knn_summary_reads_all_counters() {
+        let mut c = Counters::default();
+        c.incr(names::KNN_PAIRS_EVALUATED, 30);
+        c.incr(names::KNN_PRUNED_PAIRS, 70);
+        c.incr(names::KNN_HEAP_EVICTIONS, 5);
+        let s = KnnSummary::from_counters(&c);
+        assert_eq!(s.pairs_evaluated, 30);
+        assert_eq!(s.pruned_pairs, 70);
+        assert_eq!(s.heap_evictions, 5);
+        assert!(s.any());
+        assert!((s.pruned_ratio() - 0.7).abs() < 1e-12);
+        let line = s.render();
+        assert!(line.contains("KNN_PRUNED_PAIRS=70"), "{line}");
+        assert!(line.contains("pruned=70.0%"), "{line}");
+        let empty = KnnSummary::from_counters(&Counters::default());
+        assert!(!empty.any());
+        assert_eq!(empty.pruned_ratio(), 0.0);
+    }
 
     #[test]
     fn fault_summary_reads_all_counters() {

@@ -10,6 +10,9 @@ pub mod single;
 
 pub use laplacian::{inv_sqrt_degrees, laplacian_dense, laplacian_sparse};
 pub use similarity::{adjacency_similarity, gamma_of_sigma, rbf_dense, rbf_sparse};
+// The t-NN oracle lives in the knn subsystem but is part of the
+// similarity-construction surface alongside rbf_sparse.
+pub use crate::knn::tnn_sparse;
 pub use single::{
     cluster_embedding, normalize_embedding, spectral_cluster_graph,
     spectral_cluster_points, Eigensolver, SpectralParams, SpectralResult,

@@ -29,14 +29,37 @@ pub fn rbf_dense(points: &[Vec<f64>], sigma: f64) -> DenseMatrix {
 }
 
 /// Sparse RBF similarity: entries < `epsilon` dropped (diagonal kept).
+///
+/// Two prunes keep the epsilon path honest at scale: row vectors are
+/// pre-sized from a sampled degree estimate instead of growing from empty,
+/// and each pair's distance sum aborts early once the running total
+/// already implies `v < epsilon` (`d2 > -ln(epsilon)/gamma` ⇒ dropped
+/// either way, so surviving entries are bit-identical to the naive scan).
 pub fn rbf_sparse(points: &[Vec<f64>], sigma: f64, epsilon: f64) -> CsrMatrix {
     let n = points.len();
+    if n == 0 {
+        return CsrMatrix::from_rows(0, Vec::new());
+    }
     let gamma = gamma_of_sigma(sigma);
-    let mut rows: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n];
+    // Slack on the abort bound keeps boundary rounding on the safe side.
+    let d2_bound = if epsilon > 0.0 {
+        (-epsilon.ln() / gamma) * (1.0 + 1e-9)
+    } else {
+        f64::INFINITY
+    };
+    let est = estimated_degree(points, d2_bound);
+    let mut rows: Vec<Vec<(u32, f64)>> =
+        (0..n).map(|_| Vec::with_capacity(est + 1)).collect();
     for i in 0..n {
         rows[i].push((i as u32, 1.0));
         for j in (i + 1)..n {
-            let d2 = crate::linalg::vector::sq_dist(&points[i], &points[j]);
+            let Some(d2) = crate::linalg::vector::sq_dist_bounded(
+                &points[i],
+                &points[j],
+                d2_bound,
+            ) else {
+                continue;
+            };
             let v = (-gamma * d2).exp();
             if v >= epsilon {
                 rows[i].push((j as u32, v));
@@ -45,6 +68,34 @@ pub fn rbf_sparse(points: &[Vec<f64>], sigma: f64, epsilon: f64) -> CsrMatrix {
         }
     }
     CsrMatrix::from_rows(n, rows)
+}
+
+/// Estimated neighbors per row: the in-bound fraction of a deterministic
+/// pair sample, scaled to n−1. Only has to be the right order of
+/// magnitude — it sizes the row reserves, nothing else.
+fn estimated_degree(points: &[Vec<f64>], d2_bound: f64) -> usize {
+    let n = points.len();
+    if n < 2 || d2_bound == f64::INFINITY {
+        return n.saturating_sub(1);
+    }
+    let mut rng = crate::util::rng::Xoshiro256::new(0x5eed_de9);
+    let samples = (n * (n - 1) / 2).min(256);
+    let mut kept = 0usize;
+    let mut seen = 0usize;
+    while seen < samples {
+        let i = (rng.next_u64() % n as u64) as usize;
+        let j = (rng.next_u64() % n as u64) as usize;
+        if i == j {
+            continue;
+        }
+        seen += 1;
+        if crate::linalg::vector::sq_dist_bounded(&points[i], &points[j], d2_bound)
+            .is_some()
+        {
+            kept += 1;
+        }
+    }
+    (kept as f64 / samples as f64 * (n - 1) as f64).ceil() as usize
 }
 
 /// Similarity from a weighted graph adjacency (graph-input mode): the edge
@@ -92,6 +143,34 @@ mod tests {
         // Dense and sparse agree on surviving entries.
         let d = rbf_dense(&pts(), 1.0);
         assert!((s.get(0, 1) - d[(0, 1)]).abs() < 1e-15);
+    }
+
+    #[test]
+    fn sparse_early_exit_is_output_neutral() {
+        // The pre-sizing + partial-distance abort must not change a single
+        // bit of what survives, across loose and harsh thresholds.
+        let ps = crate::data::gaussian_blobs(120, 3, 4, 0.4, 8.0, 2);
+        let d = rbf_dense(&ps.points, 1.0);
+        for eps in [1e-8, 1e-3, 0.5] {
+            let s = rbf_sparse(&ps.points, 1.0, eps);
+            let mut nnz = 0usize;
+            for i in 0..120 {
+                for j in 0..120 {
+                    let v = d[(i, j)];
+                    if i == j || v >= eps {
+                        assert_eq!(
+                            s.get(i, j).to_bits(),
+                            v.to_bits(),
+                            "({i},{j}) eps={eps}"
+                        );
+                        nnz += 1;
+                    } else {
+                        assert_eq!(s.get(i, j), 0.0, "({i},{j}) eps={eps}");
+                    }
+                }
+            }
+            assert_eq!(s.nnz(), nnz, "eps={eps}");
+        }
     }
 
     #[test]

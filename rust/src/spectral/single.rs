@@ -27,6 +27,11 @@ pub struct SpectralParams {
     pub sigma: f64,
     /// Sparsification threshold.
     pub epsilon: f64,
+    /// Similarity-graph construction mode (epsilon threshold | t-NN);
+    /// the Lanczos path honors it, dense Jacobi is inherently all-pairs.
+    pub graph: crate::knn::GraphMode,
+    /// t-NN graph settings (used when `graph` is tnn).
+    pub knn: crate::knn::KnnConfig,
     /// Lanczos subspace cap.
     pub lanczos_steps: usize,
     /// K-means iteration cap.
@@ -44,6 +49,8 @@ impl Default for SpectralParams {
             k: a.k,
             sigma: a.sigma,
             epsilon: a.epsilon,
+            graph: a.graph,
+            knn: crate::knn::KnnConfig::default(),
             lanczos_steps: a.lanczos_steps,
             kmeans_iters: a.kmeans_iters,
             kmeans_tol: a.kmeans_tol,
@@ -104,7 +111,14 @@ pub fn spectral_cluster_points(
             (vals[..params.k].to_vec(), z)
         }
         Eigensolver::Lanczos => {
-            let s = rbf_sparse(points, params.sigma, params.epsilon);
+            let s = match params.graph {
+                crate::knn::GraphMode::Epsilon => {
+                    rbf_sparse(points, params.sigma, params.epsilon)
+                }
+                crate::knn::GraphMode::Tnn => {
+                    crate::knn::tnn_sparse(points, params.sigma, &params.knn)
+                }
+            };
             let l = laplacian_sparse(&s);
             let opts = LanczosOptions {
                 max_steps: params.lanczos_steps.min(n),
@@ -194,6 +208,31 @@ mod tests {
             spectral_score > kmeans_score + 0.5,
             "spectral {spectral_score} vs kmeans {kmeans_score}"
         );
+    }
+
+    #[test]
+    fn tnn_graph_mode_recovers_blobs() {
+        // The single-machine t-NN path: same clustering quality as the
+        // epsilon path on well-separated blobs, far fewer stored entries.
+        let ps = gaussian_blobs(150, 3, 4, 0.3, 10.0, 3);
+        let params = SpectralParams {
+            k: 3,
+            sigma: 1.5,
+            graph: crate::knn::GraphMode::Tnn,
+            knn: crate::knn::KnnConfig { t: 8, ..Default::default() },
+            // Well-separated blobs give an exactly-disconnected t-NN graph
+            // (a 0 eigenvalue of multiplicity k): a full-dimension Krylov
+            // space resolves the multiplicity deterministically.
+            lanczos_steps: 150,
+            ..Default::default()
+        };
+        let r =
+            spectral_cluster_points(&ps.points, &params, Eigensolver::Lanczos).unwrap();
+        let score = nmi(&ps.labels, &r.labels);
+        assert!(score > 0.95, "tnn-mode nmi={score}");
+        let s = crate::knn::tnn_sparse(&ps.points, 1.5, &params.knn);
+        let dense_nnz = 150usize * 150;
+        assert!(s.nnz() * 4 < dense_nnz, "t-NN graph should be sparse");
     }
 
     #[test]

@@ -5,6 +5,7 @@ use std::sync::Arc;
 use psch::config::Config;
 use psch::coordinator::{Driver, PipelineInput};
 use psch::data::gaussian_blobs;
+use psch::knn::{GraphMode, IndexKind};
 use psch::runtime::KernelRuntime;
 
 #[test]
@@ -26,6 +27,42 @@ fn shipped_configs_parse_and_validate() {
     assert!(chaos.faults.node_deaths[0].slave < chaos.cluster.slaves);
     // And the fault-free configs stay inert.
     assert!(!Config::load("configs/quick.toml").unwrap().faults.is_active());
+    // Every shipped config carries the (inactive) [knn] section with the
+    // documented defaults, so --graph tnn works out of the box.
+    for path in ["configs/paper.toml", "configs/quick.toml", "configs/chaos.toml"] {
+        let cfg = Config::load(path).unwrap();
+        assert_eq!(cfg.algo.graph, GraphMode::Epsilon, "{path}");
+        assert_eq!(cfg.knn.t, 10, "{path}");
+        assert_eq!(cfg.knn.leaf_size, 16, "{path}");
+        assert_eq!(cfg.knn.index, IndexKind::KdTree, "{path}");
+    }
+}
+
+#[test]
+fn knn_keys_round_trip_through_parse_and_set() {
+    // File syntax (quoted + bare values) and CLI-style --set agree.
+    let text = "[algo]\ngraph = \"tnn\"\n\n[knn]\nt = 7\nleaf_size = 8\nindex = \"brute\"\n";
+    let parsed = Config::parse(text).unwrap();
+    let mut set = Config::default();
+    set.set("algo.graph", "tnn").unwrap();
+    set.set("knn.t", "7").unwrap();
+    set.set("knn.leaf_size", "8").unwrap();
+    set.set("knn.index", "brute").unwrap();
+    set.validate().unwrap();
+    assert_eq!(parsed, set);
+    assert_eq!(parsed.algo.graph, GraphMode::Tnn);
+    assert_eq!(parsed.knn.t, 7);
+    assert_eq!(parsed.knn.leaf_size, 8);
+    assert_eq!(parsed.knn.index, IndexKind::Brute);
+    // A tnn override on a shipped config keeps the file's other knobs.
+    let mut quick = Config::load("configs/quick.toml").unwrap();
+    quick.set("algo.graph", "tnn").unwrap();
+    quick.set("knn.t", "5").unwrap();
+    quick.validate().unwrap();
+    assert_eq!(quick.algo.graph, GraphMode::Tnn);
+    assert_eq!(quick.knn.t, 5);
+    assert_eq!(quick.knn.leaf_size, 16, "file value survives the override");
+    assert_eq!(quick.cluster.slaves, 2);
 }
 
 #[test]

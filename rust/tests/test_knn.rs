@@ -1,0 +1,215 @@
+//! Integration: the t-NN similarity subsystem (rust/src/knn) — index
+//! equivalence, distributed-vs-oracle byte identity, symmetrization
+//! semantics and the end-to-end tnn graph mode.
+
+use std::sync::Arc;
+
+use psch::cluster::Cluster;
+use psch::config::Config;
+use psch::coordinator::similarity_job::{read_similarity_row, BLOCK};
+use psch::coordinator::{Driver, PipelineInput, Services};
+use psch::data::gaussian_blobs;
+use psch::knn::{
+    run_tnn_phase, tnn_sparse, IndexKind, KnnConfig, KnnIndex, QueryStats,
+};
+use psch::mapreduce::names;
+use psch::runtime::KernelRuntime;
+
+fn flat(points: &[Vec<f64>]) -> Arc<Vec<f64>> {
+    Arc::new(points.iter().flatten().copied().collect())
+}
+
+fn services_with(m: usize, knn: KnnConfig) -> Services {
+    let mut svc = Services::new(Cluster::new(m), Arc::new(KernelRuntime::native()));
+    svc.knn = knn;
+    svc
+}
+
+/// Read every graph row back from the phase-1 table.
+fn table_rows(svc: &Services, n: usize) -> Vec<Vec<(u32, f64)>> {
+    let table = svc.tables.open("S").unwrap();
+    let nb = n.div_ceil(BLOCK);
+    (0..n)
+        .map(|i| read_similarity_row(&table, i as u64, nb))
+        .collect()
+}
+
+#[test]
+fn kdtree_and_brute_force_oracles_are_bitwise_equal() {
+    let (n, d) = (300, 4);
+    let ps = gaussian_blobs(n, 3, d, 0.5, 6.0, 9);
+    let pts = flat(&ps.points);
+    for t in [1usize, 5, 17] {
+        for leaf_size in [1usize, 8, 32] {
+            let kd_cfg = KnnConfig { t, leaf_size, index: IndexKind::KdTree };
+            let bf_cfg = KnnConfig { t, leaf_size, index: IndexKind::Brute };
+            let kd = KnnIndex::build(pts.clone(), n, d, &kd_cfg);
+            let bf = KnnIndex::build(pts.clone(), n, d, &bf_cfg);
+            let mut kd_stats = QueryStats::default();
+            let mut bf_stats = QueryStats::default();
+            for i in 0..n {
+                let a = kd
+                    .query(kd.row(i), t, Some(i as u32), &mut kd_stats)
+                    .into_sorted();
+                let b = bf
+                    .query(bf.row(i), t, Some(i as u32), &mut bf_stats)
+                    .into_sorted();
+                assert_eq!(a.len(), b.len(), "i={i} t={t} leaf={leaf_size}");
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.idx, y.idx, "i={i} t={t} leaf={leaf_size}");
+                    assert_eq!(x.d2.to_bits(), y.d2.to_bits(), "i={i} t={t}");
+                }
+            }
+            // Both oracles account for every candidate exactly once.
+            let all = (n * (n - 1)) as u64;
+            assert_eq!(kd_stats.pairs_evaluated + kd_stats.pruned_pairs, all);
+            assert_eq!(bf_stats.pairs_evaluated + bf_stats.pruned_pairs, all);
+            // Whole-matrix equality, exact.
+            let a = tnn_sparse(&ps.points, 1.2, &kd_cfg);
+            let b = tnn_sparse(&ps.points, 1.2, &bf_cfg);
+            assert_eq!(a, b, "t={t} leaf={leaf_size}");
+        }
+    }
+}
+
+#[test]
+fn oracle_graph_is_symmetric_with_bounded_heaps() {
+    let n = 250;
+    let ps = gaussian_blobs(n, 3, 4, 0.5, 6.0, 3);
+    let cfg = KnnConfig { t: 6, ..Default::default() };
+    let s = tnn_sparse(&ps.points, 1.5, &cfg);
+    assert!(s.is_symmetric(0.0), "max-symmetrization must be exact");
+    for i in 0..n {
+        let row: Vec<(u32, f64)> = s.row(i).collect();
+        assert!(
+            row.iter().any(|&(j, v)| j as usize == i && v == 1.0),
+            "row {i} lost its unit diagonal"
+        );
+        let off_diag = row.len() - 1;
+        assert!(off_diag >= 1, "row {i} isolated");
+        assert!(
+            off_diag >= cfg.t.min(n - 1),
+            "row {i}: the union keeps at least the row's own t"
+        );
+        assert!(off_diag <= n - 1);
+    }
+    // The bounded object is the pre-symmetrization heap: exactly
+    // min(t, n-1) off-diagonal entries per row, self excluded, sorted.
+    let index = KnnIndex::build(flat(&ps.points), n, 4, &cfg);
+    let mut stats = QueryStats::default();
+    for i in (0..n).step_by(11) {
+        let nbrs = index
+            .query(index.row(i), cfg.t, Some(i as u32), &mut stats)
+            .into_sorted();
+        assert_eq!(nbrs.len(), cfg.t.min(n - 1), "row {i} heap size");
+        assert!(nbrs.iter().all(|nb| nb.idx as usize != i), "self excluded");
+        for w in nbrs.windows(2) {
+            assert!(
+                w[0].d2 < w[1].d2 || (w[0].d2 == w[1].d2 && w[0].idx < w[1].idx),
+                "row {i}: heap drains nearest-first"
+            );
+        }
+    }
+}
+
+#[test]
+fn distributed_graph_byte_identical_to_oracle() {
+    let (n, d) = (300, 4);
+    let ps = gaussian_blobs(n, 3, d, 0.4, 8.0, 3);
+    let cfg = KnnConfig { t: 8, ..Default::default() };
+    let svc = services_with(3, cfg);
+    let out = run_tnn_phase(&svc, flat(&ps.points), n, d, 1.0, "S").unwrap();
+    let oracle = tnn_sparse(&ps.points, 1.0, &cfg);
+    let sums = oracle.row_sums();
+    let rows = table_rows(&svc, n);
+    for (i, row) in rows.iter().enumerate() {
+        let want: Vec<(u32, f64)> = oracle.row(i).collect();
+        assert_eq!(row.len(), want.len(), "row {i} nnz");
+        for ((j1, v1), (j2, v2)) in row.iter().zip(&want) {
+            assert_eq!(j1, j2, "row {i}");
+            assert_eq!(v1.to_bits(), v2.to_bits(), "row {i} col {j1}");
+        }
+        assert_eq!(out.degrees[i].to_bits(), sums[i].to_bits(), "degree {i}");
+    }
+    assert_eq!(out.nnz, oracle.nnz() as u64);
+    assert!(out.counters.get(names::KNN_PAIRS_EVALUATED) > 0);
+    assert!(out.counters.get(names::KNN_PRUNED_PAIRS) > 0);
+}
+
+#[test]
+fn distributed_graph_invariant_across_cluster_sizes() {
+    let (n, d) = (220, 4);
+    let ps = gaussian_blobs(n, 3, d, 0.4, 8.0, 7);
+    let cfg = KnnConfig { t: 5, ..Default::default() };
+    let run_at = |m: usize| {
+        let svc = services_with(m, cfg);
+        run_tnn_phase(&svc, flat(&ps.points), n, d, 1.5, "S").unwrap();
+        table_rows(&svc, n)
+    };
+    let two = run_at(2);
+    let four = run_at(4);
+    for i in 0..n {
+        assert_eq!(two[i].len(), four[i].len(), "row {i} nnz");
+        for (a, b) in two[i].iter().zip(&four[i]) {
+            assert_eq!(a.0, b.0, "row {i}");
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "row {i} col {}", a.0);
+        }
+    }
+}
+
+#[test]
+fn tnn_mode_end_to_end_recovers_blobs() {
+    let ps = gaussian_blobs(240, 3, 4, 0.3, 10.0, 3);
+    let mut cfg = Config::default();
+    cfg.cluster.slaves = 3;
+    cfg.algo.k = 3;
+    cfg.algo.sigma = 1.5;
+    cfg.set("algo.graph", "tnn").unwrap();
+    cfg.set("knn.t", "12").unwrap();
+    // Well-separated blobs ⇒ exactly-disconnected t-NN graph (0 eigenvalue
+    // of multiplicity k); a full-dimension Krylov space resolves it.
+    cfg.set("algo.lanczos_steps", "240").unwrap();
+    cfg.validate().unwrap();
+    let driver = Driver::new(cfg, Arc::new(KernelRuntime::native()));
+    let input = PipelineInput::Points { points: ps.points.clone() };
+    let r = driver.run(&input).unwrap();
+    let score = psch::eval::nmi(&ps.labels, &r.labels);
+    assert!(score > 0.9, "tnn end-to-end nmi={score}");
+    assert!(r.nnz > 0);
+    let knn = r.phases[0].knn_summary();
+    assert!(knn.any(), "knn counters must reach the phase stats");
+    assert!(knn.pruned_ratio() > 0.0, "index should prune on blob data");
+    // The eigen/kmeans phases never touch the index.
+    assert!(!r.phases[1].knn_summary().any());
+    assert!(!r.phases[2].knn_summary().any());
+}
+
+#[test]
+fn tnn_prices_fewer_pairs_than_epsilon_at_equal_n() {
+    let (n, d) = (400, 4);
+    let ps = gaussian_blobs(n, 3, d, 0.4, 8.0, 11);
+    // Epsilon path.
+    let svc = services_with(2, KnnConfig::default());
+    let flat32: Vec<f32> = ps.points.iter().flatten().map(|&x| x as f32).collect();
+    let eps_out = psch::coordinator::similarity_job::run_similarity_phase(
+        &svc,
+        Arc::new(flat32),
+        n,
+        d,
+        1.5,
+        1e-8,
+        "S",
+    )
+    .unwrap();
+    let eps_pairs = eps_out.counters.get(names::SIM_PAIRS_EVALUATED);
+    // t-NN path.
+    let svc = services_with(2, KnnConfig { t: 10, ..Default::default() });
+    let tnn_out = run_tnn_phase(&svc, flat(&ps.points), n, d, 1.5, "S").unwrap();
+    let tnn_pairs = tnn_out.counters.get(names::KNN_PAIRS_EVALUATED);
+    assert!(eps_pairs > 0 && tnn_pairs > 0);
+    assert!(
+        tnn_pairs < eps_pairs,
+        "t-NN must price fewer pairs: {tnn_pairs} vs {eps_pairs}"
+    );
+    assert!(tnn_out.nnz < eps_out.nnz, "t-NN graph is the sparser one");
+}
