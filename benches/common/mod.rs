@@ -97,11 +97,21 @@ pub fn run_json(m: usize, result: &psch::coordinator::PipelineResult) -> String 
     )
 }
 
-/// Write a BENCH_*.json payload next to the working directory; failures
-/// only warn (benches must keep running on read-only checkouts).
+/// Write a BENCH_*.json payload at the repo root: relative paths are
+/// anchored at `CARGO_MANIFEST_DIR`, so every bench's JSON lands beside
+/// Cargo.toml no matter what directory invoked it. Failures only warn
+/// (benches must keep running on read-only checkouts).
 pub fn write_bench_json(path: &str, payload: &str) {
-    match std::fs::write(path, payload) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    let p = std::path::Path::new(path);
+    let anchored;
+    let target = if p.is_absolute() {
+        p
+    } else {
+        anchored = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(p);
+        anchored.as_path()
+    };
+    match std::fs::write(target, payload) {
+        Ok(()) => println!("wrote {}", target.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", target.display()),
     }
 }

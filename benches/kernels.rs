@@ -5,9 +5,12 @@
 //! native code and quantifies per-tile cost (feeding the compute_scale
 //! calibration in EXPERIMENTS.md).
 
+mod common;
+
 use std::path::Path;
 
-use psch::benchutil::bench;
+use psch::benchutil::{bench, stats_json};
+use psch::mapreduce::Counters;
 use psch::runtime::executor::{KM_K, KM_PTS, MV_BLOCK, PAD_DIM, RBF_TILE};
 use psch::runtime::KernelRuntime;
 use psch::util::Xoshiro256;
@@ -65,6 +68,24 @@ fn main() {
             },
         ));
     }
+    // Counters::incr hot path (every per-record counter bump in the
+    // engine goes through it): the key exists after the first touch, so
+    // later increments must take the no-alloc fast path. The micro-assert
+    // pins the arithmetic: warmup + iters rounds of 1e6, plus the seed.
+    const INCR_ROUNDS: u64 = 1_000_000;
+    let mut counters = Counters::default();
+    counters.incr("HOT", 1);
+    results.push(bench("counters_incr hot-path x1e6", 1, 5, || {
+        for _ in 0..INCR_ROUNDS {
+            counters.incr("HOT", 1);
+        }
+    }));
+    assert_eq!(
+        counters.get("HOT"),
+        (1 + 5) * INCR_ROUNDS + 1,
+        "Counters::incr dropped increments"
+    );
+
     println!();
     for r in &results {
         println!("{}", r.render());
@@ -90,5 +111,7 @@ fn main() {
         .fold(0.0f32, f32::max);
     println!("rbf parity max |xla - native| = {max_diff:.2e}");
     assert!(max_diff < 1e-5, "backend parity violated");
+
+    common::write_bench_json("BENCH_kernels.json", &stats_json("kernels", &results));
     println!("kernels: OK");
 }

@@ -34,6 +34,29 @@ impl BenchStats {
             self.iters
         )
     }
+
+    /// JSON object rendering for `BENCH_*.json` payloads.
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"name\":\"{}\",\"iters\":{},\"min_ns\":{},\"median_ns\":{},\
+             \"mean_ns\":{}}}",
+            crate::trace::json::esc(&self.name),
+            self.iters,
+            self.min.as_nanos(),
+            self.median.as_nanos(),
+            self.mean.as_nanos(),
+        )
+    }
+}
+
+/// Render a whole bench's results as one `BENCH_*.json` document.
+pub fn stats_json(bench: &str, stats: &[BenchStats]) -> String {
+    let entries: Vec<String> = stats.iter().map(BenchStats::json).collect();
+    format!(
+        "{{\"bench\":\"{}\",\"results\":[{}]}}\n",
+        crate::trace::json::esc(bench),
+        entries.join(",")
+    )
 }
 
 /// Run `f` for `warmup` untimed + `iters` timed iterations.
@@ -137,5 +160,17 @@ mod tests {
         let (v, d) = time_once(|| 21 * 2);
         assert_eq!(v, 42);
         assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn stats_json_is_parseable() {
+        let stats = bench("k [xla]", 0, 3, || {});
+        let doc = stats_json("kernels", &[stats]);
+        let v = crate::trace::json::Value::parse(&doc).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str(), Some("kernels"));
+        let results = v.get("results").unwrap().items().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").unwrap().as_str(), Some("k [xla]"));
+        assert_eq!(results[0].get("iters").unwrap().as_u64(), Some(3));
     }
 }

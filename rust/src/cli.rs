@@ -8,6 +8,10 @@
 //!                 [--knn-t T]        neighbors per row in tnn mode
 //!                 [--fail-node S@H]  kill slave S at cumulative heartbeat H
 //!                 [--task-fail-prob P]  seeded per-attempt failure probability
+//!                 [--trace-out FILE] write a Chrome trace-event JSON
+//!                                    (Perfetto-loadable, virtual clock)
+//!                 [--report-json FILE]  write the unified RunReport JSON
+//!                 [--quiet]          suppress the per-phase summary lines
 //! psch baseline   [--blobs N] [--config FILE]   single-machine comparator
 //! psch scale-study [--n N] [--slaves 1,2,4,6,8,10] [--config FILE]
 //! psch inspect-artifacts [--dir DIR]
@@ -37,7 +41,7 @@ impl Flags {
     /// Flags that are boolean switches: bare `--flag` parses as `"true"`.
     /// Every other flag still requires a value (a forgotten value stays a
     /// hard error instead of silently becoming the string `"true"`).
-    const BOOL_FLAGS: &'static [&'static str] = &["explain-plan"];
+    const BOOL_FLAGS: &'static [&'static str] = &["explain-plan", "quiet"];
 
     /// Parse `--key value` / `--set k=v` arguments; switches listed in
     /// [`Self::BOOL_FLAGS`] may appear bare (e.g. `--explain-plan`).
@@ -203,9 +207,14 @@ fn cmd_run(flags: &Flags) -> Result<i32> {
     let mut cfg = flags.config()?;
     apply_chaos_flags(flags, &mut cfg)?;
     apply_graph_flags(flags, &mut cfg)?;
+    let quiet = flags.get_bool("quiet");
+    let trace_out = flags.get("trace-out");
+    let report_out = flags.get("report-json");
     let (input, truth) = load_input(flags, &cfg)?;
     let runtime = Arc::new(KernelRuntime::auto(&crate::runtime::artifacts_dir()));
-    println!("backend: {:?}; slaves: {}", runtime.backend(), cfg.cluster.slaves);
+    if !quiet {
+        println!("backend: {:?}; slaves: {}", runtime.backend(), cfg.cluster.slaves);
+    }
     let driver = Driver::new(cfg, runtime);
     if flags.get_bool("explain-plan") {
         // Print the planned DAGs (stages, fusion, estimated shuffle) and
@@ -213,64 +222,44 @@ fn cmd_run(flags: &Flags) -> Result<i32> {
         print!("{}", driver.explain_plan(&input)?);
         return Ok(0);
     }
-    let result = driver.run(&input)?;
+    // Tracing is off (and free) unless an output asked for it; the sink is
+    // shared through the cluster, so enabling it here is seen by every job.
+    let services = driver.services();
+    if trace_out.is_some() || report_out.is_some() {
+        let c = &driver.config().cluster;
+        services.cluster.trace().enable(c.slaves, c.slots_per_slave);
+    }
+    let result = driver.run_on(&services, &input)?;
 
-    let mut table = AsciiTable::new(&[
-        "phase", "virtual", "wall_s", "jobs", "shuffle", "spilled", "merges",
-        "reruns", "ffail",
-    ]);
-    for p in &result.phases {
-        let shuffle = p.shuffle_summary();
-        let faults = p.fault_summary();
-        table.row(&[
-            p.name.clone(),
-            hms(std::time::Duration::from_secs_f64(p.virtual_s)),
-            format!("{:.2}", p.wall_s),
-            p.jobs.to_string(),
-            crate::util::fmt::human_bytes(p.shuffle_bytes),
-            shuffle.spilled_records.to_string(),
-            shuffle.merge_passes.to_string(),
-            faults.map_reruns.to_string(),
-            faults.fetch_failures.to_string(),
-        ]);
+    let quality =
+        truth.map(|t| (nmi(&t, &result.labels), ari(&t, &result.labels)));
+    if !quiet {
+        // One formatter renders every summary line (table, shuffle/knn/
+        // faults, quality, nnz) — see `metrics::report::render_run`.
+        print!("{}", crate::metrics::report::render_run(&result, quality));
     }
-    table.row(&[
-        "TOTAL".into(),
-        hms(std::time::Duration::from_secs_f64(result.total_virtual_s)),
-        format!("{:.2}", result.total_wall_s),
-        result.phases.iter().map(|p| p.jobs).sum::<usize>().to_string(),
-        String::new(),
-        String::new(),
-        String::new(),
-        String::new(),
-        String::new(),
-    ]);
-    println!("{}", table.render());
-    for p in &result.phases {
-        println!("shuffle[{}]: {}", p.name, p.shuffle_summary().render());
-    }
-    // t-NN pruning report: only phases that ran the spatial index.
-    for p in &result.phases {
-        let k = p.knn_summary();
-        if k.any() {
-            println!("knn[{}]: {}", p.name, k.render());
+    let data = services.cluster.trace().snapshot();
+    if let Some(data) = &data {
+        if !quiet {
+            print!("{}", crate::trace::critical::render_report(data, 5));
+        }
+        if let Some(path) = trace_out {
+            std::fs::write(path, crate::trace::export::chrome_trace_json(data))?;
+            println!("trace written: {path}");
         }
     }
-    // Per-phase fault report: only phases that saw the failure domain act.
-    for p in &result.phases {
-        let f = p.fault_summary();
-        if f.any() {
-            println!("faults[{}]: {}", p.name, f.render());
-        }
+    if let Some(path) = report_out {
+        std::fs::write(
+            path,
+            crate::trace::report::run_report_json(
+                driver.config(),
+                &result,
+                quality,
+                data.as_ref(),
+            ),
+        )?;
+        println!("report written: {path}");
     }
-    if let Some(truth) = truth {
-        println!(
-            "quality: NMI={:.4} ARI={:.4} (vs planted truth)",
-            nmi(&truth, &result.labels),
-            ari(&truth, &result.labels)
-        );
-    }
-    println!("similarity nnz: {}", result.nnz);
     Ok(0)
 }
 
@@ -420,6 +409,10 @@ mod tests {
         // Explicit value still works.
         let f = Flags::parse(&s(&["--explain-plan", "yes"])).unwrap();
         assert!(f.get_bool("explain-plan"));
+        // --quiet is a switch too; --trace-out still requires a value.
+        let f = Flags::parse(&s(&["--quiet", "--blobs", "50"])).unwrap();
+        assert!(f.get_bool("quiet"));
+        assert!(Flags::parse(&s(&["--trace-out"])).is_err());
     }
 
     #[test]

@@ -78,6 +78,10 @@ pub struct Cluster {
     /// blacklist counts, death listeners. `Arc`, so every clone of the
     /// cluster (driver, planner, benches) observes the same failures.
     faults: Arc<FaultDomain>,
+    /// The shared trace sink. Disabled (and free) by default; `Arc`, so
+    /// enabling it is visible to every existing clone of the cluster and
+    /// jobs record spans no matter which clone ran them.
+    trace: Arc<crate::trace::TraceSink>,
     /// Physical worker threads used to execute tasks (bounded by host cores;
     /// virtual time is what scales with `m`, not host parallelism).
     threads: usize,
@@ -105,6 +109,7 @@ impl Cluster {
             tracker: TrackerConfig::default(),
             shuffle: ShuffleConfig::default(),
             faults: Arc::new(FaultDomain::new(m, FaultConfig::default())),
+            trace: Arc::new(crate::trace::TraceSink::default()),
             threads,
         }
     }
@@ -123,6 +128,12 @@ impl Cluster {
     /// The shared failure domain.
     pub fn faults(&self) -> &Arc<FaultDomain> {
         &self.faults
+    }
+
+    /// The shared trace sink (disabled unless [`crate::trace::TraceSink::enable`]
+    /// was called; shared across clones like the failure domain).
+    pub fn trace(&self) -> &Arc<crate::trace::TraceSink> {
+        &self.trace
     }
 
     /// Mark one slave as a straggler with the given relative speed.

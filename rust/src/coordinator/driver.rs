@@ -225,8 +225,10 @@ impl Driver {
         input: &PipelineInput,
     ) -> Result<PipelineResult> {
         let a = &self.config.algo;
+        let tracer = services.cluster.trace().clone();
 
         // ---- Phase 1: similarity matrix + degrees ----
+        tracer.begin_phase("similarity");
         let (sim, n) = match input {
             PipelineInput::Points { points } => {
                 if points.is_empty() {
@@ -277,6 +279,7 @@ impl Driver {
         };
 
         // ---- Phase 2: k smallest eigenvectors ----
+        tracer.begin_phase("eigenvectors");
         let s_table = lanczos_job::open_similarity_table(services, "S")?;
         let eig = lanczos_job::run_eigen_phase(
             services,
@@ -289,6 +292,7 @@ impl Driver {
         )?;
 
         // ---- Phase 3: parallel k-means on the embedding ----
+        tracer.begin_phase("kmeans");
         let km = kmeans_job::run_kmeans_phase(
             services,
             Arc::new(eig.embedding.clone()),
@@ -299,6 +303,8 @@ impl Driver {
             a.kmeans_tol,
             a.seed,
         )?;
+
+        tracer.end_phase();
 
         let phases = [sim.stats, eig.stats, km.stats];
         let (total_virtual_s, total_wall_s) = PipelineResult::totals(&phases);

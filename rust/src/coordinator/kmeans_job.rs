@@ -177,12 +177,23 @@ pub(crate) fn update_pipeline(
             move |key: u32, values: &mut Group<'_, Vec<f64>>, out| -> Result<()> {
                 let mut sums = vec![0.0f64; d];
                 let mut count = 0.0f64;
+                let mut partials = 0u64;
                 while let Some(payload) = values.next_value() {
                     for t in 0..d {
                         sums[t] += payload[t];
                     }
                     count += payload[d];
+                    partials += 1;
                 }
+                // Modeled compute (partials × d point-dims) keeps the
+                // reduce plan — and the trace built on it — deterministic.
+                out.incr(
+                    crate::mapreduce::names::COMPUTE_US,
+                    super::costmodel::units_to_us(
+                        partials * d as u64,
+                        super::costmodel::KM_POINTDIM_PER_S,
+                    ),
+                );
                 if count > 0.0 {
                     let center: Vec<f64> = sums.iter().map(|s| s / count).collect();
                     out.emit(key, center);

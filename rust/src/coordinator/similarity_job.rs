@@ -247,11 +247,21 @@ pub(crate) fn points_pipeline(
         .reducers(services.cluster.num_slaves())
         .reduce(|key: u64, values: &mut Group<'_, f64>, out| {
             // Degree reducer: sum the partial row sums as they stream off
-            // the merge.
+            // the merge. Modeled compute (one unit per partial) keeps the
+            // reduce plan — and the trace built on it — deterministic.
             let mut total = 0.0f64;
+            let mut partials = 0u64;
             while let Some(v) = values.next_value() {
                 total += v;
+                partials += 1;
             }
+            out.incr(
+                crate::mapreduce::names::COMPUTE_US,
+                super::costmodel::units_to_us(
+                    partials,
+                    super::costmodel::GRAPH_EDGES_PER_S,
+                ),
+            );
             out.emit(key, total);
             Ok(())
         })

@@ -13,8 +13,9 @@
 //!   a map-fusing DAG planner over the engine ([`dataflow`]:
 //!   `Pipeline`/`Dataset<K, V>`), a t-NN sparse-similarity subsystem
 //!   ([`knn`]: kd-tree index, bounded neighbor heaps, distributed
-//!   max-symmetrization), and the paper's three parallel phases
-//!   ([`coordinator`]) expressed as pipelines.
+//!   max-symmetrization), a virtual-clock tracer with Perfetto export and
+//!   critical-path/straggler analysis ([`trace`]), and the paper's three
+//!   parallel phases ([`coordinator`]) expressed as pipelines.
 //! - **Layer 2**: JAX compute graphs (`python/compile/model.py`), AOT-lowered
 //!   to HLO text artifacts loaded by [`runtime`] via XLA PJRT.
 //! - **Layer 1**: Pallas kernels (`python/compile/kernels/`) for the per-task
@@ -43,6 +44,7 @@ pub mod scheduler;
 pub mod spectral;
 pub mod table;
 pub mod testutil;
+pub mod trace;
 pub mod util;
 
 pub use error::{Error, Result};

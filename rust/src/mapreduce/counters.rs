@@ -96,9 +96,15 @@ pub mod names {
 }
 
 impl Counters {
-    /// Add `delta` to counter `name`.
+    /// Add `delta` to counter `name`. The hot path (the counter already
+    /// exists — every per-record increment after the first) must not
+    /// allocate; the `String` key is built only on first touch.
     pub fn incr(&mut self, name: &str, delta: u64) {
-        *self.values.entry(name.to_string()).or_insert(0) += delta;
+        if let Some(v) = self.values.get_mut(name) {
+            *v += delta;
+        } else {
+            self.values.insert(name.to_string(), delta);
+        }
     }
 
     /// Current value (0 when never incremented).

@@ -21,6 +21,7 @@
 use crate::cluster::{Cluster, TaskCost};
 use crate::error::{Error, Result};
 use crate::scheduler::{SchedulePlan, TaskSpec};
+use crate::trace;
 
 use super::counters::{names, Counters};
 use super::job::Job;
@@ -304,8 +305,20 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
 
     // ---------------- map-only job: done ----------------
     let Some(reducer) = &job.reducer else {
+        let virtual_time_s = cluster.planned_job_time(&map_plan, None, 0);
+        if cluster.trace().enabled() {
+            cluster.trace().record_job(trace::JobTrace {
+                name: job.name.clone(),
+                overhead_s: cluster.model().job_overhead(cluster.num_slaves()),
+                virtual_time_s,
+                map: trace::plan_trace(&map_plan, &map_specs, cluster.model()),
+                reruns: Vec::new(),
+                fetch: None,
+                reduce: None,
+            });
+        }
         let stats = JobStats {
-            virtual_time_s: cluster.planned_job_time(&map_plan, None, 0),
+            virtual_time_s,
             wall_time_s: wall_start.elapsed().as_secs_f64(),
             map_costs,
             ..JobStats::default()
@@ -426,6 +439,7 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
     // fetch source is alive (deaths during a rerun can strike again).
     let mut map_slaves = map_plan.winning_slaves(nmaps);
     let mut rerun_makespan_s = 0.0f64;
+    let mut rerun_traces: Vec<trace::PlanTrace> = Vec::new();
     loop {
         let dead = cluster.faults().dead();
         let lost: Vec<usize> = (0..nmaps)
@@ -455,6 +469,13 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
             map_slaves[mi] = rerun_slaves[i];
         }
         rerun_makespan_s += rerun_plan.makespan_s;
+        if cluster.trace().enabled() {
+            rerun_traces.push(trace::plan_trace(
+                &rerun_plan,
+                &rerun_specs,
+                cluster.model(),
+            ));
+        }
     }
 
     // Charge every segment fetch at the locality tier between the map
@@ -477,14 +498,34 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
         (fetch.total_fetch_s * 1e6).round() as u64,
     );
 
+    let virtual_time_s = cluster.planned_job_time_with_fetch(
+        &map_plan,
+        &reduce_plan,
+        fetch.fetch_s,
+    ) + rerun_makespan_s;
+    if cluster.trace().enabled() {
+        cluster.trace().record_job(trace::JobTrace {
+            name: job.name.clone(),
+            overhead_s: cluster.model().job_overhead(cluster.num_slaves()),
+            virtual_time_s,
+            map: trace::plan_trace(&map_plan, &map_specs, cluster.model()),
+            reruns: rerun_traces,
+            fetch: Some(trace::FetchTrace {
+                fetch_s: fetch.fetch_s,
+                reducers: fetch.reducers.clone(),
+            }),
+            reduce: Some(trace::plan_trace(
+                &reduce_plan,
+                &reduce_specs,
+                cluster.model(),
+            )),
+        });
+    }
+
     let stats = JobStats {
         // Lost-output re-executions extend the job's critical path: the
         // affected reducers wait for the reruns before their final fetch.
-        virtual_time_s: cluster.planned_job_time_with_fetch(
-            &map_plan,
-            &reduce_plan,
-            fetch.fetch_s,
-        ) + rerun_makespan_s,
+        virtual_time_s,
         wall_time_s: wall_start.elapsed().as_secs_f64(),
         map_costs,
         reduce_costs,

@@ -13,8 +13,20 @@
 use crate::cluster::NetworkModel;
 use crate::scheduler::{classify, Locality, RackTopology};
 
-/// The virtual cost and locality mix of one job's shuffle fetches.
+/// One reducer's share of the fetch phase, indexed by reduce task id.
+/// Reducers whose every segment was empty keep the zero default.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ReducerFetch {
+    /// Virtual seconds this reducer spent fetching (streams + waves).
+    pub fetch_s: f64,
+    /// Non-empty segment copies this reducer performed.
+    pub fetches: u64,
+    /// Bytes this reducer pulled across all tiers.
+    pub bytes: u64,
+}
+
+/// The virtual cost and locality mix of one job's shuffle fetches.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct FetchPlan {
     /// Bytes fetched from the reducer's own node.
     pub bytes_node_local: u64,
@@ -29,6 +41,8 @@ pub struct FetchPlan {
     pub fetch_s: f64,
     /// Sum of every reducer's fetch seconds (serial work, for reporting).
     pub total_fetch_s: f64,
+    /// Per-reducer breakdown, indexed by reduce task id.
+    pub reducers: Vec<ReducerFetch>,
 }
 
 impl FetchPlan {
@@ -60,6 +74,7 @@ pub fn plan_fetches(
     for (r, &red_slave) in reduce_slaves.iter().enumerate() {
         let mut serial_s = 0.0f64;
         let mut fetches = 0u64;
+        let mut reducer_bytes = 0u64;
         for (m, &map_slave) in map_slaves.iter().enumerate() {
             let bytes = seg_bytes.get(m).and_then(|row| row.get(r)).copied().unwrap_or(0);
             if bytes == 0 {
@@ -76,8 +91,10 @@ pub fn plan_fetches(
             }
             serial_s += model.read_time_at(bytes, tier);
             fetches += 1;
+            reducer_bytes += bytes;
         }
         if fetches == 0 {
+            plan.reducers.push(ReducerFetch::default());
             continue;
         }
         plan.fetches += fetches;
@@ -87,7 +104,13 @@ pub fn plan_fetches(
             serial_s / streams as f64 + model.shuffle_latency_s * waves as f64;
         plan.total_fetch_s += reducer_s;
         plan.fetch_s = plan.fetch_s.max(reducer_s);
+        plan.reducers.push(ReducerFetch {
+            fetch_s: reducer_s,
+            fetches,
+            bytes: reducer_bytes,
+        });
     }
+    debug_assert_eq!(plan.reducers.len(), reduce_slaves.len());
     plan
 }
 

@@ -30,7 +30,7 @@ pub mod fetch;
 pub mod merge;
 
 pub use buffer::{MapShuffleOutput, SpillCollector};
-pub use fetch::{plan_fetches, FetchPlan};
+pub use fetch::{plan_fetches, FetchPlan, ReducerFetch};
 pub use merge::{merge_records, merge_to_factor, GroupedMerge, Segment, ValueStream};
 
 /// Shuffle tuning knobs (Hadoop's `io.sort.*` / `mapred.reduce.parallel.copies`).

@@ -1,9 +1,12 @@
 //! Shuffle and fault reporting: turn the engine's spill/merge/fetch and
 //! failure-domain counters into compact summaries for the CLI, benches
-//! and experiment JSON.
+//! and experiment JSON. [`render_run`] is the one formatter every run
+//! summary goes through (`psch run`, scale studies, smoke greps).
 
+use crate::coordinator::PipelineResult;
 use crate::mapreduce::{names, Counters};
-use crate::util::fmt::human_bytes;
+use crate::metrics::table::AsciiTable;
+use crate::util::fmt::{hms, human_bytes};
 
 /// Spill/merge/fetch summary of one job or phase, derived from the
 /// counters the shuffle subsystem feeds through the engine.
@@ -177,6 +180,71 @@ impl KnnSummary {
     }
 }
 
+/// Render the complete human-readable run summary: the per-phase table,
+/// one `shuffle[phase]:` line per phase, `knn[phase]:` / `faults[phase]:`
+/// lines for phases where those subsystems acted, the quality line (when
+/// a planted truth exists) and the nnz line. Every consumer of a run
+/// summary (the CLI, smoke greps) goes through this one formatter.
+pub fn render_run(result: &PipelineResult, quality: Option<(f64, f64)>) -> String {
+    let mut out = String::new();
+    let mut table = AsciiTable::new(&[
+        "phase", "virtual", "wall_s", "jobs", "shuffle", "spilled", "merges",
+        "reruns", "ffail",
+    ]);
+    for p in &result.phases {
+        let shuffle = p.shuffle_summary();
+        let faults = p.fault_summary();
+        table.row(&[
+            p.name.clone(),
+            hms(std::time::Duration::from_secs_f64(p.virtual_s)),
+            format!("{:.2}", p.wall_s),
+            p.jobs.to_string(),
+            human_bytes(p.shuffle_bytes),
+            shuffle.spilled_records.to_string(),
+            shuffle.merge_passes.to_string(),
+            faults.map_reruns.to_string(),
+            faults.fetch_failures.to_string(),
+        ]);
+    }
+    table.row(&[
+        "TOTAL".into(),
+        hms(std::time::Duration::from_secs_f64(result.total_virtual_s)),
+        format!("{:.2}", result.total_wall_s),
+        result.phases.iter().map(|p| p.jobs).sum::<usize>().to_string(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+    ]);
+    out.push_str(&table.render());
+    out.push('\n');
+    for p in &result.phases {
+        out.push_str(&format!("shuffle[{}]: {}\n", p.name, p.shuffle_summary().render()));
+    }
+    // t-NN pruning report: only phases that ran the spatial index.
+    for p in &result.phases {
+        let k = p.knn_summary();
+        if k.any() {
+            out.push_str(&format!("knn[{}]: {}\n", p.name, k.render()));
+        }
+    }
+    // Per-phase fault report: only phases that saw the failure domain act.
+    for p in &result.phases {
+        let f = p.fault_summary();
+        if f.any() {
+            out.push_str(&format!("faults[{}]: {}\n", p.name, f.render()));
+        }
+    }
+    if let Some((nmi, ari)) = quality {
+        out.push_str(&format!(
+            "quality: NMI={nmi:.4} ARI={ari:.4} (vs planted truth)\n"
+        ));
+    }
+    out.push_str(&format!("similarity nnz: {}\n", result.nnz));
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -248,5 +316,99 @@ mod tests {
         let s = ShuffleSummary::from_counters(&Counters::default());
         assert_eq!(s, ShuffleSummary::default());
         assert_eq!(s.node_local_pct(), 0.0);
+        // The zero-counter edge case holds for every summary family, and
+        // their renders stay well-formed (no NaN%, no div-by-zero).
+        let f = FaultSummary::from_counters(&Counters::default());
+        assert_eq!(f, FaultSummary::default());
+        assert!(f.render().contains("MAP_RERUNS=0"));
+        let k = KnnSummary::from_counters(&Counters::default());
+        assert_eq!(k, KnnSummary::default());
+        assert!(k.render().contains("pruned=0.0%"));
+        assert!(s.render().contains("fetch=0.00s"));
+    }
+
+    #[test]
+    fn from_counters_round_trips_through_incr() {
+        // Write every counter a summary reads, read it back, and check
+        // nothing is dropped or cross-wired between families.
+        let mut c = Counters::default();
+        let pairs: &[(&str, u64)] = &[
+            (names::SPILLS, 1),
+            (names::SPILLED_RECORDS, 2),
+            (names::MERGE_PASSES, 3),
+            (names::SHUFFLE_FETCH_BYTES_LOCAL, 4),
+            (names::SHUFFLE_FETCH_BYTES_RACK, 5),
+            (names::SHUFFLE_FETCH_BYTES_REMOTE, 6),
+            (names::SHUFFLE_FETCH_US, 7),
+            (names::FAILED_MAP_ATTEMPTS, 8),
+            (names::FAILED_REDUCE_ATTEMPTS, 9),
+            (names::MAP_RERUNS, 10),
+            (names::FETCH_FAILURES, 11),
+            (names::BLACKLISTED_SLAVES, 12),
+            (names::NODE_DEATHS, 13),
+            (names::KNN_PAIRS_EVALUATED, 14),
+            (names::KNN_PRUNED_PAIRS, 15),
+            (names::KNN_HEAP_EVICTIONS, 16),
+        ];
+        for &(name, v) in pairs {
+            c.incr(name, v);
+        }
+        let s = ShuffleSummary::from_counters(&c);
+        assert_eq!(
+            (s.spills, s.spilled_records, s.merge_passes),
+            (1, 2, 3)
+        );
+        assert_eq!(
+            (s.fetch_node_local, s.fetch_rack_local, s.fetch_off_rack),
+            (4, 5, 6)
+        );
+        assert!((s.fetch_s - 7e-6).abs() < 1e-12);
+        let f = FaultSummary::from_counters(&c);
+        assert_eq!(
+            (f.failed_map_attempts, f.failed_reduce_attempts, f.map_reruns),
+            (8, 9, 10)
+        );
+        assert_eq!(
+            (f.fetch_failures, f.blacklisted_slaves, f.node_deaths),
+            (11, 12, 13)
+        );
+        let k = KnnSummary::from_counters(&c);
+        assert_eq!(
+            (k.pairs_evaluated, k.pruned_pairs, k.heap_evictions),
+            (14, 15, 16)
+        );
+    }
+
+    #[test]
+    fn render_run_routes_every_section() {
+        use crate::coordinator::PhaseStats;
+        let mut phases = [
+            PhaseStats { name: "similarity".into(), ..Default::default() },
+            PhaseStats { name: "eigenvectors".into(), ..Default::default() },
+            PhaseStats { name: "kmeans".into(), ..Default::default() },
+        ];
+        phases[0].jobs = 2;
+        phases[0].counters.incr(names::KNN_PRUNED_PAIRS, 9);
+        phases[2].counters.incr(names::MAP_RERUNS, 1);
+        let result = PipelineResult {
+            labels: vec![0],
+            eigenvalues: vec![0.0],
+            phases,
+            nnz: 7,
+            total_virtual_s: 1.0,
+            total_wall_s: 0.1,
+        };
+        let text = render_run(&result, Some((0.5, 0.25)));
+        assert!(text.contains("shuffle[similarity]:"), "{text}");
+        assert!(text.contains("knn[similarity]:"), "{text}");
+        assert!(!text.contains("knn[kmeans]:"), "{text}");
+        assert!(text.contains("faults[kmeans]:"), "{text}");
+        assert!(!text.contains("faults[similarity]:"), "{text}");
+        assert!(text.contains("quality: NMI=0.5000 ARI=0.2500"), "{text}");
+        assert!(text.contains("similarity nnz: 7"), "{text}");
+        assert!(text.contains("TOTAL"), "{text}");
+        // Without a planted truth the quality line disappears entirely.
+        let no_truth = render_run(&result, None);
+        assert!(!no_truth.contains("quality:"), "{no_truth}");
     }
 }

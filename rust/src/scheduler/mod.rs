@@ -113,6 +113,9 @@ pub struct SchedulePlan {
     pub failed_attempts: u64,
     /// Scheduled node deaths that fired during this phase.
     pub deaths: u64,
+    /// `(slave, virtual time)` of each node death that fired — the instant
+    /// events the trace renders on the driver track.
+    pub death_events: Vec<(usize, f64)>,
     /// Slaves blacklisted during this phase, with the virtual time the
     /// blacklist took effect — no attempt may start on them afterwards.
     pub blacklisted: Vec<(usize, f64)>,
@@ -315,6 +318,7 @@ impl<'a> JobTracker<'a> {
             if let Some(f) = self.faults {
                 for d in f.tick_heartbeat() {
                     plan.deaths += 1;
+                    plan.death_events.push((d, now));
                     next_hb[d] = f64::INFINITY;
                     for t in 0..tasks.len() {
                         if retired[t] || done_at[t] <= now + EPS {

@@ -1,0 +1,354 @@
+//! Critical-path, straggler and reducer-skew analysis over a recorded
+//! trace.
+//!
+//! Jobs run serially on the driver's virtual timeline, so the run's
+//! critical path is the concatenation of each job's critical segments
+//! (setup → slowest-map wait/run → rerun waves → fetch barrier →
+//! slowest-reduce wait/run). By construction the segments of one job sum
+//! to its virtual time, and across jobs to the run makespan — the
+//! analyzer's total is an identity check, not an estimate.
+
+use super::{Segment, TraceData};
+
+/// Seconds attributed to one phase on the critical path.
+#[derive(Debug, Clone)]
+pub struct PhaseShare {
+    /// Phase name ("" for jobs recorded outside any phase).
+    pub name: String,
+    /// Critical-path seconds inside the phase.
+    pub seconds: f64,
+}
+
+/// Seconds attributed to one segment kind on the critical path.
+#[derive(Debug, Clone)]
+pub struct KindShare {
+    /// Segment kind (`setup`, `map`, `shuffle-fetch`, ...).
+    pub kind: String,
+    /// Critical-path seconds of that kind.
+    pub seconds: f64,
+}
+
+/// One of the top-k critical segments.
+#[derive(Debug, Clone)]
+pub struct TopSegment {
+    /// Phase the segment's job ran in.
+    pub phase: String,
+    /// Job name.
+    pub job: String,
+    /// Segment kind.
+    pub kind: String,
+    /// Attempt detail (`t3@slave1`), empty for barriers.
+    pub detail: String,
+    /// Virtual seconds.
+    pub seconds: f64,
+}
+
+/// The run's critical path, decomposed three ways.
+#[derive(Debug, Clone)]
+pub struct CriticalPath {
+    /// Sum of every critical segment (== run makespan up to f64 noise).
+    pub total_s: f64,
+    /// Jobs on the path.
+    pub jobs: usize,
+    /// Per-phase attribution, in phase order.
+    pub by_phase: Vec<PhaseShare>,
+    /// Per-kind attribution, descending by seconds.
+    pub by_kind: Vec<KindShare>,
+    /// The k largest segments, descending.
+    pub top: Vec<TopSegment>,
+}
+
+/// Walk the per-job segment chains and attribute the makespan.
+pub fn analyze(data: &TraceData, top_k: usize) -> CriticalPath {
+    let mut total = 0.0f64;
+    let mut by_phase: Vec<PhaseShare> = Vec::new();
+    let mut by_kind: Vec<KindShare> = Vec::new();
+    let mut top: Vec<TopSegment> = Vec::new();
+    for job in &data.jobs {
+        for seg in &job.segments {
+            total += seg.seconds;
+            match by_phase.iter_mut().find(|p| p.name == job.phase) {
+                Some(p) => p.seconds += seg.seconds,
+                None => by_phase.push(PhaseShare {
+                    name: job.phase.clone(),
+                    seconds: seg.seconds,
+                }),
+            }
+            match by_kind.iter_mut().find(|k| k.kind == seg.kind) {
+                Some(k) => k.seconds += seg.seconds,
+                None => by_kind
+                    .push(KindShare { kind: seg.kind.clone(), seconds: seg.seconds }),
+            }
+            top.push(TopSegment {
+                phase: job.phase.clone(),
+                job: job.name.clone(),
+                kind: seg.kind.clone(),
+                detail: seg.detail.clone(),
+                seconds: seg.seconds,
+            });
+        }
+    }
+    by_kind.sort_by(|a, b| b.seconds.total_cmp(&a.seconds).then(a.kind.cmp(&b.kind)));
+    top.sort_by(|a, b| b.seconds.total_cmp(&a.seconds));
+    top.truncate(top_k);
+    CriticalPath { total_s: total, jobs: data.jobs.len(), by_phase, by_kind, top }
+}
+
+impl CriticalPath {
+    /// Human-readable report. The first line is stable and grep-able:
+    /// `critical path: <total>s over <jobs> jobs ...`.
+    pub fn render(&self, makespan_s: f64) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "critical path: {:.6}s over {} jobs (run makespan {:.6}s)\n",
+            self.total_s, self.jobs, makespan_s
+        ));
+        let pct = |s: f64| {
+            if self.total_s > 0.0 {
+                100.0 * s / self.total_s
+            } else {
+                0.0
+            }
+        };
+        let phases: Vec<String> = self
+            .by_phase
+            .iter()
+            .map(|p| {
+                let name = if p.name.is_empty() { "(none)" } else { &p.name };
+                format!("{name} {:.1}% ({:.1}s)", pct(p.seconds), p.seconds)
+            })
+            .collect();
+        out.push_str(&format!("  by phase: {}\n", phases.join(", ")));
+        let kinds: Vec<String> = self
+            .by_kind
+            .iter()
+            .map(|k| format!("{} {:.1}%", k.kind, pct(k.seconds)))
+            .collect();
+        out.push_str(&format!("  by kind:  {}\n", kinds.join(", ")));
+        for (i, t) in self.top.iter().enumerate() {
+            let detail =
+                if t.detail.is_empty() { String::new() } else { format!(" ({})", t.detail) };
+            let phase = if t.phase.is_empty() { "(none)" } else { &t.phase };
+            out.push_str(&format!(
+                "  top {:>2}. [{phase}] {} {} {:.2}s{detail}\n",
+                i + 1,
+                t.job,
+                t.kind,
+                t.seconds,
+            ));
+        }
+        out
+    }
+}
+
+/// Per-phase straggler statistics over winning-attempt durations (map and
+/// reduce attempts pooled — reruns included).
+#[derive(Debug, Clone)]
+pub struct StragglerStats {
+    /// Phase name ("" outside any phase).
+    pub phase: String,
+    /// Winning attempts in the phase.
+    pub attempts: usize,
+    /// Median attempt duration.
+    pub p50_s: f64,
+    /// 95th-percentile attempt duration.
+    pub p95_s: f64,
+    /// Slowest attempt duration.
+    pub max_s: f64,
+}
+
+/// Nearest-rank percentile over an unsorted sample (q in [0,1]).
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = (q * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Aggregate attempt durations per phase.
+pub fn stragglers(data: &TraceData) -> Vec<StragglerStats> {
+    let mut phases: Vec<(String, Vec<f64>)> = Vec::new();
+    for job in &data.jobs {
+        let bucket = match phases.iter_mut().find(|(name, _)| *name == job.phase) {
+            Some((_, v)) => v,
+            None => {
+                phases.push((job.phase.clone(), Vec::new()));
+                &mut phases.last_mut().unwrap().1
+            }
+        };
+        bucket.extend_from_slice(&job.map_durations);
+        bucket.extend_from_slice(&job.reduce_durations);
+    }
+    phases
+        .into_iter()
+        .map(|(phase, mut durs)| {
+            durs.sort_by(f64::total_cmp);
+            StragglerStats {
+                phase,
+                attempts: durs.len(),
+                p50_s: percentile(&durs, 0.50),
+                p95_s: percentile(&durs, 0.95),
+                max_s: durs.last().copied().unwrap_or(0.0),
+            }
+        })
+        .collect()
+}
+
+/// Shuffle-bytes skew across one reduce job's reducers.
+#[derive(Debug, Clone)]
+pub struct SkewStats {
+    /// Job name.
+    pub job: String,
+    /// Reducer count.
+    pub reducers: usize,
+    /// Mean bytes fetched per reducer.
+    pub mean_bytes: f64,
+    /// Bytes fetched by the heaviest reducer.
+    pub max_bytes: u64,
+    /// max/mean ratio (1.0 = perfectly balanced).
+    pub skew: f64,
+}
+
+/// Bytes-skew of every reduce job that fetched anything.
+pub fn reduce_skew(data: &TraceData) -> Vec<SkewStats> {
+    data.jobs
+        .iter()
+        .filter(|j| !j.reducer_bytes.is_empty())
+        .filter_map(|j| {
+            let total: u64 = j.reducer_bytes.iter().sum();
+            if total == 0 {
+                return None;
+            }
+            let max = *j.reducer_bytes.iter().max().unwrap();
+            let mean = total as f64 / j.reducer_bytes.len() as f64;
+            Some(SkewStats {
+                job: j.name.clone(),
+                reducers: j.reducer_bytes.len(),
+                mean_bytes: mean,
+                max_bytes: max,
+                skew: max as f64 / mean,
+            })
+        })
+        .collect()
+}
+
+/// Full analysis report: critical path + stragglers + reducer skew (what
+/// `psch run --trace-out` prints after the summary table).
+pub fn render_report(data: &TraceData, top_k: usize) -> String {
+    let mut out = analyze(data, top_k).render(data.makespan_s);
+    for s in stragglers(data) {
+        let phase = if s.phase.is_empty() { "(none)" } else { &s.phase };
+        out.push_str(&format!(
+            "stragglers[{phase}]: attempts={} p50={:.2}s p95={:.2}s max={:.2}s\n",
+            s.attempts, s.p50_s, s.p95_s, s.max_s
+        ));
+    }
+    let skews = reduce_skew(data);
+    if let Some(worst) = skews.iter().max_by(|a, b| a.skew.total_cmp(&b.skew)) {
+        out.push_str(&format!(
+            "reduce skew: worst {} max/mean={:.2}x ({} reducers, max {} bytes)\n",
+            worst.job, worst.skew, worst.reducers, worst.max_bytes
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{JobRec, Segment, TraceData};
+    use super::*;
+
+    fn seg(kind: &str, s: f64) -> Segment {
+        Segment { kind: kind.to_string(), detail: String::new(), seconds: s }
+    }
+
+    fn data() -> TraceData {
+        TraceData {
+            slaves: 2,
+            slots_per_slave: 2,
+            makespan_s: 20.0,
+            phases: Vec::new(),
+            jobs: vec![
+                JobRec {
+                    name: "sim:deg".into(),
+                    phase: "similarity".into(),
+                    start_s: 0.0,
+                    virtual_s: 12.0,
+                    segments: vec![seg("setup", 2.0), seg("map", 6.0), seg("reduce", 4.0)],
+                    map_durations: vec![1.0, 6.0],
+                    reduce_durations: vec![4.0],
+                    reducer_bytes: vec![100, 300],
+                },
+                JobRec {
+                    name: "km:update".into(),
+                    phase: "kmeans".into(),
+                    start_s: 12.0,
+                    virtual_s: 8.0,
+                    segments: vec![seg("setup", 2.0), seg("map", 6.0)],
+                    map_durations: vec![6.0],
+                    reduce_durations: Vec::new(),
+                    reducer_bytes: Vec::new(),
+                },
+            ],
+            spans: Vec::new(),
+            instants: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn totals_equal_makespan_and_shares_add_up() {
+        let d = data();
+        let cp = analyze(&d, 3);
+        assert!((cp.total_s - d.makespan_s).abs() < 1e-9);
+        assert_eq!(cp.jobs, 2);
+        let phase_sum: f64 = cp.by_phase.iter().map(|p| p.seconds).sum();
+        let kind_sum: f64 = cp.by_kind.iter().map(|k| k.seconds).sum();
+        assert!((phase_sum - cp.total_s).abs() < 1e-9);
+        assert!((kind_sum - cp.total_s).abs() < 1e-9);
+        assert_eq!(cp.top.len(), 3);
+        assert_eq!(cp.top[0].seconds, 6.0);
+        // by_kind descends: map (12) > setup (4) = reduce (4).
+        assert_eq!(cp.by_kind[0].kind, "map");
+        let text = cp.render(d.makespan_s);
+        assert!(text.starts_with("critical path: "), "{text}");
+        assert!(text.contains("similarity"), "{text}");
+    }
+
+    #[test]
+    fn straggler_percentiles_and_skew() {
+        let d = data();
+        let s = stragglers(&d);
+        assert_eq!(s.len(), 2);
+        let sim = &s[0];
+        assert_eq!(sim.phase, "similarity");
+        assert_eq!(sim.attempts, 3);
+        assert_eq!(sim.max_s, 6.0);
+        assert_eq!(sim.p50_s, 4.0);
+        let skews = reduce_skew(&d);
+        assert_eq!(skews.len(), 1);
+        assert_eq!(skews[0].reducers, 2);
+        assert!((skews[0].skew - 1.5).abs() < 1e-12);
+        let report = render_report(&d, 2);
+        assert!(report.contains("stragglers[similarity]"), "{report}");
+        assert!(report.contains("reduce skew: worst sim:deg"), "{report}");
+    }
+
+    #[test]
+    fn empty_trace_renders_without_panicking() {
+        let d = TraceData {
+            slaves: 1,
+            slots_per_slave: 1,
+            makespan_s: 0.0,
+            phases: Vec::new(),
+            jobs: Vec::new(),
+            spans: Vec::new(),
+            instants: Vec::new(),
+        };
+        let cp = analyze(&d, 5);
+        assert_eq!(cp.total_s, 0.0);
+        assert!(cp.render(0.0).contains("critical path: 0.000000s"));
+        assert!(stragglers(&d).is_empty());
+        assert!(reduce_skew(&d).is_empty());
+    }
+}

@@ -1,0 +1,185 @@
+//! Chrome trace-event JSON export (the Perfetto / `chrome://tracing`
+//! legacy format): one `"X"` complete event per span, `"i"` instants for
+//! deaths/blacklists, `"M"` metadata naming the tracks.
+//!
+//! Track layout: `tid 0` is the driver lane (run / phase / job / setup /
+//! fetch-barrier spans), `tid 1 + global_slot` is one slave execution
+//! slot. Timestamps are virtual microseconds — `round(t * 1e6)` of the
+//! span's virtual seconds — so the file is byte-identical across runs with
+//! the same seed (rounding is monotone, so nesting survives quantization).
+
+use super::json::esc;
+use super::{ArgValue, InstantEvent, Span, SpanKind, TraceData};
+
+/// Virtual seconds → whole microseconds (the trace-event `ts` unit).
+pub fn us(t: f64) -> u64 {
+    (t * 1e6).round().max(0.0) as u64
+}
+
+fn args_json(args: &[(&'static str, ArgValue)]) -> String {
+    let fields: Vec<String> = args
+        .iter()
+        .map(|(k, v)| match v {
+            ArgValue::U64(x) => format!("\"{k}\":{x}"),
+            ArgValue::Str(s) => format!("\"{k}\":\"{}\"", esc(s)),
+        })
+        .collect();
+    format!("{{{}}}", fields.join(","))
+}
+
+fn x_event(name: &str, cat: &str, tid: usize, start_s: f64, end_s: f64, args: &str) -> String {
+    let ts = us(start_s);
+    let dur = us(end_s).saturating_sub(ts);
+    format!(
+        "{{\"ph\":\"X\",\"pid\":0,\"tid\":{tid},\"name\":\"{}\",\"cat\":\"{cat}\",\
+         \"ts\":{ts},\"dur\":{dur},\"args\":{args}}}",
+        esc(name)
+    )
+}
+
+fn span_event(s: &Span) -> String {
+    x_event(
+        &s.name,
+        s.kind.as_str(),
+        s.track,
+        s.start_s,
+        s.end_s,
+        &args_json(&s.args),
+    )
+}
+
+fn instant_event(i: &InstantEvent) -> String {
+    format!(
+        "{{\"ph\":\"i\",\"pid\":0,\"tid\":0,\"name\":\"{}\",\"s\":\"g\",\
+         \"ts\":{},\"args\":{}}}",
+        esc(i.name),
+        us(i.time_s),
+        args_json(&i.args)
+    )
+}
+
+fn meta_event(tid: usize, which: &str, value: &str) -> String {
+    format!(
+        "{{\"ph\":\"M\",\"pid\":0,\"tid\":{tid},\"name\":\"{which}\",\
+         \"args\":{{\"name\":\"{}\"}}}}",
+        esc(value)
+    )
+}
+
+/// Render the whole trace as a Chrome trace-event JSON document.
+pub fn chrome_trace_json(data: &TraceData) -> String {
+    let mut events: Vec<String> = Vec::with_capacity(data.spans.len() + 16);
+    events.push(meta_event(0, "process_name", "psch virtual cluster"));
+    events.push(meta_event(0, "thread_name", "driver"));
+    for slave in 0..data.slaves {
+        for slot in 0..data.slots_per_slave {
+            let tid = 1 + slave * data.slots_per_slave + slot;
+            events.push(meta_event(tid, "thread_name", &format!("slave{slave}/slot{slot}")));
+        }
+    }
+    events.push(x_event(
+        "run",
+        SpanKind::Run.as_str(),
+        0,
+        0.0,
+        data.makespan_s,
+        "{}",
+    ));
+    for p in &data.phases {
+        events.push(x_event(
+            &p.name,
+            SpanKind::Phase.as_str(),
+            0,
+            p.start_s,
+            p.end_s,
+            "{}",
+        ));
+    }
+    events.extend(data.spans.iter().map(span_event));
+    events.extend(data.instants.iter().map(instant_event));
+    format!(
+        "{{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n{}\n]}}\n",
+        events.join(",\n")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::json::Value;
+    use super::super::{PhaseRec, TraceData};
+    use super::*;
+
+    fn tiny_trace() -> TraceData {
+        TraceData {
+            slaves: 2,
+            slots_per_slave: 2,
+            makespan_s: 10.0,
+            phases: vec![PhaseRec {
+                name: "similarity".into(),
+                start_s: 0.0,
+                end_s: 10.0,
+            }],
+            jobs: Vec::new(),
+            spans: vec![Span {
+                kind: SpanKind::Attempt,
+                name: "map t0".into(),
+                track: 1,
+                start_s: 1.25,
+                end_s: 2.75,
+                args: vec![("task", ArgValue::U64(0))],
+            }],
+            instants: vec![InstantEvent {
+                name: "node-death",
+                time_s: 3.0,
+                args: vec![("slave", ArgValue::U64(1))],
+            }],
+        }
+    }
+
+    #[test]
+    fn export_is_valid_json_with_expected_events() {
+        let text = chrome_trace_json(&tiny_trace());
+        let v = Value::parse(&text).expect("valid JSON");
+        let events = v.get("traceEvents").unwrap().items().unwrap();
+        // 1 process_name + 5 thread_names (driver + 4 slots) + run + phase
+        // + attempt + instant.
+        assert_eq!(events.len(), 10);
+        let attempt = events
+            .iter()
+            .find(|e| e.get("name").and_then(Value::as_str) == Some("map t0"))
+            .unwrap();
+        assert_eq!(attempt.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(attempt.get("ts").unwrap().as_u64(), Some(1_250_000));
+        assert_eq!(attempt.get("dur").unwrap().as_u64(), Some(1_500_000));
+        assert_eq!(attempt.get("tid").unwrap().as_u64(), Some(1));
+        assert_eq!(
+            attempt.get("args").unwrap().get("task").unwrap().as_u64(),
+            Some(0)
+        );
+        let death = events
+            .iter()
+            .find(|e| e.get("name").and_then(Value::as_str) == Some("node-death"))
+            .unwrap();
+        assert_eq!(death.get("ph").unwrap().as_str(), Some("i"));
+    }
+
+    #[test]
+    fn microsecond_rounding_is_monotone() {
+        // Monotonicity is what preserves nesting under quantization.
+        let mut prev = 0u64;
+        for i in 0..1000 {
+            let t = i as f64 * 0.000_001_7;
+            let u = us(t);
+            assert!(u >= prev);
+            prev = u;
+        }
+        assert_eq!(us(-1.0), 0, "negative times clamp to zero");
+    }
+
+    #[test]
+    fn export_is_deterministic() {
+        let a = chrome_trace_json(&tiny_trace());
+        let b = chrome_trace_json(&tiny_trace());
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,795 @@
+//! Cluster-wide tracing on the **virtual clock** (DESIGN.md §2.11).
+//!
+//! The scheduler, shuffle planner and failure domain already compute
+//! everything a trace needs — attempt launch/end times, locality tiers,
+//! per-reducer fetch seconds, node deaths — they just throw the structure
+//! away after folding it into counters. The [`TraceSink`] keeps it: the
+//! engine hands over each finished job's plans ([`JobTrace`]) and the sink
+//! lays them out on a run-global virtual timeline as typed [`Span`]s
+//! (run → phase → job → setup / attempt → dispatch / read / compute /
+//! write / fetch) plus instant events for deaths and blacklists.
+//!
+//! Determinism: every span timestamp derives from `SchedulePlan` /
+//! `FetchPlan` virtual times, which are pure functions of the cost model
+//! and the seeded fault stream. Master-side compute (`absorb_master`) is
+//! wall-measured and therefore **excluded** — the trace's makespan is the
+//! sum of job virtual times, self-consistent with its own critical path.
+//!
+//! On top of the span tree: [`export`] (Chrome trace-event JSON, one track
+//! per slave slot, Perfetto-loadable), [`critical`] (critical-path,
+//! straggler and reducer-skew analysis) and [`report`] (the unified
+//! RunReport JSON).
+
+pub mod critical;
+pub mod export;
+pub mod json;
+pub mod report;
+
+use std::sync::Mutex;
+
+use crate::cluster::NetworkModel;
+use crate::mapreduce::shuffle::fetch::ReducerFetch;
+use crate::scheduler::{Locality, SchedulePlan, TaskSpec};
+
+/// Track id of the driver/master lane (job, setup and barrier spans).
+/// Slave slots occupy tracks `1 + global_slot`.
+pub const DRIVER_TRACK: usize = 0;
+
+/// Tolerance when checking that modeled IO components fit inside an
+/// attempt span (matches the scheduler's EPS scale).
+const EPS: f64 = 1e-9;
+
+/// Span category: what level of the job → attempt → IO hierarchy a span
+/// models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// The whole run (one per trace, track 0).
+    Run,
+    /// One pipeline phase (similarity / eigenvectors / kmeans).
+    Phase,
+    /// One MapReduce job (named `pipeline:stage` by the dataflow planner).
+    Job,
+    /// Job setup overhead (`job_overhead(m)`).
+    Setup,
+    /// One task attempt on a slot track.
+    Attempt,
+    /// Attempt child: tracker dispatch latency.
+    Dispatch,
+    /// Attempt child: locality-tiered input read.
+    Read,
+    /// Attempt child: modeled compute (the residual of the attempt).
+    Compute,
+    /// Attempt child: output write/spill.
+    Write,
+    /// The job-level shuffle barrier (slowest reducer's fetch phase).
+    FetchBarrier,
+    /// Reduce-attempt child: that reducer's own segment fetches.
+    Fetch,
+}
+
+impl SpanKind {
+    /// Stable lowercase name (the trace-event `cat` field).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::Run => "run",
+            SpanKind::Phase => "phase",
+            SpanKind::Job => "job",
+            SpanKind::Setup => "setup",
+            SpanKind::Attempt => "attempt",
+            SpanKind::Dispatch => "dispatch",
+            SpanKind::Read => "read",
+            SpanKind::Compute => "compute",
+            SpanKind::Write => "write",
+            SpanKind::FetchBarrier => "fetch-barrier",
+            SpanKind::Fetch => "fetch",
+        }
+    }
+}
+
+/// One argument attached to a span or instant event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgValue {
+    /// Unsigned integer argument.
+    U64(u64),
+    /// String argument.
+    Str(String),
+}
+
+/// One closed span on the virtual clock.
+#[derive(Debug, Clone)]
+pub struct Span {
+    /// Category (nesting level).
+    pub kind: SpanKind,
+    /// Display name (job name, `map t3`, `fetch`, ...).
+    pub name: String,
+    /// Track: [`DRIVER_TRACK`] or `1 + global_slot`.
+    pub track: usize,
+    /// Virtual start, seconds since run start.
+    pub start_s: f64,
+    /// Virtual end, seconds since run start.
+    pub end_s: f64,
+    /// Typed arguments (task id, slave, locality, ...).
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+/// An instant event (node death, slave blacklist) pinned to the driver
+/// track.
+#[derive(Debug, Clone)]
+pub struct InstantEvent {
+    /// Event name (`node-death`, `slave-blacklisted`).
+    pub name: &'static str,
+    /// Virtual time, seconds since run start.
+    pub time_s: f64,
+    /// Typed arguments (the slave involved).
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+/// Modeled IO components of one attempt, priced exactly like the
+/// scheduler's `duration()`: dispatch + locality-tiered read + write. The
+/// compute slice is the attempt's residual, so children always tile the
+/// attempt span.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AttemptIo {
+    /// Tracker dispatch latency.
+    pub dispatch_s: f64,
+    /// Input read at the attempt's locality tier.
+    pub read_s: f64,
+    /// Output write.
+    pub write_s: f64,
+}
+
+/// One schedule plan plus the per-attempt IO decomposition the span
+/// builder needs (parallel to `plan.attempts`).
+#[derive(Debug, Clone)]
+pub struct PlanTrace {
+    /// The scheduler's plan (cloned; the engine keeps the original).
+    pub plan: SchedulePlan,
+    /// `io[i]` decomposes `plan.attempts[i]`.
+    pub io: Vec<AttemptIo>,
+}
+
+/// Build a [`PlanTrace`] from a plan and the task specs it scheduled,
+/// re-deriving each attempt's IO slices from the cost model (the same
+/// formulas the scheduler's `duration()` charged).
+pub fn plan_trace(
+    plan: &SchedulePlan,
+    specs: &[TaskSpec],
+    model: &NetworkModel,
+) -> PlanTrace {
+    let io = plan
+        .attempts
+        .iter()
+        .map(|a| {
+            let (input, output) = specs
+                .get(a.task)
+                .map(|s| (s.cost.input_bytes, s.cost.output_bytes))
+                .unwrap_or((0, 0));
+            AttemptIo {
+                dispatch_s: model.task_dispatch_s,
+                read_s: model.read_time_at(input, a.locality),
+                write_s: model.write_time(output),
+            }
+        })
+        .collect();
+    PlanTrace { plan: plan.clone(), io }
+}
+
+/// Shuffle-fetch inputs for one reduce job's trace.
+#[derive(Debug, Clone)]
+pub struct FetchTrace {
+    /// The slowest reducer's fetch seconds (the barrier the makespan pays).
+    pub fetch_s: f64,
+    /// Per-reducer fetch detail, indexed by reduce task id.
+    pub reducers: Vec<ReducerFetch>,
+}
+
+/// Everything the engine knows about one finished job, in the order the
+/// job's virtual timeline lays it out: overhead, map plan, lost-output
+/// rerun plans, fetch barrier, reduce plan.
+#[derive(Debug, Clone)]
+pub struct JobTrace {
+    /// Job name (`pipeline:stage` for dataflow jobs).
+    pub name: String,
+    /// Job setup overhead seconds.
+    pub overhead_s: f64,
+    /// The job's total virtual seconds (what `JobStats` reports).
+    pub virtual_time_s: f64,
+    /// The map phase plan.
+    pub map: PlanTrace,
+    /// Lost-output re-execution plans, in the order they ran.
+    pub reruns: Vec<PlanTrace>,
+    /// The fetch barrier (reduce jobs only).
+    pub fetch: Option<FetchTrace>,
+    /// The reduce phase plan (reduce jobs only).
+    pub reduce: Option<PlanTrace>,
+}
+
+/// One segment of a job's critical path. Segments are laid end to end:
+/// their seconds sum to the job's `virtual_time_s` (and, across jobs, to
+/// the run makespan).
+#[derive(Debug, Clone)]
+pub struct Segment {
+    /// Segment kind: `setup`, `map-wait`, `map`, `map-rerun-wait`,
+    /// `map-rerun`, `shuffle-fetch`, `reduce-wait`, `reduce`.
+    pub kind: String,
+    /// Which attempt carried the segment (`t3@slave1`), empty for
+    /// barriers.
+    pub detail: String,
+    /// Virtual seconds.
+    pub seconds: f64,
+}
+
+/// Analysis record of one job: its critical-path decomposition plus the
+/// per-attempt durations the straggler report aggregates.
+#[derive(Debug, Clone)]
+pub struct JobRec {
+    /// Job name.
+    pub name: String,
+    /// Phase open when the job ran (empty outside any phase).
+    pub phase: String,
+    /// Virtual start, seconds since run start.
+    pub start_s: f64,
+    /// The job's virtual seconds.
+    pub virtual_s: f64,
+    /// Critical-path segments (sum == `virtual_s`).
+    pub segments: Vec<Segment>,
+    /// Winning map-attempt durations (reruns included).
+    pub map_durations: Vec<f64>,
+    /// Winning reduce-attempt durations.
+    pub reduce_durations: Vec<f64>,
+    /// Bytes fetched per reducer (reduce jobs only; skew input).
+    pub reducer_bytes: Vec<u64>,
+}
+
+/// One phase window on the run timeline.
+#[derive(Debug, Clone)]
+pub struct PhaseRec {
+    /// Phase name.
+    pub name: String,
+    /// Virtual start.
+    pub start_s: f64,
+    /// Virtual end (the run cursor when the phase closed).
+    pub end_s: f64,
+}
+
+/// Immutable snapshot of a trace: everything the exporter and analyzers
+/// consume.
+#[derive(Debug, Clone)]
+pub struct TraceData {
+    /// Slave count the sink was enabled with.
+    pub slaves: usize,
+    /// Slots per slave (track layout).
+    pub slots_per_slave: usize,
+    /// Run makespan: the virtual cursor after the last recorded job.
+    pub makespan_s: f64,
+    /// Phase windows, in order.
+    pub phases: Vec<PhaseRec>,
+    /// Analysis records, one per job, in execution order.
+    pub jobs: Vec<JobRec>,
+    /// Job/attempt/IO spans, in emission order.
+    pub spans: Vec<Span>,
+    /// Death/blacklist instants.
+    pub instants: Vec<InstantEvent>,
+}
+
+#[derive(Debug, Default)]
+struct TraceState {
+    slaves: usize,
+    slots_per_slave: usize,
+    cursor_s: f64,
+    open: Option<usize>,
+    phases: Vec<PhaseRec>,
+    jobs: Vec<JobRec>,
+    spans: Vec<Span>,
+    instants: Vec<InstantEvent>,
+}
+
+/// The shared trace sink. Lives on the [`crate::cluster::Cluster`] behind
+/// an `Arc` (like the failure domain), so every clone of the cluster —
+/// driver, planner, engine — records into the same timeline. Disabled by
+/// default: a `None` inner state makes [`TraceSink::record_job`] a no-op,
+/// so untraced runs pay one mutex probe per job and nothing else.
+#[derive(Debug, Default)]
+pub struct TraceSink {
+    inner: Mutex<Option<TraceState>>,
+}
+
+impl TraceSink {
+    /// Turn tracing on, declaring the slot-track layout. Resets any
+    /// previously recorded trace.
+    pub fn enable(&self, slaves: usize, slots_per_slave: usize) {
+        let mut g = self.inner.lock().unwrap();
+        *g = Some(TraceState {
+            slaves,
+            slots_per_slave: slots_per_slave.max(1),
+            ..TraceState::default()
+        });
+    }
+
+    /// Is the sink recording?
+    pub fn enabled(&self) -> bool {
+        self.inner.lock().unwrap().is_some()
+    }
+
+    /// Open a phase window at the current cursor (closing any open one).
+    pub fn begin_phase(&self, name: &str) {
+        let mut g = self.inner.lock().unwrap();
+        let Some(st) = g.as_mut() else { return };
+        if let Some(i) = st.open.take() {
+            st.phases[i].end_s = st.cursor_s;
+        }
+        st.phases.push(PhaseRec {
+            name: name.to_string(),
+            start_s: st.cursor_s,
+            end_s: f64::INFINITY,
+        });
+        st.open = Some(st.phases.len() - 1);
+    }
+
+    /// Close the open phase window at the current cursor.
+    pub fn end_phase(&self) {
+        let mut g = self.inner.lock().unwrap();
+        let Some(st) = g.as_mut() else { return };
+        if let Some(i) = st.open.take() {
+            st.phases[i].end_s = st.cursor_s;
+        }
+    }
+
+    /// Record one finished job: lay its plans out at the run cursor, emit
+    /// spans and instants, build the critical-path segments, and advance
+    /// the cursor by the job's virtual time. No-op while disabled.
+    pub fn record_job(&self, job: JobTrace) {
+        let mut g = self.inner.lock().unwrap();
+        let Some(st) = g.as_mut() else { return };
+        st.record_job(job);
+    }
+
+    /// Snapshot the recorded trace (`None` while disabled). Open phases
+    /// are closed at the current cursor in the copy.
+    pub fn snapshot(&self) -> Option<TraceData> {
+        let g = self.inner.lock().unwrap();
+        let st = g.as_ref()?;
+        let mut phases = st.phases.clone();
+        for p in &mut phases {
+            if !p.end_s.is_finite() {
+                p.end_s = st.cursor_s;
+            }
+        }
+        Some(TraceData {
+            slaves: st.slaves,
+            slots_per_slave: st.slots_per_slave,
+            makespan_s: st.cursor_s,
+            phases,
+            jobs: st.jobs.clone(),
+            spans: st.spans.clone(),
+            instants: st.instants.clone(),
+        })
+    }
+}
+
+impl TraceState {
+    fn record_job(&mut self, job: JobTrace) {
+        let t0 = self.cursor_s;
+        let job_end = t0 + job.virtual_time_s;
+        let phase = self
+            .open
+            .map(|i| self.phases[i].name.clone())
+            .unwrap_or_default();
+
+        self.spans.push(Span {
+            kind: SpanKind::Job,
+            name: job.name.clone(),
+            track: DRIVER_TRACK,
+            start_s: t0,
+            end_s: job_end,
+            args: vec![("phase", ArgValue::Str(phase.clone()))],
+        });
+        self.spans.push(Span {
+            kind: SpanKind::Setup,
+            name: "setup".to_string(),
+            track: DRIVER_TRACK,
+            start_s: t0,
+            end_s: (t0 + job.overhead_s).min(job_end),
+            args: Vec::new(),
+        });
+
+        let mut segments = vec![Segment {
+            kind: "setup".to_string(),
+            detail: String::new(),
+            seconds: job.overhead_s,
+        }];
+
+        let map_off = t0 + job.overhead_s;
+        self.emit_plan(&job.map, map_off, job_end, "map", None);
+        push_plan_segments(&mut segments, &job.map.plan, "map");
+        let mut map_durations = winning_durations(&job.map.plan);
+
+        let mut off = map_off + job.map.plan.makespan_s;
+        for rerun in &job.reruns {
+            self.emit_plan(rerun, off, job_end, "map-rerun", None);
+            push_plan_segments(&mut segments, &rerun.plan, "map-rerun");
+            map_durations.extend(winning_durations(&rerun.plan));
+            off += rerun.plan.makespan_s;
+        }
+
+        let mut reduce_durations = Vec::new();
+        let mut reducer_bytes = Vec::new();
+        if let Some(reduce) = &job.reduce {
+            let fetch_s = job.fetch.as_ref().map_or(0.0, |f| f.fetch_s);
+            self.spans.push(Span {
+                kind: SpanKind::FetchBarrier,
+                name: "shuffle-fetch".to_string(),
+                track: DRIVER_TRACK,
+                start_s: off,
+                end_s: (off + fetch_s).min(job_end),
+                args: job
+                    .fetch
+                    .as_ref()
+                    .map(|f| {
+                        vec![(
+                            "fetches",
+                            ArgValue::U64(
+                                f.reducers.iter().map(|r| r.fetches).sum(),
+                            ),
+                        )]
+                    })
+                    .unwrap_or_default(),
+            });
+            segments.push(Segment {
+                kind: "shuffle-fetch".to_string(),
+                detail: String::new(),
+                seconds: fetch_s,
+            });
+            let reduce_off = off + fetch_s;
+            self.emit_plan(reduce, reduce_off, job_end, "reduce", job.fetch.as_ref());
+            push_plan_segments(&mut segments, &reduce.plan, "reduce");
+            reduce_durations = winning_durations(&reduce.plan);
+            reducer_bytes = job
+                .fetch
+                .as_ref()
+                .map(|f| f.reducers.iter().map(|r| r.bytes).collect())
+                .unwrap_or_default();
+        }
+
+        self.jobs.push(JobRec {
+            name: job.name,
+            phase,
+            start_s: t0,
+            virtual_s: job.virtual_time_s,
+            segments,
+            map_durations,
+            reduce_durations,
+            reducer_bytes,
+        });
+        self.cursor_s = job_end;
+    }
+
+    /// Emit one plan's attempt spans at offset `off`, clamped to the job
+    /// span. Winning reduce attempts widen backward by their reducer's own
+    /// fetch seconds (always ≤ the barrier, so they stay inside the job)
+    /// and carry a leading `fetch` child.
+    fn emit_plan(
+        &mut self,
+        pt: &PlanTrace,
+        off: f64,
+        clamp_end: f64,
+        label: &str,
+        fetch: Option<&FetchTrace>,
+    ) {
+        for (i, a) in pt.plan.attempts.iter().enumerate() {
+            let fetch_r = if a.won {
+                fetch
+                    .and_then(|f| f.reducers.get(a.task))
+                    .map_or(0.0, |r| r.fetch_s)
+            } else {
+                0.0
+            };
+            let body_start = off + a.start_s;
+            let start = body_start - fetch_r;
+            let end = (off + a.end_s).min(clamp_end);
+            if end < start {
+                continue;
+            }
+            let track = 1 + a.slot;
+            self.spans.push(Span {
+                kind: SpanKind::Attempt,
+                name: format!("{label} t{}", a.task),
+                track,
+                start_s: start,
+                end_s: end,
+                args: vec![
+                    ("task", ArgValue::U64(a.task as u64)),
+                    ("slave", ArgValue::U64(a.slave as u64)),
+                    ("locality", ArgValue::Str(locality_str(a.locality).into())),
+                    ("speculative", ArgValue::U64(a.speculative as u64)),
+                    ("won", ArgValue::U64(a.won as u64)),
+                ],
+            });
+            if !a.won {
+                continue;
+            }
+            if fetch_r > 0.0 {
+                self.spans.push(Span {
+                    kind: SpanKind::Fetch,
+                    name: "fetch".to_string(),
+                    track,
+                    start_s: start,
+                    end_s: body_start.min(end),
+                    args: Vec::new(),
+                });
+            }
+            let io = pt.io.get(i).copied().unwrap_or_default();
+            let compute = (end - body_start) - io.dispatch_s - io.read_s - io.write_s;
+            // A clamped attempt (death past the makespan) may not fit its
+            // modeled IO; skip the children rather than emit overlaps.
+            if compute < -EPS {
+                continue;
+            }
+            let compute = compute.max(0.0);
+            let mut t = body_start;
+            for (kind, name, dur) in [
+                (SpanKind::Dispatch, "dispatch", io.dispatch_s),
+                (SpanKind::Read, "read", io.read_s),
+                (SpanKind::Compute, "compute", compute),
+                (SpanKind::Write, "write", io.write_s),
+            ] {
+                if dur <= 0.0 {
+                    continue;
+                }
+                self.spans.push(Span {
+                    kind,
+                    name: name.to_string(),
+                    track,
+                    start_s: t,
+                    end_s: (t + dur).min(end),
+                    args: Vec::new(),
+                });
+                t += dur;
+            }
+        }
+        for &(slave, t) in &pt.plan.death_events {
+            self.instants.push(InstantEvent {
+                name: "node-death",
+                time_s: off + t,
+                args: vec![("slave", ArgValue::U64(slave as u64))],
+            });
+        }
+        for &(slave, t) in &pt.plan.blacklisted {
+            self.instants.push(InstantEvent {
+                name: "slave-blacklisted",
+                time_s: off + t,
+                args: vec![("slave", ArgValue::U64(slave as u64))],
+            });
+        }
+    }
+}
+
+/// Stable lowercase rendering of a locality tier.
+pub fn locality_str(l: Locality) -> &'static str {
+    match l {
+        Locality::NodeLocal => "node-local",
+        Locality::RackLocal => "rack-local",
+        Locality::OffRack => "off-rack",
+    }
+}
+
+fn winning_durations(plan: &SchedulePlan) -> Vec<f64> {
+    plan.attempts
+        .iter()
+        .filter(|a| a.won)
+        .map(|a| a.end_s - a.start_s)
+        .collect()
+}
+
+/// Append the wait/run critical segments of one plan: the plan's makespan
+/// is exactly its slowest winner's end time, so `wait(start) + run(dur)`
+/// sums to `makespan_s`. Plans with no winners (nothing scheduled)
+/// contribute nothing — and have zero makespan.
+fn push_plan_segments(segments: &mut Vec<Segment>, plan: &SchedulePlan, label: &str) {
+    let Some(crit) = plan
+        .attempts
+        .iter()
+        .filter(|a| a.won)
+        .max_by(|a, b| a.end_s.total_cmp(&b.end_s))
+    else {
+        return;
+    };
+    segments.push(Segment {
+        kind: format!("{label}-wait"),
+        detail: String::new(),
+        seconds: crit.start_s,
+    });
+    segments.push(Segment {
+        kind: label.to_string(),
+        detail: format!("t{}@slave{}", crit.task, crit.slave),
+        seconds: crit.end_s - crit.start_s,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::Attempt;
+
+    fn attempt(task: usize, slave: usize, slot: usize, s: f64, e: f64, won: bool) -> Attempt {
+        Attempt {
+            task,
+            slave,
+            slot,
+            start_s: s,
+            end_s: e,
+            locality: Locality::NodeLocal,
+            speculative: false,
+            won,
+        }
+    }
+
+    fn plan_of(attempts: Vec<Attempt>) -> SchedulePlan {
+        let makespan = attempts
+            .iter()
+            .filter(|a| a.won)
+            .map(|a| a.end_s)
+            .fold(0.0, f64::max);
+        SchedulePlan { makespan_s: makespan, attempts, ..SchedulePlan::default() }
+    }
+
+    fn io_for(plan: &SchedulePlan, dispatch: f64) -> Vec<AttemptIo> {
+        plan.attempts
+            .iter()
+            .map(|_| AttemptIo { dispatch_s: dispatch, read_s: 0.0, write_s: 0.0 })
+            .collect()
+    }
+
+    fn map_only_job(name: &str, overhead: f64, plan: SchedulePlan) -> JobTrace {
+        let io = io_for(&plan, 0.5);
+        JobTrace {
+            name: name.to_string(),
+            overhead_s: overhead,
+            virtual_time_s: overhead + plan.makespan_s,
+            map: PlanTrace { plan, io },
+            reruns: Vec::new(),
+            fetch: None,
+            reduce: None,
+        }
+    }
+
+    #[test]
+    fn disabled_sink_records_nothing() {
+        let sink = TraceSink::default();
+        assert!(!sink.enabled());
+        sink.record_job(map_only_job("j", 1.0, plan_of(vec![])));
+        assert!(sink.snapshot().is_none());
+    }
+
+    #[test]
+    fn jobs_advance_the_cursor_and_segments_sum_to_virtual_time() {
+        let sink = TraceSink::default();
+        sink.enable(2, 2);
+        sink.begin_phase("similarity");
+        let plan = plan_of(vec![
+            attempt(0, 0, 0, 1.0, 5.0, true),
+            attempt(1, 1, 2, 1.0, 7.0, true),
+        ]);
+        sink.record_job(map_only_job("a", 2.0, plan));
+        let plan = plan_of(vec![attempt(0, 0, 1, 0.5, 3.0, true)]);
+        sink.record_job(map_only_job("b", 2.0, plan));
+        sink.end_phase();
+        let data = sink.snapshot().unwrap();
+        assert_eq!(data.jobs.len(), 2);
+        assert!((data.makespan_s - (9.0 + 5.0)).abs() < 1e-12);
+        assert_eq!(data.phases.len(), 1);
+        assert_eq!(data.phases[0].name, "similarity");
+        assert!((data.phases[0].end_s - data.makespan_s).abs() < 1e-12);
+        for job in &data.jobs {
+            let sum: f64 = job.segments.iter().map(|s| s.seconds).sum();
+            assert!(
+                (sum - job.virtual_s).abs() < 1e-9,
+                "{}: {sum} vs {}",
+                job.name,
+                job.virtual_s
+            );
+            assert_eq!(job.phase, "similarity");
+        }
+        // Second job starts where the first ended.
+        assert!((data.jobs[1].start_s - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn attempt_spans_nest_inside_their_job() {
+        let sink = TraceSink::default();
+        sink.enable(2, 2);
+        let plan = plan_of(vec![
+            attempt(0, 0, 0, 1.0, 5.0, true),
+            attempt(0, 1, 2, 2.0, 5.0, false), // killed loser
+        ]);
+        sink.record_job(map_only_job("j", 2.0, plan));
+        let data = sink.snapshot().unwrap();
+        let job = data
+            .spans
+            .iter()
+            .find(|s| s.kind == SpanKind::Job)
+            .expect("job span");
+        for s in &data.spans {
+            assert!(
+                s.start_s >= job.start_s - 1e-12 && s.end_s <= job.end_s + 1e-12,
+                "{:?} escapes the job span",
+                s
+            );
+        }
+        // Attempts sit on slot tracks, children tile the winner.
+        let attempts: Vec<_> =
+            data.spans.iter().filter(|s| s.kind == SpanKind::Attempt).collect();
+        assert_eq!(attempts.len(), 2);
+        assert_eq!(attempts[0].track, 1);
+        assert_eq!(attempts[1].track, 3);
+        let children: Vec<_> = data
+            .spans
+            .iter()
+            .filter(|s| matches!(s.kind, SpanKind::Dispatch | SpanKind::Compute))
+            .collect();
+        assert!(!children.is_empty(), "winner must have IO children");
+        for c in &children {
+            assert!(c.start_s >= attempts[0].start_s - 1e-12);
+            assert!(c.end_s <= attempts[0].end_s + 1e-12);
+        }
+    }
+
+    #[test]
+    fn reduce_winners_widen_backward_with_a_fetch_child() {
+        let sink = TraceSink::default();
+        sink.enable(1, 2);
+        let map = plan_of(vec![attempt(0, 0, 0, 0.0, 2.0, true)]);
+        let reduce = plan_of(vec![attempt(0, 0, 1, 1.0, 4.0, true)]);
+        let map_io = io_for(&map, 0.5);
+        let reduce_io = io_for(&reduce, 0.5);
+        let fetch = FetchTrace {
+            fetch_s: 3.0,
+            reducers: vec![ReducerFetch { fetch_s: 2.0, fetches: 1, bytes: 100 }],
+        };
+        let job = JobTrace {
+            name: "r".to_string(),
+            overhead_s: 1.0,
+            virtual_time_s: 1.0 + 2.0 + 3.0 + 4.0,
+            map: PlanTrace { plan: map, io: map_io },
+            reruns: Vec::new(),
+            fetch: Some(fetch),
+            reduce: Some(PlanTrace { plan: reduce, io: reduce_io }),
+        };
+        sink.record_job(job);
+        let data = sink.snapshot().unwrap();
+        let sum: f64 = data.jobs[0].segments.iter().map(|s| s.seconds).sum();
+        assert!((sum - 10.0).abs() < 1e-9, "{sum}");
+        let red = data
+            .spans
+            .iter()
+            .find(|s| s.kind == SpanKind::Attempt && s.name.starts_with("reduce"))
+            .unwrap();
+        // Barrier ends at 1+2+3=6; attempt body starts at 6+1=7, widened
+        // to 5 by its own 2s fetch.
+        assert!((red.start_s - 5.0).abs() < 1e-12, "{}", red.start_s);
+        let fetch_span = data
+            .spans
+            .iter()
+            .find(|s| s.kind == SpanKind::Fetch)
+            .expect("fetch child");
+        assert!(fetch_span.start_s >= red.start_s - 1e-12);
+        assert!(fetch_span.end_s <= red.end_s + 1e-12);
+        assert!((fetch_span.end_s - 7.0).abs() < 1e-12);
+        assert_eq!(data.jobs[0].reducer_bytes, vec![100]);
+    }
+
+    #[test]
+    fn death_events_become_instants() {
+        let sink = TraceSink::default();
+        sink.enable(2, 1);
+        let mut plan = plan_of(vec![attempt(0, 0, 0, 0.0, 2.0, true)]);
+        plan.death_events.push((1, 1.5));
+        plan.blacklisted.push((1, 1.5));
+        sink.record_job(map_only_job("j", 1.0, plan));
+        let data = sink.snapshot().unwrap();
+        assert_eq!(data.instants.len(), 2);
+        assert_eq!(data.instants[0].name, "node-death");
+        assert!((data.instants[0].time_s - 2.5).abs() < 1e-12, "offset by setup");
+        assert_eq!(data.instants[1].name, "slave-blacklisted");
+    }
+}

@@ -1,0 +1,302 @@
+//! The unified RunReport: one JSON document per run (`psch run
+//! --report-json`) carrying the config echo, per-phase stats + counters,
+//! every existing summary family (Locality/Shuffle/Fault/Knn), eval
+//! metrics, and — when tracing was on — the critical-path/straggler
+//! analysis. Benches and CI consume this one schema instead of scraping
+//! CLI lines.
+//!
+//! Schema (`psch.run_report.v1`; field glossary in DESIGN.md §2.11):
+//!
+//! ```text
+//! { schema:   "psch.run_report.v1",
+//!   config:   { cluster{..} shuffle{..} faults{..} knn{..} algo{..} },
+//!   phases:   [ { name, virtual_s, wall_s, jobs, shuffle_bytes,
+//!                 shuffle_fetch_s, locality{..}, shuffle{..}, faults{..},
+//!                 knn{..}, counters{NAME:value,..} } ],
+//!   totals:   { virtual_s, wall_s, jobs, nnz },
+//!   quality:  { nmi, ari } | null,
+//!   trace:    { makespan_s, jobs, critical_path{..}, stragglers[..],
+//!               reduce_skew[..] } | null }
+//! ```
+
+use super::critical;
+use super::json::{esc, num};
+use super::TraceData;
+use crate::config::Config;
+use crate::coordinator::{PhaseStats, PipelineResult};
+use crate::metrics::LocalitySummary;
+
+/// The RunReport schema identifier (bump on breaking changes).
+pub const RUN_REPORT_SCHEMA: &str = "psch.run_report.v1";
+
+fn config_json(cfg: &Config) -> String {
+    let c = &cfg.cluster;
+    let a = &cfg.algo;
+    format!(
+        "{{\"cluster\":{{\"slaves\":{},\"slots_per_slave\":{},\"replication\":{},\
+         \"racks\":{},\"scheduler\":\"{}\",\"heartbeat_s\":{},\
+         \"speculation_enabled\":{}}},\
+         \"shuffle\":{{\"sort_buffer_kb\":{},\"merge_factor\":{},\
+         \"fetch_parallelism\":{}}},\
+         \"faults\":{{\"task_fail_prob\":{},\"max_attempts\":{},\
+         \"blacklist_after\":{},\"node_deaths\":{}}},\
+         \"knn\":{{\"t\":{},\"leaf_size\":{}}},\
+         \"algo\":{{\"k\":{},\"sigma\":{},\"epsilon\":{},\"graph\":\"{}\",\
+         \"lanczos_steps\":{},\"kmeans_iters\":{},\"kmeans_tol\":{},\
+         \"seed\":{}}}}}",
+        c.slaves,
+        c.slots_per_slave,
+        c.replication,
+        c.racks,
+        esc(&format!("{:?}", c.scheduler)),
+        num(c.heartbeat_s),
+        c.speculation.enabled,
+        cfg.shuffle.sort_buffer_kb,
+        cfg.shuffle.merge_factor,
+        cfg.shuffle.fetch_parallelism,
+        num(cfg.faults.task_fail_prob),
+        cfg.faults.max_attempts,
+        cfg.faults.blacklist_after,
+        cfg.faults.node_deaths.len(),
+        cfg.knn.t,
+        cfg.knn.leaf_size,
+        a.k,
+        num(a.sigma),
+        num(a.epsilon),
+        a.graph.as_str(),
+        a.lanczos_steps,
+        a.kmeans_iters,
+        num(a.kmeans_tol),
+        a.seed,
+    )
+}
+
+fn phase_json(p: &PhaseStats) -> String {
+    let loc = LocalitySummary::from_counters(&p.counters);
+    let sh = p.shuffle_summary();
+    let fa = p.fault_summary();
+    let kn = p.knn_summary();
+    let counters: Vec<String> =
+        p.counters.iter().map(|(k, v)| format!("\"{}\":{v}", esc(k))).collect();
+    format!(
+        "{{\"name\":\"{}\",\"virtual_s\":{},\"wall_s\":{},\"jobs\":{},\
+         \"shuffle_bytes\":{},\"shuffle_fetch_s\":{},\
+         \"locality\":{{\"data_local\":{},\"rack_local\":{},\"off_rack\":{},\
+         \"speculative_attempts\":{},\"speculative_wins\":{},\
+         \"virtual_read_s\":{}}},\
+         \"shuffle\":{{\"spills\":{},\"spilled_records\":{},\"merge_passes\":{},\
+         \"fetch_node_local\":{},\"fetch_rack_local\":{},\"fetch_off_rack\":{},\
+         \"fetch_s\":{}}},\
+         \"faults\":{{\"failed_map_attempts\":{},\"failed_reduce_attempts\":{},\
+         \"map_reruns\":{},\"fetch_failures\":{},\"blacklisted_slaves\":{},\
+         \"node_deaths\":{}}},\
+         \"knn\":{{\"pairs_evaluated\":{},\"pruned_pairs\":{},\
+         \"heap_evictions\":{}}},\
+         \"counters\":{{{}}}}}",
+        esc(&p.name),
+        num(p.virtual_s),
+        num(p.wall_s),
+        p.jobs,
+        p.shuffle_bytes,
+        num(p.shuffle_fetch_s),
+        loc.data_local,
+        loc.rack_local,
+        loc.off_rack,
+        loc.speculative_attempts,
+        loc.speculative_wins,
+        num(loc.virtual_read_s),
+        sh.spills,
+        sh.spilled_records,
+        sh.merge_passes,
+        sh.fetch_node_local,
+        sh.fetch_rack_local,
+        sh.fetch_off_rack,
+        num(sh.fetch_s),
+        fa.failed_map_attempts,
+        fa.failed_reduce_attempts,
+        fa.map_reruns,
+        fa.fetch_failures,
+        fa.blacklisted_slaves,
+        fa.node_deaths,
+        kn.pairs_evaluated,
+        kn.pruned_pairs,
+        kn.heap_evictions,
+        counters.join(","),
+    )
+}
+
+fn trace_json(data: &TraceData) -> String {
+    let cp = critical::analyze(data, 10);
+    let by_phase: Vec<String> = cp
+        .by_phase
+        .iter()
+        .map(|p| format!("{{\"name\":\"{}\",\"seconds\":{}}}", esc(&p.name), num(p.seconds)))
+        .collect();
+    let by_kind: Vec<String> = cp
+        .by_kind
+        .iter()
+        .map(|k| format!("{{\"kind\":\"{}\",\"seconds\":{}}}", esc(&k.kind), num(k.seconds)))
+        .collect();
+    let top: Vec<String> = cp
+        .top
+        .iter()
+        .map(|t| {
+            format!(
+                "{{\"phase\":\"{}\",\"job\":\"{}\",\"kind\":\"{}\",\
+                 \"detail\":\"{}\",\"seconds\":{}}}",
+                esc(&t.phase),
+                esc(&t.job),
+                esc(&t.kind),
+                esc(&t.detail),
+                num(t.seconds)
+            )
+        })
+        .collect();
+    let stragglers: Vec<String> = critical::stragglers(data)
+        .iter()
+        .map(|s| {
+            format!(
+                "{{\"phase\":\"{}\",\"attempts\":{},\"p50_s\":{},\"p95_s\":{},\
+                 \"max_s\":{}}}",
+                esc(&s.phase),
+                s.attempts,
+                num(s.p50_s),
+                num(s.p95_s),
+                num(s.max_s)
+            )
+        })
+        .collect();
+    let skew: Vec<String> = critical::reduce_skew(data)
+        .iter()
+        .map(|s| {
+            format!(
+                "{{\"job\":\"{}\",\"reducers\":{},\"mean_bytes\":{},\
+                 \"max_bytes\":{},\"skew\":{}}}",
+                esc(&s.job),
+                s.reducers,
+                num(s.mean_bytes),
+                s.max_bytes,
+                num(s.skew)
+            )
+        })
+        .collect();
+    format!(
+        "{{\"makespan_s\":{},\"jobs\":{},\
+         \"critical_path\":{{\"total_s\":{},\"by_phase\":[{}],\"by_kind\":[{}],\
+         \"top\":[{}]}},\"stragglers\":[{}],\"reduce_skew\":[{}]}}",
+        num(data.makespan_s),
+        data.jobs.len(),
+        num(cp.total_s),
+        by_phase.join(","),
+        by_kind.join(","),
+        top.join(","),
+        stragglers.join(","),
+        skew.join(","),
+    )
+}
+
+/// Build the RunReport document. `quality` is `(nmi, ari)` against the
+/// planted truth when one exists; `trace` is the recorded trace when
+/// tracing was enabled.
+pub fn run_report_json(
+    cfg: &Config,
+    result: &PipelineResult,
+    quality: Option<(f64, f64)>,
+    trace: Option<&TraceData>,
+) -> String {
+    let phases: Vec<String> = result.phases.iter().map(phase_json).collect();
+    let quality = match quality {
+        Some((nmi, ari)) => format!("{{\"nmi\":{},\"ari\":{}}}", num(nmi), num(ari)),
+        None => "null".to_string(),
+    };
+    let trace = match trace {
+        Some(data) => trace_json(data),
+        None => "null".to_string(),
+    };
+    format!(
+        "{{\"schema\":\"{RUN_REPORT_SCHEMA}\",\"config\":{},\"phases\":[{}],\
+         \"totals\":{{\"virtual_s\":{},\"wall_s\":{},\"jobs\":{},\"nnz\":{}}},\
+         \"quality\":{quality},\"trace\":{trace}}}\n",
+        config_json(cfg),
+        phases.join(","),
+        num(result.total_virtual_s),
+        num(result.total_wall_s),
+        result.phases.iter().map(|p| p.jobs).sum::<usize>(),
+        result.nnz,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::json::Value;
+    use super::*;
+    use crate::mapreduce::names;
+
+    fn result_fixture() -> PipelineResult {
+        let mut phases = [
+            PhaseStats { name: "similarity".into(), ..Default::default() },
+            PhaseStats { name: "eigenvectors".into(), ..Default::default() },
+            PhaseStats { name: "kmeans".into(), ..Default::default() },
+        ];
+        phases[0].virtual_s = 10.0;
+        phases[0].jobs = 1;
+        phases[0].counters.incr(names::DATA_LOCAL_MAPS, 4);
+        phases[0].counters.incr(names::SPILLS, 2);
+        PipelineResult {
+            labels: vec![0, 1],
+            eigenvalues: vec![0.0, 0.1],
+            phases,
+            nnz: 42,
+            total_virtual_s: 10.0,
+            total_wall_s: 0.5,
+        }
+    }
+
+    #[test]
+    fn report_parses_and_carries_the_schema() {
+        let cfg = Config::default();
+        let text =
+            run_report_json(&cfg, &result_fixture(), Some((0.9, 0.8)), None);
+        let v = Value::parse(&text).expect("valid JSON");
+        assert_eq!(
+            v.get("schema").unwrap().as_str(),
+            Some(RUN_REPORT_SCHEMA)
+        );
+        let phases = v.get("phases").unwrap().items().unwrap();
+        assert_eq!(phases.len(), 3);
+        let sim = &phases[0];
+        assert_eq!(sim.get("name").unwrap().as_str(), Some("similarity"));
+        assert_eq!(
+            sim.get("locality").unwrap().get("data_local").unwrap().as_u64(),
+            Some(4)
+        );
+        assert_eq!(
+            sim.get("counters").unwrap().get("SPILLS").unwrap().as_u64(),
+            Some(2)
+        );
+        assert_eq!(
+            v.get("quality").unwrap().get("nmi").unwrap().as_f64(),
+            Some(0.9)
+        );
+        assert_eq!(v.get("trace"), Some(&Value::Null));
+        assert_eq!(
+            v.get("config")
+                .unwrap()
+                .get("cluster")
+                .unwrap()
+                .get("slaves")
+                .unwrap()
+                .as_u64(),
+            Some(Config::default().cluster.slaves as u64)
+        );
+        assert_eq!(v.get("totals").unwrap().get("nnz").unwrap().as_u64(), Some(42));
+    }
+
+    #[test]
+    fn missing_quality_is_null() {
+        let cfg = Config::default();
+        let text = run_report_json(&cfg, &result_fixture(), None, None);
+        let v = Value::parse(&text).unwrap();
+        assert_eq!(v.get("quality"), Some(&Value::Null));
+    }
+}

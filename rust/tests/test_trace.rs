@@ -1,0 +1,254 @@
+//! Integration tests for the cluster-wide tracer (DESIGN.md §2.11): span
+//! nesting, deterministic Chrome trace-event export, critical-path
+//! accounting, and the unified RunReport schema.
+//!
+//! One traced quick-config pipeline run is shared across tests via a
+//! `OnceLock` fixture; determinism is checked by running the identical
+//! configuration twice from fresh services and comparing exported bytes.
+
+use std::sync::{Arc, OnceLock};
+
+use psch::config::Config;
+use psch::coordinator::{Driver, PipelineInput, PipelineResult};
+use psch::data::gaussian_blobs;
+use psch::eval::{ari, nmi};
+use psch::runtime::KernelRuntime;
+use psch::trace::json::Value;
+use psch::trace::report::RUN_REPORT_SCHEMA;
+use psch::trace::{critical, export, report, SpanKind, TraceData};
+
+struct Fixture {
+    cfg: Config,
+    result: PipelineResult,
+    quality: (f64, f64),
+    data: TraceData,
+    /// Chrome trace JSON from two independent same-seed runs.
+    json_a: String,
+    json_b: String,
+}
+
+fn traced_run(cfg: &Config) -> (PipelineResult, TraceData) {
+    let ps = gaussian_blobs(150, cfg.algo.k, 4, 0.3, 10.0, 42);
+    let input = PipelineInput::Points { points: ps.points };
+    let driver = Driver::new(cfg.clone(), Arc::new(KernelRuntime::native()));
+    let services = driver.services();
+    services
+        .cluster
+        .trace()
+        .enable(cfg.cluster.slaves, cfg.cluster.slots_per_slave);
+    let result = driver.run_on(&services, &input).expect("pipeline run");
+    let data = services.cluster.trace().snapshot().expect("trace enabled");
+    (result, data)
+}
+
+fn fixture() -> &'static Fixture {
+    static FIXTURE: OnceLock<Fixture> = OnceLock::new();
+    FIXTURE.get_or_init(|| {
+        let cfg = Config::load("configs/quick.toml").expect("quick config");
+        let truth = gaussian_blobs(150, cfg.algo.k, 4, 0.3, 10.0, 42).labels;
+        let (result, data) = traced_run(&cfg);
+        let (result_b, data_b) = traced_run(&cfg);
+        assert_eq!(result.labels, result_b.labels, "pipeline must be deterministic");
+        let json_a = export::chrome_trace_json(&data);
+        let json_b = export::chrome_trace_json(&data_b);
+        let quality = (nmi(&truth, &result.labels), ari(&truth, &result.labels));
+        Fixture { cfg, result, quality, data, json_a, json_b }
+    })
+}
+
+#[test]
+fn trace_covers_all_three_phases_with_jobs() {
+    let fx = fixture();
+    let data = &fx.data;
+    assert!(data.makespan_s > 0.0);
+    assert_eq!(data.slaves, fx.cfg.cluster.slaves);
+    assert_eq!(data.slots_per_slave, fx.cfg.cluster.slots_per_slave);
+    let names: Vec<&str> = data.phases.iter().map(|p| p.name.as_str()).collect();
+    assert_eq!(names, ["similarity", "eigenvectors", "kmeans"]);
+    for (i, p) in data.phases.iter().enumerate() {
+        assert!(p.end_s >= p.start_s, "phase {} runs backward", p.name);
+        if i > 0 {
+            assert!(
+                (p.start_s - data.phases[i - 1].end_s).abs() < 1e-9,
+                "phase windows must abut"
+            );
+        }
+        assert!(
+            data.jobs.iter().any(|j| j.phase == p.name),
+            "phase {} recorded no jobs",
+            p.name
+        );
+    }
+    // Jobs tile the run: consecutive starts advance by virtual_s, and the
+    // last job ends at the makespan.
+    let mut cursor = 0.0;
+    for job in &data.jobs {
+        assert!((job.start_s - cursor).abs() < 1e-9, "{}: gap in timeline", job.name);
+        cursor += job.virtual_s;
+        let sum: f64 = job.segments.iter().map(|s| s.seconds).sum();
+        assert!(
+            (sum - job.virtual_s).abs() < 1e-6,
+            "{}: segments sum {sum} != virtual {}",
+            job.name,
+            job.virtual_s
+        );
+    }
+    assert!((cursor - data.makespan_s).abs() < 1e-9);
+}
+
+#[test]
+fn spans_nest_attempts_in_jobs_and_fetches_in_reduce_attempts() {
+    let data = &fixture().data;
+    let jobs: Vec<_> = data.spans.iter().filter(|s| s.kind == SpanKind::Job).collect();
+    assert!(!jobs.is_empty());
+    let attempts: Vec<_> =
+        data.spans.iter().filter(|s| s.kind == SpanKind::Attempt).collect();
+    assert!(!attempts.is_empty());
+    for a in &attempts {
+        assert!(
+            jobs.iter()
+                .any(|j| a.start_s >= j.start_s - 1e-9 && a.end_s <= j.end_s + 1e-9),
+            "attempt {} [{}, {}] escapes every job span",
+            a.name,
+            a.start_s,
+            a.end_s
+        );
+        let max_track = data.slaves * data.slots_per_slave;
+        assert!(
+            a.track >= 1 && a.track <= max_track,
+            "attempt {} on bad track {}",
+            a.name,
+            a.track
+        );
+    }
+    // Every fetch child sits inside a reduce attempt on the same track.
+    let fetches: Vec<_> =
+        data.spans.iter().filter(|s| s.kind == SpanKind::Fetch).collect();
+    assert!(!fetches.is_empty(), "reduce jobs must trace per-reducer fetches");
+    for f in &fetches {
+        assert!(
+            attempts.iter().any(|a| {
+                a.name.starts_with("reduce")
+                    && a.track == f.track
+                    && f.start_s >= a.start_s - 1e-9
+                    && f.end_s <= a.end_s + 1e-9
+            }),
+            "fetch [{}, {}] on track {} has no covering reduce attempt",
+            f.start_s,
+            f.end_s,
+            f.track
+        );
+    }
+    // IO children tile winners: dispatch/read/compute/write stay inside
+    // some attempt on their track.
+    for c in data.spans.iter().filter(|s| {
+        matches!(
+            s.kind,
+            SpanKind::Dispatch | SpanKind::Read | SpanKind::Compute | SpanKind::Write
+        )
+    }) {
+        assert!(
+            attempts.iter().any(|a| {
+                a.track == c.track
+                    && c.start_s >= a.start_s - 1e-9
+                    && c.end_s <= a.end_s + 1e-9
+            }),
+            "{} child [{}, {}] escapes its attempt",
+            c.name,
+            c.start_s,
+            c.end_s
+        );
+    }
+}
+
+#[test]
+fn chrome_trace_export_is_valid_and_byte_identical_across_runs() {
+    let fx = fixture();
+    assert_eq!(fx.json_a, fx.json_b, "same-seed traces must serialize identically");
+    let v = Value::parse(&fx.json_a).expect("valid JSON");
+    assert_eq!(v.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+    let events = v.get("traceEvents").unwrap().items().expect("array");
+    assert!(events.len() > 10, "only {} events", events.len());
+    let mut seen_x = 0u32;
+    let mut seen_meta = false;
+    for e in events {
+        let ph = e.get("ph").unwrap().as_str().unwrap();
+        match ph {
+            "X" => {
+                seen_x += 1;
+                assert!(e.get("ts").unwrap().as_u64().is_some());
+                assert!(e.get("dur").unwrap().as_u64().is_some());
+                assert!(e.get("pid").is_some() && e.get("tid").is_some());
+                assert!(e.get("cat").unwrap().as_str().is_some());
+            }
+            "M" => seen_meta = true,
+            "i" => assert!(e.get("s").unwrap().as_str() == Some("g")),
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+    assert!(seen_x > 0, "no complete events");
+    assert!(seen_meta, "no track-name metadata");
+}
+
+#[test]
+fn critical_path_total_matches_virtual_makespan() {
+    let data = &fixture().data;
+    let cp = critical::analyze(data, 5);
+    assert!(
+        (cp.total_s - data.makespan_s).abs() < 1e-6,
+        "critical path {} != makespan {}",
+        cp.total_s,
+        data.makespan_s
+    );
+    let by_phase: f64 = cp.by_phase.iter().map(|p| p.seconds).sum();
+    assert!((by_phase - cp.total_s).abs() < 1e-6);
+    let by_kind: f64 = cp.by_kind.iter().map(|k| k.seconds).sum();
+    assert!((by_kind - cp.total_s).abs() < 1e-6);
+    assert!(cp.top.len() <= 5 && !cp.top.is_empty());
+    let rendered = critical::render_report(data, 5);
+    assert!(rendered.starts_with("critical path:"), "{rendered}");
+    assert!(rendered.contains("stragglers["));
+}
+
+#[test]
+fn run_report_validates_against_documented_schema() {
+    let fx = fixture();
+    let doc = report::run_report_json(&fx.cfg, &fx.result, Some(fx.quality), Some(&fx.data));
+    let v = Value::parse(&doc).expect("valid RunReport JSON");
+    assert_eq!(v.get("schema").unwrap().as_str(), Some(RUN_REPORT_SCHEMA));
+
+    let cfg = v.get("config").expect("config echo");
+    assert_eq!(
+        cfg.get("cluster").unwrap().get("slaves").unwrap().as_u64(),
+        Some(fx.cfg.cluster.slaves as u64)
+    );
+
+    let totals = v.get("totals").expect("totals");
+    let virt = totals.get("virtual_s").unwrap().as_f64().unwrap();
+    assert!((virt - fx.result.total_virtual_s).abs() < 1e-6);
+    assert_eq!(totals.get("nnz").unwrap().as_u64(), Some(fx.result.nnz));
+
+    let phases = v.get("phases").unwrap().items().expect("phase array");
+    assert_eq!(phases.len(), 3);
+    for (p, stats) in phases.iter().zip(&fx.result.phases) {
+        assert_eq!(p.get("name").unwrap().as_str(), Some(stats.name.as_str()));
+        assert!(p.get("counters").is_some());
+        assert!(p.get("shuffle").is_some());
+    }
+
+    let quality = v.get("quality").expect("quality");
+    assert!((quality.get("nmi").unwrap().as_f64().unwrap() - fx.quality.0).abs() < 1e-9);
+
+    let trace = v.get("trace").expect("trace section");
+    let makespan = trace.get("makespan_s").unwrap().as_f64().unwrap();
+    assert!((makespan - fx.data.makespan_s).abs() < 1e-6);
+    let cp = trace.get("critical_path").expect("critical_path");
+    assert!((cp.get("total_s").unwrap().as_f64().unwrap() - makespan).abs() < 1e-6);
+    assert!(trace.get("stragglers").unwrap().items().is_some());
+
+    // Without quality or trace, those sections are null, not absent.
+    let bare = report::run_report_json(&fx.cfg, &fx.result, None, None);
+    let v = Value::parse(&bare).expect("valid bare RunReport");
+    assert!(matches!(v.get("quality"), Some(Value::Null)));
+    assert!(matches!(v.get("trace"), Some(Value::Null)));
+}
