@@ -1,14 +1,147 @@
-//! Experiment A2 — ablation of the paper's §4.4 complexity claim: Lanczos
-//! (O(k·L_op + k²n) with sparse L_op) vs the dense O(n³) eigensolver the
-//! "traditional" algorithm needs. Measures real wall time of both solvers
-//! over growing n and locates the crossover.
+//! Experiment A2 — eigensolver ablation, two parts.
+//!
+//! Part A (the paper's §4.4 complexity claim): Lanczos (O(k·L_op + k²n)
+//! with sparse L_op) vs the dense O(n³) eigensolver the "traditional"
+//! algorithm needs. Measures real wall time of both solvers over growing
+//! n and locates the crossover.
+//!
+//! Part B (the job-count claim the ChebDav backend makes): distributed
+//! lanczos vs chebdav head-to-head on quick- and paper-shaped calibrated
+//! configs. Per solver it reports eigen-phase jobs launched, virtual
+//! time, shuffle bytes, mat-vecs batched, oracle max residual and NMI,
+//! and emits the lot as `BENCH_eigensolver.json`. PASS requires chebdav
+//! to launch strictly fewer eigen-phase jobs at paper scale.
+
+mod common;
 
 use psch::benchutil::time_once;
-use psch::linalg::{jacobi_eigen, lanczos_smallest, LanczosOptions};
+use psch::config::Config;
+use psch::coordinator::eigen::EigenSolverKind;
+use psch::coordinator::{Driver, PipelineInput};
+use psch::eval::nmi;
+use psch::linalg::{
+    chebdav_smallest, jacobi_eigen, lanczos_smallest, ChebDavOptions, CsrMatrix,
+    LanczosOptions,
+};
 use psch::metrics::table::AsciiTable;
 use psch::spectral::{laplacian_dense, laplacian_sparse, rbf_dense, rbf_sparse};
 
+/// Worst eigenpair residual ‖L·u − θ·u‖ over the k returned pairs
+/// (`vecs` is n×k row-major, the layout both solvers return).
+fn max_residual(l: &CsrMatrix, vals: &[f64], vecs: &[Vec<f64>]) -> f64 {
+    let n = vecs.len();
+    let k = vals.len();
+    let mut worst = 0.0f64;
+    for c in 0..k {
+        let u: Vec<f64> = (0..n).map(|i| vecs[i][c]).collect();
+        let lu = l.spmv(&u);
+        let r2: f64 = (0..n)
+            .map(|i| {
+                let r = lu[i] - vals[c] * u[i];
+                r * r
+            })
+            .sum();
+        worst = worst.max(r2.sqrt());
+    }
+    worst
+}
+
+/// One solver's numbers on one config.
+struct SolverRun {
+    solver: &'static str,
+    eigen_jobs: usize,
+    matvecs_batched: u64,
+    virtual_s: f64,
+    shuffle_bytes: u64,
+    max_residual: f64,
+    nmi: f64,
+}
+
+/// Run the full distributed pipeline with the given backend and measure
+/// the eigen phase; the oracle residual is computed on the same graph
+/// with the matching single-machine solver.
+fn head_to_head(
+    cfg: &Config,
+    n: usize,
+    kind: EigenSolverKind,
+    runtime: &std::sync::Arc<psch::runtime::KernelRuntime>,
+) -> SolverRun {
+    let mut cfg = cfg.clone();
+    cfg.eigen.solver = kind;
+    let k = cfg.algo.k;
+    let ps = psch::data::gaussian_blobs(n, k, 8, 0.4, 8.0, cfg.algo.seed);
+    let input = PipelineInput::Points { points: ps.points.clone() };
+
+    // Oracle residual on the identical graph.
+    let s = rbf_sparse(&ps.points, cfg.algo.sigma, cfg.algo.epsilon);
+    let l = laplacian_sparse(&s);
+    let resid = match kind {
+        EigenSolverKind::Lanczos => {
+            let r = lanczos_smallest(
+                n,
+                k,
+                &LanczosOptions {
+                    max_steps: cfg.algo.lanczos_steps.min(n),
+                    seed: cfg.algo.seed,
+                    ..Default::default()
+                },
+                |v| l.spmv(v),
+            )
+            .unwrap();
+            max_residual(&l, &r.eigenvalues, &r.eigenvectors)
+        }
+        EigenSolverKind::ChebDav => {
+            let e = &cfg.eigen;
+            let r = chebdav_smallest(
+                n,
+                k,
+                &ChebDavOptions {
+                    block_size: e.block_size,
+                    filter_degree: e.filter_degree,
+                    max_outer: e.max_outer,
+                    tol: e.residual_tol,
+                    bound_steps: e.bound_steps,
+                    seed: cfg.algo.seed,
+                },
+                |x, m| l.spmv_block_rows(x, m, 0, n),
+            )
+            .unwrap();
+            max_residual(&l, &r.eigenvalues, &r.eigenvectors)
+        }
+    };
+
+    let driver = Driver::new(cfg, runtime.clone());
+    let result = driver.run(&input).unwrap();
+    let eig = &result.phases[1];
+    let es = eig.eigen_summary();
+    SolverRun {
+        solver: kind.as_str(),
+        eigen_jobs: eig.jobs,
+        matvecs_batched: es.matvecs_batched,
+        virtual_s: eig.virtual_s,
+        shuffle_bytes: eig.shuffle_bytes,
+        max_residual: resid,
+        nmi: nmi(&ps.labels, &result.labels),
+    }
+}
+
+fn solver_json(r: &SolverRun) -> String {
+    format!(
+        "{{\"solver\":\"{}\",\"eigen_jobs\":{},\"matvecs_batched\":{},\
+         \"virtual_s\":{:.3},\"shuffle_bytes\":{},\"max_residual\":{:.3e},\
+         \"nmi\":{:.4}}}",
+        r.solver,
+        r.eigen_jobs,
+        r.matvecs_batched,
+        r.virtual_s,
+        r.shuffle_bytes,
+        r.max_residual,
+        r.nmi,
+    )
+}
+
 fn main() {
+    // ---- Part A: dense Jacobi vs sparse Lanczos crossover. ----
     let k = 4;
     let mut table = AsciiTable::new(&[
         "n",
@@ -71,7 +204,79 @@ fn main() {
         last_speedup > 5.0,
         "Lanczos should win clearly at n=512: {last_speedup:.1}x"
     );
+
+    // ---- Part B: distributed lanczos vs chebdav head-to-head. ----
+    // quick-shaped: 2 slaves, k=3, 40 lanczos steps vs a 6/6/4 chebdav.
+    let mut quick = common::calibrated_config(2);
+    quick.algo.k = 3;
+    quick.algo.lanczos_steps = 40;
+    quick.eigen.block_size = 6;
+    quick.eigen.filter_degree = 6;
+    quick.eigen.max_outer = 4;
+    // paper-shaped: the Table 5-1 calibration at 8 slaves, chebdav defaults.
+    let paper = common::calibrated_config(8);
+
+    let mut table = AsciiTable::new(&[
+        "config", "solver", "eigen jobs", "matvecs", "virtual", "shuffle", "resid",
+        "NMI",
+    ]);
+    let runtime = common::runtime();
+    let mut blocks = Vec::new();
+    let mut paper_jobs = (0usize, 0usize); // (lanczos, chebdav)
+    for (name, cfg, n) in [("quick", &quick, 600usize), ("paper", &paper, 2048)] {
+        let mut runs = Vec::new();
+        for kind in [EigenSolverKind::Lanczos, EigenSolverKind::ChebDav] {
+            let r = head_to_head(cfg, n, kind, &runtime);
+            table.row(&[
+                name.to_string(),
+                r.solver.to_string(),
+                r.eigen_jobs.to_string(),
+                r.matvecs_batched.to_string(),
+                format!("{:.0}s", r.virtual_s),
+                psch::util::fmt::human_bytes(r.shuffle_bytes),
+                format!("{:.1e}", r.max_residual),
+                format!("{:.3}", r.nmi),
+            ]);
+            runs.push(r);
+        }
+        assert!(
+            runs[1].eigen_jobs < runs[0].eigen_jobs,
+            "{name}: chebdav must launch fewer eigen jobs \
+             (chebdav {} vs lanczos {})",
+            runs[1].eigen_jobs,
+            runs[0].eigen_jobs,
+        );
+        for r in &runs {
+            assert!(r.nmi > 0.9, "{name}/{}: clustering degraded, NMI={}", r.solver, r.nmi);
+            assert!(
+                r.max_residual < 1e-2,
+                "{name}/{}: residual blew up: {}",
+                r.solver,
+                r.max_residual
+            );
+        }
+        if name == "paper" {
+            paper_jobs = (runs[0].eigen_jobs, runs[1].eigen_jobs);
+        }
+        let solvers: Vec<String> = runs.iter().map(solver_json).collect();
+        blocks.push(format!(
+            "{{\"name\":\"{name}\",\"n\":{n},\"solvers\":[{}]}}",
+            solvers.join(",")
+        ));
+    }
+    println!("A2 distributed head-to-head:\n{}", table.render());
+
+    common::write_bench_json(
+        "BENCH_eigensolver.json",
+        &format!(
+            "{{\"bench\":\"eigensolver\",\"configs\":[{}]}}\n",
+            blocks.join(",")
+        ),
+    );
+
     println!(
-        "ablation_eigensolver: PASS — O(n^3) dense loses by {last_speedup:.0}x at n=512, gap grows with n"
+        "ablation_eigensolver: PASS — O(n^3) dense loses by {last_speedup:.0}x at n=512; \
+         chebdav launches {} eigen jobs vs lanczos {} at paper scale",
+        paper_jobs.1, paper_jobs.0
     );
 }

@@ -6,6 +6,8 @@
 //!                 [--explain-plan]   print the planned dataflow DAGs and exit
 //!                 [--graph epsilon|tnn]  similarity-graph construction mode
 //!                 [--knn-t T]        neighbors per row in tnn mode
+//!                 [--eigensolver lanczos|chebdav]  phase-2 backend
+//!                                    (alias for --set eigen.solver=...)
 //!                 [--fail-node S@H]  kill slave S at cumulative heartbeat H
 //!                 [--task-fail-prob P]  seeded per-attempt failure probability
 //!                 [--trace-out FILE] write a Chrome trace-event JSON
@@ -203,10 +205,20 @@ fn apply_graph_flags(flags: &Flags, cfg: &mut Config) -> Result<()> {
     cfg.validate()
 }
 
+/// Apply the eigensolver switch (`--eigensolver lanczos|chebdav`) — sugar
+/// over `eigen.solver` — and re-validate.
+fn apply_eigen_flags(flags: &Flags, cfg: &mut Config) -> Result<()> {
+    if let Some(solver) = flags.get("eigensolver") {
+        cfg.set("eigen.solver", solver)?;
+    }
+    cfg.validate()
+}
+
 fn cmd_run(flags: &Flags) -> Result<i32> {
     let mut cfg = flags.config()?;
     apply_chaos_flags(flags, &mut cfg)?;
     apply_graph_flags(flags, &mut cfg)?;
+    apply_eigen_flags(flags, &mut cfg)?;
     let quiet = flags.get_bool("quiet");
     let trace_out = flags.get("trace-out");
     let report_out = flags.get("report-json");
@@ -266,6 +278,7 @@ fn cmd_run(flags: &Flags) -> Result<i32> {
 fn cmd_baseline(flags: &Flags) -> Result<i32> {
     let mut cfg = flags.config()?;
     apply_graph_flags(flags, &mut cfg)?;
+    apply_eigen_flags(flags, &mut cfg)?;
     let n = flags.get_parse("blobs", 512usize)?;
     let ps = gaussian_blobs(n, cfg.algo.k, 8, 0.4, 8.0, cfg.algo.seed);
     let params = crate::spectral::SpectralParams {
@@ -278,13 +291,18 @@ fn cmd_baseline(flags: &Flags) -> Result<i32> {
         kmeans_iters: cfg.algo.kmeans_iters,
         kmeans_tol: cfg.algo.kmeans_tol,
         seed: cfg.algo.seed,
+        eigen: cfg.eigen,
+    };
+    let solver = match cfg.eigen.solver {
+        crate::coordinator::eigen::EigenSolverKind::Lanczos => {
+            crate::spectral::Eigensolver::Lanczos
+        }
+        crate::coordinator::eigen::EigenSolverKind::ChebDav => {
+            crate::spectral::Eigensolver::ChebDav
+        }
     };
     let t0 = std::time::Instant::now();
-    let r = crate::spectral::spectral_cluster_points(
-        &ps.points,
-        &params,
-        crate::spectral::Eigensolver::Lanczos,
-    )?;
+    let r = crate::spectral::spectral_cluster_points(&ps.points, &params, solver)?;
     println!(
         "single-machine: n={n} wall={:.2}s NMI={:.4}",
         t0.elapsed().as_secs_f64(),
@@ -451,6 +469,29 @@ mod tests {
         let bad = Flags::parse(&s(&["--knn-t", "0"])).unwrap();
         let mut cfg = bad.config().unwrap();
         assert!(apply_graph_flags(&bad, &mut cfg).is_err());
+    }
+
+    #[test]
+    fn eigensolver_flag_maps_into_the_config() {
+        let f = Flags::parse(&s(&["--eigensolver", "chebdav"])).unwrap();
+        let mut cfg = f.config().unwrap();
+        apply_eigen_flags(&f, &mut cfg).unwrap();
+        assert_eq!(
+            cfg.eigen.solver,
+            crate::coordinator::eigen::EigenSolverKind::ChebDav
+        );
+        // No flag leaves the configured backend alone.
+        let none = Flags::parse(&s(&[])).unwrap();
+        let mut cfg = none.config().unwrap();
+        apply_eigen_flags(&none, &mut cfg).unwrap();
+        assert_eq!(
+            cfg.eigen.solver,
+            crate::coordinator::eigen::EigenSolverKind::Lanczos
+        );
+        // Bad values are rejected by the shared config parser.
+        let bad = Flags::parse(&s(&["--eigensolver", "banana"])).unwrap();
+        let mut cfg = bad.config().unwrap();
+        assert!(apply_eigen_flags(&bad, &mut cfg).is_err());
     }
 
     #[test]

@@ -6,6 +6,7 @@
 
 
 use crate::cluster::{FaultConfig, NetworkModel, NodeDeath};
+use crate::coordinator::eigen::{EigenConfig, EigenSolverKind};
 use crate::error::{Error, Result};
 use crate::knn::{GraphMode, IndexKind, KnnConfig};
 use crate::mapreduce::ShuffleConfig;
@@ -106,6 +107,10 @@ pub struct Config {
     pub knn: KnnConfig,
     /// Algorithm settings (`[algo]` section).
     pub algo: AlgoConfig,
+    /// Eigen-phase settings (`[eigen]` section): solver backend selector
+    /// plus the ChebDav block/filter knobs. `algo.eigensolver` is accepted
+    /// as an alias for `eigen.solver`.
+    pub eigen: EigenConfig,
 }
 
 impl Config {
@@ -267,6 +272,27 @@ impl Config {
                 self.algo.kmeans_tol = value.parse().map_err(|_| bad_val(key))?
             }
             "algo.seed" => self.algo.seed = value.parse().map_err(|_| bad_val(key))?,
+            // `algo.eigensolver` is the paper-facing spelling; it aliases
+            // the `[eigen]` section's backend selector.
+            "eigen.solver" | "algo.eigensolver" => {
+                self.eigen.solver =
+                    EigenSolverKind::parse(value).ok_or_else(|| bad_val(key))?
+            }
+            "eigen.block_size" => {
+                self.eigen.block_size = value.parse().map_err(|_| bad_val(key))?
+            }
+            "eigen.filter_degree" => {
+                self.eigen.filter_degree = value.parse().map_err(|_| bad_val(key))?
+            }
+            "eigen.max_outer" => {
+                self.eigen.max_outer = value.parse().map_err(|_| bad_val(key))?
+            }
+            "eigen.residual_tol" => {
+                self.eigen.residual_tol = value.parse().map_err(|_| bad_val(key))?
+            }
+            "eigen.bound_steps" => {
+                self.eigen.bound_steps = value.parse().map_err(|_| bad_val(key))?
+            }
             other => {
                 return Err(Error::Config(format!("unknown config key: {other}")))
             }
@@ -353,6 +379,24 @@ impl Config {
         }
         if self.algo.kmeans_iters == 0 {
             return bad("algo.kmeans_iters must be >= 1".into());
+        }
+        if self.eigen.block_size == 0 {
+            return bad("eigen.block_size must be >= 1".into());
+        }
+        if self.eigen.filter_degree == 0 {
+            return bad("eigen.filter_degree must be >= 1".into());
+        }
+        if self.eigen.max_outer == 0 {
+            return bad("eigen.max_outer must be >= 1".into());
+        }
+        if self.eigen.residual_tol <= 0.0 {
+            return bad(format!(
+                "eigen.residual_tol must be > 0, got {}",
+                self.eigen.residual_tol
+            ));
+        }
+        if self.eigen.bound_steps == 0 {
+            return bad("eigen.bound_steps must be >= 1".into());
         }
         Ok(())
     }
@@ -555,6 +599,35 @@ lanczos_steps = 40
         assert!(Config::parse("[knn]\nt = 0\n").is_err());
         assert!(Config::parse("[knn]\nleaf_size = 0\n").is_err());
         assert!(Config::parse("[knn]\nbogus = 1\n").is_err());
+    }
+
+    #[test]
+    fn eigen_keys_parse_and_validate() {
+        let text = "[eigen]\nsolver = chebdav\nblock_size = 6\nfilter_degree = 6\n\
+                    max_outer = 4\nresidual_tol = 1e-5\nbound_steps = 3\n";
+        let cfg = Config::parse(text).unwrap();
+        assert_eq!(cfg.eigen.solver, EigenSolverKind::ChebDav);
+        assert_eq!(cfg.eigen.block_size, 6);
+        assert_eq!(cfg.eigen.filter_degree, 6);
+        assert_eq!(cfg.eigen.max_outer, 4);
+        assert!((cfg.eigen.residual_tol - 1e-5).abs() < 1e-18);
+        assert_eq!(cfg.eigen.bound_steps, 3);
+        // The backend defaults to lanczos so existing configs are inert.
+        let plain = Config::default();
+        assert_eq!(plain.eigen, EigenConfig::default());
+        assert_eq!(plain.eigen.solver, EigenSolverKind::Lanczos);
+        // The paper-facing alias hits the same field.
+        let mut aliased = Config::default();
+        aliased.set("algo.eigensolver", "chebdav").unwrap();
+        assert_eq!(aliased.eigen.solver, EigenSolverKind::ChebDav);
+
+        assert!(Config::parse("[eigen]\nsolver = banana\n").is_err());
+        assert!(Config::parse("[eigen]\nblock_size = 0\n").is_err());
+        assert!(Config::parse("[eigen]\nfilter_degree = 0\n").is_err());
+        assert!(Config::parse("[eigen]\nmax_outer = 0\n").is_err());
+        assert!(Config::parse("[eigen]\nresidual_tol = 0\n").is_err());
+        assert!(Config::parse("[eigen]\nbound_steps = 0\n").is_err());
+        assert!(Config::parse("[eigen]\nbogus = 1\n").is_err());
     }
 
     #[test]

@@ -8,7 +8,7 @@ use crate::error::Result;
 use crate::runtime::KernelRuntime;
 
 use super::{
-    kmeans_job, lanczos_job, similarity_job, PhaseStats, Services,
+    eigen, kmeans_job, lanczos_job, similarity_job, PhaseStats, Services,
 };
 
 /// What the pipeline clusters.
@@ -157,29 +157,14 @@ impl Driver {
             }
         };
 
-        // ---- Phase 2: representative plans ----
-        out.push_str("== phase 2: eigenvectors ==\n");
-        let svc2 = self.services();
-        let m = svc2.cluster.num_slaves();
-        let s_table = svc2.tables.create("S", m)?;
-        let l_table = svc2.tables.create("L", m)?;
-        let dinv: Arc<Vec<f64>> = Arc::new(vec![1.0; n]);
-        let pipeline = lanczos_job::laplacian_pipeline(&s_table, &l_table, &dinv, n);
-        out.push_str(&pipeline.plan()?.explain());
-        // Surrogate L: identity structure (12 bytes/entry + 16 per row).
-        let l = Arc::new(crate::linalg::CsrMatrix::from_rows(
-            n,
-            (0..n).map(|i| vec![(i as u32, 1.0f64)]).collect(),
-        ));
-        let row_bytes: Vec<u64> = vec![28; n];
-        let v: Arc<Vec<f64>> = Arc::new(vec![0.0; n]);
-        let (pipeline, _y) =
-            lanczos_job::matvec_pipeline(&l, &l_table, &v, &row_bytes, n);
-        out.push_str(&pipeline.plan()?.explain());
+        // ---- Phase 2: representative plans (selected backend) ----
+        let solver = eigen::solver_for(&self.config.eigen, a);
         out.push_str(&format!(
-            "  (matvec launched once per Lanczos step, ≤{} times)\n",
-            a.lanczos_steps.min(n)
+            "== phase 2: eigenvectors (solver: {}) ==\n",
+            solver.name()
         ));
+        let svc2 = self.services();
+        solver.explain(&svc2, n, a.k, &mut out)?;
 
         // ---- Phase 3: representative plans ----
         out.push_str("== phase 3: kmeans ==\n");
@@ -278,18 +263,13 @@ impl Driver {
             }
         };
 
-        // ---- Phase 2: k smallest eigenvectors ----
+        // ---- Phase 2: k smallest eigenvectors (selected backend) ----
         tracer.begin_phase("eigenvectors");
         let s_table = lanczos_job::open_similarity_table(services, "S")?;
-        let eig = lanczos_job::run_eigen_phase(
-            services,
-            &s_table,
-            Arc::new(sim.degrees.clone()),
-            n,
-            a.k,
-            a.lanczos_steps,
-            a.seed,
-        )?;
+        // The services carry the eigen config so tests that inject services
+        // pick the backend per-run (like the knn config).
+        let solver = eigen::solver_for(&services.eigen, a);
+        let eig = solver.run(services, &s_table, Arc::new(sim.degrees.clone()), n, a.k)?;
 
         // ---- Phase 3: parallel k-means on the embedding ----
         tracer.begin_phase("kmeans");
@@ -399,6 +379,35 @@ mod tests {
         assert!(text.contains("lanczos-matvec"), "{text}");
         assert!(text.contains("kmeans-update"), "{text}");
         assert!(text.contains("kmeans-assign"), "{text}");
+    }
+
+    #[test]
+    fn chebdav_backend_runs_end_to_end_and_plans() {
+        let ps = gaussian_blobs(300, 4, 4, 0.3, 10.0, 3);
+        let mut d = driver(3);
+        d.config.algo.k = 4;
+        d.config.algo.sigma = 1.5;
+        d.config.eigen.solver = crate::coordinator::eigen::EigenSolverKind::ChebDav;
+        let input = PipelineInput::Points { points: ps.points.clone() };
+        let text = d.explain_plan(&input).unwrap();
+        assert!(text.contains("solver: chebdav"), "{text}");
+        assert!(text.contains("chebdav-block-matvec"), "{text}");
+        assert!(text.contains("columns per job"), "{text}");
+        assert!(!text.contains("lanczos-matvec"), "{text}");
+        let r = d.run(&input).unwrap();
+        let score = nmi(&ps.labels, &r.labels);
+        assert!(score > 0.95, "chebdav nmi={score}");
+        assert!(r.eigenvalues[0].abs() < 1e-6);
+        let es = r.phases[1].eigen_summary();
+        assert!(es.any(), "eigen counters must flow");
+        assert_eq!(es.filter_degree, d.config.eigen.filter_degree as u64);
+        assert!(
+            es.matvecs_batched > es.eigen_jobs,
+            "batching must price more than one mat-vec per job \
+             ({} matvecs over {} jobs)",
+            es.matvecs_batched,
+            es.eigen_jobs
+        );
     }
 
     #[test]

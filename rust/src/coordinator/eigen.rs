@@ -1,0 +1,470 @@
+//! Eigensolver layer: the trait phase 2's backends plug into, plus the
+//! distributed block Chebyshev–Davidson job.
+//!
+//! Both backends share stage 1 (the fused Laplacian-build pipeline in
+//! [`super::lanczos_job`]) and differ only in how they apply the operator:
+//!
+//! - **lanczos** — one `read_table(L) → map_kv(spmv) → collect` job per
+//!   Krylov step: O(steps) tiny jobs whose cost is mostly per-job setup.
+//! - **chebdav** — the multi-vector extension of the same table-region
+//!   layout: each job broadcasts the whole n×m block row-major (records
+//!   are `(row, m-values)`), every task runs the blocked spmv over its row
+//!   range for all m columns at once, and the master drives the Chebyshev
+//!   filter + Rayleigh–Ritz recurrence between jobs. O(outer·(degree+1))
+//!   jobs, each pricing m mat-vecs — strictly fewer launches at paper
+//!   scale, with the per-job setup amortized m ways.
+//!
+//! The blocked kernel ([`CsrMatrix::spmv_block_rows`]) is row-independent,
+//! so task partitioning — and fault-injected re-execution — reassembles
+//! bit-identically to the single-machine oracle.
+
+use std::sync::Arc;
+
+use crate::dataflow::{Collected, Pipeline};
+use crate::error::Result;
+use crate::linalg::{chebdav_smallest, ChebDavOptions, CsrMatrix};
+use crate::mapreduce::names;
+use crate::table::Table;
+
+use super::lanczos_job::{self, EigenOutput, ROWS_PER_TASK};
+use super::similarity_job::chunk_key;
+use super::{PhaseStats, Services};
+
+/// Which phase-2 backend runs (`eigen.solver` / `--eigensolver`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EigenSolverKind {
+    /// One mat-vec job per Krylov step (paper Alg. 4.3).
+    #[default]
+    Lanczos,
+    /// Block Chebyshev–Davidson: batched multi-vector mat-vec jobs.
+    ChebDav,
+}
+
+impl EigenSolverKind {
+    /// Parse the config spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "lanczos" => Some(Self::Lanczos),
+            "chebdav" => Some(Self::ChebDav),
+            _ => None,
+        }
+    }
+
+    /// The config spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Lanczos => "lanczos",
+            Self::ChebDav => "chebdav",
+        }
+    }
+}
+
+/// Eigen-phase knobs (`[eigen]` config section).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EigenConfig {
+    /// Backend selector.
+    pub solver: EigenSolverKind,
+    /// ChebDav block width m (clamped to `max(k, block_size).min(n)`).
+    pub block_size: usize,
+    /// Chebyshev filter degree (operator applications per filter pass).
+    pub filter_degree: usize,
+    /// Max outer (filter + Rayleigh–Ritz) iterations.
+    pub max_outer: usize,
+    /// Residual tolerance for ChebDav convergence.
+    pub residual_tol: f64,
+    /// Lanczos steps spent estimating the filter interval bounds.
+    pub bound_steps: usize,
+}
+
+impl Default for EigenConfig {
+    fn default() -> Self {
+        Self {
+            solver: EigenSolverKind::Lanczos,
+            block_size: 8,
+            filter_degree: 8,
+            max_outer: 5,
+            residual_tol: 1e-6,
+            bound_steps: 4,
+        }
+    }
+}
+
+impl EigenConfig {
+    /// Worst-case operator jobs a ChebDav eigen phase launches (excluding
+    /// the Laplacian build): bound estimation + max_outer filtered rounds
+    /// of `degree` filter applications plus one Rayleigh–Ritz projection.
+    pub fn max_operator_jobs(&self) -> usize {
+        self.bound_steps + self.max_outer * (self.filter_degree + 1)
+    }
+}
+
+/// One selectable phase-2 backend: turns the S table + degree vector into
+/// the row-normalized spectral embedding, launching its own dataflow jobs.
+pub trait EigensolverJob {
+    /// Config spelling of the backend ("lanczos" | "chebdav").
+    fn name(&self) -> &'static str;
+
+    /// Run phase 2 end to end (Laplacian build + eigeniteration +
+    /// embedding normalization), reporting through [`PhaseStats`].
+    fn run(
+        &self,
+        services: &Services,
+        s_table: &Arc<Table>,
+        degrees: Arc<Vec<f64>>,
+        n: usize,
+        k: usize,
+    ) -> Result<EigenOutput>;
+
+    /// Append this backend's planned pipelines (and launch-count bound) to
+    /// the `--explain-plan` text without running anything.
+    fn explain(&self, services: &Services, n: usize, k: usize, out: &mut String)
+        -> Result<()>;
+}
+
+/// Pick the backend the config asks for.
+pub fn solver_for(
+    eigen: &EigenConfig,
+    algo: &crate::config::AlgoConfig,
+) -> Box<dyn EigensolverJob> {
+    match eigen.solver {
+        EigenSolverKind::Lanczos => Box::new(LanczosJob {
+            steps: algo.lanczos_steps,
+            seed: algo.seed,
+        }),
+        EigenSolverKind::ChebDav => Box::new(ChebDavJob { config: *eigen, seed: algo.seed }),
+    }
+}
+
+/// Shared `--explain-plan` scaffolding: the surrogate S/L tables, the
+/// (exact) Laplacian-build plan, and the surrogate operands the mat-vec
+/// plans are built against (identity-structure L: 12 bytes/entry + 16 per
+/// row).
+fn explain_surrogates(
+    services: &Services,
+    n: usize,
+    out: &mut String,
+) -> Result<(Arc<CsrMatrix>, Arc<Table>, Vec<u64>)> {
+    let m = services.cluster.num_slaves();
+    let s_table = services.tables.create("S", m)?;
+    let l_table = services.tables.create("L", m)?;
+    let dinv: Arc<Vec<f64>> = Arc::new(vec![1.0; n]);
+    let pipeline = lanczos_job::laplacian_pipeline(&s_table, &l_table, &dinv, n);
+    out.push_str(&pipeline.plan()?.explain());
+    let l = Arc::new(CsrMatrix::from_rows(
+        n,
+        (0..n).map(|i| vec![(i as u32, 1.0f64)]).collect(),
+    ));
+    let row_bytes: Vec<u64> = vec![28; n];
+    Ok((l, l_table, row_bytes))
+}
+
+/// The paper's backend: one mat-vec job per Lanczos step.
+pub struct LanczosJob {
+    /// Max Krylov steps (`algo.lanczos_steps`).
+    pub steps: usize,
+    /// Start-vector seed (`algo.seed`).
+    pub seed: u64,
+}
+
+impl EigensolverJob for LanczosJob {
+    fn name(&self) -> &'static str {
+        "lanczos"
+    }
+
+    fn run(
+        &self,
+        services: &Services,
+        s_table: &Arc<Table>,
+        degrees: Arc<Vec<f64>>,
+        n: usize,
+        k: usize,
+    ) -> Result<EigenOutput> {
+        lanczos_job::run_eigen_phase(services, s_table, degrees, n, k, self.steps, self.seed)
+    }
+
+    fn explain(
+        &self,
+        services: &Services,
+        n: usize,
+        _k: usize,
+        out: &mut String,
+    ) -> Result<()> {
+        let (l, l_table, row_bytes) = explain_surrogates(services, n, out)?;
+        let v: Arc<Vec<f64>> = Arc::new(vec![0.0; n]);
+        let (pipeline, _y) = lanczos_job::matvec_pipeline(&l, &l_table, &v, &row_bytes, n);
+        out.push_str(&pipeline.plan()?.explain());
+        out.push_str(&format!(
+            "  (matvec launched once per Lanczos step, ≤{} times)\n",
+            self.steps.min(n)
+        ));
+        Ok(())
+    }
+}
+
+/// The block Chebyshev–Davidson backend: batched multi-vector jobs.
+pub struct ChebDavJob {
+    /// Solver knobs (`[eigen]` config section).
+    pub config: EigenConfig,
+    /// Start-block seed (`algo.seed`).
+    pub seed: u64,
+}
+
+impl EigensolverJob for ChebDavJob {
+    fn name(&self) -> &'static str {
+        "chebdav"
+    }
+
+    fn run(
+        &self,
+        services: &Services,
+        s_table: &Arc<Table>,
+        degrees: Arc<Vec<f64>>,
+        n: usize,
+        k: usize,
+    ) -> Result<EigenOutput> {
+        run_chebdav_phase(services, s_table, degrees, n, k, &self.config, self.seed)
+    }
+
+    fn explain(
+        &self,
+        services: &Services,
+        n: usize,
+        k: usize,
+        out: &mut String,
+    ) -> Result<()> {
+        let (l, l_table, row_bytes) = explain_surrogates(services, n, out)?;
+        let m_cols = self.config.block_size.max(k).min(n.max(1));
+        let x: Arc<Vec<f64>> = Arc::new(vec![0.0; n * m_cols]);
+        let (pipeline, _y) =
+            block_matvec_pipeline(&l, &l_table, &x, m_cols, &row_bytes, n);
+        out.push_str(&pipeline.plan()?.explain());
+        out.push_str(&format!(
+            "  (block matvec prices {m_cols} columns per job; ≤{} bound-estimation \
+             + {}×{} filtered launches = {} operator jobs)\n",
+            self.config.bound_steps,
+            self.config.max_outer,
+            self.config.filter_degree + 1,
+            self.config.max_operator_jobs(),
+        ));
+        Ok(())
+    }
+}
+
+/// Build one block mat-vec pipeline: `read_table(L) → map_kv(block spmv) →
+/// collect`. The multi-vector table format: `x` is the whole n×m block
+/// row-major, broadcast to every task ("move the *block* to the data");
+/// each task emits `(row, m-values)` records for its row range, priced as
+/// m mat-vecs over the range's stored entries plus the 8·n·m broadcast
+/// bytes.
+pub(crate) fn block_matvec_pipeline(
+    l: &Arc<CsrMatrix>,
+    l_table: &Arc<Table>,
+    x: &Arc<Vec<f64>>,
+    m_cols: usize,
+    row_bytes: &[u64],
+    n: usize,
+) -> (Pipeline, Collected<u64, Vec<f64>>) {
+    let mut splits: Vec<Vec<(u64, u64)>> = Vec::new();
+    let mut anchors: Vec<Vec<u8>> = Vec::new();
+    for lo in (0..n).step_by(ROWS_PER_TASK) {
+        let hi = (lo + ROWS_PER_TASK).min(n);
+        let modelled: u64 = row_bytes[lo..hi].iter().sum::<u64>().max(1);
+        splits.push(vec![(lo as u64, modelled)]);
+        anchors.push(chunk_key(lo as u64, 0));
+    }
+    let l_cc = l.clone();
+    let x_cc = x.clone();
+    let pipeline = Pipeline::new("chebdav");
+    let y = pipeline
+        .read_table(l_table, splits, anchors)
+        .map_kv(
+            "chebdav-block-matvec",
+            move |lo: u64, modelled: u64, out| -> Result<()> {
+                let lo = lo as usize;
+                let hi = (lo + ROWS_PER_TASK).min(n);
+                // Charge the modelled L-row scan plus the broadcast block
+                // (all m columns travel with every task).
+                out.incr(
+                    crate::mapreduce::names::EXTRA_INPUT_BYTES,
+                    modelled + 8 * x_cc.len() as u64,
+                );
+                let nnz: usize = (lo..hi).map(|i| l_cc.row_nnz(i)).sum();
+                out.incr(
+                    crate::mapreduce::names::COMPUTE_US,
+                    super::costmodel::units_to_us(
+                        (nnz * m_cols) as u64,
+                        super::costmodel::MATVEC_NNZ_PER_S,
+                    ),
+                );
+                let y = l_cc.spmv_block_rows(&x_cc, m_cols, lo, hi);
+                for off in 0..(hi - lo) {
+                    out.emit(
+                        (lo + off) as u64,
+                        y[off * m_cols..(off + 1) * m_cols].to_vec(),
+                    );
+                }
+                Ok(())
+            },
+        )
+        .collect();
+    (pipeline, y)
+}
+
+/// Run phase 2 with the block Chebyshev–Davidson backend: same Laplacian
+/// build and embedding normalization as the lanczos path, but the operator
+/// closure launches ONE job per application covering all m columns.
+#[allow(clippy::too_many_arguments)]
+pub fn run_chebdav_phase(
+    services: &Services,
+    s_table: &Arc<Table>,
+    degrees: Arc<Vec<f64>>,
+    n: usize,
+    k: usize,
+    eigen: &EigenConfig,
+    seed: u64,
+) -> Result<EigenOutput> {
+    let mut stats = PhaseStats { name: "eigenvectors".into(), ..Default::default() };
+    let (l, l_table) =
+        lanczos_job::build_laplacian(services, s_table, &degrees, n, "L", &mut stats)?;
+    let row_bytes = lanczos_job::modelled_row_bytes(&l, n);
+
+    let mut block_runs: Vec<crate::dataflow::PlanStats> = Vec::new();
+    let mut matvecs_batched = 0u64;
+    {
+        let services_c = services.clone();
+        let l_c = l.clone();
+        let l_table_c = l_table.clone();
+        let row_bytes_c = row_bytes.clone();
+        let mut block_op = |x: &[f64], m_cols: usize| -> Vec<f64> {
+            let x_arc: Arc<Vec<f64>> = Arc::new(x.to_vec());
+            let (pipeline, y_handle) =
+                block_matvec_pipeline(&l_c, &l_table_c, &x_arc, m_cols, &row_bytes_c, n);
+            let mut run = pipeline.run(&services_c).expect("block matvec job");
+            let mut y = vec![0.0f64; n * m_cols];
+            for (row, vals) in y_handle.take(&mut run) {
+                let r = row as usize * m_cols;
+                y[r..r + m_cols].copy_from_slice(&vals);
+            }
+            block_runs.push(run.stats);
+            matvecs_batched += m_cols as u64;
+            y
+        };
+
+        let opts = ChebDavOptions {
+            block_size: eigen.block_size,
+            filter_degree: eigen.filter_degree,
+            max_outer: eigen.max_outer,
+            tol: eigen.residual_tol,
+            bound_steps: eigen.bound_steps,
+            seed,
+        };
+        let master_start = std::time::Instant::now();
+        let result = chebdav_smallest(n, k, &opts, &mut block_op)?;
+        let master_wall = master_start.elapsed().as_secs_f64();
+
+        // Separate master-side compute from the MR jobs it launched.
+        let jobs_wall: f64 = block_runs.iter().map(|r| r.total_wall_s()).sum();
+        for run_stats in &block_runs {
+            stats.absorb_run(run_stats);
+        }
+        stats.absorb_master(
+            (master_wall - jobs_wall).max(0.0),
+            services.cluster.model().compute_scale,
+        );
+
+        // Row-normalize Z -> Y on the kernel runtime, like the lanczos path.
+        let mut z = vec![0.0f32; n * k];
+        for i in 0..n {
+            for c in 0..k {
+                z[i * k + c] = result.eigenvectors[i][c] as f32;
+            }
+        }
+        let norm_start = std::time::Instant::now();
+        let embedding = services.runtime.normalize_rows(&z, n, k)?;
+        stats.absorb_master(
+            norm_start.elapsed().as_secs_f64(),
+            services.cluster.model().compute_scale,
+        );
+
+        stats.counters.incr(names::EIGEN_JOBS, stats.jobs as u64);
+        stats.counters.incr(names::MATVECS_BATCHED, matvecs_batched);
+        stats
+            .counters
+            .incr(names::CHEB_FILTER_DEGREE, eigen.filter_degree as u64);
+
+        Ok(EigenOutput {
+            embedding,
+            eigenvalues: result.eigenvalues,
+            steps: result.outer_iters,
+            stats,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::runtime::KernelRuntime;
+
+    #[test]
+    fn kind_parse_round_trips() {
+        for kind in [EigenSolverKind::Lanczos, EigenSolverKind::ChebDav] {
+            assert_eq!(EigenSolverKind::parse(kind.as_str()), Some(kind));
+        }
+        assert_eq!(EigenSolverKind::parse("jacobi"), None);
+        assert_eq!(EigenSolverKind::default(), EigenSolverKind::Lanczos);
+    }
+
+    #[test]
+    fn config_defaults_keep_lanczos_behavior() {
+        let c = EigenConfig::default();
+        assert_eq!(c.solver, EigenSolverKind::Lanczos);
+        assert_eq!(c.block_size, 8);
+        assert_eq!(c.filter_degree, 8);
+        assert_eq!(c.max_outer, 5);
+        assert!(c.residual_tol > 0.0);
+        // Worst case must undercut the paper config's 60 lanczos steps.
+        assert_eq!(c.max_operator_jobs(), 4 + 5 * 9);
+        assert!(c.max_operator_jobs() < 60);
+    }
+
+    #[test]
+    fn block_matvec_pipeline_is_one_job_and_matches_oracle_bitwise() {
+        let svc = Services::new(Cluster::new(2), Arc::new(KernelRuntime::native()));
+        let n = 20;
+        let l_table = svc.tables.create("L", 2).unwrap();
+        // Symmetric tridiagonal-ish L surrogate with off-diagonal weights.
+        let rows: Vec<Vec<(u32, f64)>> = (0..n)
+            .map(|i| {
+                let mut r = vec![(i as u32, 2.0 + i as f64 * 0.01)];
+                if i > 0 {
+                    r.push((i as u32 - 1, -0.7));
+                }
+                if i + 1 < n {
+                    r.push((i as u32 + 1, -0.7));
+                }
+                r
+            })
+            .collect();
+        let l = Arc::new(CsrMatrix::from_rows(n, rows));
+        let row_bytes = lanczos_job::modelled_row_bytes(&l, n);
+        let m_cols = 3;
+        let x: Arc<Vec<f64>> = Arc::new(
+            (0..n * m_cols).map(|i| (i as f64 * 0.37).cos()).collect(),
+        );
+        let (pipeline, y_handle) =
+            block_matvec_pipeline(&l, &l_table, &x, m_cols, &row_bytes, n);
+        let plan = pipeline.plan().unwrap();
+        assert_eq!(plan.job_count(), 1, "block mat-vec is one map-only job");
+        let mut run = plan.run(&svc).unwrap();
+        let mut y = vec![0.0f64; n * m_cols];
+        for (row, vals) in y_handle.take(&mut run) {
+            let r = row as usize * m_cols;
+            y[r..r + m_cols].copy_from_slice(&vals);
+        }
+        let oracle = l.spmv_block_rows(&x, m_cols, 0, n);
+        let bits = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&y), bits(&oracle), "distributed == oracle bitwise");
+    }
+}

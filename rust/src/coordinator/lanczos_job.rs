@@ -123,8 +123,9 @@ pub(crate) fn laplacian_pipeline(
 
 /// Stage 1: build the L table from the S table + degrees; returns the shared
 /// CSR snapshot the mat-vec jobs read through plus the L table handle (its
-/// region map seeds the iteration jobs' split locality).
-fn build_laplacian(
+/// region map seeds the iteration jobs' split locality). Shared with the
+/// ChebDav backend in [`super::eigen`] — both solvers build L identically.
+pub(crate) fn build_laplacian(
     services: &Services,
     s_table: &Arc<Table>,
     degrees: &Arc<Vec<f64>>,
@@ -225,10 +226,7 @@ pub fn run_eigen_phase(
     let mut stats = PhaseStats { name: "eigenvectors".into(), ..Default::default() };
     let (l, l_table) = build_laplacian(services, s_table, &degrees, n, "L", &mut stats)?;
 
-    // Bytes each mat-vec task "reads" (its row range of L) for the cost model.
-    let row_bytes: Vec<u64> = (0..n)
-        .map(|i| 12 * l.row(i).count() as u64 + 16)
-        .collect();
+    let row_bytes = modelled_row_bytes(&l, n);
 
     // Lanczos driver: each matvec is one MR job (one pipeline run).
     let mut matvec_runs: Vec<crate::dataflow::PlanStats> = Vec::new();
@@ -283,6 +281,16 @@ pub fn run_eigen_phase(
             services.cluster.model().compute_scale,
         );
 
+        // Eigensolver counter family (see metrics::EigenSummary): every
+        // phase job, and one mat-vec priced per matvec job (the ChebDav
+        // backend prices m per job — that contrast is the whole point).
+        stats
+            .counters
+            .incr(crate::mapreduce::names::EIGEN_JOBS, stats.jobs as u64);
+        stats
+            .counters
+            .incr(crate::mapreduce::names::MATVECS_BATCHED, result.steps as u64);
+
         Ok(EigenOutput {
             embedding,
             eigenvalues: result.eigenvalues,
@@ -290,6 +298,13 @@ pub fn run_eigen_phase(
             stats,
         })
     }
+}
+
+/// Bytes each mat-vec task "reads" (its row range of L) for the cost model:
+/// ~12 bytes per stored entry + 16 of key overhead per row. Shared by both
+/// eigensolver backends.
+pub(crate) fn modelled_row_bytes(l: &Arc<CsrMatrix>, n: usize) -> Vec<u64> {
+    (0..n).map(|i| 12 * l.row(i).count() as u64 + 16).collect()
 }
 
 /// Convenience: dense f32 embedding rows as Vec<Vec<f64>> (tests/eval).

@@ -8,6 +8,9 @@
 //!   aggregated through the shuffle.
 //! - [`lanczos_job`]: Alg. 4.3 — Lanczos with the `L·v` hot spot as a
 //!   row-partitioned MR job per iteration ("move the vector to the data").
+//! - [`eigen`]: the eigensolver layer — the [`eigen::EigensolverJob`] trait
+//!   both phase-2 backends (lanczos, chebdav) plug into, and the block
+//!   Chebyshev–Davidson job batching m mat-vecs per pipeline run.
 //! - [`kmeans_job`]: §4.3.3 — iterated assign/update MR jobs with the DFS
 //!   "center file".
 //! - [`driver`]: runs the phases end to end and reports per-phase virtual +
@@ -15,6 +18,7 @@
 
 pub mod costmodel;
 pub mod driver;
+pub mod eigen;
 pub mod kmeans_job;
 pub mod lanczos_job;
 pub mod similarity_job;
@@ -43,6 +47,10 @@ pub struct Services {
     /// t-NN graph construction knobs (`[knn]` config section) — the
     /// similarity phase reads these when `algo.graph = "tnn"`.
     pub knn: crate::knn::KnnConfig,
+    /// Eigen-phase knobs (`[eigen]` config section) — the driver reads the
+    /// backend selector and ChebDav parameters from here, so tests that
+    /// inject services pick the solver per-run.
+    pub eigen: eigen::EigenConfig,
 }
 
 impl Services {
@@ -82,6 +90,7 @@ impl Services {
             tables: TableService::new(m),
             runtime,
             knn: crate::knn::KnnConfig::default(),
+            eigen: eigen::EigenConfig::default(),
         };
         let dfs = svc.dfs.clone();
         svc.cluster.faults().on_death(move |node| {
@@ -113,6 +122,7 @@ impl Services {
         cluster.set_fault_config(config.faults.clone());
         let mut svc = Self::with_replication(cluster, runtime, c.replication);
         svc.knn = config.knn;
+        svc.eigen = config.eigen;
         svc
     }
 }
@@ -195,5 +205,11 @@ impl PhaseStats {
     /// pruned and heap churn (all-zero for epsilon-mode phases).
     pub fn knn_summary(&self) -> crate::metrics::KnnSummary {
         crate::metrics::KnnSummary::from_counters(&self.counters)
+    }
+
+    /// Eigensolver summary of the phase: jobs launched, mat-vecs batched
+    /// and the Chebyshev filter degree (all-zero for non-eigen phases).
+    pub fn eigen_summary(&self) -> crate::metrics::EigenSummary {
+        crate::metrics::EigenSummary::from_counters(&self.counters)
     }
 }

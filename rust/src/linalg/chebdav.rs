@@ -1,0 +1,626 @@
+//! Block Chebyshev–Davidson eigensolver for the k smallest eigenpairs.
+//!
+//! The alternative phase-2 backend (after "A Distributed Block
+//! Chebyshev–Davidson Algorithm for Parallel Spectral Clustering",
+//! arXiv:2212.04443): instead of one mat-vec per Krylov step, the solver
+//! iterates an m-column block through a degree-d Chebyshev polynomial
+//! filter that damps the unwanted upper spectrum `[a, b]` and amplifies the
+//! wanted lower end, then extracts Ritz pairs by Rayleigh–Ritz projection.
+//! Each filter application is ONE operator application on all m columns at
+//! once — in the distributed pipeline, one dataflow job pricing m mat-vecs
+//! — so the eigen phase drops from O(steps) jobs to
+//! O(outer · (degree + 1)) jobs with far better per-job efficiency.
+//!
+//! The operator is only touched through a caller-supplied block closure
+//! `op(x, m) -> A·X` over row-major n×m blocks, mirroring the mat-vec
+//! closure of [`super::lanczos::lanczos_smallest`]. Everything else
+//! (orthonormalization, projection, small dense solves, the three-term
+//! filter recurrence) is master-side and uses the deterministic unrolled
+//! kernels in [`super::vector`], so same-seed runs are byte-identical
+//! regardless of how the operator partitions its rows.
+
+use crate::error::{Error, Result};
+use crate::util::Xoshiro256;
+
+use super::dense::DenseMatrix;
+use super::jacobi::jacobi_eigen;
+use super::tridiag::tridiag_eigen;
+use super::vector::{axpy, dot, norm, normalize, scale};
+
+/// Options for [`chebdav_smallest`].
+#[derive(Debug, Clone)]
+pub struct ChebDavOptions {
+    /// Block width m (clamped to `max(k, block_size).min(n)` internally).
+    pub block_size: usize,
+    /// Chebyshev filter degree d: operator applications per filter pass.
+    pub filter_degree: usize,
+    /// Maximum outer (filter + Rayleigh–Ritz) iterations.
+    pub max_outer: usize,
+    /// Convergence tolerance on the max residual ‖A·u − θ·u‖ of the first
+    /// k Ritz pairs, relative to the spectrum scale (1 + |upper bound|).
+    pub tol: f64,
+    /// Plain Lanczos steps used to estimate the spectrum bounds [λmin, λmax]
+    /// before filtering starts (single-column operator applications).
+    pub bound_steps: usize,
+    /// Seed for the random start block (and bound-estimation start vector).
+    pub seed: u64,
+}
+
+impl Default for ChebDavOptions {
+    fn default() -> Self {
+        Self {
+            block_size: 8,
+            filter_degree: 8,
+            max_outer: 5,
+            tol: 1e-6,
+            bound_steps: 4,
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// Result of a Chebyshev–Davidson run.
+#[derive(Debug, Clone)]
+pub struct ChebDavResult {
+    /// Ritz values (approximate eigenvalues), ascending, `k` of them.
+    pub eigenvalues: Vec<f64>,
+    /// Ritz vectors, row-major n×k: `eigenvectors[i][j]` = component i of
+    /// approximate eigenvector j (same layout as `LanczosResult`).
+    pub eigenvectors: Vec<Vec<f64>>,
+    /// Outer iterations actually performed.
+    pub outer_iters: usize,
+    /// Operator applications (each prices one dataflow job distributed).
+    pub block_applies: usize,
+    /// Total mat-vecs across all applications (Σ block widths).
+    pub matvecs: usize,
+    /// Estimated spectrum bounds (lower estimate, safe upper bound).
+    pub bounds: (f64, f64),
+    /// Max residual ‖A·u − θ·u‖ over the first k Ritz pairs at exit.
+    pub max_residual: f64,
+}
+
+/// Spectrum bounds estimated by a few plain Lanczos steps.
+#[derive(Debug, Clone, Copy)]
+pub struct SpectrumBounds {
+    /// Ritz estimate of λmin (an upper bound on the true λmin).
+    pub lower: f64,
+    /// Safe upper bound on λmax: θmax + ‖residual‖ of the last step.
+    pub upper: f64,
+    /// Operator applications spent (= Lanczos steps actually run).
+    pub steps: usize,
+}
+
+/// Estimate the spectrum bounds of a symmetric n×n operator with `steps`
+/// plain Lanczos steps (no reorthogonalization — a handful of steps give a
+/// coarse λmin estimate and, via θmax + ‖f‖, a safe λmax upper bound; the
+/// margin makes the Chebyshev filter interval contain the whole unwanted
+/// spectrum, which is what filter stability needs).
+pub fn estimate_spectrum_bounds<F>(
+    n: usize,
+    steps: usize,
+    seed: u64,
+    op: &mut F,
+) -> Result<SpectrumBounds>
+where
+    F: FnMut(&[f64], usize) -> Vec<f64>,
+{
+    if n == 0 {
+        return Err(Error::Linalg("spectrum bounds: empty operator".into()));
+    }
+    let steps = steps.clamp(2, n.max(2)).min(n);
+    let mut rng = Xoshiro256::new(seed ^ 0x9e37_79b9_7f4a_7c15);
+    let mut v = vec![0.0; n];
+    for vi in v.iter_mut() {
+        *vi = rng.next_gaussian();
+    }
+    normalize(&mut v);
+
+    let mut v_prev = vec![0.0; n];
+    let mut beta_prev = 0.0f64;
+    let mut alphas: Vec<f64> = Vec::with_capacity(steps);
+    let mut betas: Vec<f64> = Vec::with_capacity(steps);
+    let mut final_beta = 0.0f64;
+    for j in 0..steps {
+        let mut w = op(&v, 1);
+        if j > 0 {
+            axpy(-beta_prev, &v_prev, &mut w);
+        }
+        let alpha = dot(&w, &v);
+        axpy(-alpha, &v, &mut w);
+        alphas.push(alpha);
+        let beta = norm(&w);
+        final_beta = beta;
+        if j + 1 == steps || beta < 1e-12 {
+            // Exhausted Krylov space: the tridiagonal eigenvalues are exact
+            // for the invariant subspace found so far.
+            break;
+        }
+        betas.push(beta);
+        v_prev = v;
+        v = w;
+        scale(1.0 / beta, &mut v);
+    }
+
+    let m = alphas.len();
+    let mut off = vec![0.0; m];
+    for j in 1..m {
+        off[j] = betas[j - 1];
+    }
+    let (tvals, _) = tridiag_eigen(&alphas[..m], &off)?;
+    Ok(SpectrumBounds {
+        lower: tvals[0],
+        upper: tvals[m - 1] + final_beta,
+        steps: m,
+    })
+}
+
+/// Modified Gram–Schmidt over the block's columns, done twice ("twice is
+/// enough"). A column whose norm collapses below 1e-10 is replaced by a
+/// fresh random direction from `rng` (re-orthogonalized against the earlier
+/// columns), keeping the basis full-rank; the rng draw order is fixed, so
+/// the replacement — like everything else here — is deterministic.
+fn orthonormalize_block(cols: &mut [Vec<f64>], rng: &mut Xoshiro256) {
+    let m = cols.len();
+    for j in 0..m {
+        let mut attempts = 0;
+        loop {
+            for _pass in 0..2 {
+                for i in 0..j {
+                    let (head, tail) = cols.split_at_mut(j);
+                    let c = dot(&tail[0], &head[i]);
+                    axpy(-c, &head[i], &mut tail[0]);
+                }
+            }
+            if normalize(&mut cols[j]) > 1e-10 {
+                break;
+            }
+            attempts += 1;
+            if attempts > 4 {
+                // n columns always fit in R^n; only pathological fp noise
+                // gets here — give up with whatever direction we have.
+                normalize(&mut cols[j]);
+                break;
+            }
+            for x in cols[j].iter_mut() {
+                *x = rng.next_gaussian();
+            }
+        }
+    }
+}
+
+/// Flatten m columns of length n into the row-major n×m layout the block
+/// operator (and the multi-vector table format) uses.
+fn cols_to_flat(cols: &[Vec<f64>], n: usize) -> Vec<f64> {
+    let m = cols.len();
+    let mut flat = vec![0.0f64; n * m];
+    for (c, col) in cols.iter().enumerate() {
+        for i in 0..n {
+            flat[i * m + c] = col[i];
+        }
+    }
+    flat
+}
+
+/// Inverse of [`cols_to_flat`].
+fn flat_to_cols(flat: &[f64], n: usize, m: usize) -> Vec<Vec<f64>> {
+    let mut cols = vec![vec![0.0f64; n]; m];
+    for i in 0..n {
+        for (c, col) in cols.iter_mut().enumerate() {
+            col[i] = flat[i * m + c];
+        }
+    }
+    cols
+}
+
+/// Apply the block operator to m columns: flatten, one `op` call, unflatten.
+fn apply_block<F>(op: &mut F, cols: &[Vec<f64>], n: usize) -> Vec<Vec<f64>>
+where
+    F: FnMut(&[f64], usize) -> Vec<f64>,
+{
+    let m = cols.len();
+    let flat = cols_to_flat(cols, n);
+    let out = op(&flat, m);
+    debug_assert_eq!(out.len(), n * m, "block operator shape mismatch");
+    flat_to_cols(&out, n, m)
+}
+
+/// Degree-d Chebyshev filter on the block (Zhou–Saad scaled three-term
+/// recurrence). Damps `[a, b]` and amplifies below `a`; `a0 < a` is the
+/// current λmin estimate setting the scaling reference. Costs exactly
+/// `degree` operator applications.
+fn cheb_filter<F>(
+    op: &mut F,
+    x: &[Vec<f64>],
+    n: usize,
+    degree: usize,
+    a: f64,
+    b: f64,
+    a0: f64,
+) -> Vec<Vec<f64>>
+where
+    F: FnMut(&[f64], usize) -> Vec<f64>,
+{
+    let e = (b - a) / 2.0;
+    let c = (b + a) / 2.0;
+    let sigma1 = e / (a0 - c);
+    let mut sigma = sigma1;
+
+    // Y = (A·X − c·X) · (σ1 / e)
+    let ax = apply_block(op, x, n);
+    let mut y: Vec<Vec<f64>> = Vec::with_capacity(x.len());
+    for (col_ax, col_x) in ax.iter().zip(x) {
+        let mut yc = col_ax.clone();
+        axpy(-c, col_x, &mut yc);
+        scale(sigma1 / e, &mut yc);
+        y.push(yc);
+    }
+
+    let mut x_prev: Vec<Vec<f64>> = x.to_vec();
+    for _deg in 2..=degree {
+        let sigma_new = 1.0 / (2.0 / sigma1 - sigma);
+        let ay = apply_block(op, &y, n);
+        let mut y_new: Vec<Vec<f64>> = Vec::with_capacity(y.len());
+        for ((col_ay, col_y), col_xp) in ay.iter().zip(&y).zip(&x_prev) {
+            // Ynew = (A·Y − c·Y) · (2σnew/e) − (σ·σnew)·Xprev
+            let mut yc = col_ay.clone();
+            axpy(-c, col_y, &mut yc);
+            scale(2.0 * sigma_new / e, &mut yc);
+            axpy(-(sigma * sigma_new), col_xp, &mut yc);
+            y_new.push(yc);
+        }
+        x_prev = y;
+        y = y_new;
+        sigma = sigma_new;
+    }
+    y
+}
+
+/// Compute the `k` smallest eigenpairs of a symmetric n×n operator with the
+/// block Chebyshev–Davidson iteration.
+///
+/// `op(x, m) -> A·X` over row-major n×m blocks is the only access to the
+/// matrix. Each outer iteration costs `filter_degree + 1` operator
+/// applications (filter passes + the Rayleigh–Ritz projection); the bound
+/// estimation up front costs `bound_steps` single-column applications.
+/// Like `lanczos_smallest`, the best available Ritz pairs are returned even
+/// if the residual tolerance was not reached within `max_outer` iterations
+/// (`max_residual` reports how far convergence got).
+pub fn chebdav_smallest<F>(
+    n: usize,
+    k: usize,
+    opts: &ChebDavOptions,
+    mut op: F,
+) -> Result<ChebDavResult>
+where
+    F: FnMut(&[f64], usize) -> Vec<f64>,
+{
+    if k == 0 || n == 0 {
+        return Err(Error::Linalg(format!("chebdav: degenerate k={k}, n={n}")));
+    }
+    if k > n {
+        return Err(Error::Linalg(format!("chebdav: k={k} > n={n}")));
+    }
+    if opts.filter_degree == 0 {
+        return Err(Error::Linalg("chebdav: filter_degree must be >= 1".into()));
+    }
+    if opts.max_outer == 0 {
+        return Err(Error::Linalg("chebdav: max_outer must be >= 1".into()));
+    }
+    let m = opts.block_size.max(k).min(n);
+
+    let mut block_applies = 0usize;
+    let mut matvecs = 0usize;
+
+    // Bounds first: the filter interval must cover the unwanted spectrum.
+    let bounds = {
+        let mut counted = |x: &[f64], w: usize| {
+            block_applies += 1;
+            matvecs += w;
+            op(x, w)
+        };
+        estimate_spectrum_bounds(n, opts.bound_steps, opts.seed, &mut counted)?
+    };
+    let lo_est = bounds.lower;
+    let mut upper = bounds.upper;
+    let mut span = upper - lo_est;
+    if span < 1e-12 {
+        // Degenerate spectrum (A ≈ λI): widen artificially so the filter
+        // recurrence stays well-defined; RR converges in one pass anyway.
+        upper = lo_est + 1.0;
+        span = 1.0;
+    }
+
+    // Random start block, orthonormalized.
+    let mut rng = Xoshiro256::new(opts.seed);
+    let mut v: Vec<Vec<f64>> = (0..m)
+        .map(|_| (0..n).map(|_| rng.next_gaussian()).collect())
+        .collect();
+    orthonormalize_block(&mut v, &mut rng);
+
+    // Filter lower edge: start a little above the λmin estimate; updated
+    // each outer iteration from the Ritz values (the first unwanted one).
+    let mut a_filter = lo_est + 0.1 * span;
+
+    let mut outer_iters = 0usize;
+    let mut max_residual = f64::INFINITY;
+    let mut eigenvalues: Vec<f64> = Vec::new();
+    let mut ritz: Vec<Vec<f64>> = Vec::new();
+
+    for _outer in 0..opts.max_outer {
+        // Filter the block (degree operator applications)...
+        let mut filtered = {
+            let mut counted = |x: &[f64], w: usize| {
+                block_applies += 1;
+                matvecs += w;
+                op(x, w)
+            };
+            cheb_filter(
+                &mut counted,
+                &v,
+                n,
+                opts.filter_degree,
+                a_filter,
+                upper,
+                lo_est,
+            )
+        };
+        // ...orthonormalize, and project (one more application).
+        orthonormalize_block(&mut filtered, &mut rng);
+        let w = {
+            let mut counted = |x: &[f64], wd: usize| {
+                block_applies += 1;
+                matvecs += wd;
+                op(x, wd)
+            };
+            apply_block(&mut counted, &filtered, n)
+        };
+
+        // H = Xᵀ A X, symmetrized explicitly (jacobi_eigen requires it).
+        let mut h = DenseMatrix::zeros(m, m);
+        for i in 0..m {
+            for j in i..m {
+                let hij = 0.5 * (dot(&filtered[i], &w[j]) + dot(&filtered[j], &w[i]));
+                h[(i, j)] = hij;
+                h[(j, i)] = hij;
+            }
+        }
+        let (theta, q) = jacobi_eigen(&h)?;
+
+        // Ritz vectors u_c = Σ_j q[j][c] x_j (all m become the next block);
+        // residuals on the first k, using A·u_c = Σ_j q[j][c] w_j.
+        let mut u: Vec<Vec<f64>> = vec![vec![0.0; n]; m];
+        for (c, uc) in u.iter_mut().enumerate() {
+            for (j, xj) in filtered.iter().enumerate() {
+                axpy(q[(j, c)], xj, uc);
+            }
+        }
+        let mut worst = 0.0f64;
+        for c in 0..k {
+            let mut r = vec![0.0; n];
+            for (j, wj) in w.iter().enumerate() {
+                axpy(q[(j, c)], wj, &mut r);
+            }
+            axpy(-theta[c], &u[c], &mut r);
+            worst = worst.max(norm(&r));
+        }
+
+        outer_iters += 1;
+        max_residual = worst;
+        eigenvalues = theta[..k].to_vec();
+        ritz = u.iter().take(k).cloned().collect();
+
+        if worst <= opts.tol * (1.0 + upper.abs()) {
+            break;
+        }
+
+        // Next round: iterate the Ritz block, filter everything above the
+        // first unwanted Ritz value (clamped inside the estimated spectrum
+        // so the interval never collapses or escapes).
+        let proposed = if m > k { theta[k] } else { theta[m - 1] + 1e-3 * span };
+        a_filter = proposed.clamp(lo_est + 0.01 * span, upper - 0.1 * span);
+        v = u;
+    }
+
+    // Row-major n×k, the LanczosResult layout.
+    let mut eigenvectors = vec![vec![0.0; k]; n];
+    for (c, rc) in ritz.iter().enumerate() {
+        for i in 0..n {
+            eigenvectors[i][c] = rc[i];
+        }
+    }
+    Ok(ChebDavResult {
+        eigenvalues,
+        eigenvectors,
+        outer_iters,
+        block_applies,
+        matvecs,
+        bounds: (lo_est, upper),
+        max_residual,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::jacobi::jacobi_eigen;
+    use crate::linalg::sparse::CsrMatrix;
+
+    fn random_symmetric(n: usize, seed: u64) -> DenseMatrix {
+        let mut rng = Xoshiro256::new(seed);
+        let mut m = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.next_f64() * 2.0 - 1.0;
+                m[(i, j)] = v;
+                m[(j, i)] = v;
+            }
+        }
+        m
+    }
+
+    /// Dense block operator: column-by-column matvec, row-major in/out.
+    fn dense_block_op(a: &DenseMatrix) -> impl FnMut(&[f64], usize) -> Vec<f64> + '_ {
+        move |x: &[f64], m: usize| {
+            let n = a.rows();
+            let mut y = vec![0.0f64; n * m];
+            for c in 0..m {
+                let col: Vec<f64> = (0..n).map(|r| x[r * m + c]).collect();
+                let ac = a.matvec(&col);
+                for r in 0..n {
+                    y[r * m + c] = ac[r];
+                }
+            }
+            y
+        }
+    }
+
+    #[test]
+    fn bounds_bracket_the_spectrum() {
+        let n = 30;
+        let a = random_symmetric(n, 404);
+        let (jvals, _) = jacobi_eigen(&a).unwrap();
+        let b = estimate_spectrum_bounds(n, 6, 1, &mut dense_block_op(&a)).unwrap();
+        // The Ritz λmin estimate approaches from above; the upper bound
+        // carries a ‖f‖ safety margin and must clear the true λmax.
+        assert!(b.lower >= jvals[0] - 1e-9, "{} < {}", b.lower, jvals[0]);
+        assert!(b.lower <= jvals[n - 1] + 1e-9);
+        assert!(b.upper >= jvals[n - 1] - 1e-9, "{} < {}", b.upper, jvals[n - 1]);
+        assert!(b.steps >= 2 && b.steps <= 6);
+    }
+
+    #[test]
+    fn matches_jacobi_on_dense_random() {
+        let n = 30;
+        let a = random_symmetric(n, 2024);
+        let (jvals, _) = jacobi_eigen(&a).unwrap();
+        let opts = ChebDavOptions {
+            block_size: 8,
+            filter_degree: 10,
+            max_outer: 60,
+            tol: 1e-9,
+            ..Default::default()
+        };
+        let r = chebdav_smallest(n, 3, &opts, dense_block_op(&a)).unwrap();
+        for i in 0..3 {
+            assert!(
+                (r.eigenvalues[i] - jvals[i]).abs() < 1e-6,
+                "eig {i}: {} vs {} (residual {})",
+                r.eigenvalues[i],
+                jvals[i],
+                r.max_residual
+            );
+        }
+        assert!(r.max_residual < 1e-6 * (1.0 + r.bounds.1.abs()) * 10.0);
+        // Cost accounting: bounds + outer·(degree+1) operator applications.
+        assert_eq!(
+            r.block_applies,
+            r.outer_iters * (opts.filter_degree + 1) + estimate_applies(n, &opts)
+        );
+        assert!(r.matvecs >= r.block_applies);
+    }
+
+    fn estimate_applies(n: usize, opts: &ChebDavOptions) -> usize {
+        // The bound estimator runs at most bound_steps (≥2) Lanczos steps.
+        opts.bound_steps.clamp(2, n)
+    }
+
+    #[test]
+    fn ritz_pairs_satisfy_residual_bound() {
+        let n = 25;
+        let a = random_symmetric(n, 77);
+        let k = 4;
+        let opts = ChebDavOptions {
+            block_size: 8,
+            filter_degree: 10,
+            max_outer: 60,
+            tol: 1e-8,
+            ..Default::default()
+        };
+        let r = chebdav_smallest(n, k, &opts, dense_block_op(&a)).unwrap();
+        for c in 0..k {
+            let vc: Vec<f64> = (0..n).map(|i| r.eigenvectors[i][c]).collect();
+            let av = a.matvec(&vc);
+            for i in 0..n {
+                assert!(
+                    (av[i] - r.eigenvalues[c] * vc[i]).abs() < 1e-5,
+                    "residual c={c} i={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn laplacian_zero_eigenvalues_found() {
+        // Two disjoint triangles: eigenvalue 0 with multiplicity 2, then a
+        // gap — the shape the spectral embedding depends on.
+        let mut trips = vec![];
+        for base in [0usize, 3] {
+            for a in 0..3usize {
+                for b in 0..3usize {
+                    if a != b {
+                        trips.push((base + a, base + b, -1.0));
+                    }
+                }
+                trips.push((base + a, base + a, 2.0));
+            }
+        }
+        let l = CsrMatrix::from_triplets(6, 6, &trips).unwrap();
+        let opts = ChebDavOptions {
+            block_size: 4,
+            filter_degree: 6,
+            max_outer: 40,
+            tol: 1e-9,
+            ..Default::default()
+        };
+        let r =
+            chebdav_smallest(6, 3, &opts, |x, m| l.spmv_block_rows(x, m, 0, 6)).unwrap();
+        assert!(r.eigenvalues[0].abs() < 1e-7, "{:?}", r.eigenvalues);
+        assert!(r.eigenvalues[1].abs() < 1e-7, "{:?}", r.eigenvalues);
+        assert!(r.eigenvalues[2] > 1.0, "{:?}", r.eigenvalues);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = random_symmetric(20, 5);
+        let opts = ChebDavOptions {
+            block_size: 6,
+            filter_degree: 8,
+            max_outer: 10,
+            seed: 9,
+            ..Default::default()
+        };
+        let r1 = chebdav_smallest(20, 3, &opts, dense_block_op(&a)).unwrap();
+        let r2 = chebdav_smallest(20, 3, &opts, dense_block_op(&a)).unwrap();
+        assert_eq!(r1.eigenvalues, r2.eigenvalues);
+        assert_eq!(r1.eigenvectors, r2.eigenvectors);
+        assert_eq!(r1.block_applies, r2.block_applies);
+    }
+
+    #[test]
+    fn rejects_bad_arguments() {
+        let noop = |x: &[f64], _m: usize| x.to_vec();
+        assert!(chebdav_smallest(5, 0, &Default::default(), noop).is_err());
+        assert!(chebdav_smallest(5, 6, &Default::default(), noop).is_err());
+        let opts = ChebDavOptions { filter_degree: 0, ..Default::default() };
+        assert!(chebdav_smallest(5, 2, &opts, noop).is_err());
+        let opts = ChebDavOptions { max_outer: 0, ..Default::default() };
+        assert!(chebdav_smallest(5, 2, &opts, noop).is_err());
+    }
+
+    #[test]
+    fn degenerate_spectrum_converges_immediately() {
+        // A = 3·I: every direction is an eigenvector; the artificial span
+        // widening must keep the filter finite and RR exact.
+        let n = 12;
+        let r = chebdav_smallest(
+            n,
+            2,
+            &ChebDavOptions::default(),
+            |x: &[f64], _m: usize| x.iter().map(|v| 3.0 * v).collect(),
+        )
+        .unwrap();
+        assert!((r.eigenvalues[0] - 3.0).abs() < 1e-9);
+        assert!((r.eigenvalues[1] - 3.0).abs() < 1e-9);
+        assert_eq!(r.outer_iters, 1);
+    }
+}

@@ -7,7 +7,11 @@
 //! - [`lanczos::lanczos_smallest`] — paper Alg. 4.3 with reorthogonalization,
 //!   matrix accessed only through a mat-vec closure so the distributed
 //!   pipeline can plug in a MapReduce job.
+//! - [`chebdav::chebdav_smallest`] — block Chebyshev–Davidson (filtered
+//!   subspace iteration + Rayleigh–Ritz), matrix accessed through a block
+//!   mat-vec closure so one distributed job prices all m columns at once.
 
+pub mod chebdav;
 pub mod dense;
 pub mod jacobi;
 pub mod lanczos;
@@ -15,6 +19,9 @@ pub mod sparse;
 pub mod tridiag;
 pub mod vector;
 
+pub use chebdav::{
+    chebdav_smallest, estimate_spectrum_bounds, ChebDavOptions, ChebDavResult, SpectrumBounds,
+};
 pub use dense::DenseMatrix;
 pub use jacobi::jacobi_eigen;
 pub use lanczos::{lanczos_smallest, LanczosOptions, LanczosResult};

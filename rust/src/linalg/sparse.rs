@@ -132,6 +132,63 @@ impl CsrMatrix {
         y
     }
 
+    /// Block spmv restricted to a row range: `Y[lo..hi) = A[lo..hi) · X`
+    /// for an n×m column block. `x` is row-major (`x[j*m + c]` is row `j`,
+    /// column `c` — the layout of the coordinator's multi-vector table
+    /// records); the result is row-major `(hi-lo)×m`.
+    ///
+    /// The inner loop is the 4-way unrolled multi-accumulator shape of
+    /// [`super::vector::dot`] lifted to `m` columns: `NUM_ACC` lanes of
+    /// m-wide scratch accumulate the row's stored entries, an explicit tail
+    /// lane takes the 0..3 leftovers, and each output folds through the
+    /// fixed tree `((l0+l1)+(l2+l3)) + tail`. Every output row depends only
+    /// on that row's entries and `x` — never on `[lo, hi)` — so any task
+    /// partitioning of the row space reassembles bit-identically to the
+    /// single-machine call over `[0, n)`. The distributed ChebDav job and
+    /// its oracle rely on exactly this.
+    pub fn spmv_block_rows(&self, x: &[f64], m: usize, lo: usize, hi: usize) -> Vec<f64> {
+        use super::vector::NUM_ACC;
+        assert!(lo <= hi && hi <= self.rows);
+        assert!(m > 0, "spmv_block_rows needs at least one column");
+        assert_eq!(x.len(), self.cols * m, "spmv_block dimension mismatch");
+        let mut y = vec![0.0f64; (hi - lo) * m];
+        // NUM_ACC unroll lanes + 1 tail lane, each m wide, reused per row.
+        let mut acc = vec![0.0f64; (NUM_ACC + 1) * m];
+        for i in lo..hi {
+            for a in acc.iter_mut() {
+                *a = 0.0;
+            }
+            let end = self.indptr[i + 1];
+            let mut k = self.indptr[i];
+            while k + NUM_ACC <= end {
+                for lane in 0..NUM_ACC {
+                    let v = self.values[k + lane];
+                    let xo = self.indices[k + lane] as usize * m;
+                    let ao = lane * m;
+                    for c in 0..m {
+                        acc[ao + c] += v * x[xo + c];
+                    }
+                }
+                k += NUM_ACC;
+            }
+            while k < end {
+                let v = self.values[k];
+                let xo = self.indices[k] as usize * m;
+                let ao = NUM_ACC * m;
+                for c in 0..m {
+                    acc[ao + c] += v * x[xo + c];
+                }
+                k += 1;
+            }
+            let yo = (i - lo) * m;
+            for c in 0..m {
+                y[yo + c] = ((acc[c] + acc[m + c]) + (acc[2 * m + c] + acc[3 * m + c]))
+                    + acc[NUM_ACC * m + c];
+            }
+        }
+        y
+    }
+
     /// Row sums (degrees when self is a similarity/adjacency matrix).
     pub fn row_sums(&self) -> Vec<f64> {
         (0..self.rows)
@@ -230,6 +287,57 @@ mod tests {
         let mut pieced = m.spmv_rows(&x, 0, 1);
         pieced.extend(m.spmv_rows(&x, 1, 3));
         assert_eq!(pieced, full);
+    }
+
+    #[test]
+    fn spmv_block_rows_matches_per_column_spmv() {
+        let m = sample();
+        // 2-column block, row-major: column 0 = [1,2,3], column 1 = [0.5,-1,2].
+        let x = vec![1.0, 0.5, 2.0, -1.0, 3.0, 2.0];
+        let y = m.spmv_block_rows(&x, 2, 0, 3);
+        let c0 = m.spmv(&[1.0, 2.0, 3.0]);
+        let c1 = m.spmv(&[0.5, -1.0, 2.0]);
+        for r in 0..3 {
+            assert_eq!(y[2 * r], c0[r], "col 0 row {r}");
+            assert_eq!(y[2 * r + 1], c1[r], "col 1 row {r}");
+        }
+    }
+
+    #[test]
+    fn spmv_block_rows_partitions_reassemble_bitwise() {
+        // Long rows (nnz > NUM_ACC) on a wider matrix so both the unrolled
+        // body and the tail lane are exercised; any row partitioning must
+        // reassemble bit-identically to the full call.
+        let n = 23;
+        let rows: Vec<Vec<(u32, f64)>> = (0..n)
+            .map(|i| {
+                (0..n)
+                    .filter(|j| (i + j) % 3 != 1)
+                    .map(|j| (j as u32, ((i * 31 + j * 17) % 13) as f64 * 0.37 - 1.1))
+                    .collect()
+            })
+            .collect();
+        let a = CsrMatrix::from_rows(n, rows);
+        let m = 3;
+        let x: Vec<f64> = (0..n * m).map(|i| (i as f64 * 0.61).sin()).collect();
+        let full = a.spmv_block_rows(&x, m, 0, n);
+        let mut pieced = a.spmv_block_rows(&x, m, 0, 7);
+        pieced.extend(a.spmv_block_rows(&x, m, 7, 8));
+        pieced.extend(a.spmv_block_rows(&x, m, 8, n));
+        let bits = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&pieced), bits(&full));
+    }
+
+    #[test]
+    fn spmv_block_rows_single_column_close_to_spmv() {
+        // m=1 agrees with the scalar spmv up to reduction-order rounding.
+        let m = sample();
+        let x = vec![0.5, -1.0, 2.0];
+        let y = m.spmv_block_rows(&x, 1, 0, 3);
+        let reference = m.spmv(&x);
+        for r in 0..3 {
+            assert!((y[r] - reference[r]).abs() < 1e-12, "row {r}");
+        }
     }
 
     #[test]

@@ -1,9 +1,46 @@
-//! Dense vector primitives used by the Lanczos iteration and k-means.
+//! Dense vector primitives used by the eigensolvers and k-means.
+//!
+//! [`dot`], [`axpy`] and the block mat-vec inner loop
+//! ([`super::sparse::CsrMatrix::spmv_block_rows`]) are 4-way unrolled with
+//! independent accumulator lanes: the unrolling breaks the sequential
+//! floating-point dependency chain, and the lanes fold through a **fixed
+//! reduction tree** `((acc0+acc1)+(acc2+acc3)) + tail`, so the result is a
+//! pure function of the input lengths and values — the same everywhere the
+//! kernel runs. That determinism is what lets the distributed eigen phase
+//! and its single-machine oracle compare byte-for-byte.
+//!
+//! [`sq_dist`]/[`sq_dist_bounded`] deliberately stay sequential: their
+//! documented contract is that a completed bounded scan is bit-identical to
+//! the unbounded one, which requires identical (left-to-right) accumulation
+//! order in both.
 
-/// Dot product.
+/// Accumulator lanes in the unrolled kernels. The unrolled bodies and the
+/// final reduction trees hardcode 4 where they mean `NUM_ACC`; the constant
+/// documents intent and sizes the scratch in the block mat-vec.
+pub const NUM_ACC: usize = 4;
+
+/// Dot product. 4-way unrolled multi-accumulator with an explicit tail:
+/// lanes are summed through a fixed tree, the 0..3 leftover elements
+/// accumulate separately and fold in last, so the reduction order depends
+/// only on `a.len()` — deterministic across every call site.
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
+    let len = a.len();
+    let (mut acc0, mut acc1, mut acc2, mut acc3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut i = 0;
+    while i + NUM_ACC <= len {
+        acc0 += a[i] * b[i];
+        acc1 += a[i + 1] * b[i + 1];
+        acc2 += a[i + 2] * b[i + 2];
+        acc3 += a[i + 3] * b[i + 3];
+        i += NUM_ACC;
+    }
+    let mut tail = 0.0f64;
+    while i < len {
+        tail += a[i] * b[i];
+        i += 1;
+    }
+    ((acc0 + acc1) + (acc2 + acc3)) + tail
 }
 
 /// Euclidean norm.
@@ -11,11 +48,23 @@ pub fn norm(a: &[f64]) -> f64 {
     dot(a, a).sqrt()
 }
 
-/// y += alpha * x.
+/// y += alpha * x. 4-way unrolled with an explicit tail; each element is
+/// updated independently, so the result is bit-identical to the scalar
+/// loop by construction.
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
+    let len = x.len();
+    let mut i = 0;
+    while i + NUM_ACC <= len {
+        y[i] += alpha * x[i];
+        y[i + 1] += alpha * x[i + 1];
+        y[i + 2] += alpha * x[i + 2];
+        y[i + 3] += alpha * x[i + 3];
+        i += NUM_ACC;
+    }
+    while i < len {
+        y[i] += alpha * x[i];
+        i += 1;
     }
 }
 
@@ -88,6 +137,72 @@ mod tests {
         let mut z = vec![0.0, 0.0];
         assert_eq!(normalize(&mut z), 0.0);
         assert_eq!(z, vec![0.0, 0.0]);
+    }
+
+    /// Scalar reference implementations: what `dot`/`axpy` looked like
+    /// before unrolling. The unrolled `axpy` must match bitwise for any
+    /// length (element-wise update, order unchanged); the unrolled `dot`
+    /// must be deterministic and exact on integer-valued inputs.
+    fn dot_scalar(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    fn axpy_scalar(alpha: f64, x: &[f64], y: &mut [f64]) {
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += alpha * xi;
+        }
+    }
+
+    fn pseudo(seed: u64, len: usize) -> Vec<f64> {
+        let mut s = seed;
+        (0..len)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (s >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn unrolled_dot_handles_every_tail_length() {
+        // Integer-valued inputs are exact in f64, so every summation order
+        // gives the same answer — the unrolled kernel must hit it for all
+        // tail lengths 0..NUM_ACC around several multiples of the stride.
+        for len in 0..=13 {
+            let a: Vec<f64> = (0..len).map(|i| (i + 1) as f64).collect();
+            let b: Vec<f64> = (0..len).map(|i| (2 * i) as f64 - 3.0).collect();
+            assert_eq!(dot(&a, &b), dot_scalar(&a, &b), "len={len}");
+        }
+    }
+
+    #[test]
+    fn unrolled_dot_is_deterministic_and_close_to_scalar() {
+        for len in [1usize, 3, 4, 5, 8, 17, 256, 1001] {
+            let a = pseudo(0x5eed ^ len as u64, len);
+            let b = pseudo(0xbeef ^ len as u64, len);
+            let d1 = dot(&a, &b);
+            let d2 = dot(&a, &b);
+            assert_eq!(d1.to_bits(), d2.to_bits(), "determinism len={len}");
+            let reference = dot_scalar(&a, &b);
+            let scale = 1.0 + reference.abs();
+            assert!(
+                (d1 - reference).abs() <= 1e-12 * scale,
+                "len={len}: {d1} vs {reference}"
+            );
+        }
+    }
+
+    #[test]
+    fn unrolled_axpy_is_bit_identical_to_scalar() {
+        for len in [0usize, 1, 3, 4, 5, 8, 17, 256, 1001] {
+            let x = pseudo(0xabc ^ len as u64, len);
+            let mut y1 = pseudo(0xdef ^ len as u64, len);
+            let mut y2 = y1.clone();
+            axpy(-0.3721, &x, &mut y1);
+            axpy_scalar(-0.3721, &x, &mut y2);
+            let bits = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&y1), bits(&y2), "len={len}");
+        }
     }
 
     #[test]

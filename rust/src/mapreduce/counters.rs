@@ -93,6 +93,15 @@ pub mod names {
     pub const KNN_PRUNED_PAIRS: &str = "KNN_PRUNED_PAIRS";
     /// Neighbors displaced from full top-t heaps during t-NN queries.
     pub const KNN_HEAP_EVICTIONS: &str = "KNN_HEAP_EVICTIONS";
+    /// Jobs the eigen phase launched (Laplacian build + every operator
+    /// application) — the quantity the ChebDav backend exists to shrink.
+    pub const EIGEN_JOBS: &str = "EIGEN_JOBS";
+    /// Mat-vecs priced across the eigen phase's operator jobs: 1 per
+    /// lanczos mat-vec job, m per ChebDav block job (Σ block widths).
+    pub const MATVECS_BATCHED: &str = "MATVECS_BATCHED";
+    /// Chebyshev filter degree the ChebDav backend ran with (0 under
+    /// lanczos — the counter doubles as the backend marker in reports).
+    pub const CHEB_FILTER_DEGREE: &str = "CHEB_FILTER_DEGREE";
 }
 
 impl Counters {

@@ -9,7 +9,7 @@ use std::time::{Duration, Instant};
 
 use crate::mapreduce::{names, Counters};
 
-pub use report::{render_run, FaultSummary, KnnSummary, ShuffleSummary};
+pub use report::{render_run, EigenSummary, FaultSummary, KnnSummary, ShuffleSummary};
 
 /// Data-locality and speculation summary of one job or phase, derived from
 /// the counters the JobTracker feeds through the engine.

@@ -180,6 +180,61 @@ impl KnnSummary {
     }
 }
 
+/// Eigensolver summary of one job or phase: jobs launched by the eigen
+/// phase, mat-vecs priced across its operator jobs, and the Chebyshev
+/// filter degree (counter glossary in DESIGN.md §2.12). All-zero for
+/// non-eigen phases; `filter_degree` stays 0 under the lanczos backend,
+/// so it doubles as the backend marker.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EigenSummary {
+    /// Jobs the eigen phase launched (Laplacian build + operator jobs).
+    pub eigen_jobs: u64,
+    /// Mat-vecs priced across operator jobs (1 per lanczos step job, m
+    /// per ChebDav block job).
+    pub matvecs_batched: u64,
+    /// Chebyshev filter degree the run used (0 under lanczos).
+    pub filter_degree: u64,
+}
+
+impl EigenSummary {
+    /// Extract the summary from merged job counters.
+    pub fn from_counters(c: &Counters) -> Self {
+        Self {
+            eigen_jobs: c.get(names::EIGEN_JOBS),
+            matvecs_batched: c.get(names::MATVECS_BATCHED),
+            filter_degree: c.get(names::CHEB_FILTER_DEGREE),
+        }
+    }
+
+    /// Did an eigen phase run at all?
+    pub fn any(&self) -> bool {
+        *self != Self::default()
+    }
+
+    /// Mat-vecs amortized per launched job (0 when no jobs ran) — the
+    /// batching win the ChebDav backend exists for.
+    pub fn matvecs_per_job(&self) -> f64 {
+        if self.eigen_jobs == 0 {
+            0.0
+        } else {
+            self.matvecs_batched as f64 / self.eigen_jobs as f64
+        }
+    }
+
+    /// One-line human-readable rendering (counter names kept verbatim so
+    /// smoke runs are grep-able).
+    pub fn render(&self) -> String {
+        format!(
+            "EIGEN_JOBS={} MATVECS_BATCHED={} CHEB_FILTER_DEGREE={} \
+             matvecs/job={:.1}",
+            self.eigen_jobs,
+            self.matvecs_batched,
+            self.filter_degree,
+            self.matvecs_per_job(),
+        )
+    }
+}
+
 /// Render the complete human-readable run summary: the per-phase table,
 /// one `shuffle[phase]:` line per phase, `knn[phase]:` / `faults[phase]:`
 /// lines for phases where those subsystems acted, the quality line (when
@@ -229,6 +284,13 @@ pub fn render_run(result: &PipelineResult, quality: Option<(f64, f64)>) -> Strin
             out.push_str(&format!("knn[{}]: {}\n", p.name, k.render()));
         }
     }
+    // Eigensolver report: only the phase that ran an eigen backend.
+    for p in &result.phases {
+        let e = p.eigen_summary();
+        if e.any() {
+            out.push_str(&format!("eigen[{}]: {}\n", p.name, e.render()));
+        }
+    }
     // Per-phase fault report: only phases that saw the failure domain act.
     for p in &result.phases {
         let f = p.fault_summary();
@@ -267,6 +329,28 @@ mod tests {
         let empty = KnnSummary::from_counters(&Counters::default());
         assert!(!empty.any());
         assert_eq!(empty.pruned_ratio(), 0.0);
+    }
+
+    #[test]
+    fn eigen_summary_reads_all_counters() {
+        let mut c = Counters::default();
+        c.incr(names::EIGEN_JOBS, 40);
+        c.incr(names::MATVECS_BATCHED, 240);
+        c.incr(names::CHEB_FILTER_DEGREE, 8);
+        let s = EigenSummary::from_counters(&c);
+        assert_eq!(s.eigen_jobs, 40);
+        assert_eq!(s.matvecs_batched, 240);
+        assert_eq!(s.filter_degree, 8);
+        assert!(s.any());
+        assert!((s.matvecs_per_job() - 6.0).abs() < 1e-12);
+        let line = s.render();
+        assert!(line.contains("EIGEN_JOBS=40"), "{line}");
+        assert!(line.contains("MATVECS_BATCHED=240"), "{line}");
+        assert!(line.contains("CHEB_FILTER_DEGREE=8"), "{line}");
+        assert!(line.contains("matvecs/job=6.0"), "{line}");
+        let empty = EigenSummary::from_counters(&Counters::default());
+        assert!(!empty.any());
+        assert_eq!(empty.matvecs_per_job(), 0.0);
     }
 
     #[test]
@@ -349,6 +433,9 @@ mod tests {
             (names::KNN_PAIRS_EVALUATED, 14),
             (names::KNN_PRUNED_PAIRS, 15),
             (names::KNN_HEAP_EVICTIONS, 16),
+            (names::EIGEN_JOBS, 17),
+            (names::MATVECS_BATCHED, 18),
+            (names::CHEB_FILTER_DEGREE, 19),
         ];
         for &(name, v) in pairs {
             c.incr(name, v);
@@ -377,6 +464,11 @@ mod tests {
             (k.pairs_evaluated, k.pruned_pairs, k.heap_evictions),
             (14, 15, 16)
         );
+        let e = EigenSummary::from_counters(&c);
+        assert_eq!(
+            (e.eigen_jobs, e.matvecs_batched, e.filter_degree),
+            (17, 18, 19)
+        );
     }
 
     #[test]
@@ -389,6 +481,8 @@ mod tests {
         ];
         phases[0].jobs = 2;
         phases[0].counters.incr(names::KNN_PRUNED_PAIRS, 9);
+        phases[1].counters.incr(names::EIGEN_JOBS, 21);
+        phases[1].counters.incr(names::MATVECS_BATCHED, 42);
         phases[2].counters.incr(names::MAP_RERUNS, 1);
         let result = PipelineResult {
             labels: vec![0],
@@ -404,6 +498,9 @@ mod tests {
         assert!(!text.contains("knn[kmeans]:"), "{text}");
         assert!(text.contains("faults[kmeans]:"), "{text}");
         assert!(!text.contains("faults[similarity]:"), "{text}");
+        assert!(text.contains("eigen[eigenvectors]:"), "{text}");
+        assert!(text.contains("EIGEN_JOBS=21"), "{text}");
+        assert!(!text.contains("eigen[similarity]:"), "{text}");
         assert!(text.contains("quality: NMI=0.5000 ARI=0.2500"), "{text}");
         assert!(text.contains("similarity nnz: 7"), "{text}");
         assert!(text.contains("TOTAL"), "{text}");

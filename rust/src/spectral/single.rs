@@ -4,7 +4,9 @@
 
 use crate::error::Result;
 use crate::kmeans::{lloyd, Init};
-use crate::linalg::{jacobi_eigen, lanczos_smallest, LanczosOptions};
+use crate::linalg::{
+    chebdav_smallest, jacobi_eigen, lanczos_smallest, ChebDavOptions, LanczosOptions,
+};
 
 use super::laplacian::{laplacian_dense, laplacian_sparse};
 use super::similarity::{rbf_dense, rbf_sparse};
@@ -16,6 +18,9 @@ pub enum Eigensolver {
     DenseJacobi,
     /// Lanczos on the sparse Laplacian (single machine, no MapReduce).
     Lanczos,
+    /// Block Chebyshev–Davidson on the sparse Laplacian — the oracle for
+    /// the distributed chebdav backend (same solver, same block mat-vec).
+    ChebDav,
 }
 
 /// Parameters of a spectral clustering run.
@@ -40,6 +45,9 @@ pub struct SpectralParams {
     pub kmeans_tol: f64,
     /// Seed (Lanczos start vector, k-means init).
     pub seed: u64,
+    /// ChebDav knobs (block size, filter degree, outer-iteration cap);
+    /// only the [`Eigensolver::ChebDav`] path reads them.
+    pub eigen: crate::coordinator::eigen::EigenConfig,
 }
 
 impl Default for SpectralParams {
@@ -55,6 +63,7 @@ impl Default for SpectralParams {
             kmeans_iters: a.kmeans_iters,
             kmeans_tol: a.kmeans_tol,
             seed: a.seed,
+            eigen: crate::coordinator::eigen::EigenConfig::default(),
         }
     }
 }
@@ -128,6 +137,30 @@ pub fn spectral_cluster_points(
             let r = lanczos_smallest(n, params.k, &opts, |v| l.spmv(v))?;
             (r.eigenvalues, r.eigenvectors)
         }
+        Eigensolver::ChebDav => {
+            let s = match params.graph {
+                crate::knn::GraphMode::Epsilon => {
+                    rbf_sparse(points, params.sigma, params.epsilon)
+                }
+                crate::knn::GraphMode::Tnn => {
+                    crate::knn::tnn_sparse(points, params.sigma, &params.knn)
+                }
+            };
+            let l = laplacian_sparse(&s);
+            let e = &params.eigen;
+            let opts = ChebDavOptions {
+                block_size: e.block_size,
+                filter_degree: e.filter_degree,
+                max_outer: e.max_outer,
+                tol: e.residual_tol,
+                bound_steps: e.bound_steps,
+                seed: params.seed,
+            };
+            let r = chebdav_smallest(n, params.k, &opts, |x, m| {
+                l.spmv_block_rows(x, m, 0, n)
+            })?;
+            (r.eigenvalues, r.eigenvectors)
+        }
     };
     normalize_embedding(&mut z);
     let labels = cluster_embedding(
@@ -180,6 +213,31 @@ mod tests {
             let r = spectral_cluster_points(&ps.points, &params, solver).unwrap();
             let score = nmi(&ps.labels, &r.labels);
             assert!(score > 0.95, "{solver:?}: nmi={score}");
+        }
+    }
+
+    #[test]
+    fn chebdav_oracle_agrees_with_lanczos_on_blobs() {
+        let ps = gaussian_blobs(120, 3, 2, 0.3, 12.0, 3);
+        let params = SpectralParams {
+            k: 3,
+            sigma: 2.0,
+            eigen: crate::coordinator::eigen::EigenConfig {
+                max_outer: 12,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let cd =
+            spectral_cluster_points(&ps.points, &params, Eigensolver::ChebDav).unwrap();
+        let lz =
+            spectral_cluster_points(&ps.points, &params, Eigensolver::Lanczos).unwrap();
+        assert!(nmi(&ps.labels, &cd.labels) > 0.95, "chebdav oracle quality");
+        // Both solvers see the same Laplacian; the smallest eigenvalue of
+        // L_sym is 0 and the spectra must agree to solver tolerance.
+        assert!(cd.eigenvalues[0].abs() < 1e-6, "{:?}", cd.eigenvalues);
+        for (a, b) in cd.eigenvalues.iter().zip(&lz.eigenvalues) {
+            assert!((a - b).abs() < 1e-4, "chebdav {a} vs lanczos {b}");
         }
     }
 

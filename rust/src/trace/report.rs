@@ -9,10 +9,11 @@
 //!
 //! ```text
 //! { schema:   "psch.run_report.v1",
-//!   config:   { cluster{..} shuffle{..} faults{..} knn{..} algo{..} },
+//!   config:   { cluster{..} shuffle{..} faults{..} knn{..} algo{..}
+//!               eigen{..} },
 //!   phases:   [ { name, virtual_s, wall_s, jobs, shuffle_bytes,
 //!                 shuffle_fetch_s, locality{..}, shuffle{..}, faults{..},
-//!                 knn{..}, counters{NAME:value,..} } ],
+//!                 knn{..}, eigen{..}, counters{NAME:value,..} } ],
 //!   totals:   { virtual_s, wall_s, jobs, nnz },
 //!   quality:  { nmi, ari } | null,
 //!   trace:    { makespan_s, jobs, critical_path{..}, stragglers[..],
@@ -43,7 +44,9 @@ fn config_json(cfg: &Config) -> String {
          \"knn\":{{\"t\":{},\"leaf_size\":{}}},\
          \"algo\":{{\"k\":{},\"sigma\":{},\"epsilon\":{},\"graph\":\"{}\",\
          \"lanczos_steps\":{},\"kmeans_iters\":{},\"kmeans_tol\":{},\
-         \"seed\":{}}}}}",
+         \"seed\":{}}},\
+         \"eigen\":{{\"solver\":\"{}\",\"block_size\":{},\"filter_degree\":{},\
+         \"max_outer\":{},\"residual_tol\":{},\"bound_steps\":{}}}}}",
         c.slaves,
         c.slots_per_slave,
         c.replication,
@@ -68,6 +71,12 @@ fn config_json(cfg: &Config) -> String {
         a.kmeans_iters,
         num(a.kmeans_tol),
         a.seed,
+        cfg.eigen.solver.as_str(),
+        cfg.eigen.block_size,
+        cfg.eigen.filter_degree,
+        cfg.eigen.max_outer,
+        num(cfg.eigen.residual_tol),
+        cfg.eigen.bound_steps,
     )
 }
 
@@ -76,6 +85,7 @@ fn phase_json(p: &PhaseStats) -> String {
     let sh = p.shuffle_summary();
     let fa = p.fault_summary();
     let kn = p.knn_summary();
+    let ei = p.eigen_summary();
     let counters: Vec<String> =
         p.counters.iter().map(|(k, v)| format!("\"{}\":{v}", esc(k))).collect();
     format!(
@@ -92,6 +102,8 @@ fn phase_json(p: &PhaseStats) -> String {
          \"node_deaths\":{}}},\
          \"knn\":{{\"pairs_evaluated\":{},\"pruned_pairs\":{},\
          \"heap_evictions\":{}}},\
+         \"eigen\":{{\"jobs\":{},\"matvecs_batched\":{},\
+         \"filter_degree\":{}}},\
          \"counters\":{{{}}}}}",
         esc(&p.name),
         num(p.virtual_s),
@@ -121,6 +133,9 @@ fn phase_json(p: &PhaseStats) -> String {
         kn.pairs_evaluated,
         kn.pruned_pairs,
         kn.heap_evictions,
+        ei.eigen_jobs,
+        ei.matvecs_batched,
+        ei.filter_degree,
         counters.join(","),
     )
 }
@@ -242,6 +257,9 @@ mod tests {
         phases[0].jobs = 1;
         phases[0].counters.incr(names::DATA_LOCAL_MAPS, 4);
         phases[0].counters.incr(names::SPILLS, 2);
+        phases[1].counters.incr(names::EIGEN_JOBS, 13);
+        phases[1].counters.incr(names::MATVECS_BATCHED, 96);
+        phases[1].counters.incr(names::CHEB_FILTER_DEGREE, 8);
         PipelineResult {
             labels: vec![0, 1],
             eigenvalues: vec![0.0, 0.1],
@@ -290,6 +308,30 @@ mod tests {
             Some(Config::default().cluster.slaves as u64)
         );
         assert_eq!(v.get("totals").unwrap().get("nnz").unwrap().as_u64(), Some(42));
+        // Eigen family: per-phase summary object + config echo.
+        let eig = &phases[1];
+        assert_eq!(
+            eig.get("eigen").unwrap().get("jobs").unwrap().as_u64(),
+            Some(13)
+        );
+        assert_eq!(
+            eig.get("eigen").unwrap().get("matvecs_batched").unwrap().as_u64(),
+            Some(96)
+        );
+        assert_eq!(
+            eig.get("eigen").unwrap().get("filter_degree").unwrap().as_u64(),
+            Some(8)
+        );
+        let ecfg = v.get("config").unwrap().get("eigen").unwrap();
+        assert_eq!(ecfg.get("solver").unwrap().as_str(), Some("lanczos"));
+        assert_eq!(
+            ecfg.get("block_size").unwrap().as_u64(),
+            Some(Config::default().eigen.block_size as u64)
+        );
+        assert_eq!(
+            ecfg.get("filter_degree").unwrap().as_u64(),
+            Some(Config::default().eigen.filter_degree as u64)
+        );
     }
 
     #[test]

@@ -3,6 +3,7 @@
 use std::sync::Arc;
 
 use psch::config::Config;
+use psch::coordinator::eigen::EigenSolverKind;
 use psch::coordinator::{Driver, PipelineInput};
 use psch::data::gaussian_blobs;
 use psch::knn::{GraphMode, IndexKind};
@@ -36,6 +37,26 @@ fn shipped_configs_parse_and_validate() {
         assert_eq!(cfg.knn.leaf_size, 16, "{path}");
         assert_eq!(cfg.knn.index, IndexKind::KdTree, "{path}");
     }
+    // Every shipped config carries an [eigen] section that defaults to
+    // lanczos AND whose chebdav worst case undercuts its own lanczos job
+    // count, so --eigensolver chebdav is a strict job-count win as shipped.
+    for path in ["configs/paper.toml", "configs/quick.toml", "configs/chaos.toml"] {
+        let cfg = Config::load(path).unwrap();
+        assert_eq!(cfg.eigen.solver, EigenSolverKind::Lanczos, "{path}");
+        assert!(
+            cfg.eigen.max_operator_jobs() < 1 + cfg.algo.lanczos_steps,
+            "{path}: chebdav worst case {} must beat {} lanczos jobs",
+            cfg.eigen.max_operator_jobs(),
+            1 + cfg.algo.lanczos_steps,
+        );
+    }
+    assert_eq!(paper.eigen.block_size, 8);
+    assert_eq!(paper.eigen.filter_degree, 8);
+    assert_eq!(paper.eigen.max_outer, 5);
+    let quick = Config::load("configs/quick.toml").unwrap();
+    assert_eq!(quick.eigen.block_size, 6);
+    assert_eq!(quick.eigen.filter_degree, 6);
+    assert_eq!(quick.eigen.max_outer, 4);
 }
 
 #[test]
@@ -62,6 +83,36 @@ fn knn_keys_round_trip_through_parse_and_set() {
     assert_eq!(quick.algo.graph, GraphMode::Tnn);
     assert_eq!(quick.knn.t, 5);
     assert_eq!(quick.knn.leaf_size, 16, "file value survives the override");
+    assert_eq!(quick.cluster.slaves, 2);
+}
+
+#[test]
+fn eigen_keys_round_trip_through_parse_and_set() {
+    // File syntax (quoted + bare values) and CLI-style --set agree.
+    let text = "[eigen]\nsolver = \"chebdav\"\nblock_size = 5\nfilter_degree = 7\n\
+                max_outer = 3\nresidual_tol = 1e-5\nbound_steps = 2\n";
+    let parsed = Config::parse(text).unwrap();
+    let mut set = Config::default();
+    set.set("eigen.solver", "chebdav").unwrap();
+    set.set("eigen.block_size", "5").unwrap();
+    set.set("eigen.filter_degree", "7").unwrap();
+    set.set("eigen.max_outer", "3").unwrap();
+    set.set("eigen.residual_tol", "1e-5").unwrap();
+    set.set("eigen.bound_steps", "2").unwrap();
+    set.validate().unwrap();
+    assert_eq!(parsed, set);
+    assert_eq!(parsed.eigen.solver, EigenSolverKind::ChebDav);
+    assert_eq!(parsed.eigen.block_size, 5);
+    assert_eq!(parsed.eigen.max_operator_jobs(), 2 + 3 * 8);
+    // The paper-facing alias reaches the same field from a [algo] section.
+    let aliased = Config::parse("[algo]\neigensolver = \"chebdav\"\n").unwrap();
+    assert_eq!(aliased.eigen.solver, EigenSolverKind::ChebDav);
+    // A chebdav override on a shipped config keeps the file's other knobs.
+    let mut quick = Config::load("configs/quick.toml").unwrap();
+    quick.set("eigen.solver", "chebdav").unwrap();
+    quick.validate().unwrap();
+    assert_eq!(quick.eigen.solver, EigenSolverKind::ChebDav);
+    assert_eq!(quick.eigen.filter_degree, 6, "file value survives the override");
     assert_eq!(quick.cluster.slaves, 2);
 }
 

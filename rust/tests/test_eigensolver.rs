@@ -1,0 +1,234 @@
+//! Integration: the eigensolver layer — the chebdav backend against the
+//! lanczos backend (embedding parity, strictly fewer jobs), against the
+//! single-machine oracle, and against the failure domain (byte-identical
+//! output with faults on).
+
+use std::sync::Arc;
+
+use psch::config::Config;
+use psch::coordinator::eigen::EigenSolverKind;
+use psch::coordinator::{Driver, PipelineInput};
+use psch::data::gaussian_blobs;
+use psch::eval::nmi;
+use psch::linalg::{estimate_spectrum_bounds, jacobi_eigen};
+use psch::mapreduce::names;
+use psch::runtime::KernelRuntime;
+use psch::spectral::{laplacian_dense, laplacian_sparse, rbf_dense, rbf_sparse};
+
+fn native() -> Arc<KernelRuntime> {
+    Arc::new(KernelRuntime::native())
+}
+
+fn driver(cfg: Config) -> Driver {
+    Driver::new(cfg, native())
+}
+
+fn phase_counter(r: &psch::coordinator::PipelineResult, name: &str) -> u64 {
+    r.phases.iter().map(|p| p.counters.get(name)).sum()
+}
+
+/// Quick-shaped config with a selectable backend.
+fn cfg_with_solver(solver: EigenSolverKind) -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.slaves = 3;
+    cfg.algo.k = 4;
+    cfg.algo.sigma = 1.5;
+    cfg.eigen.solver = solver;
+    cfg
+}
+
+#[test]
+fn chebdav_embedding_parity_with_lanczos() {
+    // Both backends must cluster the same data equally well and agree on
+    // the spectrum: same Laplacian, same k smallest eigenvalues.
+    let ps = gaussian_blobs(300, 4, 8, 0.4, 8.0, 42);
+    let input = PipelineInput::Points { points: ps.points.clone() };
+    let lz = driver(cfg_with_solver(EigenSolverKind::Lanczos)).run(&input).unwrap();
+    let cd = driver(cfg_with_solver(EigenSolverKind::ChebDav)).run(&input).unwrap();
+    let lz_nmi = nmi(&ps.labels, &lz.labels);
+    let cd_nmi = nmi(&ps.labels, &cd.labels);
+    assert!(lz_nmi > 0.95, "lanczos quality: {lz_nmi}");
+    assert!(cd_nmi > 0.95, "chebdav quality: {cd_nmi}");
+    assert!(
+        (lz_nmi - cd_nmi).abs() < 0.05,
+        "backends must agree within tolerance: lanczos {lz_nmi} vs chebdav {cd_nmi}"
+    );
+    assert!(cd.eigenvalues[0].abs() < 1e-6, "{:?}", cd.eigenvalues);
+    for (a, b) in lz.eigenvalues.iter().zip(&cd.eigenvalues) {
+        assert!((a - b).abs() < 1e-5, "spectra differ: {a} vs {b}");
+    }
+}
+
+#[test]
+fn chebdav_launches_strictly_fewer_eigen_jobs_at_paper_config() {
+    // The tentpole claim: O(outer iterations) jobs instead of O(steps).
+    // Static bound first — the paper config's worst case is already a
+    // strict win (1 Laplacian + bound_steps + max_outer·(degree+1) jobs
+    // vs 1 + lanczos_steps).
+    let paper = Config::load("configs/paper.toml").unwrap();
+    assert!(
+        1 + paper.eigen.max_operator_jobs() < 1 + paper.algo.lanczos_steps,
+        "paper [eigen] knobs must undercut {} lanczos jobs, got worst case {}",
+        1 + paper.algo.lanczos_steps,
+        1 + paper.eigen.max_operator_jobs(),
+    );
+
+    // Then measured: both backends at the paper's algo settings (scaled-
+    // down cluster + n to keep the test fast).
+    let ps = gaussian_blobs(512, paper.algo.k, 8, 0.4, 8.0, paper.algo.seed);
+    let input = PipelineInput::Points { points: ps.points.clone() };
+    let mut lz_cfg = paper.clone();
+    lz_cfg.cluster.slaves = 4;
+    lz_cfg.eigen.solver = EigenSolverKind::Lanczos;
+    let mut cd_cfg = lz_cfg.clone();
+    cd_cfg.eigen.solver = EigenSolverKind::ChebDav;
+    let lz = driver(lz_cfg).run(&input).unwrap();
+    let cd = driver(cd_cfg).run(&input).unwrap();
+    let (lz_jobs, cd_jobs) = (lz.phases[1].jobs, cd.phases[1].jobs);
+    assert!(
+        cd_jobs < lz_jobs,
+        "chebdav must launch strictly fewer eigen jobs: {cd_jobs} vs {lz_jobs}"
+    );
+    // The counters tell the same story, and batching is real: more
+    // mat-vecs priced per job than jobs launched.
+    let cd_eigen = cd.phases[1].eigen_summary();
+    assert_eq!(cd_eigen.eigen_jobs, cd_jobs as u64);
+    assert!(cd_eigen.matvecs_batched > cd_eigen.eigen_jobs);
+    assert_eq!(cd_eigen.filter_degree, 8);
+    let lz_eigen = lz.phases[1].eigen_summary();
+    assert_eq!(lz_eigen.filter_degree, 0, "lanczos runs unfiltered");
+    // And quality does not pay for the job reduction.
+    assert!(nmi(&ps.labels, &cd.labels) > 0.95);
+}
+
+#[test]
+fn explain_plan_prices_chebdav_batching() {
+    let mut cfg = cfg_with_solver(EigenSolverKind::ChebDav);
+    cfg.algo.lanczos_steps = 60;
+    let max_jobs = cfg.eigen.max_operator_jobs();
+    assert!(max_jobs < 1 + cfg.algo.lanczos_steps);
+    let ps = gaussian_blobs(120, 4, 8, 0.4, 8.0, 42);
+    let d = driver(cfg);
+    let plan = d
+        .explain_plan(&PipelineInput::Points { points: ps.points.clone() })
+        .unwrap();
+    assert!(plan.contains("solver: chebdav"), "{plan}");
+    assert!(plan.contains("columns per job"), "{plan}");
+    assert!(
+        plan.contains(&format!("= {max_jobs} operator jobs")),
+        "plan must price the worst-case job count:\n{plan}"
+    );
+    // The lanczos plan for the same input advertises the per-step launch.
+    let mut lz_cfg = cfg_with_solver(EigenSolverKind::Lanczos);
+    lz_cfg.algo.lanczos_steps = 60;
+    let lz_plan = driver(lz_cfg)
+        .explain_plan(&PipelineInput::Points { points: ps.points })
+        .unwrap();
+    assert!(lz_plan.contains("solver: lanczos"), "{lz_plan}");
+    assert!(!lz_plan.contains("columns per job"), "{lz_plan}");
+}
+
+#[test]
+fn distributed_chebdav_matches_single_machine_oracle() {
+    // The distributed block mat-vec reassembles bitwise to the oracle's
+    // spmv_block_rows (unit-tested at the pipeline layer); end to end the
+    // runs differ only through the f32 point shipping in phase 1, so the
+    // spectra agree to similarity-graph precision and the partitions match.
+    let ps = gaussian_blobs(300, 4, 8, 0.4, 8.0, 42);
+    let dist = driver(cfg_with_solver(EigenSolverKind::ChebDav))
+        .run(&PipelineInput::Points { points: ps.points.clone() })
+        .unwrap();
+    let params = psch::spectral::SpectralParams {
+        k: 4,
+        sigma: 1.5,
+        ..Default::default()
+    };
+    let oracle = psch::spectral::spectral_cluster_points(
+        &ps.points,
+        &params,
+        psch::spectral::Eigensolver::ChebDav,
+    )
+    .unwrap();
+    let agreement = nmi(&oracle.labels, &dist.labels);
+    assert!(agreement > 0.95, "oracle vs distributed partitions: {agreement}");
+    for (a, b) in oracle.eigenvalues.iter().zip(&dist.eigenvalues) {
+        assert!((a - b).abs() < 1e-3, "oracle {a} vs distributed {b}");
+    }
+}
+
+#[test]
+fn chebdav_is_byte_deterministic_under_faults() {
+    // The chaos satellite: a chebdav run with seeded attempt failures AND
+    // a mid-run node death must produce byte-identical output to the
+    // fault-free run — reruns of row-independent block mat-vec tasks
+    // reassemble to the same bytes.
+    let mut base = Config::load("configs/quick.toml").unwrap();
+    base.cluster.slaves = 3;
+    base.eigen.solver = EigenSolverKind::ChebDav;
+    base.validate().unwrap();
+    let ps = gaussian_blobs(400, base.algo.k, 4, 0.3, 10.0, 3);
+    let input = PipelineInput::Points { points: ps.points.clone() };
+
+    let clean = driver(base.clone()).run(&input).unwrap();
+
+    let mut chaos_cfg = base;
+    chaos_cfg.faults.task_fail_prob = 0.04;
+    chaos_cfg.faults.seed = 9;
+    chaos_cfg.set("faults.fail_node", "1@6").unwrap();
+    chaos_cfg.validate().unwrap();
+    let chaos = driver(chaos_cfg).run(&input).unwrap();
+
+    assert_eq!(clean.labels, chaos.labels);
+    assert_eq!(clean.eigenvalues, chaos.eigenvalues, "bitwise spectrum");
+    assert_eq!(clean.nnz, chaos.nnz);
+    // The failure domain demonstrably acted on the chaos run.
+    assert!(
+        phase_counter(&chaos, names::FAILED_MAP_ATTEMPTS)
+            + phase_counter(&chaos, names::FAILED_REDUCE_ATTEMPTS)
+            > 0,
+        "seeded failures must fail something"
+    );
+    assert!(
+        phase_counter(&chaos, names::NODE_DEATHS) >= 1,
+        "the scheduled death must fire mid-run"
+    );
+    // Same backend marker on both runs.
+    assert!(phase_counter(&clean, names::CHEB_FILTER_DEGREE) > 0);
+    assert_eq!(
+        phase_counter(&clean, names::CHEB_FILTER_DEGREE),
+        phase_counter(&chaos, names::CHEB_FILTER_DEGREE)
+    );
+}
+
+#[test]
+fn spectrum_bound_estimator_brackets_the_laplacian() {
+    // The bounds the Chebyshev filter depends on: lower inside the
+    // spectrum, upper at or above the top eigenvalue (the filter damps
+    // [a, upper]; an upper below λmax would amplify the top of the
+    // spectrum instead).
+    let ps = gaussian_blobs(60, 3, 4, 0.4, 8.0, 7);
+    let dense_l = laplacian_dense(&rbf_dense(&ps.points, 1.5));
+    let (true_vals, _) = jacobi_eigen(&dense_l).unwrap();
+    let (lo_true, hi_true) = (true_vals[0], *true_vals.last().unwrap());
+
+    let s = rbf_sparse(&ps.points, 1.5, 1e-8);
+    let l = laplacian_sparse(&s);
+    let n = 60;
+    let mut op = |x: &[f64], m: usize| l.spmv_block_rows(x, m, 0, n);
+    let b = estimate_spectrum_bounds(n, 4, 0x5eed, &mut op).unwrap();
+    // Slack covers the dense-vs-sparse graph difference (entries below
+    // epsilon are dropped on the sparse side).
+    assert!(b.lower <= b.upper);
+    assert!(
+        b.lower >= lo_true - 1e-4,
+        "lower bound left the spectrum: {} < {lo_true}",
+        b.lower
+    );
+    assert!(
+        b.upper >= hi_true - 1e-4,
+        "upper bound must dominate the top eigenvalue: {} < {hi_true}",
+        b.upper
+    );
+    assert!(b.lower <= hi_true, "lower bound above the whole spectrum");
+    assert_eq!(b.steps, 4);
+}
