@@ -73,7 +73,7 @@ fn head_to_head(
     let input = PipelineInput::Points { points: ps.points.clone() };
 
     // Oracle residual on the identical graph.
-    let s = rbf_sparse(&ps.points, cfg.algo.sigma, cfg.algo.epsilon);
+    let s = rbf_sparse(&ps.points, cfg.algo.sigma.fixed().unwrap(), cfg.algo.epsilon);
     let l = laplacian_sparse(&s);
     let resid = match kind {
         EigenSolverKind::Lanczos => {

@@ -1,0 +1,139 @@
+//! Experiment A6 — serving-layer ablation.
+//!
+//! Trains one paper-calibrated pipeline, captures the model artifact, then
+//! assigns a held-out stream through the distributed Nyström path at
+//! several batch sizes (plus a mini-batch-refresh run). Per setting it
+//! reports batches launched, virtual seconds under the cost model and the
+//! assignment throughput in points/s, checks the distributed labels
+//! against the single-machine oracle, and emits `BENCH_serving.json`.
+//! PASS requires oracle/distributed agreement everywhere and larger
+//! batches to amortize job setup into higher points/s.
+
+mod common;
+
+use psch::coordinator::{Driver, PipelineInput};
+use psch::data::gaussian_blobs;
+use psch::eval::nmi;
+use psch::metrics::table::AsciiTable;
+use psch::serving::{
+    assign_stream_oracle, run_assign, ModelArtifact, RefreshMode, ServingConfig,
+};
+
+fn main() {
+    let runtime = common::runtime();
+    // Train once at the Table 5-1 calibration (4 slaves) with a landmark
+    // budget, the realistic serving setting.
+    let mut cfg = common::calibrated_config(4);
+    cfg.serving.landmarks = 128;
+    let n_train = 1024usize;
+    let ps = gaussian_blobs(n_train, cfg.algo.k, 8, 0.4, 8.0, cfg.algo.seed);
+    let driver = Driver::new(cfg.clone(), runtime.clone());
+    let result = driver
+        .run(&PipelineInput::Points { points: ps.points.clone() })
+        .unwrap();
+    let model =
+        ModelArtifact::from_run(driver.config(), &ps.points, &result).unwrap();
+    println!(
+        "trained: n={n_train}, k={}, {} landmarks, sigma={:.3}",
+        model.k,
+        model.m(),
+        model.sigma
+    );
+
+    // A held-out stream from a different seed.
+    let n_stream = 2048usize;
+    let held = gaussian_blobs(n_stream, cfg.algo.k, 8, 0.4, 8.0, cfg.algo.seed + 1);
+    let flat: Vec<f64> = held.points.iter().flatten().copied().collect();
+
+    let mut table = AsciiTable::new(&[
+        "batch", "refresh", "batches", "virtual", "points/s", "NMI",
+    ]);
+    let mut blocks = Vec::new();
+    let mut rates = Vec::new();
+    for (batch, refresh) in [
+        (128usize, RefreshMode::Off),
+        (256, RefreshMode::Off),
+        (512, RefreshMode::Off),
+        (256, RefreshMode::Minibatch),
+    ] {
+        let scfg = ServingConfig {
+            landmarks: cfg.serving.landmarks,
+            batch_points: batch,
+            refresh,
+        };
+        let services = driver.services();
+        let run = run_assign(&services, &model, &flat, &scfg).unwrap();
+        let oracle = assign_stream_oracle(&model, &flat, &scfg).unwrap();
+        assert_eq!(
+            run.labels, oracle.labels,
+            "batch={batch}/{}: distributed must match the oracle",
+            refresh.as_str()
+        );
+        let s = run.stats.serving_summary();
+        let rate = n_stream as f64 / run.stats.virtual_s;
+        let quality = nmi(&held.labels, &run.labels);
+        assert!(
+            quality > 0.9,
+            "batch={batch}: held-out assignment degraded, NMI={quality:.3}"
+        );
+        if refresh == RefreshMode::Off {
+            rates.push((batch, rate));
+        } else {
+            assert!(s.refresh_updates > 0, "refresh run must apply updates");
+        }
+        table.row(&[
+            batch.to_string(),
+            refresh.as_str().to_string(),
+            s.batches.to_string(),
+            format!("{:.0}s", run.stats.virtual_s),
+            format!("{rate:.2}"),
+            format!("{quality:.3}"),
+        ]);
+        blocks.push(format!(
+            "{{\"batch_points\":{batch},\"refresh\":\"{}\",\"batches\":{},\
+             \"refresh_updates\":{},\"virtual_s\":{:.3},\
+             \"points_per_s\":{:.3},\"nmi\":{:.4}}}",
+            refresh.as_str(),
+            s.batches,
+            s.refresh_updates,
+            run.stats.virtual_s,
+            rate,
+            quality,
+        ));
+    }
+    println!("A6 serving ablation (stream n={n_stream}):\n{}", table.render());
+
+    // Bigger batches amortize per-pipeline job setup: throughput must rise
+    // monotonically over the refresh-off sweep.
+    for w in rates.windows(2) {
+        assert!(
+            w[1].1 > w[0].1,
+            "points/s should grow with batch size: {rates:?}"
+        );
+    }
+
+    common::write_bench_json(
+        "BENCH_serving.json",
+        &format!(
+            "{{\"bench\":\"serving\",\"n_train\":{n_train},\
+             \"n_stream\":{n_stream},\"landmarks\":{},\"sigma\":{:.6},\
+             \"runs\":[{}]}}\n",
+            model.m(),
+            model.sigma,
+            blocks.join(",")
+        ),
+    );
+
+    let (best_batch, best_rate) =
+        rates.iter().copied().fold((0usize, 0.0f64), |acc, r| {
+            if r.1 > acc.1 {
+                r
+            } else {
+                acc
+            }
+        });
+    println!(
+        "ablation_serving: PASS — oracle/distributed agree on all runs; \
+         best {best_rate:.1} points/s at batch={best_batch}"
+    );
+}

@@ -25,7 +25,7 @@ pub fn calibrated_config(m: usize) -> Config {
     cfg.cluster.slaves = m;
     cfg.cluster.slots_per_slave = 2; // paper §4.4: two map slots per machine
     cfg.algo.k = 4;
-    cfg.algo.sigma = 1.5;
+    cfg.algo.sigma = 1.5.into();
     cfg.algo.epsilon = 1e-8;
     cfg.algo.lanczos_steps = 60;
     cfg.algo.kmeans_iters = 20;

@@ -13,7 +13,15 @@
 //!                 [--trace-out FILE] write a Chrome trace-event JSON
 //!                                    (Perfetto-loadable, virtual clock)
 //!                 [--report-json FILE]  write the unified RunReport JSON
+//!                 [--model-out FILE] persist the trained model artifact
+//!                                    (psch.model.v1 JSON) for `psch assign`
 //!                 [--quiet]          suppress the per-phase summary lines
+//! psch assign     --model FILE       assign new points with a saved model
+//!                 [--points FILE | --blobs N [--batch-seed S]]
+//!                 [--batch B]        points per serving batch
+//!                 [--refresh off|minibatch]  mini-batch centroid refresh
+//!                 [--oracle]         single-machine path (byte-identical)
+//!                 [--labels-out FILE] [--model-out FILE] [--quiet]
 //! psch baseline   [--blobs N] [--config FILE]   single-machine comparator
 //! psch scale-study [--n N] [--slaves 1,2,4,6,8,10] [--config FILE]
 //! psch inspect-artifacts [--dir DIR]
@@ -43,7 +51,8 @@ impl Flags {
     /// Flags that are boolean switches: bare `--flag` parses as `"true"`.
     /// Every other flag still requires a value (a forgotten value stays a
     /// hard error instead of silently becoming the string `"true"`).
-    const BOOL_FLAGS: &'static [&'static str] = &["explain-plan", "quiet"];
+    const BOOL_FLAGS: &'static [&'static str] =
+        &["explain-plan", "quiet", "oracle"];
 
     /// Parse `--key value` / `--set k=v` arguments; switches listed in
     /// [`Self::BOOL_FLAGS`] may appear bare (e.g. `--explain-plan`).
@@ -123,6 +132,7 @@ pub fn run(args: &[String]) -> Result<i32> {
     match cmd.as_str() {
         "gen-data" => cmd_gen_data(&flags),
         "run" => cmd_run(&flags),
+        "assign" => cmd_assign(&flags),
         "baseline" => cmd_baseline(&flags),
         "scale-study" => cmd_scale_study(&flags),
         "inspect-artifacts" => cmd_inspect_artifacts(&flags),
@@ -140,6 +150,7 @@ fn print_usage() {
          commands:\n\
          \x20 gen-data          generate a planted topology file (Fig. 4 format)\n\
          \x20 run               run the 3-phase parallel pipeline\n\
+         \x20 assign            assign new points with a saved model (Nystrom)\n\
          \x20 baseline          single-machine spectral clustering (O(n^3) path)\n\
          \x20 scale-study       Table 5-1: per-phase time vs slave count\n\
          \x20 inspect-artifacts list AOT artifacts + backend status\n"
@@ -272,6 +283,102 @@ fn cmd_run(flags: &Flags) -> Result<i32> {
         )?;
         println!("report written: {path}");
     }
+    if let Some(path) = flags.get("model-out") {
+        let PipelineInput::Points { points } = &input else {
+            return Err(Error::Cli(
+                "--model-out needs point input: a graph topology carries no \
+                 coordinates for Nystrom extension (use --blobs or a point \
+                 file)"
+                    .into(),
+            ));
+        };
+        let artifact = crate::serving::ModelArtifact::from_run(
+            driver.config(),
+            points,
+            &result,
+        )?;
+        artifact.save(path)?;
+        println!(
+            "model written: {path} ({} landmarks, k={}, d={})",
+            artifact.m(),
+            artifact.k,
+            artifact.d
+        );
+    }
+    Ok(0)
+}
+
+fn cmd_assign(flags: &Flags) -> Result<i32> {
+    let mut cfg = flags.config()?;
+    // `--batch B` / `--refresh MODE` are sugar over the `[serving]` config
+    // section, mirroring the chaos/graph flag helpers.
+    if let Some(b) = flags.get("batch") {
+        cfg.set("serving.batch_points", b)?;
+    }
+    if let Some(r) = flags.get("refresh") {
+        cfg.set("serving.refresh", r)?;
+    }
+    cfg.validate()?;
+    let quiet = flags.get_bool("quiet");
+    let model_path = flags
+        .get("model")
+        .ok_or_else(|| Error::Cli("--model FILE required".into()))?;
+    let model = crate::serving::ModelArtifact::load(model_path)?;
+    let scfg = cfg.serving;
+    // The batch: a whitespace/comma point file, or fresh blobs drawn in the
+    // model's own space (dimension `d`, `k` clusters) from a held-out seed.
+    let points: Vec<f64> = if let Some(path) = flags.get("points") {
+        crate::serving::parse_points(&std::fs::read_to_string(path)?, model.d)?
+    } else {
+        let n = flags.get_parse("blobs", 256usize)?;
+        let seed = flags.get_parse("batch-seed", model.seed.wrapping_add(1))?;
+        gaussian_blobs(n, model.k, model.d, 0.4, 8.0, seed)
+            .points
+            .into_iter()
+            .flatten()
+            .collect()
+    };
+    let n_points = points.len() / model.d.max(1);
+    let t0 = std::time::Instant::now();
+    let (labels, refreshed, summary, seconds) = if flags.get_bool("oracle") {
+        let out = crate::serving::assign_stream_oracle(&model, &points, &scfg)?;
+        let summary = crate::metrics::ServingSummary {
+            points: n_points as u64,
+            batches: out.batches,
+            refresh_updates: out.refresh_updates,
+        };
+        (out.labels, out.model, summary, t0.elapsed().as_secs_f64())
+    } else {
+        let runtime =
+            Arc::new(KernelRuntime::auto(&crate::runtime::artifacts_dir()));
+        let driver = Driver::new(cfg.clone(), runtime);
+        let services = driver.services();
+        let run = crate::serving::run_assign(&services, &model, &points, &scfg)?;
+        let summary = run.stats.serving_summary();
+        (run.labels, run.model, summary, run.stats.virtual_s)
+    };
+    if !quiet {
+        let rate = if seconds > 0.0 { n_points as f64 / seconds } else { 0.0 };
+        println!("serving[assign]: {}", summary.render());
+        println!(
+            "assigned {n_points} points in {seconds:.3}s ({rate:.0} points/s, \
+             refresh={})",
+            scfg.refresh.as_str()
+        );
+    }
+    if let Some(path) = flags.get("labels-out") {
+        let mut text = String::with_capacity(labels.len() * 2);
+        for l in &labels {
+            text.push_str(&l.to_string());
+            text.push('\n');
+        }
+        std::fs::write(path, text)?;
+        println!("labels written: {path}");
+    }
+    if let Some(path) = flags.get("model-out") {
+        refreshed.save(path)?;
+        println!("model written: {path}");
+    }
     Ok(0)
 }
 
@@ -281,9 +388,17 @@ fn cmd_baseline(flags: &Flags) -> Result<i32> {
     apply_eigen_flags(flags, &mut cfg)?;
     let n = flags.get_parse("blobs", 512usize)?;
     let ps = gaussian_blobs(n, cfg.algo.k, 8, 0.4, 8.0, cfg.algo.seed);
+    // The baseline shares the driver's sigma resolution so `auto` means the
+    // same bandwidth on both paths.
+    let sigma_input = PipelineInput::Points { points: ps.points.clone() };
+    let sigma = crate::coordinator::driver::resolve_sigma(
+        cfg.algo.sigma,
+        &cfg.knn,
+        &sigma_input,
+    )?;
     let params = crate::spectral::SpectralParams {
         k: cfg.algo.k,
-        sigma: cfg.algo.sigma,
+        sigma,
         epsilon: cfg.algo.epsilon,
         graph: cfg.algo.graph,
         knn: cfg.knn,

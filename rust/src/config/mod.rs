@@ -11,6 +11,48 @@ use crate::error::{Error, Result};
 use crate::knn::{GraphMode, IndexKind, KnnConfig};
 use crate::mapreduce::ShuffleConfig;
 use crate::scheduler::{Policy, SpeculationConfig};
+use crate::serving::{RefreshMode, ServingConfig};
+
+/// The RBF bandwidth setting: an explicit value, or `"auto"` — resolved by
+/// the driver to the mean t-th-neighbor distance of the input point set
+/// (the 1802.04450 heuristic, using the `[knn]` index and `knn.t`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SigmaSpec {
+    /// Explicit bandwidth (`algo.sigma = 1.5`).
+    Fixed(f64),
+    /// Resolve from the t-NN distance distribution (`algo.sigma = "auto"`).
+    Auto,
+}
+
+impl SigmaSpec {
+    /// Parse a config/CLI value: `"auto"` or a float literal.
+    pub fn parse(s: &str) -> Option<Self> {
+        if s == "auto" {
+            Some(Self::Auto)
+        } else {
+            s.parse().ok().map(Self::Fixed)
+        }
+    }
+
+    /// The explicit bandwidth, when there is one.
+    pub fn fixed(&self) -> Option<f64> {
+        match self {
+            Self::Fixed(v) => Some(*v),
+            Self::Auto => None,
+        }
+    }
+
+    /// True for the auto-tuned setting.
+    pub fn is_auto(&self) -> bool {
+        matches!(self, Self::Auto)
+    }
+}
+
+impl From<f64> for SigmaSpec {
+    fn from(v: f64) -> Self {
+        Self::Fixed(v)
+    }
+}
 
 /// Cluster-side settings.
 #[derive(Debug, Clone, PartialEq)]
@@ -58,8 +100,9 @@ impl Default for ClusterConfig {
 pub struct AlgoConfig {
     /// Number of clusters k.
     pub k: usize,
-    /// RBF bandwidth sigma (paper §3.2.3).
-    pub sigma: f64,
+    /// RBF bandwidth sigma (paper §3.2.3), or `"auto"` for the mean
+    /// t-th-neighbor-distance heuristic.
+    pub sigma: SigmaSpec,
     /// Similarity sparsification threshold (entries below are dropped).
     pub epsilon: f64,
     /// How phase 1 sparsifies: epsilon post-filter or t-NN construction
@@ -79,7 +122,7 @@ impl Default for AlgoConfig {
     fn default() -> Self {
         Self {
             k: 4,
-            sigma: 1.0,
+            sigma: SigmaSpec::Fixed(1.0),
             epsilon: 1e-8,
             graph: GraphMode::Epsilon,
             lanczos_steps: 60,
@@ -111,6 +154,10 @@ pub struct Config {
     /// plus the ChebDav block/filter knobs. `algo.eigensolver` is accepted
     /// as an alias for `eigen.solver`.
     pub eigen: EigenConfig,
+    /// Serving-layer settings (`[serving]` section): landmark budget for
+    /// the persisted model artifact, assign batch size, and the mini-batch
+    /// centroid refresh mode (`psch run --model-out` / `psch assign`).
+    pub serving: ServingConfig,
 }
 
 impl Config {
@@ -258,7 +305,9 @@ impl Config {
             "algo.graph" => {
                 self.algo.graph = GraphMode::parse(value).ok_or_else(|| bad_val(key))?
             }
-            "algo.sigma" => self.algo.sigma = value.parse().map_err(|_| bad_val(key))?,
+            "algo.sigma" => {
+                self.algo.sigma = SigmaSpec::parse(value).ok_or_else(|| bad_val(key))?
+            }
             "algo.epsilon" => {
                 self.algo.epsilon = value.parse().map_err(|_| bad_val(key))?
             }
@@ -292,6 +341,16 @@ impl Config {
             }
             "eigen.bound_steps" => {
                 self.eigen.bound_steps = value.parse().map_err(|_| bad_val(key))?
+            }
+            "serving.landmarks" => {
+                self.serving.landmarks = value.parse().map_err(|_| bad_val(key))?
+            }
+            "serving.batch_points" => {
+                self.serving.batch_points = value.parse().map_err(|_| bad_val(key))?
+            }
+            "serving.refresh" => {
+                self.serving.refresh =
+                    RefreshMode::parse(value).ok_or_else(|| bad_val(key))?
             }
             other => {
                 return Err(Error::Config(format!("unknown config key: {other}")))
@@ -368,8 +427,10 @@ impl Config {
         if self.algo.k < 2 {
             return bad(format!("algo.k must be >= 2, got {}", self.algo.k));
         }
-        if self.algo.sigma <= 0.0 {
-            return bad(format!("algo.sigma must be > 0, got {}", self.algo.sigma));
+        if let SigmaSpec::Fixed(s) = self.algo.sigma {
+            if s <= 0.0 {
+                return bad(format!("algo.sigma must be > 0, got {s}"));
+            }
         }
         if self.algo.lanczos_steps < self.algo.k {
             return bad(format!(
@@ -397,6 +458,9 @@ impl Config {
         }
         if self.eigen.bound_steps == 0 {
             return bad("eigen.bound_steps must be >= 1".into());
+        }
+        if self.serving.batch_points == 0 {
+            return bad("serving.batch_points must be >= 1".into());
         }
         Ok(())
     }
@@ -461,7 +525,7 @@ lanczos_steps = 40
         assert_eq!(cfg.cluster.replication, 3);
         assert!((cfg.cluster.network.net_bw - 1.1e8).abs() < 1.0);
         assert_eq!(cfg.algo.k, 5);
-        assert!((cfg.algo.sigma - 0.75).abs() < 1e-12);
+        assert!((cfg.algo.sigma.fixed().unwrap() - 0.75).abs() < 1e-12);
         // Untouched keys keep defaults.
         assert_eq!(cfg.algo.kmeans_iters, 20);
     }
@@ -482,6 +546,43 @@ lanczos_steps = 40
         );
         assert!(Config::parse("[cluster]\nslaves = 0\n").is_err());
         assert!(Config::parse("[algo]\nsigma = -1\n").is_err());
+    }
+
+    #[test]
+    fn sigma_auto_parses_and_numeric_stays_validated() {
+        let cfg = Config::parse("[algo]\nsigma = \"auto\"\n").unwrap();
+        assert_eq!(cfg.algo.sigma, SigmaSpec::Auto);
+        assert!(cfg.algo.sigma.is_auto());
+        assert_eq!(cfg.algo.sigma.fixed(), None);
+        // Explicit numeric sigma is unchanged by the auto mode existing.
+        let cfg = Config::parse("[algo]\nsigma = 2.25\n").unwrap();
+        assert_eq!(cfg.algo.sigma, SigmaSpec::Fixed(2.25));
+        assert_eq!(cfg.algo.sigma.fixed(), Some(2.25));
+        assert_eq!(SigmaSpec::from(1.5), SigmaSpec::Fixed(1.5));
+        // Zero/negative/garbage stay rejected.
+        assert!(Config::parse("[algo]\nsigma = 0\n").is_err());
+        assert!(Config::parse("[algo]\nsigma = -2\n").is_err());
+        assert!(Config::parse("[algo]\nsigma = banana\n").is_err());
+    }
+
+    #[test]
+    fn serving_keys_parse_and_validate() {
+        let text = "[serving]\nlandmarks = 128\nbatch_points = 64\nrefresh = minibatch\n";
+        let cfg = Config::parse(text).unwrap();
+        assert_eq!(cfg.serving.landmarks, 128);
+        assert_eq!(cfg.serving.batch_points, 64);
+        assert_eq!(cfg.serving.refresh, RefreshMode::Minibatch);
+        // Untouched keys keep inert defaults (all training points kept as
+        // landmarks, refresh off).
+        let plain = Config::default();
+        assert_eq!(plain.serving, ServingConfig::default());
+        assert_eq!(plain.serving.landmarks, 0);
+        assert_eq!(plain.serving.refresh, RefreshMode::Off);
+        assert!(plain.serving.batch_points >= 1);
+
+        assert!(Config::parse("[serving]\nrefresh = banana\n").is_err());
+        assert!(Config::parse("[serving]\nbatch_points = 0\n").is_err());
+        assert!(Config::parse("[serving]\nbogus = 1\n").is_err());
     }
 
     #[test]

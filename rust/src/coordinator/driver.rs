@@ -2,7 +2,7 @@
 
 use std::sync::Arc;
 
-use crate::config::Config;
+use crate::config::{Config, SigmaSpec};
 use crate::data::Topology;
 use crate::error::Result;
 use crate::runtime::KernelRuntime;
@@ -39,6 +39,15 @@ pub struct PipelineResult {
     pub total_virtual_s: f64,
     /// Sum of phase wall seconds.
     pub total_wall_s: f64,
+    /// The RBF bandwidth phase 1 actually used (`sigma = "auto"` already
+    /// resolved; echoed as `totals.sigma_resolved` in the RunReport).
+    pub sigma: f64,
+    /// Final k-means centers in embedding space (k × k) — the serving
+    /// layer's centroid capture.
+    pub centers: Vec<Vec<f64>>,
+    /// Row-normalized spectral embedding (n × k row-major) — the serving
+    /// layer's landmark-row capture.
+    pub embedding: Vec<f32>,
 }
 
 impl PipelineResult {
@@ -68,6 +77,41 @@ fn reject_tnn_for_graph_input(mode: crate::knn::GraphMode) -> Result<()> {
 pub struct Driver {
     config: Config,
     runtime: Arc<KernelRuntime>,
+}
+
+/// Resolve `algo.sigma` against the input: a fixed value passes through;
+/// `"auto"` measures the mean t-th-neighbor distance over the points (per
+/// 1802.04450, via [`crate::knn::auto_sigma`]). A graph topology has no
+/// coordinates to measure, so `auto` there is a configuration error —
+/// mirroring [`reject_tnn_for_graph_input`].
+pub fn resolve_sigma(
+    spec: SigmaSpec,
+    knn: &crate::knn::KnnConfig,
+    input: &PipelineInput,
+) -> Result<f64> {
+    match (spec, input) {
+        (SigmaSpec::Fixed(v), _) => Ok(v),
+        (SigmaSpec::Auto, PipelineInput::Points { points }) => {
+            if points.is_empty() {
+                return Err(crate::error::Error::Cli(
+                    "sigma auto: empty point set — nothing to measure".into(),
+                ));
+            }
+            let n = points.len();
+            let d = points[0].len();
+            let flat: Arc<Vec<f64>> =
+                Arc::new(points.iter().flatten().copied().collect());
+            crate::knn::auto_sigma(flat, n, d, knn)
+        }
+        (SigmaSpec::Auto, PipelineInput::Graph { .. }) => {
+            Err(crate::error::Error::Config(
+                "algo.sigma = \"auto\" needs point input: a graph topology's \
+                 edge weights carry no coordinates to measure neighbor \
+                 distances on (set a numeric sigma or use --blobs)"
+                    .into(),
+            ))
+        }
+    }
 }
 
 impl Driver {
@@ -100,6 +144,7 @@ impl Driver {
     /// iteration.
     pub fn explain_plan(&self, input: &PipelineInput) -> Result<String> {
         let a = &self.config.algo;
+        let sigma = resolve_sigma(a.sigma, &self.config.knn, input)?;
         let mut out = String::new();
 
         // ---- Phase 1: exact plan ----
@@ -126,7 +171,7 @@ impl Driver {
                             Arc::new(flat),
                             n,
                             d,
-                            a.sigma,
+                            sigma,
                             a.epsilon,
                             "S",
                         )?
@@ -139,7 +184,7 @@ impl Driver {
                             Arc::new(flat),
                             n,
                             d,
-                            a.sigma,
+                            sigma,
                             "S",
                         )?
                         .0
@@ -212,6 +257,13 @@ impl Driver {
         let a = &self.config.algo;
         let tracer = services.cluster.trace().clone();
 
+        // Resolve sigma before phase 1 (auto = mean t-th-neighbor distance
+        // on the master); the measurement is charged to phase 1 below like
+        // other master-side compute.
+        let t_sigma = std::time::Instant::now();
+        let sigma = resolve_sigma(a.sigma, &self.config.knn, input)?;
+        let sigma_wall_s = t_sigma.elapsed().as_secs_f64();
+
         // ---- Phase 1: similarity matrix + degrees ----
         tracer.begin_phase("similarity");
         let (sim, n) = match input {
@@ -232,7 +284,7 @@ impl Driver {
                             Arc::new(flat),
                             n,
                             d,
-                            a.sigma,
+                            sigma,
                             a.epsilon,
                             "S",
                         )?
@@ -247,7 +299,7 @@ impl Driver {
                             Arc::new(flat),
                             n,
                             d,
-                            a.sigma,
+                            sigma,
                             "S",
                         )?
                     }
@@ -286,7 +338,9 @@ impl Driver {
 
         tracer.end_phase();
 
-        let phases = [sim.stats, eig.stats, km.stats];
+        let mut phases = [sim.stats, eig.stats, km.stats];
+        phases[0]
+            .absorb_master(sigma_wall_s, services.cluster.model().compute_scale);
         let (total_virtual_s, total_wall_s) = PipelineResult::totals(&phases);
         Ok(PipelineResult {
             labels: km.labels,
@@ -295,6 +349,9 @@ impl Driver {
             nnz: sim.nnz,
             total_virtual_s,
             total_wall_s,
+            sigma,
+            centers: km.centers,
+            embedding: eig.embedding,
         })
     }
 }
@@ -316,7 +373,7 @@ mod tests {
         let ps = gaussian_blobs(300, 4, 4, 0.3, 10.0, 3);
         let mut d = driver(3);
         d.config.algo.k = 4;
-        d.config.algo.sigma = 1.5;
+        d.config.algo.sigma = 1.5.into();
         let r = d
             .run(&PipelineInput::Points { points: ps.points.clone() })
             .unwrap();
@@ -345,7 +402,7 @@ mod tests {
         let ps = gaussian_blobs(200, 3, 4, 0.3, 10.0, 5);
         let mut d = driver(2);
         d.config.algo.k = 3;
-        d.config.algo.sigma = 1.5;
+        d.config.algo.sigma = 1.5.into();
         let parallel = d
             .run(&PipelineInput::Points { points: ps.points.clone() })
             .unwrap();
@@ -386,7 +443,7 @@ mod tests {
         let ps = gaussian_blobs(300, 4, 4, 0.3, 10.0, 3);
         let mut d = driver(3);
         d.config.algo.k = 4;
-        d.config.algo.sigma = 1.5;
+        d.config.algo.sigma = 1.5.into();
         d.config.eigen.solver = crate::coordinator::eigen::EigenSolverKind::ChebDav;
         let input = PipelineInput::Points { points: ps.points.clone() };
         let text = d.explain_plan(&input).unwrap();
@@ -415,7 +472,7 @@ mod tests {
         let ps = gaussian_blobs(240, 3, 4, 0.3, 10.0, 3);
         let mut d = driver(3);
         d.config.algo.k = 3;
-        d.config.algo.sigma = 1.5;
+        d.config.algo.sigma = 1.5.into();
         d.config.algo.graph = crate::knn::GraphMode::Tnn;
         d.config.knn.t = 12;
         // The t-NN graph of well-separated blobs is exactly disconnected
@@ -451,6 +508,53 @@ mod tests {
         assert!(err.to_string().contains("tnn"), "{err}");
         let err = d.explain_plan(&input).unwrap_err();
         assert!(err.to_string().contains("point input"), "{err}");
+    }
+
+    #[test]
+    fn sigma_auto_resolves_and_recovers_blobs() {
+        let ps = gaussian_blobs(300, 4, 4, 0.3, 10.0, 3);
+        let mut d = driver(3);
+        d.config.algo.k = 4;
+        d.config.algo.sigma = crate::config::SigmaSpec::Auto;
+        let r = d
+            .run(&PipelineInput::Points { points: ps.points.clone() })
+            .unwrap();
+        assert!(r.sigma > 0.0 && r.sigma.is_finite(), "resolved {}", r.sigma);
+        // The auto estimate equals the knn heuristic computed directly.
+        let flat: Arc<Vec<f64>> =
+            Arc::new(ps.points.iter().flatten().copied().collect());
+        let expect = crate::knn::auto_sigma(flat, 300, 4, &d.config.knn).unwrap();
+        assert_eq!(r.sigma.to_bits(), expect.to_bits());
+        let score = nmi(&ps.labels, &r.labels);
+        assert!(score > 0.95, "sigma-auto nmi={score}");
+        // Capture fields for the serving layer ride along.
+        assert_eq!(r.centers.len(), 4);
+        assert_eq!(r.embedding.len(), 300 * 4);
+        // explain-plan resolves too (it needs a concrete bandwidth).
+        assert!(d
+            .explain_plan(&PipelineInput::Points { points: ps.points.clone() })
+            .is_ok());
+    }
+
+    #[test]
+    fn sigma_auto_rejects_graph_topology_input() {
+        let topo = planted_graph(60, 180, 3, 0.02, 5);
+        let mut d = driver(2);
+        d.config.algo.sigma = crate::config::SigmaSpec::Auto;
+        let err = d.run(&PipelineInput::Graph { topology: topo }).unwrap_err();
+        assert!(err.to_string().contains("point input"), "{err}");
+    }
+
+    #[test]
+    fn fixed_sigma_passes_through_unchanged() {
+        let ps = gaussian_blobs(200, 3, 4, 0.3, 10.0, 5);
+        let mut d = driver(2);
+        d.config.algo.k = 3;
+        d.config.algo.sigma = 1.5.into();
+        let r = d
+            .run(&PipelineInput::Points { points: ps.points.clone() })
+            .unwrap();
+        assert_eq!(r.sigma.to_bits(), 1.5f64.to_bits());
     }
 
     #[test]

@@ -45,28 +45,85 @@ pub struct KmeansOutput {
     pub stats: PhaseStats,
 }
 
-/// Serialize centers into the DFS center file (paper's shared file).
-fn write_center_file(services: &Services, path: &str, centers: &[Vec<f64>]) -> Result<()> {
+/// Check a center matrix is well-formed — at least one center, uniform
+/// nonzero dimension, all coordinates finite — returning `(k, d)`. The one
+/// validation gate shared by the center-file codec below and the serving
+/// layer's model-artifact loader.
+pub fn validate_centers(centers: &[Vec<f64>]) -> Result<(usize, usize)> {
+    let bad = |msg: String| Error::Data(format!("centers: {msg}"));
+    let k = centers.len();
+    if k == 0 {
+        return Err(bad("no centers".into()));
+    }
+    let d = centers[0].len();
+    if d == 0 {
+        return Err(bad("zero-dimensional centers".into()));
+    }
+    for (i, c) in centers.iter().enumerate() {
+        if c.len() != d {
+            return Err(bad(format!(
+                "center {i} has dimension {}, expected {d}",
+                c.len()
+            )));
+        }
+        if c.iter().any(|x| !x.is_finite()) {
+            return Err(bad(format!("center {i} has a non-finite coordinate")));
+        }
+    }
+    Ok((k, d))
+}
+
+/// Serialize a center matrix into the center-file wire format: a u32 count
+/// followed by one length-prefixed f64 vector per center. The exact-f64
+/// codec both phase 3 and the serving layer (`psch assign`) speak.
+pub fn encode_centers(centers: &[Vec<f64>]) -> Result<Vec<u8>> {
+    validate_centers(centers)?;
     let mut bytes = Vec::new();
     bytes.extend_from_slice(&encode_u32(centers.len() as u32));
     for c in centers {
         bytes.extend_from_slice(&encode_f64_vec(c));
     }
-    services.dfs.write_file(path, &bytes)
+    Ok(bytes)
 }
 
-/// Read the center file back.
-pub fn read_center_file(services: &Services, path: &str) -> Result<Vec<Vec<f64>>> {
-    let bytes = services.dfs.read_file(path)?;
-    let k = crate::util::bytes::decode_u32(&bytes) as usize;
+/// Decode a center-file payload back into a center matrix, with bounds and
+/// shape validation (truncated payloads are errors, not panics).
+pub fn decode_centers(bytes: &[u8]) -> Result<Vec<Vec<f64>>> {
+    let bad = |msg: &str| Error::Data(format!("center file: {msg}"));
+    if bytes.len() < 4 {
+        return Err(bad("truncated count header"));
+    }
+    let k = crate::util::bytes::decode_u32(bytes) as usize;
     let mut off = 4;
     let mut centers = Vec::with_capacity(k);
     for _ in 0..k {
+        if bytes.len() < off + 4 {
+            return Err(bad("truncated center length"));
+        }
+        let len = crate::util::bytes::decode_u32(&bytes[off..]) as usize;
+        if bytes.len() < off + 4 + len * 8 {
+            return Err(bad("truncated center payload"));
+        }
         let (c, used) = decode_f64_vec(&bytes[off..]);
         centers.push(c);
         off += used;
     }
+    validate_centers(&centers)?;
     Ok(centers)
+}
+
+/// Serialize centers into the DFS center file (paper's shared file).
+pub(crate) fn write_center_file(
+    services: &Services,
+    path: &str,
+    centers: &[Vec<f64>],
+) -> Result<()> {
+    services.dfs.write_file(path, &encode_centers(centers)?)
+}
+
+/// Read the center file back.
+pub fn read_center_file(services: &Services, path: &str) -> Result<Vec<Vec<f64>>> {
+    decode_centers(&services.dfs.read_file(path)?)
 }
 
 /// Split the n points into contiguous typed map splits `(lo, hi)`.
@@ -102,17 +159,16 @@ pub(crate) fn stage_embedding(
         .collect())
 }
 
-/// Decode the center file payload into a flat f32 center matrix.
-fn centers_from_bytes(bytes: &[u8], d: usize) -> (usize, Vec<f32>) {
-    let kk = crate::util::bytes::decode_u32(bytes) as usize;
-    let mut off = 4;
+/// Decode the center file payload into a flat f32 center matrix (the
+/// kernel-facing view, routed through the shared [`decode_centers`]).
+fn centers_from_bytes(bytes: &[u8], d: usize) -> Result<(usize, Vec<f32>)> {
+    let centers = decode_centers(bytes)?;
+    let kk = centers.len();
     let mut centers_flat = Vec::with_capacity(kk * d);
-    for _ in 0..kk {
-        let (c, used) = decode_f64_vec(&bytes[off..]);
-        off += used;
+    for c in centers {
         centers_flat.extend(c.into_iter().map(|x| x as f32));
     }
-    (kk, centers_flat)
+    Ok((kk, centers_flat))
 }
 
 /// Build one assign+update iteration pipeline.
@@ -145,7 +201,7 @@ pub(crate) fn update_pipeline(
                     crate::mapreduce::names::EXTRA_INPUT_BYTES,
                     ((hi - lo) * d * 4 + bytes.len()) as u64,
                 );
-                let (kk, centers_flat) = centers_from_bytes(&bytes, d);
+                let (kk, centers_flat) = centers_from_bytes(&bytes, d)?;
                 let (_assign, sums, counts) = rt.kmeans_step(
                     &emb[lo * d..hi * d],
                     &centers_flat,
@@ -232,7 +288,7 @@ pub(crate) fn assign_pipeline(
                     crate::mapreduce::names::EXTRA_INPUT_BYTES,
                     ((hi - lo) * d * 4 + bytes.len()) as u64,
                 );
-                let (kk, centers_flat) = centers_from_bytes(&bytes, d);
+                let (kk, centers_flat) = centers_from_bytes(&bytes, d)?;
                 out.incr(
                     crate::mapreduce::names::COMPUTE_US,
                     super::costmodel::units_to_us(
@@ -362,6 +418,18 @@ mod tests {
         );
         let lloyd_score = nmi(&ps.labels, &lr.labels);
         assert!((score - lloyd_score).abs() < 0.02, "{score} vs {lloyd_score}");
+    }
+
+    #[test]
+    fn center_codec_validates_shape_and_truncation() {
+        let centers = vec![vec![1.0, 2.0], vec![-3.0, 0.5]];
+        let bytes = encode_centers(&centers).unwrap();
+        assert_eq!(decode_centers(&bytes).unwrap(), centers);
+        assert!(decode_centers(&bytes[..bytes.len() - 1]).is_err(), "truncated");
+        assert!(decode_centers(&bytes[..3]).is_err(), "short header");
+        assert!(encode_centers(&[]).is_err(), "no centers");
+        assert!(encode_centers(&[vec![1.0], vec![1.0, 2.0]]).is_err(), "ragged");
+        assert!(encode_centers(&[vec![f64::NAN]]).is_err(), "non-finite");
     }
 
     #[test]

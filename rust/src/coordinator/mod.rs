@@ -212,4 +212,10 @@ impl PhaseStats {
     pub fn eigen_summary(&self) -> crate::metrics::EigenSummary {
         crate::metrics::EigenSummary::from_counters(&self.counters)
     }
+
+    /// Serving summary of the phase: points assigned, assign batches run
+    /// and mini-batch refresh updates (all-zero outside `psch assign`).
+    pub fn serving_summary(&self) -> crate::metrics::ServingSummary {
+        crate::metrics::ServingSummary::from_counters(&self.counters)
+    }
 }

@@ -243,6 +243,42 @@ pub fn tnn_sparse(points: &[Vec<f64>], sigma: f64, cfg: &KnnConfig) -> CsrMatrix
     CsrMatrix::from_rows(n, rows)
 }
 
+/// The σ auto-tuning heuristic (`algo.sigma = "auto"`, per 1802.04450):
+/// the mean distance to each point's t-th nearest neighbor, with `t`
+/// clamped to n−1. Reuses the configured spatial index, so the estimate
+/// prices far fewer pairs than an all-pairs scan.
+pub fn auto_sigma(
+    points: Arc<Vec<f64>>,
+    n: usize,
+    d: usize,
+    cfg: &KnnConfig,
+) -> crate::error::Result<f64> {
+    let bad = |msg: String| crate::error::Error::Config(format!("sigma auto: {msg}"));
+    if n < 2 {
+        return Err(bad(format!("needs at least 2 points, got {n}")));
+    }
+    let t = cfg.t.clamp(1, n - 1);
+    let index = KnnIndex::build(points, n, d, cfg);
+    let mut stats = QueryStats::default();
+    let mut total = 0.0f64;
+    for i in 0..n {
+        let heap = index.query(index.row(i), t, Some(i as u32), &mut stats);
+        let sorted = heap.into_sorted();
+        // Ascending (d2, idx) order: the last survivor IS the t-th neighbor.
+        let tth = sorted
+            .last()
+            .ok_or_else(|| bad(format!("point {i} has no neighbors")))?;
+        total += tth.d2.sqrt();
+    }
+    let sigma = total / n as f64;
+    if !(sigma.is_finite() && sigma > 0.0) {
+        return Err(bad(format!(
+            "degenerate estimate {sigma} (all points coincide?)"
+        )));
+    }
+    Ok(sigma)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -301,6 +337,34 @@ mod tests {
         let mut e = vec![(3u32, 0.5), (1, 0.9), (3, 0.7), (2, 0.1)];
         merge_max(&mut e);
         assert_eq!(e, vec![(1, 0.9), (2, 0.1), (3, 0.7)]);
+    }
+
+    #[test]
+    fn auto_sigma_is_the_mean_tth_neighbor_distance() {
+        // Points on a line at 0, 1, 3: with t = 1 the nearest-neighbor
+        // distances are 1, 1, 2 → mean 4/3.
+        let flat = Arc::new(vec![0.0, 1.0, 3.0]);
+        let cfg = KnnConfig { t: 1, ..Default::default() };
+        let s = auto_sigma(flat.clone(), 3, 1, &cfg).unwrap();
+        assert!((s - 4.0 / 3.0).abs() < 1e-12, "got {s}");
+        // Both index kinds agree bit-for-bit (kd-tree pruning is exact).
+        let brute =
+            KnnConfig { t: 1, index: IndexKind::Brute, ..Default::default() };
+        assert_eq!(
+            s.to_bits(),
+            auto_sigma(flat, 3, 1, &brute).unwrap().to_bits()
+        );
+    }
+
+    #[test]
+    fn auto_sigma_clamps_t_and_rejects_degenerate_input() {
+        // t far above n-1 clamps: with 2 points the 1st neighbor is used.
+        let flat = Arc::new(vec![0.0, 2.0]);
+        let cfg = KnnConfig { t: 50, ..Default::default() };
+        assert!((auto_sigma(flat, 2, 1, &cfg).unwrap() - 2.0).abs() < 1e-12);
+        assert!(auto_sigma(Arc::new(vec![0.0]), 1, 1, &cfg).is_err(), "n < 2");
+        let coincident = Arc::new(vec![1.0, 1.0, 1.0]);
+        assert!(auto_sigma(coincident, 3, 1, &cfg).is_err(), "zero distances");
     }
 
     #[test]

@@ -14,8 +14,10 @@
 //!   `Pipeline`/`Dataset<K, V>`), a t-NN sparse-similarity subsystem
 //!   ([`knn`]: kd-tree index, bounded neighbor heaps, distributed
 //!   max-symmetrization), a virtual-clock tracer with Perfetto export and
-//!   critical-path/straggler analysis ([`trace`]), and the paper's three
-//!   parallel phases ([`coordinator`]) expressed as pipelines.
+//!   critical-path/straggler analysis ([`trace`]), the paper's three
+//!   parallel phases ([`coordinator`]) expressed as pipelines, and an
+//!   online serving layer ([`serving`]: persisted model artifacts +
+//!   Nyström out-of-sample assignment with mini-batch refresh).
 //! - **Layer 2**: JAX compute graphs (`python/compile/model.py`), AOT-lowered
 //!   to HLO text artifacts loaded by [`runtime`] via XLA PJRT.
 //! - **Layer 1**: Pallas kernels (`python/compile/kernels/`) for the per-task
@@ -41,6 +43,7 @@ pub mod mapreduce;
 pub mod metrics;
 pub mod runtime;
 pub mod scheduler;
+pub mod serving;
 pub mod spectral;
 pub mod table;
 pub mod testutil;

@@ -102,6 +102,14 @@ pub mod names {
     /// Chebyshev filter degree the ChebDav backend ran with (0 under
     /// lanczos — the counter doubles as the backend marker in reports).
     pub const CHEB_FILTER_DEGREE: &str = "CHEB_FILTER_DEGREE";
+    /// Points assigned by the serving layer's Nyström extension mappers
+    /// (`psch assign`), summed across batches.
+    pub const ASSIGN_POINTS: &str = "ASSIGN_POINTS";
+    /// Assign pipelines launched by the serving layer (one per point batch).
+    pub const ASSIGN_BATCHES: &str = "ASSIGN_BATCHES";
+    /// Centroids moved by mini-batch refresh (`serving.refresh =
+    /// minibatch`): one count per (batch, cluster) counted update applied.
+    pub const REFRESH_UPDATES: &str = "REFRESH_UPDATES";
 }
 
 impl Counters {

@@ -9,7 +9,10 @@ use std::time::{Duration, Instant};
 
 use crate::mapreduce::{names, Counters};
 
-pub use report::{render_run, EigenSummary, FaultSummary, KnnSummary, ShuffleSummary};
+pub use report::{
+    render_run, EigenSummary, FaultSummary, KnnSummary, ServingSummary,
+    ShuffleSummary,
+};
 
 /// Data-locality and speculation summary of one job or phase, derived from
 /// the counters the JobTracker feeds through the engine.

@@ -235,6 +235,58 @@ impl EigenSummary {
     }
 }
 
+/// Serving summary of one job or phase: what the online serving layer
+/// (`psch assign`) did — points assigned, assign batches launched, and
+/// mini-batch refresh updates applied (counter glossary in DESIGN.md
+/// §2.13). All-zero for batch pipeline phases.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServingSummary {
+    /// Points assigned by the Nyström extension mappers.
+    pub points: u64,
+    /// Assign pipelines launched (one per point batch).
+    pub batches: u64,
+    /// Counted centroid updates applied by mini-batch refresh.
+    pub refresh_updates: u64,
+}
+
+impl ServingSummary {
+    /// Extract the summary from merged job counters.
+    pub fn from_counters(c: &Counters) -> Self {
+        Self {
+            points: c.get(names::ASSIGN_POINTS),
+            batches: c.get(names::ASSIGN_BATCHES),
+            refresh_updates: c.get(names::REFRESH_UPDATES),
+        }
+    }
+
+    /// Did the serving layer run at all?
+    pub fn any(&self) -> bool {
+        *self != Self::default()
+    }
+
+    /// Points amortized per batch (0 when no batches ran).
+    pub fn points_per_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.points as f64 / self.batches as f64
+        }
+    }
+
+    /// One-line human-readable rendering (counter names kept verbatim so
+    /// smoke runs are grep-able).
+    pub fn render(&self) -> String {
+        format!(
+            "ASSIGN_POINTS={} ASSIGN_BATCHES={} REFRESH_UPDATES={} \
+             points/batch={:.1}",
+            self.points,
+            self.batches,
+            self.refresh_updates,
+            self.points_per_batch(),
+        )
+    }
+}
+
 /// Render the complete human-readable run summary: the per-phase table,
 /// one `shuffle[phase]:` line per phase, `knn[phase]:` / `faults[phase]:`
 /// lines for phases where those subsystems acted, the quality line (when
@@ -289,6 +341,13 @@ pub fn render_run(result: &PipelineResult, quality: Option<(f64, f64)>) -> Strin
         let e = p.eigen_summary();
         if e.any() {
             out.push_str(&format!("eigen[{}]: {}\n", p.name, e.render()));
+        }
+    }
+    // Serving report: only phases that ran the assign path.
+    for p in &result.phases {
+        let s = p.serving_summary();
+        if s.any() {
+            out.push_str(&format!("serving[{}]: {}\n", p.name, s.render()));
         }
     }
     // Per-phase fault report: only phases that saw the failure domain act.
@@ -436,6 +495,9 @@ mod tests {
             (names::EIGEN_JOBS, 17),
             (names::MATVECS_BATCHED, 18),
             (names::CHEB_FILTER_DEGREE, 19),
+            (names::ASSIGN_POINTS, 20),
+            (names::ASSIGN_BATCHES, 21),
+            (names::REFRESH_UPDATES, 22),
         ];
         for &(name, v) in pairs {
             c.incr(name, v);
@@ -469,6 +531,30 @@ mod tests {
             (e.eigen_jobs, e.matvecs_batched, e.filter_degree),
             (17, 18, 19)
         );
+        let sv = ServingSummary::from_counters(&c);
+        assert_eq!((sv.points, sv.batches, sv.refresh_updates), (20, 21, 22));
+    }
+
+    #[test]
+    fn serving_summary_reads_all_counters() {
+        let mut c = Counters::default();
+        c.incr(names::ASSIGN_POINTS, 600);
+        c.incr(names::ASSIGN_BATCHES, 3);
+        c.incr(names::REFRESH_UPDATES, 5);
+        let s = ServingSummary::from_counters(&c);
+        assert_eq!(s.points, 600);
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.refresh_updates, 5);
+        assert!(s.any());
+        assert!((s.points_per_batch() - 200.0).abs() < 1e-12);
+        let line = s.render();
+        assert!(line.contains("ASSIGN_POINTS=600"), "{line}");
+        assert!(line.contains("ASSIGN_BATCHES=3"), "{line}");
+        assert!(line.contains("REFRESH_UPDATES=5"), "{line}");
+        assert!(line.contains("points/batch=200.0"), "{line}");
+        let empty = ServingSummary::from_counters(&Counters::default());
+        assert!(!empty.any());
+        assert_eq!(empty.points_per_batch(), 0.0);
     }
 
     #[test]
@@ -484,6 +570,8 @@ mod tests {
         phases[1].counters.incr(names::EIGEN_JOBS, 21);
         phases[1].counters.incr(names::MATVECS_BATCHED, 42);
         phases[2].counters.incr(names::MAP_RERUNS, 1);
+        phases[2].counters.incr(names::ASSIGN_POINTS, 99);
+        phases[2].counters.incr(names::ASSIGN_BATCHES, 1);
         let result = PipelineResult {
             labels: vec![0],
             eigenvalues: vec![0.0],
@@ -491,6 +579,9 @@ mod tests {
             nnz: 7,
             total_virtual_s: 1.0,
             total_wall_s: 0.1,
+            sigma: 1.0,
+            centers: vec![vec![0.0]],
+            embedding: vec![0.0],
         };
         let text = render_run(&result, Some((0.5, 0.25)));
         assert!(text.contains("shuffle[similarity]:"), "{text}");
@@ -501,6 +592,9 @@ mod tests {
         assert!(text.contains("eigen[eigenvectors]:"), "{text}");
         assert!(text.contains("EIGEN_JOBS=21"), "{text}");
         assert!(!text.contains("eigen[similarity]:"), "{text}");
+        assert!(text.contains("serving[kmeans]:"), "{text}");
+        assert!(text.contains("ASSIGN_POINTS=99"), "{text}");
+        assert!(!text.contains("serving[similarity]:"), "{text}");
         assert!(text.contains("quality: NMI=0.5000 ARI=0.2500"), "{text}");
         assert!(text.contains("similarity nnz: 7"), "{text}");
         assert!(text.contains("TOTAL"), "{text}");

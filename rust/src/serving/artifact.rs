@@ -1,0 +1,404 @@
+//! The persisted model artifact (`psch run --model-out`): everything
+//! `psch assign` needs to map new points to clusters without re-running
+//! the pipeline, as versioned zero-dependency JSON built on
+//! [`crate::trace::json`].
+//!
+//! Schema `psch.model.v1` glossary:
+//!
+//! | field              | meaning                                          |
+//! |--------------------|--------------------------------------------------|
+//! | `schema`           | version tag (this file: `psch.model.v1`)         |
+//! | `k`                | cluster count                                    |
+//! | `d`                | input point dimension                            |
+//! | `embed_dim`        | spectral embedding dimension (= k today)         |
+//! | `sigma`            | resolved RBF bandwidth (auto already folded in)  |
+//! | `graph`/`solver`   | training graph mode and eigensolver (echo)       |
+//! | `seed`/`epsilon`/`knn_t` | training config echo                       |
+//! | `counts`           | lifetime per-cluster masses (refresh state)      |
+//! | `centroids`        | k × embed_dim k-means centers                    |
+//! | `landmarks.m`      | landmark count                                   |
+//! | `landmarks.points` | m × d landmark input points                      |
+//! | `landmarks.rows`   | m × embed_dim landmark embedding rows            |
+//!
+//! Numbers are written with Rust's shortest-roundtrip `Display` (see
+//! [`num`]), which re-parses bit-exactly — so save → load → re-export is
+//! **byte-identical**, the property the round-trip test pins.
+
+use crate::config::Config;
+use crate::coordinator::driver::PipelineResult;
+use crate::coordinator::eigen::EigenSolverKind;
+use crate::coordinator::kmeans_job::validate_centers;
+use crate::error::{Error, Result};
+use crate::knn::GraphMode;
+use crate::trace::json::{num, Value};
+
+/// Artifact schema tag.
+pub const MODEL_SCHEMA: &str = "psch.model.v1";
+
+/// A servable spectral-clustering model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelArtifact {
+    /// Cluster count.
+    pub k: usize,
+    /// Input point dimension.
+    pub d: usize,
+    /// Embedding dimension (centroids and landmark rows live here).
+    pub embed_dim: usize,
+    /// Resolved RBF bandwidth (a `sigma = "auto"` run stores its mean
+    /// t-th-neighbor estimate, so serving never re-derives it).
+    pub sigma: f64,
+    /// Training graph mode (config echo).
+    pub graph: GraphMode,
+    /// Training eigensolver (config echo).
+    pub solver: EigenSolverKind,
+    /// Training seed (config echo; fixes refresh determinism provenance).
+    pub seed: u64,
+    /// Training epsilon threshold (config echo).
+    pub epsilon: f64,
+    /// Training t-NN neighbor count (config echo).
+    pub knn_t: usize,
+    /// Lifetime per-cluster masses — initialized to the training cluster
+    /// sizes, grown by mini-batch refresh (the counted-update state).
+    pub counts: Vec<u64>,
+    /// k × embed_dim cluster centers in embedding space.
+    pub centroids: Vec<Vec<f64>>,
+    /// m × d landmark input points (the Nyström anchor set).
+    pub landmark_points: Vec<Vec<f64>>,
+    /// m × embed_dim embedding rows of the landmarks.
+    pub landmark_rows: Vec<Vec<f64>>,
+}
+
+impl ModelArtifact {
+    /// Landmark count.
+    pub fn m(&self) -> usize {
+        self.landmark_points.len()
+    }
+
+    /// Capture the artifact from a finished run. `serving.landmarks`
+    /// selects an evenly-strided landmark subset (index `i·n/m`); `0`
+    /// keeps every training point.
+    pub fn from_run(
+        cfg: &Config,
+        points: &[Vec<f64>],
+        result: &PipelineResult,
+    ) -> Result<Self> {
+        let bad = |msg: String| Error::Data(format!("model capture: {msg}"));
+        let n = points.len();
+        if n == 0 {
+            return Err(bad("no training points".into()));
+        }
+        let d = points[0].len();
+        let (k, embed_dim) = validate_centers(&result.centers)?;
+        if result.labels.len() != n {
+            return Err(bad(format!("{} labels for {n} points", result.labels.len())));
+        }
+        if result.embedding.len() != n * embed_dim {
+            return Err(bad(format!(
+                "embedding has {} values, expected {n}×{embed_dim}",
+                result.embedding.len()
+            )));
+        }
+        let mut counts = vec![0u64; k];
+        for &l in &result.labels {
+            if l >= k {
+                return Err(bad(format!("label {l} out of range (k={k})")));
+            }
+            counts[l] += 1;
+        }
+        let m = match cfg.serving.landmarks {
+            0 => n,
+            m => m.min(n),
+        };
+        let idx = |i: usize| i * n / m;
+        let landmark_points: Vec<Vec<f64>> =
+            (0..m).map(|i| points[idx(i)].clone()).collect();
+        let landmark_rows: Vec<Vec<f64>> = (0..m)
+            .map(|i| {
+                let row = idx(i);
+                (0..embed_dim)
+                    .map(|c| result.embedding[row * embed_dim + c] as f64)
+                    .collect()
+            })
+            .collect();
+        let artifact = Self {
+            k,
+            d,
+            embed_dim,
+            sigma: result.sigma,
+            graph: cfg.algo.graph,
+            solver: cfg.eigen.solver,
+            seed: cfg.algo.seed,
+            epsilon: cfg.algo.epsilon,
+            knn_t: cfg.knn.t,
+            counts,
+            centroids: result.centers.clone(),
+            landmark_points,
+            landmark_rows,
+        };
+        artifact.validate()?;
+        Ok(artifact)
+    }
+
+    /// Structural validation (one gate for capture and load).
+    pub fn validate(&self) -> Result<()> {
+        let bad = |msg: String| Error::Data(format!("model artifact: {msg}"));
+        if !(self.sigma.is_finite() && self.sigma > 0.0) {
+            return Err(bad(format!("sigma must be finite and > 0, got {}", self.sigma)));
+        }
+        if !(self.epsilon.is_finite() && self.epsilon >= 0.0) {
+            return Err(bad(format!("bad epsilon {}", self.epsilon)));
+        }
+        let (k, dim) = validate_centers(&self.centroids)?;
+        if k != self.k || dim != self.embed_dim {
+            return Err(bad(format!(
+                "centroids are {k}×{dim}, header says {}×{}",
+                self.k, self.embed_dim
+            )));
+        }
+        if self.counts.len() != self.k {
+            return Err(bad(format!("{} counts for k={}", self.counts.len(), self.k)));
+        }
+        let m = self.landmark_points.len();
+        if m == 0 {
+            return Err(bad("no landmarks".into()));
+        }
+        if self.landmark_rows.len() != m {
+            return Err(bad(format!(
+                "{} landmark rows for {m} landmark points",
+                self.landmark_rows.len()
+            )));
+        }
+        for (name, rows, width) in [
+            ("landmark point", &self.landmark_points, self.d),
+            ("landmark row", &self.landmark_rows, self.embed_dim),
+        ] {
+            for (i, r) in rows.iter().enumerate() {
+                if r.len() != width {
+                    return Err(bad(format!(
+                        "{name} {i} has dimension {}, expected {width}",
+                        r.len()
+                    )));
+                }
+                if r.iter().any(|x| !x.is_finite()) {
+                    return Err(bad(format!("{name} {i} has a non-finite value")));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Render the canonical JSON document (fixed key and row order — the
+    /// byte-identity contract).
+    pub fn to_json(&self) -> String {
+        let row =
+            |v: &[f64]| -> String {
+                let cells: Vec<String> = v.iter().map(|&x| num(x)).collect();
+                format!("[{}]", cells.join(","))
+            };
+        let matrix = |m: &[Vec<f64>]| -> String {
+            let rows: Vec<String> = m.iter().map(|r| row(r)).collect();
+            format!("[\n  {}\n ]", rows.join(",\n  "))
+        };
+        let counts: Vec<String> = self.counts.iter().map(|c| c.to_string()).collect();
+        format!(
+            "{{\n \"schema\": \"{schema}\",\n \"k\": {k},\n \"d\": {d},\n \
+             \"embed_dim\": {ed},\n \"sigma\": {sigma},\n \"graph\": \"{graph}\",\n \
+             \"solver\": \"{solver}\",\n \"seed\": {seed},\n \"epsilon\": {eps},\n \
+             \"knn_t\": {t},\n \"counts\": [{counts}],\n \"centroids\": {cent},\n \
+             \"landmarks\": {{\n \"m\": {m},\n \"points\": {pts},\n \"rows\": {rows}\n }}\n}}\n",
+            schema = MODEL_SCHEMA,
+            k = self.k,
+            d = self.d,
+            ed = self.embed_dim,
+            sigma = num(self.sigma),
+            graph = self.graph.as_str(),
+            solver = self.solver.as_str(),
+            seed = self.seed,
+            eps = num(self.epsilon),
+            t = self.knn_t,
+            counts = counts.join(","),
+            cent = matrix(&self.centroids),
+            m = self.m(),
+            pts = matrix(&self.landmark_points),
+            rows = matrix(&self.landmark_rows),
+        )
+    }
+
+    /// Parse and validate a JSON document produced by [`Self::to_json`].
+    pub fn from_json(text: &str) -> Result<Self> {
+        let bad = |msg: String| Error::Data(format!("model artifact: {msg}"));
+        let v = Value::parse(text).map_err(|e| bad(format!("bad JSON: {e}")))?;
+        let field = |key: &str| -> Result<&Value> {
+            v.get(key).ok_or_else(|| bad(format!("missing field {key:?}")))
+        };
+        let schema = field("schema")?
+            .as_str()
+            .ok_or_else(|| bad("schema must be a string".into()))?;
+        if schema != MODEL_SCHEMA {
+            return Err(bad(format!(
+                "schema {schema:?}, this build reads {MODEL_SCHEMA:?}"
+            )));
+        }
+        let uint = |key: &str| -> Result<u64> {
+            field(key)?
+                .as_u64()
+                .ok_or_else(|| bad(format!("{key} must be a number")))
+        };
+        let float = |key: &str| -> Result<f64> {
+            field(key)?
+                .as_f64()
+                .ok_or_else(|| bad(format!("{key} must be a number")))
+        };
+        let matrix = |val: &Value, key: &str| -> Result<Vec<Vec<f64>>> {
+            let rows = val
+                .items()
+                .ok_or_else(|| bad(format!("{key} must be an array")))?;
+            rows.iter()
+                .map(|r| {
+                    r.items()
+                        .ok_or_else(|| bad(format!("{key} rows must be arrays")))?
+                        .iter()
+                        .map(|x| {
+                            x.as_f64().ok_or_else(|| {
+                                bad(format!("{key} values must be numbers"))
+                            })
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        let graph_str = field("graph")?
+            .as_str()
+            .ok_or_else(|| bad("graph must be a string".into()))?;
+        let graph = GraphMode::parse(graph_str)
+            .ok_or_else(|| bad(format!("unknown graph mode {graph_str:?}")))?;
+        let solver_str = field("solver")?
+            .as_str()
+            .ok_or_else(|| bad("solver must be a string".into()))?;
+        let solver = EigenSolverKind::parse(solver_str)
+            .ok_or_else(|| bad(format!("unknown solver {solver_str:?}")))?;
+        let counts: Vec<u64> = field("counts")?
+            .items()
+            .ok_or_else(|| bad("counts must be an array".into()))?
+            .iter()
+            .map(|x| x.as_u64().ok_or_else(|| bad("counts must be numbers".into())))
+            .collect::<Result<_>>()?;
+        let landmarks = field("landmarks")?;
+        let lm_field = |key: &str| -> Result<&Value> {
+            landmarks
+                .get(key)
+                .ok_or_else(|| bad(format!("missing field landmarks.{key}")))
+        };
+        let artifact = Self {
+            k: uint("k")? as usize,
+            d: uint("d")? as usize,
+            embed_dim: uint("embed_dim")? as usize,
+            sigma: float("sigma")?,
+            graph,
+            solver,
+            seed: uint("seed")?,
+            epsilon: float("epsilon")?,
+            knn_t: uint("knn_t")? as usize,
+            counts,
+            centroids: matrix(field("centroids")?, "centroids")?,
+            landmark_points: matrix(lm_field("points")?, "landmarks.points")?,
+            landmark_rows: matrix(lm_field("rows")?, "landmarks.rows")?,
+        };
+        let m = lm_field("m")?
+            .as_u64()
+            .ok_or_else(|| bad("landmarks.m must be a number".into()))?
+            as usize;
+        if m != artifact.m() {
+            return Err(bad(format!(
+                "landmarks.m = {m} but {} points are present",
+                artifact.m()
+            )));
+        }
+        artifact.validate()?;
+        Ok(artifact)
+    }
+
+    /// Write the artifact to a filesystem path.
+    pub fn save(&self, path: &str) -> Result<()> {
+        self.validate()?;
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+
+    /// Load an artifact from a filesystem path.
+    pub fn load(path: &str) -> Result<Self> {
+        Self::from_json(&std::fs::read_to_string(path)?)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    /// A tiny well-formed artifact: 2 clusters in a 2-d embedding over 1-d
+    /// points, 3 landmarks.
+    pub(crate) fn fixture() -> ModelArtifact {
+        ModelArtifact {
+            k: 2,
+            d: 1,
+            embed_dim: 2,
+            sigma: 0.75,
+            graph: GraphMode::Epsilon,
+            solver: EigenSolverKind::Lanczos,
+            seed: 42,
+            epsilon: 0.001,
+            knn_t: 10,
+            counts: vec![2, 1],
+            centroids: vec![vec![1.0, 0.0], vec![0.0, 1.0]],
+            landmark_points: vec![vec![-1.0], vec![0.25], vec![4.0]],
+            landmark_rows: vec![
+                vec![1.0, 0.0],
+                vec![0.8, 0.6],
+                vec![0.0, 1.0],
+            ],
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_byte_identical() {
+        let a = fixture();
+        let doc = a.to_json();
+        let b = ModelArtifact::from_json(&doc).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(b.to_json(), doc, "re-export must be byte-identical");
+    }
+
+    #[test]
+    fn from_json_rejects_corruption() {
+        let a = fixture();
+        let doc = a.to_json();
+        assert!(ModelArtifact::from_json(&doc.replace(
+            MODEL_SCHEMA,
+            "psch.model.v999"
+        ))
+        .is_err());
+        assert!(ModelArtifact::from_json(&doc.replace("\"k\": 2", "\"k\": 3"))
+            .is_err());
+        assert!(
+            ModelArtifact::from_json(&doc.replace("\"m\": 3", "\"m\": 4")).is_err()
+        );
+        assert!(ModelArtifact::from_json("{\"schema\": 1}").is_err());
+        assert!(ModelArtifact::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_shape_drift() {
+        let mut a = fixture();
+        a.landmark_rows.pop();
+        assert!(a.validate().is_err(), "row/point count mismatch");
+        let mut b = fixture();
+        b.sigma = -1.0;
+        assert!(b.validate().is_err(), "bad sigma");
+        let mut c = fixture();
+        c.counts = vec![1];
+        assert!(c.validate().is_err(), "counts/k mismatch");
+        let mut e = fixture();
+        e.landmark_points[0][0] = f64::NAN;
+        assert!(e.validate().is_err(), "non-finite landmark");
+    }
+}

@@ -1,0 +1,268 @@
+//! Distributed assignment: the `psch assign` dataflow path.
+//!
+//! Per batch, one pipeline: `read_dfs(staged batch points)` →
+//! `map_kv(nystrom-extend)` (each task extends its split of points against
+//! the broadcast landmark set) → `group_reduce(assign-collect)` (each
+//! point's projected embedding meets the centroids read from the DFS
+//! center file and picks its cluster). The driver folds the collected
+//! `(index, label, ŷ)` records in ascending point order through the same
+//! [`super::oracle::fold_labeled`] the oracle uses, then (optionally)
+//! applies the same mini-batch refresh — which is why the distributed path
+//! is byte-identical to [`super::oracle::assign_stream_oracle`].
+//!
+//! Centroids travel between batches the way phase 3 ships them: through
+//! the DFS center file, encoded/decoded by the shared
+//! [`crate::coordinator::kmeans_job`] centroid codec (exact f64), so a
+//! refresh on batch b is visible to batch b+1's reduce tasks.
+
+use std::sync::Arc;
+
+use crate::coordinator::{costmodel, kmeans_job, PhaseStats, Services};
+use crate::dataflow::{Group, Pipeline};
+use crate::error::{Error, Result};
+use crate::mapreduce::names;
+
+use super::artifact::ModelArtifact;
+use super::oracle::{extend_point, fold_labeled, nearest_centroid};
+use super::refresh::{minibatch_update, RefreshMode};
+use super::ServingConfig;
+
+/// DFS path of the staged batch points.
+const BATCH_PATH: &str = "/serving/batch";
+/// DFS path of the serving center file (rewritten per batch under refresh).
+const CENTER_PATH: &str = "/serving/centers";
+
+/// Points per extension map split (same granularity as phase 3).
+const POINTS_PER_TASK: usize = kmeans_job::POINTS_PER_TASK;
+
+/// Output of a distributed assign stream.
+pub struct ServingRun {
+    /// Cluster label per stream point.
+    pub labels: Vec<usize>,
+    /// The model after the stream (refreshed when enabled).
+    pub model: ModelArtifact,
+    /// Phase stats across all batch pipelines (one "serving" phase).
+    pub stats: PhaseStats,
+}
+
+/// Stage one batch's points in the DFS as row-major f64 LE; returns the
+/// per-split byte ranges that give every split its preferred hosts.
+fn stage_batch(
+    services: &Services,
+    points: &[f64],
+    n: usize,
+    d: usize,
+) -> Result<Vec<Vec<(usize, usize)>>> {
+    let mut raw = Vec::with_capacity(points.len() * 8);
+    for &x in points {
+        raw.extend_from_slice(&x.to_le_bytes());
+    }
+    services.dfs.write_file(BATCH_PATH, &raw)?;
+    let row_bytes = d * 8;
+    Ok((0..n)
+        .step_by(POINTS_PER_TASK)
+        .map(|lo| {
+            let hi = (lo + POINTS_PER_TASK).min(n);
+            vec![(lo * row_bytes, hi * row_bytes)]
+        })
+        .collect())
+}
+
+/// Contiguous typed map splits over the batch's points.
+fn batch_splits(n: usize) -> Vec<Vec<(u64, u64)>> {
+    (0..n)
+        .step_by(POINTS_PER_TASK)
+        .map(|lo| vec![(lo as u64, ((lo + POINTS_PER_TASK).min(n)) as u64)])
+        .collect()
+}
+
+/// Run one batch's extend→assign pipeline; returns `(index, payload)`
+/// records where `payload[0]` is the label and the rest is ŷ.
+fn run_batch_pipeline(
+    services: &Services,
+    model: &Arc<ModelArtifact>,
+    batch: Arc<Vec<f64>>,
+    stats: &mut PhaseStats,
+) -> Result<Vec<(u64, Vec<f64>)>> {
+    let n = batch.len() / model.d;
+    let d = model.d;
+    let ranges = stage_batch(services, &batch, n, d)?;
+    // Centroids ride the DFS center file like phase 3's iterations — the
+    // exact f64 codec keeps the reduce-side copy bit-identical to the
+    // oracle's in-memory centroids.
+    kmeans_job::write_center_file(services, CENTER_PATH, &model.centroids)?;
+    let centers = Arc::new(kmeans_job::read_center_file(services, CENTER_PATH)?);
+    // Broadcast cost of the landmark set every map task starts from.
+    let model_bytes = (model.m() * (model.d + model.embed_dim) * 8) as u64;
+
+    let pipeline = Pipeline::new("serving-assign");
+    let map_model = model.clone();
+    let map_batch = batch.clone();
+    let reduce_centers = centers.clone();
+    let embed_dim = model.embed_dim;
+    let k = model.k;
+    let collected = pipeline
+        .read_dfs(BATCH_PATH, batch_splits(n), ranges)
+        .map_kv(
+            "nystrom-extend",
+            move |lo: u64, hi: u64, out| -> Result<()> {
+                let (lo, hi) = (lo as usize, hi as usize);
+                // Split bytes + the broadcast landmark set.
+                out.incr(
+                    names::EXTRA_INPUT_BYTES,
+                    ((hi - lo) * d * 8) as u64 + model_bytes,
+                );
+                // One RBF kernel evaluation per (point, landmark) pair.
+                out.incr(
+                    names::COMPUTE_US,
+                    costmodel::units_to_us(
+                        ((hi - lo) * map_model.m()) as u64,
+                        costmodel::SIM_PAIRS_PER_S,
+                    ),
+                );
+                for i in lo..hi {
+                    let y =
+                        extend_point(&map_model, &map_batch[i * d..(i + 1) * d]);
+                    out.emit(i as u64, y);
+                }
+                out.incr(names::ASSIGN_POINTS, (hi - lo) as u64);
+                Ok(())
+            },
+        )
+        .group_reduce("assign-collect")
+        .reducers(services.cluster.num_slaves())
+        .reduce(
+            move |idx: u64, values: &mut Group<'_, Vec<f64>>, out| -> Result<()> {
+                let y = values
+                    .next_value()
+                    .ok_or_else(|| Error::MapReduce("assign: empty group".into()))?;
+                out.incr(
+                    names::COMPUTE_US,
+                    costmodel::units_to_us(
+                        (k * embed_dim) as u64,
+                        costmodel::KM_POINTDIM_PER_S,
+                    ),
+                );
+                let label = nearest_centroid(&reduce_centers, &y);
+                let mut payload = Vec::with_capacity(1 + y.len());
+                payload.push(label as f64);
+                payload.extend_from_slice(&y);
+                out.emit(idx, payload);
+                Ok(())
+            },
+        )
+        .collect();
+
+    let mut run = pipeline.run(services)?;
+    stats.absorb_run(&run.stats);
+    let mut records = collected.take(&mut run);
+    records.sort_by_key(|&(idx, _)| idx);
+    if records.len() != n {
+        return Err(Error::MapReduce(format!(
+            "assign: {} records collected for {n} points",
+            records.len()
+        )));
+    }
+    Ok(records)
+}
+
+/// Assign a whole point stream on the cluster, batch-by-batch, mirroring
+/// [`super::oracle::assign_stream_oracle`]'s exact batching and refresh
+/// semantics.
+pub fn run_assign(
+    services: &Services,
+    model: &ModelArtifact,
+    points: &[f64],
+    cfg: &ServingConfig,
+) -> Result<ServingRun> {
+    if points.is_empty() || points.len() % model.d != 0 {
+        return Err(Error::Data(format!(
+            "assign: {} coordinates is not a whole number of {}-d points",
+            points.len(),
+            model.d
+        )));
+    }
+    let tracer = services.cluster.trace().clone();
+    tracer.begin_phase("serving");
+    let mut model = model.clone();
+    let mut stats = PhaseStats { name: "serving".into(), ..Default::default() };
+    let mut labels = Vec::with_capacity(points.len() / model.d);
+    let step = cfg.batch_points.max(1) * model.d;
+    let mut at = 0usize;
+    while at < points.len() {
+        let hi = (at + step).min(points.len());
+        let shared = Arc::new(model.clone());
+        let batch = Arc::new(points[at..hi].to_vec());
+        let records = run_batch_pipeline(services, &shared, batch, &mut stats)?;
+        // Ascending point order through the SAME fold as the oracle: the
+        // per-cluster f64 sums come out bit-identical.
+        let folded = fold_labeled(
+            model.k,
+            model.embed_dim,
+            records.into_iter().map(|(_, mut payload)| {
+                let y = payload.split_off(1);
+                (payload[0] as usize, y)
+            }),
+        );
+        labels.extend_from_slice(&folded.labels);
+        stats.counters.incr(names::ASSIGN_BATCHES, 1);
+        if cfg.refresh == RefreshMode::Minibatch {
+            let updates = minibatch_update(
+                &mut model.centroids,
+                &mut model.counts,
+                &folded.sums,
+                &folded.counts,
+            );
+            stats.counters.incr(names::REFRESH_UPDATES, updates);
+        }
+        at = hi;
+    }
+    tracer.end_phase();
+    Ok(ServingRun { labels, model, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::artifact::tests::fixture;
+    use super::super::oracle::assign_stream_oracle;
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::runtime::KernelRuntime;
+
+    fn services(m: usize) -> Services {
+        Services::new(Cluster::new(m), Arc::new(KernelRuntime::native()))
+    }
+
+    #[test]
+    fn distributed_matches_oracle_bitwise_with_refresh() {
+        let model = fixture();
+        let pts: Vec<f64> = (0..600).map(|i| (i % 11) as f64 * 0.6 - 3.0).collect();
+        let cfg = ServingConfig {
+            batch_points: 200,
+            refresh: RefreshMode::Minibatch,
+            ..Default::default()
+        };
+        let svc = services(3);
+        let dist = run_assign(&svc, &model, &pts, &cfg).unwrap();
+        let oracle = assign_stream_oracle(&model, &pts, &cfg).unwrap();
+        assert_eq!(dist.labels, oracle.labels, "labels must match exactly");
+        for (a, b) in dist.model.centroids.iter().zip(&oracle.model.centroids) {
+            let ab: Vec<u64> = a.iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u64> = b.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ab, bb, "refreshed centroid bits must match");
+        }
+        assert_eq!(dist.model.counts, oracle.model.counts);
+        let s = dist.stats.serving_summary();
+        assert_eq!(s.points, 600);
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.refresh_updates, oracle.refresh_updates);
+        assert!(dist.stats.virtual_s > 0.0, "cost model must charge time");
+    }
+
+    #[test]
+    fn rejects_ragged_input() {
+        let model = fixture();
+        let svc = services(1);
+        assert!(run_assign(&svc, &model, &[], &ServingConfig::default()).is_err());
+    }
+}

@@ -1,0 +1,119 @@
+//! Online serving layer: persisted model artifacts and Nyström
+//! out-of-sample assignment (`psch assign`).
+//!
+//! The batch pipeline ends at a clustering result; this module turns that
+//! result into a servable model. A run with `--model-out` captures a
+//! [`ModelArtifact`] — centroids, a landmark subset of the training points
+//! with their embedding rows, and the kernel/graph/eigen parameters — as
+//! versioned zero-dependency JSON (schema [`MODEL_SCHEMA`]). `psch assign`
+//! then maps *new* point batches to clusters without re-running the
+//! pipeline, via Nyström-style extension (after Jin & JaJa, arXiv
+//! 1802.04450):
+//!
+//! 1. RBF weights against the stored landmarks:
+//!    `w_j = exp(-‖x − l_j‖² / 2σ²)`;
+//! 2. projected embedding `ŷ = Σ_j w_j · U_j / Σ_j w_j` (row-normalized
+//!    like the training embedding);
+//! 3. nearest centroid in embedding space (strict `<`, ties to the lowest
+//!    index).
+//!
+//! Two implementations share those exact functions: a single-machine
+//! oracle ([`oracle`]) and a distributed dataflow pipeline ([`job`]) that
+//! stages batches in the DFS and fans the extension out over map tasks.
+//! The distributed path is **byte-identical** to the oracle — same labels,
+//! same refreshed-centroid bits — which is what makes it testable at all.
+//! Between batches, [`refresh`] optionally applies counted mini-batch
+//! centroid updates (`serving.refresh = minibatch`) so the model tracks
+//! drift between full re-clusterings.
+
+pub mod artifact;
+pub mod job;
+pub mod oracle;
+pub mod refresh;
+
+pub use artifact::{ModelArtifact, MODEL_SCHEMA};
+pub use job::{run_assign, ServingRun};
+pub use oracle::{assign_batch_oracle, assign_stream_oracle, AssignOutput};
+pub use refresh::{minibatch_update, RefreshMode};
+
+use crate::error::{Error, Result};
+
+/// `[serving]` config section.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServingConfig {
+    /// Landmark points sampled into the artifact (deterministic stride over
+    /// the training set). `0` keeps **all** training points as landmarks —
+    /// the exact-extension setting where training-set self-assignment
+    /// reproduces the run's own labels.
+    pub landmarks: usize,
+    /// Points per assign batch: each batch is one dataflow pipeline (and
+    /// one refresh step when enabled).
+    pub batch_points: usize,
+    /// Centroid refresh policy applied after each assigned batch.
+    pub refresh: RefreshMode,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self { landmarks: 0, batch_points: 256, refresh: RefreshMode::Off }
+    }
+}
+
+/// Parse a text file of points — one point per line, coordinates separated
+/// by whitespace or commas; blank lines and `#` comments skipped. Every
+/// point must have dimension `d` (the model's input dimension).
+pub fn parse_points(text: &str, d: usize) -> Result<Vec<f64>> {
+    let mut points = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let start = points.len();
+        for tok in line.split(|c: char| c.is_whitespace() || c == ',') {
+            if tok.is_empty() {
+                continue;
+            }
+            let v: f64 = tok.parse().map_err(|_| {
+                Error::Data(format!(
+                    "points line {}: bad coordinate {:?}",
+                    lineno + 1,
+                    tok
+                ))
+            })?;
+            points.push(v);
+        }
+        let got = points.len() - start;
+        if got != d {
+            return Err(Error::Data(format!(
+                "points line {}: {} coordinates, model expects {}",
+                lineno + 1,
+                got,
+                d
+            )));
+        }
+    }
+    if points.is_empty() {
+        return Err(Error::Data("points file has no points".into()));
+    }
+    Ok(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_points_accepts_whitespace_commas_and_comments() {
+        let text = "# header\n1.0 2.0\n3.0,4.0\n\n  5e-1\t-6.25  \n";
+        let pts = parse_points(text, 2).unwrap();
+        assert_eq!(pts, vec![1.0, 2.0, 3.0, 4.0, 0.5, -6.25]);
+    }
+
+    #[test]
+    fn parse_points_rejects_bad_input() {
+        assert!(parse_points("1.0 oops", 2).is_err(), "bad coordinate");
+        assert!(parse_points("1.0 2.0 3.0", 2).is_err(), "wrong dimension");
+        assert!(parse_points("# only comments\n", 2).is_err(), "empty");
+    }
+}

@@ -1,0 +1,230 @@
+//! Single-machine serving oracle: the reference implementation of Nyström
+//! assignment the distributed pipeline ([`super::job`]) must match **byte
+//! for byte**. Both paths call the same [`extend_point`] /
+//! [`nearest_centroid`] / [`fold_labeled`] functions and fold points in
+//! ascending index order, so labels and refreshed-centroid bits agree
+//! exactly.
+
+use crate::error::{Error, Result};
+use crate::linalg::vector::sq_dist;
+use crate::spectral::gamma_of_sigma;
+
+use super::artifact::ModelArtifact;
+use super::refresh::{minibatch_update, RefreshMode};
+use super::ServingConfig;
+
+/// Nyström extension of one input point: RBF weights against the landmark
+/// set, weighted mean of the landmark embedding rows, then row-normalized
+/// like the training embedding. A point far from every landmark (all
+/// weights underflow to 0) maps to the zero vector — still deterministic.
+pub fn extend_point(model: &ModelArtifact, x: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(x.len(), model.d);
+    let gamma = gamma_of_sigma(model.sigma);
+    let ed = model.embed_dim;
+    let mut y = vec![0.0f64; ed];
+    let mut wsum = 0.0f64;
+    for (l, row) in model.landmark_points.iter().zip(&model.landmark_rows) {
+        let w = (-gamma * sq_dist(l, x)).exp();
+        wsum += w;
+        for t in 0..ed {
+            y[t] += w * row[t];
+        }
+    }
+    if wsum > 0.0 {
+        for v in y.iter_mut() {
+            *v /= wsum;
+        }
+    }
+    let norm = y.iter().map(|v| v * v).sum::<f64>().sqrt();
+    if norm > 0.0 {
+        for v in y.iter_mut() {
+            *v /= norm;
+        }
+    }
+    y
+}
+
+/// Nearest centroid in embedding space: strict `<`, so ties go to the
+/// lowest index — the same rule on both serving paths.
+pub fn nearest_centroid(centroids: &[Vec<f64>], y: &[f64]) -> usize {
+    let mut best = 0usize;
+    let mut best_d = f64::INFINITY;
+    for (c, center) in centroids.iter().enumerate() {
+        let d2 = sq_dist(center, y);
+        if d2 < best_d {
+            best_d = d2;
+            best = c;
+        }
+    }
+    best
+}
+
+/// One assigned batch: labels in point order plus the per-cluster
+/// embedding sums/masses mini-batch refresh consumes.
+pub struct BatchAssign {
+    /// Cluster label per batch point.
+    pub labels: Vec<usize>,
+    /// k × embed_dim per-cluster sums of projected embeddings.
+    pub sums: Vec<Vec<f64>>,
+    /// Per-cluster batch masses.
+    pub counts: Vec<u64>,
+}
+
+/// Fold `(label, ŷ)` pairs — which MUST arrive in ascending point order —
+/// into a [`BatchAssign`]. This one loop fixes the f64 summation order for
+/// both serving paths; reordering it would break oracle/distributed byte
+/// identity.
+pub(crate) fn fold_labeled(
+    k: usize,
+    embed_dim: usize,
+    pairs: impl Iterator<Item = (usize, Vec<f64>)>,
+) -> BatchAssign {
+    let mut labels = Vec::new();
+    let mut sums = vec![vec![0.0f64; embed_dim]; k];
+    let mut counts = vec![0u64; k];
+    for (label, y) in pairs {
+        for t in 0..embed_dim {
+            sums[label][t] += y[t];
+        }
+        counts[label] += 1;
+        labels.push(label);
+    }
+    BatchAssign { labels, sums, counts }
+}
+
+/// Assign one batch of flat row-major points (n × model.d) against the
+/// model's current centroids.
+pub fn assign_batch_oracle(
+    model: &ModelArtifact,
+    points: &[f64],
+) -> Result<BatchAssign> {
+    if points.is_empty() || points.len() % model.d != 0 {
+        return Err(Error::Data(format!(
+            "assign: {} coordinates is not a whole number of {}-d points",
+            points.len(),
+            model.d
+        )));
+    }
+    let n = points.len() / model.d;
+    Ok(fold_labeled(
+        model.k,
+        model.embed_dim,
+        (0..n).map(|i| {
+            let y = extend_point(model, &points[i * model.d..(i + 1) * model.d]);
+            (nearest_centroid(&model.centroids, &y), y)
+        }),
+    ))
+}
+
+/// A fully assigned point stream.
+pub struct AssignOutput {
+    /// Cluster label per stream point.
+    pub labels: Vec<usize>,
+    /// Batches processed.
+    pub batches: u64,
+    /// Counted refresh updates applied (0 with `refresh = off`).
+    pub refresh_updates: u64,
+    /// The model after the stream — refreshed centroids/counts when
+    /// `refresh = minibatch`, untouched otherwise.
+    pub model: ModelArtifact,
+}
+
+/// Assign a whole point stream batch-by-batch (`cfg.batch_points` per
+/// batch), applying mini-batch refresh between batches when enabled. The
+/// single-machine mirror of [`super::job::run_assign`]'s batching loop.
+pub fn assign_stream_oracle(
+    model: &ModelArtifact,
+    points: &[f64],
+    cfg: &ServingConfig,
+) -> Result<AssignOutput> {
+    let mut model = model.clone();
+    let mut labels = Vec::new();
+    let mut batches = 0u64;
+    let mut refresh_updates = 0u64;
+    let step = cfg.batch_points.max(1) * model.d;
+    let mut at = 0usize;
+    while at < points.len() {
+        let hi = (at + step).min(points.len());
+        let batch = assign_batch_oracle(&model, &points[at..hi])?;
+        labels.extend_from_slice(&batch.labels);
+        batches += 1;
+        if cfg.refresh == RefreshMode::Minibatch {
+            refresh_updates += minibatch_update(
+                &mut model.centroids,
+                &mut model.counts,
+                &batch.sums,
+                &batch.counts,
+            );
+        }
+        at = hi;
+    }
+    Ok(AssignOutput { labels, batches, refresh_updates, model })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::artifact::tests::fixture;
+    use super::*;
+
+    #[test]
+    fn landmark_points_extend_near_their_own_rows() {
+        let m = fixture();
+        // The fixture's landmarks are far apart relative to sigma, so each
+        // landmark's extension is dominated by its own embedding row.
+        for (p, row) in m.landmark_points.iter().zip(&m.landmark_rows) {
+            let y = extend_point(&m, p);
+            let d = sq_dist(&y, row).sqrt();
+            assert!(d < 0.2, "landmark {p:?}: ŷ {y:?} vs row {row:?}");
+        }
+    }
+
+    #[test]
+    fn nearest_centroid_breaks_ties_low() {
+        let cents = vec![vec![1.0, 0.0], vec![-1.0, 0.0]];
+        assert_eq!(nearest_centroid(&cents, &[0.0, 5.0]), 0, "equidistant → 0");
+        assert_eq!(nearest_centroid(&cents, &[-0.9, 0.0]), 1);
+    }
+
+    #[test]
+    fn batch_oracle_labels_sums_and_counts_agree() {
+        let m = fixture();
+        let pts = vec![-1.0, 0.25, 4.0, -0.8];
+        let b = assign_batch_oracle(&m, &pts).unwrap();
+        assert_eq!(b.labels.len(), 4);
+        assert_eq!(b.counts.iter().sum::<u64>(), 4);
+        for (c, &cnt) in b.counts.iter().enumerate() {
+            let from_labels = b.labels.iter().filter(|&&l| l == c).count() as u64;
+            assert_eq!(cnt, from_labels, "cluster {c}");
+            if cnt == 0 {
+                assert!(b.sums[c].iter().all(|&s| s == 0.0));
+            }
+        }
+        assert!(assign_batch_oracle(&m, &[]).is_err(), "empty batch");
+    }
+
+    #[test]
+    fn stream_oracle_refresh_is_deterministic_and_counts_batches() {
+        let m = fixture();
+        let pts: Vec<f64> = (0..10).map(|i| i as f64 * 0.5 - 2.0).collect();
+        let cfg = ServingConfig {
+            batch_points: 4,
+            refresh: RefreshMode::Minibatch,
+            ..Default::default()
+        };
+        let a = assign_stream_oracle(&m, &pts, &cfg).unwrap();
+        let b = assign_stream_oracle(&m, &pts, &cfg).unwrap();
+        assert_eq!(a.batches, 3, "10 points in batches of 4");
+        assert_eq!(a.labels, b.labels);
+        assert!(a.refresh_updates > 0);
+        assert_eq!(a.refresh_updates, b.refresh_updates);
+        for (x, y) in a.model.centroids.iter().zip(&b.model.centroids) {
+            let xb: Vec<u64> = x.iter().map(|v| v.to_bits()).collect();
+            let yb: Vec<u64> = y.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(xb, yb, "refreshed centroids must replay bit-exactly");
+        }
+        // Off leaves the model untouched.
+        let off = assign_stream_oracle(&m, &pts, &ServingConfig::default()).unwrap();
+        assert_eq!(off.refresh_updates, 0);
+        assert_eq!(off.model, m);
+    }
+}

@@ -1,0 +1,129 @@
+//! Mini-batch centroid refresh (`serving.refresh`): counted updates in the
+//! Sculley web-scale k-means style, so a served model tracks drift between
+//! full re-clusterings without re-running the pipeline.
+//!
+//! Per assigned batch and per cluster `c` with batch mass `m_c` and batch
+//! embedding mean `μ_c`, the artifact's lifetime count absorbs the mass and
+//! the centroid moves with the per-center learning rate `η = m_c / n_c`:
+//!
+//! ```text
+//! n_c ← n_c + m_c;   η = m_c / n_c;   centroid_c ← centroid_c + η (μ_c − centroid_c)
+//! ```
+//!
+//! The update is pure f64 arithmetic in a fixed order (clusters ascending,
+//! coordinates ascending), so the distributed assign path and the
+//! single-machine oracle — which both call this one function with identical
+//! inputs — stay byte-identical, and replaying the same batch stream from
+//! the same artifact reproduces the same centroids bit for bit.
+
+/// `serving.refresh` mode: leave the centroids frozen, or apply counted
+/// mini-batch updates after every assigned batch.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum RefreshMode {
+    /// Centroids stay exactly as trained.
+    #[default]
+    Off,
+    /// Counted mini-batch updates after each assigned batch.
+    Minibatch,
+}
+
+impl RefreshMode {
+    /// Parse a config/CLI value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" => Some(Self::Off),
+            "minibatch" => Some(Self::Minibatch),
+            _ => None,
+        }
+    }
+
+    /// The config spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Off => "off",
+            Self::Minibatch => "minibatch",
+        }
+    }
+}
+
+/// Apply one batch of counted updates: `batch_sums[c]` / `batch_counts[c]`
+/// are the per-cluster sums and masses of the batch's projected embeddings.
+/// Returns the number of centroids moved (the `REFRESH_UPDATES` feed);
+/// clusters the batch never touched are left untouched.
+pub fn minibatch_update(
+    centroids: &mut [Vec<f64>],
+    counts: &mut [u64],
+    batch_sums: &[Vec<f64>],
+    batch_counts: &[u64],
+) -> u64 {
+    debug_assert_eq!(centroids.len(), counts.len());
+    debug_assert_eq!(centroids.len(), batch_sums.len());
+    debug_assert_eq!(centroids.len(), batch_counts.len());
+    let mut updates = 0u64;
+    for c in 0..centroids.len() {
+        let m = batch_counts[c];
+        if m == 0 {
+            continue;
+        }
+        counts[c] += m;
+        let eta = m as f64 / counts[c] as f64;
+        let inv_m = 1.0 / m as f64;
+        for t in 0..centroids[c].len() {
+            let mu = batch_sums[c][t] * inv_m;
+            centroids[c][t] += eta * (mu - centroids[c][t]);
+        }
+        updates += 1;
+    }
+    updates
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for m in [RefreshMode::Off, RefreshMode::Minibatch] {
+            assert_eq!(RefreshMode::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(RefreshMode::parse("banana"), None);
+    }
+
+    #[test]
+    fn counted_update_moves_toward_the_batch_mean() {
+        let mut centroids = vec![vec![0.0, 0.0]];
+        let mut counts = vec![3u64];
+        // Batch of one point at (4, 8): eta = 1/4, centroid moves a quarter.
+        let updates =
+            minibatch_update(&mut centroids, &mut counts, &[vec![4.0, 8.0]], &[1]);
+        assert_eq!(updates, 1);
+        assert_eq!(counts, vec![4]);
+        assert_eq!(centroids[0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn empty_clusters_are_untouched_and_replay_is_deterministic() {
+        let run = || {
+            let mut centroids = vec![vec![1.0], vec![-1.0]];
+            let mut counts = vec![10u64, 10];
+            let mut total = 0;
+            for _ in 0..3 {
+                total += minibatch_update(
+                    &mut centroids,
+                    &mut counts,
+                    &[vec![5.0], vec![0.0]],
+                    &[5, 0],
+                );
+            }
+            (centroids, counts, total)
+        };
+        let (c1, n1, u1) = run();
+        let (c2, n2, u2) = run();
+        assert_eq!(c1[0][0].to_bits(), c2[0][0].to_bits(), "bitwise replay");
+        assert_eq!(n1, n2);
+        assert_eq!(u1, 3, "one touched cluster per batch");
+        assert_eq!(u1, u2);
+        assert_eq!(c1[1], vec![-1.0], "empty cluster frozen");
+        assert_eq!(n1[1], 10);
+    }
+}

@@ -10,11 +10,12 @@
 //! ```text
 //! { schema:   "psch.run_report.v1",
 //!   config:   { cluster{..} shuffle{..} faults{..} knn{..} algo{..}
-//!               eigen{..} },
+//!               eigen{..} serving{..} },
 //!   phases:   [ { name, virtual_s, wall_s, jobs, shuffle_bytes,
 //!                 shuffle_fetch_s, locality{..}, shuffle{..}, faults{..},
-//!                 knn{..}, eigen{..}, counters{NAME:value,..} } ],
-//!   totals:   { virtual_s, wall_s, jobs, nnz },
+//!                 knn{..}, eigen{..}, serving{..},
+//!                 counters{NAME:value,..} } ],
+//!   totals:   { virtual_s, wall_s, jobs, nnz, sigma_resolved },
 //!   quality:  { nmi, ari } | null,
 //!   trace:    { makespan_s, jobs, critical_path{..}, stragglers[..],
 //!               reduce_skew[..] } | null }
@@ -23,7 +24,7 @@
 use super::critical;
 use super::json::{esc, num};
 use super::TraceData;
-use crate::config::Config;
+use crate::config::{Config, SigmaSpec};
 use crate::coordinator::{PhaseStats, PipelineResult};
 use crate::metrics::LocalitySummary;
 
@@ -33,6 +34,13 @@ pub const RUN_REPORT_SCHEMA: &str = "psch.run_report.v1";
 fn config_json(cfg: &Config) -> String {
     let c = &cfg.cluster;
     let a = &cfg.algo;
+    // `algo.sigma` echoes as a number when fixed and as the string
+    // "auto" when the run estimates it from the t-NN graph; the value a
+    // run actually used lands in `totals.sigma_resolved` either way.
+    let sigma = match a.sigma {
+        SigmaSpec::Fixed(v) => num(v),
+        SigmaSpec::Auto => "\"auto\"".to_string(),
+    };
     format!(
         "{{\"cluster\":{{\"slaves\":{},\"slots_per_slave\":{},\"replication\":{},\
          \"racks\":{},\"scheduler\":\"{}\",\"heartbeat_s\":{},\
@@ -46,7 +54,9 @@ fn config_json(cfg: &Config) -> String {
          \"lanczos_steps\":{},\"kmeans_iters\":{},\"kmeans_tol\":{},\
          \"seed\":{}}},\
          \"eigen\":{{\"solver\":\"{}\",\"block_size\":{},\"filter_degree\":{},\
-         \"max_outer\":{},\"residual_tol\":{},\"bound_steps\":{}}}}}",
+         \"max_outer\":{},\"residual_tol\":{},\"bound_steps\":{}}},\
+         \"serving\":{{\"landmarks\":{},\"batch_points\":{},\
+         \"refresh\":\"{}\"}}}}",
         c.slaves,
         c.slots_per_slave,
         c.replication,
@@ -64,7 +74,7 @@ fn config_json(cfg: &Config) -> String {
         cfg.knn.t,
         cfg.knn.leaf_size,
         a.k,
-        num(a.sigma),
+        sigma,
         num(a.epsilon),
         a.graph.as_str(),
         a.lanczos_steps,
@@ -77,6 +87,9 @@ fn config_json(cfg: &Config) -> String {
         cfg.eigen.max_outer,
         num(cfg.eigen.residual_tol),
         cfg.eigen.bound_steps,
+        cfg.serving.landmarks,
+        cfg.serving.batch_points,
+        cfg.serving.refresh.as_str(),
     )
 }
 
@@ -86,6 +99,7 @@ fn phase_json(p: &PhaseStats) -> String {
     let fa = p.fault_summary();
     let kn = p.knn_summary();
     let ei = p.eigen_summary();
+    let se = p.serving_summary();
     let counters: Vec<String> =
         p.counters.iter().map(|(k, v)| format!("\"{}\":{v}", esc(k))).collect();
     format!(
@@ -104,6 +118,8 @@ fn phase_json(p: &PhaseStats) -> String {
          \"heap_evictions\":{}}},\
          \"eigen\":{{\"jobs\":{},\"matvecs_batched\":{},\
          \"filter_degree\":{}}},\
+         \"serving\":{{\"points\":{},\"batches\":{},\
+         \"refresh_updates\":{}}},\
          \"counters\":{{{}}}}}",
         esc(&p.name),
         num(p.virtual_s),
@@ -136,6 +152,9 @@ fn phase_json(p: &PhaseStats) -> String {
         ei.eigen_jobs,
         ei.matvecs_batched,
         ei.filter_degree,
+        se.points,
+        se.batches,
+        se.refresh_updates,
         counters.join(","),
     )
 }
@@ -230,7 +249,8 @@ pub fn run_report_json(
     };
     format!(
         "{{\"schema\":\"{RUN_REPORT_SCHEMA}\",\"config\":{},\"phases\":[{}],\
-         \"totals\":{{\"virtual_s\":{},\"wall_s\":{},\"jobs\":{},\"nnz\":{}}},\
+         \"totals\":{{\"virtual_s\":{},\"wall_s\":{},\"jobs\":{},\"nnz\":{},\
+         \"sigma_resolved\":{}}},\
          \"quality\":{quality},\"trace\":{trace}}}\n",
         config_json(cfg),
         phases.join(","),
@@ -238,6 +258,7 @@ pub fn run_report_json(
         num(result.total_wall_s),
         result.phases.iter().map(|p| p.jobs).sum::<usize>(),
         result.nnz,
+        num(result.sigma),
     )
 }
 
@@ -260,6 +281,8 @@ mod tests {
         phases[1].counters.incr(names::EIGEN_JOBS, 13);
         phases[1].counters.incr(names::MATVECS_BATCHED, 96);
         phases[1].counters.incr(names::CHEB_FILTER_DEGREE, 8);
+        phases[2].counters.incr(names::ASSIGN_POINTS, 17);
+        phases[2].counters.incr(names::ASSIGN_BATCHES, 2);
         PipelineResult {
             labels: vec![0, 1],
             eigenvalues: vec![0.0, 0.1],
@@ -267,6 +290,9 @@ mod tests {
             nnz: 42,
             total_virtual_s: 10.0,
             total_wall_s: 0.5,
+            sigma: 1.25,
+            centers: vec![vec![1.0, 0.0], vec![0.0, 1.0]],
+            embedding: vec![1.0, 0.0, 0.0, 1.0],
         }
     }
 
@@ -331,6 +357,45 @@ mod tests {
         assert_eq!(
             ecfg.get("filter_degree").unwrap().as_u64(),
             Some(Config::default().eigen.filter_degree as u64)
+        );
+        // Serving family: per-phase summary object + config echo +
+        // resolved sigma in totals.
+        let km = &phases[2];
+        assert_eq!(
+            km.get("serving").unwrap().get("points").unwrap().as_u64(),
+            Some(17)
+        );
+        assert_eq!(
+            km.get("serving").unwrap().get("batches").unwrap().as_u64(),
+            Some(2)
+        );
+        let scfg = v.get("config").unwrap().get("serving").unwrap();
+        assert_eq!(scfg.get("refresh").unwrap().as_str(), Some("off"));
+        assert_eq!(
+            scfg.get("batch_points").unwrap().as_u64(),
+            Some(Config::default().serving.batch_points as u64)
+        );
+        assert_eq!(
+            v.get("totals").unwrap().get("sigma_resolved").unwrap().as_f64(),
+            Some(1.25)
+        );
+        // A fixed sigma echoes as a number, auto as the string "auto".
+        let acfg = v.get("config").unwrap().get("algo").unwrap();
+        assert_eq!(acfg.get("sigma").unwrap().as_f64(), Some(1.0));
+        let mut auto_cfg = Config::default();
+        auto_cfg.algo.sigma = SigmaSpec::Auto;
+        let text2 =
+            run_report_json(&auto_cfg, &result_fixture(), None, None);
+        let v2 = Value::parse(&text2).unwrap();
+        assert_eq!(
+            v2.get("config")
+                .unwrap()
+                .get("algo")
+                .unwrap()
+                .get("sigma")
+                .unwrap()
+                .as_str(),
+            Some("auto")
         );
     }
 

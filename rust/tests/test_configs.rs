@@ -136,5 +136,5 @@ fn cli_overrides_layer_on_top_of_file() {
     assert_eq!(cfg.cluster.slaves, 10);
     assert_eq!(cfg.algo.k, 6);
     // Untouched file values survive.
-    assert!((cfg.algo.sigma - 1.5).abs() < 1e-12);
+    assert!((cfg.algo.sigma.fixed().unwrap() - 1.5).abs() < 1e-12);
 }

@@ -32,7 +32,7 @@ fn cfg_with_solver(solver: EigenSolverKind) -> Config {
     let mut cfg = Config::default();
     cfg.cluster.slaves = 3;
     cfg.algo.k = 4;
-    cfg.algo.sigma = 1.5;
+    cfg.algo.sigma = 1.5.into();
     cfg.eigen.solver = solver;
     cfg
 }

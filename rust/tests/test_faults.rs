@@ -106,7 +106,7 @@ fn node_death_mid_similarity_recovers_lost_maps_and_rereplicates() {
         Arc::new(flat),
         n,
         4,
-        base.algo.sigma,
+        base.algo.sigma.fixed().unwrap(),
         base.algo.epsilon,
         "S",
     )

@@ -163,7 +163,7 @@ fn tnn_mode_end_to_end_recovers_blobs() {
     let mut cfg = Config::default();
     cfg.cluster.slaves = 3;
     cfg.algo.k = 3;
-    cfg.algo.sigma = 1.5;
+    cfg.algo.sigma = 1.5.into();
     cfg.set("algo.graph", "tnn").unwrap();
     cfg.set("knn.t", "12").unwrap();
     // Well-separated blobs ⇒ exactly-disconnected t-NN graph (0 eigenvalue

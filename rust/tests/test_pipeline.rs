@@ -13,7 +13,7 @@ fn driver(m: usize, k: usize) -> Driver {
     let mut cfg = Config::default();
     cfg.cluster.slaves = m;
     cfg.algo.k = k;
-    cfg.algo.sigma = 1.5;
+    cfg.algo.sigma = 1.5.into();
     Driver::new(cfg, Arc::new(KernelRuntime::native()))
 }
 
@@ -120,7 +120,7 @@ fn xla_and_native_backends_agree_end_to_end() {
     let mut cfg = Config::default();
     cfg.cluster.slaves = 2;
     cfg.algo.k = 3;
-    cfg.algo.sigma = 1.5;
+    cfg.algo.sigma = 1.5.into();
     let r_xla = Driver::new(cfg.clone(), Arc::new(xla)).run(&input).unwrap();
     let r_nat = Driver::new(cfg, Arc::new(KernelRuntime::native()))
         .run(&input)

@@ -91,7 +91,7 @@ fn scheduling_policy_never_changes_the_answer() {
         cfg.cluster.racks = 2;
         cfg.set("cluster.scheduler", scheduler).unwrap();
         cfg.algo.k = 3;
-        cfg.algo.sigma = 1.5;
+        cfg.algo.sigma = 1.5.into();
         let d = Driver::new(cfg, Arc::new(KernelRuntime::native()));
         d.run(&input).unwrap()
     };

@@ -1,0 +1,115 @@
+//! Integration: the serving layer end to end — artifact capture from a
+//! real trained pipeline, file round-trips, training-set self-assignment,
+//! and oracle/distributed byte identity (DESIGN.md §2.13).
+
+use std::sync::Arc;
+
+use psch::config::Config;
+use psch::coordinator::{Driver, PipelineInput};
+use psch::data::gaussian_blobs;
+use psch::runtime::KernelRuntime;
+use psch::serving::{
+    assign_stream_oracle, run_assign, ModelArtifact, RefreshMode,
+};
+
+/// Train on blobs drawn exactly the way the CLI draws them (d = 8,
+/// spread 0.4, separation 8.0) and capture the model artifact.
+fn train(
+    cfg: &Config,
+    n: usize,
+) -> (ModelArtifact, Vec<usize>, Vec<Vec<f64>>, Driver) {
+    let ps = gaussian_blobs(n, cfg.algo.k, 8, 0.4, 8.0, cfg.algo.seed);
+    let driver = Driver::new(cfg.clone(), Arc::new(KernelRuntime::native()));
+    let result = driver
+        .run(&PipelineInput::Points { points: ps.points.clone() })
+        .unwrap();
+    let model =
+        ModelArtifact::from_run(driver.config(), &ps.points, &result).unwrap();
+    (model, result.labels, ps.points, driver)
+}
+
+#[test]
+fn artifact_file_round_trip_is_byte_identical() {
+    let cfg = Config::load("configs/quick.toml").unwrap();
+    let (model, _, _, _) = train(&cfg, 150);
+    let dir = std::env::temp_dir().join("psch_serving_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.json");
+    let path = path.to_str().unwrap();
+    model.save(path).unwrap();
+    let loaded = ModelArtifact::load(path).unwrap();
+    assert_eq!(loaded, model, "save → load must reproduce the model");
+    assert_eq!(
+        loaded.to_json(),
+        std::fs::read_to_string(path).unwrap(),
+        "load → re-export must be byte-identical"
+    );
+}
+
+#[test]
+fn training_set_self_assignment_reproduces_run_labels() {
+    // quick.toml pins landmarks = 0 (every training point is an anchor),
+    // the exact-extension setting where assigning the training set back
+    // through the model reproduces the run's own labels point for point.
+    let cfg = Config::load("configs/quick.toml").unwrap();
+    assert_eq!(cfg.serving.landmarks, 0, "quick.toml must keep all landmarks");
+    let (model, run_labels, points, driver) = train(&cfg, 240);
+    let flat: Vec<f64> = points.iter().flatten().copied().collect();
+    let oracle = assign_stream_oracle(&model, &flat, &cfg.serving).unwrap();
+    assert_eq!(oracle.labels, run_labels, "oracle self-assignment");
+    let services = driver.services();
+    let dist = run_assign(&services, &model, &flat, &cfg.serving).unwrap();
+    assert_eq!(dist.labels, run_labels, "distributed self-assignment");
+}
+
+#[test]
+fn distributed_assignment_matches_oracle_bitwise_on_a_trained_model() {
+    let mut cfg = Config::load("configs/quick.toml").unwrap();
+    cfg.serving.batch_points = 64;
+    cfg.serving.refresh = RefreshMode::Minibatch;
+    let (model, _, _, driver) = train(&cfg, 200);
+    // A held-out stream from a different seed: several batches, every one
+    // refreshing the centroids before the next.
+    let held = gaussian_blobs(180, cfg.algo.k, 8, 0.4, 8.0, cfg.algo.seed + 1);
+    let flat: Vec<f64> = held.points.iter().flatten().copied().collect();
+    let oracle = assign_stream_oracle(&model, &flat, &cfg.serving).unwrap();
+    let services = driver.services();
+    let dist = run_assign(&services, &model, &flat, &cfg.serving).unwrap();
+    assert_eq!(dist.labels, oracle.labels, "labels must match exactly");
+    for (a, b) in dist.model.centroids.iter().zip(&oracle.model.centroids) {
+        let ab: Vec<u64> = a.iter().map(|v| v.to_bits()).collect();
+        let bb: Vec<u64> = b.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ab, bb, "refreshed centroid bits must match");
+    }
+    assert_eq!(dist.model.counts, oracle.model.counts);
+    assert!(oracle.refresh_updates > 0, "refresh must act across 3 batches");
+    let s = dist.stats.serving_summary();
+    assert_eq!(s.points, 180);
+    assert_eq!(s.batches, 3, "180 points in batches of 64");
+    assert_eq!(s.refresh_updates, oracle.refresh_updates);
+    // The refreshed model is still a valid, byte-stable artifact.
+    dist.model.validate().unwrap();
+    let doc = dist.model.to_json();
+    assert_eq!(ModelArtifact::from_json(&doc).unwrap().to_json(), doc);
+}
+
+#[test]
+fn sigma_auto_model_serves_with_a_landmark_budget() {
+    let mut cfg = Config::load("configs/quick.toml").unwrap();
+    cfg.set("algo.sigma", "auto").unwrap();
+    cfg.set("serving.landmarks", "64").unwrap();
+    cfg.validate().unwrap();
+    let (model, run_labels, points, _) = train(&cfg, 240);
+    assert_eq!(model.m(), 64, "landmark budget must stride the training set");
+    assert!(
+        model.sigma.is_finite() && model.sigma > 0.0,
+        "auto sigma must persist resolved: {}",
+        model.sigma
+    );
+    // Nyström with a 64-point anchor subset still reproduces the partition
+    // of well-separated blobs.
+    let flat: Vec<f64> = points.iter().flatten().copied().collect();
+    let out = assign_stream_oracle(&model, &flat, &cfg.serving).unwrap();
+    let agreement = psch::eval::nmi(&run_labels, &out.labels);
+    assert!(agreement > 0.9, "landmark-subset agreement: {agreement}");
+}
