@@ -1,15 +1,28 @@
-//! Experiment K — hot-path kernel microbenchmarks: XLA AOT artifacts vs the
-//! native Rust fallback, per kernel, at the AOT tile geometry.
+//! Experiment K — hot-path kernel microbenchmarks, two sections:
 //!
-//! This is the §Perf evidence that the XLA path is not a regression over
-//! native code and quantifies per-tile cost (feeding the compute_scale
-//! calibration in EXPERIMENTS.md).
+//! 1. **scalar vs blocked** for the `linalg::kernels` layer at
+//!    paper-calibration shapes — the one-query-vs-many-points
+//!    squared-distance batch, the row-blocked CSR mat-vec, and the
+//!    point×center assignment tile. Each pair runs the public `*_scalar`
+//!    reference against the `*_blocked` kernel on identical inputs and the
+//!    emitted `BENCH_kernels.json` carries a `speedup` object
+//!    (scalar median / blocked median per kernel).
+//! 2. **XLA AOT artifacts vs the native Rust fallback**, per runtime
+//!    kernel, at the AOT tile geometry — the §Perf evidence that the XLA
+//!    path is not a regression over native code (feeding the compute_scale
+//!    calibration in EXPERIMENTS.md).
+//!
+//! Warmup/iteration counts honor `PSCH_BENCH_WARMUP` / `PSCH_BENCH_ITERS`
+//! so the CI job can run a reduced schedule.
 
 mod common;
 
+use std::hint::black_box;
 use std::path::Path;
 
-use psch::benchutil::{bench, stats_json};
+use psch::benchutil::{bench, bench_params, stats_json_with_speedups, BenchStats};
+use psch::linalg::kernels::{self, ScanSink};
+use psch::linalg::CsrMatrix;
 use psch::mapreduce::Counters;
 use psch::runtime::executor::{KM_K, KM_PTS, MV_BLOCK, PAD_DIM, RBF_TILE};
 use psch::runtime::KernelRuntime;
@@ -19,11 +32,129 @@ fn randf(rng: &mut Xoshiro256, n: usize) -> Vec<f32> {
     (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
 }
 
+fn randd(rng: &mut Xoshiro256, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.next_f64() * 2.0 - 1.0).collect()
+}
+
+/// Scan sink that only aggregates — the cheapest possible consumer, so the
+/// timings isolate the distance kernel itself.
+struct SumSink {
+    bound: f64,
+    sum: f64,
+    kept: u64,
+}
+
+impl ScanSink for SumSink {
+    fn bound(&self) -> f64 {
+        self.bound
+    }
+
+    fn emit(&mut self, _id: u32, d2: Option<f64>) {
+        if let Some(d2) = d2 {
+            self.sum += d2;
+            self.kept += 1;
+        }
+    }
+}
+
+fn median_ns(results: &[BenchStats], name: &str) -> f64 {
+    results
+        .iter()
+        .find(|r| r.name == name)
+        .unwrap_or_else(|| panic!("missing bench result {name}"))
+        .median
+        .as_nanos()
+        .max(1) as f64
+}
+
 fn main() {
+    let (warmup, iters) = bench_params(3, 30);
+    let mut rng = Xoshiro256::new(7);
+    let mut results = Vec::new();
+
+    // ----- section 1: scalar vs blocked linalg kernels ------------------
+    // sq_dist batch: one query against 512 points of dimension PAD_DIM —
+    // the shape of a kd-tree leaf scan / similarity mapper row.
+    const SD_N: usize = 512;
+    let sd_points = randd(&mut rng, SD_N * PAD_DIM);
+    let sd_q = randd(&mut rng, PAD_DIM);
+    let sd_ids: Vec<u32> = (0..SD_N as u32).collect();
+    results.push(bench("sq_dist_batch 512x16 [scalar]", warmup, iters, || {
+        let mut sink = SumSink { bound: f64::INFINITY, sum: 0.0, kept: 0 };
+        kernels::sq_dist_scan_ids_scalar(&sd_q, &sd_points, PAD_DIM, &sd_ids, None, &mut sink);
+        black_box((sink.sum, sink.kept));
+    }));
+    results.push(bench("sq_dist_batch 512x16 [blocked]", warmup, iters, || {
+        let mut sink = SumSink { bound: f64::INFINITY, sum: 0.0, kept: 0 };
+        kernels::sq_dist_scan_ids_blocked(&sd_q, &sd_points, PAD_DIM, &sd_ids, None, &mut sink);
+        black_box((sink.sum, sink.kept));
+    }));
+
+    // Row-blocked CSR mat-vec: 4096 rows at ~21 stored entries each — the
+    // Laplacian density of a quick-config epsilon graph.
+    const SP_N: usize = 4096;
+    let mut sp_rows: Vec<Vec<(u32, f64)>> = Vec::with_capacity(SP_N);
+    for i in 0..SP_N {
+        let mut cols: Vec<u32> = (0..20)
+            .map(|_| (rng.next_u64() % SP_N as u64) as u32)
+            .collect();
+        cols.push(i as u32);
+        cols.sort_unstable();
+        cols.dedup();
+        sp_rows.push(
+            cols.into_iter()
+                .map(|j| (j, rng.next_f64() * 2.0 - 1.0))
+                .collect(),
+        );
+    }
+    let sp_a = CsrMatrix::from_rows(SP_N, sp_rows);
+    let sp_x = randd(&mut rng, SP_N);
+    let mut sp_y = vec![0.0f64; SP_N];
+    results.push(bench("spmv_rows 4096x~21 [scalar]", warmup, iters, || {
+        kernels::spmv_rows_scalar(sp_a.view(), &sp_x, 0, SP_N, &mut sp_y);
+        black_box(sp_y[0]);
+    }));
+    results.push(bench("spmv_rows 4096x~21 [blocked]", warmup, iters, || {
+        kernels::spmv_rows_blocked(sp_a.view(), &sp_x, 0, SP_N, &mut sp_y);
+        black_box(sp_y[0]);
+    }));
+
+    // Assignment tile: KM_PTS points against KM_K centers at PAD_DIM — the
+    // f64 shape of the k-means oracle's assign step.
+    let as_pts = randd(&mut rng, KM_PTS * PAD_DIM);
+    let as_ctrs = randd(&mut rng, KM_K * PAD_DIM);
+    let as_norms = kernels::center_norms(&as_ctrs, KM_K, PAD_DIM);
+    results.push(bench("assign_tile 256x16x16 [scalar]", warmup, iters, || {
+        let mut acc = 0u32;
+        for i in 0..KM_PTS {
+            acc = acc.wrapping_add(kernels::assign_point_scalar(
+                &as_pts[i * PAD_DIM..(i + 1) * PAD_DIM],
+                &as_ctrs,
+                &as_norms,
+                KM_K,
+                PAD_DIM,
+            ));
+        }
+        black_box(acc);
+    }));
+    results.push(bench("assign_tile 256x16x16 [blocked]", warmup, iters, || {
+        let mut acc = 0u32;
+        for i in 0..KM_PTS {
+            acc = acc.wrapping_add(kernels::assign_point_blocked(
+                &as_pts[i * PAD_DIM..(i + 1) * PAD_DIM],
+                &as_ctrs,
+                &as_norms,
+                KM_K,
+                PAD_DIM,
+            ));
+        }
+        black_box(acc);
+    }));
+
+    // ----- section 2: XLA artifacts vs the native fallback --------------
     let xla = KernelRuntime::auto(Path::new("artifacts"));
     let native = KernelRuntime::native();
     println!("kernels: xla backend = {:?}\n", xla.backend());
-    let mut rng = Xoshiro256::new(7);
 
     let x = randf(&mut rng, RBF_TILE * PAD_DIM);
     let y = randf(&mut rng, RBF_TILE * PAD_DIM);
@@ -33,36 +164,35 @@ fn main() {
     let ctrs = randf(&mut rng, KM_K * PAD_DIM);
     let z = randf(&mut rng, 128 * PAD_DIM);
 
-    let mut results = Vec::new();
     for (name, rt) in [("xla", &xla), ("native", &native)] {
         results.push(bench(
             &format!("rbf_tile 128x128x16 [{name}]"),
-            3,
-            30,
+            warmup,
+            iters,
             || {
                 rt.rbf_tile(&x, &y, RBF_TILE, RBF_TILE, PAD_DIM, 0.5).unwrap();
             },
         ));
         results.push(bench(
             &format!("matvec 256x256 [{name}]"),
-            3,
-            30,
+            warmup,
+            iters,
             || {
                 rt.matvec(&a, &v, MV_BLOCK, MV_BLOCK).unwrap();
             },
         ));
         results.push(bench(
             &format!("kmeans_step 256x16x16 [{name}]"),
-            3,
-            30,
+            warmup,
+            iters,
             || {
                 rt.kmeans_step(&pts, &ctrs, KM_PTS, KM_K, PAD_DIM).unwrap();
             },
         ));
         results.push(bench(
             &format!("normalize_rows 128x16 [{name}]"),
-            3,
-            30,
+            warmup,
+            iters,
             || {
                 rt.normalize_rows(&z, 128, PAD_DIM).unwrap();
             },
@@ -72,17 +202,19 @@ fn main() {
     // engine goes through it): the key exists after the first touch, so
     // later increments must take the no-alloc fast path. The micro-assert
     // pins the arithmetic: warmup + iters rounds of 1e6, plus the seed.
+    // Round counts are capped so env-reduced schedules stay cheap.
     const INCR_ROUNDS: u64 = 1_000_000;
+    let (cw, ci) = (warmup.min(1), iters.min(5));
     let mut counters = Counters::default();
     counters.incr("HOT", 1);
-    results.push(bench("counters_incr hot-path x1e6", 1, 5, || {
+    results.push(bench("counters_incr hot-path x1e6", cw, ci, || {
         for _ in 0..INCR_ROUNDS {
             counters.incr("HOT", 1);
         }
     }));
     assert_eq!(
         counters.get("HOT"),
-        (1 + 5) * INCR_ROUNDS + 1,
+        (cw + ci) as u64 * INCR_ROUNDS + 1,
         "Counters::incr dropped increments"
     );
 
@@ -91,12 +223,32 @@ fn main() {
         println!("{}", r.render());
     }
 
+    // Scalar-vs-blocked speedups (median over median).
+    let speedups: Vec<(&str, f64)> = [
+        ("sq_dist_batch", "sq_dist_batch 512x16"),
+        ("spmv_rows", "spmv_rows 4096x~21"),
+        ("assign_tile", "assign_tile 256x16x16"),
+    ]
+    .iter()
+    .map(|(key, base)| {
+        let s = median_ns(&results, &format!("{base} [scalar]"));
+        let b = median_ns(&results, &format!("{base} [blocked]"));
+        (*key, s / b)
+    })
+    .collect();
+    println!();
+    for (name, ratio) in &speedups {
+        println!("speedup {name}: {ratio:.2}x (scalar median / blocked median)");
+    }
+    let fast = speedups.iter().filter(|(_, r)| *r >= 1.3).count();
+    println!("kernels: blocked >= 1.3x scalar on {fast}/{} kernels", speedups.len());
+
     // Throughput summary for the RBF tile (the phase-1 unit of work).
-    let rbf_xla = &results[0];
+    let rbf_med_ns = median_ns(&results, "rbf_tile 128x128x16 [xla]");
     let pairs = (RBF_TILE * RBF_TILE) as f64;
     println!(
         "\nrbf tile: {:.1} M similarity-pairs/s (xla median)",
-        pairs / rbf_xla.median.as_secs_f64() / 1e6
+        pairs / (rbf_med_ns / 1e9) / 1e6
     );
 
     // Parity spot check: identical outputs across backends.
@@ -112,6 +264,9 @@ fn main() {
     println!("rbf parity max |xla - native| = {max_diff:.2e}");
     assert!(max_diff < 1e-5, "backend parity violated");
 
-    common::write_bench_json("BENCH_kernels.json", &stats_json("kernels", &results));
+    common::write_bench_json(
+        "BENCH_kernels.json",
+        &stats_json_with_speedups("kernels", &results, &speedups),
+    );
     println!("kernels: OK");
 }

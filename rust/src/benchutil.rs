@@ -59,6 +59,43 @@ pub fn stats_json(bench: &str, stats: &[BenchStats]) -> String {
     )
 }
 
+/// Like [`stats_json`] with an extra `speedup` object: one
+/// `name → ratio` entry per comparison (scalar median / blocked median
+/// in the kernels bench).
+pub fn stats_json_with_speedups(
+    bench: &str,
+    stats: &[BenchStats],
+    speedups: &[(&str, f64)],
+) -> String {
+    let entries: Vec<String> = stats.iter().map(BenchStats::json).collect();
+    let ratios: Vec<String> = speedups
+        .iter()
+        .map(|(name, r)| format!("\"{}\":{:.4}", crate::trace::json::esc(name), r))
+        .collect();
+    format!(
+        "{{\"bench\":\"{}\",\"results\":[{}],\"speedup\":{{{}}}}}\n",
+        crate::trace::json::esc(bench),
+        entries.join(","),
+        ratios.join(",")
+    )
+}
+
+/// (warmup, iters) for a bench binary, overridable via the environment
+/// (`PSCH_BENCH_WARMUP` / `PSCH_BENCH_ITERS`) so CI can run reduced
+/// iteration counts; `iters` is clamped to at least 1.
+pub fn bench_params(default_warmup: usize, default_iters: usize) -> (usize, usize) {
+    let read = |key: &str, default: usize| {
+        std::env::var(key)
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(default)
+    };
+    (
+        read("PSCH_BENCH_WARMUP", default_warmup),
+        read("PSCH_BENCH_ITERS", default_iters).max(1),
+    )
+}
+
 /// Run `f` for `warmup` untimed + `iters` timed iterations.
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
     assert!(iters > 0);
@@ -172,5 +209,31 @@ mod tests {
         assert_eq!(results.len(), 1);
         assert_eq!(results[0].get("name").unwrap().as_str(), Some("k [xla]"));
         assert_eq!(results[0].get("iters").unwrap().as_u64(), Some(3));
+    }
+
+    #[test]
+    fn stats_json_with_speedups_carries_the_ratio_object() {
+        let stats = bench("spmv [scalar]", 0, 2, || {});
+        let doc = stats_json_with_speedups(
+            "kernels",
+            &[stats],
+            &[("spmv_rows", 1.75), ("assign_tile", 2.0)],
+        );
+        let v = crate::trace::json::Value::parse(&doc).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str(), Some("kernels"));
+        assert_eq!(v.get("results").unwrap().items().unwrap().len(), 1);
+        let sp = v.get("speedup").unwrap();
+        assert!((sp.get("spmv_rows").unwrap().as_f64().unwrap() - 1.75).abs() < 1e-9);
+        assert!((sp.get("assign_tile").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_params_defaults_without_env_overrides() {
+        // The CI override variables are absent in the test environment, so
+        // the defaults pass through (iters clamped to >= 1).
+        std::env::remove_var("PSCH_BENCH_WARMUP");
+        std::env::remove_var("PSCH_BENCH_ITERS");
+        assert_eq!(bench_params(3, 30), (3, 30));
+        assert_eq!(bench_params(0, 0), (0, 1), "iters clamps to 1");
     }
 }

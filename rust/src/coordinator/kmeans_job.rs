@@ -356,14 +356,16 @@ pub fn run_kmeans_phase(
         for (c, vals) in centers_handle.take(&mut run) {
             new_centers[c as usize] = vals;
         }
-        let movement = centers
+        // Squared movement vs squared threshold: sqrt is monotone, so the
+        // convergence decision is unchanged while k sqrts per iteration go.
+        let movement_sq = centers
             .iter()
             .zip(&new_centers)
-            .map(|(a, b)| crate::linalg::vector::sq_dist(a, b).sqrt())
+            .map(|(a, b)| crate::linalg::vector::sq_dist(a, b))
             .fold(0.0f64, f64::max);
         centers = new_centers;
         write_center_file(services, center_path, &centers)?;
-        if movement < tol {
+        if movement_sq < tol * tol {
             converged = true;
             break;
         }

@@ -81,19 +81,20 @@ pub fn init_centers(
     }
 }
 
-/// Assign each point to its nearest center.
+/// Assign each point to its nearest center (ties to the lowest index —
+/// the behavior of the original `min_by` scan, which keeps the first
+/// minimum). Routed through the blocked assignment tile
+/// ([`crate::linalg::kernels::assign_point`]) with center norms hoisted
+/// once per call; bit-identical selection by the kernel-layer contract.
 pub fn assign(points: &[Vec<f64>], centers: &[Vec<f64>]) -> Vec<usize> {
+    assert!(!centers.is_empty(), "assign needs at least one center");
+    let k = centers.len();
+    let d = centers[0].len();
+    let flat: Vec<f64> = centers.iter().flatten().copied().collect();
+    let norms = crate::linalg::kernels::center_norms(&flat, k, d);
     points
         .iter()
-        .map(|p| {
-            centers
-                .iter()
-                .enumerate()
-                .map(|(c, ctr)| (c, sq_dist(p, ctr)))
-                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-                .map(|(c, _)| c)
-                .unwrap()
-        })
+        .map(|p| crate::linalg::kernels::assign_point(p, &flat, &norms, k, d) as usize)
         .collect()
 }
 
@@ -125,17 +126,20 @@ pub fn lloyd(
                 sums[l][t] += p[t];
             }
         }
-        let mut movement: f64 = 0.0;
+        // Compare squared movement against the squared tolerance: sqrt is
+        // monotone, so `max(dist) < tol` ⟺ `max(dist²) < tol²` — the same
+        // convergence decision without k square roots per iteration.
+        let mut movement_sq: f64 = 0.0;
         for c in 0..k {
             if counts[c] == 0 {
                 continue; // empty cluster keeps its center (paper's behaviour)
             }
             let new_center: Vec<f64> =
                 sums[c].iter().map(|s| s / counts[c] as f64).collect();
-            movement = movement.max(sq_dist(&new_center, &centers[c]).sqrt());
+            movement_sq = movement_sq.max(sq_dist(&new_center, &centers[c]));
             centers[c] = new_center;
         }
-        if movement < tol {
+        if movement_sq < tol * tol {
             converged = true;
             break;
         }

@@ -3,19 +3,20 @@
 //! Built once over the flat `n × d` point set (median split on the widest
 //! dimension, `leaf_size` bucket leaves), then queried per row. A query
 //! descends nearer-child-first and prunes whole subtrees whose bounding box
-//! cannot beat the heap's current worst distance; leaf scans abort
-//! individual pairs early via [`sq_dist_bounded`] once the running sum
-//! passes the same bound. Both tests are conservative in floating point
-//! (the computed box distance never exceeds the computed point distance,
-//! and equality never prunes), so the result is **bit-identical to a
-//! brute-force scan** — the property the oracle-equivalence tests pin.
+//! cannot beat the heap's current worst distance; leaf scans run through
+//! the blocked distance kernel ([`crate::linalg::kernels`]), which aborts
+//! candidates early once their running sum passes the same bound. Both
+//! tests are conservative in floating point (the computed box distance
+//! never exceeds the computed point distance, and equality never prunes),
+//! so the result is **bit-identical to a brute-force scan** — the property
+//! the oracle-equivalence tests pin.
 
 use std::sync::Arc;
 
-use crate::linalg::vector::sq_dist_bounded;
+use crate::linalg::kernels;
 
-use super::heap::{Neighbor, TopTHeap};
-use super::QueryStats;
+use super::heap::TopTHeap;
+use super::{HeapSink, QueryStats};
 
 /// One tree node; `start..end` is its contiguous slice of [`KdTree::order`].
 struct Node {
@@ -103,19 +104,15 @@ impl KdTree {
         }
         match nd.children {
             None => {
-                for &id in &self.order[nd.start..nd.end] {
-                    if exclude == Some(id) {
-                        continue;
-                    }
-                    let p = self.row(id as usize);
-                    match sq_dist_bounded(q, p, heap.bound()) {
-                        Some(d2) => {
-                            stats.pairs_evaluated += 1;
-                            heap.push(Neighbor { d2, idx: id });
-                        }
-                        None => stats.pruned_pairs += 1,
-                    }
-                }
+                let mut sink = HeapSink { heap, stats };
+                kernels::sq_dist_scan_ids(
+                    q,
+                    self.points.as_slice(),
+                    self.d,
+                    &self.order[nd.start..nd.end],
+                    exclude,
+                    &mut sink,
+                );
             }
             Some((l, r)) => {
                 let dl = self.min_sq_dist(l, q);
@@ -201,7 +198,9 @@ fn build_node(
 
 #[cfg(test)]
 mod tests {
+    use super::super::heap::Neighbor;
     use super::*;
+    use crate::linalg::vector::sq_dist_bounded;
     use crate::util::rng::Xoshiro256;
 
     fn random_points(n: usize, d: usize, seed: u64) -> Arc<Vec<f64>> {

@@ -28,7 +28,7 @@ pub mod kdtree;
 
 use std::sync::Arc;
 
-use crate::linalg::vector::sq_dist_bounded;
+use crate::linalg::kernels::{self, ScanSink};
 use crate::linalg::CsrMatrix;
 
 pub use heap::{Neighbor, TopTHeap};
@@ -110,6 +110,34 @@ impl Default for KnnConfig {
     }
 }
 
+/// [`ScanSink`] feeding a candidate scan into a [`TopTHeap`]: the heap's
+/// current worst survivor is the abort bound, completed distances are
+/// pushed (the heap's total `(d2, idx)` order rejects losers), aborted
+/// candidates count as pruned. Both the brute scan and the kd-tree leaf
+/// scan drain the blocked distance kernels through this sink.
+pub(crate) struct HeapSink<'a> {
+    /// Destination heap (bound source + survivor store).
+    pub heap: &'a mut TopTHeap,
+    /// Pruning tallies to update.
+    pub stats: &'a mut QueryStats,
+}
+
+impl ScanSink for HeapSink<'_> {
+    fn bound(&self) -> f64 {
+        self.heap.bound()
+    }
+
+    fn emit(&mut self, id: u32, d2: Option<f64>) {
+        match d2 {
+            Some(d2) => {
+                self.stats.pairs_evaluated += 1;
+                self.heap.push(Neighbor { d2, idx: id });
+            }
+            None => self.stats.pruned_pairs += 1,
+        }
+    }
+}
+
 /// Per-query/per-task pruning tallies (the `KNN_*` counter feeds).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct QueryStats {
@@ -181,19 +209,16 @@ impl KnnIndex {
                 if t == 0 {
                     return heap;
                 }
-                for j in 0..*n {
-                    if exclude == Some(j as u32) {
-                        continue;
-                    }
-                    let p = &points[j * d..(j + 1) * d];
-                    match sq_dist_bounded(q, p, heap.bound()) {
-                        Some(d2) => {
-                            stats.pairs_evaluated += 1;
-                            heap.push(Neighbor { d2, idx: j as u32 });
-                        }
-                        None => stats.pruned_pairs += 1,
-                    }
-                }
+                let mut sink = HeapSink { heap: &mut heap, stats };
+                kernels::sq_dist_scan_range(
+                    q,
+                    points.as_slice(),
+                    *d,
+                    0,
+                    *n as u32,
+                    exclude,
+                    &mut sink,
+                );
                 heap
             }
         }

@@ -1,0 +1,795 @@
+//! Compile-time-blocked, multi-accumulator kernels for the three hot math
+//! paths (DESIGN.md §2.14): one-query-vs-many-points squared-distance
+//! scans, row-blocked CSR mat-vec, and the point×center k-means assignment
+//! tile. Every phase of the paper's pipeline bottoms out here — RBF
+//! similarity and t-NN queries (phase 1), Laplacian mat-vecs (phase 2),
+//! nearest-center scans (phase 3).
+//!
+//! # Shape
+//!
+//! The kernels follow the form proven in [`super::vector::dot`] /
+//! [`super::vector::axpy`] and the ChebDav block mat-vec: a fixed lane
+//! count known at compile time, independent accumulators that break the
+//! sequential floating-point dependency chain, and explicit tail handling
+//! for the leftovers. The crucial difference from a classic SIMD rewrite
+//! is **which axis is blocked**: the distance and assignment tiles block
+//! across the *candidate* axis and the CSR kernel across the *row* axis,
+//! so each candidate/row keeps its own left-to-right accumulation order.
+//! That is what makes the blocked results bit-identical to the scalar
+//! references instead of merely close.
+//!
+//! # Determinism contract
+//!
+//! Every dispatching kernel here keeps a public `*_scalar` reference, and
+//! the blocked form is **bit-identical** to it:
+//!
+//! - completed squared distances are accumulated dimension-sequentially
+//!   per lane — the same adds in the same order as
+//!   [`super::vector::sq_dist`];
+//! - abort classification is unchanged: squared-distance increments are
+//!   non-negative, and IEEE round-to-nearest addition of a non-negative
+//!   term is monotone non-decreasing, so "some prefix exceeds the bound"
+//!   is *equivalent* to "the final sum exceeds the bound". The blocked
+//!   kernels may therefore check the bound at tile granularity (or only at
+//!   the end) and still classify exactly like the per-dimension check in
+//!   [`super::vector::sq_dist_bounded`];
+//! - argmin tie behavior is unchanged: strict `<` on bit-identical values
+//!   keeps the lowest center index, everywhere;
+//! - CSR rows never borrow accumulator lanes across a row boundary, so any
+//!   `[lo, hi)` task partition of the row space reassembles bit-identically
+//!   to the full scan.
+//!
+//! The distributed-vs-oracle byte-identity tests (knn, eigensolver,
+//! faults, serving) all sit on top of these loops; `tests/test_kernels.rs`
+//! pins the blocked≡scalar property directly across all tail shapes.
+//!
+//! # Dispatch
+//!
+//! A process-wide [`KernelMode`] selects blocked (default) or scalar.
+//! Because the two modes agree bitwise, flipping the mode mid-run is
+//! observable only in timings and in pruning *counters* (a tile samples
+//! its abort bound once, so a shrinking bound classifies a few more
+//! candidates as "evaluated") — never in results. `PSCH_KERNELS=scalar`
+//! forces the references, which is how the before/after bench and the
+//! end-to-end mode-invariance test drive both paths.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use super::vector::NUM_ACC;
+
+/// Rows processed per iteration by the row-blocked CSR mat-vec.
+pub const KERNEL_BLOCK: usize = 4;
+
+/// Candidate lanes per distance/assignment tile.
+pub const TILE_LANES: usize = 8;
+
+/// Dimensions accumulated between whole-tile abort checks.
+pub const DIM_CHUNK: usize = 8;
+
+/// Which implementation the dispatching kernels run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Compile-time-blocked multi-accumulator kernels (the default).
+    Blocked,
+    /// The scalar reference implementations.
+    Scalar,
+}
+
+/// 0 = unresolved, 1 = blocked, 2 = scalar.
+static KERNEL_MODE: AtomicU8 = AtomicU8::new(0);
+
+/// The active [`KernelMode`]. Resolved once from `PSCH_KERNELS`
+/// (`scalar` | `blocked`, default blocked) on first use.
+pub fn kernel_mode() -> KernelMode {
+    match KERNEL_MODE.load(Ordering::Relaxed) {
+        1 => KernelMode::Blocked,
+        2 => KernelMode::Scalar,
+        _ => {
+            let mode = match std::env::var("PSCH_KERNELS").as_deref() {
+                Ok("scalar") => KernelMode::Scalar,
+                _ => KernelMode::Blocked,
+            };
+            set_kernel_mode(mode);
+            mode
+        }
+    }
+}
+
+/// Override the process-wide [`KernelMode`] (tests/benches). Safe at any
+/// point: both modes produce bit-identical results by contract.
+pub fn set_kernel_mode(mode: KernelMode) {
+    let v = match mode {
+        KernelMode::Blocked => 1,
+        KernelMode::Scalar => 2,
+    };
+    KERNEL_MODE.store(v, Ordering::Relaxed);
+}
+
+/// Consumer of a one-query-vs-many-points squared-distance scan.
+pub trait ScanSink {
+    /// Current abort bound: a candidate whose running squared distance
+    /// strictly exceeds it cannot matter downstream (equality never
+    /// aborts — a tie may still be admitted). The scalar reference samples
+    /// it per candidate, the blocked kernel once per tile; under a fixed
+    /// bound both classify identically, and a shrinking bound only
+    /// *completes more* candidates, whose push is then rejected by the
+    /// consumer's own total order.
+    fn bound(&self) -> f64;
+
+    /// One candidate's outcome, in scan order: `Some(d2)` with the full
+    /// squared distance (bit-identical to [`super::vector::sq_dist`]) or
+    /// `None` when the running sum passed `bound`.
+    fn emit(&mut self, id: u32, d2: Option<f64>);
+}
+
+// ---------------------------------------------------------------------------
+// (a) one-query-vs-many-points squared-distance scans
+// ---------------------------------------------------------------------------
+
+/// Scan the candidates `ids` (skipping `exclude`) against query `q` over
+/// the flat row-major point set, dispatching on [`kernel_mode`].
+pub fn sq_dist_scan_ids<S: ScanSink>(
+    q: &[f64],
+    points: &[f64],
+    d: usize,
+    ids: &[u32],
+    exclude: Option<u32>,
+    sink: &mut S,
+) {
+    match kernel_mode() {
+        KernelMode::Scalar => sq_dist_scan_ids_scalar(q, points, d, ids, exclude, sink),
+        KernelMode::Blocked => sq_dist_scan_ids_blocked(q, points, d, ids, exclude, sink),
+    }
+}
+
+/// Scan the contiguous candidate range `[lo, hi)` against query `q`,
+/// dispatching on [`kernel_mode`].
+pub fn sq_dist_scan_range<S: ScanSink>(
+    q: &[f64],
+    points: &[f64],
+    d: usize,
+    lo: u32,
+    hi: u32,
+    exclude: Option<u32>,
+    sink: &mut S,
+) {
+    match kernel_mode() {
+        KernelMode::Scalar => sq_dist_scan_range_scalar(q, points, d, lo, hi, exclude, sink),
+        KernelMode::Blocked => sq_dist_scan_range_blocked(q, points, d, lo, hi, exclude, sink),
+    }
+}
+
+/// Scalar reference: one [`super::vector::sq_dist_bounded`] per candidate,
+/// bound sampled per candidate.
+pub fn sq_dist_scan_ids_scalar<S: ScanSink>(
+    q: &[f64],
+    points: &[f64],
+    d: usize,
+    ids: &[u32],
+    exclude: Option<u32>,
+    sink: &mut S,
+) {
+    for &id in ids {
+        if exclude == Some(id) {
+            continue;
+        }
+        let i = id as usize;
+        let p = &points[i * d..i * d + d];
+        let res = super::vector::sq_dist_bounded(q, p, sink.bound());
+        sink.emit(id, res);
+    }
+}
+
+/// Scalar reference over a contiguous id range.
+pub fn sq_dist_scan_range_scalar<S: ScanSink>(
+    q: &[f64],
+    points: &[f64],
+    d: usize,
+    lo: u32,
+    hi: u32,
+    exclude: Option<u32>,
+    sink: &mut S,
+) {
+    for id in lo..hi {
+        if exclude == Some(id) {
+            continue;
+        }
+        let i = id as usize;
+        let p = &points[i * d..i * d + d];
+        let res = super::vector::sq_dist_bounded(q, p, sink.bound());
+        sink.emit(id, res);
+    }
+}
+
+/// Blocked scan over an explicit id list.
+pub fn sq_dist_scan_ids_blocked<S: ScanSink>(
+    q: &[f64],
+    points: &[f64],
+    d: usize,
+    ids: &[u32],
+    exclude: Option<u32>,
+    sink: &mut S,
+) {
+    let mut it = ids.iter().copied();
+    sq_dist_scan_blocked(q, points, d, || it.next(), exclude, sink);
+}
+
+/// Blocked scan over a contiguous id range.
+pub fn sq_dist_scan_range_blocked<S: ScanSink>(
+    q: &[f64],
+    points: &[f64],
+    d: usize,
+    lo: u32,
+    hi: u32,
+    exclude: Option<u32>,
+    sink: &mut S,
+) {
+    let mut next = lo;
+    sq_dist_scan_blocked(
+        q,
+        points,
+        d,
+        || {
+            if next < hi {
+                let id = next;
+                next += 1;
+                Some(id)
+            } else {
+                None
+            }
+        },
+        exclude,
+        sink,
+    );
+}
+
+/// Tile loop shared by both blocked scans: fill up to [`TILE_LANES`]
+/// candidate ids from the source, price them together, emit in order.
+fn sq_dist_scan_blocked<S: ScanSink>(
+    q: &[f64],
+    points: &[f64],
+    d: usize,
+    mut next_id: impl FnMut() -> Option<u32>,
+    exclude: Option<u32>,
+    sink: &mut S,
+) {
+    let mut ids = [0u32; TILE_LANES];
+    loop {
+        let mut lanes = 0usize;
+        while lanes < TILE_LANES {
+            match next_id() {
+                Some(id) => {
+                    if exclude == Some(id) {
+                        continue;
+                    }
+                    ids[lanes] = id;
+                    lanes += 1;
+                }
+                None => break,
+            }
+        }
+        if lanes == 0 {
+            return;
+        }
+        dist_tile_emit(q, points, d, &ids, lanes, sink);
+        if lanes < TILE_LANES {
+            return;
+        }
+    }
+}
+
+/// Price one tile of `lanes` candidates and emit each outcome.
+///
+/// Each lane accumulates its own distance dimension-sequentially (the
+/// exact add sequence of the scalar kernel); idle lanes in a final partial
+/// tile duplicate lane 0's row and are never emitted. The bound is sampled
+/// once at tile entry; after every [`DIM_CHUNK`] dimensions the tile
+/// aborts early iff *every* lane's running sum already exceeds it — lanes
+/// cut short that way are classified `None`, which is exactly what their
+/// completed sum would have yielded (monotone non-negative accumulation).
+fn dist_tile_emit<S: ScanSink>(
+    q: &[f64],
+    points: &[f64],
+    d: usize,
+    ids: &[u32; TILE_LANES],
+    lanes: usize,
+    sink: &mut S,
+) {
+    let bound = sink.bound();
+    let mut acc = [0.0f64; TILE_LANES];
+    let mut rows: [&[f64]; TILE_LANES] = [&[]; TILE_LANES];
+    for (l, row) in rows.iter_mut().enumerate() {
+        let i = ids[if l < lanes { l } else { 0 }] as usize;
+        *row = &points[i * d..i * d + d];
+    }
+    let mut t = 0usize;
+    while t < d {
+        let stop = (t + DIM_CHUNK).min(d);
+        for c in t..stop {
+            let qc = q[c];
+            for l in 0..TILE_LANES {
+                let diff = qc - rows[l][c];
+                acc[l] += diff * diff;
+            }
+        }
+        t = stop;
+        let mut lowest = acc[0];
+        for &a in &acc[1..] {
+            if a < lowest {
+                lowest = a;
+            }
+        }
+        if lowest > bound {
+            break;
+        }
+    }
+    for l in 0..lanes {
+        // d == 0 completes with 0.0 unconditionally, like the scalar
+        // reference whose per-dimension abort check never runs.
+        let res = if d > 0 && acc[l] > bound {
+            None
+        } else {
+            Some(acc[l])
+        };
+        sink.emit(ids[l], res);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (b) row-blocked CSR mat-vec
+// ---------------------------------------------------------------------------
+
+/// Borrowed view of a CSR matrix's storage arrays — what the mat-vec
+/// kernels consume ([`super::sparse::CsrMatrix`] hands it out via `view`).
+#[derive(Debug, Clone, Copy)]
+pub struct CsrView<'a> {
+    /// Row pointer array (`rows + 1` entries).
+    pub indptr: &'a [usize],
+    /// Column index per stored entry.
+    pub indices: &'a [u32],
+    /// Value per stored entry.
+    pub values: &'a [f64],
+}
+
+/// `y[i - lo] = A[i] · x` for rows `[lo, hi)`, dispatching on
+/// [`kernel_mode`].
+pub fn spmv_rows_into(a: CsrView<'_>, x: &[f64], lo: usize, hi: usize, y: &mut [f64]) {
+    match kernel_mode() {
+        KernelMode::Scalar => spmv_rows_scalar(a, x, lo, hi, y),
+        KernelMode::Blocked => spmv_rows_blocked(a, x, lo, hi, y),
+    }
+}
+
+/// Scalar reference: one sequential accumulator per row.
+pub fn spmv_rows_scalar(a: CsrView<'_>, x: &[f64], lo: usize, hi: usize, y: &mut [f64]) {
+    debug_assert!(lo <= hi && hi + 1 <= a.indptr.len());
+    debug_assert_eq!(y.len(), hi - lo);
+    for i in lo..hi {
+        let mut acc = 0.0f64;
+        for k in a.indptr[i]..a.indptr[i + 1] {
+            acc += a.values[k] * x[a.indices[k] as usize];
+        }
+        y[i - lo] = acc;
+    }
+}
+
+/// Row-blocked mat-vec: [`KERNEL_BLOCK`] consecutive rows advance in lock
+/// step over their common entry-count prefix with independent
+/// accumulators, then finish their leftovers row by row. Each row's own
+/// add order is unchanged, so the result is bit-identical to the scalar
+/// reference and independent of the `[lo, hi)` task partition.
+pub fn spmv_rows_blocked(a: CsrView<'_>, x: &[f64], lo: usize, hi: usize, y: &mut [f64]) {
+    debug_assert!(lo <= hi && hi + 1 <= a.indptr.len());
+    debug_assert_eq!(y.len(), hi - lo);
+    let CsrView { indptr, indices, values } = a;
+    let mut i = lo;
+    while i + KERNEL_BLOCK <= hi {
+        let s = [indptr[i], indptr[i + 1], indptr[i + 2], indptr[i + 3]];
+        let e = [indptr[i + 1], indptr[i + 2], indptr[i + 3], indptr[i + 4]];
+        let mut common = e[0] - s[0];
+        for l in 1..KERNEL_BLOCK {
+            common = common.min(e[l] - s[l]);
+        }
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        for t in 0..common {
+            a0 += values[s[0] + t] * x[indices[s[0] + t] as usize];
+            a1 += values[s[1] + t] * x[indices[s[1] + t] as usize];
+            a2 += values[s[2] + t] * x[indices[s[2] + t] as usize];
+            a3 += values[s[3] + t] * x[indices[s[3] + t] as usize];
+        }
+        for t in s[0] + common..e[0] {
+            a0 += values[t] * x[indices[t] as usize];
+        }
+        for t in s[1] + common..e[1] {
+            a1 += values[t] * x[indices[t] as usize];
+        }
+        for t in s[2] + common..e[2] {
+            a2 += values[t] * x[indices[t] as usize];
+        }
+        for t in s[3] + common..e[3] {
+            a3 += values[t] * x[indices[t] as usize];
+        }
+        let o = i - lo;
+        y[o] = a0;
+        y[o + 1] = a1;
+        y[o + 2] = a2;
+        y[o + 3] = a3;
+        i += KERNEL_BLOCK;
+    }
+    while i < hi {
+        let mut acc = 0.0f64;
+        for k in indptr[i]..indptr[i + 1] {
+            acc += values[k] * x[indices[k] as usize];
+        }
+        y[i - lo] = acc;
+        i += 1;
+    }
+}
+
+/// Multi-column block mat-vec `Y[lo..hi) = A[lo..hi) · X` for an n×m
+/// row-major column block, dispatching on [`kernel_mode`]. `y` must hold
+/// `(hi - lo) * m` values.
+pub fn spmv_block_rows_into(
+    a: CsrView<'_>,
+    x: &[f64],
+    m: usize,
+    lo: usize,
+    hi: usize,
+    y: &mut [f64],
+) {
+    match kernel_mode() {
+        KernelMode::Scalar => spmv_block_rows_scalar(a, x, m, lo, hi, y),
+        KernelMode::Blocked => spmv_block_rows_blocked(a, x, m, lo, hi, y),
+    }
+}
+
+/// Scalar reference for the multi-column block mat-vec, with the **same
+/// reduction contract** as the blocked form: per (row, column), entries
+/// decompose into [`NUM_ACC`] strided lane sums plus a tail lane, folded
+/// through the fixed tree `((l0+l1)+(l2+l3)) + tail`. The adds per lane
+/// happen in the same order as the blocked kernel's scratch rows, so the
+/// two are bit-identical.
+pub fn spmv_block_rows_scalar(
+    a: CsrView<'_>,
+    x: &[f64],
+    m: usize,
+    lo: usize,
+    hi: usize,
+    y: &mut [f64],
+) {
+    debug_assert!(lo <= hi && hi + 1 <= a.indptr.len());
+    debug_assert_eq!(y.len(), (hi - lo) * m);
+    for i in lo..hi {
+        let start = a.indptr[i];
+        let end = a.indptr[i + 1];
+        let yo = (i - lo) * m;
+        for c in 0..m {
+            let mut lanes = [0.0f64; NUM_ACC];
+            let mut tail = 0.0f64;
+            let mut k = start;
+            while k + NUM_ACC <= end {
+                for (l, acc) in lanes.iter_mut().enumerate() {
+                    *acc += a.values[k + l] * x[a.indices[k + l] as usize * m + c];
+                }
+                k += NUM_ACC;
+            }
+            while k < end {
+                tail += a.values[k] * x[a.indices[k] as usize * m + c];
+                k += 1;
+            }
+            y[yo + c] = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3])) + tail;
+        }
+    }
+}
+
+/// Blocked multi-column mat-vec: [`NUM_ACC`] unroll lanes + 1 tail lane,
+/// each `m` wide, walking a whole row's entries once for all columns (the
+/// ChebDav operator application). Moved verbatim from
+/// `CsrMatrix::spmv_block_rows`, which now delegates here.
+pub fn spmv_block_rows_blocked(
+    a: CsrView<'_>,
+    x: &[f64],
+    m: usize,
+    lo: usize,
+    hi: usize,
+    y: &mut [f64],
+) {
+    debug_assert!(lo <= hi && hi + 1 <= a.indptr.len());
+    debug_assert_eq!(y.len(), (hi - lo) * m);
+    let mut acc = vec![0.0f64; (NUM_ACC + 1) * m];
+    for i in lo..hi {
+        for v in acc.iter_mut() {
+            *v = 0.0;
+        }
+        let end = a.indptr[i + 1];
+        let mut k = a.indptr[i];
+        while k + NUM_ACC <= end {
+            for lane in 0..NUM_ACC {
+                let v = a.values[k + lane];
+                let xo = a.indices[k + lane] as usize * m;
+                let ao = lane * m;
+                for c in 0..m {
+                    acc[ao + c] += v * x[xo + c];
+                }
+            }
+            k += NUM_ACC;
+        }
+        while k < end {
+            let v = a.values[k];
+            let xo = a.indices[k] as usize * m;
+            let ao = NUM_ACC * m;
+            for c in 0..m {
+                acc[ao + c] += v * x[xo + c];
+            }
+            k += 1;
+        }
+        let yo = (i - lo) * m;
+        for c in 0..m {
+            y[yo + c] =
+                ((acc[c] + acc[m + c]) + (acc[2 * m + c] + acc[3 * m + c])) + acc[NUM_ACC * m + c];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (c) point×center assignment tile (f64 + f32)
+// ---------------------------------------------------------------------------
+
+macro_rules! assign_kernels {
+    ($ty:ty, $dispatch:ident, $scalar:ident, $blocked:ident, $norms_fn:ident,
+     $margin:expr, $slack:expr) => {
+        /// Hoisted per-center Euclidean norms over a flat k×d center block
+        /// — the screen input of the blocked assignment tile.
+        pub fn $norms_fn(centers: &[$ty], k: usize, d: usize) -> Vec<$ty> {
+            debug_assert_eq!(centers.len(), k * d);
+            (0..k)
+                .map(|c| {
+                    centers[c * d..(c + 1) * d]
+                        .iter()
+                        .map(|v| v * v)
+                        .sum::<$ty>()
+                        .sqrt()
+                })
+                .collect()
+        }
+
+        /// Nearest center of `p` (ties to the lowest index), dispatching
+        /// on [`kernel_mode`].
+        pub fn $dispatch(p: &[$ty], centers: &[$ty], norms: &[$ty], k: usize, d: usize) -> u32 {
+            match kernel_mode() {
+                KernelMode::Scalar => $scalar(p, centers, norms, k, d),
+                KernelMode::Blocked => $blocked(p, centers, norms, k, d),
+            }
+        }
+
+        /// Scalar reference: full sequential distance per center, strict
+        /// `<` keeps the lowest index on ties.
+        pub fn $scalar(p: &[$ty], centers: &[$ty], _norms: &[$ty], k: usize, d: usize) -> u32 {
+            assert!(k >= 1, "assign needs at least one center");
+            debug_assert_eq!(p.len(), d);
+            debug_assert_eq!(centers.len(), k * d);
+            let mut best = <$ty>::INFINITY;
+            let mut best_idx = 0u32;
+            for c in 0..k {
+                let ctr = &centers[c * d..(c + 1) * d];
+                let mut acc: $ty = 0.0;
+                for t in 0..d {
+                    let diff = p[t] - ctr[t];
+                    acc += diff * diff;
+                }
+                if acc < best {
+                    best = acc;
+                    best_idx = c as u32;
+                }
+            }
+            best_idx
+        }
+
+        /// Blocked assignment: [`TILE_LANES`] center lanes per tile, a
+        /// hoisted-norm screen that skips tiles proven hopeless, and a
+        /// whole-tile running-partial abort against the entry best.
+        ///
+        /// Soundness of the screen (why it can never flip the argmin):
+        /// `‖p − c‖ ≥ |‖p‖ − ‖c‖|` exactly. The *computed* norms carry a
+        /// relative error ≲ (d/2+2)·ε, which the subtracted margin
+        /// `(‖p‖+‖c‖)·margin` dominates for any realistic d; the computed
+        /// squared distance undershoots the real one by at most a
+        /// ≈ 2(d+2)·ε factor, which the `slack` multiplier dominates. So
+        /// `gap²·slack > best` ⟹ the lane's computed d2 strictly exceeds
+        /// `best`, and strict `<` would have rejected it anyway. Lanes cut
+        /// short by the tile abort hold a partial sum already above the
+        /// tile-entry best — the same argument applies. Completed lanes
+        /// are bit-identical to the scalar scan, and the fold visits them
+        /// in center order, so selection and ties match exactly.
+        pub fn $blocked(p: &[$ty], centers: &[$ty], norms: &[$ty], k: usize, d: usize) -> u32 {
+            assert!(k >= 1, "assign needs at least one center");
+            debug_assert_eq!(p.len(), d);
+            debug_assert_eq!(centers.len(), k * d);
+            debug_assert_eq!(norms.len(), k);
+            // Center 0 priced in full: the scalar scan's first iteration.
+            let mut best: $ty = 0.0;
+            for t in 0..d {
+                let diff = p[t] - centers[t];
+                best += diff * diff;
+            }
+            let mut best_idx = 0u32;
+            let pn: $ty = p.iter().map(|v| v * v).sum::<$ty>().sqrt();
+            let mut c0 = 1usize;
+            while c0 < k {
+                let lanes = (k - c0).min(TILE_LANES);
+                let mut screened = true;
+                for &nc in &norms[c0..c0 + lanes] {
+                    let gap = (pn - nc).abs() - (pn + nc) * $margin;
+                    if !(gap > 0.0 && gap * gap * $slack > best) {
+                        screened = false;
+                        break;
+                    }
+                }
+                if screened {
+                    c0 += lanes;
+                    continue;
+                }
+                let mut acc: [$ty; TILE_LANES] = [0.0; TILE_LANES];
+                let mut rows: [&[$ty]; TILE_LANES] = [&[]; TILE_LANES];
+                for (l, row) in rows.iter_mut().enumerate() {
+                    let c = c0 + if l < lanes { l } else { 0 };
+                    *row = &centers[c * d..(c + 1) * d];
+                }
+                let mut t = 0usize;
+                while t < d {
+                    let stop = (t + DIM_CHUNK).min(d);
+                    for c in t..stop {
+                        let pc = p[c];
+                        for l in 0..TILE_LANES {
+                            let diff = pc - rows[l][c];
+                            acc[l] += diff * diff;
+                        }
+                    }
+                    t = stop;
+                    let mut lowest = acc[0];
+                    for &a in &acc[1..] {
+                        if a < lowest {
+                            lowest = a;
+                        }
+                    }
+                    if lowest > best {
+                        break;
+                    }
+                }
+                for l in 0..lanes {
+                    if acc[l] < best {
+                        best = acc[l];
+                        best_idx = (c0 + l) as u32;
+                    }
+                }
+                c0 += lanes;
+            }
+            best_idx
+        }
+    };
+}
+
+assign_kernels!(
+    f64,
+    assign_point,
+    assign_point_scalar,
+    assign_point_blocked,
+    center_norms,
+    1e-12,
+    1.0 - 1e-9
+);
+assign_kernels!(
+    f32,
+    assign_point_f32,
+    assign_point_scalar_f32,
+    assign_point_blocked_f32,
+    center_norms_f32,
+    1e-4,
+    1.0 - 1e-4
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pseudo(seed: u64, len: usize) -> Vec<f64> {
+        let mut s = seed;
+        (0..len)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (s >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0
+            })
+            .collect()
+    }
+
+    struct Rec {
+        bound: f64,
+        out: Vec<(u32, Option<u64>)>,
+    }
+
+    impl ScanSink for Rec {
+        fn bound(&self) -> f64 {
+            self.bound
+        }
+        fn emit(&mut self, id: u32, d2: Option<f64>) {
+            self.out.push((id, d2.map(f64::to_bits)));
+        }
+    }
+
+    #[test]
+    fn mode_flag_round_trips() {
+        let before = kernel_mode();
+        set_kernel_mode(KernelMode::Scalar);
+        assert_eq!(kernel_mode(), KernelMode::Scalar);
+        set_kernel_mode(KernelMode::Blocked);
+        assert_eq!(kernel_mode(), KernelMode::Blocked);
+        set_kernel_mode(before);
+    }
+
+    #[test]
+    fn blocked_scan_completed_values_match_sq_dist_bitwise() {
+        let d = 9;
+        let n = TILE_LANES + 3;
+        let points = pseudo(11, n * d);
+        let q = pseudo(13, d);
+        let ids: Vec<u32> = (0..n as u32).collect();
+        let mut sink = Rec { bound: f64::INFINITY, out: Vec::new() };
+        sq_dist_scan_ids_blocked(&q, &points, d, &ids, None, &mut sink);
+        assert_eq!(sink.out.len(), n);
+        for (id, bits) in sink.out {
+            let i = id as usize;
+            let want = super::super::vector::sq_dist(&q, &points[i * d..(i + 1) * d]);
+            assert_eq!(bits, Some(want.to_bits()), "id={id}");
+        }
+    }
+
+    #[test]
+    fn blocked_scan_classifies_like_the_scalar_reference() {
+        let d = 2 * DIM_CHUNK + 1;
+        let n = 3 * TILE_LANES;
+        let points = pseudo(17, n * d);
+        let q = pseudo(19, d);
+        let ids: Vec<u32> = (0..n as u32).collect();
+        for bound in [0.0, 2.0, 8.0, f64::INFINITY] {
+            let mut a = Rec { bound, out: Vec::new() };
+            sq_dist_scan_ids_scalar(&q, &points, d, &ids, Some(4), &mut a);
+            let mut b = Rec { bound, out: Vec::new() };
+            sq_dist_scan_ids_blocked(&q, &points, d, &ids, Some(4), &mut b);
+            assert_eq!(a.out, b.out, "bound={bound}");
+        }
+    }
+
+    #[test]
+    fn assign_blocked_matches_scalar_on_random_centers() {
+        for k in 1..=2 * TILE_LANES + 1 {
+            let d = 6;
+            let centers = pseudo(23 + k as u64, k * d);
+            let norms = center_norms(&centers, k, d);
+            for pi in 0..8u64 {
+                let p = pseudo(29 ^ (pi * 7919), d);
+                assert_eq!(
+                    assign_point_scalar(&p, &centers, &norms, k, d),
+                    assign_point_blocked(&p, &centers, &norms, k, d),
+                    "k={k} pi={pi}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn spmv_blocked_matches_scalar_bitwise() {
+        let n = 2 * KERNEL_BLOCK + 3;
+        let indptr: Vec<usize> = (0..=n).map(|i| i * (i + 1) / 2).collect();
+        let nnz = indptr[n];
+        let indices: Vec<u32> = (0..nnz).map(|k| (k % n) as u32).collect();
+        let values = pseudo(31, nnz);
+        let x = pseudo(37, n);
+        let a = CsrView { indptr: &indptr, indices: &indices, values: &values };
+        let mut ys = vec![0.0; n];
+        spmv_rows_scalar(a, &x, 0, n, &mut ys);
+        let mut yb = vec![0.0; n];
+        spmv_rows_blocked(a, &x, 0, n, &mut yb);
+        let bits = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<u64>>();
+        assert_eq!(bits(&ys), bits(&yb));
+    }
+}

@@ -10,10 +10,14 @@
 //! - [`chebdav::chebdav_smallest`] — block Chebyshev–Davidson (filtered
 //!   subspace iteration + Rayleigh–Ritz), matrix accessed through a block
 //!   mat-vec closure so one distributed job prices all m columns at once.
+//! - [`kernels`] — compile-time-blocked multi-accumulator kernels for the
+//!   hot paths (distance scans, row-blocked CSR mat-vec, the k-means
+//!   assignment tile), each with a bit-identical scalar reference.
 
 pub mod chebdav;
 pub mod dense;
 pub mod jacobi;
+pub mod kernels;
 pub mod lanczos;
 pub mod sparse;
 pub mod tridiag;

@@ -8,6 +8,7 @@
 use crate::error::{Error, Result};
 
 use super::dense::DenseMatrix;
+use super::kernels::{self, CsrView};
 
 /// Compressed-sparse-row matrix of f64.
 #[derive(Debug, Clone, PartialEq)]
@@ -104,31 +105,33 @@ impl CsrMatrix {
             .zip(self.values[range].iter().copied())
     }
 
-    /// y = A x.
+    /// Borrowed view of the storage arrays — the form the
+    /// [`kernels`](super::kernels) mat-vec routines consume.
+    pub fn view(&self) -> CsrView<'_> {
+        CsrView {
+            indptr: &self.indptr,
+            indices: &self.indices,
+            values: &self.values,
+        }
+    }
+
+    /// y = A x. Routed through the row-blocked kernel
+    /// ([`kernels::spmv_rows_into`]); bit-identical to the per-row scalar
+    /// scan by the kernel-layer contract (DESIGN.md §2.14).
     pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.cols, "spmv dimension mismatch");
         let mut y = vec![0.0; self.rows];
-        for i in 0..self.rows {
-            let mut acc = 0.0;
-            for k in self.indptr[i]..self.indptr[i + 1] {
-                acc += self.values[k] * x[self.indices[k] as usize];
-            }
-            y[i] = acc;
-        }
+        kernels::spmv_rows_into(self.view(), x, 0, self.rows, &mut y);
         y
     }
 
     /// spmv restricted to a row range [lo, hi) — one MR map task's work.
+    /// Same kernel as [`Self::spmv`]; rows never share accumulators, so
+    /// any task partition reassembles bit-identically to the full scan.
     pub fn spmv_rows(&self, x: &[f64], lo: usize, hi: usize) -> Vec<f64> {
         assert!(lo <= hi && hi <= self.rows);
         let mut y = vec![0.0; hi - lo];
-        for i in lo..hi {
-            let mut acc = 0.0;
-            for k in self.indptr[i]..self.indptr[i + 1] {
-                acc += self.values[k] * x[self.indices[k] as usize];
-            }
-            y[i - lo] = acc;
-        }
+        kernels::spmv_rows_into(self.view(), x, lo, hi, &mut y);
         y
     }
 
@@ -137,55 +140,20 @@ impl CsrMatrix {
     /// column `c` — the layout of the coordinator's multi-vector table
     /// records); the result is row-major `(hi-lo)×m`.
     ///
-    /// The inner loop is the 4-way unrolled multi-accumulator shape of
-    /// [`super::vector::dot`] lifted to `m` columns: `NUM_ACC` lanes of
-    /// m-wide scratch accumulate the row's stored entries, an explicit tail
-    /// lane takes the 0..3 leftovers, and each output folds through the
-    /// fixed tree `((l0+l1)+(l2+l3)) + tail`. Every output row depends only
-    /// on that row's entries and `x` — never on `[lo, hi)` — so any task
-    /// partitioning of the row space reassembles bit-identically to the
-    /// single-machine call over `[0, n)`. The distributed ChebDav job and
-    /// its oracle rely on exactly this.
+    /// The body lives in [`kernels::spmv_block_rows_into`]: `NUM_ACC`
+    /// lanes of m-wide scratch accumulate the row's stored entries, an
+    /// explicit tail lane takes the 0..3 leftovers, and each output folds
+    /// through the fixed tree `((l0+l1)+(l2+l3)) + tail`. Every output row
+    /// depends only on that row's entries and `x` — never on `[lo, hi)` —
+    /// so any task partitioning of the row space reassembles
+    /// bit-identically to the single-machine call over `[0, n)`. The
+    /// distributed ChebDav job and its oracle rely on exactly this.
     pub fn spmv_block_rows(&self, x: &[f64], m: usize, lo: usize, hi: usize) -> Vec<f64> {
-        use super::vector::NUM_ACC;
         assert!(lo <= hi && hi <= self.rows);
         assert!(m > 0, "spmv_block_rows needs at least one column");
         assert_eq!(x.len(), self.cols * m, "spmv_block dimension mismatch");
         let mut y = vec![0.0f64; (hi - lo) * m];
-        // NUM_ACC unroll lanes + 1 tail lane, each m wide, reused per row.
-        let mut acc = vec![0.0f64; (NUM_ACC + 1) * m];
-        for i in lo..hi {
-            for a in acc.iter_mut() {
-                *a = 0.0;
-            }
-            let end = self.indptr[i + 1];
-            let mut k = self.indptr[i];
-            while k + NUM_ACC <= end {
-                for lane in 0..NUM_ACC {
-                    let v = self.values[k + lane];
-                    let xo = self.indices[k + lane] as usize * m;
-                    let ao = lane * m;
-                    for c in 0..m {
-                        acc[ao + c] += v * x[xo + c];
-                    }
-                }
-                k += NUM_ACC;
-            }
-            while k < end {
-                let v = self.values[k];
-                let xo = self.indices[k] as usize * m;
-                let ao = NUM_ACC * m;
-                for c in 0..m {
-                    acc[ao + c] += v * x[xo + c];
-                }
-                k += 1;
-            }
-            let yo = (i - lo) * m;
-            for c in 0..m {
-                y[yo + c] = ((acc[c] + acc[m + c]) + (acc[2 * m + c] + acc[3 * m + c]))
-                    + acc[NUM_ACC * m + c];
-            }
-        }
+        kernels::spmv_block_rows_into(self.view(), x, m, lo, hi, &mut y);
         y
     }
 

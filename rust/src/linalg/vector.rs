@@ -68,14 +68,28 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     }
 }
 
-/// x *= alpha.
+/// x *= alpha. 4-way unrolled with an explicit tail, like [`axpy`]: the
+/// update is element-wise, so the unrolled form is bit-identical to the
+/// scalar loop by construction.
 pub fn scale(alpha: f64, x: &mut [f64]) {
-    for xi in x.iter_mut() {
-        *xi *= alpha;
+    let len = x.len();
+    let mut i = 0;
+    while i + NUM_ACC <= len {
+        x[i] *= alpha;
+        x[i + 1] *= alpha;
+        x[i + 2] *= alpha;
+        x[i + 3] *= alpha;
+        i += NUM_ACC;
+    }
+    while i < len {
+        x[i] *= alpha;
+        i += 1;
     }
 }
 
 /// Normalize in place; returns the original norm (0 leaves x untouched).
+/// Routed through the unrolled [`scale`], so every hot vector primitive
+/// shares the same blocked shape.
 pub fn normalize(x: &mut [f64]) -> f64 {
     let n = norm(x);
     if n > 0.0 {
@@ -200,6 +214,20 @@ mod tests {
             let mut y2 = y1.clone();
             axpy(-0.3721, &x, &mut y1);
             axpy_scalar(-0.3721, &x, &mut y2);
+            let bits = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&y1), bits(&y2), "len={len}");
+        }
+    }
+
+    #[test]
+    fn unrolled_scale_is_bit_identical_to_scalar() {
+        for len in [0usize, 1, 3, 4, 5, 8, 17, 256, 1001] {
+            let mut y1 = pseudo(0x5ca1e ^ len as u64, len);
+            let mut y2 = y1.clone();
+            scale(-0.3721, &mut y1);
+            for yi in y2.iter_mut() {
+                *yi *= -0.3721;
+            }
             let bits = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
             assert_eq!(bits(&y1), bits(&y2), "len={len}");
         }

@@ -62,6 +62,13 @@ pub fn laplacian_block(
 }
 
 /// K-means step: returns (assign (p,), sums (k, d), counts (k,)).
+///
+/// The nearest-center scan runs through the f32 blocked assignment tile
+/// ([`crate::linalg::kernels::assign_point_f32`]) with center norms
+/// hoisted once per step; selection (including ties to the lowest center
+/// index) is bit-identical to the original strict-`<` scan by the
+/// kernel-layer contract. Assignment is still computed for padding points
+/// (mask 0) — only the sums/counts are mask-gated.
 pub fn kmeans_step(
     points: &[f32],
     centers: &[f32],
@@ -73,25 +80,13 @@ pub fn kmeans_step(
     assert_eq!(points.len(), p * d);
     assert_eq!(centers.len(), k * d);
     assert_eq!(mask.len(), p);
+    let norms = crate::linalg::kernels::center_norms_f32(centers, k, d);
     let mut assign = vec![0i32; p];
     let mut sums = vec![0.0f32; k * d];
     let mut counts = vec![0.0f32; k];
     for i in 0..p {
         let pi = &points[i * d..(i + 1) * d];
-        let mut best = 0usize;
-        let mut best_d2 = f32::INFINITY;
-        for c in 0..k {
-            let cc = &centers[c * d..(c + 1) * d];
-            let mut d2 = 0.0f32;
-            for t in 0..d {
-                let diff = pi[t] - cc[t];
-                d2 += diff * diff;
-            }
-            if d2 < best_d2 {
-                best_d2 = d2;
-                best = c;
-            }
-        }
+        let best = crate::linalg::kernels::assign_point_f32(pi, centers, &norms, k, d) as usize;
         assign[i] = best as i32;
         if mask[i] != 0.0 {
             counts[best] += mask[i];

@@ -4,6 +4,7 @@
 //! `epsilon` are dropped ("and then sparse it"). The single-machine versions
 //! here are the oracles the distributed phase-1 job is tested against.
 
+use crate::linalg::kernels::{self, ScanSink};
 use crate::linalg::{CsrMatrix, DenseMatrix};
 
 /// gamma = 1 / (2 sigma²) — the exponent factor the kernels take.
@@ -32,9 +33,12 @@ pub fn rbf_dense(points: &[Vec<f64>], sigma: f64) -> DenseMatrix {
 ///
 /// Two prunes keep the epsilon path honest at scale: row vectors are
 /// pre-sized from a sampled degree estimate instead of growing from empty,
-/// and each pair's distance sum aborts early once the running total
-/// already implies `v < epsilon` (`d2 > -ln(epsilon)/gamma` ⇒ dropped
-/// either way, so surviving entries are bit-identical to the naive scan).
+/// and each pair's distance scan — routed through the blocked distance
+/// kernel ([`kernels::sq_dist_scan_range`]) — aborts early once the
+/// running total already implies `v < epsilon` (`d2 > -ln(epsilon)/gamma`
+/// ⇒ dropped either way; the bound is fixed per run, so the kernel
+/// classifies exactly like the scalar scan and surviving entries are
+/// bit-identical to it).
 pub fn rbf_sparse(points: &[Vec<f64>], sigma: f64, epsilon: f64) -> CsrMatrix {
     let n = points.len();
     if n == 0 {
@@ -48,24 +52,48 @@ pub fn rbf_sparse(points: &[Vec<f64>], sigma: f64, epsilon: f64) -> CsrMatrix {
         f64::INFINITY
     };
     let est = estimated_degree(points, d2_bound);
+    let d = points[0].len();
+    let flat: Vec<f64> = points.iter().flatten().copied().collect();
+
+    /// Sink for row `i`'s upper-triangle scan: weight survivors land in
+    /// both row `i` and the mirrored row `j`.
+    struct RowSink<'a> {
+        rows: &'a mut Vec<Vec<(u32, f64)>>,
+        i: usize,
+        gamma: f64,
+        epsilon: f64,
+        d2_bound: f64,
+    }
+
+    impl ScanSink for RowSink<'_> {
+        fn bound(&self) -> f64 {
+            self.d2_bound
+        }
+
+        fn emit(&mut self, j: u32, d2: Option<f64>) {
+            let Some(d2) = d2 else { return };
+            let v = (-self.gamma * d2).exp();
+            if v >= self.epsilon {
+                self.rows[self.i].push((j, v));
+                self.rows[j as usize].push((self.i as u32, v));
+            }
+        }
+    }
+
     let mut rows: Vec<Vec<(u32, f64)>> =
         (0..n).map(|_| Vec::with_capacity(est + 1)).collect();
     for i in 0..n {
         rows[i].push((i as u32, 1.0));
-        for j in (i + 1)..n {
-            let Some(d2) = crate::linalg::vector::sq_dist_bounded(
-                &points[i],
-                &points[j],
-                d2_bound,
-            ) else {
-                continue;
-            };
-            let v = (-gamma * d2).exp();
-            if v >= epsilon {
-                rows[i].push((j as u32, v));
-                rows[j].push((i as u32, v));
-            }
-        }
+        let mut sink = RowSink { rows: &mut rows, i, gamma, epsilon, d2_bound };
+        kernels::sq_dist_scan_range(
+            &flat[i * d..(i + 1) * d],
+            &flat,
+            d,
+            (i + 1) as u32,
+            n as u32,
+            None,
+            &mut sink,
+        );
     }
     CsrMatrix::from_rows(n, rows)
 }

@@ -1,0 +1,276 @@
+//! Property suite for the blocked kernel layer (DESIGN.md §2.14): every
+//! blocked kernel bit-identical to its scalar reference across all tail
+//! shapes, partition invariance for the row-blocked spmv, tie behavior of
+//! the assignment tile, and an end-to-end guard that a quick-config run
+//! produces byte-identical labels/artifacts in both kernel modes.
+
+use std::sync::Arc;
+
+use psch::config::Config;
+use psch::coordinator::{Driver, PipelineInput};
+use psch::data::gaussian_blobs;
+use psch::knn::{Neighbor, TopTHeap};
+use psch::linalg::kernels::{
+    self, set_kernel_mode, KernelMode, ScanSink, DIM_CHUNK, KERNEL_BLOCK, TILE_LANES,
+};
+use psch::linalg::CsrMatrix;
+use psch::runtime::KernelRuntime;
+use psch::serving::ModelArtifact;
+
+fn pseudo(seed: u64, len: usize) -> Vec<f64> {
+    let mut s = seed;
+    (0..len)
+        .map(|_| {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (s >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0
+        })
+        .collect()
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+/// Recording sink with a fixed bound: the emitted `(id, Option<bits>)`
+/// sequence is the kernel's complete observable behavior.
+struct Rec {
+    bound: f64,
+    out: Vec<(u32, Option<u64>)>,
+}
+
+impl ScanSink for Rec {
+    fn bound(&self) -> f64 {
+        self.bound
+    }
+
+    fn emit(&mut self, id: u32, d2: Option<f64>) {
+        self.out.push((id, d2.map(f64::to_bits)));
+    }
+}
+
+#[test]
+fn blocked_scan_matches_scalar_for_all_tail_shapes() {
+    // Dimensions around every DIM_CHUNK boundary (plus d = 0) and candidate
+    // counts covering all partial-tile sizes 0..2·TILE_LANES+1, under fixed
+    // bounds from "nothing aborts" to "everything aborts".
+    let dims = [0usize, 1, 3, DIM_CHUNK - 1, DIM_CHUNK, DIM_CHUNK + 1, 2 * DIM_CHUNK + 3];
+    for &d in &dims {
+        for n in 0..=2 * TILE_LANES + 1 {
+            let points = pseudo(1000 + (d * 100 + n) as u64, n * d);
+            let q = pseudo(7 + d as u64, d);
+            let ids: Vec<u32> = (0..n as u32).collect();
+            let excludes = [None, Some(0u32), Some(n as u32 / 2)];
+            for bound in [f64::INFINITY, 0.0, 0.5, 2.0] {
+                for &exclude in &excludes {
+                    let mut a = Rec { bound, out: Vec::new() };
+                    kernels::sq_dist_scan_ids_scalar(&q, &points, d, &ids, exclude, &mut a);
+                    let mut b = Rec { bound, out: Vec::new() };
+                    kernels::sq_dist_scan_ids_blocked(&q, &points, d, &ids, exclude, &mut b);
+                    assert_eq!(a.out, b.out, "ids d={d} n={n} bound={bound} ex={exclude:?}");
+                    let mut c = Rec { bound, out: Vec::new() };
+                    kernels::sq_dist_scan_range_blocked(
+                        &q, &points, d, 0, n as u32, exclude, &mut c,
+                    );
+                    assert_eq!(a.out, c.out, "range d={d} n={n} bound={bound} ex={exclude:?}");
+                }
+            }
+        }
+    }
+}
+
+/// Sink feeding a top-t heap, like the knn query paths: the bound shrinks
+/// as survivors arrive, the sampling schedule differs between scalar
+/// (per candidate) and blocked (per tile) — the heap contents must not.
+struct HSink<'a> {
+    heap: &'a mut TopTHeap,
+}
+
+impl ScanSink for HSink<'_> {
+    fn bound(&self) -> f64 {
+        self.heap.bound()
+    }
+
+    fn emit(&mut self, id: u32, d2: Option<f64>) {
+        if let Some(d2) = d2 {
+            self.heap.push(Neighbor { d2, idx: id });
+        }
+    }
+}
+
+#[test]
+fn shrinking_bound_scan_leaves_heap_contents_bit_identical() {
+    let (n, d) = (200usize, 5usize);
+    let points = pseudo(42, n * d);
+    let ids: Vec<u32> = (0..n as u32).collect();
+    for qi in [0usize, 7, 123] {
+        let q = points[qi * d..(qi + 1) * d].to_vec();
+        for t in [1usize, 4, 17] {
+            let mut hs = TopTHeap::new(t);
+            let mut sink = HSink { heap: &mut hs };
+            kernels::sq_dist_scan_ids_scalar(&q, &points, d, &ids, Some(qi as u32), &mut sink);
+            let mut hb = TopTHeap::new(t);
+            let mut sink = HSink { heap: &mut hb };
+            kernels::sq_dist_scan_ids_blocked(&q, &points, d, &ids, Some(qi as u32), &mut sink);
+            let a: Vec<(u32, u64)> =
+                hs.into_sorted().iter().map(|nb| (nb.idx, nb.d2.to_bits())).collect();
+            let b: Vec<(u32, u64)> =
+                hb.into_sorted().iter().map(|nb| (nb.idx, nb.d2.to_bits())).collect();
+            assert_eq!(a, b, "qi={qi} t={t}");
+        }
+    }
+}
+
+/// Ragged CSR fixture: row i holds `(i*7+2) % 12` entries (every nnz count
+/// 0..=11, so every lane/tail combination of the row block appears), with
+/// distinct columns `(i + 3j) mod n` (n = 37 is prime).
+fn ragged_csr(n: usize) -> CsrMatrix {
+    let rows: Vec<Vec<(u32, f64)>> = (0..n)
+        .map(|i| {
+            let nnz = (i * 7 + 2) % 12;
+            let vals = pseudo(900 + i as u64, nnz);
+            (0..nnz)
+                .map(|j| (((i + 3 * j) % n) as u32, vals[j]))
+                .collect()
+        })
+        .collect();
+    CsrMatrix::from_rows(n, rows)
+}
+
+#[test]
+fn blocked_spmv_is_bit_identical_and_partition_invariant() {
+    let n = 37usize;
+    assert!(n > 2 * KERNEL_BLOCK, "fixture must span several row blocks");
+    let a = ragged_csr(n);
+    let x = pseudo(5150, n);
+    let mut ys = vec![0.0f64; n];
+    kernels::spmv_rows_scalar(a.view(), &x, 0, n, &mut ys);
+    let mut yb = vec![0.0f64; n];
+    kernels::spmv_rows_blocked(a.view(), &x, 0, n, &mut yb);
+    assert_eq!(bits(&ys), bits(&yb), "blocked == scalar bitwise");
+    assert_eq!(bits(&a.spmv(&x)), bits(&ys), "dispatching spmv agrees");
+    assert_eq!(bits(&a.spmv_rows(&x, 0, n)), bits(&ys), "spmv_rows agrees");
+    // Partition invariance: any [lo, hi) split reassembles to the full
+    // scan, and a partial blocked call equals the full result's slice.
+    for &split in &[1usize, 3, KERNEL_BLOCK, KERNEL_BLOCK + 1, 8, 19, n - 1] {
+        let mut pieced = a.spmv_rows(&x, 0, split);
+        pieced.extend(a.spmv_rows(&x, split, n));
+        assert_eq!(bits(&pieced), bits(&ys), "split={split}");
+        let mut part = vec![0.0f64; n - split];
+        kernels::spmv_rows_blocked(a.view(), &x, split, n, &mut part);
+        assert_eq!(bits(&part), bits(&ys[split..]), "offset start split={split}");
+    }
+}
+
+#[test]
+fn blocked_block_spmv_matches_its_scalar_reference() {
+    let n = 37usize;
+    let m = 3usize;
+    let a = ragged_csr(n);
+    let x = pseudo(6060, n * m);
+    let mut ys = vec![0.0f64; n * m];
+    kernels::spmv_block_rows_scalar(a.view(), &x, m, 0, n, &mut ys);
+    let mut yb = vec![0.0f64; n * m];
+    kernels::spmv_block_rows_blocked(a.view(), &x, m, 0, n, &mut yb);
+    assert_eq!(bits(&ys), bits(&yb), "block spmv blocked == scalar bitwise");
+    assert_eq!(bits(&a.spmv_block_rows(&x, m, 0, n)), bits(&ys), "method dispatch agrees");
+}
+
+#[test]
+fn assign_tile_matches_scalar_across_all_center_counts() {
+    for k in 1..=2 * TILE_LANES + 2 {
+        for &d in &[0usize, 1, 7, 16] {
+            let centers = pseudo(30 + (k * 100 + d) as u64, k * d);
+            let norms = kernels::center_norms(&centers, k, d);
+            for pi in 0..6u64 {
+                let p = pseudo(777 ^ (pi * 7919), d);
+                let s = kernels::assign_point_scalar(&p, &centers, &norms, k, d);
+                let b = kernels::assign_point_blocked(&p, &centers, &norms, k, d);
+                assert_eq!(s, b, "k={k} d={d} pi={pi}");
+            }
+        }
+    }
+}
+
+#[test]
+fn assign_tile_ties_resolve_to_the_lowest_center_index() {
+    // Every center identical: every distance ties, so both forms must pick
+    // center 0 — the first strict minimum, like the original min_by scan.
+    let d = 4usize;
+    let one = pseudo(99, d);
+    for k in [1usize, 3, TILE_LANES, TILE_LANES + 5] {
+        let centers: Vec<f64> = (0..k).flat_map(|_| one.iter().copied()).collect();
+        let norms = kernels::center_norms(&centers, k, d);
+        let p = pseudo(123, d);
+        assert_eq!(kernels::assign_point_scalar(&p, &centers, &norms, k, d), 0);
+        assert_eq!(kernels::assign_point_blocked(&p, &centers, &norms, k, d), 0);
+    }
+}
+
+#[test]
+fn f32_assign_tile_matches_scalar() {
+    for k in 1..=TILE_LANES + 3 {
+        let d = 16usize;
+        let centers: Vec<f32> =
+            pseudo(400 + k as u64, k * d).iter().map(|&v| v as f32).collect();
+        let norms = kernels::center_norms_f32(&centers, k, d);
+        for pi in 0..6u64 {
+            let p: Vec<f32> = pseudo(500 ^ (pi * 31), d).iter().map(|&v| v as f32).collect();
+            assert_eq!(
+                kernels::assign_point_scalar_f32(&p, &centers, &norms, k, d),
+                kernels::assign_point_blocked_f32(&p, &centers, &norms, k, d),
+                "k={k} pi={pi}"
+            );
+        }
+    }
+}
+
+#[test]
+fn kmeans_assign_routes_through_the_kernel_unchanged() {
+    let ps = gaussian_blobs(240, 4, 6, 0.4, 8.0, 3);
+    let centers = psch::kmeans::init_centers(&ps.points, 4, psch::kmeans::Init::PlusPlus, 11);
+    let got = psch::kmeans::assign(&ps.points, &centers);
+    // Inline reference: the pre-kernel min_by scan (first minimum wins).
+    let want: Vec<usize> = ps
+        .points
+        .iter()
+        .map(|p| {
+            centers
+                .iter()
+                .enumerate()
+                .map(|(c, ctr)| (c, psch::linalg::vector::sq_dist(p, ctr)))
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .map(|(c, _)| c)
+                .unwrap()
+        })
+        .collect();
+    assert_eq!(got, want);
+}
+
+/// Restores the default kernel mode even if the test panics mid-way.
+struct RestoreMode;
+
+impl Drop for RestoreMode {
+    fn drop(&mut self) {
+        set_kernel_mode(KernelMode::Blocked);
+    }
+}
+
+#[test]
+fn quick_run_is_byte_identical_across_kernel_modes() {
+    let _guard = RestoreMode;
+    let cfg = Config::load("configs/quick.toml").unwrap();
+    let ps = gaussian_blobs(150, cfg.algo.k, 8, 0.4, 8.0, cfg.algo.seed);
+    let mut outputs: Vec<(Vec<usize>, String)> = Vec::new();
+    for mode in [KernelMode::Scalar, KernelMode::Blocked] {
+        set_kernel_mode(mode);
+        let driver = Driver::new(cfg.clone(), Arc::new(KernelRuntime::native()));
+        let result = driver
+            .run(&PipelineInput::Points { points: ps.points.clone() })
+            .unwrap();
+        let model =
+            ModelArtifact::from_run(driver.config(), &ps.points, &result).unwrap();
+        outputs.push((result.labels, model.to_json()));
+    }
+    assert_eq!(outputs[0].0, outputs[1].0, "labels must match across modes");
+    assert_eq!(outputs[0].1, outputs[1].1, "model artifact must be byte-identical");
+}
