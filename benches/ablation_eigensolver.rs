@@ -223,10 +223,12 @@ fn main() {
     let runtime = common::runtime();
     let mut blocks = Vec::new();
     let mut paper_jobs = (0usize, 0usize); // (lanczos, chebdav)
+    let mut last_eigen_virtual = 0.0f64;
     for (name, cfg, n) in [("quick", &quick, 600usize), ("paper", &paper, 2048)] {
         let mut runs = Vec::new();
         for kind in [EigenSolverKind::Lanczos, EigenSolverKind::ChebDav] {
             let r = head_to_head(cfg, n, kind, &runtime);
+            last_eigen_virtual = r.virtual_s;
             table.row(&[
                 name.to_string(),
                 r.solver.to_string(),
@@ -273,6 +275,7 @@ fn main() {
             blocks.join(",")
         ),
     );
+    common::log_trajectory("eigensolver", "BENCH_eigensolver.json", last_eigen_virtual, 11);
 
     println!(
         "ablation_eigensolver: PASS — O(n^3) dense loses by {last_speedup:.0}x at n=512; \

@@ -46,6 +46,7 @@ fn main() {
     let mut points = Vec::new();
     let mut baseline_labels: Option<Vec<usize>> = None;
     let mut baseline_s = 0.0f64;
+    let mut last_virtual = 0.0f64;
     let mut pass = true;
 
     for deaths in 0..=3usize {
@@ -73,6 +74,7 @@ fn main() {
             pass = false;
         }
         let slowdown = r.total_virtual_s / baseline_s;
+        last_virtual = r.total_virtual_s;
         let failed = counter(names::FAILED_MAP_ATTEMPTS)
             + counter(names::FAILED_REDUCE_ATTEMPTS);
         table.row(&[
@@ -107,6 +109,7 @@ fn main() {
             points.join(",")
         ),
     );
+    common::log_trajectory("faults", "BENCH_faults.json", last_virtual, cfg.algo.seed);
     if pass {
         println!(
             "ablation_faulttolerance: PASS — node deaths cost virtual time, \

@@ -50,6 +50,7 @@ fn main() {
     ]);
     let mut blocks = Vec::new();
     let mut rates = Vec::new();
+    let mut last_virtual = 0.0f64;
     for (batch, refresh) in [
         (128usize, RefreshMode::Off),
         (256, RefreshMode::Off),
@@ -71,6 +72,7 @@ fn main() {
         );
         let s = run.stats.serving_summary();
         let rate = n_stream as f64 / run.stats.virtual_s;
+        last_virtual = run.stats.virtual_s;
         let quality = nmi(&held.labels, &run.labels);
         assert!(
             quality > 0.9,
@@ -123,6 +125,7 @@ fn main() {
             blocks.join(",")
         ),
     );
+    common::log_trajectory("serving", "BENCH_serving.json", last_virtual, cfg.algo.seed);
 
     let (best_batch, best_rate) =
         rates.iter().copied().fold((0usize, 0.0f64), |acc, r| {

@@ -37,6 +37,7 @@ fn main() {
     ]);
     let mut points = Vec::new();
     let mut pass = true;
+    let mut last_virtual = 0.0f64;
 
     for &n in &ns {
         let ps = gaussian_blobs(n, 3, d, 0.4, 8.0, 11);
@@ -70,6 +71,7 @@ fn main() {
         let tnn_out = run_tnn_phase(&svc, Arc::new(flat64), n, d, sigma, "S")
             .expect("tnn phase");
         let knn = tnn_out.stats.knn_summary();
+        last_virtual = tnn_out.stats.virtual_s;
         table.row(&[
             n.to_string(),
             "tnn".into(),
@@ -120,6 +122,7 @@ fn main() {
             points.join(",")
         ),
     );
+    common::log_trajectory("similarity", "BENCH_similarity.json", last_virtual, 11);
     if pass {
         println!(
             "ablation_similarity: PASS — the t-NN path prices strictly fewer \

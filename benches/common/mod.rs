@@ -97,6 +97,18 @@ pub fn run_json(m: usize, result: &psch::coordinator::PipelineResult) -> String 
     )
 }
 
+/// Append this bench's row to the shared `BENCH_trajectory.json` log —
+/// call right after [`write_bench_json`] so the log always points at a
+/// payload that exists.
+pub fn log_trajectory(bench: &str, report: &str, makespan_s: f64, seed: u64) {
+    psch::benchutil::append_trajectory(&psch::benchutil::TrajectoryRow {
+        bench,
+        report,
+        makespan_s,
+        seed,
+    });
+}
+
 /// Write a BENCH_*.json payload at the repo root: relative paths are
 /// anchored at `CARGO_MANIFEST_DIR`, so every bench's JSON lands beside
 /// Cargo.toml no matter what directory invoked it. Failures only warn

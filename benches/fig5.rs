@@ -22,10 +22,12 @@ fn main() {
     let sweep = [1usize, 2, 3, 4, 5, 6, 7, 8, 9, 10];
     let mut curve = SpeedupCurve::default();
     let mut runs_json: Vec<String> = Vec::new();
+    let mut last_total = 0.0f64;
     for &m in &sweep {
         let driver = common::driver_for(m, &runtime);
         let result = driver.run(&input).expect("pipeline");
         curve.push(m, result.total_virtual_s);
+        last_total = result.total_virtual_s;
         println!(
             "m={m:>2}: {}",
             hms(std::time::Duration::from_secs_f64(result.total_virtual_s))
@@ -42,6 +44,7 @@ fn main() {
             runs_json.join(",")
         ),
     );
+    common::log_trajectory("fig5", "BENCH_fig5.json", last_total, 42);
 
     println!("\ntotal-time trend (Fig. 5):\n{}", curve.ascii_plot(60, 14));
     println!("speedup series:");

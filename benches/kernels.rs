@@ -268,5 +268,7 @@ fn main() {
         "BENCH_kernels.json",
         &stats_json_with_speedups("kernels", &results, &speedups),
     );
+    // Wall-clock micro-bench: no virtual makespan, fixed data (seed 0).
+    common::log_trajectory("kernels", "BENCH_kernels.json", 0.0, 0);
     println!("kernels: OK");
 }

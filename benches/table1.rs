@@ -47,6 +47,7 @@ fn main() {
     let mut total_curve = SpeedupCurve::default();
 
     let mut runs_json: Vec<String> = Vec::new();
+    let mut last_total = 0.0f64;
     for &(m, _, _, _, paper_total) in &common::PAPER_TABLE1 {
         let driver = common::driver_for(m, &runtime);
         let (result, wall) =
@@ -75,6 +76,7 @@ fn main() {
             println!("      shuffle[{}]: {}", p.name, p.shuffle_summary().render());
         }
         runs_json.push(common::run_json(m, &result));
+        last_total = result.total_virtual_s;
     }
     common::write_bench_json(
         "BENCH_table1.json",
@@ -83,6 +85,7 @@ fn main() {
             runs_json.join(",")
         ),
     );
+    common::log_trajectory("table1", "BENCH_table1.json", last_total, 42);
 
     println!("\nTable 5-1 reproduction:\n{}", table.render());
 

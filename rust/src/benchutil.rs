@@ -80,6 +80,69 @@ pub fn stats_json_with_speedups(
     )
 }
 
+/// One row of the cross-bench trajectory log (`BENCH_trajectory.json`):
+/// which bench ran, where its payload landed, the headline makespan and
+/// the seed it echoes. Deliberately timestamp-free so same-seed reruns
+/// append byte-identical rows.
+#[derive(Debug, Clone)]
+pub struct TrajectoryRow<'a> {
+    /// Bench name (matches the payload's `bench`/`experiment` key).
+    pub bench: &'a str,
+    /// Path of the `BENCH_*.json` payload this row points at.
+    pub report: &'a str,
+    /// Headline virtual makespan of the bench's last/largest run (0 for
+    /// wall-clock-only micro-benches).
+    pub makespan_s: f64,
+    /// The data seed the bench ran with.
+    pub seed: u64,
+}
+
+/// Render one trajectory row as a JSON object.
+pub fn trajectory_row_json(row: &TrajectoryRow) -> String {
+    format!(
+        "{{\"bench\":\"{}\",\"report\":\"{}\",\"makespan_s\":{},\"seed\":{}}}",
+        crate::trace::json::esc(row.bench),
+        crate::trace::json::esc(row.report),
+        crate::trace::json::num(row.makespan_s),
+        row.seed
+    )
+}
+
+/// Append a row to the JSON-array log at `path`, creating the file on
+/// first use. An unparseable file is restarted rather than corrupted
+/// further.
+pub fn append_trajectory_at(
+    path: &std::path::Path,
+    row: &TrajectoryRow,
+) -> std::io::Result<()> {
+    let entry = trajectory_row_json(row);
+    let doc = match std::fs::read_to_string(path) {
+        Ok(text) => {
+            let trimmed = text.trim_end();
+            match trimmed.strip_suffix(']') {
+                Some(body) if body.trim_end().ends_with('[') => {
+                    format!("{}{entry}]\n", body.trim_end())
+                }
+                Some(body) => format!("{},\n{entry}]\n", body.trim_end()),
+                None => format!("[{entry}]\n"),
+            }
+        }
+        Err(_) => format!("[{entry}]\n"),
+    };
+    std::fs::write(path, doc)
+}
+
+/// Append a row to `BENCH_trajectory.json` beside Cargo.toml — the single
+/// cross-bench log every `BENCH_*.json` writer also feeds. Warn-only like
+/// `write_bench_json`: benches keep running on read-only checkouts.
+pub fn append_trajectory(row: &TrajectoryRow) {
+    let target = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("BENCH_trajectory.json");
+    if let Err(e) = append_trajectory_at(&target, row) {
+        eprintln!("warning: could not append {}: {e}", target.display());
+    }
+}
+
 /// (warmup, iters) for a bench binary, overridable via the environment
 /// (`PSCH_BENCH_WARMUP` / `PSCH_BENCH_ITERS`) so CI can run reduced
 /// iteration counts; `iters` is clamped to at least 1.
@@ -225,6 +288,44 @@ mod tests {
         let sp = v.get("speedup").unwrap();
         assert!((sp.get("spmv_rows").unwrap().as_f64().unwrap() - 1.75).abs() < 1e-9);
         assert!((sp.get("assign_tile").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trajectory_appends_grow_one_array() {
+        let dir = std::env::temp_dir().join("psch_trajectory_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_trajectory.json");
+        let _ = std::fs::remove_file(&path);
+        let row = |bench: &'static str, mk: f64| TrajectoryRow {
+            bench,
+            report: "BENCH_x.json",
+            makespan_s: mk,
+            seed: 42,
+        };
+        append_trajectory_at(&path, &row("table1", 5673.0)).unwrap();
+        append_trajectory_at(&path, &row("fig5", 5753.5)).unwrap();
+        let v = crate::trace::json::Value::parse(
+            &std::fs::read_to_string(&path).unwrap(),
+        )
+        .unwrap();
+        let rows = v.items().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("bench").unwrap().as_str(), Some("table1"));
+        assert_eq!(rows[1].get("bench").unwrap().as_str(), Some("fig5"));
+        assert_eq!(rows[1].get("seed").unwrap().as_u64(), Some(42));
+        assert!(
+            (rows[1].get("makespan_s").unwrap().as_f64().unwrap() - 5753.5)
+                .abs()
+                < 1e-9
+        );
+        // A corrupt log restarts instead of growing garbage.
+        std::fs::write(&path, "not json").unwrap();
+        append_trajectory_at(&path, &row("kernels", 0.0)).unwrap();
+        let v = crate::trace::json::Value::parse(
+            &std::fs::read_to_string(&path).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(v.items().unwrap().len(), 1);
     }
 
     #[test]

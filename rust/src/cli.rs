@@ -13,6 +13,8 @@
 //!                 [--trace-out FILE] write a Chrome trace-event JSON
 //!                                    (Perfetto-loadable, virtual clock)
 //!                 [--report-json FILE]  write the unified RunReport JSON
+//!                 [--metrics-out FILE]  write a Prometheus text-format
+//!                                    snapshot of the run's telemetry
 //!                 [--model-out FILE] persist the trained model artifact
 //!                                    (psch.model.v1 JSON) for `psch assign`
 //!                 [--quiet]          suppress the per-phase summary lines
@@ -21,7 +23,12 @@
 //!                 [--batch B]        points per serving batch
 //!                 [--refresh off|minibatch]  mini-batch centroid refresh
 //!                 [--oracle]         single-machine path (byte-identical)
+//!                 [--report-json FILE] [--metrics-out FILE]  as in `run`
 //!                 [--labels-out FILE] [--model-out FILE] [--quiet]
+//! psch report show FILE              summarize a RunReport JSON
+//! psch report diff A B [--tolerance-pct N] [--verbose]
+//!                                    compare two RunReports; exit 1 when
+//!                                    B regresses beyond the tolerance
 //! psch baseline   [--blobs N] [--config FILE]   single-machine comparator
 //! psch scale-study [--n N] [--slaves 1,2,4,6,8,10] [--config FILE]
 //! psch inspect-artifacts [--dir DIR]
@@ -52,7 +59,7 @@ impl Flags {
     /// Every other flag still requires a value (a forgotten value stays a
     /// hard error instead of silently becoming the string `"true"`).
     const BOOL_FLAGS: &'static [&'static str] =
-        &["explain-plan", "quiet", "oracle"];
+        &["explain-plan", "quiet", "oracle", "verbose"];
 
     /// Parse `--key value` / `--set k=v` arguments; switches listed in
     /// [`Self::BOOL_FLAGS`] may appear bare (e.g. `--explain-plan`).
@@ -128,6 +135,11 @@ pub fn run(args: &[String]) -> Result<i32> {
         print_usage();
         return Ok(2);
     };
+    // `report` takes positional file arguments the flag parser rejects, so
+    // it dispatches before Flags::parse.
+    if cmd == "report" {
+        return cmd_report(&args[1..]);
+    }
     let flags = Flags::parse(&args[1..])?;
     match cmd.as_str() {
         "gen-data" => cmd_gen_data(&flags),
@@ -151,6 +163,7 @@ fn print_usage() {
          \x20 gen-data          generate a planted topology file (Fig. 4 format)\n\
          \x20 run               run the 3-phase parallel pipeline\n\
          \x20 assign            assign new points with a saved model (Nystrom)\n\
+         \x20 report            show or diff RunReport JSON files\n\
          \x20 baseline          single-machine spectral clustering (O(n^3) path)\n\
          \x20 scale-study       Table 5-1: per-phase time vs slave count\n\
          \x20 inspect-artifacts list AOT artifacts + backend status\n"
@@ -233,6 +246,7 @@ fn cmd_run(flags: &Flags) -> Result<i32> {
     let quiet = flags.get_bool("quiet");
     let trace_out = flags.get("trace-out");
     let report_out = flags.get("report-json");
+    let metrics_out = flags.get("metrics-out");
     let (input, truth) = load_input(flags, &cfg)?;
     let runtime = Arc::new(KernelRuntime::auto(&crate::runtime::artifacts_dir()));
     if !quiet {
@@ -248,9 +262,8 @@ fn cmd_run(flags: &Flags) -> Result<i32> {
     // Tracing is off (and free) unless an output asked for it; the sink is
     // shared through the cluster, so enabling it here is seen by every job.
     let services = driver.services();
-    if trace_out.is_some() || report_out.is_some() {
-        let c = &driver.config().cluster;
-        services.cluster.trace().enable(c.slaves, c.slots_per_slave);
+    if trace_out.is_some() || report_out.is_some() || metrics_out.is_some() {
+        services.cluster.enable_tracing();
     }
     let result = driver.run_on(&services, &input)?;
 
@@ -262,14 +275,37 @@ fn cmd_run(flags: &Flags) -> Result<i32> {
         print!("{}", crate::metrics::report::render_run(&result, quality));
     }
     let data = services.cluster.trace().snapshot();
+    // One telemetry derivation feeds the sparkline and the Prometheus
+    // snapshot; the RunReport re-derives internally from the same spans.
+    let tel = data
+        .as_ref()
+        .map(|d| crate::telemetry::from_trace(d, driver.config().cluster.racks));
     if let Some(data) = &data {
         if !quiet {
             print!("{}", crate::trace::critical::render_report(data, 5));
+            if let Some(tel) = &tel {
+                print!("{}", crate::telemetry::render_phase_utilization(data, tel));
+            }
         }
         if let Some(path) = trace_out {
             std::fs::write(path, crate::trace::export::chrome_trace_json(data))?;
             println!("trace written: {path}");
         }
+    }
+    if let Some(path) = metrics_out {
+        let owned;
+        let tel = match &tel {
+            Some(t) => t,
+            None => {
+                owned = crate::telemetry::Telemetry::empty();
+                &owned
+            }
+        };
+        std::fs::write(
+            path,
+            crate::telemetry::prometheus::render(tel, &result.phases),
+        )?;
+        println!("metrics written: {path}");
     }
     if let Some(path) = report_out {
         std::fs::write(
@@ -338,24 +374,47 @@ fn cmd_assign(flags: &Flags) -> Result<i32> {
             .flatten()
             .collect()
     };
+    let report_out = flags.get("report-json");
+    let metrics_out = flags.get("metrics-out");
     let n_points = points.len() / model.d.max(1);
     let t0 = std::time::Instant::now();
-    let (labels, refreshed, summary, seconds) = if flags.get_bool("oracle") {
+    let (labels, refreshed, summary, seconds, phases, data) = if flags
+        .get_bool("oracle")
+    {
         let out = crate::serving::assign_stream_oracle(&model, &points, &scfg)?;
         let summary = crate::metrics::ServingSummary {
             points: n_points as u64,
             batches: out.batches,
             refresh_updates: out.refresh_updates,
         };
-        (out.labels, out.model, summary, t0.elapsed().as_secs_f64())
+        let wall = t0.elapsed().as_secs_f64();
+        // The oracle path runs no cluster: its report carries a bare
+        // "serving" phase (wall time only) and null telemetry sections.
+        let stats = crate::coordinator::PhaseStats {
+            name: "serving".into(),
+            wall_s: wall,
+            ..Default::default()
+        };
+        (out.labels, out.model, summary, wall, vec![stats], None)
     } else {
         let runtime =
             Arc::new(KernelRuntime::auto(&crate::runtime::artifacts_dir()));
         let driver = Driver::new(cfg.clone(), runtime);
         let services = driver.services();
+        if report_out.is_some() || metrics_out.is_some() {
+            services.cluster.enable_tracing();
+        }
         let run = crate::serving::run_assign(&services, &model, &points, &scfg)?;
         let summary = run.stats.serving_summary();
-        (run.labels, run.model, summary, run.stats.virtual_s)
+        let data = services.cluster.trace().snapshot();
+        (
+            run.labels,
+            run.model,
+            summary,
+            run.stats.virtual_s,
+            vec![run.stats],
+            data,
+        )
     };
     if !quiet {
         let rate = if seconds > 0.0 { n_points as f64 / seconds } else { 0.0 };
@@ -379,7 +438,101 @@ fn cmd_assign(flags: &Flags) -> Result<i32> {
         refreshed.save(path)?;
         println!("model written: {path}");
     }
+    if report_out.is_some() || metrics_out.is_some() {
+        // Serving runs report through the same RunReport/Prometheus pipe as
+        // `psch run`, carrying a single "serving" phase.
+        let result = crate::coordinator::PipelineResult {
+            labels: labels.clone(),
+            eigenvalues: Vec::new(),
+            nnz: 0,
+            total_virtual_s: phases.iter().map(|p| p.virtual_s).sum(),
+            total_wall_s: phases.iter().map(|p| p.wall_s).sum(),
+            sigma: model.sigma,
+            centers: Vec::new(),
+            embedding: Vec::new(),
+            phases,
+        };
+        if let Some(path) = report_out {
+            std::fs::write(
+                path,
+                crate::trace::report::run_report_json(
+                    &cfg,
+                    &result,
+                    None,
+                    data.as_ref(),
+                ),
+            )?;
+            println!("report written: {path}");
+        }
+        if let Some(path) = metrics_out {
+            let tel = match &data {
+                Some(d) => crate::telemetry::from_trace(d, cfg.cluster.racks),
+                None => crate::telemetry::Telemetry::empty(),
+            };
+            std::fs::write(
+                path,
+                crate::telemetry::prometheus::render(&tel, &result.phases),
+            )?;
+            println!("metrics written: {path}");
+        }
+    }
     Ok(0)
+}
+
+/// `psch report show FILE` / `psch report diff A B [--tolerance-pct N]` —
+/// positional arguments, parsed here rather than by [`Flags`].
+fn cmd_report(args: &[String]) -> Result<i32> {
+    const USAGE: &str =
+        "usage: psch report show FILE | psch report diff A B \
+         [--tolerance-pct N] [--verbose]";
+    let Some(sub) = args.first() else {
+        return Err(Error::Cli(USAGE.into()));
+    };
+    let positional: Vec<&String> =
+        args[1..].iter().take_while(|a| !a.starts_with("--")).collect();
+    let flags = Flags::parse(&args[1 + positional.len()..])?;
+    match sub.as_str() {
+        "show" => {
+            let [path] = positional[..] else {
+                return Err(Error::Cli(USAGE.into()));
+            };
+            let doc = crate::telemetry::diff::load(path)?;
+            let summary = crate::telemetry::diff::summarize(&doc)?;
+            print!("{}", crate::telemetry::diff::render_show(&summary));
+            Ok(0)
+        }
+        "diff" => {
+            let [a_path, b_path] = positional[..] else {
+                return Err(Error::Cli(USAGE.into()));
+            };
+            let tolerance = flags.get_parse("tolerance-pct", 0.0f64)?;
+            if !tolerance.is_finite() || tolerance < 0.0 {
+                return Err(Error::Cli(format!(
+                    "--tolerance-pct must be >= 0, got {tolerance}"
+                )));
+            }
+            let a = crate::telemetry::diff::summarize(
+                &crate::telemetry::diff::load(a_path)?,
+            )?;
+            let b = crate::telemetry::diff::summarize(
+                &crate::telemetry::diff::load(b_path)?,
+            )?;
+            let (lines, regressed) =
+                crate::telemetry::diff::diff(&a, &b, tolerance);
+            print!(
+                "{}",
+                crate::telemetry::diff::render_diff(
+                    &lines,
+                    tolerance,
+                    flags.get_bool("verbose"),
+                )
+            );
+            Ok(if regressed { 1 } else { 0 })
+        }
+        other => Err(Error::Cli(format!(
+            "unknown report subcommand: {other}\n{USAGE}"
+        ))),
+    }
 }
 
 fn cmd_baseline(flags: &Flags) -> Result<i32> {

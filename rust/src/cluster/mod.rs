@@ -136,6 +136,14 @@ impl Cluster {
         &self.trace
     }
 
+    /// Turn the shared trace sink on, sized for this cluster — the
+    /// one-call form of `trace().enable(slaves, slots_per_slave)` the CLI
+    /// uses when any of `--trace-out`/`--report-json`/`--metrics-out`
+    /// asks for span data.
+    pub fn enable_tracing(&self) {
+        self.trace.enable(self.slaves.len(), self.slots_per_slave);
+    }
+
     /// Mark one slave as a straggler with the given relative speed.
     pub fn set_slave_speed(&mut self, slave: usize, speed: f64) {
         assert!(speed > 0.0);

@@ -31,8 +31,9 @@ pub struct PipelineResult {
     pub labels: Vec<usize>,
     /// k smallest Laplacian eigenvalues.
     pub eigenvalues: Vec<f64>,
-    /// Phase stats: [similarity, eigenvectors, kmeans] (Table 5-1 columns).
-    pub phases: [PhaseStats; 3],
+    /// Phase stats: [similarity, eigenvectors, kmeans] for full pipeline
+    /// runs (Table 5-1 columns); a single "serving" entry for assign runs.
+    pub phases: Vec<PhaseStats>,
     /// Stored similarity entries.
     pub nnz: u64,
     /// Sum of phase virtual seconds (Table 5-1 "Total Time").
@@ -51,7 +52,7 @@ pub struct PipelineResult {
 }
 
 impl PipelineResult {
-    fn totals(phases: &[PhaseStats; 3]) -> (f64, f64) {
+    fn totals(phases: &[PhaseStats]) -> (f64, f64) {
         (
             phases.iter().map(|p| p.virtual_s).sum(),
             phases.iter().map(|p| p.wall_s).sum(),
@@ -338,7 +339,7 @@ impl Driver {
 
         tracer.end_phase();
 
-        let mut phases = [sim.stats, eig.stats, km.stats];
+        let mut phases = vec![sim.stats, eig.stats, km.stats];
         phases[0]
             .absorb_master(sigma_wall_s, services.cluster.model().compute_scale);
         let (total_virtual_s, total_wall_s) = PipelineResult::totals(&phases);

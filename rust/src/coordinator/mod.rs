@@ -189,6 +189,18 @@ impl PhaseStats {
         self.wall_s += wall_s;
     }
 
+    /// Virtual seconds the phase's winning attempts spent queued before
+    /// dispatch (`QUEUE_WAIT_US`, converted back to seconds).
+    pub fn queue_wait_s(&self) -> f64 {
+        self.counters.get(crate::mapreduce::names::QUEUE_WAIT_US) as f64 / 1e6
+    }
+
+    /// Slot-seconds the cluster left idle while the phase's plans ran
+    /// (`SLOT_IDLE_US`, converted back to seconds).
+    pub fn slot_idle_s(&self) -> f64 {
+        self.counters.get(crate::mapreduce::names::SLOT_IDLE_US) as f64 / 1e6
+    }
+
     /// Shuffle lifecycle summary of the phase.
     pub fn shuffle_summary(&self) -> crate::metrics::ShuffleSummary {
         crate::metrics::ShuffleSummary::from_counters(&self.counters)

@@ -46,6 +46,7 @@ pub mod scheduler;
 pub mod serving;
 pub mod spectral;
 pub mod table;
+pub mod telemetry;
 pub mod testutil;
 pub mod trace;
 pub mod util;

@@ -110,6 +110,13 @@ pub mod names {
     /// Centroids moved by mini-batch refresh (`serving.refresh =
     /// minibatch`): one count per (batch, cluster) counted update applied.
     pub const REFRESH_UPDATES: &str = "REFRESH_UPDATES";
+    /// Virtual MICROseconds winning attempts spent queued between phase
+    /// start (every task is ready at enqueue) and dispatch, summed across
+    /// the job's plans — the multi-job scheduling item's contention signal.
+    pub const QUEUE_WAIT_US: &str = "QUEUE_WAIT_US";
+    /// Virtual slot-MICROseconds left unused while the job's phases ran:
+    /// makespan × total slots minus attempt occupancy, per plan.
+    pub const SLOT_IDLE_US: &str = "SLOT_IDLE_US";
 }
 
 impl Counters {

@@ -77,9 +77,23 @@ impl JobResult {
 }
 
 /// Fold one phase plan's locality/speculation/fault tallies into the
-/// counters.
-fn absorb_plan(counters: &mut Counters, plan: &SchedulePlan, is_map: bool) {
+/// counters. `total_slots` sizes the idle-capacity charge: makespan ×
+/// slots minus attempt occupancy.
+fn absorb_plan(
+    counters: &mut Counters,
+    plan: &SchedulePlan,
+    is_map: bool,
+    total_slots: usize,
+) {
     counters.incr(names::HEARTBEATS, plan.heartbeats);
+    counters.incr(
+        names::QUEUE_WAIT_US,
+        (plan.queue_wait_s() * 1e6).round() as u64,
+    );
+    counters.incr(
+        names::SLOT_IDLE_US,
+        (plan.slot_idle_s(total_slots) * 1e6).round() as u64,
+    );
     counters.incr(names::SPECULATIVE_ATTEMPTS, plan.speculative_attempts as u64);
     counters.incr(names::SPECULATIVE_WINS, plan.speculative_wins as u64);
     counters.incr(names::NODE_DEATHS, plan.deaths);
@@ -301,7 +315,7 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
         .collect();
     let map_plan = cluster.plan_phase(&map_specs);
     check_plan(&map_plan, "map", &job.name)?;
-    absorb_plan(&mut counters, &map_plan, true);
+    absorb_plan(&mut counters, &map_plan, true, cluster.total_slots());
 
     // ---------------- map-only job: done ----------------
     let Some(reducer) = &job.reducer else {
@@ -315,6 +329,7 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
                 reruns: Vec::new(),
                 fetch: None,
                 reduce: None,
+                spill_bytes: Vec::new(),
             });
         }
         let stats = JobStats {
@@ -430,7 +445,7 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
         .collect();
     let reduce_plan = cluster.plan_phase(&reduce_specs);
     check_plan(&reduce_plan, "reduce", &job.name)?;
-    absorb_plan(&mut counters, &reduce_plan, false);
+    absorb_plan(&mut counters, &reduce_plan, false, cluster.total_slots());
 
     // The signature Hadoop failure case: a reduce fetch that targets a map
     // output on a slave that has since died fails (`FETCH_FAILURES`), and
@@ -463,7 +478,7 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
             lost.iter().map(|&mi| map_specs[mi].clone()).collect();
         let rerun_plan = cluster.plan_phase(&rerun_specs);
         check_plan(&rerun_plan, "map re-execution", &job.name)?;
-        absorb_plan(&mut counters, &rerun_plan, true);
+        absorb_plan(&mut counters, &rerun_plan, true, cluster.total_slots());
         let rerun_slaves = rerun_plan.winning_slaves(lost.len());
         for (i, &mi) in lost.iter().enumerate() {
             map_slaves[mi] = rerun_slaves[i];
@@ -519,6 +534,10 @@ pub fn run(cluster: &Cluster, job: &Job) -> Result<JobResult> {
                 &reduce_specs,
                 cluster.model(),
             )),
+            spill_bytes: seg_bytes
+                .iter()
+                .map(|row| row.iter().sum::<u64>())
+                .collect(),
         });
     }
 

@@ -10,8 +10,8 @@ use std::time::{Duration, Instant};
 use crate::mapreduce::{names, Counters};
 
 pub use report::{
-    render_run, EigenSummary, FaultSummary, KnnSummary, ServingSummary,
-    ShuffleSummary,
+    render_run, sparkline, EigenSummary, FaultSummary, KnnSummary,
+    ServingSummary, ShuffleSummary,
 };
 
 /// Data-locality and speculation summary of one job or phase, derived from

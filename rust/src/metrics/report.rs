@@ -287,6 +287,30 @@ impl ServingSummary {
     }
 }
 
+/// ASCII sparkline of a value series scaled against `peak` (values at or
+/// above `peak` render the tallest bar; non-positive `peak` falls back to
+/// the series' own maximum). The telemetry layer draws per-phase slot
+/// utilization with this.
+pub fn sparkline(values: &[f64], peak: f64) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let peak = if peak > 0.0 {
+        peak
+    } else {
+        values.iter().cloned().fold(0.0, f64::max)
+    };
+    values
+        .iter()
+        .map(|&v| {
+            if peak <= 0.0 || v <= 0.0 {
+                BARS[0]
+            } else {
+                let level = (v / peak * 7.0).round().clamp(0.0, 7.0) as usize;
+                BARS[level]
+            }
+        })
+        .collect()
+}
+
 /// Render the complete human-readable run summary: the per-phase table,
 /// one `shuffle[phase]:` line per phase, `knn[phase]:` / `faults[phase]:`
 /// lines for phases where those subsystems acted, the quality line (when
@@ -355,6 +379,17 @@ pub fn render_run(result: &PipelineResult, quality: Option<(f64, f64)>) -> Strin
         let f = p.fault_summary();
         if f.any() {
             out.push_str(&format!("faults[{}]: {}\n", p.name, f.render()));
+        }
+    }
+    // Scheduler occupancy: queue wait and idle slot-seconds per phase.
+    for p in &result.phases {
+        if p.queue_wait_s() > 0.0 || p.slot_idle_s() > 0.0 {
+            out.push_str(&format!(
+                "sched[{}]: queue_wait={:.2}s slot_idle={:.2}s\n",
+                p.name,
+                p.queue_wait_s(),
+                p.slot_idle_s()
+            ));
         }
     }
     if let Some((nmi, ari)) = quality {
@@ -558,9 +593,23 @@ mod tests {
     }
 
     #[test]
+    fn sparkline_scales_against_the_peak() {
+        let s = sparkline(&[0.0, 0.5, 1.0], 1.0);
+        assert_eq!(s.chars().count(), 3);
+        assert_eq!(s.chars().next(), Some('▁'));
+        assert_eq!(s.chars().last(), Some('█'));
+        // Values above the peak clamp to the tallest bar.
+        assert_eq!(sparkline(&[5.0], 1.0), "█");
+        // Zero peak falls back to the series' own maximum.
+        assert_eq!(sparkline(&[1.0, 2.0], 0.0).chars().last(), Some('█'));
+        assert_eq!(sparkline(&[], 1.0), "");
+        assert_eq!(sparkline(&[0.0, 0.0], 0.0), "▁▁");
+    }
+
+    #[test]
     fn render_run_routes_every_section() {
         use crate::coordinator::PhaseStats;
-        let mut phases = [
+        let mut phases = vec![
             PhaseStats { name: "similarity".into(), ..Default::default() },
             PhaseStats { name: "eigenvectors".into(), ..Default::default() },
             PhaseStats { name: "kmeans".into(), ..Default::default() },

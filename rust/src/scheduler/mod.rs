@@ -140,6 +140,30 @@ impl SchedulePlan {
         }
     }
 
+    /// Total virtual seconds winning attempts waited between phase start
+    /// (enqueue — every task is ready at t = 0) and dispatch. The
+    /// `QUEUE_WAIT_US` counter aggregates this per phase.
+    pub fn queue_wait_s(&self) -> f64 {
+        self.attempts
+            .iter()
+            .filter(|a| a.won)
+            .map(|a| a.start_s)
+            .sum()
+    }
+
+    /// Slot-seconds occupied by attempts — winners and killed losers both
+    /// hold their slot until they end.
+    pub fn busy_slot_s(&self) -> f64 {
+        self.attempts.iter().map(|a| a.end_s - a.start_s).sum()
+    }
+
+    /// Slot-seconds the cluster left unused during this phase: the
+    /// makespan × `total_slots` capacity minus [`busy_slot_s`], clamped at
+    /// zero. The `SLOT_IDLE_US` counter aggregates this per phase.
+    pub fn slot_idle_s(&self, total_slots: usize) -> f64 {
+        (self.makespan_s * total_slots as f64 - self.busy_slot_s()).max(0.0)
+    }
+
     /// The slave each task's winning attempt ran on, indexed by task id —
     /// where a map task's output file lives, and which node a reduce task
     /// fetches from (the shuffle's locality input).
@@ -1063,5 +1087,36 @@ mod tests {
         let remote = jt.plan(&[mk(vec![1])]);
         assert!(remote.input_read_s > local.input_read_s * 5.0, "{remote:?}");
         assert!(remote.makespan_s > local.makespan_s);
+    }
+
+    #[test]
+    fn queue_wait_and_slot_idle_accounting() {
+        let mk = |start_s: f64, end_s: f64, won: bool| Attempt {
+            task: 0,
+            slave: 0,
+            slot: 0,
+            start_s,
+            end_s,
+            locality: Locality::None,
+            speculative: false,
+            won,
+        };
+        let plan = SchedulePlan {
+            makespan_s: 10.0,
+            attempts: vec![mk(0.0, 4.0, true), mk(2.0, 10.0, true), mk(3.0, 5.0, false)],
+            ..Default::default()
+        };
+        // Winners waited 0 s + 2 s; the killed loser doesn't count.
+        assert!((plan.queue_wait_s() - 2.0).abs() < 1e-12);
+        // Busy slot-seconds include the loser's occupancy.
+        assert!((plan.busy_slot_s() - 14.0).abs() < 1e-12);
+        // 2 slots × 10 s capacity − 14 s busy = 6 s idle.
+        assert!((plan.slot_idle_s(2) - 6.0).abs() < 1e-12);
+        // Idle clamps at zero when attempts oversubscribe the capacity.
+        assert_eq!(plan.slot_idle_s(1), 0.0);
+        // The empty plan is all zeros.
+        let empty = SchedulePlan::default();
+        assert_eq!(empty.queue_wait_s(), 0.0);
+        assert_eq!(empty.slot_idle_s(4), 0.0);
     }
 }

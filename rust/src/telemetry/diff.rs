@@ -1,0 +1,432 @@
+//! RunReport comparison: the `psch report show` / `psch report diff`
+//! backend, and CI's first perf gate.
+//!
+//! [`summarize`] reduces a parsed RunReport (v1 or v2 — the telemetry
+//! sections are optional) to the deterministic quantities worth gating
+//! on: total and per-phase **virtual** seconds, the aggregated counters,
+//! quality (NMI) and the histogram p50/p95s. Wall-clock fields are
+//! deliberately dropped — they vary run to run on a shared host and would
+//! make any zero-tolerance gate flap.
+//!
+//! [`diff`] compares two summaries under a relative tolerance
+//! (`--tolerance-pct`, default 0): times and percentiles regress when B
+//! exceeds A, NMI regresses when B falls below A, and counters regress on
+//! **any** drift beyond tolerance (same-seed runs are exactly equal, so
+//! a drifting counter means behavior changed). The CLI exits non-zero
+//! when any line regresses.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::trace::json::Value;
+
+/// The gate-worthy reduction of one RunReport.
+#[derive(Debug, Clone)]
+pub struct ReportSummary {
+    /// Schema string (`psch.run_report.v1` or `.v2`).
+    pub schema: String,
+    /// `totals.virtual_s` — the run's virtual makespan.
+    pub total_virtual_s: f64,
+    /// `(name, virtual_s)` per phase, in report order.
+    pub phases: Vec<(String, f64)>,
+    /// Counters summed across phases.
+    pub counters: BTreeMap<String, u64>,
+    /// `quality.nmi` when the run had a planted truth.
+    pub nmi: Option<f64>,
+    /// `(histogram, p50, p95)` per telemetry histogram (v2 reports only).
+    pub percentiles: Vec<(String, f64, f64)>,
+}
+
+/// Read and parse a RunReport file.
+pub fn load(path: &str) -> Result<Value> {
+    let text = std::fs::read_to_string(path)?;
+    Value::parse(&text)
+        .map_err(|e| Error::Cli(format!("{path}: not a valid RunReport: {e}")))
+}
+
+/// Reduce a parsed RunReport to its comparable summary. Accepts every
+/// `psch.run_report.v*` version: the v2 telemetry sections contribute
+/// percentile lines when present and are skipped when absent.
+pub fn summarize(v: &Value) -> Result<ReportSummary> {
+    let schema = v
+        .get("schema")
+        .and_then(Value::as_str)
+        .ok_or_else(|| Error::Cli("report has no schema key".into()))?;
+    if !schema.starts_with("psch.run_report.v") {
+        return Err(Error::Cli(format!("not a RunReport schema: {schema}")));
+    }
+    let total_virtual_s = v
+        .get("totals")
+        .and_then(|t| t.get("virtual_s"))
+        .and_then(Value::as_f64)
+        .ok_or_else(|| Error::Cli("report has no totals.virtual_s".into()))?;
+    let mut phases = Vec::new();
+    let mut counters: BTreeMap<String, u64> = BTreeMap::new();
+    for p in v.get("phases").and_then(Value::items).unwrap_or(&[]) {
+        let name = p
+            .get("name")
+            .and_then(Value::as_str)
+            .unwrap_or("?")
+            .to_string();
+        let virtual_s =
+            p.get("virtual_s").and_then(Value::as_f64).unwrap_or(0.0);
+        phases.push((name, virtual_s));
+        if let Some(Value::Obj(map)) = p.get("counters") {
+            for (k, val) in map {
+                if let Some(n) = val.as_u64() {
+                    *counters.entry(k.clone()).or_insert(0) += n;
+                }
+            }
+        }
+    }
+    let nmi = v.get("quality").and_then(|q| q.get("nmi")).and_then(Value::as_f64);
+    let mut percentiles = Vec::new();
+    for h in v.get("histograms").and_then(Value::items).unwrap_or(&[]) {
+        let name = h
+            .get("name")
+            .and_then(Value::as_str)
+            .unwrap_or("?")
+            .to_string();
+        let p50 = h.get("p50").and_then(Value::as_f64).unwrap_or(0.0);
+        let p95 = h.get("p95").and_then(Value::as_f64).unwrap_or(0.0);
+        percentiles.push((name, p50, p95));
+    }
+    Ok(ReportSummary {
+        schema: schema.to_string(),
+        total_virtual_s,
+        phases,
+        counters,
+        nmi,
+        percentiles,
+    })
+}
+
+/// Human-readable rendering of one summary (`psch report show`).
+pub fn render_show(s: &ReportSummary) -> String {
+    let mut out = format!(
+        "schema: {}\ntotal virtual_s: {}\n",
+        s.schema,
+        crate::trace::json::num(s.total_virtual_s)
+    );
+    for (name, virtual_s) in &s.phases {
+        out.push_str(&format!(
+            "phase {:<14} virtual_s {}\n",
+            name,
+            crate::trace::json::num(*virtual_s)
+        ));
+    }
+    if let Some(nmi) = s.nmi {
+        out.push_str(&format!("quality NMI: {nmi:.4}\n"));
+    }
+    for (name, p50, p95) in &s.percentiles {
+        out.push_str(&format!(
+            "hist {:<26} p50 {} p95 {}\n",
+            name,
+            crate::trace::json::num(*p50),
+            crate::trace::json::num(*p95)
+        ));
+    }
+    out.push_str(&format!("counters: {}\n", s.counters.len()));
+    for (name, value) in &s.counters {
+        out.push_str(&format!("  {name} = {value}\n"));
+    }
+    out
+}
+
+/// How a compared metric may regress.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Direction {
+    /// Larger in B is worse (times, percentiles).
+    HigherWorse,
+    /// Smaller in B is worse (quality).
+    LowerWorse,
+    /// Any drift is worse (counters — deterministic runs match exactly).
+    AnyDrift,
+}
+
+/// One compared metric.
+#[derive(Debug, Clone)]
+pub struct DiffLine {
+    /// Metric label (`total.virtual_s`, `counter.SHUFFLE_BYTES`, ...).
+    pub metric: String,
+    /// Value in report A (the baseline).
+    pub a: f64,
+    /// Value in report B (the candidate).
+    pub b: f64,
+    /// Relative change in percent, signed (`(b-a)/a`; 100 when a == 0
+    /// and b differs).
+    pub delta_pct: f64,
+    /// Did this metric regress beyond the tolerance?
+    pub regressed: bool,
+}
+
+/// Compare two report summaries under `tolerance_pct`. Returns every
+/// compared line plus the overall regression verdict (true = B regressed).
+pub fn diff(
+    a: &ReportSummary,
+    b: &ReportSummary,
+    tolerance_pct: f64,
+) -> (Vec<DiffLine>, bool) {
+    let mut lines = Vec::new();
+    let mut push = |metric: String, a: f64, b: f64, dir: Direction| {
+        let delta_pct = if a == 0.0 {
+            if b == 0.0 {
+                0.0
+            } else {
+                100.0
+            }
+        } else {
+            (b - a) / a * 100.0
+        };
+        let bad = match dir {
+            Direction::HigherWorse => delta_pct,
+            Direction::LowerWorse => -delta_pct,
+            Direction::AnyDrift => delta_pct.abs(),
+        };
+        lines.push(DiffLine {
+            metric,
+            a,
+            b,
+            delta_pct,
+            regressed: bad > tolerance_pct + 1e-9,
+        });
+    };
+
+    push(
+        "total.virtual_s".into(),
+        a.total_virtual_s,
+        b.total_virtual_s,
+        Direction::HigherWorse,
+    );
+    // Phases are matched by name; a phase present on one side only is a
+    // 0-baseline comparison (flagged unless within tolerance).
+    let phase_names: Vec<&String> = a
+        .phases
+        .iter()
+        .map(|(n, _)| n)
+        .chain(b.phases.iter().map(|(n, _)| n))
+        .collect();
+    let mut seen = Vec::new();
+    for name in phase_names {
+        if seen.contains(&name) {
+            continue;
+        }
+        seen.push(name);
+        let av = a
+            .phases
+            .iter()
+            .find(|(n, _)| n == name)
+            .map_or(0.0, |(_, v)| *v);
+        let bv = b
+            .phases
+            .iter()
+            .find(|(n, _)| n == name)
+            .map_or(0.0, |(_, v)| *v);
+        push(format!("phase.{name}.virtual_s"), av, bv, Direction::HigherWorse);
+    }
+    let counter_names: Vec<&String> =
+        a.counters.keys().chain(b.counters.keys()).collect();
+    let mut seen = Vec::new();
+    for name in counter_names {
+        if seen.contains(&name) {
+            continue;
+        }
+        seen.push(name);
+        push(
+            format!("counter.{name}"),
+            a.counters.get(name).copied().unwrap_or(0) as f64,
+            b.counters.get(name).copied().unwrap_or(0) as f64,
+            Direction::AnyDrift,
+        );
+    }
+    // NMI on one side only: nothing comparable, skip rather than flag.
+    if let (Some(av), Some(bv)) = (a.nmi, b.nmi) {
+        push("quality.nmi".into(), av, bv, Direction::LowerWorse);
+    }
+    let hist_names: Vec<&String> = a
+        .percentiles
+        .iter()
+        .map(|(n, _, _)| n)
+        .chain(b.percentiles.iter().map(|(n, _, _)| n))
+        .collect();
+    let mut seen = Vec::new();
+    for name in hist_names {
+        if seen.contains(&name) {
+            continue;
+        }
+        seen.push(name);
+        let find = |s: &ReportSummary| {
+            s.percentiles
+                .iter()
+                .find(|(n, _, _)| n == name)
+                .map_or((0.0, 0.0), |(_, p50, p95)| (*p50, *p95))
+        };
+        let (a50, a95) = find(a);
+        let (b50, b95) = find(b);
+        push(format!("hist.{name}.p50"), a50, b50, Direction::HigherWorse);
+        push(format!("hist.{name}.p95"), a95, b95, Direction::HigherWorse);
+    }
+    let regressed = lines.iter().any(|l| l.regressed);
+    (lines, regressed)
+}
+
+/// Render a diff result (`psch report diff`): regressed lines always,
+/// unchanged lines only with `verbose`.
+pub fn render_diff(lines: &[DiffLine], tolerance_pct: f64, verbose: bool) -> String {
+    let mut out = String::new();
+    let mut shown = 0usize;
+    for l in lines {
+        if !l.regressed && !verbose && l.delta_pct == 0.0 {
+            continue;
+        }
+        shown += 1;
+        out.push_str(&format!(
+            "{} {:<38} A={} B={} ({}{:.2}%)\n",
+            if l.regressed { "REGRESSED" } else { "ok       " },
+            l.metric,
+            crate::trace::json::num(l.a),
+            crate::trace::json::num(l.b),
+            if l.delta_pct >= 0.0 { "+" } else { "" },
+            l.delta_pct
+        ));
+    }
+    if shown == 0 {
+        out.push_str("identical within tolerance\n");
+    }
+    let regressed = lines.iter().filter(|l| l.regressed).count();
+    out.push_str(&format!(
+        "compared {} metrics, {} regressed (tolerance {:.2}%)\n",
+        lines.len(),
+        regressed,
+        tolerance_pct
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn summary(total: f64, nmi: f64) -> ReportSummary {
+        let mut counters = BTreeMap::new();
+        counters.insert("SHUFFLE_BYTES".to_string(), 1000);
+        counters.insert("HEARTBEATS".to_string(), 50);
+        ReportSummary {
+            schema: "psch.run_report.v2".into(),
+            total_virtual_s: total,
+            phases: vec![("similarity".into(), total * 0.6), ("kmeans".into(), total * 0.4)],
+            counters,
+            nmi: Some(nmi),
+            percentiles: vec![("attempt_duration_seconds".into(), 0.5, 2.0)],
+        }
+    }
+
+    #[test]
+    fn identical_summaries_pass_at_zero_tolerance() {
+        let a = summary(100.0, 0.9);
+        let (lines, regressed) = diff(&a, &a.clone(), 0.0);
+        assert!(!regressed);
+        assert!(lines.iter().all(|l| !l.regressed));
+        assert!(lines.iter().any(|l| l.metric == "total.virtual_s"));
+        assert!(lines.iter().any(|l| l.metric == "counter.SHUFFLE_BYTES"));
+        assert!(lines.iter().any(|l| l.metric == "quality.nmi"));
+        assert!(lines
+            .iter()
+            .any(|l| l.metric == "hist.attempt_duration_seconds.p95"));
+        let text = render_diff(&lines, 0.0, false);
+        assert!(text.contains("identical within tolerance"), "{text}");
+        assert!(text.contains("0 regressed"), "{text}");
+    }
+
+    #[test]
+    fn slower_makespan_regresses_and_tolerance_forgives_it() {
+        let a = summary(100.0, 0.9);
+        let b = summary(110.0, 0.9);
+        let (lines, regressed) = diff(&a, &b, 0.0);
+        assert!(regressed);
+        let total = lines.iter().find(|l| l.metric == "total.virtual_s").unwrap();
+        assert!(total.regressed);
+        assert!((total.delta_pct - 10.0).abs() < 1e-9);
+        // A 15% tolerance forgives the 10% slowdown.
+        let (_, regressed) = diff(&a, &b, 15.0);
+        assert!(!regressed);
+        // A FASTER candidate never regresses on time metrics.
+        let (_, improved) = diff(&b, &a, 0.0);
+        assert!(!improved);
+    }
+
+    #[test]
+    fn nmi_drop_regresses_but_gain_does_not() {
+        let a = summary(100.0, 0.9);
+        let worse = summary(100.0, 0.8);
+        let (lines, regressed) = diff(&a, &worse, 0.0);
+        assert!(regressed);
+        assert!(lines.iter().find(|l| l.metric == "quality.nmi").unwrap().regressed);
+        let better = summary(100.0, 0.95);
+        let (_, regressed) = diff(&a, &better, 0.0);
+        assert!(!regressed);
+    }
+
+    #[test]
+    fn counter_drift_regresses_in_both_directions() {
+        let a = summary(100.0, 0.9);
+        let mut b = summary(100.0, 0.9);
+        *b.counters.get_mut("SHUFFLE_BYTES").unwrap() = 900; // fewer bytes
+        let (lines, regressed) = diff(&a, &b, 0.0);
+        assert!(regressed, "counter drift must flag even when it shrinks");
+        let line =
+            lines.iter().find(|l| l.metric == "counter.SHUFFLE_BYTES").unwrap();
+        assert!(line.regressed);
+        assert!(line.delta_pct < 0.0);
+        // A counter present on one side only compares against 0.
+        b.counters.insert("NEW_COUNTER".to_string(), 5);
+        let (lines, _) = diff(&a, &b, 0.0);
+        let new = lines.iter().find(|l| l.metric == "counter.NEW_COUNTER").unwrap();
+        assert!(new.regressed);
+        assert_eq!(new.a, 0.0);
+    }
+
+    #[test]
+    fn summarize_accepts_v1_and_v2_documents() {
+        let v1 = r#"{"schema":"psch.run_report.v1","phases":[
+            {"name":"similarity","virtual_s":10.5,"counters":{"SPILLS":2}}],
+            "totals":{"virtual_s":10.5,"wall_s":0.2},
+            "quality":{"nmi":0.9,"ari":0.8},"trace":null}"#;
+        let s = summarize(&Value::parse(v1).unwrap()).unwrap();
+        assert_eq!(s.schema, "psch.run_report.v1");
+        assert_eq!(s.phases.len(), 1);
+        assert_eq!(s.counters.get("SPILLS"), Some(&2));
+        assert_eq!(s.nmi, Some(0.9));
+        assert!(s.percentiles.is_empty(), "v1 has no histograms");
+        let v2 = r#"{"schema":"psch.run_report.v2","phases":[],
+            "totals":{"virtual_s":1.0},"quality":null,"trace":null,
+            "timeseries":null,
+            "histograms":[{"name":"fetch_bytes","p50":100,"p95":900}]}"#;
+        let s2 = summarize(&Value::parse(v2).unwrap()).unwrap();
+        assert_eq!(s2.percentiles, vec![("fetch_bytes".to_string(), 100.0, 900.0)]);
+        assert_eq!(s2.nmi, None);
+        // Cross-version diff works: v1 vs v2 skips the missing sections.
+        let (_, regressed) = diff(&s, &s, 0.0);
+        assert!(!regressed);
+    }
+
+    #[test]
+    fn summarize_rejects_non_reports() {
+        let bad = Value::parse(r#"{"schema":"psch.model.v1"}"#).unwrap();
+        assert!(summarize(&bad).is_err());
+        let none = Value::parse(r#"{"foo":1}"#).unwrap();
+        assert!(summarize(&none).is_err());
+    }
+
+    #[test]
+    fn render_show_lists_the_summary() {
+        let s = summary(42.0, 0.9);
+        let text = render_show(&s);
+        assert!(text.contains("schema: psch.run_report.v2"), "{text}");
+        assert!(text.contains("total virtual_s: 42"), "{text}");
+        assert!(text.contains("phase similarity"), "{text}");
+        assert!(text.contains("quality NMI: 0.9000"), "{text}");
+        assert!(text.contains("SHUFFLE_BYTES = 1000"), "{text}");
+        assert!(text.contains("hist attempt_duration_seconds"), "{text}");
+    }
+}

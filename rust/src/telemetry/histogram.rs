@@ -1,0 +1,248 @@
+//! Fixed log-bucket histograms with exact percentile extraction.
+//!
+//! Two bucket families cover every telemetry distribution: powers of two
+//! above 1 ms for durations, powers of four above 64 B for byte sizes.
+//! The edges are compile-time constants so two runs of the same workload
+//! always disagree only in counts, never in shape — a requirement for the
+//! byte-identical export guarantee.
+//!
+//! Percentiles are **exact**, not bucket-interpolated: the histogram keeps
+//! its raw samples (telemetry distributions are small — one entry per
+//! attempt/reducer/spill) and answers `percentile(q)` by nearest-rank on
+//! the sorted samples. Bucket counts exist for the Prometheus exposition,
+//! where cumulative `le` buckets are the wire format.
+
+use crate::trace::json;
+
+/// Number of finite bucket edges in each family.
+const SECONDS_EDGES: usize = 21;
+const BYTES_EDGES: usize = 15;
+
+/// One named histogram: fixed edges, cumulative-friendly counts, raw
+/// samples for exact percentiles.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Metric name (`attempt_duration_seconds`, `fetch_bytes`, ...).
+    pub name: &'static str,
+    /// Unit tag: `"seconds"` or `"bytes"`.
+    pub unit: &'static str,
+    /// Finite upper bucket edges, ascending. A sample lands in the first
+    /// bucket whose edge is `>=` the sample; larger samples land in the
+    /// overflow bucket.
+    pub edges: Vec<f64>,
+    /// Per-bucket counts, `edges.len() + 1` long (last = overflow).
+    pub counts: Vec<u64>,
+    /// Raw samples, sorted ascending once recording is done.
+    pub samples: Vec<f64>,
+}
+
+impl Histogram {
+    /// Duration histogram: edges `0.001 × 2^i` seconds, i = 0..21
+    /// (1 ms … ~1049 s), overflow beyond.
+    pub fn seconds(name: &'static str) -> Self {
+        let edges = (0..SECONDS_EDGES).map(|i| 0.001 * f64::powi(2.0, i as i32)).collect();
+        Self::with_edges(name, "seconds", edges)
+    }
+
+    /// Size histogram: edges `64 × 4^i` bytes, i = 0..15
+    /// (64 B … ~17 GB), overflow beyond.
+    pub fn bytes(name: &'static str) -> Self {
+        let edges = (0..BYTES_EDGES).map(|i| 64.0 * f64::powi(4.0, i as i32)).collect();
+        Self::with_edges(name, "bytes", edges)
+    }
+
+    fn with_edges(name: &'static str, unit: &'static str, edges: Vec<f64>) -> Self {
+        let counts = vec![0; edges.len() + 1];
+        Histogram { name, unit, edges, counts, samples: Vec::new() }
+    }
+
+    /// Record one sample (negative values clamp to zero — virtual times
+    /// are never negative, but clamping keeps the invariants local).
+    pub fn record(&mut self, value: f64) {
+        let v = value.max(0.0);
+        let idx = self
+            .edges
+            .iter()
+            .position(|&e| v <= e)
+            .unwrap_or(self.edges.len());
+        self.counts[idx] += 1;
+        self.samples.push(v);
+    }
+
+    /// Record every value in `values`.
+    pub fn record_all<I: IntoIterator<Item = f64>>(&mut self, values: I) {
+        for v in values {
+            self.record(v);
+        }
+    }
+
+    /// Sort the samples; call once after the last [`record`](Self::record).
+    pub fn finish(&mut self) {
+        self.samples.sort_by(f64::total_cmp);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.samples.len() as u64
+    }
+
+    /// Sum of all samples.
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    /// Largest sample (0 when empty).
+    pub fn max(&self) -> f64 {
+        self.samples.last().copied().unwrap_or(0.0)
+    }
+
+    /// Exact nearest-rank percentile over the sorted samples: the smallest
+    /// sample with at least `q`% of the distribution at or below it.
+    /// Returns 0 for the empty histogram.
+    pub fn percentile(&self, q: f64) -> f64 {
+        let n = self.samples.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = (q / 100.0 * n as f64).ceil() as usize;
+        self.samples[rank.clamp(1, n) - 1]
+    }
+
+    /// Cumulative bucket counts in Prometheus `le` order (the overflow
+    /// bucket becomes `le="+Inf"`).
+    pub fn cumulative(&self) -> Vec<u64> {
+        let mut total = 0;
+        self.counts
+            .iter()
+            .map(|&c| {
+                total += c;
+                total
+            })
+            .collect()
+    }
+
+    /// The report-v2 JSON object for this histogram.
+    pub fn to_json(&self) -> String {
+        let edges: Vec<String> = self.edges.iter().map(|&e| json::num(e)).collect();
+        let counts: Vec<String> = self.counts.iter().map(u64::to_string).collect();
+        format!(
+            "{{\"name\": \"{}\", \"unit\": \"{}\", \"edges\": [{}], \
+             \"counts\": [{}], \"count\": {}, \"sum\": {}, \"p50\": {}, \
+             \"p95\": {}, \"max\": {}}}",
+            json::esc(self.name),
+            json::esc(self.unit),
+            edges.join(", "),
+            counts.join(", "),
+            self.count(),
+            json::num(self.sum()),
+            json::num(self.percentile(50.0)),
+            json::num(self.percentile(95.0)),
+            json::num(self.max()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_all_zeros() {
+        let h = Histogram::seconds("empty");
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.percentile(95.0), 0.0);
+        assert!(h.counts.iter().all(|&c| c == 0));
+        assert_eq!(h.cumulative().last(), Some(&0));
+    }
+
+    #[test]
+    fn one_sample_answers_every_percentile() {
+        let mut h = Histogram::seconds("one");
+        h.record(0.25);
+        h.finish();
+        assert_eq!(h.count(), 1);
+        for q in [1.0, 50.0, 95.0, 99.9, 100.0] {
+            assert_eq!(h.percentile(q), 0.25, "q={q}");
+        }
+        // 0.25 s lands in the 1ms×2^8 = 0.256 s bucket.
+        assert_eq!(h.counts[8], 1);
+        assert_eq!(h.counts.iter().sum::<u64>(), 1);
+    }
+
+    #[test]
+    fn all_samples_in_one_bucket_still_give_exact_percentiles() {
+        // Every sample inside (0.128, 0.256]: one bucket, but the exact
+        // ranks still separate them — the reason raw samples are kept.
+        let mut h = Histogram::seconds("packed");
+        h.record_all([0.13, 0.14, 0.15, 0.2, 0.25]);
+        h.finish();
+        assert_eq!(h.counts[8], 5);
+        assert_eq!(h.percentile(50.0), 0.15);
+        assert_eq!(h.percentile(95.0), 0.25);
+        assert_eq!(h.percentile(20.0), 0.13);
+    }
+
+    #[test]
+    fn nearest_rank_matches_the_definition() {
+        let mut h = Histogram::bytes("b");
+        h.record_all([10.0, 20.0, 30.0, 40.0]);
+        h.finish();
+        // ceil(0.50 × 4) = 2 → second sample.
+        assert_eq!(h.percentile(50.0), 20.0);
+        // ceil(0.95 × 4) = 4 → the max.
+        assert_eq!(h.percentile(95.0), 40.0);
+        // q=0 clamps to the first sample.
+        assert_eq!(h.percentile(0.0), 10.0);
+        assert_eq!(h.max(), 40.0);
+        assert!((h.sum() - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bucket_edges_are_the_documented_log_grids() {
+        let s = Histogram::seconds("s");
+        assert_eq!(s.edges.len(), 21);
+        assert!((s.edges[0] - 0.001).abs() < 1e-15);
+        assert!((s.edges[1] - 0.002).abs() < 1e-15);
+        assert!((s.edges[20] - 0.001 * f64::powi(2.0, 20)).abs() < 1e-9);
+        let b = Histogram::bytes("b");
+        assert_eq!(b.edges.len(), 15);
+        assert_eq!(b.edges[0], 64.0);
+        assert_eq!(b.edges[1], 256.0);
+        // Overflow: a sample above the top edge lands in the last bucket.
+        let mut b = b;
+        b.record(1e18);
+        assert_eq!(*b.counts.last().unwrap(), 1);
+        assert_eq!(b.cumulative().last(), Some(&1));
+    }
+
+    #[test]
+    fn cumulative_counts_are_monotone_and_end_at_count() {
+        let mut h = Histogram::seconds("c");
+        h.record_all([0.0005, 0.01, 0.5, 100.0, 1e7]);
+        h.finish();
+        let cum = h.cumulative();
+        assert!(cum.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(*cum.last().unwrap(), h.count());
+        assert_eq!(cum.len(), h.edges.len() + 1);
+    }
+
+    #[test]
+    fn to_json_parses_and_carries_the_exact_percentiles() {
+        let mut h = Histogram::bytes("fetch_bytes");
+        h.record_all([100.0, 300.0, 900.0]);
+        h.finish();
+        let v = json::Value::parse(&h.to_json()).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("fetch_bytes"));
+        assert_eq!(v.get("unit").unwrap().as_str(), Some("bytes"));
+        assert_eq!(v.get("count").unwrap().as_u64(), Some(3));
+        assert_eq!(v.get("p50").unwrap().as_f64(), Some(300.0));
+        assert_eq!(v.get("p95").unwrap().as_f64(), Some(900.0));
+        assert_eq!(
+            v.get("edges").unwrap().items().unwrap().len() + 1,
+            v.get("counts").unwrap().items().unwrap().len()
+        );
+    }
+}

@@ -1,0 +1,694 @@
+//! Cluster telemetry on the virtual clock (DESIGN.md §2.15).
+//!
+//! The trace layer (§2.11) keeps every span of a run; this layer turns
+//! that one-off timeline into the aggregate signals operators actually
+//! watch: time-resolved gauges (slot occupancy per rack, queued vs
+//! running attempts, bytes in flight, node liveness) sampled on a fixed
+//! grid over the run, and log-bucket [`histogram::Histogram`]s of the
+//! latency/size distributions (attempt duration, queue wait, fetch bytes,
+//! spill size).
+//!
+//! Everything here derives from [`TraceData`] — schedule plans, fetch
+//! plans and fault instants on the **virtual clock** — so two runs with
+//! the same seed produce byte-identical exports: the Prometheus snapshot
+//! (`--metrics-out`, [`prometheus`]), the `timeseries`/`histograms`
+//! sections of the `psch.run_report.v2` JSON, and the CLI utilization
+//! sparklines. Wall-clock times never enter this module.
+//!
+//! [`diff`] closes the loop: it reads two RunReports back and gates on
+//! regressions (`psch report diff`).
+
+pub mod diff;
+pub mod histogram;
+pub mod prometheus;
+
+use crate::trace::{ArgValue, Span, SpanKind, TraceData};
+use histogram::Histogram;
+
+/// Samples in every gauge series: dense enough to show phase structure,
+/// small enough to keep reports readable.
+pub const SAMPLES: usize = 64;
+
+/// One sampled gauge: a name, an optional label (`rack="2"`), and one
+/// value per grid sample.
+#[derive(Debug, Clone)]
+pub struct GaugeSeries {
+    /// Metric name (`busy_slots`, `running_attempts`, ...).
+    pub name: &'static str,
+    /// Optional label pair rendered as `{key="value"}`.
+    pub label: Option<(&'static str, String)>,
+    /// One value per entry of [`Timeseries::times_s`].
+    pub values: Vec<u64>,
+}
+
+impl GaugeSeries {
+    /// Mean over the series (0 for the empty series).
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            0.0
+        } else {
+            self.values.iter().sum::<u64>() as f64 / self.values.len() as f64
+        }
+    }
+
+    /// Peak over the series (0 for the empty series).
+    pub fn peak(&self) -> u64 {
+        self.values.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// The sampled gauge block: a shared time grid plus every gauge series.
+#[derive(Debug, Clone, Default)]
+pub struct Timeseries {
+    /// Sample times, seconds since run start (virtual clock).
+    pub times_s: Vec<f64>,
+    /// Gauge series, in catalog order (racks ascending within a name).
+    pub gauges: Vec<GaugeSeries>,
+}
+
+/// The full telemetry derivation of one traced run.
+#[derive(Debug, Clone)]
+pub struct Telemetry {
+    /// Virtual makespan the grid spans.
+    pub makespan_s: f64,
+    /// Slot capacity of the traced cluster (slaves × slots each).
+    pub total_slots: usize,
+    /// Sampled gauges.
+    pub timeseries: Timeseries,
+    /// Distribution histograms, finished (sorted) and ready to query.
+    pub histograms: Vec<Histogram>,
+}
+
+/// One job's window on the run timeline with the spans telemetry needs
+/// attributed to it. Jobs are recorded serially (the trace cursor advances
+/// per job), so span→job attribution by emission order is exact.
+struct JobWindow {
+    start_s: f64,
+    end_s: f64,
+    /// `(start, end)` of every attempt span in the job.
+    attempts: Vec<(f64, f64)>,
+    /// The shuffle-fetch barrier window, if the job had one.
+    barrier: Option<(f64, f64)>,
+    /// Total bytes the job's reducers fetch (in flight while the barrier
+    /// is open).
+    fetch_bytes: u64,
+}
+
+impl Telemetry {
+    /// Telemetry of a run with no trace (oracle serving paths): empty
+    /// grid, empty histograms — still renders/export cleanly.
+    pub fn empty() -> Self {
+        let data = TraceData {
+            slaves: 0,
+            slots_per_slave: 1,
+            makespan_s: 0.0,
+            phases: Vec::new(),
+            jobs: Vec::new(),
+            spans: Vec::new(),
+            instants: Vec::new(),
+        };
+        from_trace(&data, 1)
+    }
+}
+
+/// Derive the full telemetry of one traced run. `racks` is the configured
+/// rack count; slaves map to racks exactly like
+/// `RackTopology::uniform` (`rack = slave × racks / slaves`).
+pub fn from_trace(data: &TraceData, racks: usize) -> Telemetry {
+    let slaves = data.slaves;
+    let slots_per_slave = data.slots_per_slave.max(1);
+    let total_slots = slaves * slots_per_slave;
+    let racks = racks.clamp(1, slaves.max(1));
+    let rack_of = |slave: usize| -> usize {
+        if slaves == 0 {
+            0
+        } else {
+            slave * racks / slaves
+        }
+    };
+    // Slot capacity per rack (uniform topology: contiguous slave ranges).
+    let mut rack_slots = vec![0u64; racks];
+    for s in 0..slaves {
+        rack_slots[rack_of(s)] += slots_per_slave as u64;
+    }
+
+    let times_s: Vec<f64> = if data.makespan_s <= 0.0 {
+        vec![0.0]
+    } else {
+        (0..SAMPLES)
+            .map(|i| data.makespan_s * i as f64 / (SAMPLES - 1) as f64)
+            .collect()
+    };
+    let n = times_s.len();
+
+    // Attribute spans to their job by emission order: each Job span is
+    // followed by that job's setup/attempt/barrier/IO spans.
+    let mut windows: Vec<JobWindow> = Vec::new();
+    let mut reads: Vec<(f64, f64, u64)> = Vec::new();
+    let mut writes: Vec<(f64, f64, u64)> = Vec::new();
+    let mut fetch_streams: Vec<(f64, f64)> = Vec::new();
+    for span in &data.spans {
+        match span.kind {
+            SpanKind::Job => {
+                // Job spans and `data.jobs` records are appended in the
+                // same per-job order, so the next window's analysis record
+                // sits at the current window count.
+                let fetch_bytes = data
+                    .jobs
+                    .get(windows.len())
+                    .map(|j| j.reducer_bytes.iter().sum())
+                    .unwrap_or(0);
+                windows.push(JobWindow {
+                    start_s: span.start_s,
+                    end_s: span.end_s,
+                    attempts: Vec::new(),
+                    barrier: None,
+                    fetch_bytes,
+                });
+            }
+            SpanKind::Attempt => {
+                if let Some(w) = windows.last_mut() {
+                    w.attempts.push((span.start_s, span.end_s));
+                }
+            }
+            SpanKind::FetchBarrier => {
+                if let Some(w) = windows.last_mut() {
+                    w.barrier = Some((span.start_s, span.end_s));
+                }
+            }
+            SpanKind::Read => reads.push((span.start_s, span.end_s, span_bytes(span))),
+            SpanKind::Write => {
+                writes.push((span.start_s, span.end_s, span_bytes(span)))
+            }
+            SpanKind::Fetch => fetch_streams.push((span.start_s, span.end_s)),
+            _ => {}
+        }
+    }
+
+    // Attempt spans tagged with their slave's rack, for per-rack gauges.
+    let attempt_racks: Vec<(f64, f64, usize)> = data
+        .spans
+        .iter()
+        .filter(|s| s.kind == SpanKind::Attempt && s.track > 0)
+        .map(|s| {
+            let slave = (s.track - 1) / slots_per_slave;
+            (s.start_s, s.end_s, rack_of(slave.min(slaves.saturating_sub(1))))
+        })
+        .collect();
+
+    // A span is active at t on the half-open interval [start, end).
+    let active = |start: f64, end: f64, t: f64| start <= t && t < end;
+
+    let mut busy_total = vec![0u64; n];
+    let mut busy_rack = vec![vec![0u64; n]; racks];
+    let mut running = vec![0u64; n];
+    let mut queued = vec![0u64; n];
+    let mut streams = vec![0u64; n];
+    let mut backlog = vec![0u64; n];
+    let mut read_fly = vec![0u64; n];
+    let mut write_fly = vec![0u64; n];
+    let mut dead = vec![0u64; n];
+    let mut blacklisted = vec![0u64; n];
+    for (i, &t) in times_s.iter().enumerate() {
+        for &(s, e, rack) in &attempt_racks {
+            if active(s, e, t) {
+                busy_total[i] += 1;
+                busy_rack[rack][i] += 1;
+                running[i] += 1;
+            }
+        }
+        for w in &windows {
+            if active(w.start_s, w.end_s, t) {
+                queued[i] +=
+                    w.attempts.iter().filter(|&&(s, _)| s > t).count() as u64;
+                if let Some((bs, be)) = w.barrier {
+                    if active(bs, be, t) {
+                        backlog[i] += w.fetch_bytes;
+                    }
+                }
+            }
+        }
+        streams[i] += fetch_streams.iter().filter(|&&(s, e)| active(s, e, t)).count()
+            as u64;
+        read_fly[i] +=
+            reads.iter().filter(|&&(s, e, _)| active(s, e, t)).map(|r| r.2).sum::<u64>();
+        write_fly[i] += writes
+            .iter()
+            .filter(|&&(s, e, _)| active(s, e, t))
+            .map(|r| r.2)
+            .sum::<u64>();
+        dead[i] = data
+            .instants
+            .iter()
+            .filter(|ev| ev.name == "node-death" && ev.time_s <= t)
+            .count() as u64;
+        blacklisted[i] = data
+            .instants
+            .iter()
+            .filter(|ev| ev.name == "slave-blacklisted" && ev.time_s <= t)
+            .count() as u64;
+    }
+
+    let mut gauges = Vec::new();
+    let total = total_slots as u64;
+    gauges.push(GaugeSeries {
+        name: "busy_slots",
+        label: None,
+        values: busy_total.clone(),
+    });
+    gauges.push(GaugeSeries {
+        name: "idle_slots",
+        label: None,
+        values: busy_total.iter().map(|&b| total.saturating_sub(b)).collect(),
+    });
+    for (r, series) in busy_rack.iter().enumerate() {
+        gauges.push(GaugeSeries {
+            name: "busy_slots_rack",
+            label: Some(("rack", r.to_string())),
+            values: series.clone(),
+        });
+        gauges.push(GaugeSeries {
+            name: "idle_slots_rack",
+            label: Some(("rack", r.to_string())),
+            values: series.iter().map(|&b| rack_slots[r].saturating_sub(b)).collect(),
+        });
+    }
+    gauges.push(GaugeSeries { name: "running_attempts", label: None, values: running });
+    gauges.push(GaugeSeries { name: "queued_attempts", label: None, values: queued });
+    gauges.push(GaugeSeries {
+        name: "shuffle_fetch_streams",
+        label: None,
+        values: streams,
+    });
+    gauges.push(GaugeSeries {
+        name: "shuffle_backlog_bytes",
+        label: None,
+        values: backlog,
+    });
+    gauges.push(GaugeSeries {
+        name: "dfs_read_bytes_in_flight",
+        label: None,
+        values: read_fly,
+    });
+    gauges.push(GaugeSeries {
+        name: "dfs_write_bytes_in_flight",
+        label: None,
+        values: write_fly,
+    });
+    gauges.push(GaugeSeries {
+        name: "live_nodes",
+        label: None,
+        values: dead.iter().map(|&d| (slaves as u64).saturating_sub(d)).collect(),
+    });
+    gauges.push(GaugeSeries { name: "dead_nodes", label: None, values: dead });
+    gauges.push(GaugeSeries {
+        name: "blacklisted_nodes",
+        label: None,
+        values: blacklisted,
+    });
+
+    // Distribution histograms from the per-job analysis records.
+    let mut attempt_h = Histogram::seconds("attempt_duration_seconds");
+    let mut wait_h = Histogram::seconds("queue_wait_seconds");
+    let mut fetch_h = Histogram::bytes("fetch_bytes");
+    let mut spill_h = Histogram::bytes("spill_bytes");
+    for job in &data.jobs {
+        attempt_h.record_all(job.map_durations.iter().copied());
+        attempt_h.record_all(job.reduce_durations.iter().copied());
+        wait_h.record_all(job.queue_waits.iter().copied());
+        fetch_h.record_all(job.reducer_bytes.iter().map(|&b| b as f64));
+        spill_h.record_all(job.spill_bytes.iter().map(|&b| b as f64));
+    }
+    let mut histograms = vec![attempt_h, wait_h, fetch_h, spill_h];
+    for h in &mut histograms {
+        h.finish();
+    }
+
+    Telemetry {
+        makespan_s: data.makespan_s,
+        total_slots,
+        timeseries: Timeseries { times_s, gauges },
+        histograms,
+    }
+}
+
+/// The `bytes` argument of a span (0 when absent).
+fn span_bytes(span: &Span) -> u64 {
+    span.args
+        .iter()
+        .find_map(|(k, v)| match (k, v) {
+            (&"bytes", ArgValue::U64(b)) => Some(*b),
+            _ => None,
+        })
+        .unwrap_or(0)
+}
+
+/// The report-v2 `timeseries` JSON object.
+pub fn timeseries_json(ts: &Timeseries) -> String {
+    let times: Vec<String> =
+        ts.times_s.iter().map(|&t| crate::trace::json::num(t)).collect();
+    let gauges: Vec<String> = ts
+        .gauges
+        .iter()
+        .map(|g| {
+            let labels = match &g.label {
+                Some((k, v)) => format!(
+                    "{{\"{}\": \"{}\"}}",
+                    crate::trace::json::esc(k),
+                    crate::trace::json::esc(v)
+                ),
+                None => "{}".to_string(),
+            };
+            let values: Vec<String> = g.values.iter().map(u64::to_string).collect();
+            format!(
+                "{{\"name\": \"{}\", \"labels\": {}, \"values\": [{}]}}",
+                crate::trace::json::esc(g.name),
+                labels,
+                values.join(", ")
+            )
+        })
+        .collect();
+    format!(
+        "{{\"samples\": {}, \"times_s\": [{}], \"gauges\": [{}]}}",
+        ts.times_s.len(),
+        times.join(", "),
+        gauges.join(", ")
+    )
+}
+
+/// The report-v2 `histograms` JSON array.
+pub fn histograms_json(hists: &[Histogram]) -> String {
+    let items: Vec<String> = hists.iter().map(Histogram::to_json).collect();
+    format!("[{}]", items.join(", "))
+}
+
+/// Per-phase slot-utilization sparklines for the CLI summary: one line
+/// per phase window, showing busy/total over the phase's samples.
+pub fn render_phase_utilization(data: &TraceData, tel: &Telemetry) -> String {
+    let busy = match tel.timeseries.gauges.iter().find(|g| g.name == "busy_slots") {
+        Some(g) => &g.values,
+        None => return String::new(),
+    };
+    if tel.total_slots == 0 {
+        return String::new();
+    }
+    let mut out = String::new();
+    for phase in &data.phases {
+        let utils: Vec<f64> = tel
+            .timeseries
+            .times_s
+            .iter()
+            .zip(busy.iter())
+            .filter(|(&t, _)| {
+                t >= phase.start_s && (t < phase.end_s || phase.end_s <= phase.start_s)
+            })
+            .map(|(_, &b)| b as f64 / tel.total_slots as f64)
+            .collect();
+        if utils.is_empty() {
+            continue;
+        }
+        let avg = 100.0 * utils.iter().sum::<f64>() / utils.len() as f64;
+        let peak = 100.0 * utils.iter().cloned().fold(0.0, f64::max);
+        out.push_str(&format!(
+            "  util {:<14} {}  avg {:>3.0}% peak {:>3.0}%\n",
+            phase.name,
+            crate::metrics::sparkline(&utils, 1.0),
+            avg,
+            peak
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{Attempt, Locality, SchedulePlan};
+    use crate::trace::{plan_trace, FetchTrace, JobTrace, PlanTrace, TraceSink};
+
+    fn attempt(task: usize, slave: usize, slot: usize, s: f64, e: f64) -> Attempt {
+        Attempt {
+            task,
+            slave,
+            slot,
+            start_s: s,
+            end_s: e,
+            locality: Locality::NodeLocal,
+            speculative: false,
+            won: true,
+        }
+    }
+
+    fn traced_fixture() -> TraceData {
+        let sink = TraceSink::default();
+        sink.enable(2, 1);
+        sink.begin_phase("similarity");
+        let plan = SchedulePlan {
+            makespan_s: 8.0,
+            attempts: vec![attempt(0, 0, 0, 0.0, 4.0), attempt(1, 1, 1, 2.0, 8.0)],
+            ..SchedulePlan::default()
+        };
+        let specs = Vec::new();
+        let model = crate::cluster::NetworkModel::default();
+        sink.record_job(JobTrace {
+            name: "sim:map".into(),
+            overhead_s: 1.0,
+            virtual_time_s: 9.0,
+            map: plan_trace(&plan, &specs, &model),
+            reruns: Vec::new(),
+            fetch: None,
+            reduce: None,
+            spill_bytes: Vec::new(),
+        });
+        sink.end_phase();
+        sink.snapshot().unwrap()
+    }
+
+    #[test]
+    fn gauges_share_the_grid_and_sum_to_capacity() {
+        let tel = from_trace(&traced_fixture(), 2);
+        assert_eq!(tel.timeseries.times_s.len(), SAMPLES);
+        assert_eq!(tel.total_slots, 2);
+        let busy = tel
+            .timeseries
+            .gauges
+            .iter()
+            .find(|g| g.name == "busy_slots")
+            .unwrap();
+        let idle = tel
+            .timeseries
+            .gauges
+            .iter()
+            .find(|g| g.name == "idle_slots")
+            .unwrap();
+        for (b, i) in busy.values.iter().zip(idle.values.iter()) {
+            assert_eq!(b + i, 2, "busy + idle == capacity at every sample");
+        }
+        // Both slots overlap in (3, 4): peak busy is 2.
+        assert_eq!(busy.peak(), 2);
+        // Per-rack series exist for both racks and sum to the total.
+        let r0 = tel
+            .timeseries
+            .gauges
+            .iter()
+            .find(|g| {
+                g.name == "busy_slots_rack"
+                    && g.label == Some(("rack", "0".to_string()))
+            })
+            .unwrap();
+        let r1 = tel
+            .timeseries
+            .gauges
+            .iter()
+            .find(|g| {
+                g.name == "busy_slots_rack"
+                    && g.label == Some(("rack", "1".to_string()))
+            })
+            .unwrap();
+        for ((a, b), t) in r0.values.iter().zip(r1.values.iter()).zip(busy.values.iter())
+        {
+            assert_eq!(a + b, *t);
+        }
+    }
+
+    #[test]
+    fn queued_attempts_drain_as_the_job_progresses() {
+        let tel = from_trace(&traced_fixture(), 1);
+        let queued = tel
+            .timeseries
+            .gauges
+            .iter()
+            .find(|g| g.name == "queued_attempts")
+            .unwrap();
+        // Attempt 1 dispatches at job-relative 3.0 (1.0 overhead + 2.0
+        // plan wait): early samples see it queued, late samples don't.
+        assert!(queued.values[0] >= 1, "{:?}", queued.values);
+        assert_eq!(*queued.values.last().unwrap(), 0);
+        let running = tel
+            .timeseries
+            .gauges
+            .iter()
+            .find(|g| g.name == "running_attempts")
+            .unwrap();
+        assert!(running.peak() >= 1);
+    }
+
+    #[test]
+    fn histograms_capture_attempt_durations_and_waits() {
+        let tel = from_trace(&traced_fixture(), 1);
+        let attempt_h = &tel.histograms[0];
+        assert_eq!(attempt_h.name, "attempt_duration_seconds");
+        assert_eq!(attempt_h.count(), 2);
+        assert_eq!(attempt_h.percentile(50.0), 4.0);
+        assert_eq!(attempt_h.max(), 6.0);
+        let wait_h = &tel.histograms[1];
+        assert_eq!(wait_h.name, "queue_wait_seconds");
+        assert_eq!(wait_h.count(), 2);
+        assert_eq!(wait_h.percentile(100.0), 2.0);
+    }
+
+    #[test]
+    fn fetch_backlog_tracks_the_barrier_window() {
+        let sink = TraceSink::default();
+        sink.enable(1, 2);
+        let map = SchedulePlan {
+            makespan_s: 2.0,
+            attempts: vec![attempt(0, 0, 0, 0.0, 2.0)],
+            ..SchedulePlan::default()
+        };
+        let reduce = SchedulePlan {
+            makespan_s: 3.0,
+            attempts: vec![attempt(0, 0, 1, 0.0, 3.0)],
+            ..SchedulePlan::default()
+        };
+        let model = crate::cluster::NetworkModel::default();
+        sink.record_job(JobTrace {
+            name: "r".into(),
+            overhead_s: 0.0,
+            virtual_time_s: 9.0,
+            map: plan_trace(&map, &[], &model),
+            reruns: Vec::new(),
+            fetch: Some(FetchTrace {
+                fetch_s: 4.0,
+                reducers: vec![crate::mapreduce::shuffle::fetch::ReducerFetch {
+                    fetch_s: 4.0,
+                    fetches: 1,
+                    bytes: 1000,
+                }],
+            }),
+            reduce: Some(plan_trace(&reduce, &[], &model)),
+            spill_bytes: vec![1000],
+        });
+        let tel = from_trace(&sink.snapshot().unwrap(), 1);
+        let backlog = tel
+            .timeseries
+            .gauges
+            .iter()
+            .find(|g| g.name == "shuffle_backlog_bytes")
+            .unwrap();
+        // The barrier spans [2, 6) of a 9 s run: backlog is 1000 inside,
+        // 0 outside.
+        assert_eq!(backlog.peak(), 1000);
+        assert_eq!(backlog.values[0], 0);
+        assert_eq!(*backlog.values.last().unwrap(), 0);
+        let spill_h = &tel.histograms[3];
+        assert_eq!(spill_h.name, "spill_bytes");
+        assert_eq!(spill_h.count(), 1);
+        assert_eq!(spill_h.max(), 1000.0);
+        let fetch_h = &tel.histograms[2];
+        assert_eq!(fetch_h.count(), 1);
+    }
+
+    #[test]
+    fn node_instants_move_the_liveness_gauges() {
+        let sink = TraceSink::default();
+        sink.enable(3, 1);
+        let mut plan = SchedulePlan {
+            makespan_s: 4.0,
+            attempts: vec![attempt(0, 0, 0, 0.0, 4.0)],
+            ..SchedulePlan::default()
+        };
+        plan.death_events.push((1, 2.0));
+        plan.blacklisted.push((2, 3.0));
+        let model = crate::cluster::NetworkModel::default();
+        sink.record_job(JobTrace {
+            name: "j".into(),
+            overhead_s: 0.0,
+            virtual_time_s: 4.0,
+            map: plan_trace(&plan, &[], &model),
+            reruns: Vec::new(),
+            fetch: None,
+            reduce: None,
+            spill_bytes: Vec::new(),
+        });
+        let tel = from_trace(&sink.snapshot().unwrap(), 1);
+        let live = tel
+            .timeseries
+            .gauges
+            .iter()
+            .find(|g| g.name == "live_nodes")
+            .unwrap();
+        let dead = tel
+            .timeseries
+            .gauges
+            .iter()
+            .find(|g| g.name == "dead_nodes")
+            .unwrap();
+        let black = tel
+            .timeseries
+            .gauges
+            .iter()
+            .find(|g| g.name == "blacklisted_nodes")
+            .unwrap();
+        assert_eq!(live.values[0], 3);
+        assert_eq!(*live.values.last().unwrap(), 2);
+        assert_eq!(dead.values[0], 0);
+        assert_eq!(*dead.values.last().unwrap(), 1);
+        assert_eq!(*black.values.last().unwrap(), 1);
+    }
+
+    #[test]
+    fn empty_telemetry_renders_without_panicking() {
+        let tel = Telemetry::empty();
+        assert_eq!(tel.timeseries.times_s, vec![0.0]);
+        assert_eq!(tel.histograms.len(), 4);
+        let ts = timeseries_json(&tel.timeseries);
+        assert!(crate::trace::json::Value::parse(&ts).is_ok());
+        let hs = histograms_json(&tel.histograms);
+        assert!(crate::trace::json::Value::parse(&hs).is_ok());
+    }
+
+    #[test]
+    fn timeseries_json_round_trips() {
+        let tel = from_trace(&traced_fixture(), 2);
+        let v = crate::trace::json::Value::parse(&timeseries_json(&tel.timeseries))
+            .unwrap();
+        assert_eq!(v.get("samples").unwrap().as_u64(), Some(SAMPLES as u64));
+        let gauges = v.get("gauges").unwrap().items().unwrap();
+        assert!(!gauges.is_empty());
+        let first = &gauges[0];
+        assert_eq!(first.get("name").unwrap().as_str(), Some("busy_slots"));
+        assert_eq!(
+            first.get("values").unwrap().items().unwrap().len(),
+            SAMPLES
+        );
+    }
+
+    #[test]
+    fn utilization_sparkline_covers_every_phase() {
+        let data = traced_fixture();
+        let tel = from_trace(&data, 1);
+        let out = render_phase_utilization(&data, &tel);
+        assert!(out.contains("util similarity"), "{out}");
+        assert!(out.contains("avg"), "{out}");
+        assert!(out.contains("peak"), "{out}");
+    }
+
+    #[test]
+    fn same_trace_derives_identical_telemetry_bytes() {
+        let a = from_trace(&traced_fixture(), 2);
+        let b = from_trace(&traced_fixture(), 2);
+        assert_eq!(timeseries_json(&a.timeseries), timeseries_json(&b.timeseries));
+        assert_eq!(histograms_json(&a.histograms), histograms_json(&b.histograms));
+    }
+}

@@ -1,0 +1,213 @@
+//! Prometheus text-exposition snapshot of one run's telemetry.
+//!
+//! `psch run --metrics-out FILE` writes this format so the run's signals
+//! drop straight into existing scrape-file tooling (node_exporter's
+//! textfile collector, CI artifact diffing). Only **virtual-clock**
+//! quantities are exported — no wall times, no timestamps — so two
+//! same-seed runs produce byte-identical snapshots.
+//!
+//! Layout, in order: run-level scalars (makespan, per-phase virtual
+//! seconds), the per-phase counters, per-gauge mean/peak summaries of the
+//! sampled series, and the four histograms with cumulative `le` buckets
+//! plus exact p50/p95 gauges.
+
+use crate::coordinator::PhaseStats;
+use crate::trace::json::num;
+
+use super::Telemetry;
+
+/// Metric-name prefix for every exported sample.
+const PREFIX: &str = "psch";
+
+/// Render the full snapshot.
+pub fn render(tel: &Telemetry, phases: &[PhaseStats]) -> String {
+    let mut out = String::new();
+
+    header(&mut out, "makespan_seconds", "gauge", "Virtual makespan of the run.");
+    out.push_str(&format!("{PREFIX}_makespan_seconds {}\n", num(tel.makespan_s)));
+    header(&mut out, "total_slots", "gauge", "Slot capacity of the cluster.");
+    out.push_str(&format!("{PREFIX}_total_slots {}\n", tel.total_slots));
+
+    header(
+        &mut out,
+        "phase_virtual_seconds",
+        "gauge",
+        "Virtual seconds per pipeline phase.",
+    );
+    for p in phases {
+        out.push_str(&format!(
+            "{PREFIX}_phase_virtual_seconds{{phase=\"{}\"}} {}\n",
+            p.name,
+            num(p.virtual_s)
+        ));
+    }
+
+    header(
+        &mut out,
+        "counter_total",
+        "counter",
+        "Job counters aggregated per phase.",
+    );
+    for p in phases {
+        for (name, value) in p.counters.iter() {
+            out.push_str(&format!(
+                "{PREFIX}_counter_total{{phase=\"{}\",name=\"{}\"}} {}\n",
+                p.name, name, value
+            ));
+        }
+    }
+
+    header(
+        &mut out,
+        "gauge_mean",
+        "gauge",
+        "Mean of each sampled gauge series over the run.",
+    );
+    for g in &tel.timeseries.gauges {
+        out.push_str(&format!(
+            "{PREFIX}_gauge_mean{{name=\"{}\"{}}} {}\n",
+            g.name,
+            label_suffix(g),
+            num(g.mean())
+        ));
+    }
+    header(
+        &mut out,
+        "gauge_peak",
+        "gauge",
+        "Peak of each sampled gauge series over the run.",
+    );
+    for g in &tel.timeseries.gauges {
+        out.push_str(&format!(
+            "{PREFIX}_gauge_peak{{name=\"{}\"{}}} {}\n",
+            g.name,
+            label_suffix(g),
+            g.peak()
+        ));
+    }
+
+    for h in &tel.histograms {
+        let base = format!("{PREFIX}_{}", h.name);
+        out.push_str(&format!(
+            "# HELP {base} Distribution over the run ({}).\n# TYPE {base} histogram\n",
+            h.unit
+        ));
+        let cumulative = h.cumulative();
+        for (edge, cum) in h.edges.iter().zip(cumulative.iter()) {
+            out.push_str(&format!(
+                "{base}_bucket{{le=\"{}\"}} {}\n",
+                num(*edge),
+                cum
+            ));
+        }
+        out.push_str(&format!(
+            "{base}_bucket{{le=\"+Inf\"}} {}\n",
+            cumulative.last().copied().unwrap_or(0)
+        ));
+        out.push_str(&format!("{base}_sum {}\n", num(h.sum())));
+        out.push_str(&format!("{base}_count {}\n", h.count()));
+        out.push_str(&format!(
+            "# TYPE {base}_p50 gauge\n{base}_p50 {}\n",
+            num(h.percentile(50.0))
+        ));
+        out.push_str(&format!(
+            "# TYPE {base}_p95 gauge\n{base}_p95 {}\n",
+            num(h.percentile(95.0))
+        ));
+    }
+    out
+}
+
+fn header(out: &mut String, name: &str, kind: &str, help: &str) {
+    out.push_str(&format!(
+        "# HELP {PREFIX}_{name} {help}\n# TYPE {PREFIX}_{name} {kind}\n"
+    ));
+}
+
+fn label_suffix(g: &super::GaugeSeries) -> String {
+    match &g.label {
+        Some((k, v)) => format!(",{k}=\"{v}\""),
+        None => String::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::histogram::Histogram;
+    use crate::telemetry::{GaugeSeries, Timeseries};
+
+    fn phase(name: &str, virtual_s: f64) -> PhaseStats {
+        let mut p = PhaseStats {
+            name: name.to_string(),
+            virtual_s,
+            ..PhaseStats::default()
+        };
+        p.counters.incr("SHUFFLE_BYTES", 123);
+        p
+    }
+
+    fn tel_fixture() -> Telemetry {
+        let mut h = Histogram::seconds("attempt_duration_seconds");
+        h.record_all([0.5, 1.5]);
+        h.finish();
+        Telemetry {
+            makespan_s: 12.5,
+            total_slots: 4,
+            timeseries: Timeseries {
+                times_s: vec![0.0, 6.25, 12.5],
+                gauges: vec![
+                    GaugeSeries {
+                        name: "busy_slots",
+                        label: None,
+                        values: vec![1, 4, 0],
+                    },
+                    GaugeSeries {
+                        name: "busy_slots_rack",
+                        label: Some(("rack", "1".to_string())),
+                        values: vec![0, 2, 0],
+                    },
+                ],
+            },
+            histograms: vec![h],
+        }
+    }
+
+    #[test]
+    fn snapshot_has_the_expected_families() {
+        let text = render(&tel_fixture(), &[phase("similarity", 8.0)]);
+        assert!(text.contains("psch_makespan_seconds 12.5\n"), "{text}");
+        assert!(text.contains(
+            "psch_phase_virtual_seconds{phase=\"similarity\"} 8\n"
+        ));
+        assert!(text.contains(
+            "psch_counter_total{phase=\"similarity\",name=\"SHUFFLE_BYTES\"} 123\n"
+        ));
+        assert!(text.contains("psch_gauge_peak{name=\"busy_slots\"} 4\n"));
+        assert!(text.contains("psch_gauge_mean{name=\"busy_slots_rack\",rack=\"1\"}"));
+        assert!(text.contains("psch_attempt_duration_seconds_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("psch_attempt_duration_seconds_count 2\n"));
+        assert!(text.contains("psch_attempt_duration_seconds_p95 1.5\n"));
+        // Every non-comment line is `name{labels} value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let mut parts = line.rsplitn(2, ' ');
+            let value = parts.next().unwrap();
+            assert!(value.parse::<f64>().is_ok(), "unparseable value: {line}");
+            assert!(parts.next().unwrap().starts_with("psch_"), "{line}");
+        }
+    }
+
+    #[test]
+    fn rendering_is_deterministic() {
+        let a = render(&tel_fixture(), &[phase("p", 1.0)]);
+        let b = render(&tel_fixture(), &[phase("p", 1.0)]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_telemetry_renders_cleanly() {
+        let text = render(&Telemetry::empty(), &[]);
+        assert!(text.contains("psch_makespan_seconds 0\n"));
+        assert!(text.contains("psch_queue_wait_seconds_count 0\n"));
+    }
+}

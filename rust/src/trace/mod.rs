@@ -136,6 +136,10 @@ pub struct AttemptIo {
     pub read_s: f64,
     /// Output write.
     pub write_s: f64,
+    /// Bytes the read slice moves (the task's declared input).
+    pub read_bytes: u64,
+    /// Bytes the write slice moves (the task's declared output).
+    pub write_bytes: u64,
 }
 
 /// One schedule plan plus the per-attempt IO decomposition the span
@@ -168,6 +172,8 @@ pub fn plan_trace(
                 dispatch_s: model.task_dispatch_s,
                 read_s: model.read_time_at(input, a.locality),
                 write_s: model.write_time(output),
+                read_bytes: input,
+                write_bytes: output,
             }
         })
         .collect();
@@ -202,6 +208,9 @@ pub struct JobTrace {
     pub fetch: Option<FetchTrace>,
     /// The reduce phase plan (reduce jobs only).
     pub reduce: Option<PlanTrace>,
+    /// Shuffle bytes each map task spilled (Σ its partition segments);
+    /// empty for map-only jobs. Telemetry's spill-size histogram input.
+    pub spill_bytes: Vec<u64>,
 }
 
 /// One segment of a job's critical path. Segments are laid end to end:
@@ -239,6 +248,12 @@ pub struct JobRec {
     pub reduce_durations: Vec<f64>,
     /// Bytes fetched per reducer (reduce jobs only; skew input).
     pub reducer_bytes: Vec<u64>,
+    /// Per winning attempt (map, rerun and reduce plans alike): virtual
+    /// seconds it waited between phase start and dispatch — the
+    /// queue-wait histogram input.
+    pub queue_waits: Vec<f64>,
+    /// Shuffle bytes each map task spilled (empty for map-only jobs).
+    pub spill_bytes: Vec<u64>,
 }
 
 /// One phase window on the run timeline.
@@ -403,12 +418,14 @@ impl TraceState {
         self.emit_plan(&job.map, map_off, job_end, "map", None);
         push_plan_segments(&mut segments, &job.map.plan, "map");
         let mut map_durations = winning_durations(&job.map.plan);
+        let mut queue_waits = winning_waits(&job.map.plan);
 
         let mut off = map_off + job.map.plan.makespan_s;
         for rerun in &job.reruns {
             self.emit_plan(rerun, off, job_end, "map-rerun", None);
             push_plan_segments(&mut segments, &rerun.plan, "map-rerun");
             map_durations.extend(winning_durations(&rerun.plan));
+            queue_waits.extend(winning_waits(&rerun.plan));
             off += rerun.plan.makespan_s;
         }
 
@@ -444,6 +461,7 @@ impl TraceState {
             self.emit_plan(reduce, reduce_off, job_end, "reduce", job.fetch.as_ref());
             push_plan_segments(&mut segments, &reduce.plan, "reduce");
             reduce_durations = winning_durations(&reduce.plan);
+            queue_waits.extend(winning_waits(&reduce.plan));
             reducer_bytes = job
                 .fetch
                 .as_ref()
@@ -460,6 +478,8 @@ impl TraceState {
             map_durations,
             reduce_durations,
             reducer_bytes,
+            queue_waits,
+            spill_bytes: job.spill_bytes,
         });
         self.cursor_s = job_end;
     }
@@ -527,22 +547,29 @@ impl TraceState {
             }
             let compute = compute.max(0.0);
             let mut t = body_start;
-            for (kind, name, dur) in [
-                (SpanKind::Dispatch, "dispatch", io.dispatch_s),
-                (SpanKind::Read, "read", io.read_s),
-                (SpanKind::Compute, "compute", compute),
-                (SpanKind::Write, "write", io.write_s),
+            for (kind, name, dur, bytes) in [
+                (SpanKind::Dispatch, "dispatch", io.dispatch_s, 0),
+                (SpanKind::Read, "read", io.read_s, io.read_bytes),
+                (SpanKind::Compute, "compute", compute, 0),
+                (SpanKind::Write, "write", io.write_s, io.write_bytes),
             ] {
                 if dur <= 0.0 {
                     continue;
                 }
+                // Read/write children carry the bytes they move so the
+                // telemetry layer can gauge DFS bytes in flight.
+                let args = if bytes > 0 {
+                    vec![("bytes", ArgValue::U64(bytes))]
+                } else {
+                    Vec::new()
+                };
                 self.spans.push(Span {
                     kind,
                     name: name.to_string(),
                     track,
                     start_s: t,
                     end_s: (t + dur).min(end),
-                    args: Vec::new(),
+                    args,
                 });
                 t += dur;
             }
@@ -579,6 +606,12 @@ fn winning_durations(plan: &SchedulePlan) -> Vec<f64> {
         .filter(|a| a.won)
         .map(|a| a.end_s - a.start_s)
         .collect()
+}
+
+/// Per winning attempt: plan-relative dispatch time — how long the task
+/// waited in the queue (every task is ready at plan start).
+fn winning_waits(plan: &SchedulePlan) -> Vec<f64> {
+    plan.attempts.iter().filter(|a| a.won).map(|a| a.start_s).collect()
 }
 
 /// Append the wait/run critical segments of one plan: the plan's makespan
@@ -636,7 +669,7 @@ mod tests {
     fn io_for(plan: &SchedulePlan, dispatch: f64) -> Vec<AttemptIo> {
         plan.attempts
             .iter()
-            .map(|_| AttemptIo { dispatch_s: dispatch, read_s: 0.0, write_s: 0.0 })
+            .map(|_| AttemptIo { dispatch_s: dispatch, ..AttemptIo::default() })
             .collect()
     }
 
@@ -650,6 +683,7 @@ mod tests {
             reruns: Vec::new(),
             fetch: None,
             reduce: None,
+            spill_bytes: Vec::new(),
         }
     }
 
@@ -754,6 +788,7 @@ mod tests {
             reruns: Vec::new(),
             fetch: Some(fetch),
             reduce: Some(PlanTrace { plan: reduce, io: reduce_io }),
+            spill_bytes: vec![100],
         };
         sink.record_job(job);
         let data = sink.snapshot().unwrap();

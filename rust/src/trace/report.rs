@@ -5,20 +5,27 @@
 //! analysis. Benches and CI consume this one schema instead of scraping
 //! CLI lines.
 //!
-//! Schema (`psch.run_report.v1`; field glossary in DESIGN.md §2.11):
+//! Schema (`psch.run_report.v2`; field glossary in DESIGN.md §2.11 and
+//! §2.15). v2 is a strict superset of v1: the `timeseries` and
+//! `histograms` keys were **added**, every v1 key is unchanged, so v1
+//! parsers keep working on v2 documents (and the [`crate::telemetry::diff`]
+//! reader accepts both versions):
 //!
 //! ```text
-//! { schema:   "psch.run_report.v1",
-//!   config:   { cluster{..} shuffle{..} faults{..} knn{..} algo{..}
-//!               eigen{..} serving{..} },
-//!   phases:   [ { name, virtual_s, wall_s, jobs, shuffle_bytes,
-//!                 shuffle_fetch_s, locality{..}, shuffle{..}, faults{..},
-//!                 knn{..}, eigen{..}, serving{..},
-//!                 counters{NAME:value,..} } ],
-//!   totals:   { virtual_s, wall_s, jobs, nnz, sigma_resolved },
-//!   quality:  { nmi, ari } | null,
-//!   trace:    { makespan_s, jobs, critical_path{..}, stragglers[..],
-//!               reduce_skew[..] } | null }
+//! { schema:     "psch.run_report.v2",
+//!   config:     { cluster{..} shuffle{..} faults{..} knn{..} algo{..}
+//!                 eigen{..} serving{..} },
+//!   phases:     [ { name, virtual_s, wall_s, jobs, shuffle_bytes,
+//!                   shuffle_fetch_s, locality{..}, shuffle{..}, faults{..},
+//!                   knn{..}, eigen{..}, serving{..},
+//!                   counters{NAME:value,..} } ],
+//!   totals:     { virtual_s, wall_s, jobs, nnz, sigma_resolved },
+//!   quality:    { nmi, ari } | null,
+//!   trace:      { makespan_s, jobs, critical_path{..}, stragglers[..],
+//!                 reduce_skew[..] } | null,
+//!   timeseries: { samples, times_s[..], gauges[..] } | null,
+//!   histograms: [ { name, unit, edges[..], counts[..], count, sum,
+//!                   p50, p95, max } ] | null }
 //! ```
 
 use super::critical;
@@ -28,8 +35,9 @@ use crate::config::{Config, SigmaSpec};
 use crate::coordinator::{PhaseStats, PipelineResult};
 use crate::metrics::LocalitySummary;
 
-/// The RunReport schema identifier (bump on breaking changes).
-pub const RUN_REPORT_SCHEMA: &str = "psch.run_report.v1";
+/// The RunReport schema identifier. v2 added the `timeseries` and
+/// `histograms` telemetry sections (additively — v1 parsers keep working).
+pub const RUN_REPORT_SCHEMA: &str = "psch.run_report.v2";
 
 fn config_json(cfg: &Config) -> String {
     let c = &cfg.cluster;
@@ -231,7 +239,8 @@ fn trace_json(data: &TraceData) -> String {
 
 /// Build the RunReport document. `quality` is `(nmi, ari)` against the
 /// planted truth when one exists; `trace` is the recorded trace when
-/// tracing was enabled.
+/// tracing was enabled — it also feeds the v2 `timeseries`/`histograms`
+/// telemetry sections (null for untraced runs).
 pub fn run_report_json(
     cfg: &Config,
     result: &PipelineResult,
@@ -243,15 +252,23 @@ pub fn run_report_json(
         Some((nmi, ari)) => format!("{{\"nmi\":{},\"ari\":{}}}", num(nmi), num(ari)),
         None => "null".to_string(),
     };
-    let trace = match trace {
-        Some(data) => trace_json(data),
-        None => "null".to_string(),
+    let (trace, timeseries, histograms) = match trace {
+        Some(data) => {
+            let tel = crate::telemetry::from_trace(data, cfg.cluster.racks);
+            (
+                trace_json(data),
+                crate::telemetry::timeseries_json(&tel.timeseries),
+                crate::telemetry::histograms_json(&tel.histograms),
+            )
+        }
+        None => ("null".to_string(), "null".to_string(), "null".to_string()),
     };
     format!(
         "{{\"schema\":\"{RUN_REPORT_SCHEMA}\",\"config\":{},\"phases\":[{}],\
          \"totals\":{{\"virtual_s\":{},\"wall_s\":{},\"jobs\":{},\"nnz\":{},\
          \"sigma_resolved\":{}}},\
-         \"quality\":{quality},\"trace\":{trace}}}\n",
+         \"quality\":{quality},\"trace\":{trace},\
+         \"timeseries\":{timeseries},\"histograms\":{histograms}}}\n",
         config_json(cfg),
         phases.join(","),
         num(result.total_virtual_s),
@@ -269,7 +286,7 @@ mod tests {
     use crate::mapreduce::names;
 
     fn result_fixture() -> PipelineResult {
-        let mut phases = [
+        let mut phases = vec![
             PhaseStats { name: "similarity".into(), ..Default::default() },
             PhaseStats { name: "eigenvectors".into(), ..Default::default() },
             PhaseStats { name: "kmeans".into(), ..Default::default() },
@@ -405,5 +422,67 @@ mod tests {
         let text = run_report_json(&cfg, &result_fixture(), None, None);
         let v = Value::parse(&text).unwrap();
         assert_eq!(v.get("quality"), Some(&Value::Null));
+        // Untraced runs carry null telemetry sections too.
+        assert_eq!(v.get("timeseries"), Some(&Value::Null));
+        assert_eq!(v.get("histograms"), Some(&Value::Null));
+    }
+
+    #[test]
+    fn traced_report_carries_v2_telemetry_sections() {
+        use crate::trace::TraceSink;
+        let sink = TraceSink::default();
+        sink.enable(2, 2);
+        sink.begin_phase("similarity");
+        let plan = crate::scheduler::SchedulePlan {
+            makespan_s: 4.0,
+            attempts: vec![crate::scheduler::Attempt {
+                task: 0,
+                slave: 0,
+                slot: 0,
+                start_s: 0.0,
+                end_s: 4.0,
+                locality: crate::scheduler::Locality::NodeLocal,
+                speculative: false,
+                won: true,
+            }],
+            ..Default::default()
+        };
+        sink.record_job(crate::trace::JobTrace {
+            name: "sim:map".into(),
+            overhead_s: 1.0,
+            virtual_time_s: 5.0,
+            map: crate::trace::plan_trace(
+                &plan,
+                &[],
+                &crate::cluster::NetworkModel::default(),
+            ),
+            reruns: Vec::new(),
+            fetch: None,
+            reduce: None,
+            spill_bytes: Vec::new(),
+        });
+        sink.end_phase();
+        let data = sink.snapshot().unwrap();
+        let cfg = Config::default();
+        let text =
+            run_report_json(&cfg, &result_fixture(), None, Some(&data));
+        let v = Value::parse(&text).unwrap();
+        assert_eq!(v.get("schema").unwrap().as_str(), Some("psch.run_report.v2"));
+        let ts = v.get("timeseries").unwrap();
+        assert_eq!(
+            ts.get("samples").unwrap().as_u64(),
+            Some(crate::telemetry::SAMPLES as u64)
+        );
+        assert!(!ts.get("gauges").unwrap().items().unwrap().is_empty());
+        let hists = v.get("histograms").unwrap().items().unwrap();
+        assert_eq!(hists.len(), 4);
+        assert_eq!(
+            hists[0].get("name").unwrap().as_str(),
+            Some("attempt_duration_seconds")
+        );
+        // The v1 keys are all still present (additive schema change).
+        for key in ["config", "phases", "totals", "quality", "trace"] {
+            assert!(v.get(key).is_some(), "v1 key {key} missing");
+        }
     }
 }

@@ -1,0 +1,209 @@
+//! Integration tests for the telemetry layer (DESIGN.md §2.15): the
+//! byte-identical export guarantee across same-seed runs (Prometheus
+//! snapshot, report-v2 timeseries/histograms), including chaos runs with
+//! seeded fault injection, plus the `psch report diff` gate semantics and
+//! v1-report backward compatibility.
+//!
+//! One traced quick-config pipeline run (executed twice from fresh
+//! services) is shared across tests via a `OnceLock` fixture.
+
+use std::sync::{Arc, OnceLock};
+
+use psch::config::Config;
+use psch::coordinator::{Driver, PipelineInput, PipelineResult};
+use psch::data::gaussian_blobs;
+use psch::runtime::KernelRuntime;
+use psch::telemetry::{self, Telemetry};
+use psch::trace::json::Value;
+use psch::trace::{report, TraceData};
+
+struct Fixture {
+    cfg: Config,
+    result: PipelineResult,
+    data: TraceData,
+    /// Telemetry derivations of two independent same-seed runs.
+    tel_a: Telemetry,
+    tel_b: Telemetry,
+    /// Full RunReport documents of both runs.
+    report_a: String,
+    report_b: String,
+}
+
+fn traced_run(cfg: &Config) -> (PipelineResult, TraceData) {
+    let ps = gaussian_blobs(150, cfg.algo.k, 4, 0.3, 10.0, 42);
+    let input = PipelineInput::Points { points: ps.points };
+    let driver = Driver::new(cfg.clone(), Arc::new(KernelRuntime::native()));
+    let services = driver.services();
+    services.cluster.enable_tracing();
+    let result = driver.run_on(&services, &input).expect("pipeline run");
+    let data = services.cluster.trace().snapshot().expect("trace enabled");
+    (result, data)
+}
+
+fn fixture() -> &'static Fixture {
+    static FIXTURE: OnceLock<Fixture> = OnceLock::new();
+    FIXTURE.get_or_init(|| {
+        let cfg = Config::load("configs/quick.toml").expect("quick config");
+        let (result, data) = traced_run(&cfg);
+        let (result_b, data_b) = traced_run(&cfg);
+        assert_eq!(result.labels, result_b.labels, "pipeline must be deterministic");
+        let tel_a = telemetry::from_trace(&data, cfg.cluster.racks);
+        let tel_b = telemetry::from_trace(&data_b, cfg.cluster.racks);
+        let report_a = report::run_report_json(&cfg, &result, None, Some(&data));
+        let report_b = report::run_report_json(&cfg, &result_b, None, Some(&data_b));
+        Fixture { cfg, result, data, tel_a, tel_b, report_a, report_b }
+    })
+}
+
+#[test]
+fn prometheus_snapshot_is_byte_identical_across_same_seed_runs() {
+    let fx = fixture();
+    let snap_a = telemetry::prometheus::render(&fx.tel_a, &fx.result.phases);
+    let snap_b = telemetry::prometheus::render(&fx.tel_b, &fx.result.phases);
+    assert_eq!(snap_a, snap_b, "Prometheus snapshots must match byte for byte");
+    // The snapshot carries the headline families and no wall-clock metric.
+    assert!(snap_a.contains("psch_makespan_seconds "), "{snap_a}");
+    assert!(snap_a.contains("psch_phase_virtual_seconds{phase=\"similarity\"}"));
+    assert!(snap_a.contains("psch_gauge_mean{name=\"busy_slots\"}"));
+    assert!(snap_a.contains("psch_attempt_duration_seconds_bucket{le=\"+Inf\"}"));
+    assert!(!snap_a.contains("wall"), "wall-clock values must never be exported");
+}
+
+#[test]
+fn report_v2_telemetry_sections_are_byte_identical_across_runs() {
+    let fx = fixture();
+    assert_eq!(
+        telemetry::timeseries_json(&fx.tel_a.timeseries),
+        telemetry::timeseries_json(&fx.tel_b.timeseries)
+    );
+    assert_eq!(
+        telemetry::histograms_json(&fx.tel_a.histograms),
+        telemetry::histograms_json(&fx.tel_b.histograms)
+    );
+    // The full reports differ only through wall_s fields; their parsed
+    // timeseries sections are equal.
+    let va = Value::parse(&fx.report_a).unwrap();
+    let vb = Value::parse(&fx.report_b).unwrap();
+    assert_eq!(va.get("timeseries"), vb.get("timeseries"));
+    assert_eq!(va.get("histograms"), vb.get("histograms"));
+}
+
+#[test]
+fn gauges_stay_within_capacity_and_histograms_are_populated() {
+    let fx = fixture();
+    let total = fx.cfg.cluster.slaves * fx.cfg.cluster.slots_per_slave;
+    assert_eq!(fx.tel_a.total_slots, total);
+    let busy = fx
+        .tel_a
+        .timeseries
+        .gauges
+        .iter()
+        .find(|g| g.name == "busy_slots")
+        .expect("busy_slots gauge");
+    assert!(busy.peak() as usize <= total);
+    assert!(busy.peak() > 0, "a real run must occupy at least one slot");
+    // Attempt durations: every job contributes its winning attempts.
+    let attempts = &fx.tel_a.histograms[0];
+    assert_eq!(attempts.name, "attempt_duration_seconds");
+    assert!(attempts.count() > 0);
+    assert!(attempts.percentile(50.0) > 0.0);
+    assert!(attempts.percentile(95.0) >= attempts.percentile(50.0));
+    // The sparkline renders one line per phase.
+    let lines = telemetry::render_phase_utilization(&fx.data, &fx.tel_a);
+    for phase in ["similarity", "eigenvectors", "kmeans"] {
+        assert!(lines.contains(&format!("util {phase}")), "{lines}");
+    }
+}
+
+#[test]
+fn chaos_runs_export_byte_identical_telemetry_too() {
+    let cfg = Config::load("configs/chaos.toml").expect("chaos config");
+    let (result_a, data_a) = traced_run(&cfg);
+    let (result_b, data_b) = traced_run(&cfg);
+    assert_eq!(result_a.labels, result_b.labels);
+    let tel_a = telemetry::from_trace(&data_a, cfg.cluster.racks);
+    let tel_b = telemetry::from_trace(&data_b, cfg.cluster.racks);
+    assert_eq!(
+        telemetry::prometheus::render(&tel_a, &result_a.phases),
+        telemetry::prometheus::render(&tel_b, &result_b.phases),
+        "chaos telemetry must be as deterministic as the fault-free kind"
+    );
+    assert_eq!(
+        telemetry::timeseries_json(&tel_a.timeseries),
+        telemetry::timeseries_json(&tel_b.timeseries)
+    );
+    // Scheduled node deaths that fired show up in the liveness gauges
+    // (whether `fail_node = "1@40"` fires depends on run length, so the
+    // gauge is checked against the NODE_DEATHS counter, not a constant).
+    let deaths_fired: u64 = result_a
+        .phases
+        .iter()
+        .map(|p| p.counters.get(psch::mapreduce::names::NODE_DEATHS))
+        .sum();
+    let dead = tel_a
+        .timeseries
+        .gauges
+        .iter()
+        .find(|g| g.name == "dead_nodes")
+        .expect("dead_nodes gauge");
+    assert_eq!(dead.values[0], 0);
+    assert_eq!(*dead.values.last().unwrap(), deaths_fired);
+}
+
+#[test]
+fn report_diff_passes_same_seed_runs_and_flags_perturbations() {
+    let fx = fixture();
+    let a = telemetry::diff::summarize(&Value::parse(&fx.report_a).unwrap()).unwrap();
+    let b = telemetry::diff::summarize(&Value::parse(&fx.report_b).unwrap()).unwrap();
+    // Same-seed runs pass at ZERO tolerance: wall clock never enters the
+    // summary, and everything virtual is byte-identical.
+    let (lines, regressed) = telemetry::diff::diff(&a, &b, 0.0);
+    let bad: Vec<&str> = lines
+        .iter()
+        .filter(|l| l.regressed)
+        .map(|l| l.metric.as_str())
+        .collect();
+    assert!(!regressed, "same-seed diff must be clean: {bad:?}");
+    assert!(lines.iter().any(|l| l.metric == "total.virtual_s"));
+    assert!(lines.iter().any(|l| l.metric.starts_with("counter.")));
+    assert!(lines.iter().any(|l| l.metric == "hist.attempt_duration_seconds.p95"));
+    // A perturbed makespan regresses at zero tolerance...
+    let mut slower = b.clone();
+    slower.total_virtual_s *= 1.05;
+    let (_, regressed) = telemetry::diff::diff(&a, &slower, 0.0);
+    assert!(regressed, "a 5% slower makespan must fail the 0% gate");
+    // ...and a loose tolerance forgives it again.
+    let (_, regressed) = telemetry::diff::diff(&a, &slower, 10.0);
+    assert!(!regressed);
+}
+
+#[test]
+fn v1_reports_still_parse_through_the_updated_reader() {
+    // A pre-telemetry document (no timeseries/histograms keys at all, the
+    // exact v1 shape) summarizes cleanly and diffs against a v2 summary.
+    let v1 = r#"{"schema":"psch.run_report.v1",
+        "config":{"cluster":{"slaves":2}},
+        "phases":[{"name":"similarity","virtual_s":10.0,"wall_s":0.5,
+                   "counters":{"HEARTBEATS":100}},
+                  {"name":"eigenvectors","virtual_s":5.0,"counters":{}},
+                  {"name":"kmeans","virtual_s":2.0,"counters":{}}],
+        "totals":{"virtual_s":17.0,"wall_s":0.9,"jobs":12,"nnz":100,
+                  "sigma_resolved":1.5},
+        "quality":{"nmi":0.95,"ari":0.9},
+        "trace":null}"#;
+    let s = telemetry::diff::summarize(&Value::parse(v1).unwrap()).unwrap();
+    assert_eq!(s.schema, "psch.run_report.v1");
+    assert_eq!(s.total_virtual_s, 17.0);
+    assert_eq!(s.phases.len(), 3);
+    assert_eq!(s.counters.get("HEARTBEATS"), Some(&100));
+    assert_eq!(s.nmi, Some(0.95));
+    assert!(s.percentiles.is_empty());
+    // v1-vs-v1 at zero tolerance: identical documents pass.
+    let (_, regressed) = telemetry::diff::diff(&s, &s, 0.0);
+    assert!(!regressed);
+    // And the current writer's v2 output summarizes with the same reader.
+    let fx = fixture();
+    let v2 = telemetry::diff::summarize(&Value::parse(&fx.report_a).unwrap()).unwrap();
+    assert_eq!(v2.schema, "psch.run_report.v2");
+    assert_eq!(v2.percentiles.len(), 4);
+}
